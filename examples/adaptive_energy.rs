@@ -1,0 +1,93 @@
+//! Energy-adaptive inference (paper §6.1): UnIT's aggressiveness as a
+//! runtime knob on a harvested-power device.
+//!
+//! ```text
+//! cargo run --release --example adaptive_energy
+//! ```
+//!
+//! Simulates a day of fluctuating harvest: the per-inference energy
+//! budget swings between generous (2× dense cost) and starved (0.3×).
+//! The [`EnergyController`] watches the ledger after every inference and
+//! scales all UnIT thresholds up/down so measured energy tracks the
+//! budget — trading accuracy only when the harvester forces it, with no
+//! retraining and no model swap.
+
+use unit_pruner::approx::DivShift;
+use unit_pruner::coordinator::EnergyController;
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::mcu::EnergyModel;
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::util::table::Table;
+
+fn main() {
+    let def = zoo("mnist");
+    let ds = by_name("mnist", 42, Sizes::default());
+    // Use cached trained weights when available (run `unit train` or the
+    // train_and_deploy example first); fall back to random weights so the
+    // demo stays artifact-free.
+    let store = unit_pruner::runtime::ArtifactStore::discover();
+    let params = Params::load(&store.weights_path("mnist"))
+        .unwrap_or_else(|_| Params::random(&def, 7));
+    let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+    let q = QModel::quantize(&def, &params).with_thresholds(&th);
+    let energy = EnergyModel::default();
+
+    // Measure the dense cost once to express budgets in natural units.
+    let dense_mj = {
+        let out = infer(
+            &q,
+            &q.quantize_input(ds.test.sample(0)),
+            &EngineConfig::dense(&DivShift),
+        );
+        out.ledger.millijoules(&energy)
+    };
+    println!("dense inference costs {dense_mj:.2} mJ; running adaptive loop\n");
+
+    // Harvest phases: (budget multiplier, #inferences).
+    let phases = [("morning sun", 2.0, 60), ("clouds", 0.8, 60), ("night", 0.35, 80), ("recovery", 1.2, 60)];
+    let mut ctrl = EnergyController::new(dense_mj);
+    let mut t = Table::new(vec![
+        "phase",
+        "budget mJ",
+        "mean mJ",
+        "final scale",
+        "mean skip %",
+        "accuracy",
+    ]);
+    let mut idx = 0usize;
+    for (name, mult, steps) in phases {
+        ctrl.set_budget(dense_mj * mult);
+        let mut mj_sum = 0.0;
+        let mut skip_sum = 0.0;
+        let mut hits = 0usize;
+        for _ in 0..steps {
+            let i = idx % ds.test.len();
+            idx += 1;
+            let cfg = EngineConfig {
+                mode: PruneMode::Unit,
+                div: &DivShift,
+                sonic_accumulators: true,
+                precomputed_conv_thresholds: false,
+                t_scale_q8: ctrl.t_scale_q8(),
+            };
+            let out = infer(&q, &q.quantize_input(ds.test.sample(i)), &cfg);
+            let mj = out.ledger.millijoules(&energy);
+            ctrl.observe(mj);
+            mj_sum += mj;
+            skip_sum += out.skip_fraction();
+            hits += (out.argmax() == ds.test.y[i]) as usize;
+        }
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", dense_mj * mult),
+            format!("{:.2}", mj_sum / steps as f64),
+            format!("{:.2}x", ctrl.scale()),
+            format!("{:.1}%", 100.0 * skip_sum / steps as f64),
+            format!("{:.1}%", 100.0 * hits as f64 / steps as f64),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("night phase: the controller prunes harder (higher scale, more skips)\nto live within the harvested budget; recovery relaxes automatically.");
+}

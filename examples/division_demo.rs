@@ -1,0 +1,49 @@
+//! Fast division approximation demo (paper §2.2, Figs. 3/4 + Eq. 5/6).
+//!
+//! ```text
+//! cargo run --release --example division_demo
+//! ```
+//!
+//! Shows each estimator's answer, error and modeled MSP430 cycle cost on
+//! a few concrete threshold/control pairs, plus the IEEE-754 bit-mask
+//! trick on host floats.
+
+use unit_pruner::approx::{DivApprox, DivExact, DivKind, DivMask};
+use unit_pruner::util::table::Table;
+
+fn main() {
+    println!("UnIT pruning needs T/|c| — never a multiplication (Eq. 1):\n");
+    let cases: [(u32, u32); 5] = [(5120, 37), (5120, 512), (40_000, 3), (999, 1000), (70_000, 255)];
+    let mut t = Table::new(vec!["t", "c", "exact t/c", "shift", "tree", "mask", "cycles e/s/t/m"]);
+    for (tt, c) in cases {
+        let mut vals = Vec::new();
+        let mut cyc = Vec::new();
+        for kind in DivKind::all() {
+            let d = kind.build();
+            vals.push(d.div(tt, c));
+            cyc.push(d.cycles(tt, c).to_string());
+        }
+        t.row(vec![
+            tt.to_string(),
+            c.to_string(),
+            (tt / c).to_string(),
+            vals[1].to_string(),
+            vals[2].to_string(),
+            vals[3].to_string(),
+            cyc.join("/"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("exact division is modeled at {} cycles (software routine);", DivExact.cycles(1, 1));
+    println!("shift/tree find floor(log2 c) and return t >> e (paper Figs. 3-4);");
+    println!("mask keeps only the exponent fields: t/c ~ 2^(Et-Ec) (Eq. 6).\n");
+
+    println!("IEEE-754 bit masking on host floats (Eq. 5/6):");
+    for (x, tt) in [(8.0f32, 2.0f32), (100.0, 3.0), (0.5, 4.0)] {
+        println!(
+            "  {x:>6} / {tt} = {:<10} bit-mask estimate: {}",
+            x / tt,
+            DivMask::div_f32(x, tt)
+        );
+    }
+}

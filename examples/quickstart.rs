@@ -1,0 +1,60 @@
+//! Quickstart: the UnIT public API in ~60 lines, no artifacts needed.
+//!
+//! ```text
+//! cargo run --release --example quickstart
+//! ```
+//!
+//! Builds a Table-1 model with random weights, calibrates UnIT
+//! thresholds on a synthetic validation split, quantizes for the MCU
+//! simulator and compares dense vs UnIT-pruned inference: MACs skipped,
+//! modeled MSP430 cycles, time and energy.
+
+use unit_pruner::approx::DivShift;
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, QModel};
+use unit_pruner::mcu::EnergyModel;
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::util::table::Table;
+
+fn main() {
+    // 1. A Table-1 model (paper architectures: mnist/cifar/kws/widar).
+    let def = zoo("mnist");
+    println!("model: {} {:?} -> {} classes, {} dense MACs", def.name, def.input_shape, def.classes, def.total_dense_macs());
+
+    // 2. Weights: random here for speed — see examples/train_and_deploy.rs
+    //    for real training through the AOT artifact.
+    let params = Params::random(&def, 7);
+
+    // 3. Synthetic data + one-time threshold calibration (paper §2.1):
+    //    per-layer 20th percentile of |activation x weight| products.
+    let ds = by_name("mnist", 42, Sizes { train: 16, val: 32, test: 8 });
+    let thresholds = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+    println!("calibrated thresholds: {:?}\n", thresholds.per_layer);
+
+    // 4. Quantize for the MCU (int8 weights, Q8.8 activations) and bake
+    //    the thresholds in.
+    let q_dense = QModel::quantize(&def, &params);
+    let q_unit = q_dense.clone().with_thresholds(&thresholds);
+
+    // 5. Run one inference each way on the MSP430 simulator.
+    let x = q_dense.quantize_input(ds.test.sample(0));
+    let energy = EnergyModel::default();
+    let mut t = Table::new(vec!["config", "MACs kept", "MACs skipped", "cycles", "time ms", "energy mJ"]);
+    for (name, q, cfg) in [
+        ("dense", &q_dense, EngineConfig::dense(&DivShift)),
+        ("UnIT", &q_unit, EngineConfig::unit(&DivShift)),
+    ] {
+        let out = infer(q, &x, &cfg);
+        t.row(vec![
+            name.to_string(),
+            out.kept.iter().sum::<u64>().to_string(),
+            format!("{} ({:.1}%)", out.skipped.iter().sum::<u64>(), 100.0 * out.skip_fraction()),
+            out.ledger.total_cycles().to_string(),
+            format!("{:.1}", 1e3 * out.ledger.secs()),
+            format!("{:.3}", out.ledger.millijoules(&energy)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("(the pruning decisions above used zero multiplications — only\n comparisons against T/|control| with an approximate division, Eq. 1-3)");
+}

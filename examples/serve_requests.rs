@@ -1,0 +1,87 @@
+//! Serving demo: the Layer-3 coordinator under load on both backends.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example serve_requests
+//! ```
+//!
+//! Submits a burst of requests to (a) the MCU-simulator worker pool with
+//! UnIT pruning and (b) the PJRT float backend with dynamic batching,
+//! and reports throughput, latency percentiles and (for the MCU) the
+//! modeled on-device cost of each answer.
+
+use anyhow::Result;
+use std::time::Duration;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PruneMode, QModel};
+use unit_pruner::models::zoo;
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::train::{ensure_trained, TrainConfig};
+
+fn main() -> Result<()> {
+    let model = "mnist";
+    let n_req = 64usize;
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let def = zoo(model);
+    let ds = by_name(model, 42, Sizes::default());
+    let params = ensure_trained(&rt, &store, model, &ds, &TrainConfig::for_model(model))?;
+    let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+
+    for backend in ["mcu", "pjrt"] {
+        println!("=== backend: {backend} ===");
+        let choice = match backend {
+            "mcu" => BackendChoice::McuSim {
+                q: QModel::quantize(&def, &params).with_thresholds(&th),
+                mode: PruneMode::Unit,
+                div: DivKind::Shift,
+            },
+            _ => BackendChoice::Pjrt {
+                model: model.into(),
+                params: params.clone(),
+                t_vec: th.per_layer.clone(),
+                fat_t: 0.0,
+            },
+        };
+        let coord = Coordinator::start(
+            choice,
+            ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) },
+        );
+        let t0 = std::time::Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
+            .collect();
+        let mut hits = 0usize;
+        for (i, rx) in rxs.into_iter().enumerate() {
+            let resp = rx.recv()?;
+            hits += (resp.predicted == ds.test.y[i % ds.test.len()]) as usize;
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let s = coord.metrics.snapshot();
+        coord.shutdown();
+        println!(
+            "  {} req in {:.3}s -> {:.1} req/s | accuracy {:.1}% | p50/p95/p99 {}/{}/{} us | mean batch {:.2}",
+            s.served,
+            dt,
+            n_req as f64 / dt,
+            100.0 * hits as f64 / n_req as f64,
+            s.p50_us,
+            s.p95_us,
+            s.p99_us,
+            s.mean_batch
+        );
+        if backend == "mcu" {
+            println!(
+                "  modeled per-inference on MSP430: {:.2}% MACs skipped, {:.3} mJ, {:.3} s",
+                100.0 * s.mean_mac_skipped,
+                s.mean_energy_mj,
+                s.mean_mcu_secs
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

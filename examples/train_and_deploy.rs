@@ -1,0 +1,104 @@
+//! End-to-end driver (EXPERIMENTS.md §E2E): proves all three layers
+//! compose on a real small workload.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example train_and_deploy
+//! ```
+//!
+//! 1. **Train** the Table-1 MNIST model for a few hundred SGD steps by
+//!    repeatedly executing the AOT `train` HLO (Layer 2, lowered once by
+//!    Python at build time) through PJRT — the loss curve is logged.
+//! 2. **Verify** the float forward path: the AOT `fwd` artifact (which
+//!    embeds the Layer-1 Pallas kernels) must agree with the Rust float
+//!    engine on the trained weights.
+//! 3. **Deploy**: quantize to int8/Q8.8, calibrate UnIT thresholds on
+//!    the validation split, and run the MCU simulator test-set
+//!    evaluation — accuracy, MACs skipped, modeled time and energy,
+//!    dense vs UnIT.
+
+use anyhow::Result;
+use unit_pruner::approx::DivShift;
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, QModel};
+use unit_pruner::mcu::EnergyModel;
+use unit_pruner::models::zoo;
+use unit_pruner::nn::{forward, ForwardOpts};
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::train::{train, TrainConfig};
+use unit_pruner::util::table::Table;
+
+fn main() -> Result<()> {
+    let model = "mnist";
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let def = zoo(model);
+    let ds = by_name(model, 42, Sizes::default());
+
+    // --- 1. train through the AOT step artifact -------------------------
+    println!("=== 1. training {model} via AOT train-step HLO (PJRT) ===");
+    let cfg = TrainConfig { log_every: 40, ..TrainConfig::for_model(model) };
+    let (params, losses) = train(&rt, &store, model, &ds, &cfg)?;
+    println!("loss curve: start {:.4} -> end {:.4} ({} steps)", losses[0], losses.last().unwrap(), losses.len());
+
+    // --- 2. cross-layer verification ------------------------------------
+    println!("\n=== 2. AOT fwd artifact (Pallas kernels) vs Rust float engine ===");
+    let fwd_exe = store.load_fwd(&rt, model, 1)?;
+    let t_vec = vec![0.1f32; def.layers.len()];
+    let fat = [0.0f32];
+    let flat: Vec<&[f32]> = params.flat_order();
+    let mut max_err = 0f32;
+    for i in 0..4 {
+        let x = ds.test.sample(i);
+        let mut args = flat.clone();
+        args.push(x);
+        args.push(&t_vec);
+        args.push(&fat);
+        let got = &fwd_exe.run_f32(&args)?[0];
+        let (want, _) =
+            forward(&def, &params, x, &ForwardOpts { t_vec: t_vec.clone(), fat_t: 0.0 });
+        for (a, b) in got.iter().zip(&want) {
+            max_err = max_err.max((a - b).abs());
+        }
+    }
+    println!("max |pjrt - rust| over 4 pruned inferences: {max_err:.2e}");
+    anyhow::ensure!(max_err < 1e-3, "cross-layer mismatch");
+
+    // --- 3. quantize + calibrate + deploy to the MCU sim ----------------
+    println!("\n=== 3. MCU deployment: dense vs UnIT ===");
+    let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+    println!("thresholds (p20 of |x*w|): {:?}", th.per_layer);
+    let q_dense = QModel::quantize(&def, &params);
+    let q_unit = q_dense.clone().with_thresholds(&th);
+    let energy = EnergyModel::default();
+    let n = ds.test.len().min(200);
+    let mut table =
+        Table::new(vec!["config", "accuracy", "MACs skipped", "time s", "energy mJ"]);
+    for (name, q, cfg) in [
+        ("dense", &q_dense, EngineConfig::dense(&DivShift)),
+        ("UnIT", &q_unit, EngineConfig::unit(&DivShift)),
+    ] {
+        let mut hits = 0;
+        let mut skip = 0.0;
+        let mut secs = 0.0;
+        let mut mj = 0.0;
+        for i in 0..n {
+            let out = infer(q, &q.quantize_input(ds.test.sample(i)), &cfg);
+            hits += (out.argmax() == ds.test.y[i]) as usize;
+            skip += out.skip_fraction();
+            secs += out.ledger.secs();
+            mj += out.ledger.millijoules(&energy);
+        }
+        let nf = n as f64;
+        table.row(vec![
+            name.to_string(),
+            format!("{:.2}%", 100.0 * hits as f64 / nf),
+            format!("{:.2}%", 100.0 * skip / nf),
+            format!("{:.3}", secs / nf),
+            format!("{:.3}", mj / nf),
+        ]);
+    }
+    println!("{}", table.render());
+    println!("all three layers compose: Pallas kernel -> JAX model -> AOT HLO -> rust runtime -> MCU engine");
+    Ok(())
+}

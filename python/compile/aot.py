@@ -1,0 +1,137 @@
+"""AOT export: lower the Layer-2 graphs to HLO **text** artifacts.
+
+Interchange format is HLO text, NOT serialized ``HloModuleProto``: jax
+>= 0.5 emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/README.md).
+
+Per dataset this writes into ``--out`` (default ``../artifacts``):
+
+  <ds>_fwd_b1.hlo.txt     inference, batch 1   (MCU-serving shape)
+  <ds>_fwd_b8.hlo.txt     inference, batch 8   (PJRT-serving shape)
+  <ds>_train_b32.hlo.txt  one SGD+momentum step, batch 32
+  <ds>_manifest.txt       flat param ABI + shapes + dense MAC counts
+
+The manifest is a deliberately trivial line format (no JSON dependency on
+the Rust side):
+
+  model <name>
+  input <C> <H> <W>
+  classes <K>
+  prunable <n>
+  param <name> <d0> <d1> ...
+  macs <layer-idx> <dense-mac-count>
+
+Python runs ONCE at build time (``make artifacts``); the Rust binary is
+self-contained afterwards.
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .model import ARCHS, dense_macs, fwd, param_specs, train_step
+
+FWD_BATCHES = (1, 8)
+TRAIN_BATCH = 32
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple=True)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def export_fwd(arch, batch: int) -> str:
+    specs = [_spec(s) for _, s in param_specs(arch)]
+    x_spec = _spec((batch,) + arch.input_shape)
+    n_prunable = len(arch.layers)
+    t_spec = _spec((n_prunable,))
+    fat_spec = _spec(())
+
+    def fn(*args):
+        n = len(specs)
+        params, x, t_vec, fat_t = list(args[:n]), args[n], args[n + 1], args[n + 2]
+        return (fwd(arch, params, x, t_vec, fat_t),)
+
+    lowered = jax.jit(fn).lower(*specs, x_spec, t_spec, fat_spec)
+    return to_hlo_text(lowered)
+
+
+def export_train(arch, batch: int) -> str:
+    specs = [_spec(s) for _, s in param_specs(arch)]
+    x_spec = _spec((batch,) + arch.input_shape)
+    y_spec = _spec((batch, arch.classes))
+    lr_spec = _spec(())
+
+    def fn(*args):
+        n = len(specs)
+        params = list(args[:n])
+        mom = list(args[n : 2 * n])
+        x, y, lr = args[2 * n], args[2 * n + 1], args[2 * n + 2]
+        new_p, new_m, loss = train_step(arch, params, mom, x, y, lr)
+        return tuple(new_p) + tuple(new_m) + (loss,)
+
+    lowered = jax.jit(fn).lower(*specs, *specs, x_spec, y_spec, lr_spec)
+    return to_hlo_text(lowered)
+
+
+def write_manifest(arch, path: str) -> None:
+    lines = [
+        f"model {arch.name}",
+        "input " + " ".join(str(d) for d in arch.input_shape),
+        f"classes {arch.classes}",
+        f"prunable {len(arch.layers)}",
+    ]
+    for name, shape in param_specs(arch):
+        lines.append(f"param {name} " + " ".join(str(d) for d in shape))
+    for li, m in enumerate(dense_macs(arch)):
+        lines.append(f"macs {li} {m}")
+    with open(path, "w") as f:
+        f.write("\n".join(lines) + "\n")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="output directory")
+    ap.add_argument(
+        "--models",
+        default="mnist,cifar,kws,widar",
+        help="comma-separated subset of models to export",
+    )
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name in args.models.split(","):
+        arch = ARCHS[name]
+        for batch in FWD_BATCHES:
+            path = os.path.join(args.out, f"{name}_fwd_b{batch}.hlo.txt")
+            text = export_fwd(arch, batch)
+            with open(path, "w") as f:
+                f.write(text)
+            print(f"wrote {path} ({len(text)} chars)")
+        path = os.path.join(args.out, f"{name}_train_b{TRAIN_BATCH}.hlo.txt")
+        text = export_train(arch, TRAIN_BATCH)
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+        write_manifest(arch, os.path.join(args.out, f"{name}_manifest.txt"))
+
+    # Build stamp so `make artifacts` can skip when inputs are unchanged.
+    with open(os.path.join(args.out, ".stamp"), "w") as f:
+        f.write("ok\n")
+    print("aot export complete")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+"""Layer-1 Pallas kernels for UnIT + baselines, with pure-jnp oracles."""
+
+from .fatrelu import fatrelu
+from .ref import (
+    fatrelu_ref,
+    maxpool2x2_ref,
+    unit_conv2d_kept_ref,
+    unit_conv2d_ref,
+    unit_linear_kept_ref,
+    unit_linear_ref,
+)
+from .unit_conv import unit_conv2d
+from .unit_linear import unit_linear
+
+__all__ = [
+    "fatrelu",
+    "fatrelu_ref",
+    "maxpool2x2_ref",
+    "unit_conv2d",
+    "unit_conv2d_kept_ref",
+    "unit_conv2d_ref",
+    "unit_linear",
+    "unit_linear_kept_ref",
+    "unit_linear_ref",
+]

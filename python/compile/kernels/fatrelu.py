@@ -1,0 +1,31 @@
+"""Layer-1 Pallas kernel: FATReLU baseline (Kurtz et al. 2020).
+
+FATReLU ("forced-activation-threshold" ReLU, a.k.a. truncated rectifier) is
+the inference-time pruning baseline the paper compares against: raising the
+ReLU cut-off induces extra activation sparsity at runtime, zeroing small
+positive activations so downstream MACs on them can be skipped.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, t_ref, y_ref):
+    x = x_ref[...]
+    t = t_ref[0]
+    y_ref[...] = jnp.where(x > t, x, 0.0)
+
+
+@jax.jit
+def fatrelu(x, t):
+    """Elementwise ``x if x > t else 0`` for any-rank float32 ``x``."""
+    shape = x.shape
+    flat = x.reshape(-1)
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1)
+    y = pl.pallas_call(
+        _kernel,
+        out_shape=jax.ShapeDtypeStruct(flat.shape, jnp.float32),
+        interpret=True,
+    )(flat, t_arr)
+    return y.reshape(shape)

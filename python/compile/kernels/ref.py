@@ -1,0 +1,133 @@
+"""Pure-jnp reference oracles for the UnIT kernels.
+
+These are the CORRECTNESS SIGNAL for the Pallas kernels (Layer 1): every
+kernel in this package must match its oracle to float tolerance under the
+pytest + hypothesis sweeps in ``python/tests/``.
+
+The oracles implement the paper's equations directly and naively:
+
+* Eq. 2 (linear layers): prune weight ``W[k, j]`` for sample ``b`` iff
+  ``|W[k, j]| <= T / |x[b, k]|`` — the activation is the reused control
+  term.
+* Eq. 3 (conv layers): prune activation ``x[c, p+u, q+v]`` for output
+  channel ``o`` iff ``|x| <= T / |W[o, c, u, v]|`` — the weight is the
+  reused control term.
+* FATReLU (baseline, Kurtz et al. 2020): ``y = x if x > t else 0``.
+
+Skipping a MAC is numerically identical to zeroing its contribution, so the
+oracles compute dense products with a mask.
+"""
+
+import jax.numpy as jnp
+
+# A control term of exactly zero would divide by zero; the paper's MCU code
+# never divides by zero because a zero activation/weight contributes nothing
+# and is always skipped. We reproduce that: |c| < EPS ==> contribution
+# pruned unconditionally (T / |c| -> +inf).
+EPS = 1e-30
+
+
+def unit_linear_ref(x, w, b, t):
+    """UnIT-pruned fully connected layer (Eq. 2).
+
+    Args:
+      x: activations ``(B, N)``.
+      w: weights ``(N, M)``.
+      b: bias ``(M,)``.
+      t: scalar layer threshold ``T`` (``T = 0`` keeps every connection
+         whose weight and activation are non-zero — i.e. dense numerics).
+
+    Returns:
+      ``(B, M)`` output where each scalar MAC ``x[b,k] * w[k,j]`` is
+      included iff ``|w[k,j]| > T / |x[b,k]|``.
+    """
+    absx = jnp.abs(x)  # (B, N)
+    # Threshold relative to the reused activation: t_bar[b, k] = T / |x[b,k]|
+    t_bar = jnp.where(absx > EPS, t / jnp.maximum(absx, EPS), jnp.inf)
+    keep = jnp.abs(w)[None, :, :] > t_bar[:, :, None]  # (B, N, M)
+    contrib = x[:, :, None] * w[None, :, :] * keep
+    return jnp.sum(contrib, axis=1) + b[None, :]
+
+
+def unit_linear_kept_ref(x, w, t):
+    """Number of MACs *kept* (executed) by Eq. 2 per sample. (B,) int32."""
+    absx = jnp.abs(x)
+    t_bar = jnp.where(absx > EPS, t / jnp.maximum(absx, EPS), jnp.inf)
+    keep = jnp.abs(w)[None, :, :] > t_bar[:, :, None]
+    return jnp.sum(keep, axis=(1, 2)).astype(jnp.int32)
+
+
+def _patches(x, kh, kw):
+    """im2col for a single sample.
+
+    Args:
+      x: ``(C, H, W)``.
+    Returns:
+      ``(OH, OW, C, KH, KW)`` valid-convolution patches.
+    """
+    c, h, w = x.shape
+    oh, ow = h - kh + 1, w - kw + 1
+    rows = []
+    for u in range(kh):
+        cols = []
+        for v in range(kw):
+            cols.append(x[:, u : u + oh, v : v + ow])  # (C, OH, OW)
+        rows.append(jnp.stack(cols, axis=-1))  # (C, OH, OW, KW)
+    pat = jnp.stack(rows, axis=-2)  # (C, OH, OW, KH, KW)
+    return jnp.transpose(pat, (1, 2, 0, 3, 4))  # (OH, OW, C, KH, KW)
+
+
+def unit_conv2d_ref(x, w, b, t):
+    """UnIT-pruned valid 2-D convolution (Eq. 3), batched.
+
+    Args:
+      x: activations ``(B, C, H, W)``.
+      w: kernel ``(O, C, KH, KW)``.
+      b: bias ``(O,)``.
+      t: scalar layer threshold ``T``.
+
+    Returns:
+      ``(B, O, OH, OW)`` where the contribution of activation ``a`` against
+      weight ``w`` is included iff ``|a| > T / |w|``.
+    """
+    o, c, kh, kw = w.shape
+    absw = jnp.abs(w)
+    # Threshold relative to the reused weight: w_bar[o,c,u,v] = T / |w|.
+    w_bar = jnp.where(absw > EPS, t / jnp.maximum(absw, EPS), jnp.inf)
+
+    def one(xi):
+        pat = _patches(xi, kh, kw)  # (OH, OW, C, KH, KW)
+        keep = jnp.abs(pat)[:, :, None] > w_bar[None, None]  # (OH,OW,O,C,KH,KW)
+        contrib = pat[:, :, None] * w[None, None] * keep
+        y = jnp.sum(contrib, axis=(3, 4, 5))  # (OH, OW, O)
+        return jnp.transpose(y, (2, 0, 1)) + b[:, None, None]
+
+    return jnp.stack([one(x[i]) for i in range(x.shape[0])], axis=0)
+
+
+def unit_conv2d_kept_ref(x, w, t):
+    """Number of MACs kept by Eq. 3 per sample. (B,) int32."""
+    o, c, kh, kw = w.shape
+    absw = jnp.abs(w)
+    w_bar = jnp.where(absw > EPS, t / jnp.maximum(absw, EPS), jnp.inf)
+
+    def one(xi):
+        pat = _patches(xi, kh, kw)
+        keep = jnp.abs(pat)[:, :, None] > w_bar[None, None]
+        return jnp.sum(keep).astype(jnp.int32)
+
+    return jnp.stack([one(x[i]) for i in range(x.shape[0])])
+
+
+def fatrelu_ref(x, t):
+    """FATReLU / truncated rectifier: zero everything <= t (t >= 0)."""
+    return jnp.where(x > t, x, 0.0)
+
+
+def maxpool2x2_ref(x):
+    """2x2 max pooling with stride 2 and floor semantics. x: (B,C,H,W)."""
+    b, c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, : h2 * 2, : w2 * 2]
+    x = x.reshape(b, c, h2, 2, w2, 2)
+    return jnp.max(x, axis=(3, 5))

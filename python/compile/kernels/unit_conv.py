@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: UnIT-pruned valid 2-D convolution (paper Eq. 3).
+
+In convolution the *weights* are the reused operand: each kernel tap
+``W[o, c, u, v]`` multiplies every spatial position of the input. The
+paper therefore inverts the comparison of Eq. 2 and computes
+``w_bar[o, c, u, v] = T / |W[o, c, u, v]|`` once per tap, reusing it across
+all ``OH × OW`` positions — one division amortized over the whole feature
+map.
+
+TPU mapping: the grid is ``(B, O)`` — one program materializes one output
+channel of one sample. The ``C × KH × KW`` tap thresholds are a tiny
+VMEM-resident table (for Table-1 models ≤ 96·64·9 taps); the inner body is
+``KH·KW`` shifted dense multiply-accumulates over ``(C, OH, OW)`` tiles,
+which XLA maps onto the vector unit. The pruning mask costs one compare per
+contribution — exactly the paper's compare-instead-of-multiply trade,
+expressed as a vectorized select.
+
+``interpret=True``: see unit_linear.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+
+def _kernel(x_ref, w_ref, b_ref, t_ref, y_ref, *, kh: int, kw: int, oh: int, ow: int):
+    """One (sample, output-channel) grid step."""
+    x = x_ref[0]  # (C, H, W)
+    w = w_ref[0]  # (C, KH, KW) taps of this output channel
+    t = t_ref[0, 0]
+
+    absw = jnp.abs(w)
+    # Reuse-aware threshold: one reciprocal per tap, reused across OH*OW
+    # spatial positions (Eq. 3).
+    w_bar = jnp.where(absw > EPS, t / jnp.maximum(absw, EPS), jnp.inf)
+
+    acc = jnp.zeros((oh, ow), jnp.float32)
+    # KH*KW is tiny (9..36 for Table-1 models): unroll at trace time. Each
+    # iteration is a dense (C, OH, OW) masked multiply-accumulate.
+    for u in range(kh):
+        for v in range(kw):
+            patch = jax.lax.dynamic_slice(
+                x, (0, u, v), (x.shape[0], oh, ow)
+            )  # (C, OH, OW)
+            keep = jnp.abs(patch) > w_bar[:, u, v][:, None, None]
+            tap = w[:, u, v][:, None, None]
+            acc = acc + jnp.sum(patch * tap * keep, axis=0)
+
+    y_ref[0, 0] = acc + b_ref[0]
+
+
+@jax.jit
+def unit_conv2d(x, w, b, t):
+    """UnIT-pruned valid conv2d.
+
+    Args:
+      x: ``(B, C, H, W)`` activations.
+      w: ``(O, C, KH, KW)`` kernel.
+      b: ``(O,)`` bias.
+      t: scalar threshold ``T`` (0 ⇒ dense numerics).
+
+    Returns:
+      ``(B, O, OH, OW)`` float32 with ``OH = H - KH + 1``, ``OW = W - KW + 1``.
+    """
+    bsz, c, h, wd = x.shape
+    o, c2, kh, kw = w.shape
+    assert c == c2, f"channel mismatch: {c} vs {c2}"
+    oh, ow = h - kh + 1, wd - kw + 1
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, kh=kh, kw=kw, oh=oh, ow=ow),
+        grid=(bsz, o),
+        in_specs=[
+            pl.BlockSpec((1, c, h, wd), lambda i, j: (i, 0, 0, 0)),  # sample
+            pl.BlockSpec((1, c, kh, kw), lambda i, j: (j, 0, 0, 0)),  # channel taps
+            pl.BlockSpec((1,), lambda i, j: (j,)),  # bias
+            pl.BlockSpec((1, 1), lambda i, j: (0, 0)),  # threshold
+        ],
+        out_specs=pl.BlockSpec((1, 1, oh, ow), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, o, oh, ow), jnp.float32),
+        interpret=True,
+    )(x, w, b, t_arr)

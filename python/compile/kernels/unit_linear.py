@@ -1,0 +1,104 @@
+"""Layer-1 Pallas kernel: UnIT-pruned fully connected layer (paper Eq. 2).
+
+The paper's insight for linear layers is that each input activation
+``x[b, k]`` is *reused* across every output neuron ``j``, so the pruning
+threshold ``t_bar[b, k] = T / |x[b, k]|`` is computed ONCE per activation
+and amortized across the whole weight row ``W[k, :]``.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): on a scalar MCU the win
+is replacing a 77-cycle multiply with a 2-4 cycle compare; on a TPU the
+same rank-1 separability means the mask over an ``(bn, M)`` weight tile
+costs only ``bn`` reciprocals (one per activation row) living in VMEM,
+reused across the entire tile — O(N) divisions for an O(N·M) mask. The
+kernel tiles the contraction dimension N with BlockSpec so each weight tile
+is streamed from HBM once and accumulated into the output block.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, and interpret-mode lowering produces plain HLO that the Rust
+runtime loads via the xla crate.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .ref import EPS
+
+
+def _pick_block(n: int, target: int) -> int:
+    """Largest divisor of ``n`` that is <= ``target`` (>= 1).
+
+    Pallas blocks must tile the array exactly for the accumulation scheme
+    below; model dims here are small enough that a divisor search is free.
+    """
+    best = 1
+    for d in range(1, min(n, target) + 1):
+        if n % d == 0:
+            best = d
+    return best
+
+
+def _kernel(x_ref, w_ref, b_ref, t_ref, y_ref, *, nsteps: int):
+    """One (sample, N-tile) grid step.
+
+    Grid is ``(B, nsteps)``; the output block ``y_ref`` is revisited by all
+    ``nsteps`` contraction steps of a given sample and accumulated in place
+    (VMEM-resident between steps on real hardware).
+    """
+    step = pl.program_id(1)
+    x = x_ref[0, :]  # (bn,) activation tile
+    w = w_ref[...]  # (bn, M) weight tile
+    t = t_ref[0, 0]
+
+    absx = jnp.abs(x)
+    # Reuse-aware threshold: one reciprocal per activation, reused across
+    # the full weight row (M comparisons per division).
+    t_bar = jnp.where(absx > EPS, t / jnp.maximum(absx, EPS), jnp.inf)
+    keep = jnp.abs(w) > t_bar[:, None]  # (bn, M)
+    partial = jnp.sum(x[:, None] * w * keep, axis=0)  # (M,)
+
+    @pl.when(step == 0)
+    def _init():
+        y_ref[0, :] = partial + b_ref[...]
+
+    @pl.when(step != 0)
+    def _acc():
+        y_ref[0, :] = y_ref[0, :] + partial
+
+
+@functools.partial(jax.jit, static_argnames=("block_n",))
+def unit_linear(x, w, b, t, block_n: int = 512):
+    """UnIT-pruned linear layer: ``y[b] = (W ⊙ keep(x[b], T))ᵀ x[b] + bias``.
+
+    Args:
+      x: ``(B, N)`` activations.
+      w: ``(N, M)`` weights.
+      b: ``(M,)`` bias.
+      t: scalar threshold ``T`` (0 ⇒ dense numerics).
+      block_n: target contraction tile; rounded down to a divisor of N.
+
+    Returns:
+      ``(B, M)`` float32.
+    """
+    bsz, n = x.shape
+    n2, m = w.shape
+    assert n == n2, f"x/w contraction mismatch: {n} vs {n2}"
+    bn = _pick_block(n, block_n)
+    nsteps = n // bn
+    t_arr = jnp.asarray(t, jnp.float32).reshape(1, 1)
+
+    return pl.pallas_call(
+        functools.partial(_kernel, nsteps=nsteps),
+        grid=(bsz, nsteps),
+        in_specs=[
+            pl.BlockSpec((1, bn), lambda i, s: (i, s)),  # x tile
+            pl.BlockSpec((bn, m), lambda i, s: (s, 0)),  # w tile
+            pl.BlockSpec((m,), lambda i, s: (0,)),  # bias
+            pl.BlockSpec((1, 1), lambda i, s: (0, 0)),  # threshold
+        ],
+        out_specs=pl.BlockSpec((1, m), lambda i, s: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bsz, m), jnp.float32),
+        interpret=True,
+    )(x, w, b, t_arr)

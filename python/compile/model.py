@@ -1,0 +1,224 @@
+"""Layer-2 JAX models: the four Table-1 architectures.
+
+Two computation graphs are exported per dataset (see ``aot.py``):
+
+* ``fwd`` — the *inference* graph, built from the Layer-1 Pallas kernels
+  (``unit_conv2d`` / ``unit_linear`` / ``fatrelu``). Per-layer UnIT
+  thresholds ``t_vec`` and the FATReLU cut-off ``fat_t`` are runtime
+  inputs, so a single AOT artifact serves unpruned (``t_vec = 0``),
+  UnIT-pruned, FATReLU-pruned, and combined configurations.
+* ``train_step`` — one SGD-with-momentum step over the *dense* graph
+  (``lax.conv`` + matmul; pruning is inference-time only, exactly as in
+  the paper, which never retrains).
+
+Architectures (paper Table 1) and the input shapes that make the linear
+dimensions come out exactly (valid convs, floor 2x2 max-pool):
+
+  mnist  1x28x28  : C6x1x5x5  P2 C16x6x5x5 P2 L256x10    (16*4*4   = 256)
+  cifar  3x32x32  : C6x3x5x5  P2 C16x6x5x5 P2 L400x10    (16*5*5   = 400)
+  kws    1x124x80 : C6x1x5x5  P2 C16x6x5x5 P2 L7616x12   (16*28*17 = 7616)
+  widar  22x13x13 : C32x22x6x6 C64x32x3x3 C96x64x3x3 L1536x128 L128x6
+                                                          (96*4*4  = 1536)
+"""
+
+import dataclasses
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import fatrelu, unit_conv2d, unit_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class Conv:
+    out_ch: int
+    in_ch: int
+    kh: int
+    kw: int
+    pool: bool  # 2x2 max pool after activation
+    relu: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class Linear:
+    n_in: int
+    n_out: int
+    relu: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Arch:
+    name: str
+    input_shape: Tuple[int, int, int]  # (C, H, W)
+    classes: int
+    layers: tuple  # of Conv | Linear
+
+
+ARCHS = {
+    "mnist": Arch(
+        "mnist",
+        (1, 28, 28),
+        10,
+        (
+            Conv(6, 1, 5, 5, pool=True),
+            Conv(16, 6, 5, 5, pool=True),
+            Linear(256, 10),
+        ),
+    ),
+    "cifar": Arch(
+        "cifar",
+        (3, 32, 32),
+        10,
+        (
+            Conv(6, 3, 5, 5, pool=True),
+            Conv(16, 6, 5, 5, pool=True),
+            Linear(400, 10),
+        ),
+    ),
+    "kws": Arch(
+        "kws",
+        (1, 124, 80),
+        12,
+        (
+            Conv(6, 1, 5, 5, pool=True),
+            Conv(16, 6, 5, 5, pool=True),
+            Linear(7616, 12),
+        ),
+    ),
+    "widar": Arch(
+        "widar",
+        (22, 13, 13),
+        6,
+        (
+            Conv(32, 22, 6, 6, pool=False),
+            Conv(64, 32, 3, 3, pool=False),
+            Conv(96, 64, 3, 3, pool=False),
+            Linear(1536, 128, relu=True),
+            Linear(128, 6),
+        ),
+    ),
+}
+
+
+def param_specs(arch: Arch) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered ``(name, shape)`` list — the flat param ABI shared with Rust."""
+    specs = []
+    for li, layer in enumerate(arch.layers):
+        if isinstance(layer, Conv):
+            specs.append((f"l{li}.w", (layer.out_ch, layer.in_ch, layer.kh, layer.kw)))
+            specs.append((f"l{li}.b", (layer.out_ch,)))
+        else:
+            specs.append((f"l{li}.w", (layer.n_in, layer.n_out)))
+            specs.append((f"l{li}.b", (layer.n_out,)))
+    return specs
+
+
+def init_params(arch: Arch, seed: int = 0) -> List[jnp.ndarray]:
+    """He-normal weights, zero biases, in ``param_specs`` order."""
+    key = jax.random.PRNGKey(seed)
+    params = []
+    for name, shape in param_specs(arch):
+        if name.endswith(".b"):
+            params.append(jnp.zeros(shape, jnp.float32))
+        else:
+            key, sub = jax.random.split(key)
+            fan_in = 1
+            for d in shape[1:] if len(shape) == 4 else shape[:1]:
+                fan_in *= d
+            std = (2.0 / fan_in) ** 0.5
+            params.append(std * jax.random.normal(sub, shape, jnp.float32))
+    return params
+
+
+def dense_macs(arch: Arch) -> List[int]:
+    """Dense MAC count per prunable layer — the Fig. 5 denominators."""
+    macs = []
+    c, h, w = arch.input_shape
+    for layer in arch.layers:
+        if isinstance(layer, Conv):
+            oh, ow = h - layer.kh + 1, w - layer.kw + 1
+            macs.append(layer.out_ch * layer.in_ch * layer.kh * layer.kw * oh * ow)
+            c, h, w = layer.out_ch, oh, ow
+            if layer.pool:
+                h, w = h // 2, w // 2
+        else:
+            macs.append(layer.n_in * layer.n_out)
+    return macs
+
+
+def _maxpool2x2(x):
+    b, c, h, w = x.shape
+    h2, w2 = h // 2, w // 2
+    x = x[:, :, : h2 * 2, : w2 * 2].reshape(b, c, h2, 2, w2, 2)
+    return jnp.max(x, axis=(3, 5))
+
+
+def fwd(arch: Arch, params: List[jnp.ndarray], x, t_vec, fat_t):
+    """Inference with UnIT pruning — built from the Layer-1 Pallas kernels.
+
+    Args:
+      params: flat list per ``param_specs``.
+      x: ``(B, C, H, W)`` input batch.
+      t_vec: ``(n_prunable,)`` per-layer UnIT thresholds (0 ⇒ dense).
+      fat_t: scalar FATReLU cut-off applied at every activation (0 ⇒ ReLU).
+
+    Returns:
+      ``(B, classes)`` logits.
+    """
+    pi = 0
+    li = 0
+    for layer in arch.layers:
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        if isinstance(layer, Conv):
+            x = unit_conv2d(x, w, b, t_vec[li])
+            if layer.relu:
+                x = fatrelu(x, fat_t)
+            if layer.pool:
+                x = _maxpool2x2(x)
+        else:
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = unit_linear(x, w, b, t_vec[li])
+            if layer.relu:
+                x = fatrelu(x, fat_t)
+        li += 1
+    return x
+
+
+def fwd_dense(arch: Arch, params: List[jnp.ndarray], x):
+    """Dense float forward (lax.conv path) — training graph + cross-check."""
+    pi = 0
+    for layer in arch.layers:
+        w, b = params[pi], params[pi + 1]
+        pi += 2
+        if isinstance(layer, Conv):
+            x = jax.lax.conv_general_dilated(
+                x, w, (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW")
+            ) + b[None, :, None, None]
+            if layer.relu:
+                x = jax.nn.relu(x)
+            if layer.pool:
+                x = _maxpool2x2(x)
+        else:
+            if x.ndim > 2:
+                x = x.reshape(x.shape[0], -1)
+            x = x @ w + b[None, :]
+            if layer.relu:
+                x = jax.nn.relu(x)
+    return x
+
+
+def loss_fn(arch: Arch, params, x, y_onehot):
+    logits = fwd_dense(arch, params, x)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def train_step(arch: Arch, params, mom, x, y_onehot, lr):
+    """One SGD+momentum(0.9) step. Returns (params', mom', loss)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(arch, p, x, y_onehot))(params)
+    new_mom = [0.9 * m + g for m, g in zip(mom, grads)]
+    new_params = [p - lr * m for p, m in zip(params, new_mom)]
+    return new_params, new_mom, loss

@@ -1,0 +1,177 @@
+"""Layer-1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes and thresholds; assert_allclose against ref.py is
+the core correctness signal for the whole stack (the Rust fixed-point
+engine is in turn validated against these same semantics).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import (
+    fatrelu,
+    fatrelu_ref,
+    unit_conv2d,
+    unit_conv2d_ref,
+    unit_linear,
+    unit_linear_ref,
+)
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, scale=1.0):
+    return scale * jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+# ---------------------------------------------------------------- linear
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 4),
+    n=st.integers(1, 48),
+    m=st.integers(1, 16),
+    t=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unit_linear_matches_ref(b, n, m, t, seed):
+    x = _rand(seed, (b, n))
+    w = _rand(seed + 1, (n, m))
+    bias = _rand(seed + 2, (m,))
+    got = unit_linear(x, w, bias, t)
+    want = unit_linear_ref(x, w, bias, t)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_unit_linear_t0_is_dense():
+    x = _rand(0, (3, 20))
+    w = _rand(1, (20, 7))
+    bias = _rand(2, (7,))
+    got = unit_linear(x, w, bias, 0.0)
+    np.testing.assert_allclose(got, x @ w + bias[None, :], rtol=1e-5, atol=1e-5)
+
+
+def test_unit_linear_huge_t_prunes_everything():
+    x = _rand(0, (2, 10))
+    w = _rand(1, (10, 5))
+    bias = _rand(2, (5,))
+    got = unit_linear(x, w, bias, 1e9)
+    np.testing.assert_allclose(got, jnp.broadcast_to(bias, (2, 5)), atol=1e-6)
+
+
+def test_unit_linear_zero_activation_contributes_nothing():
+    # A zero activation must be pruned (T/0 -> inf), never divide-by-zero.
+    x = jnp.zeros((1, 6), jnp.float32)
+    w = _rand(1, (6, 4))
+    bias = _rand(2, (4,))
+    got = unit_linear(x, w, bias, 0.5)
+    np.testing.assert_allclose(got, bias[None, :], atol=1e-6)
+    assert np.all(np.isfinite(np.asarray(got)))
+
+
+def test_unit_linear_monotone_in_threshold():
+    # Raising T can only remove contributions, never add them: the kept-MAC
+    # set shrinks monotonically. Verify via the ref mask count.
+    from compile.kernels import unit_linear_kept_ref
+
+    x = _rand(0, (4, 32))
+    w = _rand(1, (32, 8))
+    kept = [int(unit_linear_kept_ref(x, w, t).sum()) for t in (0.0, 0.1, 0.5, 1.0, 3.0)]
+    assert kept == sorted(kept, reverse=True)
+
+
+@pytest.mark.parametrize("block_n", [1, 4, 512])
+def test_unit_linear_tiling_invariance(block_n):
+    # Result must not depend on the contraction tile size.
+    x = _rand(3, (2, 24))
+    w = _rand(4, (24, 6))
+    bias = _rand(5, (6,))
+    got = unit_linear(x, w, bias, 0.4, block_n=block_n)
+    want = unit_linear_ref(x, w, bias, 0.4)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------- conv
+
+
+@settings(**SETTINGS)
+@given(
+    b=st.integers(1, 2),
+    c=st.integers(1, 3),
+    o=st.integers(1, 4),
+    h=st.integers(5, 12),
+    w=st.integers(5, 12),
+    k=st.integers(1, 4),
+    t=st.floats(0.0, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_unit_conv2d_matches_ref(b, c, o, h, w, k, t, seed):
+    if k > h or k > w:
+        k = min(h, w)
+    x = _rand(seed, (b, c, h, w))
+    wk = _rand(seed + 1, (o, c, k, k))
+    bias = _rand(seed + 2, (o,))
+    got = unit_conv2d(x, wk, bias, t)
+    want = unit_conv2d_ref(x, wk, bias, t)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_unit_conv2d_t0_matches_lax_conv():
+    x = _rand(0, (2, 3, 9, 8))
+    wk = _rand(1, (4, 3, 3, 3))
+    bias = _rand(2, (4,))
+    got = unit_conv2d(x, wk, bias, 0.0)
+    want = (
+        jax.lax.conv_general_dilated(
+            x, wk, (1, 1), "VALID", dimension_numbers=("NCHW", "OIHW", "NCHW")
+        )
+        + bias[None, :, None, None]
+    )
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_unit_conv2d_huge_t_prunes_everything():
+    x = _rand(0, (1, 2, 7, 7))
+    wk = _rand(1, (3, 2, 3, 3))
+    bias = _rand(2, (3,))
+    got = unit_conv2d(x, wk, bias, 1e9)
+    want = jnp.broadcast_to(bias[None, :, None, None], (1, 3, 5, 5))
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_unit_conv2d_rect_kernel():
+    x = _rand(0, (1, 2, 10, 8))
+    wk = _rand(1, (3, 2, 5, 3))
+    bias = _rand(2, (3,))
+    got = unit_conv2d(x, wk, bias, 0.7)
+    want = unit_conv2d_ref(x, wk, bias, 0.7)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------- fatrelu
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(1, 200),
+    t=st.floats(0.0, 2.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fatrelu_matches_ref(n, t, seed):
+    x = _rand(seed, (n,))
+    np.testing.assert_allclose(fatrelu(x, t), fatrelu_ref(x, t))
+
+
+def test_fatrelu_t0_is_relu():
+    x = _rand(0, (3, 4, 5))
+    np.testing.assert_allclose(fatrelu(x, 0.0), jax.nn.relu(x))
+
+
+def test_fatrelu_kills_subthreshold_positives():
+    x = jnp.array([0.1, 0.3, 0.6, -1.0], jnp.float32)
+    got = np.asarray(fatrelu(x, 0.5))
+    np.testing.assert_allclose(got, [0.0, 0.0, 0.6, 0.0])

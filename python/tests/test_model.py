@@ -1,0 +1,96 @@
+"""Layer-2 correctness: architectures, shapes, training step, pruned fwd."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.model import (
+    ARCHS,
+    dense_macs,
+    fwd,
+    fwd_dense,
+    init_params,
+    param_specs,
+    train_step,
+)
+
+TABLE1_LINEAR_IN = {"mnist": 256, "cifar": 400, "kws": 7616, "widar": 1536}
+
+
+@pytest.mark.parametrize("name", list(ARCHS))
+def test_param_shapes_match_table1(name):
+    arch = ARCHS[name]
+    specs = dict(param_specs(arch))
+    # First linear layer input dim must equal the Table-1 value exactly.
+    first_lin = next(
+        s for n, s in sorted(specs.items()) if len(s) == 2 and s[0] == TABLE1_LINEAR_IN[name]
+    )
+    assert first_lin[0] == TABLE1_LINEAR_IN[name]
+
+
+@pytest.mark.parametrize("name", ["mnist", "cifar", "widar"])
+def test_fwd_logits_shape(name):
+    arch = ARCHS[name]
+    params = init_params(arch)
+    x = jnp.zeros((2,) + arch.input_shape, jnp.float32)
+    t = jnp.zeros((len(arch.layers),), jnp.float32)
+    logits = fwd(arch, params, x, t, jnp.float32(0.0))
+    assert logits.shape == (2, arch.classes)
+
+
+@pytest.mark.parametrize("name", ["mnist", "widar"])
+def test_fwd_t0_matches_dense(name):
+    # The pruned fwd with T=0 / fat_t=0 must equal the dense training graph.
+    arch = ARCHS[name]
+    params = init_params(arch, seed=3)
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (2,) + arch.input_shape, jnp.float32)
+    t = jnp.zeros((len(arch.layers),), jnp.float32)
+    got = fwd(arch, params, x, t, jnp.float32(0.0))
+    want = fwd_dense(arch, params, x)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_fwd_pruning_reduces_magnitude():
+    arch = ARCHS["mnist"]
+    params = init_params(arch, seed=1)
+    x = jax.random.normal(jax.random.PRNGKey(0), (1,) + arch.input_shape)
+    t_hi = 0.5 * jnp.ones((len(arch.layers),), jnp.float32)
+    dense = fwd(arch, params, x, jnp.zeros_like(t_hi), jnp.float32(0.0))
+    pruned = fwd(arch, params, x, t_hi, jnp.float32(0.0))
+    # Pruned logits differ from dense (some MACs dropped) but stay finite.
+    assert np.all(np.isfinite(np.asarray(pruned)))
+    assert not np.allclose(dense, pruned)
+
+
+def test_dense_macs_table1_totals():
+    # Cross-check a few hand-computed dense MAC counts.
+    m = dense_macs(ARCHS["mnist"])
+    assert m[0] == 6 * 1 * 5 * 5 * 24 * 24  # conv1: 86_400
+    assert m[1] == 16 * 6 * 5 * 5 * 8 * 8  # conv2: 153_600
+    assert m[2] == 256 * 10
+    w = dense_macs(ARCHS["widar"])
+    assert w[3] == 1536 * 128 and w[4] == 128 * 6
+
+
+def test_train_step_reduces_loss():
+    arch = ARCHS["mnist"]
+    params = init_params(arch, seed=0)
+    mom = [jnp.zeros_like(p) for p in params]
+    key = jax.random.PRNGKey(42)
+    x = jax.random.normal(key, (16,) + arch.input_shape, jnp.float32)
+    y = jax.nn.one_hot(jnp.arange(16) % arch.classes, arch.classes)
+    losses = []
+    step = jax.jit(lambda p, m, x, y: train_step(arch, p, m, x, y, jnp.float32(0.05)))
+    for _ in range(30):
+        params, mom, loss = step(params, mom, x, y)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] * 0.5, losses[:3] + losses[-3:]
+
+
+def test_init_params_deterministic():
+    a = init_params(ARCHS["cifar"], seed=5)
+    b = init_params(ARCHS["cifar"], seed=5)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)

@@ -1,0 +1,134 @@
+//! Ablations for the design choices DESIGN.md calls out (§2.1 / §2.2):
+//!
+//! 1. **Calibration percentile sweep** — the Fig. 5 trade-off curve:
+//!    accuracy vs MACs skipped as the threshold percentile rises.
+//! 2. **Layer-wise vs group-wise thresholds** — per-output-channel
+//!    refinement (the paper's optional fine-grained mode).
+//! 3. **Division estimator accuracy impact** — exact vs shift/tree/mask
+//!    thresholds change *which* connections are pruned; how much does
+//!    model accuracy move?
+//! 4. **Per-inference vs precomputed conv thresholds** — the
+//!    compute/memory trade-off the paper notes for conv layers.
+
+use anyhow::Result;
+use unit_pruner::approx::DivKind;
+use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::pruning::{calibrate, calibrate_groups, CalibConfig};
+use unit_pruner::report::experiments::{prepare, MechOpts};
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::util::table::Table;
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let opts = MechOpts::default();
+    let model = "mnist";
+    let p = prepare(&rt, &store, model, &opts)?;
+    let n = p.ds.test.len().min(150);
+
+    let eval = |q: &QModel, cfg: &EngineConfig| -> (f64, f64, f64) {
+        let mut hits = 0usize;
+        let mut skip = 0f64;
+        let mut cycles = 0u64;
+        for i in 0..n {
+            let out = infer(q, &q.quantize_input(p.ds.test.sample(i)), cfg);
+            if out.argmax() == p.ds.test.y[i] {
+                hits += 1;
+            }
+            skip += out.skip_fraction();
+            cycles += out.ledger.total_cycles();
+        }
+        (hits as f64 / n as f64, skip / n as f64, cycles as f64 / n as f64)
+    };
+
+    // 1. percentile sweep -------------------------------------------------
+    println!("=== Ablation 1: calibration percentile sweep ({model}) ===\n");
+    let mut t = Table::new(vec!["percentile", "accuracy", "MACs skipped", "Mcycles/inf"]);
+    let div = DivKind::Shift.build();
+    for pct in [5.0, 10.0, 20.0, 35.0, 50.0, 70.0] {
+        let th = calibrate(
+            &p.def,
+            &p.params,
+            &p.ds.val,
+            &CalibConfig { percentile: pct, ..Default::default() },
+        );
+        let q = QModel::quantize(&p.def, &p.params).with_thresholds(&th);
+        let cfg = EngineConfig::unit(div.as_ref());
+        let (acc, skip, cyc) = eval(&q, &cfg);
+        t.row(vec![
+            format!("p{pct:.0}"),
+            format!("{:.2}%", 100.0 * acc),
+            format!("{:.2}%", 100.0 * skip),
+            format!("{:.2}", cyc / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. layer vs group thresholds ----------------------------------------
+    println!("=== Ablation 2: layer-wise vs group-wise thresholds ===\n");
+    let mut t = Table::new(vec!["mode", "accuracy", "MACs skipped", "Mcycles/inf"]);
+    let th_layer = calibrate(&p.def, &p.params, &p.ds.val, &CalibConfig::default());
+    let th_group = calibrate_groups(&p.def, &p.params, &p.ds.val, &CalibConfig::default());
+    for (name, th) in [("layer-wise", &th_layer), ("group-wise", &th_group)] {
+        let q = QModel::quantize(&p.def, &p.params).with_thresholds(th);
+        let cfg = EngineConfig::unit(div.as_ref());
+        let (acc, skip, cyc) = eval(&q, &cfg);
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}%", 100.0 * acc),
+            format!("{:.2}%", 100.0 * skip),
+            format!("{:.2}", cyc / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 3. division estimator impact ----------------------------------------
+    println!("=== Ablation 3: division estimator impact on accuracy ===\n");
+    let mut t = Table::new(vec!["estimator", "accuracy", "MACs skipped", "Mcycles/inf"]);
+    let q = QModel::quantize(&p.def, &p.params).with_thresholds(&th_layer);
+    for kind in DivKind::all() {
+        let d = kind.build();
+        let cfg = EngineConfig::unit(d.as_ref());
+        let (acc, skip, cyc) = eval(&q, &cfg);
+        t.row(vec![
+            d.name().to_string(),
+            format!("{:.2}%", 100.0 * acc),
+            format!("{:.2}%", 100.0 * skip),
+            format!("{:.2}", cyc / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 4. per-inference vs precomputed conv thresholds ----------------------
+    println!("=== Ablation 4: per-inference vs precomputed conv thresholds ===\n");
+    let mut t = Table::new(vec!["variant", "Mcycles/inf", "extra model bytes"]);
+    for (name, pre) in [("per-inference divisions", false), ("precomputed table", true)] {
+        let cfg = EngineConfig {
+            mode: PruneMode::Unit,
+            div: div.as_ref(),
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: pre,
+            t_scale_q8: 256,
+        };
+        let (_acc, _skip, cyc) = eval(&q, &cfg);
+        // table cost: one u32 per conv tap
+        let bytes: usize = p
+            .def
+            .layers
+            .iter()
+            .filter_map(|l| match *l {
+                unit_pruner::nn::Layer::Conv { out_ch, in_ch, kh, kw, .. } => {
+                    Some(4 * out_ch * in_ch * kh * kw)
+                }
+                _ => None,
+            })
+            .sum();
+        t.row(vec![
+            name.to_string(),
+            format!("{:.2}", cyc / 1e6),
+            if pre { bytes.to_string() } else { "0".into() },
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}

@@ -1,0 +1,48 @@
+//! Fig. 5 — accuracy drop vs remaining MAC operations, all four
+//! datasets × {None, TTP, FATReLU, UnIT, UnIT+FATReLU, TTP+UnIT}.
+//!
+//! mnist/cifar/kws run on the MCU simulator (the paper's MSP430
+//! deployment); widar runs on the float engine (the paper's desktop
+//! platform). Models are trained once via the AOT train-step artifact
+//! and cached under `artifacts/weights/`.
+//!
+//! Expected shape (paper §4.1): UnIT skips the most MACs at comparable
+//! accuracy; combining with FATReLU adds little; TTP skips less for the
+//! same accuracy budget.
+
+use unit_pruner::report::experiments::{prepare, run_float_dataset, run_mcu_dataset, MechOpts};
+use unit_pruner::report::fig5_table;
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let opts = MechOpts::default();
+
+    println!("=== Fig. 5: accuracy drop vs remaining MACs ===\n");
+    for model in ["mnist", "cifar", "kws", "widar"] {
+        let p = prepare(&rt, &store, model, &opts)?;
+        let (base, rows) = if model == "widar" {
+            run_float_dataset(&p, &opts)
+        } else {
+            run_mcu_dataset(&p, &opts)
+        };
+        println!("{}", fig5_table(model, base, &rows));
+        // paper-style headline deltas
+        let by = |n: &str| rows.iter().find(|r| r.mechanism == n).unwrap();
+        let unit = by("UnIT");
+        let ttp = by("TTP");
+        let fat = by("FATReLU");
+        println!(
+            "UnIT vs TTP: {:+.2}% MACs skipped, {:+.2}% accuracy",
+            100.0 * (unit.mac_skipped - ttp.mac_skipped),
+            100.0 * (unit.accuracy - ttp.accuracy)
+        );
+        println!(
+            "UnIT vs FATReLU: {:+.2}% MACs skipped, {:+.2}% accuracy\n",
+            100.0 * (unit.mac_skipped - fat.mac_skipped),
+            100.0 * (unit.accuracy - fat.accuracy)
+        );
+    }
+    Ok(())
+}

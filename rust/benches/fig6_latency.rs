@@ -1,0 +1,46 @@
+//! Fig. 6 — inference runtime (compute + data movement) on the MCU,
+//! MNIST / CIFAR10 / KWS, per mechanism, plus the SONIC intermittent-
+//! power wall-clock (the paper's battery-free deployment regime).
+//!
+//! Expected shape: UnIT fastest; data movement a large share of total
+//! time (the paper: "most of the time is spent moving data"); KWS ≫
+//! CIFAR > MNIST in absolute seconds.
+
+use unit_pruner::mcu::{cost, HarvestProfile, IntermittentSim};
+use unit_pruner::report::experiments::{prepare, run_mcu_dataset, MechOpts};
+use unit_pruner::report::fig6_table;
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let opts = MechOpts::default();
+
+    println!("=== Fig. 6: inference runtime incl. data movement ===\n");
+    for model in ["mnist", "cifar", "kws"] {
+        let p = prepare(&rt, &store, model, &opts)?;
+        let (_base, rows) = run_mcu_dataset(&p, &opts);
+        println!("{}", fig6_table(model, &rows));
+
+        // Intermittent (harvested-power) wall clock: replay each
+        // mechanism's cycle budget through the SONIC-like simulator.
+        println!("intermittent wall-clock (50ms recharge bursts):");
+        for r in &rows {
+            let total_cycles = (r.mcu_secs * cost::CPU_HZ) as u64;
+            // task granularity: ~64 k cycles per committed task
+            let n_tasks = (total_cycles / 64_000).max(1);
+            let tasks: Vec<u64> = vec![total_cycles / n_tasks; n_tasks as usize];
+            let mut sim = IntermittentSim::new(HarvestProfile::default(), 9);
+            let run = sim.run(&tasks);
+            println!(
+                "  {:14} {:8.2}s wall  ({} failures, {:.1}% re-executed)",
+                r.mechanism,
+                run.wall_secs,
+                run.failures,
+                100.0 * run.reexecuted_cycles as f64 / total_cycles.max(1) as f64
+            );
+        }
+        println!();
+    }
+    Ok(())
+}

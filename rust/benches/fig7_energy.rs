@@ -1,0 +1,29 @@
+//! Fig. 7 — average energy per inference (mJ) on the MCU, per mechanism.
+//!
+//! Expected shape (paper): UnIT lowest (e.g. MNIST 1.28 mJ → 0.20 mJ,
+//! −84 %); FATReLU and TTP in between; combining UnIT with FATReLU can
+//! help slightly.
+
+use unit_pruner::report::experiments::{prepare, run_mcu_dataset, MechOpts};
+use unit_pruner::report::fig7_table;
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+
+fn main() -> anyhow::Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let opts = MechOpts::default();
+
+    println!("=== Fig. 7: energy per inference ===\n");
+    for model in ["mnist", "cifar", "kws"] {
+        let p = prepare(&rt, &store, model, &opts)?;
+        let (_base, rows) = run_mcu_dataset(&p, &opts);
+        println!("{}", fig7_table(model, &rows));
+        let none = rows.iter().find(|r| r.mechanism == "None").unwrap();
+        let unit = rows.iter().find(|r| r.mechanism == "UnIT").unwrap();
+        println!(
+            "UnIT saves {:.1}% energy vs unpruned\n",
+            100.0 * (1.0 - unit.energy_mj / none.energy_mj)
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,111 @@
+//! Fig. 8 — fast division approximations vs traditional division.
+//!
+//! (a) MSP430 model: bit shifting and binary tree search vs the software
+//!     division routine, in modeled cycles and energy over a calibration-
+//!     shaped operand distribution. Paper: 50–59.8 % lower time,
+//!     53.7–60.3 % lower energy.
+//! (b) Host CPU: the IEEE-754 bit-masking estimator vs hardware f32
+//!     division, measured in wall-clock over a large iteration count
+//!     (paper: Intel i7, 44.8 % faster). We also report estimator error.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use unit_pruner::approx::{DivApprox, DivExact, DivKind, DivMask, DivShift, DivTree};
+use unit_pruner::mcu::EnergyModel;
+use unit_pruner::util::table::Table;
+use unit_pruner::util::Rng;
+
+/// Operand distribution shaped like real calibration data: thresholds
+/// T_raw in the thousands, control terms spanning Q8.8 magnitudes.
+fn operands(n: usize, seed: u64) -> Vec<(u32, u32)> {
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let t = 500 + rng.below(50_000) as u32;
+            let c = 1 + rng.below(32_768) as u32;
+            (t, c)
+        })
+        .collect()
+}
+
+fn main() {
+    let ops = operands(200_000, 7);
+    let energy = EnergyModel::default();
+
+    println!("=== Fig. 8a: modeled MSP430 cycles & energy per division ===\n");
+    let mut t = Table::new(vec![
+        "method",
+        "cycles/op",
+        "vs exact",
+        "energy nJ/op",
+        "mean rel err",
+    ]);
+    let exact_cycles: u64 = ops.iter().map(|&(a, c)| DivExact.cycles(a, c)).sum();
+    for kind in DivKind::all() {
+        let d = kind.build();
+        let mut cycles = 0u64;
+        let mut err = 0f64;
+        let mut nerr = 0usize;
+        for &(a, c) in &ops {
+            cycles += d.cycles(a, c);
+            let got = d.div(a, c) as f64;
+            let want = (a / c) as f64;
+            if want > 0.0 {
+                err += (got - want).abs() / want;
+                nerr += 1;
+            }
+        }
+        let per = cycles as f64 / ops.len() as f64;
+        let nj = energy.millijoules(cycles, 0, 0) * 1e6 / ops.len() as f64;
+        t.row(vec![
+            d.name().to_string(),
+            format!("{per:.1}"),
+            format!("{:+.1}%", 100.0 * (cycles as f64 / exact_cycles as f64 - 1.0)),
+            format!("{nj:.1}"),
+            format!("{:.3}", err / nerr.max(1) as f64),
+        ]);
+    }
+    println!("{}", t.render());
+
+    println!("=== Fig. 8b: host-CPU wall-clock, bit masking vs f32 division ===\n");
+    let n = 20_000_000usize;
+    let mut rng = Rng::new(11);
+    let xs: Vec<f32> = (0..4096).map(|_| 0.01 + rng.f32() * 100.0).collect();
+    let ts: Vec<f32> = (0..4096).map(|_| 0.01 + rng.f32() * 100.0).collect();
+
+    let t0 = Instant::now();
+    let mut acc = 0f32;
+    for i in 0..n {
+        let x = xs[i & 4095];
+        let tt = ts[(i >> 1) & 4095];
+        acc += black_box(tt / x);
+    }
+    let t_div = t0.elapsed().as_secs_f64();
+
+    let t0 = Instant::now();
+    let mut acc2 = 0f32;
+    for i in 0..n {
+        let x = xs[i & 4095];
+        let tt = ts[(i >> 1) & 4095];
+        acc2 += black_box(DivMask::div_f32(tt, x));
+    }
+    let t_mask = t0.elapsed().as_secs_f64();
+
+    println!("f32 division : {:.3}s for {}M ops ({acc:.1})", t_div, n / 1_000_000);
+    println!("bit masking  : {:.3}s for {}M ops ({acc2:.1})", t_mask, n / 1_000_000);
+    println!(
+        "bit masking is {:.1}% {} than hardware division (paper: 44.8% faster on i7)\n",
+        100.0 * (1.0 - t_mask / t_div).abs(),
+        if t_mask < t_div { "faster" } else { "slower" }
+    );
+
+    // Per-method modeled savings summary (the paper's headline band).
+    let shift_cycles: u64 = ops.iter().map(|&(a, c)| DivShift.cycles(a, c)).sum();
+    let tree_cycles: u64 = ops.iter().map(|&(a, c)| DivTree.cycles(a, c)).sum();
+    println!(
+        "modeled MSP430 savings: shift {:.1}%, tree {:.1}% (paper band: 50-59.8%)",
+        100.0 * (1.0 - shift_cycles as f64 / exact_cycles as f64),
+        100.0 * (1.0 - tree_cycles as f64 / exact_cycles as f64)
+    );
+}

@@ -1,0 +1,117 @@
+//! L3 hot-path microbenchmarks (the §Perf harness in EXPERIMENTS.md):
+//!
+//! * engine throughput — simulated connections per host-second, per
+//!   pruning mode (the inner-loop cost of the whole simulator);
+//! * division estimators — host ns/op;
+//! * coordinator overhead — request round-trip latency vs raw engine
+//!   call at several worker counts.
+//!
+//! Run before and after each optimization; record deltas in
+//! EXPERIMENTS.md §Perf.
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{mnist_like, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::util::table::Table;
+
+fn main() {
+    let def = zoo("mnist");
+    let params = Params::random(&def, 3);
+    let ds = mnist_like::generate(5, Sizes { train: 4, val: 4, test: 32 });
+    let th = Thresholds::uniform(3, 0.2);
+
+    // 1. engine throughput -------------------------------------------------
+    println!("=== Perf 1: engine throughput (host-side) ===\n");
+    let mut t = Table::new(vec!["mode", "inferences/s", "Mconn/s", "us/inference"]);
+    let div = DivKind::Shift.build();
+    let total_conn = def.total_dense_macs();
+    for (name, mode, with_t) in [
+        ("dense", PruneMode::Dense, false),
+        ("zero-skip", PruneMode::ZeroSkip, false),
+        ("unit", PruneMode::Unit, true),
+    ] {
+        let mut q = QModel::quantize(&def, &params);
+        if with_t {
+            q = q.with_thresholds(&th);
+        }
+        let cfg = EngineConfig {
+            mode,
+            div: div.as_ref(),
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+        };
+        let inputs: Vec<Vec<i16>> =
+            (0..ds.test.len()).map(|i| q.quantize_input(ds.test.sample(i))).collect();
+        // warmup
+        black_box(infer(&q, &inputs[0], &cfg));
+        let reps = 60usize;
+        let t0 = Instant::now();
+        for r in 0..reps {
+            black_box(infer(&q, &inputs[r % inputs.len()], &cfg));
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let per = dt / reps as f64;
+        t.row(vec![
+            name.to_string(),
+            format!("{:.1}", 1.0 / per),
+            format!("{:.1}", total_conn as f64 / per / 1e6),
+            format!("{:.0}", per * 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. division estimators (host ns/op) ----------------------------------
+    println!("=== Perf 2: division estimators, host ns/op ===\n");
+    let mut t = Table::new(vec!["estimator", "ns/op"]);
+    let n = 30_000_000usize;
+    for kind in DivKind::all() {
+        let d = kind.build();
+        let t0 = Instant::now();
+        let mut acc = 0u64;
+        for i in 0..n {
+            let tt = (i as u32).wrapping_mul(2_654_435_761) | 1;
+            let c = ((i as u32) >> 7) | 1;
+            acc = acc.wrapping_add(d.div(tt & 0xFFFFF, c & 0x7FFF) as u64);
+        }
+        let ns = t0.elapsed().as_nanos() as f64 / n as f64;
+        black_box(acc);
+        t.row(vec![d.name().to_string(), format!("{ns:.2}")]);
+    }
+    println!("{}", t.render());
+
+    // 3. coordinator overhead ----------------------------------------------
+    println!("=== Perf 3: coordinator round-trip overhead ===\n");
+    let mut t = Table::new(vec!["workers", "req/s", "p50 us", "p99 us"]);
+    for workers in [1usize, 2, 4] {
+        let q = QModel::quantize(&def, &params).with_thresholds(&th);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+            ServeConfig { workers, ..Default::default() },
+        );
+        let n_req = 200usize;
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n_req)
+            .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = coord.metrics.snapshot();
+        coord.shutdown();
+        t.row(vec![
+            workers.to_string(),
+            format!("{:.1}", n_req as f64 / dt),
+            snap.p50_us.to_string(),
+            snap.p99_us.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -1,0 +1,97 @@
+//! Table 2 — cross-context robustness on Widar: train in one room, test
+//! in the other, for {Unpruned, TTP, UnIT, TTP+UnIT}; report macro-F1
+//! and MAC-skipped % (float platform, as in the paper).
+//!
+//! Expected shape: F1 within ~±1–2 % of unpruned across contexts; UnIT
+//! skips more MACs than TTP; TTP+UnIT skips the most.
+
+use anyhow::Result;
+use unit_pruner::data::widar_like::{generate_room, Room};
+use unit_pruner::data::Sizes;
+use unit_pruner::models::zoo;
+use unit_pruner::nn::ForwardOpts;
+use unit_pruner::pruning::{apply_global_magnitude, calibrate, CalibConfig};
+use unit_pruner::report::table2;
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::train::{ensure_trained_tagged, evaluate_float, TrainConfig};
+
+fn main() -> Result<()> {
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let def = zoo("widar");
+    let sizes = Sizes::default();
+    let seed = 42;
+    let n_eval = 200;
+    let calib = CalibConfig::default();
+
+    let mut rows: Vec<(String, String, String, f64, f64)> = Vec::new();
+
+    for train_room in [Room::Room1, Room::Room2] {
+        let ds_train = generate_room(seed, sizes, train_room);
+        let params = ensure_trained_tagged(
+            &rt,
+            &store,
+            "widar",
+            &format!("widar-{}", train_room.name()),
+            &ds_train,
+            &TrainConfig::for_model("widar"),
+        )?;
+        let params_ttp = apply_global_magnitude(&params, 0.5);
+        // Thresholds calibrated on the *training context's* validation
+        // split — deployment never sees the target context in advance.
+        let th = calibrate(&def, &params, &ds_train.val, &calib);
+        let th_ttp = calibrate(&def, &params_ttp, &ds_train.val, &calib);
+
+        for test_room in [Room::Room1, Room::Room2] {
+            let ds_test = generate_room(seed, sizes, test_room);
+            let nl = def.layers.len();
+            let mech: [(&str, &_, Vec<f32>); 4] = [
+                ("Unpruned", &params, vec![0.0; nl]),
+                ("TTP", &params_ttp, vec![0.0; nl]),
+                ("UnIT", &params, th.per_layer.clone()),
+                ("TTP+UnIT", &params_ttp, th_ttp.per_layer.clone()),
+            ];
+            for (name, p, t_vec) in mech {
+                let r = evaluate_float(
+                    &def,
+                    p,
+                    &ds_test.test,
+                    &ForwardOpts { t_vec, fat_t: 0.0 },
+                    n_eval,
+                );
+                rows.push((
+                    train_room.name().to_string(),
+                    test_room.name().to_string(),
+                    name.to_string(),
+                    r.macro_f1,
+                    r.mac_skipped,
+                ));
+            }
+        }
+    }
+
+    println!("=== Table 2: Widar cross-context (train room -> test room) ===\n");
+    println!("{}", table2(&rows));
+
+    // Shape checks the paper emphasizes, printed as a summary.
+    let get = |tr: &str, te: &str, m: &str| {
+        rows.iter()
+            .find(|(a, b, c, _, _)| a == tr && b == te && c == m)
+            .map(|(_, _, _, f1, sk)| (*f1, *sk))
+            .unwrap()
+    };
+    for (tr, te) in [("room1", "room2"), ("room2", "room1")] {
+        let (f1_un, _) = get(tr, te, "Unpruned");
+        let (f1_unit, sk_unit) = get(tr, te, "UnIT");
+        let (_, sk_ttp) = get(tr, te, "TTP");
+        let (_, sk_both) = get(tr, te, "TTP+UnIT");
+        println!(
+            "{tr}->{te}: UnIT F1 {:+.3} vs unpruned; skips {:.1}% (TTP {:.1}%, TTP+UnIT {:.1}%)",
+            f1_unit - f1_un,
+            100.0 * sk_unit,
+            100.0 * sk_ttp,
+            100.0 * sk_both
+        );
+    }
+    Ok(())
+}

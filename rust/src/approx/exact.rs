@@ -1,0 +1,48 @@
+//! True integer division — the Fig. 8 baseline.
+//!
+//! The MSP430FR5994 has no divide instruction; compilers emit a software
+//! routine. TI's SLAA329 app note measures a 16÷16 restoring division at
+//! roughly twice the cost of the shift-and-add multiply (~77 cycles), and
+//! the paper calls division "nearly as expensive as multiplication". We
+//! model 140 cycles per 32÷16 software division (documented constant in
+//! [`crate::mcu::cost`]).
+
+use super::DivApprox;
+use crate::mcu::cost;
+
+/// Exact `t / c` via the (modeled) software division routine.
+pub struct DivExact;
+
+impl DivApprox for DivExact {
+    fn name(&self) -> &'static str {
+        "exact"
+    }
+
+    #[inline]
+    fn div(&self, t: u32, c: u32) -> u32 {
+        debug_assert!(c >= 1);
+        t / c
+    }
+
+    #[inline]
+    fn cycles(&self, _t: u32, _c: u32) -> u64 {
+        cost::DIV_SW
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn division_identities() {
+        assert_eq!(DivExact.div(12, 4), 3);
+        assert_eq!(DivExact.div(13, 4), 3);
+        assert_eq!(DivExact.div(u32::MAX, 1), u32::MAX);
+    }
+
+    #[test]
+    fn constant_cost() {
+        assert_eq!(DivExact.cycles(1, 1), DivExact.cycles(u32::MAX, 3));
+    }
+}

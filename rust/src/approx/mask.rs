@@ -1,0 +1,116 @@
+//! Bit-masking division approximation (paper Eq. 5/6; floating-point
+//! devices such as the MAX78000).
+//!
+//! IEEE-754 floats are `(-1)^S · 2^(E−E₀) · (1 + M/M_max)`; dropping the
+//! mantissa term, the quotient of two floats is approximately
+//! `|X/T| ≈ 2^(E_X − E_T)` — an integer subtraction of the exponent
+//! fields extracted by bit masking, with the bias re-applied afterwards.
+//!
+//! On the integer MCU engine we emulate the exponent fields of the raw
+//! operands (`E(v) = ⌊log₂ v⌋`), returning the pure power-of-two estimate
+//! `2^(E_t − E_c)` — this is the paper's roughest estimator (both
+//! operands reduced to their exponent), bounded within a factor of 4 of
+//! the exact quotient. [`DivMask::div_f32`] implements the literal
+//! float-bit version used by the host-CPU benchmark (Fig. 8b).
+//!
+//! ### Cycle model
+//! Two mask+shift extractions, one subtraction, one reconstruct — ~10
+//! cycles on an FPU-class core, constant.
+
+use super::{ilog2, DivApprox};
+
+/// `t / c ≈ 2^(⌊log₂ t⌋ − ⌊log₂ c⌋)` via (emulated) exponent fields.
+pub struct DivMask;
+
+impl DivMask {
+    /// The literal IEEE-754 bit-mask estimator on host floats:
+    /// extract exponent fields, subtract, rebias, reinterpret.
+    /// Requires positive finite normal inputs.
+    #[inline]
+    pub fn div_f32(t: f32, c: f32) -> f32 {
+        debug_assert!(t > 0.0 && c > 0.0);
+        let bt = t.to_bits();
+        let bc = c.to_bits();
+        let et = ((bt >> 23) & 0xFF) as i32;
+        let ec = ((bc >> 23) & 0xFF) as i32;
+        let eq = et - ec + 127;
+        if eq <= 0 {
+            return 0.0; // underflow: quotient below smallest normal
+        }
+        if eq >= 255 {
+            return f32::INFINITY;
+        }
+        f32::from_bits((eq as u32) << 23) // mantissa zeroed: pure 2^(Et-Ec)
+    }
+}
+
+impl DivApprox for DivMask {
+    fn name(&self) -> &'static str {
+        "mask"
+    }
+
+    #[inline]
+    fn div(&self, t: u32, c: u32) -> u32 {
+        debug_assert!(c >= 1);
+        if t == 0 {
+            return 0;
+        }
+        let et = ilog2(t);
+        let ec = ilog2(c);
+        if ec > et {
+            0
+        } else {
+            1u32 << (et - ec).min(31)
+        }
+    }
+
+    #[inline]
+    fn cycles(&self, _t: u32, _c: u32) -> u64 {
+        10
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn integer_estimate_within_factor_four() {
+        crate::util::prop::check(23, 3000, |g| {
+            let t = g.u32_in(1, 1 << 28);
+            let c = g.u32_in(1, 1 << 20);
+            let est = DivMask.div(t, c) as f64;
+            let exact = t as f64 / c as f64;
+            // 2^(Et-Ec) vs t/c: each exponent truncation loses < 2x.
+            assert!(est <= 2.0 * exact, "t={t} c={c} est={est} exact={exact}");
+            assert!(est * 4.0 + 1.0 >= exact, "t={t} c={c} est={est} exact={exact}");
+        });
+    }
+
+    #[test]
+    fn float_bitmask_matches_exponent_difference() {
+        for &(t, c) in &[(8.0f32, 2.0f32), (100.0, 3.0), (0.5, 4.0), (1.0, 1.0)] {
+            let est = DivMask::div_f32(t, c);
+            let exact = t / c;
+            assert!(est <= 2.0 * exact && 4.0 * est >= exact, "{t}/{c}: {est} vs {exact}");
+            // result must be a pure power of two
+            assert_eq!(est.to_bits() & 0x007F_FFFF, 0);
+        }
+    }
+
+    #[test]
+    fn float_bitmask_underflow_and_overflow() {
+        assert_eq!(DivMask::div_f32(1.0e-38, 1.0e38), 0.0);
+        assert_eq!(DivMask::div_f32(1.0e38, 1.0e-38), f32::INFINITY);
+    }
+
+    #[test]
+    fn integer_zero_numerator() {
+        assert_eq!(DivMask.div(0, 5), 0);
+    }
+
+    #[test]
+    fn constant_cost() {
+        assert_eq!(DivMask.cycles(1, 1), DivMask.cycles(1 << 30, 1 << 15));
+    }
+}

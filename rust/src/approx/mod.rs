@@ -1,0 +1,181 @@
+//! Fast division approximation (paper §2.2).
+//!
+//! UnIT's pruning comparisons need `T / |c|` where `c` is the reused
+//! control term (an activation in linear layers, a weight in convs). On
+//! the MSP430 a software division costs on the order of a multiplication
+//! (~140–170 cycles), so the paper replaces it with three hardware-
+//! specific estimators, all implemented here behind the [`DivApprox`]
+//! trait:
+//!
+//! * [`DivShift`] — Fig. 3: right-shift `c` until its MSB is reached,
+//!   counting `e = ⌊log₂ c⌋`, then estimate `T/c ≈ T >> e`. For
+//!   fixed-point / integer devices.
+//! * [`DivTree`] — Fig. 4: find `e` by a binary search over precomputed
+//!   power-of-two pivots (constant comparison count, good when operand
+//!   magnitudes span a wide range).
+//! * [`DivMask`] — Eq. 5/6: IEEE-754-style exponent-field arithmetic,
+//!   `T/c ≈ 2^(E_T − E_c)`. For devices with floating-point formats; on
+//!   the integer engine we emulate the exponent fields with `leading_zeros`
+//!   (a host intrinsic — on a real FPU device this is a bit-mask + sub).
+//! * [`DivExact`] — true integer division, the baseline the paper's
+//!   Fig. 8 compares against.
+//!
+//! Every estimator reports its *modeled MSP430 cycle cost* per call so the
+//! engine's ledger can account for pruning overhead exactly; Fig. 8 is
+//! regenerated from these models plus a host-wallclock microbench.
+//!
+//! ## Approximation contract
+//!
+//! For `t ≥ 0, c ≥ 1` every estimator returns `d̂` with
+//! `t/(2c) ≤ d̂ + 1` and `d̂ ≤ 2·t/c` (within a factor 2 of exact, the
+//! power-of-two envelope). Property tests in this module enforce the
+//! bound; the accuracy impact of the looser threshold is an ablation
+//! (`benches/abl_thresholds.rs`).
+
+mod exact;
+mod mask;
+mod shift;
+mod shift_coarse;
+mod tree;
+
+pub use exact::DivExact;
+pub use mask::DivMask;
+pub use shift::DivShift;
+pub use shift_coarse::DivShiftCoarse;
+pub use tree::DivTree;
+
+/// A `T / c` estimator with a modeled per-call MSP430 cycle cost.
+pub trait DivApprox: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    /// Approximate `t / c`. `c` must be ≥ 1 (the engine prunes
+    /// zero control terms unconditionally and never divides by them).
+    fn div(&self, t: u32, c: u32) -> u32;
+
+    /// Modeled MSP430FR5994 cycles for one call with these operands.
+    fn cycles(&self, t: u32, c: u32) -> u64;
+}
+
+/// All estimator kinds, for CLI/bench selection.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DivKind {
+    Exact,
+    Shift,
+    Tree,
+    Mask,
+}
+
+impl DivKind {
+    pub fn parse(s: &str) -> Option<DivKind> {
+        match s {
+            "exact" => Some(DivKind::Exact),
+            "shift" => Some(DivKind::Shift),
+            "tree" => Some(DivKind::Tree),
+            "mask" => Some(DivKind::Mask),
+            _ => None,
+        }
+    }
+
+    pub fn build(self) -> Box<dyn DivApprox> {
+        match self {
+            DivKind::Exact => Box::new(DivExact),
+            DivKind::Shift => Box::new(DivShift),
+            DivKind::Tree => Box::new(DivTree),
+            DivKind::Mask => Box::new(DivMask),
+        }
+    }
+
+    pub fn all() -> [DivKind; 4] {
+        [DivKind::Exact, DivKind::Shift, DivKind::Tree, DivKind::Mask]
+    }
+}
+
+/// `⌊log₂ v⌋` for `v ≥ 1`.
+#[inline]
+pub(crate) fn ilog2(v: u32) -> u32 {
+    debug_assert!(v >= 1);
+    31 - v.leading_zeros()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn approx_kinds() -> Vec<Box<dyn DivApprox>> {
+        vec![Box::new(DivShift), Box::new(DivTree), Box::new(DivMask)]
+    }
+
+    #[test]
+    fn exact_is_exact() {
+        let d = DivExact;
+        assert_eq!(d.div(100, 7), 14);
+        assert_eq!(d.div(0, 3), 0);
+        assert_eq!(d.div(5, 10), 0);
+    }
+
+    #[test]
+    fn all_estimators_within_power_of_two_envelope() {
+        crate::util::prop::check(7, 2000, |g| {
+            let t = g.u32_in(0, 1 << 24);
+            let c = g.u32_in(1, 1 << 16);
+            let exact = (t / c) as f64;
+            for a in approx_kinds() {
+                let est = a.div(t, c) as f64;
+                assert!(
+                    est <= 2.0 * exact + 1.0,
+                    "{}: t={t} c={c} est={est} exact={exact}",
+                    a.name()
+                );
+                assert!(
+                    est + 1.0 >= exact / 2.0,
+                    "{}: t={t} c={c} est={est} exact={exact}",
+                    a.name()
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn shift_and_tree_agree() {
+        // Same estimate (t >> floor(log2 c)), different cost model.
+        crate::util::prop::check(8, 1000, |g| {
+            let t = g.u32_in(0, 1 << 30);
+            let c = g.u32_in(1, 1 << 20);
+            assert_eq!(DivShift.div(t, c), DivTree.div(t, c));
+        });
+    }
+
+    #[test]
+    fn approximations_cheaper_than_exact() {
+        // Fig. 8 precondition: every approximator must beat true division
+        // in modeled cycles on representative operands.
+        for a in approx_kinds() {
+            for &(t, c) in &[(1000u32, 3u32), (65535, 255), (1 << 20, 1 << 10)] {
+                assert!(
+                    a.cycles(t, c) < DivExact.cycles(t, c),
+                    "{} not cheaper at t={t} c={c}",
+                    a.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn divkind_parse_roundtrip() {
+        for k in DivKind::all() {
+            let name = k.build().name();
+            assert_eq!(DivKind::parse(name), Some(k));
+        }
+        assert_eq!(DivKind::parse("bogus"), None);
+    }
+
+    #[test]
+    fn ilog2_values() {
+        assert_eq!(ilog2(1), 0);
+        assert_eq!(ilog2(2), 1);
+        assert_eq!(ilog2(3), 1);
+        assert_eq!(ilog2(255), 7);
+        assert_eq!(ilog2(256), 8);
+        assert_eq!(ilog2(u32::MAX), 31);
+    }
+}

@@ -1,0 +1,85 @@
+//! Coarse bit-shifting (paper §2.2: "the shift count can be initialized
+//! from a nonzero value for coarser estimation, effectively quantizing
+//! the threshold").
+//!
+//! Starting the Fig.-3 shift loop at `init` skips the first `init`
+//! iterations: the estimated exponent becomes `max(⌊log₂ c⌋, init)`, so
+//! small control terms are treated as if they were `2^init`. The
+//! estimate only *shrinks* (`t >> e'` ≤ `t >> e`), which under Eq. 2/3
+//! means coarse shifting can only prune *less*, never more — a safe,
+//! cheaper knob: the loop runs `e − init` fewer iterations.
+
+use super::{ilog2, DivApprox};
+
+/// Bit shifting with a nonzero initial shift count.
+pub struct DivShiftCoarse {
+    /// Initial shift count (0 = plain [`super::DivShift`]).
+    pub init: u32,
+}
+
+impl DivApprox for DivShiftCoarse {
+    fn name(&self) -> &'static str {
+        "shift-coarse"
+    }
+
+    #[inline]
+    fn div(&self, t: u32, c: u32) -> u32 {
+        debug_assert!(c >= 1);
+        let e = ilog2(c).max(self.init);
+        t >> e.min(31)
+    }
+
+    #[inline]
+    fn cycles(&self, _t: u32, c: u32) -> u64 {
+        let e = ilog2(c.max(1)) as u64;
+        let iters = (e + 1).saturating_sub(self.init as u64).max(1);
+        4 * iters + e + 6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivShift;
+
+    #[test]
+    fn init_zero_matches_plain_shift() {
+        let coarse = DivShiftCoarse { init: 0 };
+        crate::util::prop::check(71, 1000, |g| {
+            let t = g.u32_in(0, 1 << 28);
+            let c = g.u32_in(1, 1 << 20);
+            assert_eq!(coarse.div(t, c), DivShift.div(t, c));
+        });
+    }
+
+    #[test]
+    fn coarse_estimate_never_exceeds_plain() {
+        // t >> max(e, init) <= t >> e: coarse can only prune less.
+        crate::util::prop::check(72, 2000, |g| {
+            let t = g.u32_in(0, 1 << 28);
+            let c = g.u32_in(1, 1 << 16);
+            let init = g.u32_in(0, 12);
+            let coarse = DivShiftCoarse { init };
+            assert!(coarse.div(t, c) <= DivShift.div(t, c));
+        });
+    }
+
+    #[test]
+    fn coarse_is_cheaper_for_small_operands() {
+        let coarse = DivShiftCoarse { init: 6 };
+        assert!(coarse.cycles(0, 3) < DivShift.cycles(0, 3));
+        // for large c (e > init) the loop length converges
+        assert_eq!(
+            coarse.cycles(0, 1 << 14),
+            DivShift.cycles(0, 1 << 14) - 4 * 6
+        );
+    }
+
+    #[test]
+    fn exactness_on_large_powers_of_two() {
+        let coarse = DivShiftCoarse { init: 4 };
+        assert_eq!(coarse.div(1 << 20, 1 << 10), 1 << 10);
+        // small c quantized up to 2^init
+        assert_eq!(coarse.div(1 << 20, 2), (1 << 20) >> 4);
+    }
+}

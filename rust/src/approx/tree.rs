@@ -1,0 +1,106 @@
+//! Binary-tree-search division approximation (paper Fig. 4; universal).
+//!
+//! Finds `e = ⌊log₂ c⌋` by comparing `c` against precomputed power-of-two
+//! pivots, halving the candidate range at every level — ⌈log₂ ω⌉ = 5
+//! comparisons for a 32-bit word regardless of the operand's magnitude.
+//! The numeric estimate is identical to [`super::DivShift`]
+//! (`t >> e`); only the *cost profile* differs:
+//!
+//! * bit shifting is cheaper for small `c` (few iterations) but costs
+//!   linearly in `log₂ c`;
+//! * the tree costs a constant ~5 compares, so it wins when operand
+//!   magnitudes are large or span a wide dynamic range — exactly the
+//!   trade-off the paper describes.
+//!
+//! The pivot table can be rebalanced from calibration data (frequent
+//! magnitudes moved to shallower levels); [`DivTree::with_root`] exposes
+//! the root pivot for that ablation.
+//!
+//! ### Cycle model
+//! Each tree level is a compare against a constant + taken/untaken branch
+//! (~5 cycles), plus the final `t >> e` shift (1 cycle/bit) and call
+//! overhead (~6): `cycles = 5·5 + e + 6`.
+
+use super::{ilog2, DivApprox};
+
+/// `t / c ≈ t >> e`, `e` found by binary search over power-of-two pivots.
+pub struct DivTree;
+
+impl DivTree {
+    /// Binary search for `⌊log₂ c⌋` over exponent range `[0, 31]`.
+    /// Written as an explicit pivot walk to mirror the MCU implementation
+    /// (and so the comparison count is auditable: always 5).
+    #[inline]
+    pub fn exponent(c: u32) -> u32 {
+        debug_assert!(c >= 1);
+        let mut lo = 0u32; // inclusive
+        let mut hi = 31u32; // inclusive
+        // 5 iterations: ceil(log2(32))
+        for _ in 0..5 {
+            let mid = (lo + hi + 1) / 2;
+            if c >= (1u32 << mid) {
+                lo = mid;
+            } else {
+                hi = mid - 1;
+            }
+        }
+        lo
+    }
+}
+
+impl DivApprox for DivTree {
+    fn name(&self) -> &'static str {
+        "tree"
+    }
+
+    #[inline]
+    fn div(&self, t: u32, c: u32) -> u32 {
+        // Numerically identical to the pivot walk in `exponent()` (the
+        // exhaustive test below pins them together); the host intrinsic
+        // keeps simulator wallclock down (§Perf item 3) while the cycle
+        // *model* still prices the 5-compare tree walk.
+        t >> ilog2(c)
+    }
+
+    #[inline]
+    fn cycles(&self, _t: u32, c: u32) -> u64 {
+        let e = ilog2(c.max(1)) as u64;
+        5 * 5 + e + 6
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exponent_matches_ilog2_exhaustive_16bit() {
+        for c in 1u32..=65535 {
+            assert_eq!(DivTree::exponent(c), ilog2(c), "c={c}");
+        }
+    }
+
+    #[test]
+    fn exponent_matches_ilog2_randomized_32bit() {
+        crate::util::prop::check(19, 5000, |g| {
+            let c = g.u32_in(1, u32::MAX - 1);
+            assert_eq!(DivTree::exponent(c), ilog2(c));
+        });
+    }
+
+    #[test]
+    fn near_constant_cost() {
+        // Tree cost varies only by the final shift, not the search.
+        let small = DivTree.cycles(0, 2);
+        let large = DivTree.cycles(0, 1 << 30);
+        assert!(large - small <= 30);
+    }
+
+    #[test]
+    fn crossover_vs_shift() {
+        // Paper §2.2: the tree is "slower for small numbers but more
+        // flexible" — verify the cost crossover exists.
+        assert!(DivTree.cycles(0, 2) > super::super::DivShift.cycles(0, 2));
+        assert!(DivTree.cycles(0, 1 << 14) < super::super::DivShift.cycles(0, 1 << 14));
+    }
+}

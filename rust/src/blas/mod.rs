@@ -1,0 +1,212 @@
+//! Imprecise BLAS (paper §6.8): UnIT's threshold machinery applied to
+//! plain linear algebra, where "the two matrix values are entirely
+//! unknown" ahead of time and thresholds must be derived *dynamically*
+//! from the operands themselves.
+//!
+//! [`unit_gemv`] / [`unit_gemm`] compute `y = A·x` / `C = A·B` while
+//! skipping products whose magnitude falls below a dynamically chosen
+//! threshold: `T = quantile_p(|a_ij|) · quantile_p(|x_j|)` — the same
+//! rank-1 separability as Eq. 1, picked per call with no calibration
+//! data. The skip test reuses the row/column reciprocal exactly like the
+//! linear-layer engine (one division per x_j, reused across a column of
+//! A).
+//!
+//! The result is an *approximate* product with a tunable error/FLOP
+//! trade-off — useful on MCUs for non-ML workloads (filters, projections)
+//! that tolerate bounded error.
+
+use crate::util::stats::percentile;
+
+/// Result of an imprecise BLAS call.
+#[derive(Debug, Clone)]
+pub struct BlasStats {
+    /// Products actually multiplied.
+    pub kept: u64,
+    /// Products skipped by the dynamic threshold.
+    pub skipped: u64,
+}
+
+impl BlasStats {
+    pub fn skip_fraction(&self) -> f64 {
+        let t = self.kept + self.skipped;
+        if t == 0 {
+            0.0
+        } else {
+            self.skipped as f64 / t as f64
+        }
+    }
+}
+
+/// Dynamic threshold from operand magnitude quantiles: products of two
+/// sub-`p`-quantile magnitudes are dropped.
+fn dynamic_threshold(a: &[f32], x: &[f32], drop_pct: f64) -> f32 {
+    if drop_pct <= 0.0 || a.is_empty() || x.is_empty() {
+        return 0.0;
+    }
+    // Subsample |a| for large matrices — the threshold is a statistic,
+    // not an exact order statistic.
+    let stride = (a.len() / 4096).max(1);
+    let sa: Vec<f32> = a.iter().step_by(stride).map(|v| v.abs()).collect();
+    let sx: Vec<f32> = x.iter().map(|v| v.abs()).collect();
+    percentile(&sa, drop_pct) * percentile(&sx, drop_pct)
+}
+
+/// Imprecise `y = A·x` (A row-major `m×n`). `drop_pct = 0` is exact.
+pub fn unit_gemv(a: &[f32], m: usize, n: usize, x: &[f32], drop_pct: f64) -> (Vec<f32>, BlasStats) {
+    assert_eq!(a.len(), m * n, "A shape");
+    assert_eq!(x.len(), n, "x shape");
+    let t = dynamic_threshold(a, x, drop_pct);
+    let mut y = vec![0.0f32; m];
+    let mut stats = BlasStats { kept: 0, skipped: 0 };
+    // Column-major walk: one reciprocal per x_j, reused down the column
+    // (the Eq. 2 reuse pattern).
+    for j in 0..n {
+        let xv = x[j];
+        let ax = xv.abs();
+        if ax == 0.0 {
+            stats.skipped += m as u64;
+            continue;
+        }
+        let tbar = if t > 0.0 { t / ax } else { 0.0 };
+        for i in 0..m {
+            let av = a[i * n + j];
+            if av.abs() > tbar {
+                y[i] += av * xv;
+                stats.kept += 1;
+            } else {
+                stats.skipped += 1;
+            }
+        }
+    }
+    (y, stats)
+}
+
+/// Imprecise `C = A·B` (row-major, `m×k · k×n`). `drop_pct = 0` is exact.
+pub fn unit_gemm(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    drop_pct: f64,
+) -> (Vec<f32>, BlasStats) {
+    assert_eq!(a.len(), m * k, "A shape");
+    assert_eq!(b.len(), k * n, "B shape");
+    let t = dynamic_threshold(a, b, drop_pct);
+    let mut c = vec![0.0f32; m * n];
+    let mut stats = BlasStats { kept: 0, skipped: 0 };
+    for i in 0..m {
+        for kk in 0..k {
+            let av = a[i * k + kk];
+            let aa = av.abs();
+            if aa == 0.0 {
+                stats.skipped += n as u64;
+                continue;
+            }
+            // One reciprocal per A element, reused across the B row
+            // (weight-reuse pattern of Eq. 3).
+            let tbar = if t > 0.0 { t / aa } else { 0.0 };
+            let brow = &b[kk * n..(kk + 1) * n];
+            let crow = &mut c[i * n..(i + 1) * n];
+            for (j, &bv) in brow.iter().enumerate() {
+                if bv.abs() > tbar {
+                    crow[j] += av * bv;
+                    stats.kept += 1;
+                } else {
+                    stats.skipped += 1;
+                }
+            }
+        }
+    }
+    (c, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn dense_gemv(a: &[f32], m: usize, n: usize, x: &[f32]) -> Vec<f32> {
+        (0..m).map(|i| (0..n).map(|j| a[i * n + j] * x[j]).sum()).collect()
+    }
+
+    #[test]
+    fn zero_drop_is_exact() {
+        prop::check(61, 100, |g| {
+            let m = g.usize_in(1, 12);
+            let n = g.usize_in(1, 12);
+            let a = g.vec_normal(m * n);
+            let x = g.vec_normal(n);
+            let (y, stats) = unit_gemv(&a, m, n, &x, 0.0);
+            let want = dense_gemv(&a, m, n, &x);
+            for (u, v) in y.iter().zip(&want) {
+                assert!((u - v).abs() < 1e-4);
+            }
+            assert_eq!(stats.skipped, 0);
+        });
+    }
+
+    #[test]
+    fn skips_grow_with_drop_pct() {
+        prop::check(62, 50, |g| {
+            let a = g.vec_normal(40 * 30);
+            let x = g.vec_normal(30);
+            let mut last = 0u64;
+            for p in [0.0, 10.0, 30.0, 60.0] {
+                let (_y, s) = unit_gemv(&a, 40, 30, &x, p);
+                assert!(s.skipped >= last, "p={p}");
+                last = s.skipped;
+            }
+        });
+    }
+
+    #[test]
+    fn error_bounded_by_dropped_mass() {
+        // The absolute error of y_i is at most (number of dropped
+        // products) * T, since every dropped |a*x| <= T.
+        prop::check(63, 100, |g| {
+            let m = g.usize_in(2, 10);
+            let n = g.usize_in(2, 20);
+            let a = g.vec_normal(m * n);
+            let x = g.vec_normal(n);
+            let p = g.f32_in(5.0, 50.0) as f64;
+            let t = super::dynamic_threshold(&a, &x, p);
+            let (y, _s) = unit_gemv(&a, m, n, &x, p);
+            let want = dense_gemv(&a, m, n, &x);
+            for (u, v) in y.iter().zip(&want) {
+                assert!(
+                    (u - v).abs() <= n as f32 * t + 1e-4,
+                    "err {} > bound {}",
+                    (u - v).abs(),
+                    n as f32 * t
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_matches_gemv_per_column() {
+        prop::check(64, 40, |g| {
+            let (m, k, n) = (g.usize_in(1, 8), g.usize_in(1, 8), g.usize_in(1, 8));
+            let a = g.vec_normal(m * k);
+            let b = g.vec_normal(k * n);
+            let (c, _s) = unit_gemm(&a, &b, m, k, n, 0.0);
+            // check column j of C equals A * column j of B
+            for j in 0..n {
+                let xj: Vec<f32> = (0..k).map(|kk| b[kk * n + j]).collect();
+                let want = dense_gemv(&a, m, k, &xj);
+                for i in 0..m {
+                    assert!((c[i * n + j] - want[i]).abs() < 1e-4);
+                }
+            }
+        });
+    }
+
+    #[test]
+    fn gemm_conservation() {
+        let a = vec![1.0f32; 6 * 5];
+        let b = vec![0.5f32; 5 * 4];
+        let (_c, s) = unit_gemm(&a, &b, 6, 5, 4, 25.0);
+        assert_eq!(s.kept + s.skipped, (6 * 5 * 4) as u64);
+    }
+}

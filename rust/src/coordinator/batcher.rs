@@ -1,0 +1,129 @@
+//! Dynamic batching policy: group queued requests into batches of at
+//! most `max_batch`, waiting at most `max_wait` for stragglers once the
+//! first request of a batch has arrived.
+//!
+//! Split into a pure, property-tested policy ([`BatchPolicy::plan`]) and
+//! a thin channel pump ([`Batcher::collect`]).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use super::request::InferRequest;
+
+/// Pure batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl BatchPolicy {
+    /// Plan batch sizes for `pending` queued requests: FIFO chunks of at
+    /// most `max_batch`, never empty, covering every request exactly once.
+    pub fn plan(&self, pending: usize) -> Vec<usize> {
+        let mut out = Vec::new();
+        let mut left = pending;
+        while left > 0 {
+            let take = left.min(self.max_batch);
+            out.push(take);
+            left -= take;
+        }
+        out
+    }
+}
+
+/// Channel-driven batch collector.
+pub struct Batcher {
+    pub policy: BatchPolicy,
+}
+
+impl Batcher {
+    /// Block for the next batch: waits indefinitely for the first
+    /// request, then gathers more until `max_batch` or `max_wait`.
+    /// Returns `None` when the channel is closed and drained.
+    pub fn collect(&self, rx: &Receiver<InferRequest>) -> Option<Vec<InferRequest>> {
+        let first = rx.recv().ok()?;
+        let mut batch = vec![first];
+        let deadline = Instant::now() + self.policy.max_wait;
+        while batch.len() < self.policy.max_batch {
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            match rx.recv_timeout(deadline - now) {
+                Ok(req) => batch.push(req),
+                Err(RecvTimeoutError::Timeout) => break,
+                Err(RecvTimeoutError::Disconnected) => break,
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+    use std::time::Instant;
+
+    #[test]
+    fn plan_covers_all_requests_exactly_once() {
+        crate::util::prop::check(31, 500, |g| {
+            let p = BatchPolicy {
+                max_batch: g.usize_in(1, 64),
+                max_wait: Duration::from_millis(1),
+            };
+            let pending = g.usize_in(0, 500);
+            let plan = p.plan(pending);
+            assert_eq!(plan.iter().sum::<usize>(), pending);
+            assert!(plan.iter().all(|&b| b > 0 && b <= p.max_batch));
+            // only the last batch may be partial
+            for &b in plan.iter().rev().skip(1) {
+                assert_eq!(b, p.max_batch);
+            }
+        });
+    }
+
+    fn req(id: u64, tx: &std::sync::mpsc::Sender<super::super::InferResponse>) -> InferRequest {
+        InferRequest { id, x: vec![], t_enqueue: Instant::now(), reply: tx.clone() }
+    }
+
+    #[test]
+    fn collect_respects_max_batch() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        for i in 0..10 {
+            tx.send(req(i, &rtx)).unwrap();
+        }
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(5) },
+        };
+        let batch = b.collect(&rx).unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(batch[0].id, 0); // FIFO
+        let batch2 = b.collect(&rx).unwrap();
+        assert_eq!(batch2[0].id, 4);
+    }
+
+    #[test]
+    fn collect_returns_partial_after_timeout() {
+        let (tx, rx) = channel();
+        let (rtx, _rrx) = channel();
+        tx.send(req(0, &rtx)).unwrap();
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(10) },
+        };
+        let batch = b.collect(&rx).unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn collect_none_on_closed_channel() {
+        let (tx, rx) = channel::<InferRequest>();
+        drop(tx);
+        let b = Batcher {
+            policy: BatchPolicy { max_batch: 2, max_wait: Duration::from_millis(1) },
+        };
+        assert!(b.collect(&rx).is_none());
+    }
+}

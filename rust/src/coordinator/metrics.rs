@@ -1,0 +1,108 @@
+//! Serving metrics: request counters, latency percentiles, aggregate
+//! MAC/energy statistics. Shared across workers behind a mutex (the
+//! request path touches it once per request, far from contention at
+//! simulator throughputs).
+
+use std::sync::Mutex;
+
+/// Aggregated serving metrics.
+#[derive(Debug, Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+#[derive(Debug, Default, Clone)]
+struct Inner {
+    served: u64,
+    batches: u64,
+    latencies_us: Vec<u64>,
+    mac_skipped_sum: f64,
+    energy_mj_sum: f64,
+    mcu_secs_sum: f64,
+}
+
+/// Snapshot for reporting.
+#[derive(Debug, Clone, Default)]
+pub struct Snapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub p50_us: u64,
+    pub p95_us: u64,
+    pub p99_us: u64,
+    pub mean_batch: f64,
+    pub mean_mac_skipped: f64,
+    pub mean_energy_mj: f64,
+    pub mean_mcu_secs: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics::default()
+    }
+
+    pub fn record_batch(&self, n: usize) {
+        let mut g = self.inner.lock().unwrap();
+        g.batches += 1;
+        let _ = n;
+    }
+
+    pub fn record_request(&self, latency_us: u64, mac_skipped: f64, energy_mj: f64, mcu_secs: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.served += 1;
+        g.latencies_us.push(latency_us);
+        g.mac_skipped_sum += mac_skipped;
+        g.energy_mj_sum += energy_mj;
+        g.mcu_secs_sum += mcu_secs;
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let mut lat = g.latencies_us.clone();
+        lat.sort_unstable();
+        let pct = |p: f64| -> u64 {
+            if lat.is_empty() {
+                0
+            } else {
+                lat[((p / 100.0) * (lat.len() as f64 - 1.0)).round() as usize]
+            }
+        };
+        let served = g.served.max(1) as f64;
+        Snapshot {
+            served: g.served,
+            batches: g.batches,
+            p50_us: pct(50.0),
+            p95_us: pct(95.0),
+            p99_us: pct(99.0),
+            mean_batch: g.served as f64 / g.batches.max(1) as f64,
+            mean_mac_skipped: g.mac_skipped_sum / served,
+            mean_energy_mj: g.energy_mj_sum / served,
+            mean_mcu_secs: g.mcu_secs_sum / served,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let m = Metrics::new();
+        for i in 0..100 {
+            m.record_request(i, 0.5, 0.1, 0.01);
+        }
+        m.record_batch(100);
+        let s = m.snapshot();
+        assert_eq!(s.served, 100);
+        assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert!((s.mean_mac_skipped - 0.5).abs() < 1e-9);
+        assert_eq!(s.mean_batch, 100.0);
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.served, 0);
+        assert_eq!(s.p99_us, 0);
+    }
+}

@@ -1,0 +1,28 @@
+//! Serving coordinator (Layer 3's runtime contribution).
+//!
+//! UnIT itself is a per-inference technique; this module is the system
+//! around it: a request router + dynamic batcher + worker pool that
+//! serves inference over two backends, with Python never on the path:
+//!
+//! * **McuSim** — the fixed-point engine ([`crate::engine`]) with UnIT
+//!   pruning and the full MSP430 cycle/energy ledger (one sample at a
+//!   time, as the real MCU would);
+//! * **Pjrt** — the AOT float artifact at batch 8 via the PJRT runtime
+//!   (the paper's desktop-class deployment), with dynamic batching and
+//!   zero-padding of partial batches.
+//!
+//! Everything is std::thread + mpsc (no tokio in the vendored set); the
+//! batcher is a pure, property-tested policy ([`batcher`]).
+
+pub mod adaptive;
+pub mod batcher;
+pub mod metrics;
+pub mod request;
+pub mod server;
+
+pub use adaptive::EnergyController;
+
+pub use batcher::{BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use request::{InferRequest, InferResponse};
+pub use server::{BackendChoice, Coordinator, ServeConfig};

@@ -1,0 +1,57 @@
+//! Request/response types flowing through the coordinator.
+
+use std::sync::mpsc::Sender;
+use std::time::Instant;
+
+/// One inference request.
+pub struct InferRequest {
+    pub id: u64,
+    /// Flat `C·H·W` f32 input.
+    pub x: Vec<f32>,
+    /// Enqueue timestamp (latency accounting).
+    pub t_enqueue: Instant,
+    /// Response channel.
+    pub reply: Sender<InferResponse>,
+}
+
+/// The coordinator's answer.
+#[derive(Debug, Clone)]
+pub struct InferResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub predicted: usize,
+    /// Fraction of MACs skipped (MCU backend; 0 for PJRT).
+    pub mac_skipped: f64,
+    /// Modeled MCU energy in mJ (MCU backend; 0 for PJRT).
+    pub energy_mj: f64,
+    /// Modeled MCU wall-clock seconds (MCU backend; 0 for PJRT).
+    pub mcu_secs: f64,
+    /// Host-side service latency (queue + compute).
+    pub latency_us: u64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn reply_roundtrip() {
+        let (tx, rx) = channel();
+        let req = InferRequest { id: 9, x: vec![0.0; 4], t_enqueue: Instant::now(), reply: tx };
+        req.reply
+            .send(InferResponse {
+                id: req.id,
+                logits: vec![1.0],
+                predicted: 0,
+                mac_skipped: 0.5,
+                energy_mj: 0.1,
+                mcu_secs: 0.2,
+                latency_us: 3,
+            })
+            .unwrap();
+        let resp = rx.recv().unwrap();
+        assert_eq!(resp.id, 9);
+        assert_eq!(resp.predicted, 0);
+    }
+}

@@ -1,0 +1,257 @@
+//! The serving runtime: request intake, dynamic batching, worker pool.
+//!
+//! Thread topology:
+//!
+//! * **McuSim backend** — N worker threads share the request queue
+//!   (`Arc<Mutex<Receiver>>`); each runs the fixed-point engine on one
+//!   sample at a time, exactly as the target MCU would, and reports the
+//!   modeled cycles/energy with the prediction.
+//! * **Pjrt backend** — a single executor thread *owns* the PJRT client
+//!   (the `xla` crate's client is `Rc`-based and not `Send`, so it is
+//!   created inside the thread), batches requests up to the artifact's
+//!   batch size (8), zero-pads partial batches, and fans results back
+//!   out.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::batcher::{BatchPolicy, Batcher};
+use super::metrics::Metrics;
+use super::request::{InferRequest, InferResponse};
+use crate::approx::DivKind;
+use crate::engine::{infer, EngineConfig, PruneMode, QModel};
+use crate::mcu::EnergyModel;
+use crate::models::Params;
+use crate::util::stats::argmax;
+
+/// Which execution backend serves requests.
+#[derive(Debug, Clone)]
+pub enum BackendChoice {
+    /// Fixed-point MCU simulator with the given pruning setup.
+    McuSim { q: QModel, mode: PruneMode, div: DivKind },
+    /// Float AOT artifact at batch 8 through PJRT.
+    Pjrt {
+        model: String,
+        params: Params,
+        /// Per-layer UnIT thresholds fed to the artifact.
+        t_vec: Vec<f32>,
+        fat_t: f32,
+    },
+}
+
+/// Serving configuration.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) }
+    }
+}
+
+/// Handle to a running coordinator.
+pub struct Coordinator {
+    tx: Option<Sender<InferRequest>>,
+    handles: Vec<JoinHandle<()>>,
+    next_id: AtomicU64,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Start serving with the chosen backend.
+    pub fn start(backend: BackendChoice, cfg: ServeConfig) -> Coordinator {
+        let (tx, rx) = channel::<InferRequest>();
+        let metrics = Arc::new(Metrics::new());
+        let handles = match backend {
+            BackendChoice::McuSim { q, mode, div } => {
+                let shared = Arc::new(Mutex::new(rx));
+                (0..cfg.workers.max(1))
+                    .map(|_| {
+                        let rx = Arc::clone(&shared);
+                        let q = q.clone();
+                        let metrics = Arc::clone(&metrics);
+                        std::thread::spawn(move || mcu_worker(rx, q, mode, div, metrics))
+                    })
+                    .collect()
+            }
+            BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
+                let metrics = Arc::clone(&metrics);
+                let policy = BatchPolicy { max_batch: cfg.max_batch.min(8), max_wait: cfg.max_wait };
+                vec![std::thread::spawn(move || {
+                    pjrt_executor(rx, model, params, t_vec, fat_t, policy, metrics)
+                })]
+            }
+        };
+        Coordinator { tx: Some(tx), handles, next_id: AtomicU64::new(0), metrics }
+    }
+
+    /// Submit one request; returns the response channel.
+    pub fn submit(&self, x: Vec<f32>) -> Receiver<InferResponse> {
+        let (rtx, rrx) = channel();
+        let req = InferRequest {
+            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            x,
+            t_enqueue: Instant::now(),
+            reply: rtx,
+        };
+        self.tx.as_ref().expect("coordinator closed").send(req).expect("queue closed");
+        rrx
+    }
+
+    /// Close the intake and join all workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel
+        for h in self.handles.drain(..) {
+            h.join().expect("worker panicked");
+        }
+    }
+}
+
+fn mcu_worker(
+    rx: Arc<Mutex<Receiver<InferRequest>>>,
+    q: QModel,
+    mode: PruneMode,
+    div: DivKind,
+    metrics: Arc<Metrics>,
+) {
+    let div = div.build();
+    let energy = EnergyModel::default();
+    loop {
+        let req = {
+            let guard = rx.lock().unwrap();
+            guard.recv()
+        };
+        let Ok(req) = req else { break };
+        let xi = q.quantize_input(&req.x);
+        let cfg = EngineConfig {
+            mode,
+            div: div.as_ref(),
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+        };
+        let out = infer(&q, &xi, &cfg);
+        let latency_us = req.t_enqueue.elapsed().as_micros() as u64;
+        let resp = InferResponse {
+            id: req.id,
+            predicted: out.argmax(),
+            mac_skipped: out.skip_fraction(),
+            energy_mj: out.ledger.millijoules(&energy),
+            mcu_secs: out.ledger.secs(),
+            logits: out.logits,
+            latency_us,
+        };
+        metrics.record_batch(1);
+        metrics.record_request(latency_us, resp.mac_skipped, resp.energy_mj, resp.mcu_secs);
+        let _ = req.reply.send(resp); // receiver may have gone away
+    }
+}
+
+fn pjrt_executor(
+    rx: Receiver<InferRequest>,
+    model: String,
+    params: Params,
+    t_vec: Vec<f32>,
+    fat_t: f32,
+    policy: BatchPolicy,
+    metrics: Arc<Metrics>,
+) {
+    // The PJRT client must be created inside the owning thread (Rc-based).
+    let rt = crate::runtime::Runtime::cpu().expect("PJRT client");
+    let store = crate::runtime::ArtifactStore::discover();
+    let batch = policy.max_batch;
+    let exe = store.load_fwd(&rt, &model, batch).expect("fwd artifact");
+    let manifest = store.manifest(&model).expect("manifest");
+    let sample_len: usize = {
+        let [c, h, w] = manifest.input_shape;
+        c * h * w
+    };
+    let classes = manifest.classes;
+    let flat: Vec<Vec<f32>> = params.flat_order().into_iter().map(|s| s.to_vec()).collect();
+    let fat = [fat_t];
+
+    let batcher = Batcher { policy };
+    while let Some(reqs) = batcher.collect(&rx) {
+        let mut bx = vec![0.0f32; batch * sample_len];
+        for (i, r) in reqs.iter().enumerate() {
+            bx[i * sample_len..(i + 1) * sample_len].copy_from_slice(&r.x);
+        }
+        let mut args: Vec<&[f32]> = flat.iter().map(|t| t.as_slice()).collect();
+        args.push(&bx);
+        args.push(&t_vec);
+        args.push(&fat);
+        let out = exe.run_f32(&args).expect("pjrt execute");
+        let logits_all = &out[0];
+        metrics.record_batch(reqs.len());
+        for (i, req) in reqs.into_iter().enumerate() {
+            let logits = logits_all[i * classes..(i + 1) * classes].to_vec();
+            let latency_us = req.t_enqueue.elapsed().as_micros() as u64;
+            let resp = InferResponse {
+                id: req.id,
+                predicted: argmax(&logits),
+                logits,
+                mac_skipped: 0.0,
+                energy_mj: 0.0,
+                mcu_secs: 0.0,
+                latency_us,
+            };
+            metrics.record_request(latency_us, 0.0, 0.0, 0.0);
+            let _ = req.reply.send(resp);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Params};
+
+    #[test]
+    fn mcu_backend_serves_and_shuts_down() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 1);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 2, ..Default::default() },
+        );
+        let rxs: Vec<_> =
+            (0..6).map(|i| coord.submit(vec![0.1 * i as f32; def.input_len()])).collect();
+        for rx in rxs {
+            let resp = rx.recv().unwrap();
+            assert_eq!(resp.logits.len(), 10);
+            assert!(resp.mcu_secs > 0.0);
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.served, 6);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn no_request_lost_under_load() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 2);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Tree },
+            ServeConfig { workers: 3, ..Default::default() },
+        );
+        let n = 24;
+        let rxs: Vec<_> = (0..n).map(|_| coord.submit(vec![0.2; def.input_len()])).collect();
+        let mut got = 0;
+        for rx in rxs {
+            rx.recv().unwrap();
+            got += 1;
+        }
+        assert_eq!(got, n);
+        assert_eq!(coord.metrics.snapshot().served, n as u64);
+        coord.shutdown();
+    }
+}

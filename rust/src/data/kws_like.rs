@@ -1,0 +1,141 @@
+//! KWS-like synthetic spectrograms: 1×124×80, 12 classes.
+//!
+//! Google Speech Commands-style wake-word spectrograms: 124 time frames ×
+//! 80 mel bins. Each keyword class is a set of 2–3 "formant" ridges —
+//! frequency trajectories `f_k(t)` with class-specific start, slope and
+//! vibrato — rendered as gaussian ridges over the time axis. Class 11 is
+//! the background/noise class (no ridges, higher noise floor), mirroring
+//! Speech Commands' `_unknown_`/noise buckets.
+
+use super::{Dataset, Sizes, Split};
+use crate::data::synth::{add_noise, standardize};
+use crate::util::Rng;
+
+pub const H: usize = 124; // time frames
+pub const W: usize = 80; // mel bins
+pub const CLASSES: usize = 12;
+
+struct Formant {
+    f0: f32,    // start bin
+    slope: f32, // bins per frame
+    vib_amp: f32,
+    vib_freq: f32,
+    sigma: f32,
+    amp: f32,
+}
+
+fn class_formants(class: usize, base_seed: u64) -> Vec<Formant> {
+    if class == CLASSES - 1 {
+        return Vec::new(); // background class: pure noise
+    }
+    let mut rng = Rng::new(base_seed ^ (0x5EEC_0 + class as u64 * 15_485_863));
+    let n = 2 + rng.below(2) as usize;
+    (0..n)
+        .map(|_| Formant {
+            f0: rng.range(10.0, 70.0),
+            slope: rng.range(-0.25, 0.25),
+            vib_amp: rng.range(0.0, 4.0),
+            vib_freq: rng.range(0.05, 0.3),
+            sigma: rng.range(1.5, 3.0),
+            amp: rng.range(0.7, 1.3),
+        })
+        .collect()
+}
+
+fn render_sample(formants: &[Formant], rng: &mut Rng) -> Vec<f32> {
+    let mut spec = vec![0.0f32; H * W];
+    let t_shift = rng.range(-8.0, 8.0);
+    let f_shift = rng.range(-3.0, 3.0);
+    let speed = rng.range(0.9, 1.1);
+    let gain = rng.range(0.8, 1.2);
+    let onset = rng.range(8.0, 30.0);
+    let dur = rng.range(60.0, 90.0);
+    for fm in formants {
+        for t in 0..H {
+            let tt = (t as f32 - onset - t_shift) * speed;
+            if tt < 0.0 || tt > dur {
+                continue;
+            }
+            let centre =
+                fm.f0 + f_shift + fm.slope * tt + fm.vib_amp * (fm.vib_freq * tt).sin();
+            // vertical gaussian ridge at this frame
+            let lo = (centre - 3.0 * fm.sigma).floor().max(0.0) as usize;
+            let hi = (centre + 3.0 * fm.sigma).ceil().min(W as f32 - 1.0) as usize;
+            for f in lo..=hi {
+                let d = f as f32 - centre;
+                spec[t * W + f] +=
+                    gain * fm.amp * (-(d * d) / (2.0 * fm.sigma * fm.sigma)).exp();
+            }
+        }
+    }
+    let noise = if formants.is_empty() { 0.35 } else { 0.12 };
+    add_noise(&mut spec, rng, noise);
+    standardize(&mut spec);
+    spec
+}
+
+fn fill_split(split: &mut Split, n: usize, classes: &[Vec<Formant>], rng: &mut Rng) {
+    for i in 0..n {
+        let class = i % CLASSES;
+        split.push(&render_sample(&classes[class], rng), class);
+    }
+}
+
+pub fn generate(seed: u64, sizes: Sizes) -> Dataset {
+    let classes: Vec<Vec<Formant>> = (0..CLASSES).map(|c| class_formants(c, seed)).collect();
+    let mut root = Rng::new(seed ^ 0x5EEC_7);
+    let mut train = Split::new(H * W);
+    let mut val = Split::new(H * W);
+    let mut test = Split::new(H * W);
+    fill_split(&mut train, sizes.train, &classes, &mut root.fork(1));
+    fill_split(&mut val, sizes.val, &classes, &mut root.fork(2));
+    fill_split(&mut test, sizes.test, &classes, &mut root.fork(3));
+    Dataset {
+        name: "kws".into(),
+        input_shape: [1, H, W],
+        classes: CLASSES,
+        train,
+        val,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_matches_table1_pipeline() {
+        // (124-4)/2 = 60, (60-4)/2 = 28 ; (80-4)/2 = 38, (38-4)/2 = 17
+        // => 16*28*17 = 7616, the Table-1 linear input.
+        let oh = ((H - 4) / 2 - 4) / 2;
+        let ow = ((W - 4) / 2 - 4) / 2;
+        assert_eq!(16 * oh * ow, 7616);
+    }
+
+    #[test]
+    fn background_class_is_flatter() {
+        let ds = generate(3, Sizes { train: CLASSES * 4, val: CLASSES, test: CLASSES });
+        // Kurtosis proxy: max value of keyword samples exceeds noise ones.
+        let peak = |s: &[f32]| s.iter().cloned().fold(f32::MIN, f32::max);
+        let mut kw_peaks = vec![];
+        let mut bg_peaks = vec![];
+        for i in 0..ds.train.len() {
+            let p = peak(ds.train.sample(i));
+            if ds.train.y[i] == CLASSES - 1 {
+                bg_peaks.push(p);
+            } else {
+                kw_peaks.push(p);
+            }
+        }
+        let avg = |v: &[f32]| v.iter().sum::<f32>() / v.len() as f32;
+        assert!(avg(&kw_peaks) > avg(&bg_peaks));
+    }
+
+    #[test]
+    fn deterministic() {
+        let a = generate(11, Sizes { train: 6, val: 2, test: 2 });
+        let b = generate(11, Sizes { train: 6, val: 2, test: 2 });
+        assert_eq!(a.train.x, b.train.x);
+    }
+}

@@ -1,0 +1,143 @@
+//! MNIST-like synthetic digits: 1×28×28, 10 classes.
+//!
+//! Each class is a fixed "skeleton" of 3–5 line strokes drawn from a
+//! class-seeded RNG; each sample renders the skeleton with per-sample
+//! translation, scale and amplitude jitter plus pixel noise, then
+//! standardizes. The Table-1 MNIST CNN reaches high accuracy on this in
+//! a few hundred SGD steps while still leaving room for pruning-induced
+//! degradation — the property Fig. 5 needs.
+
+use super::{Dataset, Sizes, Split};
+use crate::data::synth::{add_noise, draw_line, standardize};
+use crate::util::Rng;
+
+pub const H: usize = 28;
+pub const W: usize = 28;
+pub const CLASSES: usize = 10;
+
+struct Stroke {
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+}
+
+fn class_skeleton(class: usize, base_seed: u64) -> Vec<Stroke> {
+    let mut rng = Rng::new(base_seed ^ (0xD16_17 + class as u64 * 7919));
+    let n = 3 + rng.below(3) as usize;
+    (0..n)
+        .map(|_| Stroke {
+            x0: rng.range(4.0, 24.0),
+            y0: rng.range(4.0, 24.0),
+            x1: rng.range(4.0, 24.0),
+            y1: rng.range(4.0, 24.0),
+        })
+        .collect()
+}
+
+fn render_sample(skel: &[Stroke], rng: &mut Rng) -> Vec<f32> {
+    let mut canvas = vec![0.0f32; H * W];
+    let dx = rng.range(-2.0, 2.0);
+    let dy = rng.range(-2.0, 2.0);
+    let scale = rng.range(0.85, 1.15);
+    let amp = rng.range(0.8, 1.2);
+    let cx = 14.0;
+    let cy = 14.0;
+    for s in skel {
+        let tx = |x: f32| (x - cx) * scale + cx + dx;
+        let ty = |y: f32| (y - cy) * scale + cy + dy;
+        draw_line(
+            &mut canvas,
+            H,
+            W,
+            tx(s.x0),
+            ty(s.y0),
+            tx(s.x1),
+            ty(s.y1),
+            rng.range(0.7, 1.1),
+            amp,
+        );
+    }
+    add_noise(&mut canvas, rng, 0.08);
+    standardize(&mut canvas);
+    canvas
+}
+
+fn fill_split(split: &mut Split, n: usize, skels: &[Vec<Stroke>], rng: &mut Rng) {
+    for i in 0..n {
+        let class = i % CLASSES;
+        let sample = render_sample(&skels[class], rng);
+        split.push(&sample, class);
+    }
+}
+
+/// Generate the dataset (train/val/test streams are independent forks).
+pub fn generate(seed: u64, sizes: Sizes) -> Dataset {
+    let skels: Vec<Vec<Stroke>> = (0..CLASSES).map(|c| class_skeleton(c, seed)).collect();
+    let mut root = Rng::new(seed ^ 0xB0A7);
+    let mut train = Split::new(H * W);
+    let mut val = Split::new(H * W);
+    let mut test = Split::new(H * W);
+    fill_split(&mut train, sizes.train, &skels, &mut root.fork(1));
+    fill_split(&mut val, sizes.val, &skels, &mut root.fork(2));
+    fill_split(&mut test, sizes.test, &skels, &mut root.fork(3));
+    Dataset {
+        name: "mnist".into(),
+        input_shape: [1, H, W],
+        classes: CLASSES,
+        train,
+        val,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn classes_balanced() {
+        let ds = generate(3, Sizes { train: 100, val: 20, test: 20 });
+        let mut counts = [0usize; CLASSES];
+        for &y in &ds.train.y {
+            counts[y] += 1;
+        }
+        assert!(counts.iter().all(|&c| c == 10));
+    }
+
+    #[test]
+    fn samples_standardized() {
+        let ds = generate(4, Sizes { train: 10, val: 2, test: 2 });
+        let s = ds.train.sample(0);
+        let mean: f32 = s.iter().sum::<f32>() / s.len() as f32;
+        assert!(mean.abs() < 0.05);
+        assert!(s.iter().all(|v| v.abs() <= 4.0));
+    }
+
+    #[test]
+    fn same_class_samples_correlate_more_than_cross_class() {
+        // The generator must actually encode class structure: average
+        // intra-class correlation above inter-class.
+        let ds = generate(5, Sizes { train: 200, val: 2, test: 2 });
+        let corr = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>() / a.len() as f32
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut ni = 0;
+        let mut nx = 0;
+        for i in 0..40 {
+            for j in (i + 1)..40 {
+                let c = corr(ds.train.sample(i), ds.train.sample(j));
+                if ds.train.y[i] == ds.train.y[j] {
+                    intra += c;
+                    ni += 1;
+                } else {
+                    inter += c;
+                    nx += 1;
+                }
+            }
+        }
+        assert!(intra / ni as f32 > inter / nx as f32 + 0.1);
+    }
+}

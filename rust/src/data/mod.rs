@@ -1,0 +1,165 @@
+//! Synthetic datasets standing in for MNIST / CIFAR-10 / Google KWS /
+//! Widar3.0 (no dataset downloads in this image; DESIGN.md §2).
+//!
+//! Each generator is deterministic given a seed and produces
+//! class-conditional structure *learnable by the Table-1 models*, so the
+//! paper's accuracy-vs-MACs trends are meaningful:
+//!
+//! * [`mnist_like`] — 1×28×28 stroke-rendered "digits" (10 classes),
+//! * [`cifar_like`] — 3×32×32 colored blob/texture scenes (10 classes),
+//! * [`kws_like`] — 1×124×80 spectrograms with class-specific formant
+//!   trajectories (12 keywords),
+//! * [`widar_like`] — 22×13×13 CSI Doppler tensors with a **room**
+//!   domain-shift knob reproducing Table 2's cross-context protocol.
+//!
+//! Splits follow the paper: train (90 % of the non-test pool) / val
+//! (10 %, used *only* for threshold calibration) / test.
+
+pub mod cifar_like;
+pub mod kws_like;
+pub mod mnist_like;
+pub mod synth;
+pub mod widar_like;
+
+/// One split of samples, stored flat (n × C·H·W, row-major).
+#[derive(Debug, Clone)]
+pub struct Split {
+    pub x: Vec<f32>,
+    pub y: Vec<usize>,
+    pub sample_len: usize,
+}
+
+impl Split {
+    pub fn new(sample_len: usize) -> Split {
+        Split { x: Vec::new(), y: Vec::new(), sample_len }
+    }
+
+    pub fn len(&self) -> usize {
+        self.y.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.y.is_empty()
+    }
+
+    pub fn push(&mut self, sample: &[f32], label: usize) {
+        assert_eq!(sample.len(), self.sample_len);
+        self.x.extend_from_slice(sample);
+        self.y.push(label);
+    }
+
+    /// Borrow sample `i`.
+    pub fn sample(&self, i: usize) -> &[f32] {
+        &self.x[i * self.sample_len..(i + 1) * self.sample_len]
+    }
+
+    /// Gather a batch `(x, y_onehot)` for the PJRT trainer.
+    pub fn batch(&self, idx: &[usize], classes: usize) -> (Vec<f32>, Vec<f32>) {
+        let mut bx = Vec::with_capacity(idx.len() * self.sample_len);
+        let mut by = vec![0.0; idx.len() * classes];
+        for (row, &i) in idx.iter().enumerate() {
+            bx.extend_from_slice(self.sample(i));
+            by[row * classes + self.y[i]] = 1.0;
+        }
+        (bx, by)
+    }
+}
+
+/// A full dataset: three splits plus shape metadata.
+#[derive(Debug, Clone)]
+pub struct Dataset {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub classes: usize,
+    pub train: Split,
+    pub val: Split,
+    pub test: Split,
+}
+
+impl Dataset {
+    pub fn sample_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+}
+
+/// Standard generation sizes used across experiments (kept modest so the
+/// single-core PJRT trainer converges in minutes).
+#[derive(Debug, Clone, Copy)]
+pub struct Sizes {
+    pub train: usize,
+    pub val: usize,
+    pub test: usize,
+}
+
+impl Default for Sizes {
+    fn default() -> Self {
+        Sizes { train: 1800, val: 200, test: 600 }
+    }
+}
+
+/// Build a dataset by model name ("mnist", "cifar", "kws", "widar").
+/// `widar` defaults to Room 1; use [`widar_like::generate_room`] for the
+/// cross-context protocol.
+pub fn by_name(name: &str, seed: u64, sizes: Sizes) -> Dataset {
+    match name {
+        "mnist" => mnist_like::generate(seed, sizes),
+        "cifar" => cifar_like::generate(seed, sizes),
+        "kws" => kws_like::generate(seed, sizes),
+        "widar" => widar_like::generate_room(seed, sizes, widar_like::Room::Room1),
+        other => panic!("unknown dataset {other}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn split_push_and_sample() {
+        let mut s = Split::new(4);
+        s.push(&[1.0, 2.0, 3.0, 4.0], 1);
+        s.push(&[5.0, 6.0, 7.0, 8.0], 0);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.sample(1), &[5.0, 6.0, 7.0, 8.0]);
+    }
+
+    #[test]
+    fn batch_onehot_layout() {
+        let mut s = Split::new(2);
+        s.push(&[1.0, 2.0], 2);
+        s.push(&[3.0, 4.0], 0);
+        let (bx, by) = s.batch(&[1, 0], 3);
+        assert_eq!(bx, vec![3.0, 4.0, 1.0, 2.0]);
+        assert_eq!(by, vec![1.0, 0.0, 0.0, 0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn all_generators_produce_declared_shapes() {
+        let sizes = Sizes { train: 12, val: 6, test: 6 };
+        for name in ["mnist", "cifar", "kws", "widar"] {
+            let ds = by_name(name, 7, sizes);
+            assert_eq!(ds.train.len(), 12, "{name}");
+            assert_eq!(ds.val.len(), 6);
+            assert_eq!(ds.test.len(), 6);
+            assert_eq!(ds.train.sample_len, ds.sample_len());
+            assert!(ds.train.y.iter().all(|&y| y < ds.classes));
+        }
+    }
+
+    #[test]
+    fn generators_deterministic() {
+        let sizes = Sizes { train: 8, val: 4, test: 4 };
+        let a = by_name("mnist", 5, sizes);
+        let b = by_name("mnist", 5, sizes);
+        assert_eq!(a.train.x, b.train.x);
+        assert_eq!(a.test.y, b.test.y);
+    }
+
+    #[test]
+    fn seeds_change_data() {
+        let sizes = Sizes { train: 8, val: 4, test: 4 };
+        let a = by_name("cifar", 1, sizes);
+        let b = by_name("cifar", 2, sizes);
+        assert_ne!(a.train.x, b.train.x);
+    }
+}

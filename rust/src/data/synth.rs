@@ -1,0 +1,105 @@
+//! Shared rendering primitives for the synthetic dataset generators.
+
+use crate::util::Rng;
+
+/// Draw an anti-aliased line segment onto a (H, W) canvas, accumulating
+/// intensity `amp` with a gaussian cross-section of width `sigma`.
+pub fn draw_line(
+    canvas: &mut [f32],
+    h: usize,
+    w: usize,
+    x0: f32,
+    y0: f32,
+    x1: f32,
+    y1: f32,
+    sigma: f32,
+    amp: f32,
+) {
+    let steps = (((x1 - x0).abs() + (y1 - y0).abs()) * 2.0).ceil().max(2.0) as usize;
+    for s in 0..=steps {
+        let t = s as f32 / steps as f32;
+        let cx = x0 + t * (x1 - x0);
+        let cy = y0 + t * (y1 - y0);
+        stamp_gauss(canvas, h, w, cx, cy, sigma, amp / steps as f32 * 4.0);
+    }
+}
+
+/// Accumulate a 2-D gaussian bump centred at (cx, cy).
+pub fn stamp_gauss(canvas: &mut [f32], h: usize, w: usize, cx: f32, cy: f32, sigma: f32, amp: f32) {
+    let r = (3.0 * sigma).ceil() as i64;
+    let ix = cx.round() as i64;
+    let iy = cy.round() as i64;
+    for dy in -r..=r {
+        for dx in -r..=r {
+            let px = ix + dx;
+            let py = iy + dy;
+            if px < 0 || py < 0 || px >= w as i64 || py >= h as i64 {
+                continue;
+            }
+            let fx = px as f32 - cx;
+            let fy = py as f32 - cy;
+            let g = (-(fx * fx + fy * fy) / (2.0 * sigma * sigma)).exp();
+            canvas[py as usize * w + px as usize] += amp * g;
+        }
+    }
+}
+
+/// Add i.i.d. gaussian noise.
+pub fn add_noise(canvas: &mut [f32], rng: &mut Rng, sigma: f32) {
+    for v in canvas.iter_mut() {
+        *v += sigma * rng.normal();
+    }
+}
+
+/// Standardize in place to zero mean, unit-ish std (clamped to ±4), the
+/// input range the Q8.8 engine is calibrated for.
+pub fn standardize(canvas: &mut [f32]) {
+    let n = canvas.len() as f32;
+    let mean = canvas.iter().sum::<f32>() / n;
+    let var = canvas.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n;
+    let std = var.sqrt().max(1e-6);
+    for v in canvas.iter_mut() {
+        *v = ((*v - mean) / std).clamp(-4.0, 4.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stamp_gauss_peak_at_centre() {
+        let mut c = vec![0.0; 11 * 11];
+        stamp_gauss(&mut c, 11, 11, 5.0, 5.0, 1.0, 1.0);
+        let peak = c[5 * 11 + 5];
+        assert!(peak > 0.9);
+        assert!(c.iter().all(|&v| v <= peak + 1e-6));
+    }
+
+    #[test]
+    fn stamp_gauss_clips_at_borders() {
+        let mut c = vec![0.0; 5 * 5];
+        stamp_gauss(&mut c, 5, 5, 0.0, 0.0, 2.0, 1.0);
+        assert!(c[0] > 0.0); // corner received energy, no panic
+    }
+
+    #[test]
+    fn draw_line_touches_endpoints() {
+        let mut c = vec![0.0; 20 * 20];
+        draw_line(&mut c, 20, 20, 2.0, 2.0, 17.0, 17.0, 0.8, 1.0);
+        assert!(c[2 * 20 + 2] > 0.0);
+        assert!(c[17 * 20 + 17] > 0.0);
+        assert!(c[19 * 20 + 0] < 1e-4); // off-diagonal corner untouched
+    }
+
+    #[test]
+    fn standardize_moments() {
+        let mut rng = Rng::new(3);
+        let mut c: Vec<f32> = (0..1000).map(|_| 5.0 + 2.0 * rng.normal()).collect();
+        standardize(&mut c);
+        let mean = c.iter().sum::<f32>() / 1000.0;
+        let var = c.iter().map(|v| v * v).sum::<f32>() / 1000.0;
+        assert!(mean.abs() < 0.01);
+        assert!((var - 1.0).abs() < 0.1);
+    }
+}

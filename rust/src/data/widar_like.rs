@@ -1,0 +1,251 @@
+//! Widar-like synthetic WiFi CSI gestures: 22×13×13, 6 classes, with a
+//! **room** domain-shift knob (paper Table 2 protocol).
+//!
+//! Widar3.0 derives a body-coordinate velocity profile (BVP) from CSI:
+//! a stack of Doppler-range maps. We synthesize per-gesture trajectories
+//! through the 13×13 velocity plane evolving across the 22 channel
+//! slices, then apply **room-specific distortions**:
+//!
+//! * a fixed per-room channel mixing matrix (multipath),
+//! * per-room static clutter pattern added to every sample,
+//! * per-room noise level and gain (Room 1 = cluttered classroom, noisy;
+//!   Room 2 = empty hallway, cleaner but different mixing).
+//!
+//! Training in one room and testing in the other reproduces the paper's
+//! deployment-drift setting: same gesture structure, shifted marginals.
+
+use super::{Dataset, Sizes, Split};
+use crate::data::synth::{add_noise, stamp_gauss, standardize};
+use crate::util::Rng;
+
+pub const C: usize = 22; // channel slices
+pub const H: usize = 13;
+pub const W: usize = 13;
+pub const CLASSES: usize = 6;
+
+/// Deployment environment (Table 2 contexts).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Room {
+    /// Cluttered classroom: strong multipath mixing, higher noise.
+    Room1,
+    /// Nearly empty hallway: weaker mixing, lower noise, different gain.
+    Room2,
+}
+
+impl Room {
+    pub fn name(self) -> &'static str {
+        match self {
+            Room::Room1 => "room1",
+            Room::Room2 => "room2",
+        }
+    }
+
+    fn mixing_seed(self) -> u64 {
+        match self {
+            Room::Room1 => 0xA11CE,
+            Room::Room2 => 0xB0B00,
+        }
+    }
+
+    fn noise(self) -> f32 {
+        match self {
+            Room::Room1 => 0.85,
+            Room::Room2 => 0.55,
+        }
+    }
+
+    fn gain(self) -> f32 {
+        match self {
+            Room::Room1 => 1.0,
+            Room::Room2 => 0.65,
+        }
+    }
+
+    fn mix_strength(self) -> f32 {
+        match self {
+            Room::Room1 => 0.65,
+            Room::Room2 => 0.25,
+        }
+    }
+}
+
+struct Gesture {
+    // trajectory control points in the velocity plane, per phase
+    path: Vec<(f32, f32)>,
+    sigma: f32,
+}
+
+fn class_gesture(class: usize, base_seed: u64) -> Gesture {
+    let mut rng = Rng::new(base_seed ^ (0x31DA_0 + class as u64 * 6_700_417));
+    let n = 3 + rng.below(3) as usize;
+    let path = (0..n).map(|_| (rng.range(2.0, 11.0), rng.range(2.0, 11.0))).collect();
+    Gesture { path, sigma: rng.range(1.0, 1.8) }
+}
+
+/// Per-room channel mixing: y_c = x_c + strength * x_{perm(c)} + clutter_c.
+struct RoomModel {
+    perm: Vec<usize>,
+    clutter: Vec<f32>, // C*H*W static background
+    room: Room,
+}
+
+fn room_model(room: Room, base_seed: u64) -> RoomModel {
+    let mut rng = Rng::new(base_seed ^ room.mixing_seed());
+    let mut perm: Vec<usize> = (0..C).collect();
+    rng.shuffle(&mut perm);
+    let mut clutter = vec![0.0f32; C * H * W];
+    // static reflectors: strong enough to shadow weak gesture energy
+    for _ in 0..14 {
+        let ch = rng.below(C as u64) as usize;
+        let cx = rng.range(1.0, 12.0);
+        let cy = rng.range(1.0, 12.0);
+        let amp = rng.range(0.3, 1.0);
+        let plane = &mut clutter[ch * H * W..(ch + 1) * H * W];
+        stamp_gauss(plane, H, W, cx, cy, rng.range(1.2, 2.5), amp);
+    }
+    RoomModel { perm, clutter, room }
+}
+
+fn render_sample(g: &Gesture, rm: &RoomModel, rng: &mut Rng) -> Vec<f32> {
+    let mut cube = vec![0.0f32; C * H * W];
+    // user variability: speed + spatial offset + amplitude (wide — the
+    // paper's protocol swaps users between train and test too)
+    let speed = rng.range(0.7, 1.3);
+    let dx = rng.range(-2.2, 2.2);
+    let dy = rng.range(-2.2, 2.2);
+    let amp = rng.range(0.6, 1.2);
+    let segs = g.path.len() - 1;
+    for ch in 0..C {
+        // gesture phase for this channel slice
+        let phase = (ch as f32 / (C - 1) as f32) * speed;
+        let pos = (phase.min(0.999)) * segs as f32;
+        let i = pos.floor() as usize;
+        let frac = pos - i as f32;
+        let (x0, y0) = g.path[i.min(segs - 1)];
+        let (x1, y1) = g.path[(i + 1).min(segs)];
+        let cx = x0 + frac * (x1 - x0) + dx;
+        let cy = y0 + frac * (y1 - y0) + dy;
+        let plane = &mut cube[ch * H * W..(ch + 1) * H * W];
+        stamp_gauss(plane, H, W, cx, cy, g.sigma, amp);
+    }
+    // room multipath: mix permuted channels + clutter
+    let strength = rm.room.mix_strength();
+    let gain = rm.room.gain();
+    let orig = cube.clone();
+    for ch in 0..C {
+        let src = rm.perm[ch];
+        for p in 0..H * W {
+            cube[ch * H * W + p] = gain
+                * (orig[ch * H * W + p]
+                    + strength * orig[src * H * W + p]
+                    + rm.clutter[ch * H * W + p]);
+        }
+    }
+    add_noise(&mut cube, rng, rm.room.noise());
+    standardize(&mut cube);
+    cube
+}
+
+fn fill_split(split: &mut Split, n: usize, gestures: &[Gesture], rm: &RoomModel, rng: &mut Rng) {
+    for i in 0..n {
+        let class = i % CLASSES;
+        split.push(&render_sample(&gestures[class], rm, rng), class);
+    }
+}
+
+/// Generate a dataset whose *every* split comes from the given room.
+/// Cross-context evaluation pairs `generate_room(seed, _, Room1).train`
+/// with `generate_room(seed, _, Room2).test`: the gesture skeletons are
+/// shared (same base seed), only the environment changes.
+pub fn generate_room(seed: u64, sizes: Sizes, room: Room) -> Dataset {
+    let gestures: Vec<Gesture> = (0..CLASSES).map(|c| class_gesture(c, seed)).collect();
+    let rm = room_model(room, seed);
+    let mut root = Rng::new(seed ^ 0x31DA_7 ^ room.mixing_seed());
+    let mut train = Split::new(C * H * W);
+    let mut val = Split::new(C * H * W);
+    let mut test = Split::new(C * H * W);
+    fill_split(&mut train, sizes.train, &gestures, &rm, &mut root.fork(1));
+    fill_split(&mut val, sizes.val, &gestures, &rm, &mut root.fork(2));
+    fill_split(&mut test, sizes.test, &gestures, &rm, &mut root.fork(3));
+    Dataset {
+        name: format!("widar-{}", room.name()),
+        input_shape: [C, H, W],
+        classes: CLASSES,
+        train,
+        val,
+        test,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rooms_shift_distribution() {
+        let sizes = Sizes { train: 24, val: 6, test: 6 };
+        let r1 = generate_room(5, sizes, Room::Room1);
+        let r2 = generate_room(5, sizes, Room::Room2);
+        // Same gesture skeletons, different environments: samples differ.
+        assert_ne!(r1.train.x, r2.train.x);
+        // Distribution shift metric: mean absolute difference of class
+        // centroids across rooms is nonzero.
+        let centroid = |ds: &Dataset, class: usize| -> Vec<f32> {
+            let mut acc = vec![0.0f32; ds.sample_len()];
+            let mut n = 0;
+            for i in 0..ds.train.len() {
+                if ds.train.y[i] == class {
+                    for (a, b) in acc.iter_mut().zip(ds.train.sample(i)) {
+                        *a += b;
+                    }
+                    n += 1;
+                }
+            }
+            acc.iter_mut().for_each(|a| *a /= n as f32);
+            acc
+        };
+        let c1 = centroid(&r1, 0);
+        let c2 = centroid(&r2, 0);
+        let mad: f32 =
+            c1.iter().zip(&c2).map(|(a, b)| (a - b).abs()).sum::<f32>() / c1.len() as f32;
+        assert!(mad > 0.05, "rooms too similar: mad={mad}");
+    }
+
+    #[test]
+    fn gesture_structure_survives_room_change() {
+        // Intra-class correlation across rooms must still beat
+        // inter-class within a room — otherwise cross-room transfer
+        // would be impossible and Table 2 meaningless.
+        let sizes = Sizes { train: 60, val: 6, test: 6 };
+        let r1 = generate_room(7, sizes, Room::Room1);
+        let r2 = generate_room(7, sizes, Room::Room2);
+        let corr = |a: &[f32], b: &[f32]| -> f32 {
+            a.iter().zip(b).map(|(x, y)| x * y).sum::<f32>() / a.len() as f32
+        };
+        let mut cross_same = 0.0;
+        let mut cross_diff = 0.0;
+        let mut ns = 0;
+        let mut nd = 0;
+        for i in 0..30 {
+            for j in 0..30 {
+                let c = corr(r1.train.sample(i), r2.train.sample(j));
+                if r1.train.y[i] == r2.train.y[j] {
+                    cross_same += c;
+                    ns += 1;
+                } else {
+                    cross_diff += c;
+                    nd += 1;
+                }
+            }
+        }
+        assert!(cross_same / ns as f32 > cross_diff / nd as f32);
+    }
+
+    #[test]
+    fn deterministic_per_room() {
+        let sizes = Sizes { train: 6, val: 2, test: 2 };
+        let a = generate_room(3, sizes, Room::Room2);
+        let b = generate_room(3, sizes, Room::Room2);
+        assert_eq!(a.train.x, b.train.x);
+    }
+}

@@ -1,0 +1,13 @@
+//! Fixed-point MCU inference engine with connection-level MAC skipping.
+//!
+//! This is the deployed artifact the paper measures: the Table-1 models
+//! quantized to 8-bit weights / Q8.8 activations ([`qmodel`]), executed
+//! by integer-only inner loops that implement UnIT's reuse-aware
+//! MAC-free pruning with approximate divisions, charging every
+//! operation to the MCU ledger ([`infer`]).
+
+pub mod infer;
+pub mod qmodel;
+
+pub use infer::{infer, EngineConfig, InferOutput, PruneMode};
+pub use qmodel::QModel;

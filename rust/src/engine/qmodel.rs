@@ -1,0 +1,156 @@
+//! Quantized model: int8 weights + per-layer scale, integer biases, and
+//! raw-domain UnIT thresholds.
+//!
+//! Quantization scheme (see `fixed/mod.rs` for the algebra):
+//!
+//! * activations: Q8.8 (`i16`, scale 1/256),
+//! * weights: symmetric int8 with per-layer scale `s = max|w|/127`,
+//! * accumulator: `i64` in the raw product domain (a physical MSP430
+//!   build would manage 32-bit ranges; the simulator uses 64-bit so
+//!   quantization error — not overflow — is the only artifact),
+//! * bias folded into the accumulator as `round(b·256/s)`,
+//! * requantization back to Q8.8: `y = (acc · m) >> 16` with
+//!   `m = round(s·2^16)` — one fixed-point multiply per output element,
+//! * UnIT threshold per layer: `T_raw = T·256/s` (one u32), shared by
+//!   the Eq. 2 and Eq. 3 comparisons.
+
+use crate::fixed::{quantize_weights, t_raw};
+use crate::models::{ModelDef, Params};
+use crate::nn::Layer;
+
+/// One quantized layer.
+#[derive(Debug, Clone)]
+pub struct QLayer {
+    /// int8 weights, same layout as the float layer.
+    pub w: Vec<i8>,
+    /// Weight scale `s` (f32, build-time constant).
+    pub scale: f32,
+    /// Bias in accumulator domain: `round(b·256/s)`.
+    pub bias_acc: Vec<i64>,
+    /// Requantization multiplier `round(s·2^16)`.
+    pub requant_m: i64,
+    /// Layer-level UnIT threshold in the raw domain (0 ⇒ keep-all).
+    pub t_raw: u32,
+    /// Optional per-output-channel thresholds (group-wise refinement).
+    pub t_raw_groups: Vec<u32>,
+}
+
+/// A fully quantized Table-1 model ready for the MCU engine.
+#[derive(Debug, Clone)]
+pub struct QModel {
+    pub def: ModelDef,
+    pub layers: Vec<QLayer>,
+    /// FATReLU cut-off in Q8.8 raw units (0 ⇒ plain ReLU).
+    pub fat_t_raw: i16,
+}
+
+impl QModel {
+    /// Quantize float params with all thresholds zero (dense numerics).
+    pub fn quantize(def: &ModelDef, params: &Params) -> QModel {
+        let layers = def
+            .layers
+            .iter()
+            .enumerate()
+            .map(|(li, _l)| {
+                let (w, scale) = quantize_weights(&params.weights[li]);
+                let bias_acc = params.biases[li]
+                    .iter()
+                    .map(|&b| (b * 256.0 / scale).round() as i64)
+                    .collect();
+                QLayer {
+                    w,
+                    scale,
+                    bias_acc,
+                    requant_m: (scale * 65536.0).round() as i64,
+                    t_raw: 0,
+                    t_raw_groups: Vec::new(),
+                }
+            })
+            .collect();
+        QModel { def: def.clone(), layers, fat_t_raw: 0 }
+    }
+
+    /// Bake real-valued UnIT thresholds into the raw domain.
+    pub fn with_thresholds(mut self, t: &crate::pruning::Thresholds) -> QModel {
+        assert_eq!(t.per_layer.len(), self.layers.len());
+        for (li, ql) in self.layers.iter_mut().enumerate() {
+            ql.t_raw = t_raw(t.per_layer[li], ql.scale);
+            ql.t_raw_groups =
+                t.groups[li].iter().map(|&g| t_raw(g, ql.scale)).collect();
+        }
+        self
+    }
+
+    /// Bake a FATReLU cut-off (real-valued) into Q8.8.
+    pub fn with_fatrelu(mut self, fat_t: f32) -> QModel {
+        self.fat_t_raw = crate::fixed::Q88::from_f32(fat_t).raw();
+        self
+    }
+
+    /// Quantize an f32 input sample to Q8.8 raw values.
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i16> {
+        x.iter().map(|&v| crate::fixed::Q88::from_f32(v).raw()).collect()
+    }
+
+    /// Model size in bytes as deployed (int8 weights + i16 biases +
+    /// thresholds), the 256 KB FRAM budget check.
+    pub fn deployed_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.w.len() + 2 * l.bias_acc.len() + 4 + 4 * l.t_raw_groups.len())
+            .sum()
+    }
+
+    /// Weight-quantization layer defs (convenience passthrough).
+    pub fn layer_defs(&self) -> &[Layer] {
+        &self.def.layers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    #[test]
+    fn quantize_all_models_fit_fram() {
+        // MSP430FR5994 has 256 KB FRAM; every MCU-deployed Table-1 model
+        // (mnist/cifar/kws) must fit. (widar is the desktop stress test.)
+        for name in ["mnist", "cifar", "kws"] {
+            let def = zoo(name);
+            let q = QModel::quantize(&def, &Params::random(&def, 1));
+            assert!(q.deployed_bytes() < 256 * 1024, "{name}: {}", q.deployed_bytes());
+        }
+    }
+
+    #[test]
+    fn thresholds_baked_per_layer_scale() {
+        let def = zoo("mnist");
+        let q = QModel::quantize(&def, &Params::random(&def, 2));
+        let t = crate::pruning::Thresholds::uniform(3, 0.5);
+        let q = q.with_thresholds(&t);
+        for l in &q.layers {
+            let expect = (0.5 * 256.0 / l.scale).round() as u32;
+            assert_eq!(l.t_raw, expect);
+        }
+    }
+
+    #[test]
+    fn input_quantization_roundtrip() {
+        let def = zoo("mnist");
+        let q = QModel::quantize(&def, &Params::random(&def, 3));
+        let x = [0.5f32, -1.25, 3.0];
+        let xi = q.quantize_input(&x);
+        assert_eq!(xi, vec![128, -320, 768]);
+    }
+
+    #[test]
+    fn requant_multiplier_matches_scale() {
+        let def = zoo("cifar");
+        let q = QModel::quantize(&def, &Params::random(&def, 4));
+        for l in &q.layers {
+            let back = l.requant_m as f32 / 65536.0;
+            assert!((back - l.scale).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Fixed-point arithmetic for the MCU engine.
+//!
+//! The MSP430FR5994 has no FPU; SONIC-style deployments run in 16-bit
+//! fixed point with 8-bit quantized weights. This module provides:
+//!
+//! * [`Q88`] — Q8.8 activations (i16 raw, 1/256 resolution, ±128 range),
+//! * [`quantize_weights`] — symmetric int8 weight quantization with a
+//!   per-layer scale,
+//! * the raw-domain threshold transform used by the UnIT comparisons
+//!   (see [`t_raw`]).
+//!
+//! ## Raw-domain UnIT comparisons
+//!
+//! Let `xr = round(x·256)` (Q8.8) and `wr = round(w/s)` (int8, per-layer
+//! scale `s`). The paper's Eq. 2/3 comparisons translate to a *single*
+//! integer threshold `T_raw = T·256/s` for both layer types:
+//!
+//! * linear (Eq. 2): `|w| ≤ T/|x|  ⇔  |wr| ≤ T_raw / |xr|`
+//! * conv   (Eq. 3): `|x| ≤ T/|w|  ⇔  |xr| ≤ T_raw / |wr|`
+//!
+//! so the whole pruning decision stays in integer arithmetic on the MCU,
+//! and the division `T_raw / |c|` is what the [`crate::approx`] estimators
+//! approximate.
+
+pub mod q;
+
+pub use q::{clamp_i16, Q88, Q_ONE, Q_SHIFT};
+
+/// Symmetric int8 quantization: `wr = round(w / s)`, `s = max|w| / 127`.
+///
+/// Returns `(raw, scale)`. An all-zero tensor gets scale 1.0.
+pub fn quantize_weights(w: &[f32]) -> (Vec<i8>, f32) {
+    let maxabs = w.iter().fold(0f32, |m, &v| m.max(v.abs()));
+    let scale = if maxabs > 0.0 { maxabs / 127.0 } else { 1.0 };
+    let raw = w
+        .iter()
+        .map(|&v| {
+            let q = (v / scale).round();
+            q.clamp(-127.0, 127.0) as i8
+        })
+        .collect();
+    (raw, scale)
+}
+
+/// Dequantize int8 weights back to f32 (for error analysis / tests).
+pub fn dequantize_weights(raw: &[i8], scale: f32) -> Vec<f32> {
+    raw.iter().map(|&r| r as f32 * scale).collect()
+}
+
+/// Transform a real-valued layer threshold `T` into the raw integer
+/// domain shared by both UnIT comparisons: `T_raw = T * 256 / s`.
+///
+/// `s` is the layer's weight scale from [`quantize_weights`].
+pub fn t_raw(t_real: f32, weight_scale: f32) -> u32 {
+    if t_real <= 0.0 {
+        return 0;
+    }
+    let v = (t_real * Q_ONE as f32 / weight_scale).round();
+    if v >= u32::MAX as f32 {
+        u32::MAX
+    } else {
+        v as u32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn quantize_roundtrip_error_bounded() {
+        let w: Vec<f32> = (0..256).map(|i| (i as f32 - 128.0) / 37.0).collect();
+        let (raw, s) = quantize_weights(&w);
+        let back = dequantize_weights(&raw, s);
+        for (a, b) in w.iter().zip(&back) {
+            assert!((a - b).abs() <= s * 0.5 + 1e-6, "{a} vs {b} (s={s})");
+        }
+    }
+
+    #[test]
+    fn quantize_zero_tensor() {
+        let (raw, s) = quantize_weights(&[0.0, 0.0]);
+        assert_eq!(raw, vec![0, 0]);
+        assert_eq!(s, 1.0);
+    }
+
+    #[test]
+    fn quantize_saturates_at_127() {
+        let (raw, _) = quantize_weights(&[1.0, -1.0, 0.5]);
+        assert_eq!(raw[0], 127);
+        assert_eq!(raw[1], -127);
+    }
+
+    #[test]
+    fn t_raw_equivalence_linear() {
+        // |w| <= T/|x|  must match  |wr| <= T_raw/|xr| on representative
+        // values (up to quantization rounding at the boundary).
+        let t = 0.8f32;
+        let s = 0.01f32;
+        let traw = t_raw(t, s);
+        for &(x, w) in &[(0.5f32, 0.9f32), (2.0, 0.3), (0.1, 1.2), (4.0, 0.21)] {
+            let real = w.abs() <= t / x.abs();
+            let xr = (x * 256.0).round() as i64;
+            let wr = (w / s).round() as i64;
+            let raw = wr.abs() as u128 * xr.abs() as u128 <= traw as u128 * 1u128;
+            // compare via product form to avoid integer-division rounding
+            let raw_div = wr.unsigned_abs() <= (traw as u64 / xr.unsigned_abs()) as u64;
+            // Both raw forms must agree with the real comparison away from
+            // the quantization boundary.
+            let margin = (w.abs() - t / x.abs()).abs();
+            if margin > 0.05 {
+                assert_eq!(real, raw, "product form x={x} w={w}");
+                assert_eq!(real, raw_div, "division form x={x} w={w}");
+            }
+        }
+    }
+
+    #[test]
+    fn t_raw_zero_and_saturation() {
+        assert_eq!(t_raw(0.0, 0.01), 0);
+        assert_eq!(t_raw(-1.0, 0.01), 0);
+        assert_eq!(t_raw(1e30, 1e-10), u32::MAX);
+    }
+}

@@ -1,0 +1,165 @@
+//! Q8.8 fixed-point scalar type (i16 raw, 8 fractional bits).
+//!
+//! This matches the SONIC runtime's fixed-point representation on the
+//! MSP430: activations live in Q8.8, products accumulate in i32, and the
+//! result is rescaled back with a right shift (plus the per-layer weight
+//! scale folded in by the engine's requantization step).
+
+/// Number of fractional bits.
+pub const Q_SHIFT: i32 = 8;
+/// 1.0 in raw units.
+pub const Q_ONE: i32 = 1 << Q_SHIFT;
+
+/// Saturating clamp of an i32 into the i16 raw range.
+#[inline]
+pub fn clamp_i16(v: i32) -> i16 {
+    v.clamp(i16::MIN as i32, i16::MAX as i32) as i16
+}
+
+/// Q8.8 fixed-point value.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Default)]
+pub struct Q88(pub i16);
+
+impl Q88 {
+    pub const ZERO: Q88 = Q88(0);
+    pub const ONE: Q88 = Q88(Q_ONE as i16);
+    pub const MAX: Q88 = Q88(i16::MAX);
+    pub const MIN: Q88 = Q88(i16::MIN);
+
+    /// Convert from f32 with rounding and saturation.
+    #[inline]
+    pub fn from_f32(v: f32) -> Q88 {
+        let r = (v * Q_ONE as f32).round();
+        if r >= i16::MAX as f32 {
+            Q88(i16::MAX)
+        } else if r <= i16::MIN as f32 {
+            Q88(i16::MIN)
+        } else {
+            Q88(r as i16)
+        }
+    }
+
+    #[inline]
+    pub fn to_f32(self) -> f32 {
+        self.0 as f32 / Q_ONE as f32
+    }
+
+    #[inline]
+    pub fn raw(self) -> i16 {
+        self.0
+    }
+
+    #[inline]
+    pub fn abs_raw(self) -> u32 {
+        (self.0 as i32).unsigned_abs()
+    }
+
+    /// Saturating addition.
+    #[inline]
+    pub fn sat_add(self, other: Q88) -> Q88 {
+        Q88(self.0.saturating_add(other.0))
+    }
+
+    /// Saturating subtraction.
+    #[inline]
+    pub fn sat_sub(self, other: Q88) -> Q88 {
+        Q88(self.0.saturating_sub(other.0))
+    }
+
+    /// Q8.8 × Q8.8 → Q8.8 with i32 intermediate and saturation.
+    #[inline]
+    pub fn sat_mul(self, other: Q88) -> Q88 {
+        let p = (self.0 as i32 * other.0 as i32) >> Q_SHIFT;
+        Q88(clamp_i16(p))
+    }
+
+    /// ReLU in raw domain.
+    #[inline]
+    pub fn relu(self) -> Q88 {
+        if self.0 > 0 {
+            self
+        } else {
+            Q88::ZERO
+        }
+    }
+
+    /// FATReLU in raw domain: zero unless strictly above `t`.
+    #[inline]
+    pub fn fatrelu(self, t: Q88) -> Q88 {
+        if self.0 > t.0 {
+            self
+        } else {
+            Q88::ZERO
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_small_values() {
+        for v in [-10.0f32, -0.5, 0.0, 0.25, 1.0, 100.0] {
+            let q = Q88::from_f32(v);
+            assert!((q.to_f32() - v).abs() <= 0.5 / Q_ONE as f32 + 1e-6, "{v}");
+        }
+    }
+
+    #[test]
+    fn saturation_at_extremes() {
+        assert_eq!(Q88::from_f32(1e9), Q88::MAX);
+        assert_eq!(Q88::from_f32(-1e9), Q88::MIN);
+        assert_eq!(Q88::MAX.sat_add(Q88::ONE), Q88::MAX);
+        assert_eq!(Q88::MIN.sat_sub(Q88::ONE), Q88::MIN);
+    }
+
+    #[test]
+    fn mul_matches_float() {
+        let a = Q88::from_f32(1.5);
+        let b = Q88::from_f32(-2.25);
+        let p = a.sat_mul(b);
+        assert!((p.to_f32() - (-3.375)).abs() < 0.01);
+    }
+
+    #[test]
+    fn mul_saturates() {
+        let a = Q88::from_f32(127.0);
+        let p = a.sat_mul(a);
+        assert_eq!(p, Q88::MAX);
+    }
+
+    #[test]
+    fn relu_and_fatrelu() {
+        assert_eq!(Q88::from_f32(-1.0).relu(), Q88::ZERO);
+        assert_eq!(Q88::from_f32(2.0).relu(), Q88::from_f32(2.0));
+        let t = Q88::from_f32(0.5);
+        assert_eq!(Q88::from_f32(0.4).fatrelu(t), Q88::ZERO);
+        assert_eq!(Q88::from_f32(0.6).fatrelu(t), Q88::from_f32(0.6));
+        // boundary: exactly t is pruned (strict >)
+        assert_eq!(t.fatrelu(t), Q88::ZERO);
+    }
+
+    #[test]
+    fn prop_add_commutes_and_saturates() {
+        crate::util::prop::check(41, 300, |g| {
+            let a = Q88(g.i32_in(-32768, 32767) as i16);
+            let b = Q88(g.i32_in(-32768, 32767) as i16);
+            assert_eq!(a.sat_add(b), b.sat_add(a));
+            let wide = a.0 as i32 + b.0 as i32;
+            assert_eq!(a.sat_add(b).0 as i32, wide.clamp(-32768, 32767));
+        });
+    }
+
+    #[test]
+    fn prop_mul_close_to_float() {
+        crate::util::prop::check(42, 300, |g| {
+            let x = g.f32_in(-8.0, 8.0);
+            let y = g.f32_in(-8.0, 8.0);
+            let q = Q88::from_f32(x).sat_mul(Q88::from_f32(y));
+            // error bound: quantization of both operands + truncation
+            let tol = (x.abs() + y.abs()) * (1.0 / Q_ONE as f32) + 2.0 / Q_ONE as f32;
+            assert!((q.to_f32() - x * y).abs() <= tol, "{x}*{y} -> {}", q.to_f32());
+        });
+    }
+}

@@ -1,0 +1,41 @@
+//! # unit-pruner — UnIT: Unstructured Inference-Time Pruning for MCUs
+//!
+//! A full-system reproduction of *"UnIT: Scalable Unstructured
+//! Inference-Time Pruning for MAC-efficient Neural Inference on MCUs"*
+//! (Neth et al., 2025) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 1** (`python/compile/kernels/`): Pallas kernels implementing
+//!   the paper's Eq. 2 (activation-relative thresholds for linear layers)
+//!   and Eq. 3 (weight-relative thresholds for convolutions), verified
+//!   against pure-jnp oracles.
+//! * **Layer 2** (`python/compile/model.py`): the four Table-1
+//!   architectures in JAX, AOT-lowered once to HLO text artifacts.
+//! * **Layer 3** (this crate): everything at runtime — an MSP430-class
+//!   MCU simulator with a cycle/energy cost model ([`mcu`]), the
+//!   fixed-point inference engine with connection-level MAC skipping
+//!   ([`engine`]), the UnIT pruning logic and baselines ([`pruning`]),
+//!   the fast division approximations ([`approx`]), synthetic datasets
+//!   ([`data`]), a PJRT runtime that loads the AOT artifacts
+//!   ([`runtime`]), a training driver ([`train`]), and a serving
+//!   coordinator ([`coordinator`]). Python never runs on the request
+//!   path.
+//!
+//! See `DESIGN.md` for the substitution ledger (paper testbed → simulated
+//! equivalent) and the experiment index, and `EXPERIMENTS.md` for
+//! paper-vs-measured results.
+
+pub mod approx;
+pub mod blas;
+pub mod coordinator;
+pub mod data;
+pub mod engine;
+pub mod fixed;
+pub mod mcu;
+pub mod models;
+pub mod nn;
+pub mod pruning;
+pub mod report;
+pub mod runtime;
+pub mod tensor;
+pub mod train;
+pub mod util;

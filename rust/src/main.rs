@@ -1,0 +1,232 @@
+//! `unit` — the leader binary: train, calibrate, evaluate and serve the
+//! UnIT-pruned Table-1 models.
+//!
+//! ```text
+//! unit info                             # model zoo + cost model summary
+//! unit train  --model mnist --steps 400 # train via the AOT step artifact
+//! unit eval   --model mnist --div shift --percentile 20
+//! unit serve  --model mnist --requests 64 --workers 2 [--backend pjrt]
+//! ```
+
+use anyhow::Result;
+use std::time::Duration;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::mcu::{cost, EnergyModel};
+use unit_pruner::models::{zoo, MODEL_NAMES};
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::train::{ensure_trained, evaluate_float, TrainConfig};
+use unit_pruner::util::cli::Args;
+use unit_pruner::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    match args.positional.first().map(|s| s.as_str()) {
+        Some("info") | None => info(),
+        Some("train") => cmd_train(&args),
+        Some("eval") => cmd_eval(&args),
+        Some("serve") => cmd_serve(&args),
+        Some("memmap") => cmd_memmap(&args),
+        Some(other) => {
+            eprintln!("unknown command {other}; try: info | train | eval | serve | memmap");
+            std::process::exit(2);
+        }
+    }
+}
+
+/// FRAM memory-map report for a (randomly initialized) model — the
+/// deployment-fit check of paper §3.3.
+fn cmd_memmap(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mnist").to_string();
+    let def = zoo(&model);
+    let q = QModel::quantize(&def, &unit_pruner::models::Params::random(&def, 1));
+    println!("FRAM memory map for {model}:\n");
+    println!("{}", unit_pruner::mcu::memmap::MemMap::plan(&q).report());
+    Ok(())
+}
+
+fn info() -> Result<()> {
+    println!("UnIT reproduction — model zoo (paper Table 1)\n");
+    let mut t = Table::new(vec!["model", "input", "classes", "layers", "dense MACs", "params"]);
+    for name in MODEL_NAMES {
+        let def = zoo(name);
+        let params: usize = def.layers.iter().map(|l| l.param_counts().0 + l.param_counts().1).sum();
+        t.row(vec![
+            name.to_string(),
+            format!("{:?}", def.input_shape),
+            def.classes.to_string(),
+            def.layers.len().to_string(),
+            def.total_dense_macs().to_string(),
+            params.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "MSP430 cost model: MAC={} cyc (mul {} + add {}), compare={} cyc, div={} cyc @ {} MHz",
+        cost::MAC,
+        cost::MUL_SW,
+        cost::ADD,
+        cost::CMP_BRANCH,
+        cost::DIV_SW,
+        cost::CPU_HZ / 1e6
+    );
+    Ok(())
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mnist").to_string();
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let ds = by_name(&model, args.u64_or("seed", 42), Sizes::default());
+    let defaults = TrainConfig::for_model(&model);
+    let cfg = TrainConfig {
+        steps: args.usize_or("steps", defaults.steps),
+        lr: args.f64_or("lr", defaults.lr as f64) as f32,
+        seed: args.u64_or("seed", 7),
+        log_every: args.usize_or("log-every", 50),
+        lr_decay: true,
+    };
+    let params = ensure_trained(&rt, &store, &model, &ds, &cfg)?;
+    let def = zoo(&model);
+    let r = evaluate_float(
+        &def,
+        &params,
+        &ds.test,
+        &unit_pruner::nn::ForwardOpts::dense(def.layers.len()),
+        200,
+    );
+    println!("trained {model}: test accuracy {:.2}% (n={})", 100.0 * r.accuracy, r.n);
+    Ok(())
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mnist").to_string();
+    let div = DivKind::parse(args.get_or("div", "shift")).expect("div kind");
+    let pct = args.f64_or("percentile", 20.0);
+    let n_eval = args.usize_or("samples", 200);
+
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let ds = by_name(&model, args.u64_or("seed", 42), Sizes::default());
+    let params = ensure_trained(&rt, &store, &model, &ds, &TrainConfig::default())?;
+    let def = zoo(&model);
+
+    let th = calibrate(&def, &params, &ds.val, &CalibConfig { percentile: pct, ..Default::default() });
+    println!("calibrated thresholds (p{pct}): {:?}", th.per_layer);
+
+    let q = QModel::quantize(&def, &params);
+    let qp = q.clone().with_thresholds(&th);
+    let divb = div.build();
+    let energy = EnergyModel::default();
+
+    let mut rows = Table::new(vec!["config", "accuracy", "MAC skipped", "mcu secs", "energy mJ"]);
+    for (label, qm, mode) in [
+        ("dense", &q, PruneMode::Dense),
+        ("unit", &qp, PruneMode::Unit),
+    ] {
+        let n = ds.test.len().min(n_eval);
+        let mut hits = 0usize;
+        let mut skipped = 0f64;
+        let mut secs = 0f64;
+        let mut mj = 0f64;
+        for i in 0..n {
+            let xi = qm.quantize_input(ds.test.sample(i));
+            let cfg = EngineConfig {
+                mode,
+                div: divb.as_ref(),
+                sonic_accumulators: true,
+                precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+            };
+            let out = infer(qm, &xi, &cfg);
+            if out.argmax() == ds.test.y[i] {
+                hits += 1;
+            }
+            skipped += out.skip_fraction();
+            secs += out.ledger.secs();
+            mj += out.ledger.millijoules(&energy);
+        }
+        let nf = n as f64;
+        rows.row(vec![
+            label.to_string(),
+            format!("{:.2}%", 100.0 * hits as f64 / nf),
+            format!("{:.2}%", 100.0 * skipped / nf),
+            format!("{:.3}", secs / nf),
+            format!("{:.3}", mj / nf),
+        ]);
+    }
+    println!("{}", rows.render());
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let model = args.get_or("model", "mnist").to_string();
+    let n_req = args.usize_or("requests", 64);
+    let backend = args.get_or("backend", "mcu").to_string();
+
+    let rt = Runtime::cpu()?;
+    let store = ArtifactStore::discover();
+    let ds = by_name(&model, args.u64_or("seed", 42), Sizes::default());
+    let params = ensure_trained(&rt, &store, &model, &ds, &TrainConfig::default())?;
+    let def = zoo(&model);
+    let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+
+    let choice = if backend == "pjrt" {
+        BackendChoice::Pjrt {
+            model: model.clone(),
+            params,
+            t_vec: th.per_layer.clone(),
+            fat_t: 0.0,
+        }
+    } else {
+        let q = QModel::quantize(&def, &params).with_thresholds(&th);
+        BackendChoice::McuSim {
+            q,
+            mode: PruneMode::Unit,
+            div: DivKind::parse(args.get_or("div", "shift")).expect("div kind"),
+        }
+    };
+    let coord = Coordinator::start(
+        choice,
+        ServeConfig {
+            workers: args.usize_or("workers", 2),
+            max_batch: args.usize_or("max-batch", 8),
+            max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+        },
+    );
+    let t0 = std::time::Instant::now();
+    let rxs: Vec<_> = (0..n_req)
+        .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
+        .collect();
+    let mut correct = 0usize;
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv()?;
+        if resp.predicted == ds.test.y[i % ds.test.len()] {
+            correct += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    let snap = coord.metrics.snapshot();
+    coord.shutdown();
+    println!(
+        "served {} requests on {backend} in {:.3}s ({:.1} req/s), accuracy {:.2}%",
+        snap.served,
+        wall,
+        n_req as f64 / wall,
+        100.0 * correct as f64 / n_req as f64
+    );
+    println!(
+        "latency p50/p95/p99 = {}/{}/{} us, mean batch {:.2}, mean MAC skipped {:.2}%, mean MCU energy {:.3} mJ",
+        snap.p50_us,
+        snap.p95_us,
+        snap.p99_us,
+        snap.mean_batch,
+        100.0 * snap.mean_mac_skipped,
+        snap.mean_energy_mj
+    );
+    Ok(())
+}

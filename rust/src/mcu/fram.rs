@@ -1,0 +1,84 @@
+//! FRAM traffic model.
+//!
+//! The MSP430FR5994's ferroelectric RAM is non-volatile (which is what
+//! makes SONIC-style intermittent computing possible) but wait-stated:
+//! above 8 MHz the controller inserts wait cycles, so at the modeled
+//! 16 MHz a random 16-bit access costs extra cycles. SONIC additionally
+//! double-buffers task outputs (write-two-copies commit) — that, plus
+//! streaming layer activations through FRAM, is why the paper's Fig. 6
+//! shows *data movement dominating wall-clock time*.
+//!
+//! Model: `READ_CYCLES = 2`, `WRITE_CYCLES = 4` per 16-bit word
+//! (cache-miss average at 16 MHz with 1 wait state; writes go through
+//! the FRAM controller's read-modify-write).
+
+/// Cycles per 16-bit FRAM read (wait-stated average at 16 MHz).
+pub const READ_CYCLES: u64 = 2;
+/// Cycles per 16-bit FRAM write (read-modify-write through controller).
+pub const WRITE_CYCLES: u64 = 4;
+
+/// Per-layer buffer traffic model: how many FRAM words move for a layer
+/// with the given activation sizes, under SONIC-style double buffering.
+#[derive(Debug, Clone)]
+pub struct FramModel {
+    /// Write each task output twice (commit + shadow), as SONIC does.
+    pub double_buffer: bool,
+}
+
+impl Default for FramModel {
+    fn default() -> Self {
+        FramModel { double_buffer: true }
+    }
+}
+
+impl FramModel {
+    /// FRAM words written when a layer commits `out_words` of activations.
+    pub fn commit_words(&self, out_words: u64) -> u64 {
+        if self.double_buffer {
+            2 * out_words
+        } else {
+            out_words
+        }
+    }
+
+    /// Charge the ledger for one layer's streaming traffic:
+    /// weights read once, inputs read once, outputs committed.
+    pub fn charge_layer(
+        &self,
+        ledger: &mut super::Ledger,
+        weight_words: u64,
+        in_words: u64,
+        out_words: u64,
+    ) {
+        ledger.fram_read(weight_words + in_words);
+        ledger.fram_write(self.commit_words(out_words));
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn double_buffer_doubles_writes() {
+        let m = FramModel { double_buffer: true };
+        assert_eq!(m.commit_words(100), 200);
+        let s = FramModel { double_buffer: false };
+        assert_eq!(s.commit_words(100), 100);
+    }
+
+    #[test]
+    fn charge_layer_accounts_reads_and_writes() {
+        let m = FramModel::default();
+        let mut l = super::super::Ledger::new();
+        m.charge_layer(&mut l, 1000, 500, 200);
+        assert_eq!(l.counts.fram_reads, 1500);
+        assert_eq!(l.counts.fram_writes, 400);
+        assert_eq!(l.mem_cycles, 1500 * READ_CYCLES + 400 * WRITE_CYCLES);
+    }
+
+    #[test]
+    fn writes_slower_than_reads() {
+        assert!(WRITE_CYCLES > READ_CYCLES);
+    }
+}

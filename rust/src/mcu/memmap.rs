@@ -1,0 +1,157 @@
+//! FRAM memory map: does a deployed model actually fit the
+//! MSP430FR5994's 256 KB of FRAM?
+//!
+//! The paper (§3.3) chooses Table-1 architectures specifically so they
+//! "run within MSP430's fixed-point FRAM limits without model swapping".
+//! This planner makes that constraint executable: it lays out every
+//! deployment section — quantized weights, biases, thresholds, SONIC
+//! double-buffered activation arenas, checkpoint state — and reports
+//! the budget.
+
+use crate::engine::QModel;
+
+/// Total FRAM on the MSP430FR5994.
+pub const FRAM_BYTES: usize = 256 * 1024;
+/// Reserved for the runtime (SONIC code, stack shadow, task state).
+pub const RUNTIME_RESERVED: usize = 24 * 1024;
+
+/// One named section of the deployment image.
+#[derive(Debug, Clone)]
+pub struct Section {
+    pub name: String,
+    pub bytes: usize,
+}
+
+/// A planned memory map.
+#[derive(Debug, Clone)]
+pub struct MemMap {
+    pub sections: Vec<Section>,
+}
+
+impl MemMap {
+    /// Plan the layout for a quantized model.
+    ///
+    /// * weights: int8 each;
+    /// * biases: i32 accumulator-domain each;
+    /// * thresholds: one u32 per layer (+ per group if present);
+    /// * activations: the two largest adjacent activation buffers,
+    ///   double-buffered (SONIC commit semantics), i16 each;
+    /// * checkpoint state: fixed block.
+    pub fn plan(q: &QModel) -> MemMap {
+        let mut sections = Vec::new();
+        let mut w = 0usize;
+        let mut b = 0usize;
+        let mut t = 0usize;
+        for l in &q.layers {
+            w += l.w.len();
+            b += 4 * l.bias_acc.len();
+            t += 4 + 4 * l.t_raw_groups.len();
+        }
+        sections.push(Section { name: "weights(int8)".into(), bytes: w });
+        sections.push(Section { name: "biases(i32)".into(), bytes: b });
+        sections.push(Section { name: "thresholds(u32)".into(), bytes: t });
+
+        // Activation arenas: layer i reads buffer A and writes buffer B;
+        // SONIC double-buffers the write side. Size by the two largest
+        // activation tensors in the pipeline.
+        let acts = q.def.activation_sizes();
+        let mut sorted = acts.clone();
+        sorted.sort_unstable_by(|a, b| b.cmp(a));
+        let a0 = sorted.first().copied().unwrap_or(0);
+        let a1 = sorted.get(1).copied().unwrap_or(0);
+        sections.push(Section { name: "activations A (i16)".into(), bytes: 2 * a0 });
+        sections.push(Section {
+            name: "activations B x2 (i16, double-buffered)".into(),
+            bytes: 2 * 2 * a1,
+        });
+        sections.push(Section { name: "checkpoint state".into(), bytes: 512 });
+        sections.push(Section { name: "runtime reserved".into(), bytes: RUNTIME_RESERVED });
+        MemMap { sections }
+    }
+
+    pub fn total(&self) -> usize {
+        self.sections.iter().map(|s| s.bytes).sum()
+    }
+
+    pub fn fits(&self) -> bool {
+        self.total() <= FRAM_BYTES
+    }
+
+    pub fn headroom(&self) -> isize {
+        FRAM_BYTES as isize - self.total() as isize
+    }
+
+    /// Human-readable report.
+    pub fn report(&self) -> String {
+        let mut t = crate::util::table::Table::new(vec!["section", "bytes", "KiB"]);
+        for s in &self.sections {
+            t.row(vec![
+                s.name.clone(),
+                s.bytes.to_string(),
+                format!("{:.1}", s.bytes as f64 / 1024.0),
+            ]);
+        }
+        t.row(vec![
+            "TOTAL".to_string(),
+            self.total().to_string(),
+            format!("{:.1}", self.total() as f64 / 1024.0),
+        ]);
+        format!(
+            "{}fits 256 KiB FRAM: {} (headroom {} bytes)\n",
+            t.render(),
+            if self.fits() { "yes" } else { "NO" },
+            self.headroom()
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Params};
+
+    fn map_for(name: &str) -> MemMap {
+        let def = zoo(name);
+        let q = QModel::quantize(&def, &Params::random(&def, 1));
+        MemMap::plan(&q)
+    }
+
+    #[test]
+    fn mcu_models_fit_fram() {
+        // Paper §3.3: mnist/cifar/kws run on the MSP430 without swapping.
+        for name in ["mnist", "cifar", "kws"] {
+            let m = map_for(name);
+            assert!(m.fits(), "{name} does not fit: {}", m.report());
+        }
+    }
+
+    #[test]
+    fn widar_exceeds_fram() {
+        // Paper §3.3: widar is "evaluated only on desktop-class
+        // platforms" due to size — the planner must agree.
+        let m = map_for("widar");
+        assert!(!m.fits(), "widar unexpectedly fits: {}", m.report());
+    }
+
+    #[test]
+    fn group_thresholds_increase_footprint() {
+        let def = zoo("mnist");
+        let q = QModel::quantize(&def, &Params::random(&def, 2));
+        let base = MemMap::plan(&q).total();
+        let th = crate::pruning::Thresholds {
+            per_layer: vec![0.1; 3],
+            groups: vec![vec![0.1; 6], vec![0.1; 16], Vec::new()],
+        };
+        let qg = q.with_thresholds(&th);
+        let with_groups = MemMap::plan(&qg).total();
+        assert_eq!(with_groups - base, 4 * (6 + 16));
+    }
+
+    #[test]
+    fn report_renders_total() {
+        let m = map_for("mnist");
+        let r = m.report();
+        assert!(r.contains("TOTAL"));
+        assert!(r.contains("fits 256 KiB FRAM: yes"));
+    }
+}

@@ -1,0 +1,28 @@
+//! MSP430FR5994-class MCU simulator.
+//!
+//! The paper's testbed is a real MSP430FR5994 running the SONIC
+//! intermittent-computing runtime, measured with TI EnergyTrace. This
+//! module is the simulated substitute (DESIGN.md substitution ledger):
+//! a deterministic per-instruction-class **cycle cost model**
+//! ([`cost`]), an **energy model** ([`energy`]), an **FRAM traffic
+//! model** ([`fram`]), an execution **ledger** that the inference engine
+//! charges every operation to ([`ledger`]), and a SONIC-like
+//! **intermittent execution** simulator with power-failure injection
+//! ([`intermittent`]).
+//!
+//! All of UnIT's claims are *relative* (cycles and energy saved by
+//! trading 77-cycle multiplies for 2–4-cycle compares), so a faithful
+//! cost model reproduces the paper's effect sizes without the physical
+//! board.
+
+pub mod cost;
+pub mod energy;
+pub mod fram;
+pub mod intermittent;
+pub mod ledger;
+pub mod memmap;
+
+pub use energy::EnergyModel;
+pub use fram::FramModel;
+pub use intermittent::{HarvestProfile, IntermittentSim};
+pub use ledger::{Ledger, OpCounts};

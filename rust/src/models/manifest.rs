@@ -1,0 +1,172 @@
+//! Parser for the `artifacts/<ds>_manifest.txt` files the Python AOT
+//! exporter writes (the flat param ABI shared between layers 2 and 3).
+//!
+//! Line format (deliberately trivial — no serde in the vendored set):
+//! ```text
+//! model mnist
+//! input 1 28 28
+//! classes 10
+//! prunable 3
+//! param l0.w 6 1 5 5
+//! ...
+//! macs 0 86400
+//! ```
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed manifest: the authoritative description of the exported HLO's
+/// parameter order and shapes.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: String,
+    pub input_shape: [usize; 3],
+    pub classes: usize,
+    pub prunable: usize,
+    /// `(name, shape)` in HLO parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Dense MACs per prunable layer.
+    pub macs: Vec<u64>,
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let mut model = None;
+        let mut input_shape = None;
+        let mut classes = None;
+        let mut prunable = None;
+        let mut params = Vec::new();
+        let mut macs = Vec::new();
+        for (ln, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() {
+                continue;
+            }
+            let mut it = line.split_whitespace();
+            let kind = it.next().unwrap();
+            let rest: Vec<&str> = it.collect();
+            match kind {
+                "model" => model = Some(rest.first().context("model name")?.to_string()),
+                "input" => {
+                    if rest.len() != 3 {
+                        bail!("line {ln}: input needs 3 dims");
+                    }
+                    let d: Vec<usize> =
+                        rest.iter().map(|s| s.parse()).collect::<Result<_, _>>()?;
+                    input_shape = Some([d[0], d[1], d[2]]);
+                }
+                "classes" => classes = Some(rest[0].parse()?),
+                "prunable" => prunable = Some(rest[0].parse()?),
+                "param" => {
+                    let name = rest.first().context("param name")?.to_string();
+                    let shape: Vec<usize> =
+                        rest[1..].iter().map(|s| s.parse()).collect::<Result<_, _>>()?;
+                    params.push((name, shape));
+                }
+                "macs" => {
+                    let idx: usize = rest[0].parse()?;
+                    if idx != macs.len() {
+                        bail!("line {ln}: macs lines out of order");
+                    }
+                    macs.push(rest[1].parse()?);
+                }
+                other => bail!("line {ln}: unknown record {other}"),
+            }
+        }
+        Ok(Manifest {
+            model: model.context("missing model line")?,
+            input_shape: input_shape.context("missing input line")?,
+            classes: classes.context("missing classes line")?,
+            prunable: prunable.context("missing prunable line")?,
+            params,
+            macs,
+        })
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<Manifest> {
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::parse(&text)
+    }
+
+    /// Check consistency against the Rust-side zoo definition.
+    pub fn check_against(&self, def: &super::ModelDef) -> Result<()> {
+        if self.model != def.name {
+            bail!("manifest model {} vs zoo {}", self.model, def.name);
+        }
+        if self.input_shape != def.input_shape {
+            bail!("input shape mismatch");
+        }
+        if self.classes != def.classes {
+            bail!("classes mismatch");
+        }
+        if self.prunable != def.layers.len() {
+            bail!("prunable layer count mismatch");
+        }
+        let zoo_macs = def.dense_macs();
+        if self.macs != zoo_macs {
+            bail!("dense MAC mismatch: manifest {:?} vs zoo {:?}", self.macs, zoo_macs);
+        }
+        // params: 2 per layer (w, b), element counts must match
+        if self.params.len() != 2 * def.layers.len() {
+            bail!("param count mismatch");
+        }
+        for (li, layer) in def.layers.iter().enumerate() {
+            let (wc, bc) = layer.param_counts();
+            let wm: usize = self.params[2 * li].1.iter().product();
+            let bm: usize = self.params[2 * li + 1].1.iter().product();
+            if wm != wc || bm != bc {
+                bail!("layer {li} param size mismatch: ({wm},{bm}) vs ({wc},{bc})");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = "\
+model mnist
+input 1 28 28
+classes 10
+prunable 3
+param l0.w 6 1 5 5
+param l0.b 6
+param l1.w 16 6 5 5
+param l1.b 16
+param l2.w 256 10
+param l2.b 10
+macs 0 86400
+macs 1 153600
+macs 2 2560
+";
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.model, "mnist");
+        assert_eq!(m.input_shape, [1, 28, 28]);
+        assert_eq!(m.params.len(), 6);
+        assert_eq!(m.macs, vec![86_400, 153_600, 2_560]);
+    }
+
+    #[test]
+    fn checks_against_zoo() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        m.check_against(&crate::models::zoo("mnist")).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_macs() {
+        let bad = SAMPLE.replace("macs 2 2560", "macs 2 9999");
+        let m = Manifest::parse(&bad).unwrap();
+        assert!(m.check_against(&crate::models::zoo("mnist")).is_err());
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Manifest::parse("bogus line here").is_err());
+        assert!(Manifest::parse("model x\ninput 1 2\nclasses 1\nprunable 0").is_err());
+    }
+}

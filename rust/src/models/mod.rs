@@ -1,0 +1,156 @@
+//! Model zoo (paper Table 1), parameter storage, and the manifest ABI
+//! shared with the Python AOT exporter.
+
+pub mod manifest;
+pub mod params;
+
+pub use manifest::Manifest;
+pub use params::Params;
+
+use crate::nn::Layer;
+
+/// A sequential Table-1 model definition.
+#[derive(Debug, Clone)]
+pub struct ModelDef {
+    pub name: String,
+    pub input_shape: [usize; 3],
+    pub classes: usize,
+    pub layers: Vec<Layer>,
+}
+
+impl ModelDef {
+    pub fn input_len(&self) -> usize {
+        self.input_shape.iter().product()
+    }
+
+    /// Dense MACs per prunable layer (Fig. 5 denominators).
+    pub fn dense_macs(&self) -> Vec<u64> {
+        let mut shape = self.input_shape;
+        self.layers
+            .iter()
+            .map(|l| {
+                let (m, s) = l.dense_macs(shape);
+                shape = s;
+                m
+            })
+            .collect()
+    }
+
+    pub fn total_dense_macs(&self) -> u64 {
+        self.dense_macs().iter().sum()
+    }
+
+    /// Activation sizes flowing *into* each layer plus the final output
+    /// (used by the FRAM traffic model).
+    pub fn activation_sizes(&self) -> Vec<usize> {
+        let mut out = vec![self.input_len()];
+        let mut shape = self.input_shape;
+        for l in &self.layers {
+            let (_, s) = l.dense_macs(shape);
+            shape = s;
+            out.push(shape.iter().product());
+        }
+        out
+    }
+}
+
+/// The four Table-1 architectures by dataset name.
+pub fn zoo(name: &str) -> ModelDef {
+    match name {
+        "mnist" => ModelDef {
+            name: "mnist".into(),
+            input_shape: [1, 28, 28],
+            classes: 10,
+            layers: vec![
+                Layer::Conv { out_ch: 6, in_ch: 1, kh: 5, kw: 5, pool: true },
+                Layer::Conv { out_ch: 16, in_ch: 6, kh: 5, kw: 5, pool: true },
+                Layer::Linear { n_in: 256, n_out: 10, relu: false },
+            ],
+        },
+        "cifar" => ModelDef {
+            name: "cifar".into(),
+            input_shape: [3, 32, 32],
+            classes: 10,
+            layers: vec![
+                Layer::Conv { out_ch: 6, in_ch: 3, kh: 5, kw: 5, pool: true },
+                Layer::Conv { out_ch: 16, in_ch: 6, kh: 5, kw: 5, pool: true },
+                Layer::Linear { n_in: 400, n_out: 10, relu: false },
+            ],
+        },
+        "kws" => ModelDef {
+            name: "kws".into(),
+            input_shape: [1, 124, 80],
+            classes: 12,
+            layers: vec![
+                Layer::Conv { out_ch: 6, in_ch: 1, kh: 5, kw: 5, pool: true },
+                Layer::Conv { out_ch: 16, in_ch: 6, kh: 5, kw: 5, pool: true },
+                Layer::Linear { n_in: 7616, n_out: 12, relu: false },
+            ],
+        },
+        "widar" => ModelDef {
+            name: "widar".into(),
+            input_shape: [22, 13, 13],
+            classes: 6,
+            layers: vec![
+                Layer::Conv { out_ch: 32, in_ch: 22, kh: 6, kw: 6, pool: false },
+                Layer::Conv { out_ch: 64, in_ch: 32, kh: 3, kw: 3, pool: false },
+                Layer::Conv { out_ch: 96, in_ch: 64, kh: 3, kw: 3, pool: false },
+                Layer::Linear { n_in: 1536, n_out: 128, relu: true },
+                Layer::Linear { n_in: 128, n_out: 6, relu: false },
+            ],
+        },
+        other => panic!("unknown model {other}"),
+    }
+}
+
+pub const MODEL_NAMES: [&str; 4] = ["mnist", "cifar", "kws", "widar"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table1_linear_inputs() {
+        // Table 1: L 256x10, 400x10, 7616x12, 1536x128 + 128x6.
+        for (name, want) in [("mnist", 256), ("cifar", 400), ("kws", 7616), ("widar", 1536)] {
+            let m = zoo(name);
+            let lin = m
+                .layers
+                .iter()
+                .find_map(|l| match *l {
+                    Layer::Linear { n_in, .. } => Some(n_in),
+                    _ => None,
+                })
+                .unwrap();
+            assert_eq!(lin, want, "{name}");
+        }
+    }
+
+    #[test]
+    fn shapes_flow_end_to_end() {
+        // dense_macs() panics internally on any shape mismatch.
+        for name in MODEL_NAMES {
+            let m = zoo(name);
+            let macs = m.dense_macs();
+            assert_eq!(macs.len(), m.layers.len());
+            assert!(m.total_dense_macs() > 0);
+        }
+    }
+
+    #[test]
+    fn activation_sizes_bookends() {
+        let m = zoo("mnist");
+        let a = m.activation_sizes();
+        assert_eq!(a[0], 28 * 28);
+        assert_eq!(*a.last().unwrap(), 10);
+    }
+
+    #[test]
+    fn kws_is_largest_model() {
+        // Fig. 6: KWS has the longest runtime — MAC ordering must agree.
+        let kws = zoo("kws").total_dense_macs();
+        let mnist = zoo("mnist").total_dense_macs();
+        let cifar = zoo("cifar").total_dense_macs();
+        assert!(kws > cifar && kws > mnist);
+    }
+}

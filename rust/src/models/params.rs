@@ -1,0 +1,204 @@
+//! Model parameters: per-layer weight/bias storage and a tiny binary
+//! (de)serialization format for `artifacts/weights/<ds>.bin`.
+//!
+//! Format: magic `UNITW1\n`, then per tensor: `u32 name_len | name |
+//! u32 rank | u64 dims... | f32 data...` — all little-endian. Written by
+//! the trainer after the PJRT training run; read by every experiment so
+//! models are trained once and reused.
+
+use anyhow::{bail, Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Flat per-layer parameters (weights row-major as exported by JAX:
+/// conv `O×I×KH×KW`, linear `N_in×N_out`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Params {
+    pub weights: Vec<Vec<f32>>,
+    pub biases: Vec<Vec<f32>>,
+}
+
+const MAGIC: &[u8] = b"UNITW1\n";
+
+impl Params {
+    /// Zero-initialized parameters matching a model definition.
+    pub fn zeros(def: &super::ModelDef) -> Params {
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for l in &def.layers {
+            let (wc, bc) = l.param_counts();
+            weights.push(vec![0.0; wc]);
+            biases.push(vec![0.0; bc]);
+        }
+        Params { weights, biases }
+    }
+
+    /// He-normal random init (for tests that need a nonzero model
+    /// without a training run).
+    pub fn random(def: &super::ModelDef, seed: u64) -> Params {
+        let mut rng = crate::util::Rng::new(seed);
+        let mut p = Params::zeros(def);
+        for (li, l) in def.layers.iter().enumerate() {
+            let fan_in = match *l {
+                crate::nn::Layer::Conv { in_ch, kh, kw, .. } => in_ch * kh * kw,
+                crate::nn::Layer::Linear { n_in, .. } => n_in,
+            };
+            let std = (2.0 / fan_in as f32).sqrt();
+            for w in p.weights[li].iter_mut() {
+                *w = std * rng.normal();
+            }
+        }
+        p
+    }
+
+    /// Interleaved `[w0, b0, w1, b1, ...]` flat views, the HLO param order.
+    pub fn flat_order(&self) -> Vec<&[f32]> {
+        let mut out = Vec::with_capacity(2 * self.weights.len());
+        for (w, b) in self.weights.iter().zip(&self.biases) {
+            out.push(w.as_slice());
+            out.push(b.as_slice());
+        }
+        out
+    }
+
+    /// Rebuild from interleaved flat tensors (inverse of `flat_order`).
+    pub fn from_flat_order(tensors: Vec<Vec<f32>>) -> Result<Params> {
+        if tensors.len() % 2 != 0 {
+            bail!("expected interleaved w/b tensors");
+        }
+        let mut weights = Vec::new();
+        let mut biases = Vec::new();
+        for (i, t) in tensors.into_iter().enumerate() {
+            if i % 2 == 0 {
+                weights.push(t);
+            } else {
+                biases.push(t);
+            }
+        }
+        Ok(Params { weights, biases })
+    }
+
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+        f.write_all(MAGIC)?;
+        for (li, (w, b)) in self.weights.iter().zip(&self.biases).enumerate() {
+            for (tag, data) in [("w", w), ("b", b)] {
+                let name = format!("l{li}.{tag}");
+                f.write_all(&(name.len() as u32).to_le_bytes())?;
+                f.write_all(name.as_bytes())?;
+                f.write_all(&(1u32).to_le_bytes())?; // rank 1: flat
+                f.write_all(&(data.len() as u64).to_le_bytes())?;
+                for v in data {
+                    f.write_all(&v.to_le_bytes())?;
+                }
+            }
+        }
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<Params> {
+        let mut f = std::io::BufReader::new(
+            std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,
+        );
+        let mut magic = [0u8; 7];
+        f.read_exact(&mut magic)?;
+        if magic != MAGIC {
+            bail!("bad magic in {path:?}");
+        }
+        let mut tensors = Vec::new();
+        loop {
+            let mut len4 = [0u8; 4];
+            match f.read_exact(&mut len4) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => break,
+                Err(e) => return Err(e.into()),
+            }
+            let name_len = u32::from_le_bytes(len4) as usize;
+            let mut name = vec![0u8; name_len];
+            f.read_exact(&mut name)?;
+            let mut rank4 = [0u8; 4];
+            f.read_exact(&mut rank4)?;
+            let rank = u32::from_le_bytes(rank4) as usize;
+            let mut total = 1usize;
+            for _ in 0..rank {
+                let mut d8 = [0u8; 8];
+                f.read_exact(&mut d8)?;
+                total *= u64::from_le_bytes(d8) as usize;
+            }
+            let mut data = vec![0f32; total];
+            let mut buf = [0u8; 4];
+            for v in data.iter_mut() {
+                f.read_exact(&mut buf)?;
+                *v = f32::from_le_bytes(buf);
+            }
+            tensors.push(data);
+        }
+        Params::from_flat_order(tensors)
+    }
+
+    /// Global max |w| (used by quantization sanity checks).
+    pub fn max_abs_weight(&self) -> f32 {
+        self.weights
+            .iter()
+            .flat_map(|w| w.iter())
+            .fold(0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn save_load_roundtrip() {
+        let def = crate::models::zoo("mnist");
+        let p = Params::random(&def, 3);
+        let dir = std::env::temp_dir().join("unit_pruner_test_params");
+        let path = dir.join("mnist.bin");
+        p.save(&path).unwrap();
+        let q = Params::load(&path).unwrap();
+        assert_eq!(p, q);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn flat_order_interleaves() {
+        let def = crate::models::zoo("mnist");
+        let p = Params::zeros(&def);
+        let flat = p.flat_order();
+        assert_eq!(flat.len(), 6);
+        assert_eq!(flat[0].len(), 150); // l0.w 6*1*5*5
+        assert_eq!(flat[1].len(), 6); // l0.b
+        assert_eq!(flat[4].len(), 2560); // l2.w
+    }
+
+    #[test]
+    fn from_flat_order_roundtrip() {
+        let def = crate::models::zoo("cifar");
+        let p = Params::random(&def, 7);
+        let flat: Vec<Vec<f32>> = p.flat_order().into_iter().map(|s| s.to_vec()).collect();
+        let q = Params::from_flat_order(flat).unwrap();
+        assert_eq!(p, q);
+    }
+
+    #[test]
+    fn random_has_nonzero_weights_zero_biases() {
+        let def = crate::models::zoo("widar");
+        let p = Params::random(&def, 1);
+        assert!(p.max_abs_weight() > 0.0);
+        assert!(p.biases.iter().all(|b| b.iter().all(|&v| v == 0.0)));
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("unit_pruner_test_badmagic");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC").unwrap();
+        assert!(Params::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

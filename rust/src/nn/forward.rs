@@ -1,0 +1,350 @@
+//! Float-domain forward pass with UnIT pruning and exact MAC accounting.
+//!
+//! Implements the paper's Eqs. 2/3 verbatim in f32 — the same semantics
+//! as the Layer-1 Pallas kernels (`python/compile/kernels/`) and the
+//! fixed-point engine ([`crate::engine`]); integration tests pin all
+//! three together.
+//!
+//! Reuse-aware structure is preserved even in the float path: for convs
+//! the per-weight thresholds `w̄ = T/|w|` are computed once per layer
+//! (they are input-independent); for linears the per-activation
+//! thresholds `x̄ = T/|x|` are computed once per input element and reused
+//! across the whole weight row.
+//!
+//! **Skip accounting**: a connection counts as *skipped* when the
+//! threshold comparison rejects it — which, at `T = 0`, happens exactly
+//! for zero operands. This matches the paper's Table 2, where even the
+//! "Unpruned" row reports ~16 % MACs skipped (post-ReLU zero
+//! activations).
+
+use super::layers::{conv2d_shape, Layer};
+use crate::models::{ModelDef, Params};
+
+/// Pruning configuration for one forward pass.
+#[derive(Debug, Clone)]
+pub struct ForwardOpts {
+    /// Per-layer UnIT thresholds `T` (empty or zeros ⇒ dense numerics).
+    pub t_vec: Vec<f32>,
+    /// FATReLU cut-off applied at every ReLU site (0 ⇒ plain ReLU).
+    pub fat_t: f32,
+}
+
+impl ForwardOpts {
+    pub fn dense(n_layers: usize) -> ForwardOpts {
+        ForwardOpts { t_vec: vec![0.0; n_layers], fat_t: 0.0 }
+    }
+
+    pub fn unit(t_vec: Vec<f32>) -> ForwardOpts {
+        ForwardOpts { t_vec, fat_t: 0.0 }
+    }
+}
+
+/// Per-layer kept/skipped MAC counts for one forward pass.
+#[derive(Debug, Clone, Default)]
+pub struct ForwardStats {
+    pub kept: Vec<u64>,
+    pub skipped: Vec<u64>,
+}
+
+impl ForwardStats {
+    pub fn total_kept(&self) -> u64 {
+        self.kept.iter().sum()
+    }
+
+    pub fn total_skipped(&self) -> u64 {
+        self.skipped.iter().sum()
+    }
+
+    pub fn skip_fraction(&self) -> f64 {
+        let total = self.total_kept() + self.total_skipped();
+        if total == 0 {
+            0.0
+        } else {
+            self.total_skipped() as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &ForwardStats) {
+        if self.kept.is_empty() {
+            self.kept = vec![0; other.kept.len()];
+            self.skipped = vec![0; other.skipped.len()];
+        }
+        for (a, b) in self.kept.iter_mut().zip(&other.kept) {
+            *a += b;
+        }
+        for (a, b) in self.skipped.iter_mut().zip(&other.skipped) {
+            *a += b;
+        }
+    }
+}
+
+/// UnIT-pruned forward pass for a single sample.
+///
+/// Returns `(logits, stats)`. `x` is the flat `C·H·W` input.
+pub fn forward(def: &ModelDef, params: &Params, x: &[f32], opts: &ForwardOpts) -> (Vec<f32>, ForwardStats) {
+    assert_eq!(x.len(), def.input_len(), "input length");
+    assert_eq!(opts.t_vec.len(), def.layers.len(), "t_vec arity");
+    let mut stats = ForwardStats {
+        kept: vec![0; def.layers.len()],
+        skipped: vec![0; def.layers.len()],
+    };
+    let mut act = x.to_vec();
+    let mut shape = def.input_shape;
+    for (li, layer) in def.layers.iter().enumerate() {
+        let t = opts.t_vec[li];
+        let w = &params.weights[li];
+        let b = &params.biases[li];
+        match *layer {
+            Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
+                let [c, h, wd] = shape;
+                debug_assert_eq!(c, in_ch);
+                let (oh, ow) = conv2d_shape(h, wd, kh, kw);
+                let mut out = vec![0.0f32; out_ch * oh * ow];
+                // Reuse-aware: one division per weight tap (Eq. 3),
+                // amortized across all OH*OW positions.
+                let wbar: Vec<f32> = w
+                    .iter()
+                    .map(|&wv| {
+                        let a = wv.abs();
+                        if a > 0.0 {
+                            t / a
+                        } else {
+                            f32::INFINITY
+                        }
+                    })
+                    .collect();
+                let mut kept = 0u64;
+                let mut skipped = 0u64;
+                for o in 0..out_ch {
+                    let wrow = &w[o * in_ch * kh * kw..(o + 1) * in_ch * kh * kw];
+                    let brow = &wbar[o * in_ch * kh * kw..(o + 1) * in_ch * kh * kw];
+                    for p in 0..oh {
+                        for q in 0..ow {
+                            let mut acc = b[o];
+                            let mut ti = 0usize;
+                            for ci in 0..in_ch {
+                                for u in 0..kh {
+                                    let row = &act[(ci * h + p + u) * wd + q..];
+                                    for v in 0..kw {
+                                        let xv = row[v];
+                                        // Eq. 3: keep iff |x| > T/|w|
+                                        if xv.abs() > brow[ti] {
+                                            acc += xv * wrow[ti];
+                                            kept += 1;
+                                        } else {
+                                            skipped += 1;
+                                        }
+                                        ti += 1;
+                                    }
+                                }
+                            }
+                            out[(o * oh + p) * ow + q] = acc;
+                        }
+                    }
+                }
+                stats.kept[li] = kept;
+                stats.skipped[li] = skipped;
+                // activation: FATReLU (fat_t = 0 ⇒ ReLU)
+                for v in out.iter_mut() {
+                    if *v <= opts.fat_t {
+                        *v = 0.0;
+                    }
+                }
+                shape = [out_ch, oh, ow];
+                act = out;
+                if pool {
+                    let (ph, pw) = (oh / 2, ow / 2);
+                    let mut pooled = vec![0.0f32; out_ch * ph * pw];
+                    for o in 0..out_ch {
+                        for p in 0..ph {
+                            for q in 0..pw {
+                                let mut m = f32::MIN;
+                                for du in 0..2 {
+                                    for dv in 0..2 {
+                                        m = m.max(act[(o * oh + 2 * p + du) * ow + 2 * q + dv]);
+                                    }
+                                }
+                                pooled[(o * ph + p) * pw + q] = m;
+                            }
+                        }
+                    }
+                    shape = [out_ch, ph, pw];
+                    act = pooled;
+                }
+            }
+            Layer::Linear { n_in, n_out, relu } => {
+                debug_assert_eq!(shape.iter().product::<usize>(), n_in);
+                let mut out = b.clone();
+                let mut kept = 0u64;
+                let mut skipped = 0u64;
+                // Reuse-aware: one division per input activation (Eq. 2),
+                // reused across the whole weight row.
+                for k in 0..n_in {
+                    let xv = act[k];
+                    let row = &w[k * n_out..(k + 1) * n_out];
+                    let a = xv.abs();
+                    if a > 0.0 {
+                        let tbar = t / a;
+                        for (j, &wv) in row.iter().enumerate() {
+                            // Eq. 2: keep iff |w| > T/|x|
+                            if wv.abs() > tbar {
+                                out[j] += xv * wv;
+                                kept += 1;
+                            } else {
+                                skipped += 1;
+                            }
+                        }
+                    } else {
+                        // zero activation: every MAC in the row is skipped
+                        skipped += n_out as u64;
+                    }
+                }
+                stats.kept[li] = kept;
+                stats.skipped[li] = skipped;
+                if relu {
+                    for v in out.iter_mut() {
+                        if *v <= opts.fat_t {
+                            *v = 0.0;
+                        }
+                    }
+                }
+                shape = [n_out, 1, 1];
+                act = out;
+            }
+        }
+    }
+    (act, stats)
+}
+
+/// Convenience: dense forward (T = 0, plain ReLU), logits only.
+pub fn forward_dense(def: &ModelDef, params: &Params, x: &[f32]) -> Vec<f32> {
+    forward(def, params, x, &ForwardOpts::dense(def.layers.len())).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::zoo;
+
+    fn tiny_model() -> (ModelDef, Params) {
+        let def = ModelDef {
+            name: "tiny".into(),
+            input_shape: [1, 6, 6],
+            classes: 3,
+            layers: vec![
+                Layer::Conv { out_ch: 2, in_ch: 1, kh: 3, kw: 3, pool: true },
+                Layer::Linear { n_in: 8, n_out: 3, relu: false },
+            ],
+        };
+        let params = Params::random(&def, 5);
+        (def, params)
+    }
+
+    #[test]
+    fn dense_counts_cover_all_connections() {
+        let (def, params) = tiny_model();
+        let x: Vec<f32> = (0..36).map(|i| (i as f32 / 36.0) - 0.5).collect();
+        let (_logits, stats) = forward(&def, &params, &x, &ForwardOpts::dense(2));
+        let dense = def.dense_macs();
+        for (li, &d) in dense.iter().enumerate() {
+            assert_eq!(stats.kept[li] + stats.skipped[li], d, "layer {li}");
+        }
+    }
+
+    #[test]
+    fn t0_skips_only_zero_operands() {
+        let (def, params) = tiny_model();
+        // strictly positive input + random weights: conv layer skips only
+        // where a weight is exactly zero (none, generically)
+        let x: Vec<f32> = (0..36).map(|i| 0.1 + i as f32 * 0.01).collect();
+        let (_l, stats) = forward(&def, &params, &x, &ForwardOpts::dense(2));
+        assert_eq!(stats.skipped[0], 0);
+        // linear layer skips only rows of post-ReLU zero activations
+        let zeros_after_relu = stats.skipped[1] % 3;
+        assert_eq!(zeros_after_relu, 0); // whole rows of 3
+    }
+
+    #[test]
+    fn raising_t_monotonically_increases_skips() {
+        let (def, params) = tiny_model();
+        let x: Vec<f32> = (0..36).map(|i| ((i * 7 % 13) as f32 - 6.0) / 6.0).collect();
+        let mut last = 0u64;
+        for t in [0.0f32, 0.05, 0.1, 0.3, 1.0] {
+            let (_l, s) = forward(&def, &params, &x, &ForwardOpts::unit(vec![t, t]));
+            let sk = s.total_skipped();
+            assert!(sk >= last, "t={t}: {sk} < {last}");
+            last = sk;
+        }
+    }
+
+    #[test]
+    fn huge_t_prunes_all_and_outputs_bias() {
+        let (def, params) = tiny_model();
+        let x = vec![0.5f32; 36];
+        let (logits, s) = forward(&def, &params, &x, &ForwardOpts::unit(vec![1e9, 1e9]));
+        assert_eq!(s.total_kept(), 0);
+        // final layer output = bias (biases are zero in random init)
+        assert!(logits.iter().all(|&v| v == 0.0));
+    }
+
+    #[test]
+    fn fatrelu_increases_downstream_skips() {
+        let (def, params) = tiny_model();
+        let x: Vec<f32> = (0..36).map(|i| ((i % 5) as f32 - 2.0) / 2.0).collect();
+        let base = forward(&def, &params, &x, &ForwardOpts { t_vec: vec![0.0; 2], fat_t: 0.0 });
+        let fat = forward(&def, &params, &x, &ForwardOpts { t_vec: vec![0.0; 2], fat_t: 0.4 });
+        // more zeros entering the linear layer => more skips there
+        assert!(fat.1.skipped[1] >= base.1.skipped[1]);
+    }
+
+    #[test]
+    fn full_zoo_models_run() {
+        for name in crate::models::MODEL_NAMES {
+            let def = zoo(name);
+            let params = Params::random(&def, 2);
+            let x = vec![0.3f32; def.input_len()];
+            let (logits, stats) =
+                forward(&def, &params, &x, &ForwardOpts::dense(def.layers.len()));
+            assert_eq!(logits.len(), def.classes, "{name}");
+            assert_eq!(
+                stats.total_kept() + stats.total_skipped(),
+                def.total_dense_macs(),
+                "{name}"
+            );
+        }
+    }
+
+    #[test]
+    fn prop_pruned_equals_dense_with_masked_contributions() {
+        // Property: the pruned output equals a dense pass over weights
+        // where each contribution failing Eq. 2/3 is zeroed.
+        crate::util::prop::check(77, 20, |g| {
+            let def = ModelDef {
+                name: "p".into(),
+                input_shape: [1, 5, 5],
+                classes: 2,
+                layers: vec![Layer::Linear { n_in: 25, n_out: 2, relu: false }],
+            };
+            let params = Params::random(&def, g.case as u64 + 1);
+            let x = g.vec_normal(25);
+            let t = g.f32_in(0.0, 0.5);
+            let (got, _) = forward(&def, &params, &x, &ForwardOpts::unit(vec![t]));
+            // manual masked computation
+            let w = &params.weights[0];
+            let mut want = vec![0.0f32; 2];
+            for k in 0..25 {
+                let xa = x[k].abs();
+                for j in 0..2 {
+                    let wv = w[k * 2 + j];
+                    let keep = xa > 0.0 && wv.abs() > t / xa;
+                    if keep {
+                        want[j] += x[k] * wv;
+                    }
+                }
+            }
+            for (a, b) in got.iter().zip(&want) {
+                assert!((a - b).abs() < 1e-4, "{a} vs {b}");
+            }
+        });
+    }
+}

@@ -1,0 +1,90 @@
+//! Layer descriptors and shape inference for the Table-1 architectures.
+
+/// One layer of a sequential Table-1 model.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    /// Valid 2-D convolution (+ReLU) with optional 2×2 max pool.
+    Conv { out_ch: usize, in_ch: usize, kh: usize, kw: usize, pool: bool },
+    /// Fully connected; `relu` marks hidden linears (Widar's L1).
+    Linear { n_in: usize, n_out: usize, relu: bool },
+}
+
+impl Layer {
+    /// Parameter element counts `(weights, biases)`.
+    pub fn param_counts(&self) -> (usize, usize) {
+        match *self {
+            Layer::Conv { out_ch, in_ch, kh, kw, .. } => (out_ch * in_ch * kh * kw, out_ch),
+            Layer::Linear { n_in, n_out, .. } => (n_in * n_out, n_out),
+        }
+    }
+
+    /// Dense MACs given the input spatial shape; returns (macs, out_shape).
+    pub fn dense_macs(&self, in_shape: [usize; 3]) -> (u64, [usize; 3]) {
+        match *self {
+            Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
+                let [c, h, w] = in_shape;
+                assert_eq!(c, in_ch, "conv input channels");
+                let (oh, ow) = conv2d_shape(h, w, kh, kw);
+                let macs = (out_ch * in_ch * kh * kw * oh * ow) as u64;
+                let (oh, ow) = if pool { (oh / 2, ow / 2) } else { (oh, ow) };
+                (macs, [out_ch, oh, ow])
+            }
+            Layer::Linear { n_in, n_out, .. } => {
+                assert_eq!(in_shape.iter().product::<usize>(), n_in, "linear input size");
+                ((n_in * n_out) as u64, [n_out, 1, 1])
+            }
+        }
+    }
+
+    pub fn is_conv(&self) -> bool {
+        matches!(self, Layer::Conv { .. })
+    }
+}
+
+/// Valid-convolution output spatial shape.
+pub fn conv2d_shape(h: usize, w: usize, kh: usize, kw: usize) -> (usize, usize) {
+    assert!(h >= kh && w >= kw, "kernel larger than input");
+    (h - kh + 1, w - kw + 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conv_shape_valid() {
+        assert_eq!(conv2d_shape(28, 28, 5, 5), (24, 24));
+        assert_eq!(conv2d_shape(13, 13, 6, 6), (8, 8));
+    }
+
+    #[test]
+    fn mnist_pipeline_shapes() {
+        let l1 = Layer::Conv { out_ch: 6, in_ch: 1, kh: 5, kw: 5, pool: true };
+        let (m1, s1) = l1.dense_macs([1, 28, 28]);
+        assert_eq!(m1, 6 * 25 * 24 * 24);
+        assert_eq!(s1, [6, 12, 12]);
+        let l2 = Layer::Conv { out_ch: 16, in_ch: 6, kh: 5, kw: 5, pool: true };
+        let (m2, s2) = l2.dense_macs(s1);
+        assert_eq!(m2, 16 * 6 * 25 * 8 * 8);
+        assert_eq!(s2, [16, 4, 4]);
+        let l3 = Layer::Linear { n_in: 256, n_out: 10, relu: false };
+        let (m3, s3) = l3.dense_macs(s2);
+        assert_eq!(m3, 2560);
+        assert_eq!(s3, [10, 1, 1]);
+    }
+
+    #[test]
+    fn param_counts() {
+        let c = Layer::Conv { out_ch: 6, in_ch: 3, kh: 5, kw: 5, pool: false };
+        assert_eq!(c.param_counts(), (450, 6));
+        let l = Layer::Linear { n_in: 256, n_out: 10, relu: false };
+        assert_eq!(l.param_counts(), (2560, 10));
+    }
+
+    #[test]
+    #[should_panic(expected = "linear input size")]
+    fn shape_mismatch_panics() {
+        let l = Layer::Linear { n_in: 100, n_out: 10, relu: false };
+        l.dense_macs([16, 4, 4]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Float reference network layers (Layer-3 side).
+//!
+//! This is the f32 ground-truth implementation of the Table-1 models,
+//! used to (a) cross-check the PJRT-loaded AOT artifacts, (b) validate
+//! the fixed-point MCU engine within quantization tolerance, and (c)
+//! run the paper's *float-platform* evaluation (Widar / Table 2, which
+//! the paper runs on desktop-class hardware rather than the MSP430).
+//!
+//! [`forward`] additionally implements UnIT pruning *in the float
+//! domain* (Eqs. 2 and 3 verbatim) with exact kept/skipped-MAC counting,
+//! mirroring the paper's "debug build" that reports skip statistics.
+
+pub mod forward;
+pub mod layers;
+
+pub use forward::{forward, ForwardOpts, ForwardStats};
+pub use layers::{conv2d_shape, Layer};

@@ -1,0 +1,256 @@
+//! Adaptive threshold calibration (paper §2.1).
+//!
+//! One-time pass over a held-out batch (the *validation* split — never
+//! test data): collect the distribution of `|activation × weight|`
+//! products per layer and set `T_layer` to a fixed percentile (the paper
+//! suggests e.g. the 20th). Thresholds become constants baked into the
+//! deployed model; no runtime cost.
+//!
+//! Product collection subsamples connections with a fixed stride into a
+//! bounded [`Reservoir`] so calibration is cheap even for the KWS model
+//! (5.6 M connections/sample).
+
+use crate::data::Split;
+use crate::models::{ModelDef, Params};
+use crate::nn::layers::{conv2d_shape, Layer};
+use crate::util::stats::Reservoir;
+
+/// Calibration settings.
+#[derive(Debug, Clone)]
+pub struct CalibConfig {
+    /// Percentile of |x·w| products pruned away (e.g. 20.0).
+    pub percentile: f64,
+    /// Number of validation samples used.
+    pub max_samples: usize,
+    /// Connection subsampling stride (1 = every connection).
+    pub stride: usize,
+    /// Reservoir capacity per layer.
+    pub reservoir: usize,
+}
+
+impl Default for CalibConfig {
+    fn default() -> Self {
+        CalibConfig { percentile: 20.0, max_samples: 32, stride: 7, reservoir: 4096 }
+    }
+}
+
+/// Walk the network on calibration samples, pushing |x·w| products into
+/// per-layer reservoirs; `group_fn` optionally routes products to
+/// per-output-channel reservoirs instead.
+fn collect<F: FnMut(usize, usize, f32)>(
+    def: &ModelDef,
+    params: &Params,
+    x: &[f32],
+    stride: usize,
+    push: &mut F,
+) {
+    let mut act = x.to_vec();
+    let mut shape = def.input_shape;
+    let mut tick = 0usize;
+    for (li, layer) in def.layers.iter().enumerate() {
+        let w = &params.weights[li];
+        let b = &params.biases[li];
+        match *layer {
+            Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
+                let [_, h, wd] = shape;
+                let (oh, ow) = conv2d_shape(h, wd, kh, kw);
+                let mut out = vec![0.0f32; out_ch * oh * ow];
+                for o in 0..out_ch {
+                    let wrow = &w[o * in_ch * kh * kw..(o + 1) * in_ch * kh * kw];
+                    for p in 0..oh {
+                        for q in 0..ow {
+                            let mut acc = b[o];
+                            let mut ti = 0usize;
+                            for ci in 0..in_ch {
+                                for u in 0..kh {
+                                    for v in 0..kw {
+                                        let xv = act[(ci * h + p + u) * wd + q + v];
+                                        let prod = xv * wrow[ti];
+                                        acc += prod;
+                                        tick += 1;
+                                        if tick % stride == 0 && prod != 0.0 {
+                                            push(li, o, prod.abs());
+                                        }
+                                        ti += 1;
+                                    }
+                                }
+                            }
+                            out[(o * oh + p) * ow + q] = acc.max(0.0); // ReLU
+                        }
+                    }
+                }
+                shape = [out_ch, oh, ow];
+                act = out;
+                if pool {
+                    let (ph, pw) = (oh / 2, ow / 2);
+                    let mut pooled = vec![0.0f32; out_ch * ph * pw];
+                    for o in 0..out_ch {
+                        for p in 0..ph {
+                            for q in 0..pw {
+                                let mut m = f32::MIN;
+                                for du in 0..2 {
+                                    for dv in 0..2 {
+                                        m = m.max(act[(o * oh + 2 * p + du) * ow + 2 * q + dv]);
+                                    }
+                                }
+                                pooled[(o * ph + p) * pw + q] = m;
+                            }
+                        }
+                    }
+                    shape = [out_ch, ph, pw];
+                    act = pooled;
+                }
+            }
+            Layer::Linear { n_in, n_out, relu } => {
+                let mut out = b.clone();
+                for k in 0..n_in {
+                    let xv = act[k];
+                    for j in 0..n_out {
+                        let prod = xv * w[k * n_out + j];
+                        out[j] += prod;
+                        tick += 1;
+                        if tick % stride == 0 && prod != 0.0 {
+                            push(li, j, prod.abs());
+                        }
+                    }
+                }
+                if relu {
+                    out.iter_mut().for_each(|v| *v = v.max(0.0));
+                }
+                shape = [n_out, 1, 1];
+                act = out;
+            }
+        }
+    }
+}
+
+/// Per-layer thresholds at the configured percentile of |x·w|.
+pub fn calibrate(
+    def: &ModelDef,
+    params: &Params,
+    val: &Split,
+    cfg: &CalibConfig,
+) -> super::Thresholds {
+    let n_layers = def.layers.len();
+    let mut res: Vec<Reservoir> =
+        (0..n_layers).map(|i| Reservoir::new(cfg.reservoir, 100 + i as u64)).collect();
+    let n = val.len().min(cfg.max_samples);
+    assert!(n > 0, "empty calibration split");
+    for i in 0..n {
+        collect(def, params, val.sample(i), cfg.stride, &mut |li, _g, p| {
+            res[li].push(p);
+        });
+    }
+    let per_layer = res
+        .iter()
+        .map(|r| if r.is_empty() { 0.0 } else { r.percentile(cfg.percentile) })
+        .collect();
+    super::Thresholds { per_layer, groups: vec![Vec::new(); n_layers] }
+}
+
+/// Group-wise refinement (§2.1): per-output-channel thresholds for conv
+/// layers (linear layers keep the layer-level threshold).
+pub fn calibrate_groups(
+    def: &ModelDef,
+    params: &Params,
+    val: &Split,
+    cfg: &CalibConfig,
+) -> super::Thresholds {
+    let base = calibrate(def, params, val, cfg);
+    let mut groups: Vec<Vec<Reservoir>> = def
+        .layers
+        .iter()
+        .enumerate()
+        .map(|(li, l)| match *l {
+            Layer::Conv { out_ch, .. } => (0..out_ch)
+                .map(|g| Reservoir::new(cfg.reservoir / 8, 500 + (li * 1000 + g) as u64))
+                .collect(),
+            Layer::Linear { .. } => Vec::new(),
+        })
+        .collect();
+    let n = val.len().min(cfg.max_samples);
+    for i in 0..n {
+        collect(def, params, val.sample(i), cfg.stride, &mut |li, g, p| {
+            if !groups[li].is_empty() {
+                groups[li][g].push(p);
+            }
+        });
+    }
+    let group_t = groups
+        .iter()
+        .enumerate()
+        .map(|(li, gs)| {
+            gs.iter()
+                .map(|r| {
+                    if r.is_empty() {
+                        base.per_layer[li]
+                    } else {
+                        r.percentile(cfg.percentile) as f32
+                    }
+                })
+                .collect()
+        })
+        .collect();
+    super::Thresholds { per_layer: base.per_layer, groups: group_t }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{mnist_like, Sizes};
+    use crate::models::zoo;
+
+    #[test]
+    fn thresholds_positive_and_percentile_monotone() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 3);
+        let ds = mnist_like::generate(1, Sizes { train: 4, val: 8, test: 4 });
+        let lo = calibrate(
+            &def,
+            &params,
+            &ds.val,
+            &CalibConfig { percentile: 10.0, ..Default::default() },
+        );
+        let hi = calibrate(
+            &def,
+            &params,
+            &ds.val,
+            &CalibConfig { percentile: 60.0, ..Default::default() },
+        );
+        for (a, b) in lo.per_layer.iter().zip(&hi.per_layer) {
+            assert!(*a > 0.0);
+            assert!(b >= a, "higher percentile must not lower threshold");
+        }
+    }
+
+    #[test]
+    fn group_thresholds_cover_conv_channels() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 4);
+        let ds = mnist_like::generate(2, Sizes { train: 4, val: 6, test: 4 });
+        let t = calibrate_groups(&def, &params, &ds.val, &CalibConfig::default());
+        assert_eq!(t.groups[0].len(), 6); // conv1 out channels
+        assert_eq!(t.groups[1].len(), 16); // conv2
+        assert!(t.groups[2].is_empty()); // linear: layer-level
+        assert!(t.groups[0].iter().all(|&g| g > 0.0));
+    }
+
+    #[test]
+    fn calibrated_thresholds_actually_prune() {
+        // Fig. 5 sanity: the 20th-percentile threshold should skip a
+        // nontrivial share of MACs on fresh inputs.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 5);
+        let ds = mnist_like::generate(3, Sizes { train: 4, val: 8, test: 8 });
+        let t = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+        let (_l, stats) = crate::nn::forward(
+            &def,
+            &params,
+            ds.test.sample(0),
+            &crate::nn::ForwardOpts::unit(t.per_layer.clone()),
+        );
+        let frac = stats.skip_fraction();
+        assert!(frac > 0.05, "skip fraction too low: {frac}");
+        assert!(frac < 0.95, "skip fraction implausibly high: {frac}");
+    }
+}

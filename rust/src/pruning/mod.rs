@@ -1,0 +1,62 @@
+//! Pruning strategies: UnIT threshold calibration, train-time global
+//! magnitude pruning (TTP baseline), and FATReLU cut-off tuning.
+//!
+//! The UnIT *mechanism* (reuse-aware MAC-free comparisons) lives in the
+//! inner loops of [`crate::nn::forward`] (float) and [`crate::engine`]
+//! (fixed-point MCU); this module owns the *policies* that produce the
+//! thresholds those mechanisms consume.
+
+pub mod calibrate;
+pub mod fatrelu;
+pub mod ttp;
+
+pub use calibrate::{calibrate, calibrate_groups, CalibConfig};
+pub use fatrelu::calibrate_fatrelu;
+pub use ttp::apply_global_magnitude;
+
+/// Per-layer UnIT thresholds, optionally refined per group
+/// (conv output channel) — the paper's §2.1 "group-wise thresholding".
+#[derive(Debug, Clone)]
+pub struct Thresholds {
+    /// One `T` per prunable layer.
+    pub per_layer: Vec<f32>,
+    /// Optional per-layer, per-output-channel refinement; empty inner
+    /// vec ⇒ use the layer threshold.
+    pub groups: Vec<Vec<f32>>,
+}
+
+impl Thresholds {
+    pub fn uniform(n_layers: usize, t: f32) -> Thresholds {
+        Thresholds { per_layer: vec![t; n_layers], groups: vec![Vec::new(); n_layers] }
+    }
+
+    pub fn zero(n_layers: usize) -> Thresholds {
+        Self::uniform(n_layers, 0.0)
+    }
+
+    /// Scale every threshold by a factor (the Fig. 5 sweep knob).
+    pub fn scaled(&self, f: f32) -> Thresholds {
+        Thresholds {
+            per_layer: self.per_layer.iter().map(|t| t * f).collect(),
+            groups: self
+                .groups
+                .iter()
+                .map(|g| g.iter().map(|t| t * f).collect())
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_and_scale() {
+        let t = Thresholds::uniform(3, 0.5);
+        assert_eq!(t.per_layer, vec![0.5, 0.5, 0.5]);
+        let s = t.scaled(2.0);
+        assert_eq!(s.per_layer, vec![1.0, 1.0, 1.0]);
+        assert_eq!(s.groups.len(), 3);
+    }
+}

@@ -1,0 +1,98 @@
+//! Train-time pruning baseline (TTP): global unstructured magnitude
+//! pruning, as in the paper's §3.4 — "removing weights with the smallest
+//! absolute values across the entire model", permanently and
+//! input-independently.
+//!
+//! Zeroed weights never pass the UnIT comparison (`|0| > T/|x|` is
+//! false for any `T ≥ 0`), so the engines automatically count them as
+//! skipped MACs — exactly how a static sparse model behaves on the MCU.
+
+use crate::models::Params;
+
+/// Zero the globally smallest-|w| fraction `sparsity ∈ [0, 1]`.
+/// Biases are never pruned (standard practice).
+pub fn apply_global_magnitude(params: &Params, sparsity: f64) -> Params {
+    assert!((0.0..=1.0).contains(&sparsity));
+    let mut all: Vec<f32> = params
+        .weights
+        .iter()
+        .flat_map(|w| w.iter().map(|v| v.abs()))
+        .collect();
+    if all.is_empty() || sparsity == 0.0 {
+        return params.clone();
+    }
+    all.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let k = ((all.len() as f64) * sparsity) as usize;
+    let cut = if k == 0 { -1.0 } else { all[(k - 1).min(all.len() - 1)] };
+    let mut out = params.clone();
+    for w in out.weights.iter_mut() {
+        for v in w.iter_mut() {
+            if v.abs() <= cut {
+                *v = 0.0;
+            }
+        }
+    }
+    out
+}
+
+/// Fraction of exactly-zero weights (verification helper).
+pub fn zero_fraction(params: &Params) -> f64 {
+    let total: usize = params.weights.iter().map(|w| w.len()).sum();
+    let zeros: usize =
+        params.weights.iter().map(|w| w.iter().filter(|&&v| v == 0.0).count()).sum();
+    zeros as f64 / total as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Params};
+
+    #[test]
+    fn sparsity_levels_respected() {
+        let def = zoo("mnist");
+        let p = Params::random(&def, 9);
+        for s in [0.0, 0.3, 0.5, 0.9] {
+            let pruned = apply_global_magnitude(&p, s);
+            let z = zero_fraction(&pruned);
+            assert!((z - s).abs() < 0.02, "target {s} got {z}");
+        }
+    }
+
+    #[test]
+    fn prunes_smallest_weights_first() {
+        let def = zoo("mnist");
+        let p = Params::random(&def, 10);
+        let pruned = apply_global_magnitude(&p, 0.5);
+        // every surviving weight must be >= every pruned weight's magnitude
+        let mut max_pruned = 0f32;
+        let mut min_kept = f32::MAX;
+        for (w0, w1) in p.weights.iter().zip(&pruned.weights) {
+            for (a, b) in w0.iter().zip(w1) {
+                if *b == 0.0 && *a != 0.0 {
+                    max_pruned = max_pruned.max(a.abs());
+                } else if *b != 0.0 {
+                    min_kept = min_kept.min(b.abs());
+                }
+            }
+        }
+        assert!(min_kept >= max_pruned);
+    }
+
+    #[test]
+    fn full_sparsity_zeroes_everything() {
+        let def = zoo("mnist");
+        let p = Params::random(&def, 11);
+        let pruned = apply_global_magnitude(&p, 1.0);
+        assert_eq!(zero_fraction(&pruned), 1.0);
+    }
+
+    #[test]
+    fn biases_untouched() {
+        let def = zoo("mnist");
+        let mut p = Params::random(&def, 12);
+        p.biases[0][0] = 0.001;
+        let pruned = apply_global_magnitude(&p, 0.99);
+        assert_eq!(pruned.biases[0][0], 0.001);
+    }
+}

@@ -1,0 +1,301 @@
+//! Shared experiment harness: prepares trained models and runs the
+//! paper's mechanism comparison (None / TTP / FATReLU / UnIT /
+//! UnIT+FATReLU / TTP+UnIT) on either execution platform:
+//!
+//! * [`run_mcu_dataset`] — the MSP430 simulator (mnist / cifar / kws,
+//!   the paper's MCU targets): accuracy + MAC skip + modeled
+//!   time/energy. Feeds Figs. 5, 6, 7.
+//! * [`run_float_dataset`] — the float engine (widar, the paper's
+//!   desktop target): accuracy / F1 + MAC skip. Feeds Fig. 5 (widar)
+//!   and Table 2.
+//!
+//! Every bench binary is a thin wrapper over these functions so results
+//! are consistent across figures.
+
+use anyhow::Result;
+
+use super::MechanismResult;
+use crate::approx::DivKind;
+use crate::data::Dataset;
+use crate::engine::{infer, EngineConfig, PruneMode, QModel};
+use crate::mcu::{cost, EnergyModel};
+use crate::models::{zoo, ModelDef, Params};
+use crate::nn::{ForwardOpts};
+use crate::pruning::{
+    apply_global_magnitude, calibrate, calibrate_fatrelu, CalibConfig, Thresholds,
+};
+use crate::runtime::{ArtifactStore, Runtime};
+use crate::train::{ensure_trained, evaluate_float, TrainConfig};
+
+/// Mechanism sweep options.
+#[derive(Debug, Clone)]
+pub struct MechOpts {
+    pub div: DivKind,
+    /// Global magnitude sparsity for the TTP baseline.
+    pub ttp_sparsity: f64,
+    /// Calibration percentile for UnIT thresholds.
+    pub calib_pct: f64,
+    /// Percentile of positive activations for the FATReLU cut-off.
+    pub fat_pct: f64,
+    /// Test samples evaluated per mechanism.
+    pub n_eval: usize,
+    /// Extra scale on calibrated thresholds (sweep knob, default 1).
+    pub t_scale: f32,
+    pub seed: u64,
+    pub train_steps: usize,
+}
+
+impl Default for MechOpts {
+    fn default() -> Self {
+        MechOpts {
+            div: DivKind::Shift,
+            ttp_sparsity: 0.5,
+            calib_pct: 20.0,
+            fat_pct: 30.0,
+            n_eval: 150,
+            t_scale: 1.0,
+            seed: 42,
+            // 0 = use the per-model tuned step count.
+            train_steps: 0,
+        }
+    }
+}
+
+/// A trained, calibrated model bundle ready for mechanism evaluation.
+pub struct Prepared {
+    pub def: ModelDef,
+    pub ds: Dataset,
+    pub params: Params,
+    pub params_ttp: Params,
+    pub thresholds: Thresholds,
+    pub thresholds_ttp: Thresholds,
+    pub fat_t: f32,
+}
+
+/// Train (or load cached weights), TTP-prune, and calibrate thresholds.
+pub fn prepare(
+    rt: &Runtime,
+    store: &ArtifactStore,
+    model: &str,
+    opts: &MechOpts,
+) -> Result<Prepared> {
+    let def = zoo(model);
+    let ds = crate::data::by_name(model, opts.seed, crate::data::Sizes::default());
+    let mut tcfg = TrainConfig::for_model(model);
+    if opts.train_steps > 0 {
+        tcfg.steps = opts.train_steps;
+    }
+    let params = ensure_trained(rt, store, model, &ds, &tcfg)?;
+    let params_ttp = apply_global_magnitude(&params, opts.ttp_sparsity);
+    let calib = CalibConfig { percentile: opts.calib_pct, ..Default::default() };
+    let thresholds = calibrate(&def, &params, &ds.val, &calib).scaled(opts.t_scale);
+    let thresholds_ttp = calibrate(&def, &params_ttp, &ds.val, &calib).scaled(opts.t_scale);
+    let fat_t = calibrate_fatrelu(&def, &params, &ds.val, opts.fat_pct, 16);
+    Ok(Prepared { def, ds, params, params_ttp, thresholds, thresholds_ttp, fat_t })
+}
+
+/// The mechanism list of Figs. 5–7 (+ TTP+UnIT from Table 2).
+pub const MECHANISMS: [&str; 6] =
+    ["None", "TTP", "FATReLU", "UnIT", "UnIT+FATReLU", "TTP+UnIT"];
+
+struct MechSetup {
+    label: &'static str,
+    params: ParamsChoice,
+    mode: PruneMode,
+    with_thresholds: bool,
+    with_fat: bool,
+}
+
+enum ParamsChoice {
+    Dense,
+    Ttp,
+}
+
+fn mechanism_setups() -> Vec<MechSetup> {
+    vec![
+        MechSetup {
+            label: "None",
+            params: ParamsChoice::Dense,
+            mode: PruneMode::Dense,
+            with_thresholds: false,
+            with_fat: false,
+        },
+        MechSetup {
+            label: "TTP",
+            params: ParamsChoice::Ttp,
+            mode: PruneMode::StaticSparse,
+            with_thresholds: false,
+            with_fat: false,
+        },
+        MechSetup {
+            label: "FATReLU",
+            params: ParamsChoice::Dense,
+            mode: PruneMode::ZeroSkip,
+            with_thresholds: false,
+            with_fat: true,
+        },
+        MechSetup {
+            label: "UnIT",
+            params: ParamsChoice::Dense,
+            mode: PruneMode::Unit,
+            with_thresholds: true,
+            with_fat: false,
+        },
+        MechSetup {
+            label: "UnIT+FATReLU",
+            params: ParamsChoice::Dense,
+            mode: PruneMode::Unit,
+            with_thresholds: true,
+            with_fat: true,
+        },
+        MechSetup {
+            label: "TTP+UnIT",
+            params: ParamsChoice::Ttp,
+            mode: PruneMode::Unit,
+            with_thresholds: true,
+            with_fat: false,
+        },
+    ]
+}
+
+/// Evaluate all mechanisms on the MCU simulator.
+/// Returns `(unpruned_accuracy, rows)`.
+pub fn run_mcu_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResult>) {
+    let div = opts.div.build();
+    let energy = EnergyModel::default();
+    let n = p.ds.test.len().min(opts.n_eval);
+    let mut rows = Vec::new();
+    for setup in mechanism_setups() {
+        let (params, th) = match setup.params {
+            ParamsChoice::Dense => (&p.params, &p.thresholds),
+            ParamsChoice::Ttp => (&p.params_ttp, &p.thresholds_ttp),
+        };
+        let mut q = QModel::quantize(&p.def, params);
+        if setup.with_thresholds {
+            q = q.with_thresholds(th);
+        }
+        if setup.with_fat {
+            q = q.with_fatrelu(p.fat_t);
+        }
+        let cfg = EngineConfig {
+            mode: setup.mode,
+            div: div.as_ref(),
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+        };
+        let mut hits = 0usize;
+        let mut preds = Vec::with_capacity(n);
+        let mut labels = Vec::with_capacity(n);
+        let mut skip_sum = 0f64;
+        let mut cyc_compute = 0u64;
+        let mut cyc_mem = 0u64;
+        let mut mj = 0f64;
+        for i in 0..n {
+            let xi = q.quantize_input(p.ds.test.sample(i));
+            let out = infer(&q, &xi, &cfg);
+            let pred = out.argmax();
+            if pred == p.ds.test.y[i] {
+                hits += 1;
+            }
+            preds.push(pred);
+            labels.push(p.ds.test.y[i]);
+            skip_sum += out.skip_fraction();
+            cyc_compute += out.ledger.compute_cycles;
+            cyc_mem += out.ledger.mem_cycles;
+            mj += out.ledger.millijoules(&energy);
+        }
+        let nf = n as f64;
+        rows.push(MechanismResult {
+            mechanism: setup.label.to_string(),
+            accuracy: hits as f64 / nf,
+            macro_f1: crate::util::stats::macro_f1(&preds, &labels, p.def.classes),
+            mac_skipped: skip_sum / nf,
+            mcu_secs: cost::cycles_to_secs(cyc_compute + cyc_mem) / nf,
+            compute_secs: cost::cycles_to_secs(cyc_compute) / nf,
+            data_secs: cost::cycles_to_secs(cyc_mem) / nf,
+            energy_mj: mj / nf,
+        });
+    }
+    let baseline = rows[0].accuracy;
+    (baseline, rows)
+}
+
+/// Evaluate all mechanisms on the float engine (widar / desktop).
+pub fn run_float_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResult>) {
+    let n = opts.n_eval;
+    let mut rows = Vec::new();
+    let nl = p.def.layers.len();
+    for setup in mechanism_setups() {
+        let (params, th) = match setup.params {
+            ParamsChoice::Dense => (&p.params, &p.thresholds),
+            ParamsChoice::Ttp => (&p.params_ttp, &p.thresholds_ttp),
+        };
+        let t_vec = if setup.with_thresholds {
+            th.per_layer.clone()
+        } else {
+            vec![0.0; nl]
+        };
+        let fopts =
+            ForwardOpts { t_vec, fat_t: if setup.with_fat { p.fat_t } else { 0.0 } };
+        let r = evaluate_float(&p.def, params, &p.ds.test, &fopts, n);
+        rows.push(MechanismResult {
+            mechanism: setup.label.to_string(),
+            accuracy: r.accuracy,
+            macro_f1: r.macro_f1,
+            mac_skipped: r.mac_skipped,
+            mcu_secs: 0.0,
+            compute_secs: 0.0,
+            data_secs: 0.0,
+            energy_mj: 0.0,
+        });
+    }
+    let baseline = rows[0].accuracy;
+    (baseline, rows)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{mnist_like, Sizes};
+
+    /// Prepared bundle without a training run (random weights) for tests.
+    fn prepared_random() -> Prepared {
+        let def = zoo("mnist");
+        let ds = mnist_like::generate(3, Sizes { train: 8, val: 8, test: 16 });
+        let params = Params::random(&def, 5);
+        let params_ttp = apply_global_magnitude(&params, 0.5);
+        let calib = CalibConfig::default();
+        let thresholds = calibrate(&def, &params, &ds.val, &calib);
+        let thresholds_ttp = calibrate(&def, &params_ttp, &ds.val, &calib);
+        let fat_t = calibrate_fatrelu(&def, &params, &ds.val, 30.0, 4);
+        Prepared { def, ds, params, params_ttp, thresholds, thresholds_ttp, fat_t }
+    }
+
+    #[test]
+    fn mcu_mechanism_ordering_holds() {
+        let p = prepared_random();
+        let opts = MechOpts { n_eval: 6, ..Default::default() };
+        let (_base, rows) = run_mcu_dataset(&p, &opts);
+        assert_eq!(rows.len(), MECHANISMS.len());
+        let by = |name: &str| rows.iter().find(|r| r.mechanism == name).unwrap().clone();
+        // The paper's cost ordering: UnIT cheaper than unpruned; TTP+UnIT
+        // skips the most MACs.
+        assert!(by("UnIT").mcu_secs < by("None").mcu_secs);
+        assert!(by("UnIT").energy_mj < by("None").energy_mj);
+        assert!(by("TTP+UnIT").mac_skipped >= by("UnIT").mac_skipped);
+        assert!(by("TTP+UnIT").mac_skipped >= by("TTP").mac_skipped);
+        // Unpruned executes everything.
+        assert_eq!(by("None").mac_skipped, 0.0);
+    }
+
+    #[test]
+    fn float_mechanisms_run_and_skip() {
+        let p = prepared_random();
+        let opts = MechOpts { n_eval: 4, ..Default::default() };
+        let (_base, rows) = run_float_dataset(&p, &opts);
+        let by = |name: &str| rows.iter().find(|r| r.mechanism == name).unwrap().clone();
+        assert!(by("UnIT").mac_skipped > 0.0);
+        assert!(by("TTP").mac_skipped > 0.3); // ~50% weights zeroed
+    }
+}

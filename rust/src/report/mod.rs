@@ -1,0 +1,109 @@
+//! Experiment reporting: paper-style result rows shared by the benches
+//! and EXPERIMENTS.md.
+
+pub mod experiments;
+
+use crate::util::table::{f, pct, Table};
+
+/// One mechanism's result on one dataset (the Fig. 5/6/7 row unit).
+#[derive(Debug, Clone)]
+pub struct MechanismResult {
+    pub mechanism: String,
+    pub accuracy: f64,
+    pub macro_f1: f64,
+    pub mac_skipped: f64,
+    pub mcu_secs: f64,
+    pub compute_secs: f64,
+    pub data_secs: f64,
+    pub energy_mj: f64,
+}
+
+/// Render a Fig. 5-style table (accuracy vs remaining MACs).
+pub fn fig5_table(dataset: &str, baseline_acc: f64, rows: &[MechanismResult]) -> String {
+    let mut t = Table::new(vec![
+        "mechanism",
+        "accuracy",
+        "acc drop",
+        "MACs skipped",
+        "MACs remaining",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.mechanism.clone(),
+            pct(r.accuracy),
+            format!("{:+.2}%", 100.0 * (baseline_acc - r.accuracy)),
+            pct(r.mac_skipped),
+            pct(1.0 - r.mac_skipped),
+        ]);
+    }
+    format!("## Fig.5 [{dataset}]\n{}", t.render())
+}
+
+/// Render a Fig. 6-style table (runtime incl. data movement).
+pub fn fig6_table(dataset: &str, rows: &[MechanismResult]) -> String {
+    let mut t = Table::new(vec!["mechanism", "total s", "compute s", "data-move s"]);
+    for r in rows {
+        t.row(vec![
+            r.mechanism.clone(),
+            f(r.mcu_secs, 3),
+            f(r.compute_secs, 3),
+            f(r.data_secs, 3),
+        ]);
+    }
+    format!("## Fig.6 [{dataset}]\n{}", t.render())
+}
+
+/// Render a Fig. 7-style table (energy).
+pub fn fig7_table(dataset: &str, rows: &[MechanismResult]) -> String {
+    let mut t = Table::new(vec!["mechanism", "energy mJ"]);
+    for r in rows {
+        t.row(vec![r.mechanism.clone(), f(r.energy_mj, 3)]);
+    }
+    format!("## Fig.7 [{dataset}]\n{}", t.render())
+}
+
+/// Render a Table 2-style block (cross-context F1 + MAC skipped).
+pub fn table2(rows: &[(String, String, String, f64, f64)]) -> String {
+    let mut t = Table::new(vec!["train ctx", "test ctx", "mechanism", "F1", "MAC skipped"]);
+    for (tr, te, mech, f1, skip) in rows {
+        t.row(vec![tr.clone(), te.clone(), mech.clone(), f(*f1, 4), pct(*skip)]);
+    }
+    format!("## Table 2 [widar cross-context]\n{}", t.render())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_row() -> MechanismResult {
+        MechanismResult {
+            mechanism: "UnIT".into(),
+            accuracy: 0.91,
+            macro_f1: 0.9,
+            mac_skipped: 0.62,
+            mcu_secs: 1.5,
+            compute_secs: 0.9,
+            data_secs: 0.6,
+            energy_mj: 0.8,
+        }
+    }
+
+    #[test]
+    fn tables_render_all_mechanisms() {
+        let rows = vec![sample_row()];
+        let s5 = fig5_table("mnist", 0.95, &rows);
+        assert!(s5.contains("UnIT") && s5.contains("62.00%"));
+        let s6 = fig6_table("mnist", &rows);
+        assert!(s6.contains("1.500"));
+        let s7 = fig7_table("mnist", &rows);
+        assert!(s7.contains("0.800"));
+    }
+
+    #[test]
+    fn table2_renders() {
+        let rows =
+            vec![("room1".into(), "room2".into(), "UnIT".into(), 0.7016, 0.6186)];
+        let s = table2(&rows);
+        assert!(s.contains("0.7016") && s.contains("61.86%"));
+    }
+}

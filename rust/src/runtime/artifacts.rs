@@ -1,0 +1,101 @@
+//! Artifact path resolution and manifest-driven executable loading.
+//!
+//! Artifacts live in `artifacts/` (or `$UNIT_ARTIFACTS`):
+//!
+//! * `<ds>_fwd_b{1,8}.hlo.txt` — inference graphs,
+//! * `<ds>_train_b32.hlo.txt` — one SGD+momentum step,
+//! * `<ds>_manifest.txt` — parameter ABI,
+//! * `weights/<ds>.bin` — trained parameters (written by the trainer).
+
+use anyhow::{Context, Result};
+use std::path::PathBuf;
+
+use super::pjrt::{Executable, Runtime};
+use crate::models::Manifest;
+
+/// Resolves artifact paths and loads executables with the right shapes.
+pub struct ArtifactStore {
+    pub dir: PathBuf,
+}
+
+impl ArtifactStore {
+    /// Default store: `$UNIT_ARTIFACTS` or `./artifacts` (walking up one
+    /// level if invoked from a subdirectory, as cargo test/bench do).
+    pub fn discover() -> ArtifactStore {
+        if let Ok(d) = std::env::var("UNIT_ARTIFACTS") {
+            return ArtifactStore { dir: PathBuf::from(d) };
+        }
+        for cand in ["artifacts", "../artifacts", "../../artifacts"] {
+            let p = PathBuf::from(cand);
+            if p.is_dir() {
+                return ArtifactStore { dir: p };
+            }
+        }
+        ArtifactStore { dir: PathBuf::from("artifacts") }
+    }
+
+    pub fn manifest(&self, model: &str) -> Result<Manifest> {
+        Manifest::load(&self.dir.join(format!("{model}_manifest.txt")))
+    }
+
+    pub fn weights_path(&self, model: &str) -> PathBuf {
+        self.dir.join("weights").join(format!("{model}.bin"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> PathBuf {
+        self.dir.join(format!("{name}.hlo.txt"))
+    }
+
+    /// Load the forward executable at the given batch size.
+    /// Args: params… (from manifest), x `(B,C,H,W)`, t_vec `(L,)`, fat_t scalar.
+    pub fn load_fwd(&self, rt: &Runtime, model: &str, batch: usize) -> Result<Executable> {
+        let m = self.manifest(model)?;
+        let mut shapes: Vec<Vec<usize>> = m.params.iter().map(|(_, s)| s.clone()).collect();
+        let [c, h, w] = m.input_shape;
+        shapes.push(vec![batch, c, h, w]);
+        shapes.push(vec![m.prunable]);
+        shapes.push(vec![]);
+        self.load(rt, &format!("{model}_fwd_b{batch}"), shapes)
+    }
+
+    /// Load the train-step executable (batch 32).
+    /// Args: params…, momenta…, x `(32,C,H,W)`, y `(32,K)`, lr scalar.
+    pub fn load_train(&self, rt: &Runtime, model: &str) -> Result<Executable> {
+        let m = self.manifest(model)?;
+        let pshapes: Vec<Vec<usize>> = m.params.iter().map(|(_, s)| s.clone()).collect();
+        let mut shapes = pshapes.clone();
+        shapes.extend(pshapes);
+        let [c, h, w] = m.input_shape;
+        shapes.push(vec![32, c, h, w]);
+        shapes.push(vec![32, m.classes]);
+        shapes.push(vec![]);
+        self.load(rt, &format!("{model}_train_b32"), shapes)
+    }
+
+    fn load(&self, rt: &Runtime, name: &str, shapes: Vec<Vec<usize>>) -> Result<Executable> {
+        let path = self.hlo_path(name);
+        rt.load_hlo(&path, shapes)
+            .with_context(|| format!("loading artifact {name} (run `make artifacts`?)"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::Path;
+
+    #[test]
+    fn discover_prefers_env() {
+        std::env::set_var("UNIT_ARTIFACTS", "/tmp/somewhere");
+        let s = ArtifactStore::discover();
+        assert_eq!(s.dir, PathBuf::from("/tmp/somewhere"));
+        std::env::remove_var("UNIT_ARTIFACTS");
+    }
+
+    #[test]
+    fn path_shapes() {
+        let s = ArtifactStore { dir: PathBuf::from("/a") };
+        assert_eq!(s.hlo_path("mnist_fwd_b1"), Path::new("/a/mnist_fwd_b1.hlo.txt"));
+        assert_eq!(s.weights_path("kws"), Path::new("/a/weights/kws.bin"));
+    }
+}

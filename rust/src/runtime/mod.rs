@@ -1,0 +1,13 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and executes them on the in-process CPU
+//! client via the `xla` crate.
+//!
+//! This is the only bridge between layers 2/1 (JAX/Pallas, build-time)
+//! and layer 3 (Rust, runtime). Python never runs here — the artifacts
+//! are plain text files compiled by XLA's C++ at load time.
+
+pub mod artifacts;
+pub mod pjrt;
+
+pub use artifacts::ArtifactStore;
+pub use pjrt::{Executable, Runtime};

@@ -1,0 +1,96 @@
+//! Thin wrapper around the `xla` crate's PJRT CPU client.
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): jax
+//! ≥ 0.5 serialized protos carry 64-bit instruction ids that
+//! xla_extension 0.5.1 rejects; the text parser reassigns ids (see
+//! /opt/xla-example/README.md). All exported computations return a
+//! tuple (lowered with `return_tuple=True`), decomposed with
+//! `Literal::to_tuple`.
+
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A live PJRT CPU client.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+/// One compiled computation plus its input shape signature.
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Dims per input parameter (row-major; `[]` = scalar).
+    pub arg_shapes: Vec<Vec<usize>>,
+}
+
+impl Runtime {
+    /// Create the in-process CPU client (one per process is plenty).
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile an HLO text artifact.
+    ///
+    /// `arg_shapes` declares the parameter shapes in order (needed to
+    /// build input literals; the manifest provides them).
+    pub fn load_hlo(&self, path: &Path, arg_shapes: Vec<Vec<usize>>) -> Result<Executable> {
+        let path_str = path.to_str().context("non-utf8 path")?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {path:?}"))?;
+        Ok(Executable { exe, arg_shapes })
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs matching the declared shapes; returns the
+    /// decomposed output tuple as flat f32 vectors.
+    pub fn run_f32(&self, args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            args.len() == self.arg_shapes.len(),
+            "arity mismatch: {} args vs {} declared",
+            args.len(),
+            self.arg_shapes.len()
+        );
+        let mut literals = Vec::with_capacity(args.len());
+        for (a, shape) in args.iter().zip(&self.arg_shapes) {
+            let expect: usize = shape.iter().product();
+            anyhow::ensure!(
+                a.len() == expect,
+                "arg length {} vs shape {:?}",
+                a.len(),
+                shape
+            );
+            let lit = if shape.is_empty() {
+                xla::Literal::from(a[0])
+            } else {
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                xla::Literal::vec1(a).reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        let parts = result.to_tuple()?;
+        parts
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(Into::into))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // PJRT integration tests live in rust/tests/pjrt_roundtrip.rs (they
+    // need the artifacts directory); here we only check client creation
+    // so `cargo test --lib` stays artifact-free.
+    #[test]
+    fn cpu_client_comes_up() {
+        let rt = super::Runtime::cpu().unwrap();
+        assert_eq!(rt.platform(), "cpu");
+    }
+}

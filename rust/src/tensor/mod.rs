@@ -1,0 +1,117 @@
+//! Minimal owned tensors for the float reference path and data pipeline.
+//!
+//! The MCU engine works on raw slices for speed; this type exists for
+//! ergonomic shape-checked code in the float layers, dataset generators
+//! and the PJRT bridge.
+
+/// Dense row-major tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        let n: usize = shape.iter().product();
+        Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    pub fn rank(&self) -> usize {
+        self.shape.len()
+    }
+
+    /// Row-major strides.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Flatten to 1-D (no copy semantics change; shape only).
+    pub fn flattened(mut self) -> Tensor {
+        self.shape = vec![self.data.len()];
+        self
+    }
+
+    /// 3-D index (C,H,W).
+    #[inline]
+    pub fn at3(&self, c: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 3);
+        let (_, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        self.data[(c * hh + h) * ww + w]
+    }
+
+    /// Mutable 3-D index.
+    #[inline]
+    pub fn at3_mut(&mut self, c: usize, h: usize, w: usize) -> &mut f32 {
+        let (_, hh, ww) = (self.shape[0], self.shape[1], self.shape[2]);
+        &mut self.data[(c * hh + h) * ww + w]
+    }
+
+    /// 4-D index (O,I,H,W) — weight layout.
+    #[inline]
+    pub fn at4(&self, o: usize, i: usize, h: usize, w: usize) -> f32 {
+        debug_assert_eq!(self.rank(), 4);
+        let (_, ii, hh, ww) = (self.shape[0], self.shape[1], self.shape[2], self.shape[3]);
+        self.data[((o * ii + i) * hh + h) * ww + w]
+    }
+
+    pub fn max_abs(&self) -> f32 {
+        self.data.iter().fold(0f32, |m, &v| m.max(v.abs()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_shape() {
+        let t = Tensor::zeros(&[2, 3, 4]);
+        assert_eq!(t.len(), 24);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+    }
+
+    #[test]
+    fn indexing_3d_row_major() {
+        let t = Tensor::from_vec(&[2, 2, 3], (0..12).map(|i| i as f32).collect());
+        assert_eq!(t.at3(0, 0, 0), 0.0);
+        assert_eq!(t.at3(0, 1, 2), 5.0);
+        assert_eq!(t.at3(1, 0, 0), 6.0);
+        assert_eq!(t.at3(1, 1, 2), 11.0);
+    }
+
+    #[test]
+    fn indexing_4d() {
+        let t = Tensor::from_vec(&[2, 1, 2, 2], (0..8).map(|i| i as f32).collect());
+        assert_eq!(t.at4(1, 0, 1, 1), 7.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn from_vec_checks_len() {
+        Tensor::from_vec(&[2, 2], vec![1.0]);
+    }
+
+    #[test]
+    fn max_abs() {
+        let t = Tensor::from_vec(&[3], vec![-5.0, 2.0, 4.0]);
+        assert_eq!(t.max_abs(), 5.0);
+    }
+}

@@ -1,0 +1,75 @@
+//! Evaluation helpers: accuracy / macro-F1 / MAC statistics over a split
+//! using the float forward pass (the paper's desktop-platform numbers)
+//! — the MCU-platform equivalents come from [`crate::engine`].
+
+use crate::data::Split;
+use crate::models::{ModelDef, Params};
+use crate::nn::{forward, ForwardOpts, ForwardStats};
+use crate::util::stats::{accuracy, argmax, macro_f1};
+
+/// Aggregated evaluation result.
+#[derive(Debug, Clone)]
+pub struct EvalResult {
+    pub accuracy: f64,
+    pub macro_f1: f64,
+    /// Fraction of MACs skipped across the whole split.
+    pub mac_skipped: f64,
+    /// Per-layer aggregate stats.
+    pub stats: ForwardStats,
+    pub n: usize,
+}
+
+/// Evaluate `params` on up to `max_samples` of `split` under `opts`.
+pub fn evaluate_float(
+    def: &ModelDef,
+    params: &Params,
+    split: &Split,
+    opts: &ForwardOpts,
+    max_samples: usize,
+) -> EvalResult {
+    let n = split.len().min(max_samples);
+    assert!(n > 0, "empty eval split");
+    let mut preds = Vec::with_capacity(n);
+    let mut labels = Vec::with_capacity(n);
+    let mut agg = ForwardStats::default();
+    for i in 0..n {
+        let (logits, stats) = forward(def, params, split.sample(i), opts);
+        preds.push(argmax(&logits));
+        labels.push(split.y[i]);
+        agg.merge(&stats);
+    }
+    EvalResult {
+        accuracy: accuracy(&preds, &labels),
+        macro_f1: macro_f1(&preds, &labels, def.classes),
+        mac_skipped: agg.skip_fraction(),
+        stats: agg,
+        n,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::{mnist_like, Sizes};
+    use crate::models::zoo;
+
+    #[test]
+    fn random_model_near_chance() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 1);
+        let ds = mnist_like::generate(2, Sizes { train: 4, val: 4, test: 40 });
+        let r = evaluate_float(&def, &params, &ds.test, &ForwardOpts::dense(3), 40);
+        assert!(r.accuracy < 0.5, "untrained model suspiciously good: {}", r.accuracy);
+        assert_eq!(r.n, 40);
+    }
+
+    #[test]
+    fn skip_fraction_rises_with_threshold() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 2);
+        let ds = mnist_like::generate(3, Sizes { train: 4, val: 4, test: 10 });
+        let lo = evaluate_float(&def, &params, &ds.test, &ForwardOpts::unit(vec![0.01; 3]), 10);
+        let hi = evaluate_float(&def, &params, &ds.test, &ForwardOpts::unit(vec![0.5; 3]), 10);
+        assert!(hi.mac_skipped > lo.mac_skipped);
+    }
+}

@@ -1,0 +1,8 @@
+//! Training driver: runs the AOT `train_<ds>` HLO step in a loop from
+//! Rust (Python stays build-time only) and caches trained weights.
+
+pub mod eval;
+pub mod trainer;
+
+pub use eval::{evaluate_float, EvalResult};
+pub use trainer::{ensure_trained, ensure_trained_tagged, train, TrainConfig};

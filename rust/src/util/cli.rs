@@ -1,0 +1,104 @@
+//! Minimal command-line parser (the vendored crate set has no clap).
+//!
+//! Supports `--key value`, `--key=value`, bare `--flag`, and positional
+//! arguments, which is all the binaries in this repo need.
+
+use std::collections::HashMap;
+
+/// Parsed command line: positionals plus a key→value map.
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    flags: HashMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw arguments (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Args {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the current process's arguments.
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn key_value_forms() {
+        let a = parse(&["--model", "mnist", "--steps=300", "run"]);
+        assert_eq!(a.get("model"), Some("mnist"));
+        assert_eq!(a.usize_or("steps", 0), 300);
+        assert_eq!(a.positional, vec!["run"]);
+    }
+
+    #[test]
+    fn bare_flag() {
+        let a = parse(&["--verbose", "--out", "x.txt"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("out"), Some("x.txt"));
+    }
+
+    #[test]
+    fn trailing_bare_flag() {
+        let a = parse(&["cmd", "--debug"]);
+        assert!(a.flag("debug"));
+        assert_eq!(a.positional, vec!["cmd"]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.get_or("model", "mnist"), "mnist");
+        assert_eq!(a.f64_or("lr", 0.05), 0.05);
+        assert!(!a.flag("missing"));
+    }
+}

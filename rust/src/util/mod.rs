@@ -1,0 +1,10 @@
+//! Small self-contained utilities (the vendored crate set has no clap /
+//! serde / proptest / criterion, so these are hand-rolled).
+
+pub mod cli;
+pub mod prop;
+pub mod rng;
+pub mod stats;
+pub mod table;
+
+pub use rng::Rng;

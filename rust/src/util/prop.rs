@@ -1,0 +1,100 @@
+//! Mini property-based testing harness (proptest is not in the vendored
+//! crate set).
+//!
+//! `check(seed, cases, |g| { ... })` runs a closure over `cases` generated
+//! inputs drawn from a seeded [`Gen`]; on failure the failing case index
+//! and seed are reported so the case can be replayed deterministically.
+
+use crate::util::Rng;
+
+/// Case generator handed to property closures.
+pub struct Gen {
+    rng: Rng,
+    pub case: usize,
+}
+
+impl Gen {
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        lo + self.rng.below((hi - lo + 1) as u64) as usize
+    }
+
+    pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
+        lo + self.rng.below((hi - lo + 1) as u64) as i32
+    }
+
+    pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
+        lo + self.rng.below((hi - lo + 1) as u64) as u32
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.range(lo, hi)
+    }
+
+    pub fn normal(&mut self) -> f32 {
+        self.rng.normal()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.chance(0.5)
+    }
+
+    pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..len).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
+        (0..len).map(|_| self.normal()).collect()
+    }
+}
+
+/// Run `cases` property checks. The closure should panic (e.g. via
+/// `assert!`) on a violated property.
+pub fn check<F: FnMut(&mut Gen)>(seed: u64, cases: usize, mut prop: F) {
+    let mut root = Rng::new(seed);
+    for case in 0..cases {
+        let rng = root.fork(case as u64);
+        let mut g = Gen { rng, case };
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| prop(&mut g)));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property failed at case {case} (seed {seed}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(1, 50, |g| {
+            let x = g.i32_in(-100, 100);
+            assert!(x >= -100 && x <= 100);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed at case")]
+    fn reports_failing_case() {
+        check(2, 50, |g| {
+            let x = g.usize_in(0, 10);
+            assert!(x < 10, "x was {x}");
+        });
+    }
+
+    #[test]
+    fn generator_ranges() {
+        check(3, 100, |g| {
+            let v = g.f32_in(-2.0, 2.0);
+            assert!((-2.0..2.0).contains(&v));
+            let u = g.u32_in(5, 9);
+            assert!((5..=9).contains(&u));
+        });
+    }
+}

@@ -1,0 +1,160 @@
+//! Quantiles, means and accuracy helpers used by calibration and metrics.
+
+/// Percentile (0..=100) by nearest-rank on a copy of the data.
+/// Used by the calibration pass: the paper computes per-layer thresholds
+/// as a fixed percentile (e.g. 20th) of |activation·weight| products.
+pub fn percentile(xs: &[f32], p: f64) -> f32 {
+    assert!(!xs.is_empty(), "percentile of empty slice");
+    assert!((0.0..=100.0).contains(&p));
+    let mut v: Vec<f32> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = ((p / 100.0) * (v.len() as f64 - 1.0)).round() as usize;
+    v[rank.min(v.len() - 1)]
+}
+
+/// Streaming reservoir of up to `cap` samples for quantile estimation
+/// without unbounded memory (calibration over large activation sets).
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    buf: Vec<f32>,
+    rng: crate::util::Rng,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize, seed: u64) -> Self {
+        Reservoir { cap, seen: 0, buf: Vec::with_capacity(cap), rng: crate::util::Rng::new(seed) }
+    }
+
+    pub fn push(&mut self, x: f32) {
+        self.seen += 1;
+        if self.buf.len() < self.cap {
+            self.buf.push(x);
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.buf[j as usize] = x;
+            }
+        }
+    }
+
+    pub fn percentile(&self, p: f64) -> f32 {
+        percentile(&self.buf, p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+}
+
+pub fn mean(xs: &[f32]) -> f32 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f32>() / xs.len() as f32
+}
+
+/// Classification accuracy from (prediction, label) pairs.
+pub fn accuracy(pred: &[usize], label: &[usize]) -> f64 {
+    assert_eq!(pred.len(), label.len());
+    if pred.is_empty() {
+        return 0.0;
+    }
+    let hits = pred.iter().zip(label).filter(|(p, l)| p == l).count();
+    hits as f64 / pred.len() as f64
+}
+
+/// Macro-averaged F1 over `k` classes (Table 2 metric).
+pub fn macro_f1(pred: &[usize], label: &[usize], k: usize) -> f64 {
+    assert_eq!(pred.len(), label.len());
+    let mut tp = vec![0f64; k];
+    let mut fp = vec![0f64; k];
+    let mut fnn = vec![0f64; k];
+    for (&p, &l) in pred.iter().zip(label) {
+        if p == l {
+            tp[p] += 1.0;
+        } else {
+            fp[p] += 1.0;
+            fnn[l] += 1.0;
+        }
+    }
+    let mut f1 = 0.0;
+    for c in 0..k {
+        let prec = if tp[c] + fp[c] > 0.0 { tp[c] / (tp[c] + fp[c]) } else { 0.0 };
+        let rec = if tp[c] + fnn[c] > 0.0 { tp[c] / (tp[c] + fnn[c]) } else { 0.0 };
+        f1 += if prec + rec > 0.0 { 2.0 * prec * rec / (prec + rec) } else { 0.0 };
+    }
+    f1 / k as f64
+}
+
+/// argmax with deterministic tie-break (lowest index).
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut best = 0;
+    for (i, &x) in xs.iter().enumerate() {
+        if x > xs[best] {
+            best = i;
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_basic() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile(&xs, 0.0), 1.0);
+        assert_eq!(percentile(&xs, 50.0), 3.0);
+        assert_eq!(percentile(&xs, 100.0), 5.0);
+    }
+
+    #[test]
+    fn percentile_20th_of_uniform() {
+        let xs: Vec<f32> = (0..101).map(|i| i as f32).collect();
+        assert_eq!(percentile(&xs, 20.0), 20.0);
+    }
+
+    #[test]
+    fn reservoir_exact_when_under_cap() {
+        let mut r = Reservoir::new(100, 1);
+        for i in 0..50 {
+            r.push(i as f32);
+        }
+        assert_eq!(r.len(), 50);
+        assert_eq!(r.percentile(100.0), 49.0);
+    }
+
+    #[test]
+    fn reservoir_approximates_quantile() {
+        let mut r = Reservoir::new(2000, 2);
+        for i in 0..100_000 {
+            r.push((i % 1000) as f32);
+        }
+        let p50 = r.percentile(50.0);
+        assert!((p50 - 500.0).abs() < 60.0, "p50={p50}");
+    }
+
+    #[test]
+    fn f1_perfect_and_worst() {
+        let a = [0usize, 1, 2, 0, 1, 2];
+        assert!((macro_f1(&a, &a, 3) - 1.0).abs() < 1e-9);
+        let b = [1usize, 2, 0, 1, 2, 0];
+        assert!(macro_f1(&a, &b, 3) < 1e-9);
+    }
+
+    #[test]
+    fn accuracy_half() {
+        assert_eq!(accuracy(&[0, 1, 0, 1], &[0, 1, 1, 0]), 0.5);
+    }
+
+    #[test]
+    fn argmax_tiebreak_low_index() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0]), 1);
+    }
+}

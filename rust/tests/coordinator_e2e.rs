@@ -1,0 +1,99 @@
+//! Integration: the serving coordinator end-to-end — no request lost,
+//! FIFO batching, correct predictions vs direct engine calls, clean
+//! shutdown under load, and the PJRT backend (artifact-gated).
+
+use std::time::Duration;
+
+use unit_pruner::approx::{DivExact, DivKind};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{mnist_like, Sizes};
+use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::runtime::ArtifactStore;
+
+fn setup() -> (QModel, unit_pruner::data::Dataset) {
+    let def = zoo("mnist");
+    let params = Params::random(&def, 21);
+    let th = Thresholds::uniform(3, 0.2);
+    let q = QModel::quantize(&def, &params).with_thresholds(&th);
+    let ds = mnist_like::generate(9, Sizes { train: 4, val: 4, test: 24 });
+    (q, ds)
+}
+
+#[test]
+fn coordinator_matches_direct_engine_calls() {
+    let (q, ds) = setup();
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Exact },
+        ServeConfig { workers: 2, ..Default::default() },
+    );
+    let rxs: Vec<_> = (0..ds.test.len()).map(|i| coord.submit(ds.test.sample(i).to_vec())).collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap();
+        let direct = infer(&q, &q.quantize_input(ds.test.sample(i)), &EngineConfig::unit(&DivExact));
+        assert_eq!(resp.predicted, direct.argmax(), "sample {i}");
+        assert!((resp.mac_skipped - direct.skip_fraction()).abs() < 1e-12);
+    }
+    coord.shutdown();
+}
+
+#[test]
+fn hundreds_of_requests_none_lost() {
+    let (q, ds) = setup();
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+        ServeConfig { workers: 4, ..Default::default() },
+    );
+    let n = 300usize;
+    let rxs: Vec<_> = (0..n).map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec())).collect();
+    let mut ids = std::collections::HashSet::new();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert!(ids.insert(resp.id), "duplicate response id {}", resp.id);
+    }
+    assert_eq!(ids.len(), n);
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.served, n as u64);
+    coord.shutdown();
+}
+
+#[test]
+fn shutdown_with_empty_queue_is_clean() {
+    let (q, _ds) = setup();
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Exact },
+        ServeConfig::default(),
+    );
+    coord.shutdown(); // no requests ever submitted
+}
+
+#[test]
+fn pjrt_backend_serves_batches() {
+    let store = ArtifactStore::discover();
+    if !store.dir.join(".stamp").is_file() {
+        panic!("artifacts missing at {:?} — run `make artifacts` first", store.dir);
+    }
+    let def = zoo("mnist");
+    let params = Params::random(&def, 23);
+    let ds = mnist_like::generate(10, Sizes { train: 4, val: 4, test: 16 });
+    let coord = Coordinator::start(
+        BackendChoice::Pjrt {
+            model: "mnist".into(),
+            params,
+            t_vec: vec![0.0; 3],
+            fat_t: 0.0,
+        },
+        ServeConfig { workers: 1, max_batch: 8, max_wait: Duration::from_millis(5) },
+    );
+    let rxs: Vec<_> = (0..16).map(|i| coord.submit(ds.test.sample(i).to_vec())).collect();
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.logits.len(), 10);
+        assert!(resp.logits.iter().all(|v| v.is_finite()));
+    }
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.served, 16);
+    assert!(snap.mean_batch > 1.0, "batching never engaged: {}", snap.mean_batch);
+    coord.shutdown();
+}

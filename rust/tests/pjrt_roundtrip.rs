@@ -1,0 +1,133 @@
+//! Cross-layer integration: the AOT HLO artifacts (Layer 1 Pallas
+//! kernels inside the Layer 2 JAX graphs) must load through PJRT and
+//! agree numerically with the Rust float engine.
+//!
+//! Requires `make artifacts` (the Makefile's `test` target guarantees
+//! it).
+
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::nn::{forward, ForwardOpts};
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+
+fn artifacts_ready(store: &ArtifactStore) -> bool {
+    store.dir.join(".stamp").is_file()
+}
+
+#[test]
+fn fwd_artifact_matches_rust_float_engine_dense_and_pruned() {
+    let store = ArtifactStore::discover();
+    assert!(
+        artifacts_ready(&store),
+        "artifacts missing at {:?} — run `make artifacts` first",
+        store.dir
+    );
+    let rt = Runtime::cpu().unwrap();
+    // mnist + cifar cover both conv configs; kws exercised in the e2e
+    // example (its pallas linear HLO is big, keep test time bounded).
+    for model in ["mnist", "cifar"] {
+        let def = zoo(model);
+        let params = Params::random(&def, 11);
+        let exe = store.load_fwd(&rt, model, 1).unwrap();
+        let flat = params.flat_order();
+        // Dense (T=0) and pruned (T=0.15) must both match.
+        for t in [0.0f32, 0.15] {
+            let t_vec = vec![t; def.layers.len()];
+            let fat = [0.0f32];
+            let x: Vec<f32> = (0..def.input_len())
+                .map(|i| (((i * 37) % 41) as f32 - 20.0) / 13.0)
+                .collect();
+            let mut args = flat.clone();
+            args.push(&x);
+            args.push(&t_vec);
+            args.push(&fat);
+            let got = &exe.run_f32(&args).unwrap()[0];
+            let (want, _) =
+                forward(&def, &params, &x, &ForwardOpts { t_vec: t_vec.clone(), fat_t: 0.0 });
+            assert_eq!(got.len(), want.len());
+            for (a, b) in got.iter().zip(&want) {
+                assert!(
+                    (a - b).abs() < 1e-3,
+                    "{model} t={t}: pjrt {a} vs rust {b}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn fwd_artifact_fatrelu_threshold_respected() {
+    let store = ArtifactStore::discover();
+    assert!(artifacts_ready(&store), "run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+    let def = zoo("mnist");
+    let params = Params::random(&def, 13);
+    let exe = store.load_fwd(&rt, "mnist", 1).unwrap();
+    let flat = params.flat_order();
+    let t_vec = vec![0.0f32; 3];
+    let x: Vec<f32> = (0..def.input_len()).map(|i| ((i % 11) as f32 - 5.0) / 5.0).collect();
+    let run = |fat_t: f32| {
+        let fat = [fat_t];
+        let mut args = flat.clone();
+        args.push(&x);
+        args.push(&t_vec);
+        args.push(&fat);
+        exe.run_f32(&args).unwrap()[0].clone()
+    };
+    let plain = run(0.0);
+    let fat = run(0.5);
+    // FATReLU changes the result (some activations get truncated)…
+    assert_ne!(plain, fat);
+    // …and matches the Rust engine under the same cut-off.
+    let (want, _) = forward(&def, &params, &x, &ForwardOpts { t_vec, fat_t: 0.5 });
+    for (a, b) in fat.iter().zip(&want) {
+        assert!((a - b).abs() < 1e-3, "pjrt {a} vs rust {b}");
+    }
+}
+
+#[test]
+fn batch8_artifact_consistent_with_batch1() {
+    let store = ArtifactStore::discover();
+    assert!(artifacts_ready(&store), "run `make artifacts`");
+    let rt = Runtime::cpu().unwrap();
+    let def = zoo("mnist");
+    let params = Params::random(&def, 17);
+    let e1 = store.load_fwd(&rt, "mnist", 1).unwrap();
+    let e8 = store.load_fwd(&rt, "mnist", 8).unwrap();
+    let flat = params.flat_order();
+    let t_vec = vec![0.05f32; 3];
+    let fat = [0.0f32];
+    let xs: Vec<Vec<f32>> = (0..8)
+        .map(|s| {
+            (0..def.input_len())
+                .map(|i| (((i + 97 * s) % 23) as f32 - 11.0) / 9.0)
+                .collect()
+        })
+        .collect();
+    let bx: Vec<f32> = xs.iter().flatten().copied().collect();
+    let mut args8 = flat.clone();
+    args8.push(&bx);
+    args8.push(&t_vec);
+    args8.push(&fat);
+    let out8 = &e8.run_f32(&args8).unwrap()[0];
+    for (s, x) in xs.iter().enumerate() {
+        let mut args1 = flat.clone();
+        args1.push(x);
+        args1.push(&t_vec);
+        args1.push(&fat);
+        let out1 = &e1.run_f32(&args1).unwrap()[0];
+        for (j, v) in out1.iter().enumerate() {
+            let v8 = out8[s * def.classes + j];
+            assert!((v - v8).abs() < 1e-4, "sample {s} logit {j}: {v} vs {v8}");
+        }
+    }
+}
+
+#[test]
+fn manifests_consistent_with_zoo() {
+    let store = ArtifactStore::discover();
+    assert!(artifacts_ready(&store), "run `make artifacts`");
+    for model in unit_pruner::models::MODEL_NAMES {
+        let m = store.manifest(model).unwrap();
+        m.check_against(&zoo(model)).unwrap();
+    }
+}

@@ -1,0 +1,31 @@
+//! Integration: the PJRT training path — the exported train-step HLO
+//! must load, run, and reduce the loss on synthetic data (artifact-
+//! gated; `make test` builds artifacts first).
+
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::nn::ForwardOpts;
+use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::train::{evaluate_float, train, TrainConfig};
+
+#[test]
+fn train_step_artifact_reduces_loss_and_lifts_accuracy() {
+    let store = ArtifactStore::discover();
+    assert!(
+        store.dir.join(".stamp").is_file(),
+        "artifacts missing at {:?} — run `make artifacts` first",
+        store.dir
+    );
+    let rt = Runtime::cpu().unwrap();
+    let ds = by_name("mnist", 1234, Sizes { train: 256, val: 32, test: 64 });
+    let cfg = TrainConfig { steps: 60, lr: 0.05, seed: 5, log_every: 0, lr_decay: false };
+    let (params, losses) = train(&rt, &store, "mnist", &ds, &cfg).unwrap();
+    assert_eq!(losses.len(), 60);
+    // loss must drop hard on this easy synthetic set
+    let head: f32 = losses[..5].iter().sum::<f32>() / 5.0;
+    let tail: f32 = losses[55..].iter().sum::<f32>() / 5.0;
+    assert!(tail < head * 0.7, "loss did not improve: {head} -> {tail}");
+    // trained model beats chance clearly
+    let def = unit_pruner::models::zoo("mnist");
+    let r = evaluate_float(&def, &params, &ds.test, &ForwardOpts::dense(3), 64);
+    assert!(r.accuracy > 0.3, "accuracy after 60 steps: {}", r.accuracy);
+}
