@@ -1,13 +1,20 @@
 //! L3 hot-path microbenchmarks (the §Perf harness in EXPERIMENTS.md):
 //!
 //! * engine throughput — simulated connections per host-second, per
-//!   pruning mode (the inner-loop cost of the whole simulator);
+//!   pruning mode, for BOTH backends: the naive reference loops and the
+//!   prepacked execution plans (`engine::plan`). The planned Unit path
+//!   is the serving hot path; the acceptance bar is ≥ 2× naive Unit.
 //! * division estimators — host ns/op;
 //! * coordinator overhead — request round-trip latency vs raw engine
-//!   call at several worker counts.
+//!   call at several worker counts (McuSim workers run the planned
+//!   engine);
+//! * batched float eval — sequential vs `evaluate_float_parallel`.
 //!
 //! Run before and after each optimization; record deltas in
-//! EXPERIMENTS.md §Perf.
+//! EXPERIMENTS.md §Perf. Alongside the printed tables the same numbers
+//! are serialized to `BENCH_perf.json` (override the path with
+//! `$UNIT_BENCH_JSON`) so the perf trajectory is machine-readable from
+//! this PR onward.
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -15,9 +22,12 @@ use std::time::Instant;
 use unit_pruner::approx::DivKind;
 use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
 use unit_pruner::data::{mnist_like, Sizes};
-use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::engine::{infer, EngineConfig, PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::models::{zoo, Params};
+use unit_pruner::nn::ForwardOpts;
 use unit_pruner::pruning::Thresholds;
+use unit_pruner::report::bench::{BenchPerf, CoordRow, DivRow, EngineRow, EvalRow};
+use unit_pruner::train::{evaluate_float, evaluate_float_parallel};
 use unit_pruner::util::table::Table;
 
 fn main() {
@@ -25,12 +35,14 @@ fn main() {
     let params = Params::random(&def, 3);
     let ds = mnist_like::generate(5, Sizes { train: 4, val: 4, test: 32 });
     let th = Thresholds::uniform(3, 0.2);
-
-    // 1. engine throughput -------------------------------------------------
-    println!("=== Perf 1: engine throughput (host-side) ===\n");
-    let mut t = Table::new(vec!["mode", "inferences/s", "Mconn/s", "us/inference"]);
-    let div = DivKind::Shift.build();
+    let mut json = BenchPerf { model: def.name.clone(), ..Default::default() };
     let total_conn = def.total_dense_macs();
+
+    // 1. engine throughput: naive reference loops vs prepacked plans ------
+    println!("=== Perf 1: engine throughput (host-side), naive vs planned ===\n");
+    let mut t =
+        Table::new(vec!["mode", "backend", "inferences/s", "Mconn/s", "us/inference"]);
+    let div = DivKind::Shift.build();
     for (name, mode, with_t) in [
         ("dense", PruneMode::Dense, false),
         ("zero-skip", PruneMode::ZeroSkip, false),
@@ -49,23 +61,57 @@ fn main() {
         };
         let inputs: Vec<Vec<i16>> =
             (0..ds.test.len()).map(|i| q.quantize_input(ds.test.sample(i))).collect();
-        // warmup
-        black_box(infer(&q, &inputs[0], &cfg));
-        let reps = 60usize;
-        let t0 = Instant::now();
-        for r in 0..reps {
-            black_box(infer(&q, &inputs[r % inputs.len()], &cfg));
+        let mut planned = PlanBacked::new(&q, PlanConfig::for_mode(mode, DivKind::Shift));
+
+        // Equivalence guard: the two backends must agree bit-for-bit
+        // before we compare their clocks.
+        let a = infer(&q, &inputs[0], &cfg);
+        let b = planned.infer(&inputs[0]);
+        assert_eq!(a.logits_raw, b.logits_raw, "{name}: backend logits diverge");
+        assert_eq!(a.kept, b.kept, "{name}: backend kept counts diverge");
+
+        let mut per_backend = Vec::new();
+        for (backend, reps) in [("naive", 60usize), ("planned", 240usize)] {
+            // warmup
+            if backend == "naive" {
+                black_box(infer(&q, &inputs[0], &cfg));
+            } else {
+                black_box(planned.infer(&inputs[0]));
+            }
+            let t0 = Instant::now();
+            for r in 0..reps {
+                let x = &inputs[r % inputs.len()];
+                if backend == "naive" {
+                    black_box(infer(&q, x, &cfg));
+                } else {
+                    black_box(planned.infer(x));
+                }
+            }
+            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            let row = EngineRow {
+                mode: name.to_string(),
+                backend: backend.to_string(),
+                inf_per_s: 1.0 / per,
+                mconn_per_s: total_conn as f64 / per / 1e6,
+                us_per_inf: per * 1e6,
+            };
+            t.row(vec![
+                name.to_string(),
+                backend.to_string(),
+                format!("{:.1}", row.inf_per_s),
+                format!("{:.1}", row.mconn_per_s),
+                format!("{:.0}", row.us_per_inf),
+            ]);
+            per_backend.push(row.inf_per_s);
+            json.engine.push(row);
         }
-        let dt = t0.elapsed().as_secs_f64();
-        let per = dt / reps as f64;
-        t.row(vec![
-            name.to_string(),
-            format!("{:.1}", 1.0 / per),
-            format!("{:.1}", total_conn as f64 / per / 1e6),
-            format!("{:.0}", per * 1e6),
-        ]);
+        json.speedups.push((name.to_string(), per_backend[1] / per_backend[0]));
     }
     println!("{}", t.render());
+    for (mode, s) in &json.speedups {
+        println!("planned/{mode} speedup vs naive: {s:.2}x");
+    }
+    println!();
 
     // 2. division estimators (host ns/op) ----------------------------------
     println!("=== Perf 2: division estimators, host ns/op ===\n");
@@ -83,6 +129,7 @@ fn main() {
         let ns = t0.elapsed().as_nanos() as f64 / n as f64;
         black_box(acc);
         t.row(vec![d.name().to_string(), format!("{ns:.2}")]);
+        json.divs.push(DivRow { name: d.name().to_string(), ns_per_op: ns });
     }
     println!("{}", t.render());
 
@@ -112,6 +159,41 @@ fn main() {
             snap.p50_us.to_string(),
             snap.p99_us.to_string(),
         ]);
+        json.coord.push(CoordRow {
+            workers,
+            req_per_s: n_req as f64 / dt,
+            p50_us: snap.p50_us,
+            p99_us: snap.p99_us,
+        });
     }
     println!("{}", t.render());
+
+    // 4. batched float eval: sequential vs parallel -------------------------
+    println!("=== Perf 4: batched float eval (samples/s) ===\n");
+    let mut t = Table::new(vec!["eval", "samples/s"]);
+    let eval_ds = mnist_like::generate(9, Sizes { train: 4, val: 4, test: 128 });
+    let opts = ForwardOpts::unit(th.per_layer.clone());
+    let n_eval = eval_ds.test.len();
+    for (label, threads) in [("sequential", usize::MAX), ("parallel-2", 2), ("parallel-auto", 0)]
+    {
+        let t0 = Instant::now();
+        let r = if threads == usize::MAX {
+            evaluate_float(&def, &params, &eval_ds.test, &opts, n_eval)
+        } else {
+            evaluate_float_parallel(&def, &params, &eval_ds.test, &opts, n_eval, threads)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        black_box(r.accuracy);
+        let sps = n_eval as f64 / dt;
+        t.row(vec![label.to_string(), format!("{sps:.1}")]);
+        json.eval.push(EvalRow { label: label.to_string(), samples_per_s: sps });
+    }
+    println!("{}", t.render());
+
+    // machine-readable trajectory ------------------------------------------
+    let path = std::env::var("UNIT_BENCH_JSON").unwrap_or_else(|_| "BENCH_perf.json".into());
+    match json.write(std::path::Path::new(&path)) {
+        Ok(()) => println!("wrote {path}"),
+        Err(e) => eprintln!("failed to write {path}: {e}"),
+    }
 }

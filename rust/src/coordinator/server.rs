@@ -5,7 +5,10 @@
 //! * **McuSim backend** — N worker threads share the request queue
 //!   (`Arc<Mutex<Receiver>>`); each runs the fixed-point engine on one
 //!   sample at a time, exactly as the target MCU would, and reports the
-//!   modeled cycles/energy with the prediction.
+//!   modeled cycles/energy with the prediction. The engine runs on a
+//!   shared prepacked [`PlannedModel`] (compiled once at start-up) with
+//!   a per-worker scratch arena — bit-identical to the naive engine,
+//!   several times faster on the host, zero allocation per request.
 //! * **Pjrt backend** — a single executor thread *owns* the PJRT client
 //!   (the `xla` crate's client is `Rc`-based and not `Send`, so it is
 //!   created inside the thread), batches requests up to the artifact's
@@ -22,7 +25,7 @@ use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
 use super::request::{InferRequest, InferResponse};
 use crate::approx::DivKind;
-use crate::engine::{infer, EngineConfig, PruneMode, QModel};
+use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
 use crate::mcu::EnergyModel;
 use crate::models::Params;
 use crate::util::stats::argmax;
@@ -72,12 +75,15 @@ impl Coordinator {
         let handles = match backend {
             BackendChoice::McuSim { q, mode, div } => {
                 let shared = Arc::new(Mutex::new(rx));
+                // Compile the execution plan once; workers share the
+                // packed tables (read-only) and own their scratch.
+                let plan = Arc::new(PlannedModel::compile(&q, PlanConfig::for_mode(mode, div)));
                 (0..cfg.workers.max(1))
                     .map(|_| {
                         let rx = Arc::clone(&shared);
-                        let q = q.clone();
+                        let plan = Arc::clone(&plan);
                         let metrics = Arc::clone(&metrics);
-                        std::thread::spawn(move || mcu_worker(rx, q, mode, div, metrics))
+                        std::thread::spawn(move || mcu_worker(rx, plan, metrics))
                     })
                     .collect()
             }
@@ -116,28 +122,20 @@ impl Coordinator {
 
 fn mcu_worker(
     rx: Arc<Mutex<Receiver<InferRequest>>>,
-    q: QModel,
-    mode: PruneMode,
-    div: DivKind,
+    plan: Arc<PlannedModel>,
     metrics: Arc<Metrics>,
 ) {
-    let div = div.build();
     let energy = EnergyModel::default();
+    // Per-worker scratch arena: no allocation on the request path.
+    let mut scratch = plan.new_scratch();
     loop {
         let req = {
             let guard = rx.lock().unwrap();
             guard.recv()
         };
         let Ok(req) = req else { break };
-        let xi = q.quantize_input(&req.x);
-        let cfg = EngineConfig {
-            mode,
-            div: div.as_ref(),
-            sonic_accumulators: true,
-            precomputed_conv_thresholds: false,
-            t_scale_q8: 256,
-        };
-        let out = infer(&q, &xi, &cfg);
+        let xi = plan.quantize_input(&req.x);
+        let out = plan.infer(&xi, &mut scratch);
         let latency_us = req.t_enqueue.elapsed().as_micros() as u64;
         let resp = InferResponse {
             id: req.id,

@@ -69,8 +69,10 @@ pub struct EngineConfig<'a> {
 }
 
 /// Apply the runtime threshold scale: `(t_raw * scale) >> 8`, saturating.
+/// Shared with the planned engine ([`super::plan`]) so both paths bake
+/// the identical effective threshold.
 #[inline]
-fn scaled_t(t_raw: u32, scale_q8: u32) -> u32 {
+pub(crate) fn scaled_t(t_raw: u32, scale_q8: u32) -> u32 {
     ((t_raw as u64 * scale_q8 as u64) >> 8).min(u32::MAX as u64) as u32
 }
 
@@ -130,7 +132,7 @@ impl InferOutput {
 }
 
 #[inline(always)]
-fn requant(acc: i64, m: i64) -> i16 {
+pub(crate) fn requant(acc: i64, m: i64) -> i16 {
     let v = (acc * m) >> 16;
     v.clamp(i16::MIN as i64, i16::MAX as i64) as i16
 }

@@ -5,9 +5,20 @@
 //! by integer-only inner loops that implement UnIT's reuse-aware
 //! MAC-free pruning with approximate divisions, charging every
 //! operation to the MCU ledger ([`infer`]).
+//!
+//! Two execution paths produce bit-identical results:
+//!
+//! * [`infer`] — the reference loops, structured exactly like the
+//!   modeled MSP430 code (one compare per pruning decision);
+//! * [`plan`] — prepacked execution plans (magnitude-sorted rows,
+//!   scratch arenas, closed-form ledger charging) that make skipped
+//!   MACs nearly free *on the host* while billing the MCU identically.
+//!   Serving workers, batched eval, and the benches run on this path.
 
 pub mod infer;
+pub mod plan;
 pub mod qmodel;
 
 pub use infer::{infer, EngineConfig, InferOutput, PruneMode};
+pub use plan::{PlanBacked, PlanConfig, PlannedModel, Scratch};
 pub use qmodel::QModel;

@@ -1,0 +1,1013 @@
+//! Prepacked execution plans: the host-fast path of the MCU simulator.
+//!
+//! [`infer`](super::infer::infer) walks the raw [`QModel`] and pays one
+//! branchy compare — plus ledger bookkeeping — per *skipped*
+//! connection, and reallocates every activation buffer per layer. That
+//! is faithful to the modeled MSP430, but it means an 82 %-MAC-skipped
+//! UnIT inference is no faster than dense *on the host*, which caps
+//! every eval / bench / serving path.
+//!
+//! [`PlannedModel::compile`] pre-structures the weights once so that
+//! irregular inference-time sparsity becomes contiguous, branch-free
+//! inner loops (SparseRT-style):
+//!
+//! * **Linear layers (Eq. 2)** — each weight row is magnitude-sorted.
+//!   Eq. 2's keep-set `|w| > T/|x|` is then exactly a *prefix* of the
+//!   row, found by one binary search per activation; the kernel
+//!   iterates kept taps only, so a skipped MAC costs O(log n)
+//!   amortized instead of a compare.
+//! * **Conv layers (Eq. 3)** — taps are regrouped per input channel
+//!   and sorted by their precomputed threshold `w̄ = T_raw/|w|` (the
+//!   input-independent division the naive path redoes every
+//!   inference). Eq. 3's keep-set `|x| > w̄` is a prefix of that
+//!   order, so each input pixel binary-searches its cutoff and
+//!   scatters only kept taps into the output accumulators.
+//! * **Scratch arena** — [`Scratch`] owns the accumulator and
+//!   ping-pong activation buffers, eliminating all per-inference
+//!   `Vec` allocations.
+//! * **Closed-form ledger** — per-layer charges are folded into
+//!   precomputed constants plus one arithmetic update per layer
+//!   (`mac_n` / `skip_n` / `div_n` / batched FRAM traffic) instead of
+//!   per-connection `dyn DivApprox` calls.
+//!
+//! ## Host speed vs modeled MCU cost
+//!
+//! The plan changes *how the host computes* the inference, never *what
+//! the modeled MCU is billed*. Logits, per-layer kept/skipped counts,
+//! and the full [`Ledger`] (op counts, compute cycles, memory cycles)
+//! are **bit-identical** to the reference engine for every
+//! [`PruneMode`], division estimator, threshold configuration, and
+//! FATReLU cut-off — the equivalence property tests in
+//! `tests/engine_cross_layer.rs` pin this across the whole zoo. The
+//! MCU never executes the sorted kernels; it is still modeled as the
+//! naive loops. The plan is purely a simulator accelerator, which is
+//! why serving, eval, and benches can all sit on it without touching
+//! the paper's cost model.
+
+use std::sync::Arc;
+
+use super::infer::{requant, scaled_t, InferOutput, PruneMode};
+use super::qmodel::QModel;
+use crate::approx::{DivApprox, DivKind};
+use crate::mcu::{cost, FramModel, Ledger};
+use crate::models::ModelDef;
+use crate::nn::layers::{conv2d_shape, Layer};
+
+/// Build-time configuration a plan is compiled against (the plan
+/// equivalent of [`super::infer::EngineConfig`], with the estimator
+/// passed by kind so the plan owns its estimator and stays `Send`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PlanConfig {
+    pub mode: PruneMode,
+    pub div: DivKind,
+    /// Model SONIC-style FRAM-resident accumulator traffic.
+    pub sonic_accumulators: bool,
+    /// Bill conv tap thresholds at deploy time instead of per inference.
+    pub precomputed_conv_thresholds: bool,
+    /// Runtime threshold scale in Q8.8 (256 = 1.0), baked at compile.
+    pub t_scale_q8: u32,
+}
+
+impl PlanConfig {
+    pub fn unit(div: DivKind) -> PlanConfig {
+        PlanConfig::for_mode(PruneMode::Unit, div)
+    }
+
+    pub fn for_mode(mode: PruneMode, div: DivKind) -> PlanConfig {
+        PlanConfig {
+            mode,
+            div,
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+        }
+    }
+}
+
+/// Per-layer ledger charges that are input-independent, summed at
+/// compile time and billed with single calls per inference.
+#[derive(Debug, Clone, Copy, Default)]
+struct LayerCharges {
+    control_cycles: u64,
+    compares: u64,
+    divs: u64,
+    div_cycles: u64,
+    fram_reads: u64,
+    fram_writes: u64,
+}
+
+/// One streaming conv tap (Dense / StaticSparse: no per-position
+/// predicate, plain row-wise accumulate).
+#[derive(Debug, Clone, Copy)]
+struct StreamTap {
+    /// `o * oh * ow` — base of this tap's output-channel accumulators.
+    acc_base: u32,
+    /// `(ci*h + u)*wd + v` — input offset of the tap's first position.
+    src_off: u32,
+    w: i64,
+}
+
+/// One scatter conv tap (Unit / ZeroSkip), stored sorted by `wbar`
+/// ascending within its input channel so the keep-set per pixel is a
+/// prefix.
+#[derive(Debug, Clone, Copy)]
+struct ScatterTap {
+    /// Precomputed Eq. 3 threshold `w̄ = T_raw/|w|` (0 in ZeroSkip).
+    wbar: u32,
+    w: i64,
+    /// `o*oh*ow - u*ow - v`: accumulator index is `kbase + iy*ow + ix`.
+    kbase: i32,
+    u: u8,
+    v: u8,
+}
+
+#[derive(Debug, Clone)]
+struct ConvPlan {
+    out_ch: usize,
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    oh: usize,
+    ow: usize,
+    pool: bool,
+    /// `oh * ow`.
+    n_pos: usize,
+    /// Activation length this layer emits (post-pool).
+    out_len: usize,
+    bias_acc: Vec<i64>,
+    requant_m: i64,
+    /// Scatter taps flattened, grouped per input channel (see `ci_ranges`).
+    taps: Vec<ScatterTap>,
+    /// Per input channel `[start, end)` into `taps`.
+    ci_ranges: Vec<(u32, u32)>,
+    /// Streaming taps in reference order (Dense / StaticSparse only).
+    stream_taps: Vec<StreamTap>,
+    total_conn: u64,
+    charges: LayerCharges,
+}
+
+#[derive(Debug, Clone)]
+struct LinPlan {
+    n_in: usize,
+    n_out: usize,
+    relu: bool,
+    bias_acc: Vec<i64>,
+    requant_m: i64,
+    /// Effective layer threshold (already `t_scale_q8`-scaled).
+    t_eff: u32,
+    /// Per input row: the weight row sorted by descending `|w|`.
+    sorted_w: Vec<i16>,
+    /// `|w|` of `sorted_w` (the binary-search key).
+    sorted_abs: Vec<u16>,
+    /// Original output index of each sorted tap.
+    sorted_idx: Vec<u16>,
+    /// Per input row: number of nonzero weights (prefix length, since
+    /// zeros sort to the tail).
+    nnz: Vec<u32>,
+    charges: LayerCharges,
+}
+
+#[derive(Debug, Clone)]
+enum LayerPlan {
+    Conv(ConvPlan),
+    Linear(LinPlan),
+}
+
+/// Reusable per-thread buffers for [`PlannedModel::infer`]: one i64
+/// accumulator arena plus two ping-pong activation buffers, sized at
+/// compile time so the inference loop never allocates.
+#[derive(Debug, Clone)]
+pub struct Scratch {
+    acc: Vec<i64>,
+    act_a: Vec<i16>,
+    act_b: Vec<i16>,
+}
+
+/// A `QModel` compiled for fast host execution (see module docs).
+pub struct PlannedModel {
+    pub def: ModelDef,
+    pub cfg: PlanConfig,
+    div: Box<dyn DivApprox>,
+    fat_t_raw: i16,
+    layers: Vec<LayerPlan>,
+    input_len: usize,
+    max_acc: usize,
+    max_act: usize,
+}
+
+impl std::fmt::Debug for PlannedModel {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlannedModel")
+            .field("model", &self.def.name)
+            .field("cfg", &self.cfg)
+            .field("layers", &self.layers.len())
+            .finish()
+    }
+}
+
+impl PlannedModel {
+    /// Compile `q` against `cfg`. One-time cost ~O(weights · log n_out);
+    /// every subsequent [`infer`](Self::infer) reuses the packed tables.
+    pub fn compile(q: &QModel, cfg: PlanConfig) -> PlannedModel {
+        let div = cfg.div.build();
+        let mut shape = q.def.input_shape;
+        let input_len = q.def.input_len();
+        let mut max_acc = 1usize;
+        let mut max_act = input_len;
+        let mut layers = Vec::with_capacity(q.def.layers.len());
+        for (li, layer) in q.def.layers.iter().enumerate() {
+            let ql = &q.layers[li];
+            match *layer {
+                Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
+                    let [c, h, wd] = shape;
+                    debug_assert_eq!(c, in_ch, "conv input channels");
+                    let cp = compile_conv(
+                        ql, &cfg, div.as_ref(), out_ch, in_ch, h, wd, kh, kw, pool,
+                    );
+                    max_acc = max_acc.max(out_ch * cp.n_pos);
+                    max_act = max_act.max(out_ch * cp.n_pos);
+                    shape = if pool {
+                        [out_ch, cp.oh / 2, cp.ow / 2]
+                    } else {
+                        [out_ch, cp.oh, cp.ow]
+                    };
+                    layers.push(LayerPlan::Conv(cp));
+                }
+                Layer::Linear { n_in, n_out, relu } => {
+                    debug_assert_eq!(
+                        shape.iter().product::<usize>(),
+                        n_in,
+                        "linear input size"
+                    );
+                    let lp = compile_linear(ql, &cfg, n_in, n_out, relu);
+                    max_acc = max_acc.max(n_out);
+                    max_act = max_act.max(n_out);
+                    shape = [n_out, 1, 1];
+                    layers.push(LayerPlan::Linear(lp));
+                }
+            }
+        }
+        PlannedModel {
+            def: q.def.clone(),
+            cfg,
+            div,
+            fat_t_raw: q.fat_t_raw,
+            layers,
+            input_len,
+            max_acc,
+            max_act,
+        }
+    }
+
+    /// Allocate a scratch arena sized for this plan (one per thread).
+    pub fn new_scratch(&self) -> Scratch {
+        Scratch {
+            acc: vec![0i64; self.max_acc],
+            act_a: vec![0i16; self.max_act],
+            act_b: vec![0i16; self.max_act],
+        }
+    }
+
+    /// Quantize an f32 input sample to Q8.8 raw values (identical to
+    /// [`QModel::quantize_input`]; here so workers need only the plan).
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i16> {
+        x.iter().map(|&v| crate::fixed::Q88::from_f32(v).raw()).collect()
+    }
+
+    /// Run one inference on the packed tables. Output (logits, kept/
+    /// skipped counts, full ledger) is bit-identical to
+    /// [`super::infer::infer`] under the matching `EngineConfig`.
+    pub fn infer(&self, x_raw: &[i16], s: &mut Scratch) -> InferOutput {
+        assert_eq!(x_raw.len(), self.input_len, "input length");
+        let mode = self.cfg.mode;
+        let sonic = self.cfg.sonic_accumulators;
+        let n_layers = self.layers.len();
+        let mut kept = vec![0u64; n_layers];
+        let mut skipped = vec![0u64; n_layers];
+        let mut ledger = Ledger::new();
+        // Input transfer: sensor buffer -> FRAM working buffer.
+        ledger.fram_write(x_raw.len() as u64);
+
+        s.act_a[..x_raw.len()].copy_from_slice(x_raw);
+        let mut in_a = true;
+        let mut cur_len = x_raw.len();
+
+        for (li, lp) in self.layers.iter().enumerate() {
+            let acc = &mut s.acc;
+            let (src_buf, dst_buf) = if in_a {
+                (&mut s.act_a, &mut s.act_b)
+            } else {
+                (&mut s.act_b, &mut s.act_a)
+            };
+            let src: &[i16] = &src_buf[..cur_len];
+            match lp {
+                LayerPlan::Conv(cp) => {
+                    // bias preload
+                    for o in 0..cp.out_ch {
+                        acc[o * cp.n_pos..(o + 1) * cp.n_pos].fill(cp.bias_acc[o]);
+                    }
+                    let k = match mode {
+                        PruneMode::Unit | PruneMode::ZeroSkip => conv_scatter(cp, src, acc),
+                        PruneMode::Dense | PruneMode::StaticSparse => {
+                            conv_stream(cp, src, acc)
+                        }
+                    };
+                    // requant + FATReLU
+                    let n_out_elems = cp.out_ch * cp.n_pos;
+                    for (d, &a) in dst_buf[..n_out_elems].iter_mut().zip(acc.iter()) {
+                        let y = requant(a, cp.requant_m);
+                        *d = if y > self.fat_t_raw { y } else { 0 };
+                    }
+                    if cp.pool {
+                        pool2x2_in_place(&mut dst_buf[..n_out_elems], cp.out_ch, cp.oh, cp.ow);
+                    }
+                    kept[li] = k;
+                    skipped[li] = cp.total_conn - k;
+                    charge_layer(&mut ledger, &cp.charges, k, cp.total_conn, sonic);
+                    cur_len = cp.out_len;
+                }
+                LayerPlan::Linear(lp) => {
+                    acc[..lp.n_out].copy_from_slice(&lp.bias_acc);
+                    let run = linear_exec(lp, mode, self.div.as_ref(), src, acc);
+                    // requant (+ optional FATReLU on hidden linears)
+                    for (j, d) in dst_buf[..lp.n_out].iter_mut().enumerate() {
+                        let y = requant(acc[j], lp.requant_m);
+                        *d = if lp.relu {
+                            if y > self.fat_t_raw {
+                                y
+                            } else {
+                                0
+                            }
+                        } else {
+                            y
+                        };
+                    }
+                    let total = (lp.n_in * lp.n_out) as u64;
+                    kept[li] = run.kept;
+                    skipped[li] = total - run.kept;
+                    charge_layer(&mut ledger, &lp.charges, run.kept, total, sonic);
+                    // Runtime-dependent linear charges: weight streams +
+                    // row sweeps happen only for live (nonzero) rows, and
+                    // Eq. 2 divisions depend on the activation values.
+                    if matches!(mode, PruneMode::ZeroSkip | PruneMode::Unit) {
+                        ledger.fram_read(run.live_rows * lp.n_out as u64);
+                        ledger.compare_n(run.live_rows * lp.n_out as u64);
+                    }
+                    ledger.div_n(run.divs, run.div_cycles);
+                    cur_len = lp.n_out;
+                }
+            }
+            // (output-commit FRAM traffic is part of each layer's
+            // compile-time charges — see compile_conv / compile_linear)
+            in_a = !in_a;
+        }
+
+        // Executed-MAC ledger consistency, same invariant as the
+        // reference engine.
+        debug_assert_eq!(kept.iter().sum::<u64>(), ledger.counts.macs);
+
+        let act = if in_a { &s.act_a } else { &s.act_b };
+        let logits_raw: Vec<i16> = act[..cur_len].to_vec();
+        let logits: Vec<f32> =
+            logits_raw.iter().map(|&r| crate::fixed::Q88(r).to_f32()).collect();
+        InferOutput { logits_raw, logits, kept, skipped, ledger }
+    }
+}
+
+/// Plan handle + private scratch: the drop-in "compile once, infer
+/// many" front door used by workers and benches.
+pub struct PlanBacked {
+    pub plan: Arc<PlannedModel>,
+    scratch: Scratch,
+}
+
+impl PlanBacked {
+    pub fn new(q: &QModel, cfg: PlanConfig) -> PlanBacked {
+        let plan = Arc::new(PlannedModel::compile(q, cfg));
+        PlanBacked::from_plan(plan)
+    }
+
+    /// Share one compiled plan across threads; each `PlanBacked` owns
+    /// its scratch.
+    pub fn from_plan(plan: Arc<PlannedModel>) -> PlanBacked {
+        let scratch = plan.new_scratch();
+        PlanBacked { plan, scratch }
+    }
+
+    pub fn infer(&mut self, x_raw: &[i16]) -> InferOutput {
+        self.plan.infer(x_raw, &mut self.scratch)
+    }
+
+    pub fn quantize_input(&self, x: &[f32]) -> Vec<i16> {
+        self.plan.quantize_input(x)
+    }
+}
+
+/// Bill one layer's closed-form charges: compile-time constants plus
+/// the kept-count-dependent terms, in totals identical to the reference
+/// engine's per-connection calls.
+fn charge_layer(ledger: &mut Ledger, ch: &LayerCharges, kept: u64, total_conn: u64, sonic: bool) {
+    ledger.control(ch.control_cycles);
+    ledger.compare_n(ch.compares);
+    ledger.div_n(ch.divs, ch.div_cycles);
+    ledger.mac_n(kept);
+    ledger.skip_n(total_conn - kept);
+    let mut reads = ch.fram_reads;
+    let mut writes = ch.fram_writes;
+    if sonic {
+        // FRAM-resident partial sums: RMW per executed MAC only.
+        reads += 2 * kept;
+        writes += 2 * kept;
+    }
+    ledger.fram_read(reads);
+    ledger.fram_write(writes);
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compile_conv(
+    ql: &super::qmodel::QLayer,
+    cfg: &PlanConfig,
+    div: &dyn DivApprox,
+    out_ch: usize,
+    in_ch: usize,
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    pool: bool,
+) -> ConvPlan {
+    let (oh, ow) = conv2d_shape(h, wd, kh, kw);
+    let n_pos = oh * ow;
+    let n_taps_total = (out_ch * in_ch * kh * kw) as u64;
+    let scatter_mode = matches!(cfg.mode, PruneMode::Unit | PruneMode::ZeroSkip);
+
+    let mut per_ci: Vec<Vec<ScatterTap>> = vec![Vec::new(); in_ch];
+    let mut stream_taps = Vec::new();
+    let mut n_live = 0u64;
+    let mut divs = 0u64;
+    let mut div_cycles = 0u64;
+
+    for o in 0..out_ch {
+        let t_layer = scaled_t(
+            if !ql.t_raw_groups.is_empty() { ql.t_raw_groups[o] } else { ql.t_raw },
+            cfg.t_scale_q8,
+        );
+        for ci in 0..in_ch {
+            for u in 0..kh {
+                for v in 0..kw {
+                    let wv = ql.w[((o * in_ch + ci) * kh + u) * kw + v];
+                    match cfg.mode {
+                        PruneMode::Unit => {
+                            if wv == 0 {
+                                continue; // pruned for free at plan time
+                            }
+                            let wbar = if t_layer == 0 {
+                                0
+                            } else {
+                                let c = wv.unsigned_abs() as u32;
+                                if !cfg.precomputed_conv_thresholds {
+                                    divs += 1;
+                                    div_cycles += div.cycles(t_layer, c);
+                                }
+                                div.div(t_layer, c)
+                            };
+                            n_live += 1;
+                            per_ci[ci].push(ScatterTap {
+                                wbar,
+                                w: wv as i64,
+                                kbase: (o * n_pos) as i32 - (u * ow) as i32 - v as i32,
+                                u: u as u8,
+                                v: v as u8,
+                            });
+                        }
+                        PruneMode::ZeroSkip => {
+                            if wv == 0 {
+                                continue;
+                            }
+                            n_live += 1;
+                            per_ci[ci].push(ScatterTap {
+                                wbar: 0,
+                                w: wv as i64,
+                                kbase: (o * n_pos) as i32 - (u * ow) as i32 - v as i32,
+                                u: u as u8,
+                                v: v as u8,
+                            });
+                        }
+                        PruneMode::StaticSparse => {
+                            if wv == 0 {
+                                continue;
+                            }
+                            n_live += 1;
+                            stream_taps.push(StreamTap {
+                                acc_base: (o * n_pos) as u32,
+                                src_off: ((ci * h + u) * wd + v) as u32,
+                                w: wv as i64,
+                            });
+                        }
+                        PruneMode::Dense => {
+                            // Dense visits every tap, zero weights included.
+                            n_live += 1;
+                            stream_taps.push(StreamTap {
+                                acc_base: (o * n_pos) as u32,
+                                src_off: ((ci * h + u) * wd + v) as u32,
+                                w: wv as i64,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    // Sort each input channel's taps by ascending threshold so the
+    // per-pixel keep-set `w̄ < |x|` is a prefix.
+    let mut taps = Vec::new();
+    let mut ci_ranges = Vec::with_capacity(in_ch);
+    if scatter_mode {
+        for group in per_ci.iter_mut() {
+            group.sort_by_key(|t| t.wbar);
+            let start = taps.len() as u32;
+            taps.extend_from_slice(group);
+            ci_ranges.push((start, taps.len() as u32));
+        }
+    }
+
+    // Input-independent ledger charges (mirrors the reference loop's
+    // per-tap billing exactly — see charge_layer for the kept-dependent
+    // remainder).
+    let mut charges = LayerCharges {
+        divs,
+        div_cycles,
+        ..LayerCharges::default()
+    };
+    // bias preload: one MOV per output element
+    charges.control_cycles += (out_ch * n_pos) as u64 * cost::MOV;
+    // per-tap head: weight fetch (+ zero-compare in ZeroSkip)
+    match cfg.mode {
+        PruneMode::Unit | PruneMode::Dense => charges.fram_reads += n_taps_total,
+        PruneMode::ZeroSkip => {
+            charges.fram_reads += n_taps_total;
+            charges.compares += n_taps_total;
+        }
+        PruneMode::StaticSparse => charges.fram_reads += n_live,
+    }
+    // per live tap: the OH*OW activation stream (+ Eq. 3 compares)
+    charges.fram_reads += n_live * n_pos as u64;
+    if matches!(cfg.mode, PruneMode::Unit | PruneMode::ZeroSkip) {
+        charges.compares += n_live * n_pos as u64;
+    }
+    // requantization + activation threshold per output element
+    charges.control_cycles += (out_ch * n_pos) as u64 * (cost::MUL_SW + cost::SHIFT * 8);
+    charges.compares += (out_ch * n_pos) as u64;
+    // 2x2 max pool: 4 reads + 4 compares per pooled element
+    let out_len = if pool {
+        let (ph, pw) = (oh / 2, ow / 2);
+        charges.fram_reads += 4 * (out_ch * ph * pw) as u64;
+        charges.compares += 4 * (out_ch * ph * pw) as u64;
+        out_ch * ph * pw
+    } else {
+        out_ch * n_pos
+    };
+    // commit output activations (SONIC double buffer)
+    charges.fram_writes += FramModel::default().commit_words(out_len as u64);
+
+    ConvPlan {
+        out_ch,
+        h,
+        wd,
+        kh,
+        kw,
+        oh,
+        ow,
+        pool,
+        n_pos,
+        out_len,
+        bias_acc: ql.bias_acc.clone(),
+        requant_m: ql.requant_m,
+        taps,
+        ci_ranges,
+        stream_taps,
+        total_conn: n_taps_total * n_pos as u64,
+        charges,
+    }
+}
+
+fn compile_linear(
+    ql: &super::qmodel::QLayer,
+    cfg: &PlanConfig,
+    n_in: usize,
+    n_out: usize,
+    relu: bool,
+) -> LinPlan {
+    let t_eff = scaled_t(ql.t_raw, cfg.t_scale_q8);
+    let mut sorted_w = Vec::with_capacity(n_in * n_out);
+    let mut sorted_abs = Vec::with_capacity(n_in * n_out);
+    let mut sorted_idx = Vec::with_capacity(n_in * n_out);
+    let mut nnz = Vec::with_capacity(n_in);
+    let mut order: Vec<u16> = Vec::with_capacity(n_out);
+    for k in 0..n_in {
+        let row = &ql.w[k * n_out..(k + 1) * n_out];
+        order.clear();
+        order.extend(0..n_out as u16);
+        order.sort_by(|&a, &b| {
+            row[b as usize].unsigned_abs().cmp(&row[a as usize].unsigned_abs())
+        });
+        let mut nnz_k = 0u32;
+        for &j in &order {
+            let wv = row[j as usize];
+            sorted_w.push(wv as i16);
+            sorted_abs.push(wv.unsigned_abs() as u16);
+            sorted_idx.push(j);
+            if wv != 0 {
+                nnz_k += 1;
+            }
+        }
+        nnz.push(nnz_k);
+    }
+
+    let mut charges = LayerCharges::default();
+    // bias preload
+    charges.control_cycles += n_out as u64 * cost::MOV;
+    // per input activation: one fetch (+ zero-compare in checking modes)
+    charges.fram_reads += n_in as u64;
+    if matches!(cfg.mode, PruneMode::ZeroSkip | PruneMode::Unit) {
+        charges.compares += n_in as u64;
+    }
+    // weight streams that don't depend on the input
+    match cfg.mode {
+        PruneMode::Dense => charges.fram_reads += (n_in * n_out) as u64,
+        PruneMode::StaticSparse => {
+            charges.fram_reads += nnz.iter().map(|&z| z as u64).sum::<u64>()
+        }
+        // ZeroSkip/Unit stream weights only for nonzero activations —
+        // billed at runtime in infer().
+        PruneMode::ZeroSkip | PruneMode::Unit => {}
+    }
+    // requantization per output element
+    charges.control_cycles += n_out as u64 * (cost::MUL_SW + cost::SHIFT * 8);
+    // commit output activations
+    charges.fram_writes += FramModel::default().commit_words(n_out as u64);
+
+    LinPlan {
+        n_in,
+        n_out,
+        relu,
+        bias_acc: ql.bias_acc.clone(),
+        requant_m: ql.requant_m,
+        t_eff,
+        sorted_w,
+        sorted_abs,
+        sorted_idx,
+        nnz,
+        charges,
+    }
+}
+
+/// Scatter conv kernel (Unit / ZeroSkip): per nonzero input pixel, one
+/// binary search finds the kept-tap prefix; only kept taps touch the
+/// accumulators. Returns the layer's kept-MAC count.
+fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
+    let (h, wd, kh, kw, oh, ow) = (cp.h, cp.wd, cp.kh, cp.kw, cp.oh, cp.ow);
+    let mut kept = 0u64;
+    for (ci, &(s, e)) in cp.ci_ranges.iter().enumerate() {
+        let (s, e) = (s as usize, e as usize);
+        if s == e {
+            continue;
+        }
+        let taps = &cp.taps[s..e];
+        let plane = &src[ci * h * wd..(ci + 1) * h * wd];
+        for iy in 0..h {
+            let row_interior = iy + 1 >= kh && iy < oh;
+            let row_base = iy * wd;
+            for ix in 0..wd {
+                let xv = plane[row_base + ix];
+                if xv == 0 {
+                    continue; // |x| > w̄ ≥ 0 can never hold
+                }
+                let ax = (xv as i32).unsigned_abs();
+                // Eq. 3 keep-set is the prefix with w̄ < |x|.
+                let cut = taps.partition_point(|t| t.wbar < ax);
+                if cut == 0 {
+                    continue;
+                }
+                let xv64 = xv as i64;
+                let pix = (iy * ow + ix) as i32;
+                if row_interior && ix + 1 >= kw && ix < ow {
+                    // Interior pixel: every tap lands in-bounds.
+                    for t in &taps[..cut] {
+                        acc[(t.kbase + pix) as usize] += xv64 * t.w;
+                    }
+                    kept += cut as u64;
+                } else {
+                    // Border pixel: keep only taps whose output position
+                    // exists (p = iy-u, q = ix-v inside the OH×OW grid).
+                    for t in &taps[..cut] {
+                        let (u, v) = (t.u as usize, t.v as usize);
+                        if iy >= u && iy - u < oh && ix >= v && ix - v < ow {
+                            acc[(t.kbase + pix) as usize] += xv64 * t.w;
+                            kept += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    kept
+}
+
+/// Streaming conv kernel (Dense / StaticSparse): contiguous row-wise
+/// accumulate per tap, no per-position predicate.
+fn conv_stream(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
+    let (wd, oh, ow) = (cp.wd, cp.oh, cp.ow);
+    for t in &cp.stream_taps {
+        let base = t.acc_base as usize;
+        let src_off = t.src_off as usize;
+        let w = t.w;
+        for p in 0..oh {
+            let arow = src_off + p * wd;
+            let xrow = &src[arow..arow + ow];
+            let dst = &mut acc[base + p * ow..base + p * ow + ow];
+            for (d, &xv) in dst.iter_mut().zip(xrow) {
+                *d += xv as i64 * w;
+            }
+        }
+    }
+    cp.stream_taps.len() as u64 * cp.n_pos as u64
+}
+
+/// In-place 2×2 max pool over a `C×OH×OW` buffer (writes are always at
+/// or before the reads: write index w reads from 4w..4w+ow+1, so the
+/// shrinking output never clobbers unread input).
+fn pool2x2_in_place(act: &mut [i16], out_ch: usize, oh: usize, ow: usize) {
+    let (ph, pw) = (oh / 2, ow / 2);
+    for o in 0..out_ch {
+        for p in 0..ph {
+            for q in 0..pw {
+                let mut m = i16::MIN;
+                for du in 0..2 {
+                    for dv in 0..2 {
+                        let v = act[(o * oh + 2 * p + du) * ow + 2 * q + dv];
+                        if v > m {
+                            m = v;
+                        }
+                    }
+                }
+                act[(o * ph + p) * pw + q] = m;
+            }
+        }
+    }
+}
+
+/// Per-inference tallies the linear kernels hand back for ledger
+/// billing.
+struct LinRun {
+    kept: u64,
+    live_rows: u64,
+    divs: u64,
+    div_cycles: u64,
+}
+
+/// Sorted-row linear kernels. Eq. 2's keep-set `|w| > x̄` is a prefix of
+/// the descending-|w| row; `partition_point` finds it in O(log n_out).
+fn linear_exec(
+    lp: &LinPlan,
+    mode: PruneMode,
+    div: &dyn DivApprox,
+    src: &[i16],
+    acc: &mut [i64],
+) -> LinRun {
+    let (n_in, n_out) = (lp.n_in, lp.n_out);
+    let mut kept = 0u64;
+    let mut live_rows = 0u64;
+    let mut divs = 0u64;
+    let mut div_cycles = 0u64;
+    match mode {
+        PruneMode::Dense => {
+            for k in 0..n_in {
+                let xv = src[k];
+                // Dense "executes" every MAC; zero activations contribute
+                // exactly zero, so skipping the arithmetic is bit-identical.
+                if xv != 0 {
+                    let xv64 = xv as i64;
+                    let row = &lp.sorted_w[k * n_out..(k + 1) * n_out];
+                    let idx = &lp.sorted_idx[k * n_out..(k + 1) * n_out];
+                    for (w, &j) in row.iter().zip(idx) {
+                        acc[j as usize] += xv64 * *w as i64;
+                    }
+                }
+            }
+            kept = (n_in * n_out) as u64;
+        }
+        PruneMode::StaticSparse => {
+            for k in 0..n_in {
+                let xv = src[k];
+                let nz = lp.nnz[k] as usize;
+                kept += nz as u64;
+                if xv != 0 {
+                    let xv64 = xv as i64;
+                    let row = &lp.sorted_w[k * n_out..k * n_out + nz];
+                    let idx = &lp.sorted_idx[k * n_out..k * n_out + nz];
+                    for (w, &j) in row.iter().zip(idx) {
+                        acc[j as usize] += xv64 * *w as i64;
+                    }
+                }
+            }
+        }
+        PruneMode::ZeroSkip => {
+            for k in 0..n_in {
+                let xv = src[k];
+                if xv == 0 {
+                    continue; // whole row skipped with one compare
+                }
+                live_rows += 1;
+                let nz = lp.nnz[k] as usize;
+                kept += nz as u64;
+                let xv64 = xv as i64;
+                let row = &lp.sorted_w[k * n_out..k * n_out + nz];
+                let idx = &lp.sorted_idx[k * n_out..k * n_out + nz];
+                for (w, &j) in row.iter().zip(idx) {
+                    acc[j as usize] += xv64 * *w as i64;
+                }
+            }
+        }
+        PruneMode::Unit => {
+            for k in 0..n_in {
+                let xv = src[k];
+                if xv == 0 {
+                    continue;
+                }
+                live_rows += 1;
+                let tbar = if lp.t_eff == 0 {
+                    0
+                } else {
+                    let c = (xv as i32).unsigned_abs();
+                    divs += 1;
+                    div_cycles += div.cycles(lp.t_eff, c);
+                    div.div(lp.t_eff, c)
+                };
+                let abs_row = &lp.sorted_abs[k * n_out..(k + 1) * n_out];
+                // Eq. 2: keep iff |w| > x̄ — a prefix of the sorted row.
+                let cut = abs_row.partition_point(|&a| a as u32 > tbar);
+                kept += cut as u64;
+                if cut > 0 {
+                    let xv64 = xv as i64;
+                    let row = &lp.sorted_w[k * n_out..k * n_out + cut];
+                    let idx = &lp.sorted_idx[k * n_out..k * n_out + cut];
+                    for (w, &j) in row.iter().zip(idx) {
+                        acc[j as usize] += xv64 * *w as i64;
+                    }
+                }
+            }
+        }
+    }
+    LinRun { kept, live_rows, divs, div_cycles }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivKind;
+    use crate::engine::{infer, EngineConfig};
+    use crate::models::{zoo, Params};
+    use crate::pruning::Thresholds;
+
+    fn assert_identical(q: &QModel, x: &[i16], mode: PruneMode, kind: DivKind) {
+        let d = kind.build();
+        let cfg = EngineConfig {
+            mode,
+            div: d.as_ref(),
+            sonic_accumulators: true,
+            precomputed_conv_thresholds: false,
+            t_scale_q8: 256,
+        };
+        let naive = infer(q, x, &cfg);
+        let mut pb = PlanBacked::new(q, PlanConfig::for_mode(mode, kind));
+        let planned = pb.infer(x);
+        assert_eq!(planned.logits_raw, naive.logits_raw, "{mode:?}/{kind:?} logits");
+        assert_eq!(planned.kept, naive.kept, "{mode:?}/{kind:?} kept");
+        assert_eq!(planned.skipped, naive.skipped, "{mode:?}/{kind:?} skipped");
+        assert_eq!(planned.ledger.counts, naive.ledger.counts, "{mode:?}/{kind:?} op counts");
+        assert_eq!(
+            planned.ledger.compute_cycles, naive.ledger.compute_cycles,
+            "{mode:?}/{kind:?} compute cycles"
+        );
+        assert_eq!(
+            planned.ledger.mem_cycles, naive.ledger.mem_cycles,
+            "{mode:?}/{kind:?} mem cycles"
+        );
+    }
+
+    #[test]
+    fn planned_matches_naive_all_modes_mnist() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 21);
+        let th = Thresholds::uniform(3, 0.25);
+        let x_f: Vec<f32> = (0..def.input_len())
+            .map(|i| (((i * 29) % 31) as f32 - 15.0) / 9.0)
+            .collect();
+        for mode in [
+            PruneMode::Dense,
+            PruneMode::StaticSparse,
+            PruneMode::ZeroSkip,
+            PruneMode::Unit,
+        ] {
+            let mut q = QModel::quantize(&def, &params);
+            if mode == PruneMode::Unit {
+                q = q.with_thresholds(&th);
+            }
+            let x = q.quantize_input(&x_f);
+            for kind in [DivKind::Exact, DivKind::Shift] {
+                assert_identical(&q, &x, mode, kind);
+            }
+        }
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        // Two consecutive inferences through one scratch must not leak
+        // state between calls.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 22);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let mut pb = PlanBacked::new(&q, PlanConfig::unit(DivKind::Shift));
+        let flat = vec![0.37f32; def.input_len()];
+        let xa = q.quantize_input(&flat);
+        let xb = q.quantize_input(
+            &(0..def.input_len()).map(|i| ((i % 13) as f32 - 6.0) / 5.0).collect::<Vec<_>>(),
+        );
+        let first_a = pb.infer(&xa);
+        let _b = pb.infer(&xb);
+        let again_a = pb.infer(&xa);
+        assert_eq!(first_a.logits_raw, again_a.logits_raw);
+        assert_eq!(first_a.kept, again_a.kept);
+        assert_eq!(first_a.ledger.counts, again_a.ledger.counts);
+    }
+
+    #[test]
+    fn group_thresholds_and_fatrelu_match() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 23);
+        let mut th = Thresholds::uniform(3, 0.2);
+        // per-output-channel refinement on the conv layers
+        th.groups[0] = (0..6).map(|i| 0.1 + 0.05 * i as f32).collect();
+        th.groups[1] = (0..16).map(|i| 0.05 + 0.02 * i as f32).collect();
+        let q = QModel::quantize(&def, &params).with_thresholds(&th).with_fatrelu(0.3);
+        let x = q.quantize_input(
+            &(0..def.input_len()).map(|i| ((i % 17) as f32 - 8.0) / 6.0).collect::<Vec<_>>(),
+        );
+        assert_identical(&q, &x, PruneMode::Unit, DivKind::Tree);
+    }
+
+    #[test]
+    fn precomputed_thresholds_drop_div_charges_only() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 24);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.3));
+        let flat = vec![0.4f32; def.input_len()];
+        let x = q.quantize_input(&flat);
+        let base = PlanConfig::unit(DivKind::Shift);
+        let pre = PlanConfig { precomputed_conv_thresholds: true, ..base };
+        let mut a = PlanBacked::new(&q, base);
+        let mut b = PlanBacked::new(&q, pre);
+        let oa = a.infer(&x);
+        let ob = b.infer(&x);
+        assert_eq!(oa.logits_raw, ob.logits_raw);
+        assert!(ob.ledger.compute_cycles < oa.ledger.compute_cycles);
+        assert!(ob.ledger.counts.divs < oa.ledger.counts.divs);
+    }
+
+    #[test]
+    fn t_scale_knob_respected() {
+        // A higher runtime scale must skip at least as much, matching
+        // the naive engine bit-for-bit at each setting.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 25);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let x = q.quantize_input(
+            &(0..def.input_len()).map(|i| ((i % 23) as f32 - 11.0) / 7.0).collect::<Vec<_>>(),
+        );
+        let mut last_skip = 0u64;
+        for scale in [0u32, 128, 256, 512] {
+            let d = DivKind::Exact.build();
+            let cfg = EngineConfig {
+                mode: PruneMode::Unit,
+                div: d.as_ref(),
+                sonic_accumulators: true,
+                precomputed_conv_thresholds: false,
+                t_scale_q8: scale,
+            };
+            let naive = infer(&q, &x, &cfg);
+            let mut pb = PlanBacked::new(
+                &q,
+                PlanConfig { t_scale_q8: scale, ..PlanConfig::unit(DivKind::Exact) },
+            );
+            let planned = pb.infer(&x);
+            assert_eq!(planned.logits_raw, naive.logits_raw, "scale {scale}");
+            assert_eq!(planned.skipped, naive.skipped, "scale {scale}");
+            let s: u64 = planned.skipped.iter().sum();
+            assert!(s >= last_skip, "scale {scale}: skips decreased");
+            last_skip = s;
+        }
+    }
+}

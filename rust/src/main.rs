@@ -14,7 +14,7 @@ use std::time::Duration;
 use unit_pruner::approx::DivKind;
 use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
 use unit_pruner::data::{by_name, Sizes};
-use unit_pruner::engine::{infer, EngineConfig, PruneMode, QModel};
+use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
 use unit_pruner::models::{zoo, MODEL_NAMES};
 use unit_pruner::pruning::{calibrate, CalibConfig};
@@ -120,7 +120,6 @@ fn cmd_eval(args: &Args) -> Result<()> {
 
     let q = QModel::quantize(&def, &params);
     let qp = q.clone().with_thresholds(&th);
-    let divb = div.build();
     let energy = EnergyModel::default();
 
     let mut rows = Table::new(vec!["config", "accuracy", "MAC skipped", "mcu secs", "energy mJ"]);
@@ -133,16 +132,12 @@ fn cmd_eval(args: &Args) -> Result<()> {
         let mut skipped = 0f64;
         let mut secs = 0f64;
         let mut mj = 0f64;
+        // Planned fast path: compile once, zero allocation per sample;
+        // ledger/logits identical to the naive engine.
+        let mut pb = PlanBacked::new(qm, PlanConfig::for_mode(mode, div));
         for i in 0..n {
-            let xi = qm.quantize_input(ds.test.sample(i));
-            let cfg = EngineConfig {
-                mode,
-                div: divb.as_ref(),
-                sonic_accumulators: true,
-                precomputed_conv_thresholds: false,
-            t_scale_q8: 256,
-            };
-            let out = infer(qm, &xi, &cfg);
+            let xi = pb.quantize_input(ds.test.sample(i));
+            let out = pb.infer(&xi);
             if out.argmax() == ds.test.y[i] {
                 hits += 1;
             }

@@ -108,6 +108,16 @@ impl Ledger {
         self.compute_cycles += cycles;
     }
 
+    /// Charge `n` divisions whose cycle costs were pre-summed — the
+    /// planned engine folds a whole layer's (input-independent) conv
+    /// threshold divisions into one arithmetic update with totals
+    /// identical to `n` individual `div()` calls.
+    #[inline(always)]
+    pub fn div_n(&mut self, n: u64, total_cycles: u64) {
+        self.counts.divs += n;
+        self.compute_cycles += total_cycles;
+    }
+
     /// Charge a plain addition (bias, pooling compare, requant add).
     #[inline(always)]
     pub fn add(&mut self) {

@@ -158,7 +158,10 @@ pub fn forward(def: &ModelDef, params: &Params, x: &[f32], opts: &ForwardOpts) -
                     for o in 0..out_ch {
                         for p in 0..ph {
                             for q in 0..pw {
-                                let mut m = f32::MIN;
+                                // NEG_INFINITY, not f32::MIN: windows of
+                                // deeply negative (pre-clamp) activations
+                                // must still pool to their true max.
+                                let mut m = f32::NEG_INFINITY;
                                 for du in 0..2 {
                                     for dv in 0..2 {
                                         m = m.max(act[(o * oh + 2 * p + du) * ow + 2 * q + dv]);

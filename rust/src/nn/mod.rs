@@ -9,9 +9,16 @@
 //! [`forward`] additionally implements UnIT pruning *in the float
 //! domain* (Eqs. 2 and 3 verbatim) with exact kept/skipped-MAC counting,
 //! mirroring the paper's "debug build" that reports skip statistics.
+//!
+//! [`planned`] is the prepacked fast path: conv `w̄` tables hoisted out
+//! of the per-call loop, magnitude-sorted linear rows with binary-search
+//! early exit, and reusable scratch buffers — bit-identical outputs at a
+//! fraction of the host cost. Batched evaluation runs on it.
 
 pub mod forward;
 pub mod layers;
+pub mod planned;
 
 pub use forward::{forward, ForwardOpts, ForwardStats};
 pub use layers::{conv2d_shape, Layer};
+pub use planned::{FloatPlan, FloatScratch};

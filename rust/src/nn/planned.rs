@@ -1,0 +1,404 @@
+//! Prepacked float forward: the host-fast twin of [`super::forward`].
+//!
+//! [`forward`](super::forward::forward) recomputes the conv layers'
+//! input-independent Eq. 3 thresholds `w̄ = T/|w|` on *every call* and
+//! allocates fresh activation buffers per layer. [`FloatPlan::compile`]
+//! hoists all of that into a one-time compile step:
+//!
+//! * conv `w̄` tables are computed once and reused across calls;
+//! * each linear weight row is magnitude-sorted so Eq. 2's keep-set
+//!   `|w| > T/|x|` is a prefix found by binary search — skipped MACs
+//!   cost O(log n_out) amortized instead of one compare each;
+//! * [`FloatScratch`] ping-pong buffers remove per-call allocation.
+//!
+//! Results are **bit-identical** to the reference pass: per output
+//! element, contributions are applied in the same order (ascending
+//! input index, taps in declaration order), and the same f32 predicate
+//! decides every keep/skip, so logits and per-layer kept/skipped
+//! counts match exactly. `evaluate_float` and the parallel batched
+//! eval in [`crate::train::eval`] run on this path.
+
+use super::forward::{ForwardOpts, ForwardStats};
+use super::layers::{conv2d_shape, Layer};
+use crate::models::{ModelDef, Params};
+
+#[derive(Debug, Clone)]
+enum FLayer {
+    Conv {
+        out_ch: usize,
+        in_ch: usize,
+        kh: usize,
+        kw: usize,
+        h: usize,
+        wd: usize,
+        oh: usize,
+        ow: usize,
+        pool: bool,
+        w: Vec<f32>,
+        b: Vec<f32>,
+        /// Hoisted Eq. 3 thresholds `T/|w|` (∞ for zero weights), same
+        /// layout as `w`.
+        wbar: Vec<f32>,
+    },
+    Linear {
+        n_in: usize,
+        n_out: usize,
+        relu: bool,
+        b: Vec<f32>,
+        /// Layer threshold `T`.
+        t: f32,
+        /// Per input row: weights sorted by descending `|w|`.
+        sorted_w: Vec<f32>,
+        /// `|w|` of `sorted_w` (binary-search key).
+        sorted_abs: Vec<f32>,
+        /// Original output index per sorted tap.
+        sorted_idx: Vec<u32>,
+    },
+}
+
+/// Reusable ping-pong activation buffers for [`FloatPlan::forward`].
+#[derive(Debug, Clone)]
+pub struct FloatScratch {
+    act_a: Vec<f32>,
+    act_b: Vec<f32>,
+}
+
+/// A `ModelDef + Params + ForwardOpts` triple compiled for fast host
+/// execution (thresholds and FATReLU cut-off are baked in).
+#[derive(Debug, Clone)]
+pub struct FloatPlan {
+    layers: Vec<FLayer>,
+    fat_t: f32,
+    input_len: usize,
+    n_layers: usize,
+    max_act: usize,
+}
+
+impl FloatPlan {
+    pub fn compile(def: &ModelDef, params: &Params, opts: &ForwardOpts) -> FloatPlan {
+        assert_eq!(opts.t_vec.len(), def.layers.len(), "t_vec arity");
+        let input_len = def.input_len();
+        let mut shape = def.input_shape;
+        let mut max_act = input_len;
+        let mut layers = Vec::with_capacity(def.layers.len());
+        for (li, layer) in def.layers.iter().enumerate() {
+            let t = opts.t_vec[li];
+            let w = &params.weights[li];
+            let b = &params.biases[li];
+            match *layer {
+                Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
+                    let [c, h, wd] = shape;
+                    debug_assert_eq!(c, in_ch, "conv input channels");
+                    let (oh, ow) = conv2d_shape(h, wd, kh, kw);
+                    // Identical formula to the reference pass — the
+                    // whole point is computing it once, not per call.
+                    let wbar: Vec<f32> = w
+                        .iter()
+                        .map(|&wv| {
+                            let a = wv.abs();
+                            if a > 0.0 {
+                                t / a
+                            } else {
+                                f32::INFINITY
+                            }
+                        })
+                        .collect();
+                    max_act = max_act.max(out_ch * oh * ow);
+                    shape = if pool { [out_ch, oh / 2, ow / 2] } else { [out_ch, oh, ow] };
+                    layers.push(FLayer::Conv {
+                        out_ch,
+                        in_ch,
+                        kh,
+                        kw,
+                        h,
+                        wd,
+                        oh,
+                        ow,
+                        pool,
+                        w: w.clone(),
+                        b: b.clone(),
+                        wbar,
+                    });
+                }
+                Layer::Linear { n_in, n_out, relu } => {
+                    debug_assert_eq!(shape.iter().product::<usize>(), n_in, "linear input");
+                    let mut sorted_w = Vec::with_capacity(n_in * n_out);
+                    let mut sorted_abs = Vec::with_capacity(n_in * n_out);
+                    let mut sorted_idx = Vec::with_capacity(n_in * n_out);
+                    let mut order: Vec<u32> = Vec::with_capacity(n_out);
+                    for k in 0..n_in {
+                        let row = &w[k * n_out..(k + 1) * n_out];
+                        order.clear();
+                        order.extend(0..n_out as u32);
+                        order.sort_by(|&a, &b| {
+                            row[b as usize].abs().total_cmp(&row[a as usize].abs())
+                        });
+                        for &j in &order {
+                            let wv = row[j as usize];
+                            sorted_w.push(wv);
+                            sorted_abs.push(wv.abs());
+                            sorted_idx.push(j);
+                        }
+                    }
+                    max_act = max_act.max(n_out);
+                    shape = [n_out, 1, 1];
+                    layers.push(FLayer::Linear {
+                        n_in,
+                        n_out,
+                        relu,
+                        b: b.clone(),
+                        t,
+                        sorted_w,
+                        sorted_abs,
+                        sorted_idx,
+                    });
+                }
+            }
+        }
+        FloatPlan {
+            n_layers: layers.len(),
+            layers,
+            fat_t: opts.fat_t,
+            input_len,
+            max_act,
+        }
+    }
+
+    /// Allocate a scratch for this plan (one per thread).
+    pub fn new_scratch(&self) -> FloatScratch {
+        FloatScratch {
+            act_a: vec![0.0f32; self.max_act],
+            act_b: vec![0.0f32; self.max_act],
+        }
+    }
+
+    /// Planned forward pass: identical `(logits, stats)` to
+    /// [`super::forward::forward`] under the compiled opts.
+    pub fn forward(&self, x: &[f32], s: &mut FloatScratch) -> (Vec<f32>, ForwardStats) {
+        assert_eq!(x.len(), self.input_len, "input length");
+        let mut stats = ForwardStats {
+            kept: vec![0; self.n_layers],
+            skipped: vec![0; self.n_layers],
+        };
+        s.act_a[..x.len()].copy_from_slice(x);
+        let mut in_a = true;
+        let mut cur_len = x.len();
+        for (li, layer) in self.layers.iter().enumerate() {
+            let (src_buf, dst_buf) = if in_a {
+                (&mut s.act_a, &mut s.act_b)
+            } else {
+                (&mut s.act_b, &mut s.act_a)
+            };
+            let src: &[f32] = &src_buf[..cur_len];
+            match layer {
+                FLayer::Conv {
+                    out_ch,
+                    in_ch,
+                    kh,
+                    kw,
+                    h,
+                    wd,
+                    oh,
+                    ow,
+                    pool,
+                    w,
+                    b,
+                    wbar,
+                } => {
+                    let (out_ch, in_ch, kh, kw, h, wd, oh, ow) =
+                        (*out_ch, *in_ch, *kh, *kw, *h, *wd, *oh, *ow);
+                    let ickk = in_ch * kh * kw;
+                    let mut kept = 0u64;
+                    let mut skipped = 0u64;
+                    for o in 0..out_ch {
+                        let wrow = &w[o * ickk..(o + 1) * ickk];
+                        let brow = &wbar[o * ickk..(o + 1) * ickk];
+                        for p in 0..oh {
+                            for q in 0..ow {
+                                let mut acc = b[o];
+                                let mut ti = 0usize;
+                                for ci in 0..in_ch {
+                                    for u in 0..kh {
+                                        let row = &src[(ci * h + p + u) * wd + q..];
+                                        for v in 0..kw {
+                                            let xv = row[v];
+                                            // Eq. 3: keep iff |x| > T/|w|
+                                            if xv.abs() > brow[ti] {
+                                                acc += xv * wrow[ti];
+                                                kept += 1;
+                                            } else {
+                                                skipped += 1;
+                                            }
+                                            ti += 1;
+                                        }
+                                    }
+                                }
+                                dst_buf[(o * oh + p) * ow + q] = acc;
+                            }
+                        }
+                    }
+                    stats.kept[li] = kept;
+                    stats.skipped[li] = skipped;
+                    // FATReLU (fat_t = 0 ⇒ ReLU)
+                    for v in dst_buf[..out_ch * oh * ow].iter_mut() {
+                        if *v <= self.fat_t {
+                            *v = 0.0;
+                        }
+                    }
+                    cur_len = out_ch * oh * ow;
+                    if *pool {
+                        let (ph, pw) = (oh / 2, ow / 2);
+                        // In place: each write lands at index w while its
+                        // four reads sit at ≥ 4w, so no unread input is
+                        // clobbered.
+                        for o in 0..out_ch {
+                            for p in 0..ph {
+                                for q in 0..pw {
+                                    let mut m = f32::NEG_INFINITY;
+                                    for du in 0..2 {
+                                        for dv in 0..2 {
+                                            m = m.max(
+                                                dst_buf
+                                                    [(o * oh + 2 * p + du) * ow + 2 * q + dv],
+                                            );
+                                        }
+                                    }
+                                    dst_buf[(o * ph + p) * pw + q] = m;
+                                }
+                            }
+                        }
+                        cur_len = out_ch * ph * pw;
+                    }
+                }
+                FLayer::Linear {
+                    n_in,
+                    n_out,
+                    relu,
+                    b,
+                    t,
+                    sorted_w,
+                    sorted_abs,
+                    sorted_idx,
+                } => {
+                    let (n_in, n_out) = (*n_in, *n_out);
+                    dst_buf[..n_out].copy_from_slice(b);
+                    let mut kept = 0u64;
+                    let mut skipped = 0u64;
+                    for k in 0..n_in {
+                        let xv = src[k];
+                        let a = xv.abs();
+                        if a > 0.0 {
+                            let tbar = *t / a;
+                            let abs_row = &sorted_abs[k * n_out..(k + 1) * n_out];
+                            // Eq. 2 keep-set = the sorted-row prefix with
+                            // |w| > T/|x|.
+                            let cut = abs_row.partition_point(|&ab| ab > tbar);
+                            kept += cut as u64;
+                            skipped += (n_out - cut) as u64;
+                            if cut > 0 {
+                                let ws = &sorted_w[k * n_out..k * n_out + cut];
+                                let idx = &sorted_idx[k * n_out..k * n_out + cut];
+                                for (wv, &j) in ws.iter().zip(idx) {
+                                    dst_buf[j as usize] += xv * *wv;
+                                }
+                            }
+                        } else {
+                            // zero activation: whole row skipped
+                            skipped += n_out as u64;
+                        }
+                    }
+                    stats.kept[li] = kept;
+                    stats.skipped[li] = skipped;
+                    if *relu {
+                        for v in dst_buf[..n_out].iter_mut() {
+                            if *v <= self.fat_t {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    cur_len = n_out;
+                }
+            }
+            in_a = !in_a;
+        }
+        let act = if in_a { &s.act_a } else { &s.act_b };
+        (act[..cur_len].to_vec(), stats)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{zoo, Params, MODEL_NAMES};
+    use crate::nn::forward;
+
+    fn bit_identical(def: &ModelDef, params: &Params, x: &[f32], opts: &ForwardOpts) {
+        let (want, wstats) = forward(def, params, x, opts);
+        let plan = FloatPlan::compile(def, params, opts);
+        let mut s = plan.new_scratch();
+        let (got, gstats) = plan.forward(x, &mut s);
+        assert_eq!(got.len(), want.len());
+        for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                a.to_bits() == b.to_bits(),
+                "{}: logit {i} differs: {a} vs {b}",
+                def.name
+            );
+        }
+        assert_eq!(gstats.kept, wstats.kept, "{} kept", def.name);
+        assert_eq!(gstats.skipped, wstats.skipped, "{} skipped", def.name);
+    }
+
+    #[test]
+    fn planned_bit_identical_across_zoo() {
+        for name in MODEL_NAMES {
+            let def = zoo(name);
+            let params = Params::random(&def, 31);
+            let x: Vec<f32> = (0..def.input_len())
+                .map(|i| (((i * 19) % 41) as f32 - 20.0) / 11.0)
+                .collect();
+            for t in [0.0f32, 0.08, 0.4] {
+                let opts = ForwardOpts { t_vec: vec![t; def.layers.len()], fat_t: 0.0 };
+                bit_identical(&def, &params, &x, &opts);
+            }
+        }
+    }
+
+    #[test]
+    fn planned_bit_identical_with_fatrelu() {
+        let def = zoo("widar");
+        let params = Params::random(&def, 33);
+        let x: Vec<f32> =
+            (0..def.input_len()).map(|i| ((i % 27) as f32 - 13.0) / 8.0).collect();
+        let opts = ForwardOpts { t_vec: vec![0.15; def.layers.len()], fat_t: 0.3 };
+        bit_identical(&def, &params, &x, &opts);
+    }
+
+    #[test]
+    fn scratch_reuse_is_stateless() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 35);
+        let opts = ForwardOpts { t_vec: vec![0.1; 3], fat_t: 0.0 };
+        let plan = FloatPlan::compile(&def, &params, &opts);
+        let mut s = plan.new_scratch();
+        let xa = vec![0.4f32; def.input_len()];
+        let xb: Vec<f32> = (0..def.input_len()).map(|i| ((i % 7) as f32 - 3.0) / 4.0).collect();
+        let (la, _) = plan.forward(&xa, &mut s);
+        let _ = plan.forward(&xb, &mut s);
+        let (la2, _) = plan.forward(&xa, &mut s);
+        assert_eq!(la, la2);
+    }
+
+    #[test]
+    fn prop_planned_equivalence_random() {
+        crate::util::prop::check(55, 12, |g| {
+            let def = zoo("mnist");
+            let params = Params::random(&def, g.case as u64 + 101);
+            let x = g.vec_normal(def.input_len());
+            let t_vec: Vec<f32> = (0..3).map(|_| g.f32_in(0.0, 0.6)).collect();
+            let fat_t = if g.bool() { g.f32_in(0.0, 0.5) } else { 0.0 };
+            let opts = ForwardOpts { t_vec, fat_t };
+            bit_identical(&def, &params, &x, &opts);
+        });
+    }
+}

@@ -1,0 +1,195 @@
+//! Machine-readable perf trajectory: `BENCH_perf.json`.
+//!
+//! `benches/perf_hotpath.rs` prints human tables *and* serializes the
+//! same numbers here so the repo accumulates a comparable perf record
+//! from PR to PR (no serde in the vendored set — the writer is a small
+//! hand-rolled JSON emitter; keys are fixed identifiers and strings
+//! are plain ASCII labels, so escaping is limited to quotes/backslash).
+
+use std::io::Write as _;
+use std::path::Path;
+
+/// One engine-throughput measurement (per mode × backend).
+#[derive(Debug, Clone)]
+pub struct EngineRow {
+    pub mode: String,
+    /// `"naive"` (reference loops) or `"planned"` (prepacked plans).
+    pub backend: String,
+    pub inf_per_s: f64,
+    pub mconn_per_s: f64,
+    pub us_per_inf: f64,
+}
+
+/// One division-estimator measurement.
+#[derive(Debug, Clone)]
+pub struct DivRow {
+    pub name: String,
+    pub ns_per_op: f64,
+}
+
+/// One coordinator round-trip measurement.
+#[derive(Debug, Clone)]
+pub struct CoordRow {
+    pub workers: usize,
+    pub req_per_s: f64,
+    pub p50_us: u64,
+    pub p99_us: u64,
+}
+
+/// One batched-eval measurement.
+#[derive(Debug, Clone)]
+pub struct EvalRow {
+    pub label: String,
+    pub samples_per_s: f64,
+}
+
+/// The full perf snapshot emitted by `perf_hotpath`.
+#[derive(Debug, Clone, Default)]
+pub struct BenchPerf {
+    pub model: String,
+    pub engine: Vec<EngineRow>,
+    /// Planned-vs-naive throughput ratios per mode.
+    pub speedups: Vec<(String, f64)>,
+    pub divs: Vec<DivRow>,
+    pub coord: Vec<CoordRow>,
+    pub eval: Vec<EvalRow>,
+}
+
+fn esc(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
+}
+
+fn num(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "null".to_string()
+    }
+}
+
+impl BenchPerf {
+    pub fn to_json(&self) -> String {
+        let mut out = String::from("{\n");
+        out.push_str(&format!("  \"model\": \"{}\",\n", esc(&self.model)));
+        out.push_str("  \"engine_throughput\": [\n");
+        for (i, r) in self.engine.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"mode\": \"{}\", \"backend\": \"{}\", \"inferences_per_s\": {}, \
+                 \"mconn_per_s\": {}, \"us_per_inference\": {}}}{}\n",
+                esc(&r.mode),
+                esc(&r.backend),
+                num(r.inf_per_s),
+                num(r.mconn_per_s),
+                num(r.us_per_inf),
+                if i + 1 < self.engine.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"planned_speedup\": {");
+        for (i, (mode, s)) in self.speedups.iter().enumerate() {
+            out.push_str(&format!(
+                "{}\"{}\": {}",
+                if i > 0 { ", " } else { "" },
+                esc(mode),
+                num(*s)
+            ));
+        }
+        out.push_str("},\n  \"division_ns_per_op\": {");
+        for (i, d) in self.divs.iter().enumerate() {
+            out.push_str(&format!(
+                "{}\"{}\": {}",
+                if i > 0 { ", " } else { "" },
+                esc(&d.name),
+                num(d.ns_per_op)
+            ));
+        }
+        out.push_str("},\n  \"coordinator\": [\n");
+        for (i, c) in self.coord.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"workers\": {}, \"req_per_s\": {}, \"p50_us\": {}, \"p99_us\": {}}}{}\n",
+                c.workers,
+                num(c.req_per_s),
+                c.p50_us,
+                c.p99_us,
+                if i + 1 < self.coord.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ],\n  \"batched_eval\": [\n");
+        for (i, e) in self.eval.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"samples_per_s\": {}}}{}\n",
+                esc(&e.label),
+                num(e.samples_per_s),
+                if i + 1 < self.eval.len() { "," } else { "" }
+            ));
+        }
+        out.push_str("  ]\n}\n");
+        out
+    }
+
+    /// Write the JSON to `path` (creating parent dirs as needed).
+    pub fn write(&self, path: &Path) -> std::io::Result<()> {
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let mut f = std::fs::File::create(path)?;
+        f.write_all(self.to_json().as_bytes())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_shape_and_escaping() {
+        let b = BenchPerf {
+            model: "mnist".into(),
+            engine: vec![
+                EngineRow {
+                    mode: "unit".into(),
+                    backend: "naive".into(),
+                    inf_per_s: 100.0,
+                    mconn_per_s: 24.5,
+                    us_per_inf: 10000.0,
+                },
+                EngineRow {
+                    mode: "unit".into(),
+                    backend: "planned".into(),
+                    inf_per_s: 300.0,
+                    mconn_per_s: 73.5,
+                    us_per_inf: 3333.0,
+                },
+            ],
+            speedups: vec![("unit".into(), 3.0)],
+            divs: vec![DivRow { name: "shift\"x".into(), ns_per_op: 1.25 }],
+            coord: vec![CoordRow { workers: 2, req_per_s: 1000.0, p50_us: 90, p99_us: 400 }],
+            eval: vec![EvalRow { label: "parallel-4".into(), samples_per_s: 800.0 }],
+        };
+        let j = b.to_json();
+        assert!(j.contains("\"planned_speedup\": {\"unit\": 3.000}"));
+        assert!(j.contains("\"backend\": \"planned\""));
+        assert!(j.contains("shift\\\"x"));
+        // balanced braces/brackets (cheap well-formedness check)
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
+        assert_eq!(j.matches('[').count(), j.matches(']').count());
+    }
+
+    #[test]
+    fn write_roundtrip() {
+        let dir = std::env::temp_dir().join("unit_pruner_bench_json");
+        let path = dir.join("BENCH_perf.json");
+        let b = BenchPerf { model: "mnist".into(), ..Default::default() };
+        b.write(&path).unwrap();
+        let s = std::fs::read_to_string(&path).unwrap();
+        assert!(s.contains("\"model\": \"mnist\""));
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn non_finite_becomes_null() {
+        assert_eq!(num(f64::INFINITY), "null");
+        assert_eq!(num(1.5), "1.500");
+    }
+}

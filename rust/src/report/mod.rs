@@ -1,6 +1,8 @@
 //! Experiment reporting: paper-style result rows shared by the benches
-//! and EXPERIMENTS.md.
+//! and EXPERIMENTS.md, plus the machine-readable perf trajectory
+//! ([`bench`] → `BENCH_perf.json`).
 
+pub mod bench;
 pub mod experiments;
 
 use crate::util::table::{f, pct, Table};

@@ -10,4 +10,4 @@ pub mod artifacts;
 pub mod pjrt;
 
 pub use artifacts::ArtifactStore;
-pub use pjrt::{Executable, Runtime};
+pub use pjrt::{pjrt_available, try_cpu, Executable, Runtime};

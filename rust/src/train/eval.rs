@@ -1,10 +1,20 @@
 //! Evaluation helpers: accuracy / macro-F1 / MAC statistics over a split
 //! using the float forward pass (the paper's desktop-platform numbers)
 //! — the MCU-platform equivalents come from [`crate::engine`].
+//!
+//! Both entry points run on the prepacked [`FloatPlan`] (compile once,
+//! reuse scratch), which is bit-identical to the naive per-sample
+//! [`crate::nn::forward`]:
+//!
+//! * [`evaluate_float`] — sequential, the drop-in original API;
+//! * [`evaluate_float_parallel`] — the same evaluation fanned out over
+//!   a simple `std::thread::scope` pool (no rayon in the vendored set),
+//!   with deterministic, order-independent aggregation so its result
+//!   is identical to the sequential one.
 
 use crate::data::Split;
 use crate::models::{ModelDef, Params};
-use crate::nn::{forward, ForwardOpts, ForwardStats};
+use crate::nn::{FloatPlan, ForwardOpts, ForwardStats};
 use crate::util::stats::{accuracy, argmax, macro_f1};
 
 /// Aggregated evaluation result.
@@ -19,6 +29,22 @@ pub struct EvalResult {
     pub n: usize,
 }
 
+fn finish(
+    def: &ModelDef,
+    preds: Vec<usize>,
+    labels: Vec<usize>,
+    agg: ForwardStats,
+    n: usize,
+) -> EvalResult {
+    EvalResult {
+        accuracy: accuracy(&preds, &labels),
+        macro_f1: macro_f1(&preds, &labels, def.classes),
+        mac_skipped: agg.skip_fraction(),
+        stats: agg,
+        n,
+    }
+}
+
 /// Evaluate `params` on up to `max_samples` of `split` under `opts`.
 pub fn evaluate_float(
     def: &ModelDef,
@@ -29,22 +55,70 @@ pub fn evaluate_float(
 ) -> EvalResult {
     let n = split.len().min(max_samples);
     assert!(n > 0, "empty eval split");
+    let plan = FloatPlan::compile(def, params, opts);
+    let mut scratch = plan.new_scratch();
     let mut preds = Vec::with_capacity(n);
     let mut labels = Vec::with_capacity(n);
     let mut agg = ForwardStats::default();
     for i in 0..n {
-        let (logits, stats) = forward(def, params, split.sample(i), opts);
+        let (logits, stats) = plan.forward(split.sample(i), &mut scratch);
         preds.push(argmax(&logits));
         labels.push(split.y[i]);
         agg.merge(&stats);
     }
-    EvalResult {
-        accuracy: accuracy(&preds, &labels),
-        macro_f1: macro_f1(&preds, &labels, def.classes),
-        mac_skipped: agg.skip_fraction(),
-        stats: agg,
-        n,
+    finish(def, preds, labels, agg, n)
+}
+
+/// Parallel batched evaluation: identical result to [`evaluate_float`]
+/// (same plan, per-slot predictions, commutative stat sums), computed
+/// on `threads` worker threads. `threads == 0` means "use available
+/// parallelism".
+pub fn evaluate_float_parallel(
+    def: &ModelDef,
+    params: &Params,
+    split: &Split,
+    opts: &ForwardOpts,
+    max_samples: usize,
+    threads: usize,
+) -> EvalResult {
+    let n = split.len().min(max_samples);
+    assert!(n > 0, "empty eval split");
+    let requested = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let threads = requested.clamp(1, n);
+    let plan = FloatPlan::compile(def, params, opts);
+    let chunk = (n + threads - 1) / threads;
+    let mut preds = vec![0usize; n];
+    let mut parts: Vec<ForwardStats> = Vec::with_capacity(threads);
+    std::thread::scope(|sc| {
+        let plan = &plan;
+        let mut handles = Vec::with_capacity(threads);
+        for (tid, pred_chunk) in preds.chunks_mut(chunk).enumerate() {
+            handles.push(sc.spawn(move || {
+                let mut scratch = plan.new_scratch();
+                let mut agg = ForwardStats::default();
+                let base = tid * chunk;
+                for (off, slot) in pred_chunk.iter_mut().enumerate() {
+                    let (logits, stats) = plan.forward(split.sample(base + off), &mut scratch);
+                    *slot = argmax(&logits);
+                    agg.merge(&stats);
+                }
+                agg
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("eval worker panicked"));
+        }
+    });
+    let mut agg = ForwardStats::default();
+    for p in &parts {
+        agg.merge(p);
     }
+    let labels: Vec<usize> = split.y[..n].to_vec();
+    finish(def, preds, labels, agg, n)
 }
 
 #[cfg(test)]
@@ -71,5 +145,32 @@ mod tests {
         let lo = evaluate_float(&def, &params, &ds.test, &ForwardOpts::unit(vec![0.01; 3]), 10);
         let hi = evaluate_float(&def, &params, &ds.test, &ForwardOpts::unit(vec![0.5; 3]), 10);
         assert!(hi.mac_skipped > lo.mac_skipped);
+    }
+
+    #[test]
+    fn parallel_identical_to_sequential() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 4);
+        let ds = mnist_like::generate(5, Sizes { train: 4, val: 4, test: 30 });
+        let opts = ForwardOpts::unit(vec![0.2; 3]);
+        let seq = evaluate_float(&def, &params, &ds.test, &opts, 30);
+        for threads in [1usize, 2, 3, 7, 0] {
+            let par = evaluate_float_parallel(&def, &params, &ds.test, &opts, 30, threads);
+            assert_eq!(par.n, seq.n, "threads={threads}");
+            assert_eq!(par.accuracy, seq.accuracy, "threads={threads}");
+            assert_eq!(par.macro_f1, seq.macro_f1, "threads={threads}");
+            assert_eq!(par.mac_skipped, seq.mac_skipped, "threads={threads}");
+            assert_eq!(par.stats.kept, seq.stats.kept, "threads={threads}");
+            assert_eq!(par.stats.skipped, seq.stats.skipped, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn parallel_more_threads_than_samples() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 6);
+        let ds = mnist_like::generate(7, Sizes { train: 4, val: 4, test: 3 });
+        let r = evaluate_float_parallel(&def, &params, &ds.test, &ForwardOpts::dense(3), 3, 16);
+        assert_eq!(r.n, 3);
     }
 }

@@ -4,5 +4,5 @@
 pub mod eval;
 pub mod trainer;
 
-pub use eval::{evaluate_float, EvalResult};
+pub use eval::{evaluate_float, evaluate_float_parallel, EvalResult};
 pub use trainer::{ensure_trained, ensure_trained_tagged, train, TrainConfig};

@@ -46,6 +46,22 @@ impl Gen {
     pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
         (0..len).map(|_| self.normal()).collect()
     }
+
+    /// Pick one element uniformly (for enum-ish choices: models, modes,
+    /// estimators).
+    pub fn choice<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        assert!(!items.is_empty(), "choice over empty slice");
+        &items[self.usize_in(0, items.len() - 1)]
+    }
+
+    /// Input vector with a controllable fraction of exact zeros — the
+    /// zero-skip paths are the interesting edge for the engine
+    /// equivalence properties.
+    pub fn vec_sparse_normal(&mut self, len: usize, zero_frac: f64) -> Vec<f32> {
+        (0..len)
+            .map(|_| if self.rng.chance(zero_frac) { 0.0 } else { self.rng.normal() })
+            .collect()
+    }
 }
 
 /// Run `cases` property checks. The closure should panic (e.g. via

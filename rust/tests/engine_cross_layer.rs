@@ -3,7 +3,9 @@
 //! property-style sweeps of the skip-equivalence invariant.
 
 use unit_pruner::approx::{DivApprox, DivExact, DivKind};
-use unit_pruner::engine::{infer, EngineConfig, QModel};
+use unit_pruner::engine::{
+    infer, EngineConfig, InferOutput, PlanBacked, PlanConfig, PruneMode, QModel,
+};
 use unit_pruner::models::{zoo, Params, MODEL_NAMES};
 use unit_pruner::nn::{forward, ForwardOpts};
 use unit_pruner::pruning::{apply_global_magnitude, Thresholds};
@@ -165,6 +167,161 @@ fn prop_fixed_engine_never_exceeds_float_magnitude_wildly() {
             assert!(sorted[0] - sorted[1] < 0.5, "argmax flip with large margin");
         }
     });
+}
+
+// ---------------------------------------------------------------------
+// Planned-engine equivalence: the prepacked execution plans
+// (engine::plan) must be indistinguishable from the reference loops —
+// bit-identical logits, per-layer kept/skipped counts, and the full
+// ledger — for every model, mode, estimator, and threshold setting.
+// ---------------------------------------------------------------------
+
+const ALL_MODES: [PruneMode; 4] = [
+    PruneMode::Dense,
+    PruneMode::StaticSparse,
+    PruneMode::ZeroSkip,
+    PruneMode::Unit,
+];
+
+fn assert_equivalent(naive: &InferOutput, planned: &InferOutput, ctx: &str) {
+    assert_eq!(planned.logits_raw, naive.logits_raw, "{ctx}: logits");
+    assert_eq!(planned.kept, naive.kept, "{ctx}: kept");
+    assert_eq!(planned.skipped, naive.skipped, "{ctx}: skipped");
+    assert_eq!(planned.ledger.counts, naive.ledger.counts, "{ctx}: op counts");
+    assert_eq!(
+        planned.ledger.compute_cycles, naive.ledger.compute_cycles,
+        "{ctx}: compute cycles"
+    );
+    assert_eq!(planned.ledger.mem_cycles, naive.ledger.mem_cycles, "{ctx}: mem cycles");
+}
+
+fn run_both(q: &QModel, x: &[i16], pcfg: PlanConfig) -> (InferOutput, InferOutput) {
+    let d = pcfg.div.build();
+    let cfg = EngineConfig {
+        mode: pcfg.mode,
+        div: d.as_ref(),
+        sonic_accumulators: pcfg.sonic_accumulators,
+        precomputed_conv_thresholds: pcfg.precomputed_conv_thresholds,
+        t_scale_q8: pcfg.t_scale_q8,
+    };
+    let naive = infer(q, x, &cfg);
+    let mut pb = PlanBacked::new(q, pcfg);
+    let planned = pb.infer(x);
+    (naive, planned)
+}
+
+#[test]
+fn planned_equivalence_all_zoo_models_all_modes() {
+    for name in MODEL_NAMES {
+        let def = zoo(name);
+        let params = Params::random(&def, 41);
+        let th = Thresholds::uniform(def.layers.len(), 0.25);
+        let x_f = test_input(def.input_len(), 6);
+        for mode in ALL_MODES {
+            let mut q = QModel::quantize(&def, &params);
+            if mode == PruneMode::Unit {
+                q = q.with_thresholds(&th);
+            }
+            let x = q.quantize_input(&x_f);
+            let pcfg = PlanConfig::for_mode(mode, DivKind::Shift);
+            let (naive, planned) = run_both(&q, &x, pcfg);
+            assert_equivalent(&naive, &planned, &format!("{name}/{mode:?}"));
+        }
+    }
+}
+
+#[test]
+fn planned_equivalence_all_division_estimators() {
+    let def = zoo("cifar");
+    let params = Params::random(&def, 43);
+    let th = Thresholds::uniform(def.layers.len(), 0.3);
+    let q = QModel::quantize(&def, &params).with_thresholds(&th);
+    let x = q.quantize_input(&test_input(def.input_len(), 7));
+    for kind in DivKind::all() {
+        let pcfg = PlanConfig::unit(kind);
+        let (naive, planned) = run_both(&q, &x, pcfg);
+        assert_equivalent(&naive, &planned, &format!("cifar/unit/{kind:?}"));
+    }
+}
+
+#[test]
+fn planned_equivalence_on_ttp_sparse_weights() {
+    // Statically sparse weights exercise the zero-weight plan pruning
+    // in every mode (free skips, prefix nnz rows).
+    let def = zoo("mnist");
+    let params = apply_global_magnitude(&Params::random(&def, 47), 0.6);
+    let th = Thresholds::uniform(3, 0.2);
+    let x_f = test_input(def.input_len(), 8);
+    for mode in ALL_MODES {
+        let mut q = QModel::quantize(&def, &params);
+        if mode == PruneMode::Unit {
+            q = q.with_thresholds(&th);
+        }
+        let x = q.quantize_input(&x_f);
+        let (naive, planned) = run_both(&q, &x, PlanConfig::for_mode(mode, DivKind::Mask));
+        assert_equivalent(&naive, &planned, &format!("ttp/{mode:?}"));
+    }
+}
+
+#[test]
+fn prop_planned_equivalence_random_configs() {
+    // Random model / thresholds (incl. per-channel groups) / FATReLU /
+    // estimator / runtime scale / sonic / precomputed flags / sparse
+    // inputs: the planned path may never drift from the reference.
+    prop::check(4242, 30, |g| {
+        let name = *g.choice(&["mnist", "cifar"]);
+        let def = zoo(name);
+        let params = Params::random(&def, g.case as u64 + 211);
+        let nl = def.layers.len();
+        let mut th = Thresholds::uniform(nl, 0.0);
+        for t in th.per_layer.iter_mut() {
+            *t = g.f32_in(0.0, 0.7);
+        }
+        if g.bool() {
+            // per-output-channel refinement on the first conv layer
+            let out_ch = 6; // both mnist/cifar conv1 have 6 output channels
+            th.groups[0] = (0..out_ch).map(|_| g.f32_in(0.0, 0.6)).collect();
+        }
+        let mode = *g.choice(&ALL_MODES);
+        let kind = *g.choice(&DivKind::all());
+        let mut q = QModel::quantize(&def, &params);
+        if mode == PruneMode::Unit {
+            q = q.with_thresholds(&th);
+        }
+        if g.bool() {
+            q = q.with_fatrelu(g.f32_in(0.0, 0.5));
+        }
+        let pcfg = PlanConfig {
+            mode,
+            div: kind,
+            sonic_accumulators: g.bool(),
+            precomputed_conv_thresholds: g.bool(),
+            t_scale_q8: g.u32_in(0, 640),
+        };
+        let x_f = g.vec_sparse_normal(def.input_len(), 0.3);
+        let x = q.quantize_input(&x_f);
+        let (naive, planned) = run_both(&q, &x, pcfg);
+        assert_equivalent(&naive, &planned, &format!("{name}/{mode:?}/{kind:?}/prop"));
+    });
+}
+
+#[test]
+fn planned_serves_many_inferences_without_drift() {
+    // Scratch reuse across a stream of different inputs (the serving
+    // pattern) must match per-call naive inference every time.
+    let def = zoo("mnist");
+    let params = Params::random(&def, 53);
+    let th = Thresholds::uniform(3, 0.25);
+    let q = QModel::quantize(&def, &params).with_thresholds(&th);
+    let d = DivKind::Shift.build();
+    let cfg = EngineConfig::unit(d.as_ref());
+    let mut pb = PlanBacked::new(&q, PlanConfig::unit(DivKind::Shift));
+    for salt in 0..12 {
+        let x = q.quantize_input(&test_input(def.input_len(), 100 + salt));
+        let naive = infer(&q, &x, &cfg);
+        let planned = pb.infer(&x);
+        assert_equivalent(&naive, &planned, &format!("stream sample {salt}"));
+    }
 }
 
 #[test]

@@ -4,18 +4,25 @@
 
 use unit_pruner::data::{by_name, Sizes};
 use unit_pruner::nn::ForwardOpts;
-use unit_pruner::runtime::{ArtifactStore, Runtime};
+use unit_pruner::runtime::{try_cpu, ArtifactStore};
 use unit_pruner::train::{evaluate_float, train, TrainConfig};
 
 #[test]
 fn train_step_artifact_reduces_loss_and_lifts_accuracy() {
+    // Artifact- and runtime-gated (see pjrt_roundtrip.rs): skips with a
+    // log line when `make artifacts` has not run or the build lacks the
+    // `xla` feature.
     let store = ArtifactStore::discover();
-    assert!(
-        store.dir.join(".stamp").is_file(),
-        "artifacts missing at {:?} — run `make artifacts` first",
-        store.dir
-    );
-    let rt = Runtime::cpu().unwrap();
+    if !store.dir.join(".stamp").is_file() {
+        eprintln!(
+            "[train_smoke] skipping: artifacts missing at {:?} (run `make artifacts`)",
+            store.dir
+        );
+        return;
+    }
+    let Some(rt) = try_cpu("train_smoke") else {
+        return;
+    };
     let ds = by_name("mnist", 1234, Sizes { train: 256, val: 32, test: 64 });
     let cfg = TrainConfig { steps: 60, lr: 0.05, seed: 5, log_every: 0, lr_decay: false };
     let (params, losses) = train(&rt, &store, "mnist", &ds, &cfg).unwrap();
