@@ -4,10 +4,13 @@
 //! make artifacts && cargo run --release --example serve_requests
 //! ```
 //!
-//! Submits a burst of requests to (a) the MCU-simulator worker pool with
-//! UnIT pruning and (b) the PJRT float backend with dynamic batching,
-//! and reports throughput, latency percentiles and (for the MCU) the
-//! modeled on-device cost of each answer.
+//! Submits a burst of requests to (a) the MCU-simulator work-stealing
+//! worker pool with UnIT pruning and (b) the PJRT float backend with
+//! dynamic batching, and reports throughput, latency percentiles —
+//! queue wait and service time separately — and (for the MCU) the
+//! modeled on-device cost of each answer. The MCU burst mixes single
+//! submissions with one large batched request that is split across the
+//! worker shards and reassembled in input order.
 
 use anyhow::Result;
 use std::time::Duration;
@@ -51,13 +54,26 @@ fn main() -> Result<()> {
             ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) },
         );
         let t0 = std::time::Instant::now();
-        let rxs: Vec<_> = (0..n_req)
+        // Half the load as one batched request (split across the worker
+        // shards on the MCU backend), half as singles.
+        let n_batch = if backend == "mcu" { n_req / 2 } else { 0 };
+        let batch_rx = (n_batch > 0).then(|| {
+            coord.submit_batch(
+                (0..n_batch).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect(),
+            )
+        });
+        let rxs: Vec<_> = (n_batch..n_req)
             .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
             .collect();
         let mut hits = 0usize;
+        if let Some(rx) = batch_rx {
+            for (i, resp) in rx.recv()?.into_iter().enumerate() {
+                hits += (resp.predicted == ds.test.y[i % ds.test.len()]) as usize;
+            }
+        }
         for (i, rx) in rxs.into_iter().enumerate() {
             let resp = rx.recv()?;
-            hits += (resp.predicted == ds.test.y[i % ds.test.len()]) as usize;
+            hits += (resp.predicted == ds.test.y[(n_batch + i) % ds.test.len()]) as usize;
         }
         let dt = t0.elapsed().as_secs_f64();
         let s = coord.metrics.snapshot();
@@ -72,6 +88,10 @@ fn main() -> Result<()> {
             s.p95_us,
             s.p99_us,
             s.mean_batch
+        );
+        println!(
+            "  queue wait p50/p99 {}/{} us | service p50/p99 {}/{} us",
+            s.queue_p50_us, s.queue_p99_us, s.service_p50_us, s.service_p99_us
         );
         if backend == "mcu" {
             println!(

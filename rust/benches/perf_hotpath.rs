@@ -7,14 +7,19 @@
 //! * division estimators — host ns/op;
 //! * coordinator overhead — request round-trip latency vs raw engine
 //!   call at several worker counts (McuSim workers run the planned
-//!   engine);
-//! * batched float eval — sequential vs `evaluate_float_parallel`.
+//!   engine on the work-stealing shard pool), with queue wait and
+//!   service time reported separately;
+//! * batched eval — sequential vs parallel, float
+//!   (`evaluate_float_parallel`) and fixed-point
+//!   (`evaluate_quant_parallel`).
 //!
 //! Run before and after each optimization; record deltas in
 //! EXPERIMENTS.md §Perf. Alongside the printed tables the same numbers
 //! are serialized to `BENCH_perf.json` (override the path with
 //! `$UNIT_BENCH_JSON`) so the perf trajectory is machine-readable from
-//! this PR onward.
+//! this PR onward; `unit bench diff` compares two snapshots and gates
+//! CI. Set `$UNIT_PERF_QUICK` for the CI smoke mode (same measurements,
+//! fewer repetitions).
 
 use std::hint::black_box;
 use std::time::Instant;
@@ -27,10 +32,16 @@ use unit_pruner::models::{zoo, Params};
 use unit_pruner::nn::ForwardOpts;
 use unit_pruner::pruning::Thresholds;
 use unit_pruner::report::bench::{BenchPerf, CoordRow, DivRow, EngineRow, EvalRow};
-use unit_pruner::train::{evaluate_float, evaluate_float_parallel};
+use unit_pruner::train::{
+    evaluate_float, evaluate_float_parallel, evaluate_quant, evaluate_quant_parallel,
+};
 use unit_pruner::util::table::Table;
 
 fn main() {
+    let quick = std::env::var("UNIT_PERF_QUICK").is_ok();
+    if quick {
+        println!("(UNIT_PERF_QUICK set: CI smoke mode, reduced repetitions)\n");
+    }
     let def = zoo("mnist");
     let params = Params::random(&def, 3);
     let ds = mnist_like::generate(5, Sizes { train: 4, val: 4, test: 32 });
@@ -71,7 +82,11 @@ fn main() {
         assert_eq!(a.kept, b.kept, "{name}: backend kept counts diverge");
 
         let mut per_backend = Vec::new();
-        for (backend, reps) in [("naive", 60usize), ("planned", 240usize)] {
+        // Quick mode trims wall-clock but keeps enough reps that the
+        // planned-vs-naive ratios (the CI-gated rows) stay stable on a
+        // noisy shared runner.
+        let (naive_reps, planned_reps) = if quick { (24usize, 96usize) } else { (60, 240) };
+        for (backend, reps) in [("naive", naive_reps), ("planned", planned_reps)] {
             // warmup
             if backend == "naive" {
                 black_box(infer(&q, &inputs[0], &cfg));
@@ -116,7 +131,7 @@ fn main() {
     // 2. division estimators (host ns/op) ----------------------------------
     println!("=== Perf 2: division estimators, host ns/op ===\n");
     let mut t = Table::new(vec!["estimator", "ns/op"]);
-    let n = 30_000_000usize;
+    let n = if quick { 3_000_000usize } else { 30_000_000 };
     for kind in DivKind::all() {
         let d = kind.build();
         let t0 = Instant::now();
@@ -134,19 +149,31 @@ fn main() {
     println!("{}", t.render());
 
     // 3. coordinator overhead ----------------------------------------------
-    println!("=== Perf 3: coordinator round-trip overhead ===\n");
-    let mut t = Table::new(vec!["workers", "req/s", "p50 us", "p99 us"]);
+    // Work-stealing shard pool: req/s should scale with the worker
+    // count; queue vs service percentiles expose shard imbalance.
+    println!("=== Perf 3: coordinator round-trip overhead (work-stealing pool) ===\n");
+    let mut t = Table::new(vec![
+        "workers", "req/s", "p50 us", "p99 us", "queue p50/p99", "service p50/p99",
+    ]);
+    let n_req = if quick { 64usize } else { 200 };
     for workers in [1usize, 2, 4] {
         let q = QModel::quantize(&def, &params).with_thresholds(&th);
         let coord = Coordinator::start(
             BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
             ServeConfig { workers, ..Default::default() },
         );
-        let n_req = 200usize;
         let t0 = Instant::now();
-        let rxs: Vec<_> = (0..n_req)
+        // Mixed intake, as production traffic would be: one large
+        // batched request split across shards, then a single-request
+        // flood.
+        let n_batch = n_req / 4;
+        let batch_rx = coord.submit_batch(
+            (0..n_batch).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect(),
+        );
+        let rxs: Vec<_> = (0..n_req - n_batch)
             .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
             .collect();
+        assert_eq!(batch_rx.recv().unwrap().len(), n_batch);
         for rx in rxs {
             rx.recv().unwrap();
         }
@@ -158,20 +185,27 @@ fn main() {
             format!("{:.1}", n_req as f64 / dt),
             snap.p50_us.to_string(),
             snap.p99_us.to_string(),
+            format!("{}/{}", snap.queue_p50_us, snap.queue_p99_us),
+            format!("{}/{}", snap.service_p50_us, snap.service_p99_us),
         ]);
         json.coord.push(CoordRow {
             workers,
             req_per_s: n_req as f64 / dt,
             p50_us: snap.p50_us,
             p99_us: snap.p99_us,
+            queue_p50_us: snap.queue_p50_us,
+            queue_p99_us: snap.queue_p99_us,
+            service_p50_us: snap.service_p50_us,
+            service_p99_us: snap.service_p99_us,
         });
     }
     println!("{}", t.render());
 
-    // 4. batched float eval: sequential vs parallel -------------------------
-    println!("=== Perf 4: batched float eval (samples/s) ===\n");
+    // 4. batched eval: sequential vs parallel, float + fixed-point ----------
+    println!("=== Perf 4: batched eval (samples/s) ===\n");
     let mut t = Table::new(vec!["eval", "samples/s"]);
-    let eval_ds = mnist_like::generate(9, Sizes { train: 4, val: 4, test: 128 });
+    let eval_n = if quick { 48 } else { 128 };
+    let eval_ds = mnist_like::generate(9, Sizes { train: 4, val: 4, test: eval_n });
     let opts = ForwardOpts::unit(th.per_layer.clone());
     let n_eval = eval_ds.test.len();
     for (label, threads) in [("sequential", usize::MAX), ("parallel-2", 2), ("parallel-auto", 0)]
@@ -181,6 +215,29 @@ fn main() {
             evaluate_float(&def, &params, &eval_ds.test, &opts, n_eval)
         } else {
             evaluate_float_parallel(&def, &params, &eval_ds.test, &opts, n_eval, threads)
+        };
+        let dt = t0.elapsed().as_secs_f64();
+        black_box(r.accuracy);
+        let sps = n_eval as f64 / dt;
+        t.row(vec![label.to_string(), format!("{sps:.1}")]);
+        json.eval.push(EvalRow { label: label.to_string(), samples_per_s: sps });
+    }
+    // Fixed-point twin: the Fig. 5–7 sweep hot path. Equivalence guard
+    // first (bit-identical parallel vs sequential), then the clocks.
+    let qe = QModel::quantize(&def, &params).with_thresholds(&th);
+    let qcfg = PlanConfig::for_mode(PruneMode::Unit, DivKind::Shift);
+    {
+        let seq = evaluate_quant(&qe, qcfg, &eval_ds.test, n_eval);
+        let par = evaluate_quant_parallel(&qe, qcfg, &eval_ds.test, n_eval, 0);
+        assert_eq!(seq.preds, par.preds, "quant eval: parallel preds diverge");
+        assert_eq!(seq.ledger, par.ledger, "quant eval: parallel ledger diverges");
+    }
+    for (label, threads) in [("quant-sequential", usize::MAX), ("quant-parallel-auto", 0)] {
+        let t0 = Instant::now();
+        let r = if threads == usize::MAX {
+            evaluate_quant(&qe, qcfg, &eval_ds.test, n_eval)
+        } else {
+            evaluate_quant_parallel(&qe, qcfg, &eval_ds.test, n_eval, threads)
         };
         let dt = t0.elapsed().as_secs_f64();
         black_box(r.accuracy);

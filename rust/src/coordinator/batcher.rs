@@ -85,7 +85,13 @@ mod tests {
     }
 
     fn req(id: u64, tx: &std::sync::mpsc::Sender<super::super::InferResponse>) -> InferRequest {
-        InferRequest { id, x: vec![], t_enqueue: Instant::now(), reply: tx.clone() }
+        InferRequest {
+            id,
+            x: vec![],
+            slot: 0,
+            t_enqueue: Instant::now(),
+            reply: super::super::ReplyTo::Single(tx.clone()),
+        }
     }
 
     #[test]

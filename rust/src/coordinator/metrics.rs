@@ -2,8 +2,40 @@
 //! MAC/energy statistics. Shared across workers behind a mutex (the
 //! request path touches it once per request, far from contention at
 //! simulator throughputs).
+//!
+//! Queue wait (enqueue → dequeue) and service time (dequeue → response)
+//! are recorded separately: a shard-balance regression in the
+//! work-stealing pool shows up as queue percentiles growing while
+//! service percentiles stay flat, which the total alone cannot reveal.
+//!
+//! Percentiles are computed over a bounded sliding window
+//! ([`TIMING_WINDOW`] most recent requests) so a long-lived server's
+//! metrics stay O(1) in memory and `snapshot` stays O(window) however
+//! many requests have been served; the counters and means cover the
+//! full lifetime.
 
 use std::sync::Mutex;
+
+/// Requests retained for percentile computation (per timing series).
+pub const TIMING_WINDOW: usize = 1 << 16;
+
+/// Fixed-capacity ring of the most recent timing samples.
+#[derive(Debug, Default, Clone)]
+struct TimingWindow {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+impl TimingWindow {
+    fn push(&mut self, v: u64) {
+        if self.buf.len() < TIMING_WINDOW {
+            self.buf.push(v);
+        } else {
+            self.buf[self.next] = v;
+            self.next = (self.next + 1) % TIMING_WINDOW;
+        }
+    }
+}
 
 /// Aggregated serving metrics.
 #[derive(Debug, Default)]
@@ -15,7 +47,11 @@ pub struct Metrics {
 struct Inner {
     served: u64,
     batches: u64,
-    latencies_us: Vec<u64>,
+    /// Paired rings: index i of both windows belongs to the same
+    /// request (pushed together under the mutex), so total latency is
+    /// derived per slot instead of stored a third time.
+    queue_us: TimingWindow,
+    service_us: TimingWindow,
     mac_skipped_sum: f64,
     energy_mj_sum: f64,
     mcu_secs_sum: f64,
@@ -26,13 +62,30 @@ struct Inner {
 pub struct Snapshot {
     pub served: u64,
     pub batches: u64,
+    /// Total latency (queue + service) percentiles.
     pub p50_us: u64,
     pub p95_us: u64,
     pub p99_us: u64,
+    /// Queue-wait percentiles (enqueue → worker pickup).
+    pub queue_p50_us: u64,
+    pub queue_p95_us: u64,
+    pub queue_p99_us: u64,
+    /// Service-time percentiles (worker pickup → response).
+    pub service_p50_us: u64,
+    pub service_p95_us: u64,
+    pub service_p99_us: u64,
     pub mean_batch: f64,
     pub mean_mac_skipped: f64,
     pub mean_energy_mj: f64,
     pub mean_mcu_secs: f64,
+}
+
+fn percentile(sorted: &[u64], p: f64) -> u64 {
+    if sorted.is_empty() {
+        0
+    } else {
+        sorted[((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize]
+    }
 }
 
 impl Metrics {
@@ -46,10 +99,20 @@ impl Metrics {
         let _ = n;
     }
 
-    pub fn record_request(&self, latency_us: u64, mac_skipped: f64, energy_mj: f64, mcu_secs: f64) {
+    /// Record one finished request: queue wait and service time in µs,
+    /// plus the modeled MCU statistics.
+    pub fn record_request(
+        &self,
+        queue_us: u64,
+        service_us: u64,
+        mac_skipped: f64,
+        energy_mj: f64,
+        mcu_secs: f64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.served += 1;
-        g.latencies_us.push(latency_us);
+        g.queue_us.push(queue_us);
+        g.service_us.push(service_us);
         g.mac_skipped_sum += mac_skipped;
         g.energy_mj_sum += energy_mj;
         g.mcu_secs_sum += mcu_secs;
@@ -57,22 +120,28 @@ impl Metrics {
 
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
-        let mut lat = g.latencies_us.clone();
+        let mut que = g.queue_us.buf.clone();
+        let mut svc = g.service_us.buf.clone();
+        // Same slot of both rings = same request, so per-request total
+        // latency is the element-wise sum.
+        let mut lat: Vec<u64> =
+            que.iter().zip(svc.iter()).map(|(a, b)| a + b).collect();
         lat.sort_unstable();
-        let pct = |p: f64| -> u64 {
-            if lat.is_empty() {
-                0
-            } else {
-                lat[((p / 100.0) * (lat.len() as f64 - 1.0)).round() as usize]
-            }
-        };
+        que.sort_unstable();
+        svc.sort_unstable();
         let served = g.served.max(1) as f64;
         Snapshot {
             served: g.served,
             batches: g.batches,
-            p50_us: pct(50.0),
-            p95_us: pct(95.0),
-            p99_us: pct(99.0),
+            p50_us: percentile(&lat, 50.0),
+            p95_us: percentile(&lat, 95.0),
+            p99_us: percentile(&lat, 99.0),
+            queue_p50_us: percentile(&que, 50.0),
+            queue_p95_us: percentile(&que, 95.0),
+            queue_p99_us: percentile(&que, 99.0),
+            service_p50_us: percentile(&svc, 50.0),
+            service_p95_us: percentile(&svc, 95.0),
+            service_p99_us: percentile(&svc, 99.0),
             mean_batch: g.served as f64 / g.batches.max(1) as f64,
             mean_mac_skipped: g.mac_skipped_sum / served,
             mean_energy_mj: g.energy_mj_sum / served,
@@ -89,14 +158,38 @@ mod tests {
     fn percentiles_ordered() {
         let m = Metrics::new();
         for i in 0..100 {
-            m.record_request(i, 0.5, 0.1, 0.01);
+            m.record_request(i, 2 * i, 0.5, 0.1, 0.01);
         }
         m.record_batch(100);
         let s = m.snapshot();
         assert_eq!(s.served, 100);
         assert!(s.p50_us <= s.p95_us && s.p95_us <= s.p99_us);
+        assert!(s.queue_p50_us <= s.queue_p99_us);
+        assert!(s.service_p50_us <= s.service_p99_us);
         assert!((s.mean_mac_skipped - 0.5).abs() < 1e-9);
         assert_eq!(s.mean_batch, 100.0);
+    }
+
+    #[test]
+    fn queue_and_service_split_total() {
+        let m = Metrics::new();
+        m.record_request(10, 30, 0.0, 0.0, 0.0);
+        let s = m.snapshot();
+        assert_eq!(s.queue_p50_us, 10);
+        assert_eq!(s.service_p50_us, 30);
+        assert_eq!(s.p50_us, 40);
+    }
+
+    #[test]
+    fn timing_window_is_bounded_and_keeps_recent_samples() {
+        let mut w = TimingWindow::default();
+        for i in 0..(TIMING_WINDOW as u64 + 100) {
+            w.push(i);
+        }
+        assert_eq!(w.buf.len(), TIMING_WINDOW);
+        // the 100 oldest samples were overwritten by the newest 100
+        assert!(w.buf.contains(&(TIMING_WINDOW as u64 + 99)));
+        assert!(!w.buf.contains(&0));
     }
 
     #[test]
@@ -104,5 +197,7 @@ mod tests {
         let s = Metrics::new().snapshot();
         assert_eq!(s.served, 0);
         assert_eq!(s.p99_us, 0);
+        assert_eq!(s.queue_p99_us, 0);
+        assert_eq!(s.service_p99_us, 0);
     }
 }

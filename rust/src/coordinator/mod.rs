@@ -6,7 +6,10 @@
 //!
 //! * **McuSim** — the fixed-point engine ([`crate::engine`]) with UnIT
 //!   pruning and the full MSP430 cycle/energy ledger (one sample at a
-//!   time, as the real MCU would);
+//!   time, as the real MCU would), on a work-stealing sharded worker
+//!   pool ([`shard`]): per-worker deques, round-robin/least-loaded
+//!   submission, idle workers stealing from the longest queue, and
+//!   batched requests split across workers with in-order reassembly;
 //! * **Pjrt** — the AOT float artifact at batch 8 via the PJRT runtime
 //!   (the paper's desktop-class deployment), with dynamic batching and
 //!   zero-padding of partial batches.
@@ -19,10 +22,12 @@ pub mod batcher;
 pub mod metrics;
 pub mod request;
 pub mod server;
+pub mod shard;
 
 pub use adaptive::EnergyController;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use request::{InferRequest, InferResponse};
+pub use request::{BatchSink, InferRequest, InferResponse, ReplyTo};
 pub use server::{BackendChoice, Coordinator, ServeConfig};
+pub use shard::ShardPool;

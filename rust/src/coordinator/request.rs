@@ -1,17 +1,86 @@
-//! Request/response types flowing through the coordinator.
+//! Request/response types flowing through the coordinator, plus the
+//! in-order reassembly sink for split batches.
 
 use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-/// One inference request.
+/// One inference request (a single submission, or one sample of a
+/// split batch).
 pub struct InferRequest {
     pub id: u64,
     /// Flat `C·H·W` f32 input.
     pub x: Vec<f32>,
+    /// Position of this sample inside its batch (0 for singles).
+    pub slot: usize,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
-    /// Response channel.
-    pub reply: Sender<InferResponse>,
+    /// Response route.
+    pub reply: ReplyTo,
+}
+
+/// Where a worker delivers the finished response.
+pub enum ReplyTo {
+    /// A plain single-request reply channel.
+    Single(Sender<InferResponse>),
+    /// One slot of a split batch; the sink reassembles input order.
+    Batch(Arc<BatchSink>),
+}
+
+impl ReplyTo {
+    /// Route `resp` to its requester. `slot` indexes the batch sink
+    /// (ignored for singles). Dropped receivers are fine — serving
+    /// never fails because a client went away.
+    pub fn deliver(self, slot: usize, resp: InferResponse) {
+        match self {
+            ReplyTo::Single(tx) => {
+                let _ = tx.send(resp);
+            }
+            ReplyTo::Batch(sink) => sink.put(slot, resp),
+        }
+    }
+}
+
+/// Collects the responses of one split batch and releases them as a
+/// single in-order `Vec` once every slot has arrived. Samples of one
+/// batch execute on different workers in any order; the sink is what
+/// guarantees the caller still sees input order.
+pub struct BatchSink {
+    state: Mutex<BatchState>,
+}
+
+struct BatchState {
+    slots: Vec<Option<InferResponse>>,
+    filled: usize,
+    tx: Option<Sender<Vec<InferResponse>>>,
+}
+
+impl BatchSink {
+    /// A sink expecting `n` slots, replying on `tx` when complete.
+    pub fn new(n: usize, tx: Sender<Vec<InferResponse>>) -> BatchSink {
+        BatchSink {
+            state: Mutex::new(BatchState {
+                slots: (0..n).map(|_| None).collect(),
+                filled: 0,
+                tx: Some(tx),
+            }),
+        }
+    }
+
+    /// Deposit the response for `slot`; the last deposit sends the
+    /// assembled batch.
+    pub fn put(&self, slot: usize, resp: InferResponse) {
+        let mut g = self.state.lock().unwrap();
+        debug_assert!(g.slots[slot].is_none(), "batch slot {slot} filled twice");
+        g.slots[slot] = Some(resp);
+        g.filled += 1;
+        if g.filled == g.slots.len() {
+            let tx = g.tx.take().expect("batch sink completed twice");
+            let out: Vec<InferResponse> =
+                g.slots.drain(..).map(|s| s.expect("missing batch slot")).collect();
+            let _ = tx.send(out);
+        }
+    }
 }
 
 /// The coordinator's answer.
@@ -26,7 +95,11 @@ pub struct InferResponse {
     pub energy_mj: f64,
     /// Modeled MCU wall-clock seconds (MCU backend; 0 for PJRT).
     pub mcu_secs: f64,
-    /// Host-side service latency (queue + compute).
+    /// Host-side queue wait: enqueue → a worker picked it up.
+    pub queue_us: u64,
+    /// Host-side service time: dequeue → response ready.
+    pub service_us: u64,
+    /// Total host-side latency (`queue_us + service_us`).
     pub latency_us: u64,
 }
 
@@ -35,23 +108,58 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn resp(id: u64) -> InferResponse {
+        InferResponse {
+            id,
+            logits: vec![1.0],
+            predicted: 0,
+            mac_skipped: 0.5,
+            energy_mj: 0.1,
+            mcu_secs: 0.2,
+            queue_us: 1,
+            service_us: 2,
+            latency_us: 3,
+        }
+    }
+
     #[test]
     fn reply_roundtrip() {
         let (tx, rx) = channel();
-        let req = InferRequest { id: 9, x: vec![0.0; 4], t_enqueue: Instant::now(), reply: tx };
-        req.reply
-            .send(InferResponse {
-                id: req.id,
-                logits: vec![1.0],
-                predicted: 0,
-                mac_skipped: 0.5,
-                energy_mj: 0.1,
-                mcu_secs: 0.2,
-                latency_us: 3,
-            })
-            .unwrap();
-        let resp = rx.recv().unwrap();
-        assert_eq!(resp.id, 9);
-        assert_eq!(resp.predicted, 0);
+        let req = InferRequest {
+            id: 9,
+            x: vec![0.0; 4],
+            slot: 0,
+            t_enqueue: Instant::now(),
+            reply: ReplyTo::Single(tx),
+        };
+        let (id, slot) = (req.id, req.slot);
+        req.reply.deliver(slot, resp(id));
+        let got = rx.recv().unwrap();
+        assert_eq!(got.id, 9);
+        assert_eq!(got.latency_us, got.queue_us + got.service_us);
+    }
+
+    #[test]
+    fn batch_sink_reassembles_input_order() {
+        let (tx, rx) = channel();
+        let sink = Arc::new(BatchSink::new(4, tx));
+        // Deliver out of order, as stealing workers would.
+        for slot in [2usize, 0, 3, 1] {
+            assert!(rx.try_recv().is_err(), "sent before all slots arrived");
+            sink.put(slot, resp(100 + slot as u64));
+        }
+        let out = rx.recv().unwrap();
+        assert_eq!(out.len(), 4);
+        for (slot, r) in out.iter().enumerate() {
+            assert_eq!(r.id, 100 + slot as u64, "slot {slot} out of order");
+        }
+    }
+
+    #[test]
+    fn batch_sink_survives_dropped_receiver() {
+        let (tx, rx) = channel();
+        let sink = BatchSink::new(1, tx);
+        drop(rx);
+        sink.put(0, resp(1)); // must not panic
     }
 }

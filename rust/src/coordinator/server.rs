@@ -2,28 +2,38 @@
 //!
 //! Thread topology:
 //!
-//! * **McuSim backend** — N worker threads share the request queue
-//!   (`Arc<Mutex<Receiver>>`); each runs the fixed-point engine on one
-//!   sample at a time, exactly as the target MCU would, and reports the
-//!   modeled cycles/energy with the prediction. The engine runs on a
-//!   shared prepacked [`PlannedModel`] (compiled once at start-up) with
-//!   a per-worker scratch arena — bit-identical to the naive engine,
-//!   several times faster on the host, zero allocation per request.
+//! * **McuSim backend** — N worker threads, each owning one shard of a
+//!   work-stealing [`ShardPool`] (see [`super::shard`]): `submit`
+//!   spreads load round-robin/least-loaded across the per-worker
+//!   deques, idle workers steal from the longest queue, and
+//!   [`Coordinator::submit_batch`] splits one request's samples across
+//!   shards and reassembles them in input order. Each worker runs the
+//!   fixed-point engine on one sample at a time, exactly as the target
+//!   MCU would, and reports the modeled cycles/energy with the
+//!   prediction. The engine runs on a shared prepacked
+//!   [`PlannedModel`] (compiled once at start-up) with a per-worker
+//!   scratch arena — bit-identical to the naive engine, several times
+//!   faster on the host, zero allocation per request.
 //! * **Pjrt backend** — a single executor thread *owns* the PJRT client
 //!   (the `xla` crate's client is `Rc`-based and not `Send`, so it is
 //!   created inside the thread), batches requests up to the artifact's
 //!   batch size (8), zero-pads partial batches, and fans results back
 //!   out.
+//!
+//! Every response carries queue wait and service time separately (and
+//! [`Metrics`] aggregates both), so a shard-balance regression shows up
+//! as a queue-percentile blowup even when service time is flat.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{InferRequest, InferResponse};
+use super::request::{BatchSink, InferRequest, InferResponse, ReplyTo};
+use super::shard::ShardPool;
 use crate::approx::DivKind;
 use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
 use crate::mcu::EnergyModel;
@@ -59,9 +69,16 @@ impl Default for ServeConfig {
     }
 }
 
+/// Request intake: the sharded pool (McuSim) or the executor channel
+/// (Pjrt, whose single thread batches dynamically).
+enum Intake {
+    Pool(Arc<ShardPool<InferRequest>>),
+    Chan(Sender<InferRequest>),
+}
+
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    tx: Option<Sender<InferRequest>>,
+    intake: Option<Intake>,
     handles: Vec<JoinHandle<()>>,
     next_id: AtomicU64,
     pub metrics: Arc<Metrics>,
@@ -70,32 +87,42 @@ pub struct Coordinator {
 impl Coordinator {
     /// Start serving with the chosen backend.
     pub fn start(backend: BackendChoice, cfg: ServeConfig) -> Coordinator {
-        let (tx, rx) = channel::<InferRequest>();
         let metrics = Arc::new(Metrics::new());
-        let handles = match backend {
+        let (intake, handles) = match backend {
             BackendChoice::McuSim { q, mode, div } => {
-                let shared = Arc::new(Mutex::new(rx));
+                let workers = cfg.workers.max(1);
+                let pool = Arc::new(ShardPool::new(workers));
                 // Compile the execution plan once; workers share the
                 // packed tables (read-only) and own their scratch.
                 let plan = Arc::new(PlannedModel::compile(&q, PlanConfig::for_mode(mode, div)));
-                (0..cfg.workers.max(1))
-                    .map(|_| {
-                        let rx = Arc::clone(&shared);
+                let handles = (0..workers)
+                    .map(|w| {
+                        let pool = Arc::clone(&pool);
                         let plan = Arc::clone(&plan);
                         let metrics = Arc::clone(&metrics);
-                        std::thread::spawn(move || mcu_worker(rx, plan, metrics))
+                        std::thread::spawn(move || mcu_worker(w, pool, plan, metrics))
                     })
-                    .collect()
+                    .collect();
+                (Intake::Pool(pool), handles)
             }
             BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
+                let (tx, rx) = channel::<InferRequest>();
                 let metrics = Arc::clone(&metrics);
                 let policy = BatchPolicy { max_batch: cfg.max_batch.min(8), max_wait: cfg.max_wait };
-                vec![std::thread::spawn(move || {
+                let handles = vec![std::thread::spawn(move || {
                     pjrt_executor(rx, model, params, t_vec, fat_t, policy, metrics)
-                })]
+                })];
+                (Intake::Chan(tx), handles)
             }
         };
-        Coordinator { tx: Some(tx), handles, next_id: AtomicU64::new(0), metrics }
+        Coordinator { intake: Some(intake), handles, next_id: AtomicU64::new(0), metrics }
+    }
+
+    fn dispatch(&self, req: InferRequest) {
+        match self.intake.as_ref().expect("coordinator closed") {
+            Intake::Pool(pool) => pool.push(req),
+            Intake::Chan(tx) => tx.send(req).expect("queue closed"),
+        }
     }
 
     /// Submit one request; returns the response channel.
@@ -104,39 +131,86 @@ impl Coordinator {
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             x,
+            slot: 0,
             t_enqueue: Instant::now(),
-            reply: rtx,
+            reply: ReplyTo::Single(rtx),
         };
-        self.tx.as_ref().expect("coordinator closed").send(req).expect("queue closed");
+        self.dispatch(req);
         rrx
     }
 
-    /// Close the intake and join all workers.
+    /// Submit one *batched* request: its samples are split across the
+    /// worker shards (so a large batch executes in parallel) and the
+    /// responses arrive as a single `Vec` in input order.
+    pub fn submit_batch(&self, xs: Vec<Vec<f32>>) -> Receiver<Vec<InferResponse>> {
+        let (rtx, rrx) = channel();
+        if xs.is_empty() {
+            let _ = rtx.send(Vec::new());
+            return rrx;
+        }
+        // The Pjrt executor re-batches dynamically and records its own
+        // batch sizes; for the sharded pool the split request *is* the
+        // batch, recorded here.
+        if matches!(self.intake, Some(Intake::Pool(_))) {
+            self.metrics.record_batch(xs.len());
+        }
+        let sink = Arc::new(BatchSink::new(xs.len(), rtx));
+        let t_enqueue = Instant::now();
+        for (slot, x) in xs.into_iter().enumerate() {
+            self.dispatch(InferRequest {
+                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                x,
+                slot,
+                t_enqueue,
+                reply: ReplyTo::Batch(Arc::clone(&sink)),
+            });
+        }
+        rrx
+    }
+
+    /// Close the intake and join all workers (queued requests drain
+    /// first — nothing is dropped).
     pub fn shutdown(mut self) {
-        self.tx.take(); // close channel
+        self.close_intake();
         for h in self.handles.drain(..) {
             h.join().expect("worker panicked");
         }
     }
+
+    fn close_intake(&mut self) {
+        match self.intake.take() {
+            Some(Intake::Pool(pool)) => pool.close(),
+            Some(Intake::Chan(tx)) => drop(tx),
+            None => {}
+        }
+    }
+}
+
+/// Dropping the handle without [`Coordinator::shutdown`] (early
+/// return, panic unwind) must not leak spinning worker threads: close
+/// the intake so workers drain and exit on their own. `shutdown` is
+/// still the graceful path — it additionally joins them.
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        self.close_intake();
+    }
 }
 
 fn mcu_worker(
-    rx: Arc<Mutex<Receiver<InferRequest>>>,
+    worker: usize,
+    pool: Arc<ShardPool<InferRequest>>,
     plan: Arc<PlannedModel>,
     metrics: Arc<Metrics>,
 ) {
     let energy = EnergyModel::default();
     // Per-worker scratch arena: no allocation on the request path.
     let mut scratch = plan.new_scratch();
-    loop {
-        let req = {
-            let guard = rx.lock().unwrap();
-            guard.recv()
-        };
-        let Ok(req) = req else { break };
+    while let Some(req) = pool.pop(worker) {
+        let t_deq = Instant::now();
+        let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
         let xi = plan.quantize_input(&req.x);
         let out = plan.infer(&xi, &mut scratch);
-        let latency_us = req.t_enqueue.elapsed().as_micros() as u64;
+        let service_us = t_deq.elapsed().as_micros() as u64;
         let resp = InferResponse {
             id: req.id,
             predicted: out.argmax(),
@@ -144,11 +218,21 @@ fn mcu_worker(
             energy_mj: out.ledger.millijoules(&energy),
             mcu_secs: out.ledger.secs(),
             logits: out.logits,
-            latency_us,
+            queue_us,
+            service_us,
+            latency_us: queue_us + service_us,
         };
-        metrics.record_batch(1);
-        metrics.record_request(latency_us, resp.mac_skipped, resp.energy_mj, resp.mcu_secs);
-        let _ = req.reply.send(resp); // receiver may have gone away
+        if matches!(req.reply, ReplyTo::Single(_)) {
+            metrics.record_batch(1);
+        }
+        metrics.record_request(
+            queue_us,
+            service_us,
+            resp.mac_skipped,
+            resp.energy_mj,
+            resp.mcu_secs,
+        );
+        req.reply.deliver(req.slot, resp);
     }
 }
 
@@ -177,6 +261,7 @@ fn pjrt_executor(
 
     let batcher = Batcher { policy };
     while let Some(reqs) = batcher.collect(&rx) {
+        let t_svc = Instant::now();
         let mut bx = vec![0.0f32; batch * sample_len];
         for (i, r) in reqs.iter().enumerate() {
             bx[i * sample_len..(i + 1) * sample_len].copy_from_slice(&r.x);
@@ -188,9 +273,10 @@ fn pjrt_executor(
         let out = exe.run_f32(&args).expect("pjrt execute");
         let logits_all = &out[0];
         metrics.record_batch(reqs.len());
+        let service_us = t_svc.elapsed().as_micros() as u64;
         for (i, req) in reqs.into_iter().enumerate() {
             let logits = logits_all[i * classes..(i + 1) * classes].to_vec();
-            let latency_us = req.t_enqueue.elapsed().as_micros() as u64;
+            let queue_us = t_svc.duration_since(req.t_enqueue).as_micros() as u64;
             let resp = InferResponse {
                 id: req.id,
                 predicted: argmax(&logits),
@@ -198,10 +284,12 @@ fn pjrt_executor(
                 mac_skipped: 0.0,
                 energy_mj: 0.0,
                 mcu_secs: 0.0,
-                latency_us,
+                queue_us,
+                service_us,
+                latency_us: queue_us + service_us,
             };
-            metrics.record_request(latency_us, 0.0, 0.0, 0.0);
-            let _ = req.reply.send(resp);
+            metrics.record_request(queue_us, service_us, 0.0, 0.0, 0.0);
+            req.reply.deliver(req.slot, resp);
         }
     }
 }
@@ -226,6 +314,7 @@ mod tests {
             let resp = rx.recv().unwrap();
             assert_eq!(resp.logits.len(), 10);
             assert!(resp.mcu_secs > 0.0);
+            assert_eq!(resp.latency_us, resp.queue_us + resp.service_us);
         }
         let snap = coord.metrics.snapshot();
         assert_eq!(snap.served, 6);
@@ -250,6 +339,64 @@ mod tests {
         }
         assert_eq!(got, n);
         assert_eq!(coord.metrics.snapshot().served, n as u64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn batch_submission_splits_and_reassembles_in_order() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 3);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 3, ..Default::default() },
+        );
+        let n = 17usize; // larger than the worker count: forces a split
+        let xs: Vec<Vec<f32>> =
+            (0..n).map(|i| vec![0.05 * i as f32; def.input_len()]).collect();
+        let rx = coord.submit_batch(xs);
+        let out = rx.recv().unwrap();
+        assert_eq!(out.len(), n);
+        // Ids are assigned sequentially at submit; input order must
+        // survive the cross-worker split.
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id - out[0].id, i as u64, "batch slot {i} reordered");
+        }
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.served, n as u64);
+        assert_eq!(snap.batches, 1);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn dropping_without_shutdown_drains_and_stops_workers() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 5);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 2, ..Default::default() },
+        );
+        let rxs: Vec<_> =
+            (0..4).map(|i| coord.submit(vec![0.1 * i as f32; def.input_len()])).collect();
+        drop(coord); // no shutdown(): Drop must close the pool, workers drain
+        for rx in rxs {
+            let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
+            assert_eq!(resp.logits.len(), 10);
+        }
+    }
+
+    #[test]
+    fn empty_batch_resolves_immediately() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 4);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig::default(),
+        );
+        let out = coord.submit_batch(Vec::new()).recv().unwrap();
+        assert!(out.is_empty());
         coord.shutdown();
     }
 }

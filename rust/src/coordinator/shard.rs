@@ -1,0 +1,352 @@
+//! Work-stealing sharded queues for the McuSim worker pool.
+//!
+//! PR 1 left the coordinator with one `Arc<Mutex<Receiver>>` shared by
+//! every worker: each dequeue serialized on a single lock, so request
+//! throughput stopped scaling past a couple of workers. This module
+//! replaces it with the classic sharded design:
+//!
+//! * each worker owns a **local deque** (FIFO from the owner's side);
+//! * [`ShardPool::push`] places new work round-robin with a
+//!   two-choice least-loaded refinement, so shards stay balanced
+//!   without a global lock;
+//! * an idle worker first drains its own shard, then **steals the
+//!   oldest item from the longest queue** (both ends sit under the
+//!   same shard mutex, so front-stealing costs the same as the
+//!   classic Chase-Lev back-steal while preserving request fairness —
+//!   the oldest waiter is served first, keeping queue-wait percentiles
+//!   honest under imbalance), then sweeps every shard before deciding
+//!   the pool is empty;
+//! * blocking pops park on one condvar; every push notifies one
+//!   sleeper under the same gate, so wakeups cannot be lost (a 50 ms
+//!   timed re-check is kept as belt-and-braces).
+//!
+//! The pool is deliberately generic over the item type: the serving
+//! path pushes [`crate::coordinator::InferRequest`]s, the tests push
+//! integers.
+//!
+//! Shutdown contract: after [`ShardPool::close`], `push` panics,
+//! blocked `pop`s drain whatever is still queued and then return
+//! `None`. Nothing is dropped: the closed flag is checked *inside*
+//! the target shard's lock on push, and a worker returns `None` only
+//! after a full sweep that began *after* it observed the closed flag —
+//! any successful racing push either lands where that sweep looks, or
+//! its shard critical section is mutex-ordered after the sweep's and
+//! is then forced to observe `closed` and panic instead of inserting.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
+
+/// Per-worker queues with round-robin submission and work stealing.
+#[derive(Debug)]
+pub struct ShardPool<T> {
+    shards: Vec<Mutex<VecDeque<T>>>,
+    /// Approximate per-shard lengths (maintained under each shard's
+    /// lock, read without it) — used to pick push targets and steal
+    /// victims; correctness never depends on them being exact.
+    lens: Vec<AtomicUsize>,
+    rr: AtomicUsize,
+    closed: AtomicBool,
+    /// Workers currently parked on (or entering) the condvar. Pushes
+    /// skip the gate lock entirely while this is zero, so a saturated
+    /// pool has no global lock on the submit path.
+    parked: AtomicUsize,
+    /// Number of successful non-local pops (observability + tests).
+    steals: AtomicU64,
+    gate: Mutex<()>,
+    cv: Condvar,
+}
+
+impl<T> ShardPool<T> {
+    /// A pool with `n` shards (one per worker; `n == 0` is rounded up).
+    pub fn new(n: usize) -> ShardPool<T> {
+        let n = n.max(1);
+        ShardPool {
+            shards: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
+            lens: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            rr: AtomicUsize::new(0),
+            closed: AtomicBool::new(false),
+            parked: AtomicUsize::new(0),
+            steals: AtomicU64::new(0),
+            gate: Mutex::new(()),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Total queued items (approximate while producers/consumers run).
+    pub fn queue_len(&self) -> usize {
+        self.lens.iter().map(|l| l.load(Ordering::Relaxed)).sum()
+    }
+
+    /// Successful steals so far (a shard-imbalance observability knob).
+    pub fn steal_count(&self) -> u64 {
+        self.steals.load(Ordering::Relaxed)
+    }
+
+    /// Enqueue on the round-robin shard, or its neighbor when that one
+    /// is shorter (power-of-two-choices keeps the queues balanced even
+    /// under skewed service times).
+    pub fn push(&self, item: T) {
+        let n = self.shards.len();
+        let a = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+        let b = (a + 1) % n;
+        let idx = if self.lens[b].load(Ordering::Relaxed) < self.lens[a].load(Ordering::Relaxed)
+        {
+            b
+        } else {
+            a
+        };
+        self.push_to(idx, item);
+    }
+
+    /// Enqueue on a specific shard (callers that manage placement
+    /// themselves; [`ShardPool::push`] is the balanced front door).
+    ///
+    /// Panics if the pool is closed — the check happens inside the
+    /// shard lock, so a push cannot race `close` into a drained shard
+    /// and silently lose the item.
+    pub fn push_to(&self, idx: usize, item: T) {
+        {
+            let mut q = self.shards[idx].lock().unwrap();
+            assert!(!self.closed.load(Ordering::Acquire), "push on closed ShardPool");
+            q.push_back(item);
+            self.lens[idx].store(q.len(), Ordering::Release);
+        }
+        // Wake a sleeper only if one exists (SeqCst pairs with the
+        // parked increment in `pop`: if the load sees 0, the worker's
+        // increment — and therefore its pre-park re-check — is ordered
+        // after our insert, so it finds the item instead of sleeping).
+        // One item needs one worker: notify_one, under the gate so the
+        // wakeup cannot slip between a sleeper's re-check and its wait.
+        if self.parked.load(Ordering::SeqCst) > 0 {
+            let _g = self.gate.lock().unwrap();
+            self.cv.notify_one();
+        }
+    }
+
+    fn pop_front_at(&self, idx: usize) -> Option<T> {
+        let mut q = self.shards[idx].lock().unwrap();
+        let item = q.pop_front();
+        self.lens[idx].store(q.len(), Ordering::Release);
+        item
+    }
+
+    fn steal_at(&self, idx: usize) -> Option<T> {
+        let item = self.pop_front_at(idx);
+        if item.is_some() {
+            self.steals.fetch_add(1, Ordering::Relaxed);
+        }
+        item
+    }
+
+    /// Non-blocking pop for `worker`: local shard first, then steal the
+    /// oldest item from the (approximately) longest other shard, then a
+    /// full sweep so `None` is an exact "nothing queued anywhere"
+    /// answer.
+    pub fn try_pop(&self, worker: usize) -> Option<T> {
+        let n = self.shards.len();
+        let local = worker % n;
+        if let Some(item) = self.pop_front_at(local) {
+            return Some(item);
+        }
+        let mut victim = None;
+        let mut victim_len = 0usize;
+        for (i, l) in self.lens.iter().enumerate() {
+            let len = l.load(Ordering::Relaxed);
+            if i != local && len > victim_len {
+                victim = Some(i);
+                victim_len = len;
+            }
+        }
+        if let Some(i) = victim {
+            if let Some(item) = self.steal_at(i) {
+                return Some(item);
+            }
+        }
+        for i in 0..n {
+            if i == local {
+                continue;
+            }
+            if let Some(item) = self.steal_at(i) {
+                return Some(item);
+            }
+        }
+        None
+    }
+
+    /// Blocking pop for `worker`. Returns `None` only once the pool is
+    /// closed *and* every shard has been drained.
+    pub fn pop(&self, worker: usize) -> Option<T> {
+        loop {
+            // Order matters: observe `closed` BEFORE the sweep. `None`
+            // is returned only when a full sweep that *started after*
+            // closed was seen comes up empty — a racing push either
+            // completed its shard critical section before the sweep
+            // visited that shard (the sweep finds the item) or entered
+            // it after (the mutex chain forces it to see `closed` and
+            // panic), so an item can never be stranded.
+            let closed = self.closed.load(Ordering::Acquire);
+            if let Some(item) = self.try_pop(worker) {
+                return Some(item);
+            }
+            if closed {
+                return None;
+            }
+            let guard = self.gate.lock().unwrap();
+            // Announce intent to park *before* the final re-check: any
+            // push after this sees parked > 0 and takes the notify
+            // path; any push before it is caught by the re-check.
+            self.parked.fetch_add(1, Ordering::SeqCst);
+            if let Some(item) = self.try_pop(worker) {
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                return Some(item);
+            }
+            if self.closed.load(Ordering::Acquire) {
+                // Close raced in after the pre-sweep load: go around
+                // for a final observe-closed-then-sweep pass instead of
+                // concluding emptiness from a pre-close sweep.
+                self.parked.fetch_sub(1, Ordering::SeqCst);
+                continue;
+            }
+            // The 50 ms timeout is a belt-and-braces backstop: a missed
+            // wakeup (impossible per the protocol above) would cost
+            // latency, never lose an item.
+            let _unused = self.cv.wait_timeout(guard, Duration::from_millis(50)).unwrap();
+            self.parked.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Close the intake and wake every parked worker.
+    pub fn close(&self) {
+        self.closed.store(true, Ordering::Release);
+        let _g = self.gate.lock().unwrap();
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn every_item_popped_exactly_once_under_contention() {
+        let pool: Arc<ShardPool<usize>> = Arc::new(ShardPool::new(4));
+        let n_items = 2000usize;
+        let producers: Vec<_> = (0..4)
+            .map(|p| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    for i in 0..n_items / 4 {
+                        pool.push(p * (n_items / 4) + i);
+                    }
+                })
+            })
+            .collect();
+        let consumers: Vec<_> = (0..4)
+            .map(|w| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut got = Vec::new();
+                    while let Some(v) = pool.pop(w) {
+                        got.push(v);
+                    }
+                    got
+                })
+            })
+            .collect();
+        for p in producers {
+            p.join().unwrap();
+        }
+        pool.close();
+        let mut all: Vec<usize> =
+            consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort_unstable();
+        let expect: Vec<usize> = (0..n_items).collect();
+        assert_eq!(all, expect, "items lost or duplicated");
+        assert_eq!(pool.queue_len(), 0);
+    }
+
+    #[test]
+    fn idle_workers_steal_from_loaded_shard() {
+        let pool: Arc<ShardPool<u32>> = Arc::new(ShardPool::new(4));
+        // Pile everything onto shard 0; workers 1..3 can only make
+        // progress by stealing.
+        for i in 0..600u32 {
+            pool.push_to(0, i);
+        }
+        pool.close();
+        let consumers: Vec<_> = (1..4)
+            .map(|w| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || {
+                    let mut n = 0usize;
+                    while pool.pop(w).is_some() {
+                        n += 1;
+                    }
+                    n
+                })
+            })
+            .collect();
+        let total: usize = consumers.into_iter().map(|c| c.join().unwrap()).sum();
+        assert_eq!(total, 600);
+        assert!(pool.steal_count() > 0, "no steals despite a fully skewed load");
+    }
+
+    #[test]
+    fn local_pops_are_fifo() {
+        let pool: ShardPool<u32> = ShardPool::new(2);
+        for i in 0..8u32 {
+            pool.push_to(1, i);
+        }
+        for i in 0..8u32 {
+            assert_eq!(pool.try_pop(1), Some(i));
+        }
+        assert_eq!(pool.try_pop(1), None);
+    }
+
+    #[test]
+    fn close_wakes_blocked_workers() {
+        let pool: Arc<ShardPool<u32>> = Arc::new(ShardPool::new(2));
+        let workers: Vec<_> = (0..2)
+            .map(|w| {
+                let pool = Arc::clone(&pool);
+                std::thread::spawn(move || pool.pop(w))
+            })
+            .collect();
+        std::thread::sleep(Duration::from_millis(20));
+        pool.close();
+        for h in workers {
+            assert_eq!(h.join().unwrap(), None);
+        }
+    }
+
+    #[test]
+    fn drain_completes_after_close() {
+        let pool: ShardPool<u32> = ShardPool::new(3);
+        for i in 0..30u32 {
+            pool.push(i);
+        }
+        pool.close();
+        let mut seen = std::collections::HashSet::new();
+        for w in 0..3 {
+            while let Some(v) = pool.pop(w) {
+                assert!(seen.insert(v));
+            }
+        }
+        assert_eq!(seen.len(), 30);
+    }
+
+    #[test]
+    #[should_panic(expected = "push on closed ShardPool")]
+    fn push_after_close_panics() {
+        let pool: ShardPool<u32> = ShardPool::new(1);
+        pool.close();
+        pool.push(1);
+    }
+}

@@ -6,6 +6,7 @@
 //! unit train  --model mnist --steps 400 # train via the AOT step artifact
 //! unit eval   --model mnist --div shift --percentile 20
 //! unit serve  --model mnist --requests 64 --workers 2 [--backend pjrt]
+//! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
 use anyhow::Result;
@@ -18,6 +19,7 @@ use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
 use unit_pruner::models::{zoo, MODEL_NAMES};
 use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::report::diff;
 use unit_pruner::runtime::{ArtifactStore, Runtime};
 use unit_pruner::train::{ensure_trained, evaluate_float, TrainConfig};
 use unit_pruner::util::cli::Args;
@@ -31,11 +33,94 @@ fn main() -> Result<()> {
         Some("eval") => cmd_eval(&args),
         Some("serve") => cmd_serve(&args),
         Some("memmap") => cmd_memmap(&args),
+        Some("bench") => cmd_bench(&args),
         Some(other) => {
-            eprintln!("unknown command {other}; try: info | train | eval | serve | memmap");
+            eprintln!("unknown command {other}; try: info | train | eval | serve | memmap | bench");
             std::process::exit(2);
         }
     }
+}
+
+/// `unit bench diff OLD NEW [--tolerance 10] [--ratios-only] [--warn-only]`
+///
+/// Compares two `BENCH_perf.json` snapshots and exits non-zero when any
+/// gated engine/coordinator/eval row regresses beyond the tolerance —
+/// the CI perf gate. `--ratios-only` gates only the machine-portable
+/// planned-vs-naive speedup ratios (for CI runners whose absolute
+/// throughput varies); `--warn-only` prints the delta table but always
+/// exits 0 (informational runs).
+fn cmd_bench(args: &Args) -> Result<()> {
+    match args.positional.get(1).map(|s| s.as_str()) {
+        Some("diff") => {}
+        _ => {
+            eprintln!(
+                "usage: unit bench diff OLD.json NEW.json \
+                 [--tolerance PCT] [--ratios-only] [--warn-only]"
+            );
+            std::process::exit(2);
+        }
+    }
+    let old_path = args
+        .get("old")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(2).cloned())
+        .unwrap_or_else(|| {
+            eprintln!("bench diff: missing OLD snapshot path");
+            std::process::exit(2);
+        });
+    let new_path = args
+        .get("new")
+        .map(str::to_string)
+        .or_else(|| args.positional.get(3).cloned())
+        .unwrap_or_else(|| {
+            eprintln!("bench diff: missing NEW snapshot path");
+            std::process::exit(2);
+        });
+    // The shared parser greedily reads `--flag value`; a boolean flag
+    // placed before the paths would swallow one. Catch that instead of
+    // mis-reporting a missing path.
+    for flag in ["ratios-only", "warn-only"] {
+        if let Some(v) = args.get(flag) {
+            if !matches!(v, "true" | "1" | "yes") {
+                eprintln!(
+                    "bench diff: --{flag} takes no value (got {v:?}); \
+                     place flags after the snapshot paths"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+    let tolerance = args.f64_or("tolerance", 10.0);
+    let ratios_only = args.flag("ratios-only");
+    let warn_only = args.flag("warn-only");
+
+    let old = diff::load_snapshot(std::path::Path::new(&old_path))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let new = diff::load_snapshot(std::path::Path::new(&new_path))
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let report = diff::diff_snapshots(&old, &new, tolerance, ratios_only);
+    println!(
+        "bench diff: {old_path} -> {new_path} (tolerance {tolerance}%{})",
+        if ratios_only { ", ratios only" } else { "" }
+    );
+    println!("{}", report.render());
+    let regs = report.regressions();
+    if regs.is_empty() {
+        println!("perf gate: OK ({} rows compared)", report.rows.len());
+        return Ok(());
+    }
+    eprintln!("perf gate: {} row(s) regressed > {tolerance}%:", regs.len());
+    for r in &regs {
+        eprintln!(
+            "  {} {} {}: {:.2} -> {:.2} ({:+.1}%)",
+            r.section, r.key, r.metric, r.old, r.new, r.delta_pct
+        );
+    }
+    if warn_only {
+        eprintln!("(--warn-only: not failing the build)");
+        return Ok(());
+    }
+    std::process::exit(1);
 }
 
 /// FRAM memory-map report for a (randomly initialized) model — the
@@ -222,6 +307,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
         snap.mean_batch,
         100.0 * snap.mean_mac_skipped,
         snap.mean_energy_mj
+    );
+    println!(
+        "queue wait p50/p99 = {}/{} us, service p50/p99 = {}/{} us",
+        snap.queue_p50_us, snap.queue_p99_us, snap.service_p50_us, snap.service_p99_us
     );
     Ok(())
 }

@@ -44,7 +44,7 @@ impl OpCounts {
 }
 
 /// Accumulating execution ledger (cycles + op counts).
-#[derive(Debug, Clone, Default)]
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Ledger {
     pub counts: OpCounts,
     /// Compute cycles (CPU arithmetic + control).
@@ -230,6 +230,88 @@ mod tests {
         l.fram_read(100);
         assert_eq!(l.compute_cycles, cost::MAC);
         assert_eq!(l.mem_cycles, 100 * super::super::fram::READ_CYCLES);
+    }
+
+    /// One randomly parameterized ledger charge, replayable onto any
+    /// ledger — the unit the shard-split property is built from.
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Mac,
+        Skip,
+        Compare,
+        Add,
+        MacN(u64),
+        SkipN(u64),
+        CompareN(u64),
+        Div(u64),
+        DivN(u64, u64),
+        Control(u64),
+        FramRead(u64),
+        FramWrite(u64),
+    }
+
+    impl Op {
+        fn apply(self, l: &mut Ledger) {
+            match self {
+                Op::Mac => l.mac(),
+                Op::Skip => l.skip(),
+                Op::Compare => l.compare(),
+                Op::Add => l.add(),
+                Op::MacN(n) => l.mac_n(n),
+                Op::SkipN(n) => l.skip_n(n),
+                Op::CompareN(n) => l.compare_n(n),
+                Op::Div(c) => l.div(c),
+                Op::DivN(n, c) => l.div_n(n, c),
+                Op::Control(c) => l.control(c),
+                Op::FramRead(w) => l.fram_read(w),
+                Op::FramWrite(w) => l.fram_write(w),
+            }
+        }
+    }
+
+    #[test]
+    fn merge_over_arbitrary_shard_splits_equals_unsharded() {
+        // The invariant evaluate_quant_parallel and the sharded serving
+        // metrics rest on: charging a work sequence into K per-shard
+        // ledgers and merging them (in any order) equals charging the
+        // whole sequence into one ledger.
+        crate::util::prop::check(0xA11CE, 300, |g| {
+            let n_ops = g.usize_in(0, 120);
+            let shards = g.usize_in(1, 8);
+            let mut whole = Ledger::new();
+            let mut parts = vec![Ledger::new(); shards];
+            for _ in 0..n_ops {
+                let op = match g.usize_in(0, 11) {
+                    0 => Op::Mac,
+                    1 => Op::Skip,
+                    2 => Op::Compare,
+                    3 => Op::Add,
+                    4 => Op::MacN(g.usize_in(0, 1000) as u64),
+                    5 => Op::SkipN(g.usize_in(0, 1000) as u64),
+                    6 => Op::CompareN(g.usize_in(0, 1000) as u64),
+                    7 => Op::Div(g.usize_in(0, 200) as u64),
+                    8 => Op::DivN(g.usize_in(0, 50) as u64, g.usize_in(0, 5000) as u64),
+                    9 => Op::Control(g.usize_in(0, 500) as u64),
+                    10 => Op::FramRead(g.usize_in(0, 300) as u64),
+                    _ => Op::FramWrite(g.usize_in(0, 300) as u64),
+                };
+                op.apply(&mut whole);
+                op.apply(&mut parts[g.usize_in(0, shards - 1)]);
+            }
+            // Merge in a shard order the generator picks, not 0..K.
+            let mut merged = Ledger::new();
+            let start = g.usize_in(0, shards - 1);
+            for i in 0..shards {
+                merged.merge(&parts[(start + i) % shards]);
+            }
+            assert_eq!(merged, whole, "shards={shards} n_ops={n_ops}");
+            // Derived quantities agree exactly too.
+            assert_eq!(merged.total_cycles(), whole.total_cycles());
+            assert_eq!(
+                merged.counts.total_connections(),
+                whole.counts.total_connections()
+            );
+        });
     }
 
     #[test]

@@ -27,13 +27,20 @@ pub struct DivRow {
     pub ns_per_op: f64,
 }
 
-/// One coordinator round-trip measurement.
-#[derive(Debug, Clone)]
+/// One coordinator round-trip measurement. Queue wait and service
+/// time are recorded separately so a shard-balance regression in the
+/// work-stealing pool is visible in the perf trajectory (queue
+/// percentiles blow up, service stays flat).
+#[derive(Debug, Clone, Default)]
 pub struct CoordRow {
     pub workers: usize,
     pub req_per_s: f64,
     pub p50_us: u64,
     pub p99_us: u64,
+    pub queue_p50_us: u64,
+    pub queue_p99_us: u64,
+    pub service_p50_us: u64,
+    pub service_p99_us: u64,
 }
 
 /// One batched-eval measurement.
@@ -105,11 +112,17 @@ impl BenchPerf {
         out.push_str("},\n  \"coordinator\": [\n");
         for (i, c) in self.coord.iter().enumerate() {
             out.push_str(&format!(
-                "    {{\"workers\": {}, \"req_per_s\": {}, \"p50_us\": {}, \"p99_us\": {}}}{}\n",
+                "    {{\"workers\": {}, \"req_per_s\": {}, \"p50_us\": {}, \"p99_us\": {}, \
+                 \"queue_p50_us\": {}, \"queue_p99_us\": {}, \"service_p50_us\": {}, \
+                 \"service_p99_us\": {}}}{}\n",
                 c.workers,
                 num(c.req_per_s),
                 c.p50_us,
                 c.p99_us,
+                c.queue_p50_us,
+                c.queue_p99_us,
+                c.service_p50_us,
+                c.service_p99_us,
                 if i + 1 < self.coord.len() { "," } else { "" }
             ));
         }
@@ -164,7 +177,16 @@ mod tests {
             ],
             speedups: vec![("unit".into(), 3.0)],
             divs: vec![DivRow { name: "shift\"x".into(), ns_per_op: 1.25 }],
-            coord: vec![CoordRow { workers: 2, req_per_s: 1000.0, p50_us: 90, p99_us: 400 }],
+            coord: vec![CoordRow {
+                workers: 2,
+                req_per_s: 1000.0,
+                p50_us: 90,
+                p99_us: 400,
+                queue_p50_us: 30,
+                queue_p99_us: 200,
+                service_p50_us: 60,
+                service_p99_us: 210,
+            }],
             eval: vec![EvalRow { label: "parallel-4".into(), samples_per_s: 800.0 }],
         };
         let j = b.to_json();

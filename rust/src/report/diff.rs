@@ -1,0 +1,618 @@
+//! `BENCH_perf.json` trajectory comparator: the CI perf gate.
+//!
+//! [`super::bench::BenchPerf`] snapshots are write-only without a
+//! reader; this module closes the loop. [`load_snapshot`] parses a
+//! snapshot back (via a ~100-line recursive-descent JSON reader — no
+//! serde in the vendored set), [`diff_snapshots`] matches rows between
+//! two snapshots and computes deltas, and the `unit bench diff`
+//! subcommand exits non-zero when a gated row regresses beyond the
+//! tolerance — which is what lets CI refuse hot-path regressions.
+//!
+//! Gating policy (cross-machine reality): absolute throughputs
+//! (inferences/s, req/s, samples/s) are only comparable on the same
+//! machine, so they are gated in the default mode — the right mode for
+//! "did my change slow the hot path on *this* box". The
+//! `planned_speedup` ratios (planned vs naive on the *same* run) are
+//! machine-portable, so `ratios_only` gates just those — the right
+//! mode for CI runners whose absolute speed varies. Latency
+//! percentiles and division ns/op are always informational.
+
+use std::path::Path;
+
+use super::bench::{BenchPerf, CoordRow, DivRow, EngineRow, EvalRow};
+
+// ---------------------------------------------------------------- JSON
+
+/// Minimal JSON value (everything `BENCH_perf.json` needs).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_arr(&self) -> &[Json] {
+        match self {
+            Json::Arr(items) => items,
+            _ => &[],
+        }
+    }
+
+    /// Field lookup with a numeric default (absent or `null` → default).
+    fn num_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(Json::as_f64).unwrap_or(default)
+    }
+}
+
+struct Parser<'a> {
+    s: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, what: &str) -> String {
+        format!("JSON parse error at byte {}: {what}", self.i)
+    }
+
+    fn skip_ws(&mut self) {
+        while self.i < self.s.len() && self.s[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&mut self) -> Option<u8> {
+        self.skip_ws();
+        self.s.get(self.i).copied()
+    }
+
+    fn eat(&mut self, c: u8) -> Result<(), String> {
+        if self.peek() == Some(c) {
+            self.i += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", c as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, String> {
+        match self.peek().ok_or_else(|| self.err("unexpected end"))? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.literal("true", Json::Bool(true)),
+            b'f' => self.literal("false", Json::Bool(false)),
+            b'n' => self.literal("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, String> {
+        if self.s[self.i..].starts_with(word.as_bytes()) {
+            self.i += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{word}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, String> {
+        let start = self.i;
+        while self
+            .s
+            .get(self.i)
+            .is_some_and(|&c| c.is_ascii_digit() || matches!(c, b'-' | b'+' | b'.' | b'e' | b'E'))
+        {
+            self.i += 1;
+        }
+        let text = std::str::from_utf8(&self.s[start..self.i]).map_err(|_| self.err("utf8"))?;
+        text.parse::<f64>().map(Json::Num).map_err(|_| self.err("bad number"))
+    }
+
+    fn string(&mut self) -> Result<String, String> {
+        self.eat(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.s.get(self.i).copied().ok_or_else(|| self.err("unterminated string"))? {
+                b'"' => {
+                    self.i += 1;
+                    return Ok(out);
+                }
+                b'\\' => {
+                    self.i += 1;
+                    let esc =
+                        self.s.get(self.i).copied().ok_or_else(|| self.err("bad escape"))?;
+                    self.i += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        // The emitter never writes \b \f \uXXXX; accept
+                        // them leniently as a literal to stay total.
+                        other => out.push(other as char),
+                    }
+                }
+                _ => {
+                    // Plain byte: the emitter writes ASCII; pass UTF-8
+                    // through byte-wise via the original slice.
+                    let start = self.i;
+                    while self
+                        .s
+                        .get(self.i)
+                        .is_some_and(|&c| c != b'"' && c != b'\\')
+                    {
+                        self.i += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.s[start..self.i])
+                            .map_err(|_| self.err("utf8"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, String> {
+        self.eat(b'[')?;
+        let mut items = Vec::new();
+        if self.peek() == Some(b']') {
+            self.i += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            items.push(self.value()?);
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b']') => {
+                    self.i += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, String> {
+        self.eat(b'{')?;
+        let mut fields = Vec::new();
+        if self.peek() == Some(b'}') {
+            self.i += 1;
+            return Ok(Json::Obj(fields));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.eat(b':')?;
+            fields.push((key, self.value()?));
+            match self.peek() {
+                Some(b',') => self.i += 1,
+                Some(b'}') => {
+                    self.i += 1;
+                    return Ok(Json::Obj(fields));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse a JSON document.
+pub fn parse_json(s: &str) -> Result<Json, String> {
+    let mut p = Parser { s: s.as_bytes(), i: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.i != p.s.len() {
+        return Err(p.err("trailing garbage"));
+    }
+    Ok(v)
+}
+
+// ------------------------------------------------------- snapshot load
+
+/// Rebuild a [`BenchPerf`] from its JSON form. Sections absent in
+/// older snapshots parse as empty — the diff then simply has fewer
+/// matched rows, so baselines from earlier PRs keep working.
+pub fn snapshot_from_json(text: &str) -> Result<BenchPerf, String> {
+    let v = parse_json(text)?;
+    let mut out = BenchPerf {
+        model: v.get("model").and_then(Json::as_str).unwrap_or("").to_string(),
+        ..Default::default()
+    };
+    for row in v.get("engine_throughput").map(Json::as_arr).unwrap_or(&[]) {
+        out.engine.push(EngineRow {
+            mode: row.get("mode").and_then(Json::as_str).unwrap_or("").into(),
+            backend: row.get("backend").and_then(Json::as_str).unwrap_or("").into(),
+            inf_per_s: row.num_or("inferences_per_s", 0.0),
+            mconn_per_s: row.num_or("mconn_per_s", 0.0),
+            us_per_inf: row.num_or("us_per_inference", 0.0),
+        });
+    }
+    if let Some(Json::Obj(fields)) = v.get("planned_speedup") {
+        for (mode, val) in fields {
+            out.speedups.push((mode.clone(), val.as_f64().unwrap_or(0.0)));
+        }
+    }
+    if let Some(Json::Obj(fields)) = v.get("division_ns_per_op") {
+        for (name, val) in fields {
+            out.divs.push(DivRow { name: name.clone(), ns_per_op: val.as_f64().unwrap_or(0.0) });
+        }
+    }
+    for row in v.get("coordinator").map(Json::as_arr).unwrap_or(&[]) {
+        out.coord.push(CoordRow {
+            workers: row.num_or("workers", 0.0) as usize,
+            req_per_s: row.num_or("req_per_s", 0.0),
+            p50_us: row.num_or("p50_us", 0.0) as u64,
+            p99_us: row.num_or("p99_us", 0.0) as u64,
+            queue_p50_us: row.num_or("queue_p50_us", 0.0) as u64,
+            queue_p99_us: row.num_or("queue_p99_us", 0.0) as u64,
+            service_p50_us: row.num_or("service_p50_us", 0.0) as u64,
+            service_p99_us: row.num_or("service_p99_us", 0.0) as u64,
+        });
+    }
+    for row in v.get("batched_eval").map(Json::as_arr).unwrap_or(&[]) {
+        out.eval.push(EvalRow {
+            label: row.get("label").and_then(Json::as_str).unwrap_or("").into(),
+            samples_per_s: row.num_or("samples_per_s", 0.0),
+        });
+    }
+    Ok(out)
+}
+
+/// Load a snapshot from disk.
+pub fn load_snapshot(path: &Path) -> Result<BenchPerf, String> {
+    let text =
+        std::fs::read_to_string(path).map_err(|e| format!("read {}: {e}", path.display()))?;
+    snapshot_from_json(&text)
+}
+
+// -------------------------------------------------------------- diffing
+
+/// One matched metric across two snapshots.
+#[derive(Debug, Clone)]
+pub struct DiffRow {
+    /// Snapshot section (`engine`, `speedup`, `coord`, `eval`, `div`).
+    pub section: &'static str,
+    /// Row key inside the section (e.g. `unit/planned`, `workers=4`).
+    pub key: String,
+    pub metric: &'static str,
+    pub old: f64,
+    pub new: f64,
+    /// Relative change in %, oriented so negative is always *worse*.
+    pub delta_pct: f64,
+    /// Whether this row participates in the pass/fail gate.
+    pub gated: bool,
+}
+
+impl DiffRow {
+    pub fn regressed(&self, tolerance_pct: f64) -> bool {
+        self.gated && self.delta_pct < -tolerance_pct
+    }
+}
+
+/// The matched delta table plus the gate verdict inputs.
+#[derive(Debug, Clone)]
+pub struct DiffReport {
+    pub rows: Vec<DiffRow>,
+    pub tolerance_pct: f64,
+}
+
+impl DiffReport {
+    /// Gated rows whose metric got worse by more than the tolerance.
+    pub fn regressions(&self) -> Vec<&DiffRow> {
+        self.rows.iter().filter(|r| r.regressed(self.tolerance_pct)).collect()
+    }
+
+    /// Human-readable delta table (one line per matched metric).
+    pub fn render(&self) -> String {
+        let mut t = crate::util::table::Table::new(vec![
+            "section", "row", "metric", "old", "new", "delta", "gate",
+        ]);
+        for r in &self.rows {
+            let verdict = if !r.gated {
+                "info"
+            } else if r.regressed(self.tolerance_pct) {
+                "REGRESSED"
+            } else {
+                "ok"
+            };
+            t.row(vec![
+                r.section.to_string(),
+                r.key.clone(),
+                r.metric.to_string(),
+                format!("{:.2}", r.old),
+                format!("{:.2}", r.new),
+                format!("{:+.1}%", r.delta_pct),
+                verdict.to_string(),
+            ]);
+        }
+        t.render()
+    }
+}
+
+/// Relative delta in %, oriented so "more is better" metrics keep their
+/// sign and "less is better" metrics are flipped (negative == worse in
+/// both cases). Rows with a non-positive old value cannot be gated
+/// meaningfully and are reported as 0.
+fn delta_pct(old: f64, new: f64, higher_is_better: bool) -> f64 {
+    if old <= 0.0 || !old.is_finite() || !new.is_finite() {
+        return 0.0;
+    }
+    let d = 100.0 * (new - old) / old;
+    if higher_is_better {
+        d
+    } else {
+        -d
+    }
+}
+
+/// Compare two snapshots. Rows are matched by identity (engine rows by
+/// mode+backend, speedups by mode, coordinator rows by worker count,
+/// eval rows by label, division rows by estimator name); rows present
+/// in only one snapshot are skipped. With `ratios_only`, only the
+/// machine-portable `planned_speedup` ratios are gated.
+pub fn diff_snapshots(
+    old: &BenchPerf,
+    new: &BenchPerf,
+    tolerance_pct: f64,
+    ratios_only: bool,
+) -> DiffReport {
+    let mut rows = Vec::new();
+    let abs_gate = !ratios_only;
+
+    for o in &old.engine {
+        if let Some(n) =
+            new.engine.iter().find(|n| n.mode == o.mode && n.backend == o.backend)
+        {
+            rows.push(DiffRow {
+                section: "engine",
+                key: format!("{}/{}", o.mode, o.backend),
+                metric: "inferences_per_s",
+                old: o.inf_per_s,
+                new: n.inf_per_s,
+                delta_pct: delta_pct(o.inf_per_s, n.inf_per_s, true),
+                gated: abs_gate && o.inf_per_s > 0.0,
+            });
+        }
+    }
+    for (mode, o) in &old.speedups {
+        if let Some((_, n)) = new.speedups.iter().find(|(m, _)| m == mode) {
+            rows.push(DiffRow {
+                section: "speedup",
+                key: format!("planned/{mode}"),
+                metric: "ratio",
+                old: *o,
+                new: *n,
+                delta_pct: delta_pct(*o, *n, true),
+                gated: *o > 0.0,
+            });
+        }
+    }
+    for o in &old.coord {
+        if let Some(n) = new.coord.iter().find(|n| n.workers == o.workers) {
+            rows.push(DiffRow {
+                section: "coord",
+                key: format!("workers={}", o.workers),
+                metric: "req_per_s",
+                old: o.req_per_s,
+                new: n.req_per_s,
+                delta_pct: delta_pct(o.req_per_s, n.req_per_s, true),
+                gated: abs_gate && o.req_per_s > 0.0,
+            });
+            rows.push(DiffRow {
+                section: "coord",
+                key: format!("workers={}", o.workers),
+                metric: "queue_p99_us",
+                old: o.queue_p99_us as f64,
+                new: n.queue_p99_us as f64,
+                delta_pct: delta_pct(o.queue_p99_us as f64, n.queue_p99_us as f64, false),
+                gated: false, // latency percentiles: informational (noisy)
+            });
+        }
+    }
+    for o in &old.eval {
+        if let Some(n) = new.eval.iter().find(|n| n.label == o.label) {
+            rows.push(DiffRow {
+                section: "eval",
+                key: o.label.clone(),
+                metric: "samples_per_s",
+                old: o.samples_per_s,
+                new: n.samples_per_s,
+                delta_pct: delta_pct(o.samples_per_s, n.samples_per_s, true),
+                gated: abs_gate && o.samples_per_s > 0.0,
+            });
+        }
+    }
+    for o in &old.divs {
+        if let Some(n) = new.divs.iter().find(|n| n.name == o.name) {
+            rows.push(DiffRow {
+                section: "div",
+                key: o.name.clone(),
+                metric: "ns_per_op",
+                old: o.ns_per_op,
+                new: n.ns_per_op,
+                delta_pct: delta_pct(o.ns_per_op, n.ns_per_op, false),
+                gated: false, // sub-ns timer noise: informational
+            });
+        }
+    }
+    DiffReport { rows, tolerance_pct }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn snap(unit_planned: f64, speedup: f64, req4: f64, eval_par: f64) -> BenchPerf {
+        BenchPerf {
+            model: "mnist".into(),
+            engine: vec![
+                EngineRow {
+                    mode: "unit".into(),
+                    backend: "naive".into(),
+                    inf_per_s: 100.0,
+                    mconn_per_s: 20.0,
+                    us_per_inf: 10_000.0,
+                },
+                EngineRow {
+                    mode: "unit".into(),
+                    backend: "planned".into(),
+                    inf_per_s: unit_planned,
+                    mconn_per_s: 60.0,
+                    us_per_inf: 1e6 / unit_planned,
+                },
+            ],
+            speedups: vec![("unit".into(), speedup)],
+            divs: vec![DivRow { name: "shift".into(), ns_per_op: 2.0 }],
+            coord: vec![CoordRow {
+                workers: 4,
+                req_per_s: req4,
+                p50_us: 100,
+                p99_us: 300,
+                queue_p50_us: 20,
+                queue_p99_us: 80,
+                service_p50_us: 80,
+                service_p99_us: 220,
+            }],
+            eval: vec![EvalRow { label: "quant-parallel-auto".into(), samples_per_s: eval_par }],
+        }
+    }
+
+    #[test]
+    fn roundtrip_through_json() {
+        let a = snap(300.0, 3.0, 1000.0, 800.0);
+        let b = snapshot_from_json(&a.to_json()).unwrap();
+        assert_eq!(b.model, "mnist");
+        assert_eq!(b.engine.len(), 2);
+        assert_eq!(b.engine[1].backend, "planned");
+        assert_eq!(b.speedups, vec![("unit".to_string(), 3.0)]);
+        assert_eq!(b.coord[0].workers, 4);
+        assert_eq!(b.coord[0].queue_p99_us, 80);
+        assert_eq!(b.eval[0].label, "quant-parallel-auto");
+        // identical snapshots diff to all-zero deltas and no regressions
+        let report = diff_snapshots(&a, &b, 10.0, false);
+        assert!(report.regressions().is_empty());
+        assert!(report.rows.iter().all(|r| r.delta_pct == 0.0));
+    }
+
+    #[test]
+    fn synthetic_regression_over_tolerance_fails_the_gate() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        // 20% engine-throughput drop, 15% coordinator drop: both beyond
+        // the 10% tolerance — the comparator must flag them.
+        let new = snap(240.0, 3.0, 850.0, 800.0);
+        let report = diff_snapshots(&old, &new, 10.0, false);
+        let regs = report.regressions();
+        assert!(!regs.is_empty(), "regression not detected");
+        let sections: Vec<_> = regs.iter().map(|r| (r.section, r.metric)).collect();
+        assert!(sections.contains(&("engine", "inferences_per_s")));
+        assert!(sections.contains(&("coord", "req_per_s")));
+        // the rendered table marks them
+        assert!(report.render().contains("REGRESSED"));
+    }
+
+    #[test]
+    fn small_regression_within_tolerance_passes() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        let new = snap(285.0, 2.9, 960.0, 770.0); // all within 10%
+        assert!(diff_snapshots(&old, &new, 10.0, false).regressions().is_empty());
+    }
+
+    #[test]
+    fn ratios_only_ignores_absolute_rows_but_gates_speedups() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        // Halve every absolute throughput (a slower machine) but keep
+        // the planned-vs-naive ratio: no regression in ratios-only mode.
+        let mut slower = snap(150.0, 3.0, 500.0, 400.0);
+        slower.engine[0].inf_per_s = 50.0;
+        assert!(diff_snapshots(&old, &slower, 10.0, true).regressions().is_empty());
+        // A collapsed speedup ratio *is* caught in ratios-only mode.
+        let collapsed = snap(300.0, 1.5, 1000.0, 800.0);
+        let report = diff_snapshots(&old, &collapsed, 10.0, true);
+        let regs = report.regressions();
+        assert_eq!(regs.len(), 1);
+        assert_eq!(regs[0].section, "speedup");
+    }
+
+    #[test]
+    fn improvements_never_regress() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        let new = snap(900.0, 9.0, 3000.0, 2400.0);
+        let report = diff_snapshots(&old, &new, 10.0, false);
+        assert!(report.regressions().is_empty());
+        assert!(report.rows.iter().any(|r| r.delta_pct > 100.0));
+    }
+
+    #[test]
+    fn unmatched_rows_are_skipped_gracefully() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        let mut new = snap(300.0, 3.0, 1000.0, 800.0);
+        new.coord[0].workers = 8; // different sweep shape
+        new.eval[0].label = "renamed".into();
+        let report = diff_snapshots(&old, &new, 10.0, false);
+        assert!(report.regressions().is_empty());
+        assert!(report.rows.iter().all(|r| r.section != "coord" && r.section != "eval"));
+    }
+
+    #[test]
+    fn parser_handles_null_and_escapes() {
+        let v = parse_json(r#"{"a": null, "b": [1, -2.5e1], "c": "x\"y\\z"}"#).unwrap();
+        assert_eq!(v.get("a"), Some(&Json::Null));
+        assert_eq!(v.get("b").unwrap().as_arr()[1], Json::Num(-25.0));
+        assert_eq!(v.get("c").and_then(Json::as_str), Some("x\"y\\z"));
+        assert!(parse_json("{\"a\": }").is_err());
+        assert!(parse_json("[1, 2] trailing").is_err());
+    }
+
+    #[test]
+    fn older_snapshot_without_new_sections_still_loads() {
+        // A PR-1-era snapshot: no queue/service fields, no quant rows.
+        let legacy = r#"{
+          "model": "mnist",
+          "engine_throughput": [
+            {"mode": "unit", "backend": "planned", "inferences_per_s": 300.0,
+             "mconn_per_s": 60.0, "us_per_inference": 3333.0}
+          ],
+          "planned_speedup": {"unit": 3.0},
+          "division_ns_per_op": {"shift": 2.0},
+          "coordinator": [
+            {"workers": 2, "req_per_s": 900.0, "p50_us": 90, "p99_us": 400}
+          ],
+          "batched_eval": []
+        }"#;
+        let b = snapshot_from_json(legacy).unwrap();
+        assert_eq!(b.coord[0].req_per_s, 900.0);
+        assert_eq!(b.coord[0].queue_p99_us, 0);
+        let new = snap(300.0, 3.0, 1000.0, 800.0);
+        // worker counts differ (2 vs 4) → coord rows unmatched; the
+        // speedup row still gates.
+        let report = diff_snapshots(&b, &new, 10.0, false);
+        assert!(report.regressions().is_empty());
+    }
+}

@@ -17,15 +17,15 @@ use anyhow::Result;
 use super::MechanismResult;
 use crate::approx::DivKind;
 use crate::data::Dataset;
-use crate::engine::{infer, EngineConfig, PruneMode, QModel};
+use crate::engine::{PlanConfig, PruneMode, QModel};
 use crate::mcu::{cost, EnergyModel};
 use crate::models::{zoo, ModelDef, Params};
-use crate::nn::{ForwardOpts};
+use crate::nn::ForwardOpts;
 use crate::pruning::{
     apply_global_magnitude, calibrate, calibrate_fatrelu, CalibConfig, Thresholds,
 };
 use crate::runtime::{ArtifactStore, Runtime};
-use crate::train::{ensure_trained, evaluate_float, TrainConfig};
+use crate::train::{ensure_trained, evaluate_float, evaluate_quant_parallel, TrainConfig};
 
 /// Mechanism sweep options.
 #[derive(Debug, Clone)]
@@ -41,6 +41,10 @@ pub struct MechOpts {
     pub n_eval: usize,
     /// Extra scale on calibrated thresholds (sweep knob, default 1).
     pub t_scale: f32,
+    /// Worker threads for the fixed-point sweep (0 = all cores). The
+    /// result is bit-identical for any value — see
+    /// [`crate::train::evaluate_quant_parallel`].
+    pub threads: usize,
     pub seed: u64,
     pub train_steps: usize,
 }
@@ -54,6 +58,7 @@ impl Default for MechOpts {
             fat_pct: 30.0,
             n_eval: 150,
             t_scale: 1.0,
+            threads: 0,
             seed: 42,
             // 0 = use the per-model tuned step count.
             train_steps: 0,
@@ -158,10 +163,12 @@ fn mechanism_setups() -> Vec<MechSetup> {
     ]
 }
 
-/// Evaluate all mechanisms on the MCU simulator.
-/// Returns `(unpruned_accuracy, rows)`.
+/// Evaluate all mechanisms on the MCU simulator. The sweep runs on
+/// [`evaluate_quant_parallel`] (one scratch per thread, merged
+/// ledgers), so Figs. 5–7 use every core while the per-layer MAC
+/// counts and cycle/energy totals stay bit-identical to a sequential
+/// pass. Returns `(unpruned_accuracy, rows)`.
 pub fn run_mcu_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResult>) {
-    let div = opts.div.build();
     let energy = EnergyModel::default();
     let n = p.ds.test.len().min(opts.n_eval);
     let mut rows = Vec::new();
@@ -177,44 +184,18 @@ pub fn run_mcu_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResu
         if setup.with_fat {
             q = q.with_fatrelu(p.fat_t);
         }
-        let cfg = EngineConfig {
-            mode: setup.mode,
-            div: div.as_ref(),
-            sonic_accumulators: true,
-            precomputed_conv_thresholds: false,
-            t_scale_q8: 256,
-        };
-        let mut hits = 0usize;
-        let mut preds = Vec::with_capacity(n);
-        let mut labels = Vec::with_capacity(n);
-        let mut skip_sum = 0f64;
-        let mut cyc_compute = 0u64;
-        let mut cyc_mem = 0u64;
-        let mut mj = 0f64;
-        for i in 0..n {
-            let xi = q.quantize_input(p.ds.test.sample(i));
-            let out = infer(&q, &xi, &cfg);
-            let pred = out.argmax();
-            if pred == p.ds.test.y[i] {
-                hits += 1;
-            }
-            preds.push(pred);
-            labels.push(p.ds.test.y[i]);
-            skip_sum += out.skip_fraction();
-            cyc_compute += out.ledger.compute_cycles;
-            cyc_mem += out.ledger.mem_cycles;
-            mj += out.ledger.millijoules(&energy);
-        }
+        let cfg = PlanConfig::for_mode(setup.mode, opts.div);
+        let r = evaluate_quant_parallel(&q, cfg, &p.ds.test, n, opts.threads);
         let nf = n as f64;
         rows.push(MechanismResult {
             mechanism: setup.label.to_string(),
-            accuracy: hits as f64 / nf,
-            macro_f1: crate::util::stats::macro_f1(&preds, &labels, p.def.classes),
-            mac_skipped: skip_sum / nf,
-            mcu_secs: cost::cycles_to_secs(cyc_compute + cyc_mem) / nf,
-            compute_secs: cost::cycles_to_secs(cyc_compute) / nf,
-            data_secs: cost::cycles_to_secs(cyc_mem) / nf,
-            energy_mj: mj / nf,
+            accuracy: r.accuracy,
+            macro_f1: r.macro_f1,
+            mac_skipped: r.mac_skipped,
+            mcu_secs: cost::cycles_to_secs(r.ledger.total_cycles()) / nf,
+            compute_secs: cost::cycles_to_secs(r.ledger.compute_cycles) / nf,
+            data_secs: cost::cycles_to_secs(r.ledger.mem_cycles) / nf,
+            energy_mj: r.ledger.millijoules(&energy) / nf,
         });
     }
     let baseline = rows[0].accuracy;

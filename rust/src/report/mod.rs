@@ -1,8 +1,10 @@
 //! Experiment reporting: paper-style result rows shared by the benches
 //! and EXPERIMENTS.md, plus the machine-readable perf trajectory
-//! ([`bench`] → `BENCH_perf.json`).
+//! ([`bench`] → `BENCH_perf.json`) and its CI comparator ([`diff`] →
+//! `unit bench diff`).
 
 pub mod bench;
+pub mod diff;
 pub mod experiments;
 
 use crate::util::table::{f, pct, Table};

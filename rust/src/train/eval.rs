@@ -11,8 +11,23 @@
 //!   a simple `std::thread::scope` pool (no rayon in the vendored set),
 //!   with deterministic, order-independent aggregation so its result
 //!   is identical to the sequential one.
+//!
+//! The fixed-point twin mirrors the pair on the MCU engine's prepacked
+//! plans ([`crate::engine::PlannedModel`]):
+//!
+//! * [`evaluate_quant`] — sequential plan-backed evaluation with the
+//!   full merged [`crate::mcu::Ledger`];
+//! * [`evaluate_quant_parallel`] — one [`crate::engine::Scratch`] per
+//!   thread, per-slot predictions, per-layer `u64` kept/skipped sums
+//!   and [`crate::mcu::Ledger::merge`]d totals. Every aggregate is an
+//!   integer sum (commutative, associative), so the result is
+//!   **bit-identical** to the sequential path for any thread count —
+//!   which is what lets the Fig. 5–7 sweeps run multi-core without
+//!   touching the modeled MCU costs.
 
 use crate::data::Split;
+use crate::engine::{PlanConfig, PlannedModel, QModel};
+use crate::mcu::Ledger;
 use crate::models::{ModelDef, Params};
 use crate::nn::{FloatPlan, ForwardOpts, ForwardStats};
 use crate::util::stats::{accuracy, argmax, macro_f1};
@@ -90,7 +105,7 @@ pub fn evaluate_float_parallel(
     };
     let threads = requested.clamp(1, n);
     let plan = FloatPlan::compile(def, params, opts);
-    let chunk = (n + threads - 1) / threads;
+    let chunk = n.div_ceil(threads);
     let mut preds = vec![0usize; n];
     let mut parts: Vec<ForwardStats> = Vec::with_capacity(threads);
     std::thread::scope(|sc| {
@@ -119,6 +134,152 @@ pub fn evaluate_float_parallel(
     }
     let labels: Vec<usize> = split.y[..n].to_vec();
     finish(def, preds, labels, agg, n)
+}
+
+/// Aggregated fixed-point evaluation result: accuracy plus the exact
+/// per-layer MAC counts and the merged MCU ledger of the whole split.
+#[derive(Debug, Clone)]
+pub struct QuantEvalResult {
+    pub accuracy: f64,
+    pub macro_f1: f64,
+    /// Global fraction of MACs skipped across the split.
+    pub mac_skipped: f64,
+    /// Per-sample argmax predictions (input order).
+    pub preds: Vec<usize>,
+    /// Per-layer kept MACs, summed over the split.
+    pub kept: Vec<u64>,
+    /// Per-layer skipped MACs, summed over the split.
+    pub skipped: Vec<u64>,
+    /// Merged execution ledger (op counts, compute + memory cycles).
+    pub ledger: Ledger,
+    pub n: usize,
+}
+
+/// Per-thread integer aggregates; all fields merge commutatively.
+#[derive(Debug, Clone)]
+struct QuantAgg {
+    kept: Vec<u64>,
+    skipped: Vec<u64>,
+    ledger: Ledger,
+}
+
+impl QuantAgg {
+    fn new(n_layers: usize) -> QuantAgg {
+        QuantAgg { kept: vec![0; n_layers], skipped: vec![0; n_layers], ledger: Ledger::new() }
+    }
+
+    fn absorb(&mut self, kept: &[u64], skipped: &[u64], ledger: &Ledger) {
+        for (a, b) in self.kept.iter_mut().zip(kept) {
+            *a += *b;
+        }
+        for (a, b) in self.skipped.iter_mut().zip(skipped) {
+            *a += *b;
+        }
+        self.ledger.merge(ledger);
+    }
+
+    fn merge(&mut self, other: &QuantAgg) {
+        self.absorb(&other.kept, &other.skipped, &other.ledger);
+    }
+}
+
+fn finish_quant(
+    plan: &PlannedModel,
+    preds: Vec<usize>,
+    labels: Vec<usize>,
+    agg: QuantAgg,
+    n: usize,
+) -> QuantEvalResult {
+    let kept_total: u64 = agg.kept.iter().sum();
+    let skip_total: u64 = agg.skipped.iter().sum();
+    let total = kept_total + skip_total;
+    QuantEvalResult {
+        accuracy: accuracy(&preds, &labels),
+        macro_f1: macro_f1(&preds, &labels, plan.def.classes),
+        mac_skipped: if total == 0 { 0.0 } else { skip_total as f64 / total as f64 },
+        preds,
+        kept: agg.kept,
+        skipped: agg.skipped,
+        ledger: agg.ledger,
+        n,
+    }
+}
+
+/// Evaluate the quantized model on up to `max_samples` of `split`
+/// through the prepacked fixed-point engine (sequential reference).
+pub fn evaluate_quant(
+    q: &QModel,
+    cfg: PlanConfig,
+    split: &Split,
+    max_samples: usize,
+) -> QuantEvalResult {
+    let n = split.len().min(max_samples);
+    assert!(n > 0, "empty eval split");
+    let plan = PlannedModel::compile(q, cfg);
+    let mut scratch = plan.new_scratch();
+    let mut preds = Vec::with_capacity(n);
+    let mut agg = QuantAgg::new(plan.def.layers.len());
+    for i in 0..n {
+        let xi = plan.quantize_input(split.sample(i));
+        let out = plan.infer(&xi, &mut scratch);
+        preds.push(out.argmax());
+        agg.absorb(&out.kept, &out.skipped, &out.ledger);
+    }
+    let labels = split.y[..n].to_vec();
+    finish_quant(&plan, preds, labels, agg, n)
+}
+
+/// Parallel fixed-point evaluation: bit-identical to [`evaluate_quant`]
+/// (same compiled plan, per-slot predictions, commutative integer
+/// sums and [`crate::mcu::Ledger::merge`]) on `threads` worker threads.
+/// `threads == 0` means "use available parallelism".
+pub fn evaluate_quant_parallel(
+    q: &QModel,
+    cfg: PlanConfig,
+    split: &Split,
+    max_samples: usize,
+    threads: usize,
+) -> QuantEvalResult {
+    let n = split.len().min(max_samples);
+    assert!(n > 0, "empty eval split");
+    let requested = if threads == 0 {
+        std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+    } else {
+        threads
+    };
+    let threads = requested.clamp(1, n);
+    let plan = PlannedModel::compile(q, cfg);
+    let n_layers = plan.def.layers.len();
+    let chunk = n.div_ceil(threads);
+    let mut preds = vec![0usize; n];
+    let mut parts: Vec<QuantAgg> = Vec::with_capacity(threads);
+    std::thread::scope(|sc| {
+        let plan = &plan;
+        let mut handles = Vec::with_capacity(threads);
+        for (tid, pred_chunk) in preds.chunks_mut(chunk).enumerate() {
+            handles.push(sc.spawn(move || {
+                let mut scratch = plan.new_scratch();
+                let mut agg = QuantAgg::new(n_layers);
+                let base = tid * chunk;
+                for (off, slot) in pred_chunk.iter_mut().enumerate() {
+                    let xi = plan.quantize_input(split.sample(base + off));
+                    let out = plan.infer(&xi, &mut scratch);
+                    *slot = out.argmax();
+                    agg.absorb(&out.kept, &out.skipped, &out.ledger);
+                }
+                agg
+            }));
+        }
+        for h in handles {
+            parts.push(h.join().expect("quant eval worker panicked"));
+        }
+    });
+    let mut agg = QuantAgg::new(n_layers);
+    for p in &parts {
+        agg.merge(p);
+    }
+    let labels = split.y[..n].to_vec();
+    finish_quant(&plan, preds, labels, agg, n)
 }
 
 #[cfg(test)]
@@ -172,5 +333,101 @@ mod tests {
         let ds = mnist_like::generate(7, Sizes { train: 4, val: 4, test: 3 });
         let r = evaluate_float_parallel(&def, &params, &ds.test, &ForwardOpts::dense(3), 3, 16);
         assert_eq!(r.n, 3);
+    }
+
+    mod quant {
+        use super::super::{evaluate_quant, evaluate_quant_parallel};
+        use crate::approx::DivKind;
+        use crate::data::{mnist_like, Sizes};
+        use crate::engine::{infer, EngineConfig, PlanConfig, PruneMode, QModel};
+        use crate::mcu::Ledger;
+        use crate::models::{zoo, Params};
+        use crate::pruning::Thresholds;
+
+        fn setup(mode: PruneMode) -> (QModel, crate::data::Dataset, PlanConfig) {
+            let def = zoo("mnist");
+            let params = Params::random(&def, 11);
+            let mut q = QModel::quantize(&def, &params);
+            if matches!(mode, PruneMode::Unit) {
+                q = q.with_thresholds(&Thresholds::uniform(3, 0.2));
+            }
+            let ds = mnist_like::generate(13, Sizes { train: 4, val: 4, test: 24 });
+            (q, ds, PlanConfig::for_mode(mode, DivKind::Shift))
+        }
+
+        #[test]
+        fn quant_parallel_bit_identical_to_sequential_all_modes() {
+            for mode in [PruneMode::Dense, PruneMode::ZeroSkip, PruneMode::Unit] {
+                let (q, ds, cfg) = setup(mode);
+                let seq = evaluate_quant(&q, cfg, &ds.test, 24);
+                for threads in [1usize, 2, 3, 7, 0] {
+                    let par = evaluate_quant_parallel(&q, cfg, &ds.test, 24, threads);
+                    let tag = format!("{mode:?} threads={threads}");
+                    assert_eq!(par.preds, seq.preds, "{tag}");
+                    assert_eq!(par.accuracy, seq.accuracy, "{tag}");
+                    assert_eq!(par.macro_f1, seq.macro_f1, "{tag}");
+                    assert_eq!(par.mac_skipped, seq.mac_skipped, "{tag}");
+                    assert_eq!(par.kept, seq.kept, "{tag}");
+                    assert_eq!(par.skipped, seq.skipped, "{tag}");
+                    assert_eq!(par.ledger, seq.ledger, "{tag}");
+                }
+            }
+        }
+
+        #[test]
+        fn quant_parallel_matches_naive_engine_totals() {
+            // The strongest form of the acceptance bar: the multi-core
+            // sweep equals a hand-rolled loop over the *naive* reference
+            // engine — not just the planned sequential path.
+            let (q, ds, cfg) = setup(PruneMode::Unit);
+            let div = DivKind::Shift.build();
+            let ecfg = EngineConfig {
+                mode: PruneMode::Unit,
+                div: div.as_ref(),
+                sonic_accumulators: true,
+                precomputed_conv_thresholds: false,
+                t_scale_q8: 256,
+            };
+            let n = 12usize;
+            let mut preds = Vec::new();
+            let mut ledger = Ledger::new();
+            let mut kept = vec![0u64; 3];
+            let mut skipped = vec![0u64; 3];
+            for i in 0..n {
+                let out = infer(&q, &q.quantize_input(ds.test.sample(i)), &ecfg);
+                preds.push(out.argmax());
+                for li in 0..3 {
+                    kept[li] += out.kept[li];
+                    skipped[li] += out.skipped[li];
+                }
+                ledger.merge(&out.ledger);
+            }
+            let par = evaluate_quant_parallel(&q, cfg, &ds.test, n, 3);
+            assert_eq!(par.preds, preds);
+            assert_eq!(par.kept, kept);
+            assert_eq!(par.skipped, skipped);
+            assert_eq!(par.ledger, ledger);
+        }
+
+        #[test]
+        fn quant_skip_fraction_rises_with_threshold() {
+            let def = zoo("mnist");
+            let params = Params::random(&def, 15);
+            let ds = mnist_like::generate(17, Sizes { train: 4, val: 4, test: 10 });
+            let cfg = PlanConfig::for_mode(PruneMode::Unit, DivKind::Shift);
+            let lo = evaluate_quant_parallel(
+                &q_with(&def, &params, 0.01),
+                cfg,
+                &ds.test,
+                10,
+                2,
+            );
+            let hi = evaluate_quant_parallel(&q_with(&def, &params, 0.5), cfg, &ds.test, 10, 2);
+            assert!(hi.mac_skipped > lo.mac_skipped);
+        }
+
+        fn q_with(def: &crate::models::ModelDef, params: &Params, t: f32) -> QModel {
+            QModel::quantize(def, params).with_thresholds(&Thresholds::uniform(3, t))
+        }
     }
 }

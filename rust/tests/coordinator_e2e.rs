@@ -1,6 +1,7 @@
 //! Integration: the serving coordinator end-to-end — no request lost,
 //! FIFO batching, correct predictions vs direct engine calls, clean
-//! shutdown under load, and the PJRT backend (artifact-gated).
+//! shutdown under load, work stealing with mixed single/batched
+//! submissions, and the PJRT backend (artifact-gated).
 
 use std::time::Duration;
 
@@ -55,6 +56,72 @@ fn hundreds_of_requests_none_lost() {
     assert_eq!(ids.len(), n);
     let snap = coord.metrics.snapshot();
     assert_eq!(snap.served, n as u64);
+    coord.shutdown();
+}
+
+/// The work-stealing acceptance test: a storm of interleaved single
+/// and batched submissions across a sharded pool must lose nothing and
+/// reorder nothing — every single reply carries its own request's id,
+/// and every batch comes back in input order with per-slot results
+/// identical to direct engine calls.
+#[test]
+fn work_stealing_mixed_singles_and_batches_nothing_lost_or_reordered() {
+    let (q, ds) = setup();
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Exact },
+        ServeConfig { workers: 4, ..Default::default() },
+    );
+    let sample = |i: usize| ds.test.sample(i % ds.test.len()).to_vec();
+    // Interleave: (batch of 9) (3 singles) (batch of 17) (3 singles) ...
+    let batch_sizes = [9usize, 17, 1, 30, 5];
+    let mut single_rxs = Vec::new(); // (sample idx, rx)
+    let mut batch_rxs = Vec::new(); // (start idx, size, rx)
+    let mut next = 0usize;
+    for (k, &bs) in batch_sizes.iter().enumerate() {
+        let xs: Vec<Vec<f32>> = (0..bs).map(|j| sample(next + j)).collect();
+        batch_rxs.push((next, bs, coord.submit_batch(xs)));
+        next += bs;
+        for _ in 0..3 {
+            single_rxs.push((next + k, coord.submit(sample(next + k))));
+            next += 1;
+        }
+    }
+    let direct = |i: usize| {
+        let xi = q.quantize_input(ds.test.sample(i % ds.test.len()));
+        infer(&q, &xi, &EngineConfig::unit(&DivExact))
+    };
+    let mut seen_ids = std::collections::HashSet::new();
+    let mut total = 0usize;
+    for (start, size, rx) in batch_rxs {
+        let out = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(out.len(), size, "batch at {start} wrong size");
+        for (slot, resp) in out.iter().enumerate() {
+            // in-order reassembly: ids were assigned consecutively at
+            // submit, so slot order must equal id order...
+            assert_eq!(resp.id - out[0].id, slot as u64, "batch at {start}: slot {slot}");
+            // ...and each slot's result equals the direct engine call
+            // for exactly that input.
+            let d = direct(start + slot);
+            assert_eq!(resp.predicted, d.argmax(), "batch at {start}: slot {slot}");
+            assert_eq!(resp.logits, d.logits, "batch at {start}: slot {slot}");
+            assert!(seen_ids.insert(resp.id));
+            assert_eq!(resp.latency_us, resp.queue_us + resp.service_us);
+        }
+        total += size;
+    }
+    for (idx, rx) in single_rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let d = direct(idx);
+        assert_eq!(resp.predicted, d.argmax(), "single for sample {idx}");
+        assert_eq!(resp.logits, d.logits, "single for sample {idx}");
+        assert!(seen_ids.insert(resp.id));
+        total += 1;
+    }
+    assert_eq!(seen_ids.len(), total, "a response was lost or duplicated");
+    let snap = coord.metrics.snapshot();
+    assert_eq!(snap.served, total as u64);
+    // one metrics batch per submit_batch + one per single
+    assert_eq!(snap.batches, (batch_sizes.len() + 3 * batch_sizes.len()) as u64);
     coord.shutdown();
 }
 
