@@ -51,7 +51,12 @@ fn main() -> Result<()> {
         };
         let coord = Coordinator::start(
             choice,
-            ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) },
+            ServeConfig {
+                workers: 2,
+                max_batch: 8,
+                max_wait: Duration::from_millis(2),
+                ..Default::default()
+            },
         );
         let t0 = std::time::Instant::now();
         // Half the load as one batched request (split across the worker

@@ -1,0 +1,285 @@
+//! Streamed-serving load generator: N concurrent clients over TCP with
+//! mixed batches, deadlines, and cancellations — and hard assertions
+//! that nothing is lost or misordered.
+//!
+//! ```text
+//! # against a running server (CI serve-smoke drives it this way):
+//! unit serve --listen 127.0.0.1:0 --workers 4 &   # prints the bound addr
+//! cargo run --release --example stream_clients -- --addr 127.0.0.1:PORT
+//!
+//! # fully self-contained (spawns its own in-process server):
+//! cargo run --release --example stream_clients -- --in-process
+//! ```
+//!
+//! Exit status is the test: 0 iff every uncancelled, unexpired request
+//! produced exactly its expected `Ok` responses in strict slot order,
+//! cancelled requests produced only an ordered prefix, and every
+//! request-level status was accounted for.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::Result;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::{calibrate, CalibConfig};
+use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg, Status, WHOLE_REQUEST};
+use unit_pruner::util::cli::Args;
+use unit_pruner::util::Rng;
+
+#[derive(Default)]
+struct Tally {
+    ok: AtomicU64,
+    rejected: AtomicU64,
+    expired: AtomicU64,
+    errors: AtomicU64,
+    cancelled: AtomicU64,
+    violations: AtomicU64,
+}
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "mnist").to_string();
+    let n_clients = args.usize_or("clients", 4);
+    let n_requests = args.usize_or("requests", 12);
+    let max_batch = args.usize_or("batch", 6).max(1);
+    let deadline_frac = args.f64_or("deadline-frac", 0.15);
+    let cancel_frac = args.f64_or("cancel-frac", 0.15);
+    let seed = args.u64_or("seed", 42);
+
+    let def = zoo(&model);
+    let ds = by_name(&model, seed, Sizes::default());
+    let classes = def.classes;
+
+    // Either connect to a running `unit serve --listen`, or spawn an
+    // in-process server (random weights: the protocol under test does
+    // not care about accuracy).
+    let own_server: Option<Server>;
+    let addr: String = match args.get("addr") {
+        Some(a) => {
+            own_server = None;
+            a.to_string()
+        }
+        None => {
+            if !args.flag("in-process") {
+                eprintln!("stream_clients: pass --addr HOST:PORT or --in-process");
+                std::process::exit(2);
+            }
+            let params = Params::random(&def, seed);
+            let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+            let q = QModel::quantize(&def, &params).with_thresholds(&th);
+            let coord = Coordinator::start(
+                BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+                ServeConfig { workers: args.usize_or("workers", 4), ..Default::default() },
+            );
+            let server = Server::start(
+                coord,
+                "127.0.0.1:0",
+                ServeOpts {
+                    max_conns: n_clients + 4,
+                    session: SessionCfg {
+                        max_inflight: args.usize_or("window", 32),
+                        ..Default::default()
+                    },
+                },
+            )?;
+            let a = server.local_addr().to_string();
+            own_server = Some(server);
+            a
+        }
+    };
+    println!(
+        "stream_clients: {n_clients} clients x {n_requests} requests -> {addr} \
+         (batch <= {max_batch}, deadline {:.0}%, cancel {:.0}%)",
+        deadline_frac * 100.0,
+        cancel_frac * 100.0,
+    );
+
+    let tally = Arc::new(Tally::default());
+    let t0 = std::time::Instant::now();
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let tally = Arc::clone(&tally);
+            let samples: Vec<Vec<f32>> =
+                (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
+            std::thread::spawn(move || {
+                client_run(
+                    c as u64,
+                    &addr,
+                    &samples,
+                    classes,
+                    n_requests,
+                    max_batch,
+                    deadline_frac,
+                    cancel_frac,
+                    &tally,
+                )
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("client thread panicked");
+    }
+    let dt = t0.elapsed().as_secs_f64();
+
+    let (ok, rej, exp, err, can, bad) = (
+        tally.ok.load(Ordering::Relaxed),
+        tally.rejected.load(Ordering::Relaxed),
+        tally.expired.load(Ordering::Relaxed),
+        tally.errors.load(Ordering::Relaxed),
+        tally.cancelled.load(Ordering::Relaxed),
+        tally.violations.load(Ordering::Relaxed),
+    );
+    println!(
+        "done in {dt:.2}s: {ok} ok samples ({:.0} samp/s), {rej} rejected, {exp} expired, \
+         {can} cancelled, {err} errors, {bad} protocol violations",
+        ok as f64 / dt
+    );
+    if let Some(server) = own_server {
+        server.shutdown();
+    }
+    if bad > 0 {
+        eprintln!("FAIL: {bad} lost/misordered/duplicated responses");
+        std::process::exit(1);
+    }
+    println!("OK: zero lost or misordered responses");
+    Ok(())
+}
+
+#[allow(clippy::too_many_arguments)]
+fn client_run(
+    client_id: u64,
+    addr: &str,
+    samples: &[Vec<f32>],
+    classes: usize,
+    n_requests: usize,
+    max_batch: usize,
+    deadline_frac: f64,
+    cancel_frac: f64,
+    tally: &Tally,
+) {
+    let client = match Client::connect(addr) {
+        Ok(c) => c,
+        Err(e) => {
+            eprintln!("client {client_id}: connect {addr}: {e}");
+            tally.violations.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+    };
+    let mut rng = Rng::new(0x57EA_4000 + client_id);
+    if !client.ping(Duration::from_secs(5)) {
+        eprintln!("client {client_id}: no pong");
+        tally.violations.fetch_add(1, Ordering::Relaxed);
+        return;
+    }
+    // Phase 1 — pipeline every request onto the wire (this is what
+    // pushes sessions into their in-flight window under load), issuing
+    // mid-flight cancels as we go.
+    struct Issued {
+        id: u64,
+        n: usize,
+        rx: std::sync::mpsc::Receiver<unit_pruner::serve::WireResponse>,
+        cancel: bool,
+        tight_deadline: bool,
+    }
+    let mut issued = Vec::with_capacity(n_requests);
+    for _ in 0..n_requests {
+        let n = 1 + rng.below(max_batch as u64) as usize;
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| samples[rng.below(samples.len() as u64) as usize].clone())
+            .collect();
+        // A 1 ms deadline under concurrent load: sometimes met,
+        // usually expired — both legal outcomes, checked for shape.
+        let tight_deadline = rng.chance(deadline_frac);
+        let deadline = tight_deadline.then(|| Duration::from_millis(1));
+        let cancel = !tight_deadline && rng.chance(cancel_frac);
+        let (id, rx) = match client.submit_batch(&xs, deadline) {
+            Ok(v) => v,
+            Err(e) => {
+                eprintln!("client {client_id}: submit: {e}");
+                tally.violations.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        if cancel {
+            // Let a prefix land, then cut the rest off mid-batch.
+            std::thread::sleep(Duration::from_micros(rng.below(2000)));
+            let _ = client.cancel(id);
+        }
+        issued.push(Issued { id, n, rx, cancel, tight_deadline });
+    }
+    // Phase 2 — drain and validate each request's event stream.
+    for Issued { id, n, rx, cancel, tight_deadline } in issued {
+        let mut next_slot = 0u32;
+        let mut terminal: Option<Status> = None;
+        let mut violated = false;
+        loop {
+            // A cancelled request's tail is silence; don't wait long
+            // for it. (The loopback e2e test does the rigorous
+            // post-cancel silence check.)
+            let patience =
+                if cancel { Duration::from_millis(500) } else { Duration::from_secs(30) };
+            match rx.recv_timeout(patience) {
+                Ok(ev) if ev.status == Status::Ok && ev.slot != WHOLE_REQUEST => {
+                    if ev.slot != next_slot || ev.logits.len() != classes {
+                        violated = true;
+                        break;
+                    }
+                    next_slot += 1;
+                    tally.ok.fetch_add(1, Ordering::Relaxed);
+                    if next_slot as usize == n {
+                        break;
+                    }
+                }
+                Ok(ev) => {
+                    terminal = Some(ev.status);
+                    break;
+                }
+                Err(_) => {
+                    // Quiet: legal only after a cancel (suppressed tail).
+                    break;
+                }
+            }
+        }
+        let complete = next_slot as usize == n;
+        match terminal {
+            Some(Status::Rejected) => {
+                tally.rejected.fetch_add(1, Ordering::Relaxed);
+                if next_slot != 0 {
+                    violated = true; // rejection must precede any result
+                }
+            }
+            Some(Status::Expired) => {
+                tally.expired.fetch_add(1, Ordering::Relaxed);
+                if !tight_deadline {
+                    violated = true; // only deadline'd requests may expire
+                }
+            }
+            Some(Status::Error) | Some(Status::Cancelled) => {
+                tally.errors.fetch_add(1, Ordering::Relaxed);
+            }
+            Some(Status::Ok) | None => {
+                if !complete && !cancel && !tight_deadline {
+                    violated = true; // lost responses
+                }
+                if !complete && cancel {
+                    tally.cancelled.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+        }
+        if violated {
+            eprintln!(
+                "client {client_id}: request {id}: violation at slot {next_slot}/{n} \
+                 (terminal {terminal:?}, cancel={cancel}, deadline={tight_deadline})"
+            );
+            tally.violations.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+    client.goodbye(Duration::from_secs(10));
+}

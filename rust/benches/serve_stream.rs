@@ -1,0 +1,146 @@
+//! Streamed-serving benchmarks: wire-codec throughput and loopback
+//! end-to-end request rate.
+//!
+//! * **codec** — encode/decode rate of request and response frames in
+//!   memory (the pure `serve::wire` layer): frames/s and MB/s. This is
+//!   the per-frame CPU tax every streamed request pays on top of
+//!   inference.
+//! * **loopback e2e** — a full in-process `Server` on 127.0.0.1 driven
+//!   by N concurrent clients submitting batches; reports samples/s and
+//!   the server-side queue/service split. Placement is the default
+//!   cost-weighted policy, so this is also the end-to-end smoke for
+//!   MAC-estimate admission.
+//!
+//! Standalone observability bench (not part of the `BENCH_perf.json`
+//! ratio gate): absolute socket throughput is too machine- and
+//! loopback-dependent to gate on. Set `$UNIT_PERF_QUICK` for the CI
+//! smoke mode.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{mnist_like, Sizes};
+use unit_pruner::engine::{PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{wire, Client, Frame, Payload, ServeOpts, Server, SessionCfg, Status};
+use unit_pruner::util::table::Table;
+
+fn main() {
+    let quick = std::env::var("UNIT_PERF_QUICK").is_ok();
+    if quick {
+        println!("(UNIT_PERF_QUICK set: CI smoke mode, reduced repetitions)\n");
+    }
+
+    // 1. codec throughput --------------------------------------------------
+    println!("=== Serve 1: wire codec throughput (in-memory) ===\n");
+    let mut t = Table::new(vec!["frame", "bytes", "enc frames/s", "dec frames/s", "dec MB/s"]);
+    let reps = if quick { 20_000 } else { 200_000 };
+    let request = Frame::Request {
+        id: 7,
+        deadline_ms: 100,
+        sample_len: 784,
+        data: Payload::F32((0..784).map(|i| (i % 17) as f32 / 16.0).collect()),
+    };
+    let response = Frame::Response {
+        id: 7,
+        slot: 3,
+        status: Status::Ok,
+        predicted: 4,
+        queue_us: 120,
+        service_us: 900,
+        mac_skipped: 0.8,
+        logits: (0..10).map(|i| i as f32 / 10.0).collect(),
+    };
+    for (name, frame) in [("request(784 f32)", &request), ("response(10 logits)", &response)] {
+        let bytes = wire::encode(frame);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(wire::encode(black_box(frame)));
+        }
+        let enc_s = reps as f64 / t0.elapsed().as_secs_f64();
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(wire::decode(black_box(&bytes)).unwrap().unwrap());
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        let dec_s = reps as f64 / dt;
+        t.row(vec![
+            name.to_string(),
+            bytes.len().to_string(),
+            format!("{enc_s:.0}"),
+            format!("{dec_s:.0}"),
+            format!("{:.1}", reps as f64 * bytes.len() as f64 / dt / 1e6),
+        ]);
+    }
+    println!("{}", t.render());
+
+    // 2. loopback end-to-end ----------------------------------------------
+    println!("=== Serve 2: loopback streamed serving (end-to-end) ===\n");
+    let def = zoo("mnist");
+    let params = Params::random(&def, 11);
+    let ds = mnist_like::generate(6, Sizes { train: 4, val: 4, test: 32 });
+    let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+    let mut t = Table::new(vec![
+        "clients", "samples", "samples/s", "queue p50 us", "service p50 us", "p99 us",
+    ]);
+    let client_counts: &[usize] = if quick { &[2] } else { &[1, 2, 4] };
+    for &n_clients in client_counts {
+        let coord = Coordinator::start(
+            BackendChoice::McuSim {
+                q: q.clone(),
+                mode: PruneMode::Unit,
+                div: DivKind::Shift,
+            },
+            ServeConfig { workers: 4, ..Default::default() },
+        );
+        let server = Server::start(
+            coord,
+            "127.0.0.1:0",
+            ServeOpts { max_conns: n_clients + 1, session: SessionCfg::default() },
+        )
+        .expect("bind loopback");
+        let addr = server.local_addr();
+        let per_client = if quick { 48 } else { 192 };
+        let batch = 8usize;
+        let t0 = Instant::now();
+        let handles: Vec<_> = (0..n_clients)
+            .map(|_| {
+                let samples: Vec<Vec<f32>> =
+                    (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
+                std::thread::spawn(move || {
+                    let client = Client::connect(addr).expect("connect");
+                    let mut got = 0usize;
+                    for r in 0..per_client / batch {
+                        let xs: Vec<Vec<f32>> = (0..batch)
+                            .map(|j| samples[(r * batch + j) % samples.len()].clone())
+                            .collect();
+                        let (_id, rx) = client.submit_batch(&xs, None).expect("submit");
+                        for _ in 0..batch {
+                            let ev = rx.recv_timeout(Duration::from_secs(60)).expect("reply");
+                            assert_eq!(ev.status, Status::Ok);
+                            got += 1;
+                        }
+                    }
+                    client.goodbye(Duration::from_secs(5));
+                    got
+                })
+            })
+            .collect();
+        let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+        let dt = t0.elapsed().as_secs_f64();
+        let snap = server.metrics().snapshot();
+        server.shutdown();
+        t.row(vec![
+            n_clients.to_string(),
+            total.to_string(),
+            format!("{:.0}", total as f64 / dt),
+            snap.queue_p50_us.to_string(),
+            snap.service_p50_us.to_string(),
+            snap.p99_us.to_string(),
+        ]);
+    }
+    println!("{}", t.render());
+}

@@ -88,9 +88,11 @@ mod tests {
         InferRequest {
             id,
             x: vec![],
+            xi: None,
             slot: 0,
             t_enqueue: Instant::now(),
             reply: super::super::ReplyTo::Single(tx.clone()),
+            ctl: None,
         }
     }
 

@@ -55,6 +55,22 @@ struct Inner {
     mac_skipped_sum: f64,
     energy_mj_sum: f64,
     mcu_secs_sum: f64,
+    // Streamed-serving counters (zero when only the in-process API is
+    // used): admission/lifecycle outcomes plus session accounting.
+    /// Requests bounced by a full per-session in-flight window.
+    rejected: u64,
+    /// Requests whose deadline passed before completion.
+    expired: u64,
+    /// Requests cancelled by their client.
+    cancelled: u64,
+    /// Dead (cancelled/expired) samples dropped by workers at dequeue
+    /// — work that never occupied a shard.
+    dropped: u64,
+    sessions_opened: u64,
+    sessions_closed: u64,
+    /// Requests currently admitted and not yet finished, across all
+    /// sessions (gauge).
+    inflight: i64,
 }
 
 /// Snapshot for reporting.
@@ -78,6 +94,14 @@ pub struct Snapshot {
     pub mean_mac_skipped: f64,
     pub mean_energy_mj: f64,
     pub mean_mcu_secs: f64,
+    /// Streamed-serving outcomes (see the matching `Inner` fields).
+    pub rejected: u64,
+    pub expired: u64,
+    pub cancelled: u64,
+    pub dropped: u64,
+    pub sessions_opened: u64,
+    pub sessions_closed: u64,
+    pub inflight: i64,
 }
 
 fn percentile(sorted: &[u64], p: f64) -> u64 {
@@ -118,6 +142,40 @@ impl Metrics {
         g.mcu_secs_sum += mcu_secs;
     }
 
+    /// A request bounced by session backpressure (in-flight window full).
+    pub fn record_rejected(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    /// A request whose deadline expired before completion.
+    pub fn record_expired(&self) {
+        self.inner.lock().unwrap().expired += 1;
+    }
+
+    /// A request cancelled by its client.
+    pub fn record_cancelled(&self) {
+        self.inner.lock().unwrap().cancelled += 1;
+    }
+
+    /// A dead sample dropped by a worker at dequeue (no inference run).
+    pub fn record_dropped(&self) {
+        self.inner.lock().unwrap().dropped += 1;
+    }
+
+    pub fn session_opened(&self) {
+        self.inner.lock().unwrap().sessions_opened += 1;
+    }
+
+    pub fn session_closed(&self) {
+        self.inner.lock().unwrap().sessions_closed += 1;
+    }
+
+    /// Adjust the admitted-but-unfinished request gauge (`+1` on
+    /// admission, `-1` on completion/cancel/expiry).
+    pub fn inflight_delta(&self, d: i64) {
+        self.inner.lock().unwrap().inflight += d;
+    }
+
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut que = g.queue_us.buf.clone();
@@ -146,6 +204,13 @@ impl Metrics {
             mean_mac_skipped: g.mac_skipped_sum / served,
             mean_energy_mj: g.energy_mj_sum / served,
             mean_mcu_secs: g.mcu_secs_sum / served,
+            rejected: g.rejected,
+            expired: g.expired,
+            cancelled: g.cancelled,
+            dropped: g.dropped,
+            sessions_opened: g.sessions_opened,
+            sessions_closed: g.sessions_closed,
+            inflight: g.inflight,
         }
     }
 }
@@ -199,5 +264,28 @@ mod tests {
         assert_eq!(s.p99_us, 0);
         assert_eq!(s.queue_p99_us, 0);
         assert_eq!(s.service_p99_us, 0);
+        assert_eq!(s.rejected, 0);
+        assert_eq!(s.inflight, 0);
+    }
+
+    #[test]
+    fn session_counters_roundtrip() {
+        let m = Metrics::new();
+        m.session_opened();
+        m.inflight_delta(2);
+        m.record_rejected();
+        m.record_expired();
+        m.record_cancelled();
+        m.record_dropped();
+        m.record_dropped();
+        m.inflight_delta(-1);
+        m.session_closed();
+        let s = m.snapshot();
+        assert_eq!(
+            (s.rejected, s.expired, s.cancelled, s.dropped),
+            (1, 1, 1, 2)
+        );
+        assert_eq!((s.sessions_opened, s.sessions_closed), (1, 1));
+        assert_eq!(s.inflight, 1);
     }
 }

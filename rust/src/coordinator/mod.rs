@@ -28,6 +28,8 @@ pub use adaptive::EnergyController;
 
 pub use batcher::{BatchPolicy, Batcher};
 pub use metrics::Metrics;
-pub use request::{BatchSink, InferRequest, InferResponse, ReplyTo};
-pub use server::{BackendChoice, Coordinator, ServeConfig};
-pub use shard::ShardPool;
+pub use request::{
+    BatchSink, CtlState, InferRequest, InferResponse, ReplyTo, RequestCtl, StreamSink,
+};
+pub use server::{BackendChoice, Coordinator, ServeConfig, SubmitError};
+pub use shard::{Placement, ShardPool};

@@ -1,6 +1,9 @@
-//! Request/response types flowing through the coordinator, plus the
-//! in-order reassembly sink for split batches.
+//! Request/response types flowing through the coordinator, the
+//! in-order reassembly sink for split batches, and the per-request
+//! lifecycle control block streamed sessions use for cancellation and
+//! deadlines.
 
+use std::sync::atomic::{AtomicU8, Ordering};
 use std::sync::mpsc::Sender;
 use std::sync::{Arc, Mutex};
 use std::time::Instant;
@@ -11,12 +14,101 @@ pub struct InferRequest {
     pub id: u64,
     /// Flat `C·H·W` f32 input.
     pub x: Vec<f32>,
+    /// Q8.8-quantized `x`, populated when cost-weighted dispatch
+    /// already quantized it for the MAC estimate — the McuSim worker
+    /// reuses it instead of quantizing a second time. `None` on the
+    /// Pjrt path (which consumes the f32s) and under count placement.
+    pub xi: Option<Vec<i16>>,
     /// Position of this sample inside its batch (0 for singles).
     pub slot: usize,
     /// Enqueue timestamp (latency accounting).
     pub t_enqueue: Instant,
     /// Response route.
     pub reply: ReplyTo,
+    /// Lifecycle control for streamed requests: a worker that dequeues
+    /// a dead (cancelled/expired) request drops it without running
+    /// inference — the tombstone that makes "drop not-yet-started work
+    /// from the shard deques" O(1) instead of a deque scan. `None` for
+    /// the in-process submit paths, which cannot be cancelled.
+    pub ctl: Option<Arc<RequestCtl>>,
+}
+
+/// Lifecycle state of a streamed request (see [`RequestCtl`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CtlState {
+    /// Queued or executing; replies flow.
+    Active = 0,
+    /// Client cancelled: queued samples are dropped at dequeue, replies
+    /// for in-flight samples are suppressed.
+    Cancelled = 1,
+    /// Deadline passed before completion: same suppression as cancel,
+    /// plus a single `Expired` status frame from the reaper.
+    Expired = 2,
+    /// Every sample's reply was delivered; terminal.
+    Done = 3,
+}
+
+/// Shared control block for one streamed request (all samples of a
+/// batch share it). The state machine is a single atomic: exactly one
+/// of `cancel` / `expire` / `complete` wins the transition out of
+/// `Active`, so a deadline firing concurrently with the last reply (or
+/// with a client cancel) resolves race-free — whoever CASes first
+/// decides the request's outcome, everyone else observes it.
+#[derive(Debug, Default)]
+pub struct RequestCtl {
+    state: AtomicU8,
+}
+
+impl RequestCtl {
+    /// A fresh shared control block in the `Active` state.
+    pub fn shared() -> Arc<RequestCtl> {
+        Arc::new(RequestCtl::default())
+    }
+
+    pub fn state(&self) -> CtlState {
+        match self.state.load(Ordering::Acquire) {
+            0 => CtlState::Active,
+            1 => CtlState::Cancelled,
+            2 => CtlState::Expired,
+            _ => CtlState::Done,
+        }
+    }
+
+    fn transition(&self, to: CtlState) -> bool {
+        self.state
+            .compare_exchange(0, to as u8, Ordering::AcqRel, Ordering::Acquire)
+            .is_ok()
+    }
+
+    /// Client cancel. Returns `false` if the request already finished,
+    /// expired, or was cancelled before.
+    pub fn cancel(&self) -> bool {
+        self.transition(CtlState::Cancelled)
+    }
+
+    /// Deadline expiry (reaper). Returns `false` when the request beat
+    /// the deadline (already `Done`) or was cancelled first.
+    pub fn expire(&self) -> bool {
+        self.transition(CtlState::Expired)
+    }
+
+    /// All replies delivered. Returns `false` if cancel/expire won.
+    pub fn complete(&self) -> bool {
+        self.transition(CtlState::Done)
+    }
+
+    /// True when a worker should drop this request instead of running
+    /// it (and a sink should suppress its reply).
+    pub fn is_dead(&self) -> bool {
+        matches!(self.state(), CtlState::Cancelled | CtlState::Expired)
+    }
+}
+
+/// Streamed reply consumer: one sample's response at a time, in the
+/// order the sink chooses to release them. Implemented by the serve
+/// layer's session sink (which re-orders slots and writes wire frames).
+pub trait StreamSink: Send + Sync {
+    fn put(&self, slot: usize, resp: InferResponse);
 }
 
 /// Where a worker delivers the finished response.
@@ -25,6 +117,9 @@ pub enum ReplyTo {
     Single(Sender<InferResponse>),
     /// One slot of a split batch; the sink reassembles input order.
     Batch(Arc<BatchSink>),
+    /// One slot of a streamed request (socket sessions): delivered
+    /// per-sample, suppression and ordering handled by the sink.
+    Stream(Arc<dyn StreamSink>),
 }
 
 impl ReplyTo {
@@ -37,6 +132,7 @@ impl ReplyTo {
                 let _ = tx.send(resp);
             }
             ReplyTo::Batch(sink) => sink.put(slot, resp),
+            ReplyTo::Stream(sink) => sink.put(slot, resp),
         }
     }
 }
@@ -128,9 +224,11 @@ mod tests {
         let req = InferRequest {
             id: 9,
             x: vec![0.0; 4],
+            xi: None,
             slot: 0,
             t_enqueue: Instant::now(),
             reply: ReplyTo::Single(tx),
+            ctl: None,
         };
         let (id, slot) = (req.id, req.slot);
         req.reply.deliver(slot, resp(id));
@@ -161,5 +259,46 @@ mod tests {
         let sink = BatchSink::new(1, tx);
         drop(rx);
         sink.put(0, resp(1)); // must not panic
+    }
+
+    #[test]
+    fn ctl_first_transition_wins() {
+        let ctl = RequestCtl::shared();
+        assert_eq!(ctl.state(), CtlState::Active);
+        assert!(!ctl.is_dead());
+        assert!(ctl.cancel());
+        assert_eq!(ctl.state(), CtlState::Cancelled);
+        assert!(ctl.is_dead());
+        // losers observe, don't overwrite
+        assert!(!ctl.expire());
+        assert!(!ctl.complete());
+        assert!(!ctl.cancel());
+        assert_eq!(ctl.state(), CtlState::Cancelled);
+    }
+
+    #[test]
+    fn ctl_complete_beats_late_expiry() {
+        let ctl = RequestCtl::shared();
+        assert!(ctl.complete());
+        // The reaper firing after the last reply must be a no-op.
+        assert!(!ctl.expire());
+        assert_eq!(ctl.state(), CtlState::Done);
+        assert!(!ctl.is_dead());
+    }
+
+    #[test]
+    fn ctl_race_has_exactly_one_winner() {
+        for _ in 0..200 {
+            let ctl = RequestCtl::shared();
+            let c2 = Arc::clone(&ctl);
+            let c3 = Arc::clone(&ctl);
+            let a = std::thread::spawn(move || c2.cancel());
+            let b = std::thread::spawn(move || c3.expire());
+            let (wa, wb) = (a.join().unwrap(), b.join().unwrap());
+            assert!(wa ^ wb, "exactly one transition must win");
+            let st = ctl.state();
+            assert_eq!(st == CtlState::Cancelled, wa);
+            assert_eq!(st == CtlState::Expired, wb);
+        }
     }
 }

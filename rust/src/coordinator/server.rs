@@ -26,14 +26,14 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::batcher::{BatchPolicy, Batcher};
 use super::metrics::Metrics;
-use super::request::{BatchSink, InferRequest, InferResponse, ReplyTo};
-use super::shard::ShardPool;
+use super::request::{BatchSink, InferRequest, InferResponse, ReplyTo, RequestCtl, StreamSink};
+use super::shard::{Placement, ShardPool};
 use crate::approx::DivKind;
 use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
 use crate::mcu::EnergyModel;
@@ -61,26 +61,65 @@ pub struct ServeConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub max_wait: Duration,
+    /// Shard placement policy (McuSim): cost-weighted by the plan's
+    /// per-sample MAC estimate by default; `Placement::TwoChoice` is
+    /// the legacy count-based policy.
+    pub placement: Placement,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        ServeConfig { workers: 2, max_batch: 8, max_wait: Duration::from_millis(2) }
+        ServeConfig {
+            workers: 2,
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            placement: Placement::default(),
+        }
     }
 }
 
+/// Submission failure (streamed paths only — the in-process `submit`
+/// APIs keep their infallible signatures).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The coordinator's intake is closed (shutdown in progress).
+    Closed,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Closed => write!(f, "coordinator intake closed"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
 /// Request intake: the sharded pool (McuSim) or the executor channel
-/// (Pjrt, whose single thread batches dynamically).
+/// (Pjrt, whose single thread batches dynamically). The channel sender
+/// sits behind a mutex so `close` works through `&self` — the serve
+/// listener shuts the stack down in close-listener → drain-sessions →
+/// close-pool order while sessions still hold the coordinator.
 enum Intake {
     Pool(Arc<ShardPool<InferRequest>>),
-    Chan(Sender<InferRequest>),
+    Chan(Mutex<Option<Sender<InferRequest>>>),
 }
 
 /// Handle to a running coordinator.
 pub struct Coordinator {
-    intake: Option<Intake>,
-    handles: Vec<JoinHandle<()>>,
+    intake: Intake,
+    handles: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
+    /// Compiled plan (McuSim backend) — the cost oracle for weighted
+    /// placement; `None` on the Pjrt backend.
+    plan: Option<Arc<PlannedModel>>,
+    /// Flat `C·H·W` sample length the backend expects (both backends
+    /// know their model) — sessions validate wire requests against it
+    /// so a wrong-length sample is an `Error` reply, not a worker
+    /// panic.
+    input_len: usize,
+    placement: Placement,
     pub metrics: Arc<Metrics>,
 }
 
@@ -88,7 +127,12 @@ impl Coordinator {
     /// Start serving with the chosen backend.
     pub fn start(backend: BackendChoice, cfg: ServeConfig) -> Coordinator {
         let metrics = Arc::new(Metrics::new());
-        let (intake, handles) = match backend {
+        let placement = cfg.placement;
+        let input_len = match &backend {
+            BackendChoice::McuSim { q, .. } => q.def.input_len(),
+            BackendChoice::Pjrt { model, .. } => crate::models::zoo(model).input_len(),
+        };
+        let (intake, handles, plan) = match backend {
             BackendChoice::McuSim { q, mode, div } => {
                 let workers = cfg.workers.max(1);
                 let pool = Arc::new(ShardPool::new(workers));
@@ -103,7 +147,7 @@ impl Coordinator {
                         std::thread::spawn(move || mcu_worker(w, pool, plan, metrics))
                     })
                     .collect();
-                (Intake::Pool(pool), handles)
+                (Intake::Pool(pool), handles, Some(plan))
             }
             BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
                 let (tx, rx) = channel::<InferRequest>();
@@ -112,16 +156,76 @@ impl Coordinator {
                 let handles = vec![std::thread::spawn(move || {
                     pjrt_executor(rx, model, params, t_vec, fat_t, policy, metrics)
                 })];
-                (Intake::Chan(tx), handles)
+                (Intake::Chan(Mutex::new(Some(tx))), handles, None)
             }
         };
-        Coordinator { intake: Some(intake), handles, next_id: AtomicU64::new(0), metrics }
+        Coordinator {
+            intake,
+            handles: Mutex::new(handles),
+            next_id: AtomicU64::new(0),
+            plan,
+            input_len,
+            placement,
+            metrics,
+        }
     }
 
-    fn dispatch(&self, req: InferRequest) {
-        match self.intake.as_ref().expect("coordinator closed") {
-            Intake::Pool(pool) => pool.push(req),
-            Intake::Chan(tx) => tx.send(req).expect("queue closed"),
+    /// Price one sample for placement: the plan's per-sample MAC
+    /// estimate under cost-weighted placement, unit cost otherwise
+    /// (the Pjrt backend batches dynamically; its queue is one
+    /// channel). The quantized buffer the estimate needed rides along
+    /// in the request so the McuSim worker does not quantize again.
+    fn price(&self, x: &[f32]) -> (u64, Option<Vec<i16>>) {
+        match (&self.plan, self.placement) {
+            (Some(plan), Placement::CostWeighted) => {
+                let xi = plan.quantize_input(x);
+                (plan.estimate_macs(&xi), Some(xi))
+            }
+            _ => (1, None),
+        }
+    }
+
+    /// Estimated service cost of one sample (see `price`).
+    pub fn estimate_cost(&self, x: &[f32]) -> u64 {
+        self.price(x).0
+    }
+
+    /// Expected flat sample length (`C·H·W`) of the served model, for
+    /// session-side request validation.
+    pub fn input_len(&self) -> usize {
+        self.input_len
+    }
+
+    fn dispatch(&self, mut req: InferRequest) {
+        let (cost, xi) = self.price(&req.x);
+        req.xi = xi;
+        match &self.intake {
+            Intake::Pool(pool) => {
+                pool.push_with_cost(req, cost, self.placement);
+            }
+            Intake::Chan(tx) => tx
+                .lock()
+                .unwrap()
+                .as_ref()
+                .expect("coordinator closed")
+                .send(req)
+                .expect("queue closed"),
+        }
+    }
+
+    /// Fallible dispatch for streamed sessions racing shutdown.
+    fn try_dispatch(&self, mut req: InferRequest) -> Result<(), SubmitError> {
+        let (cost, xi) = self.price(&req.x);
+        req.xi = xi;
+        match &self.intake {
+            Intake::Pool(pool) => pool
+                .try_push_with_cost(req, cost, self.placement)
+                .map(|_| ())
+                .map_err(|_| SubmitError::Closed),
+            Intake::Chan(tx) => match tx.lock().unwrap().as_ref() {
+                Some(tx) => tx.send(req).map_err(|_| SubmitError::Closed),
+                None => Err(SubmitError::Closed),
+            },
         }
     }
 
@@ -131,12 +235,51 @@ impl Coordinator {
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
             x,
+            xi: None,
             slot: 0,
             t_enqueue: Instant::now(),
             reply: ReplyTo::Single(rtx),
+            ctl: None,
         };
         self.dispatch(req);
         rrx
+    }
+
+    /// Submit a streamed request on behalf of a socket session: all
+    /// samples share `id` and `ctl`, and every reply flows through
+    /// `sink` (which handles ordering and suppression). Samples are
+    /// placed cost-weighted across shards like any other submission.
+    ///
+    /// On `Err`, `ctl` has been cancelled: any samples already queued
+    /// before the intake closed are tombstoned, so no replies flow and
+    /// the caller owns the error answer to its client.
+    pub fn submit_streamed(
+        &self,
+        id: u64,
+        xs: Vec<Vec<f32>>,
+        ctl: Arc<RequestCtl>,
+        sink: Arc<dyn StreamSink>,
+    ) -> Result<(), SubmitError> {
+        if matches!(self.intake, Intake::Pool(_)) {
+            self.metrics.record_batch(xs.len().max(1));
+        }
+        let t_enqueue = Instant::now();
+        for (slot, x) in xs.into_iter().enumerate() {
+            let req = InferRequest {
+                id,
+                x,
+                xi: None,
+                slot,
+                t_enqueue,
+                reply: ReplyTo::Stream(Arc::clone(&sink)),
+                ctl: Some(Arc::clone(&ctl)),
+            };
+            if let Err(e) = self.try_dispatch(req) {
+                ctl.cancel();
+                return Err(e);
+            }
+        }
+        Ok(())
     }
 
     /// Submit one *batched* request: its samples are split across the
@@ -151,7 +294,7 @@ impl Coordinator {
         // The Pjrt executor re-batches dynamically and records its own
         // batch sizes; for the sharded pool the split request *is* the
         // batch, recorded here.
-        if matches!(self.intake, Some(Intake::Pool(_))) {
+        if matches!(self.intake, Intake::Pool(_)) {
             self.metrics.record_batch(xs.len());
         }
         let sink = Arc::new(BatchSink::new(xs.len(), rtx));
@@ -160,29 +303,43 @@ impl Coordinator {
             self.dispatch(InferRequest {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
                 x,
+                xi: None,
                 slot,
                 t_enqueue,
                 reply: ReplyTo::Batch(Arc::clone(&sink)),
+                ctl: None,
             });
         }
         rrx
     }
 
-    /// Close the intake and join all workers (queued requests drain
-    /// first — nothing is dropped).
-    pub fn shutdown(mut self) {
-        self.close_intake();
-        for h in self.handles.drain(..) {
+    /// Close the intake through a shared handle: queued requests still
+    /// drain, later submissions fail ([`Coordinator::submit_streamed`]
+    /// returns `Err`; the infallible in-process paths panic). Safe to
+    /// call more than once. This is the serve listener's half of the
+    /// close-listener → drain-sessions → close-pool shutdown order.
+    pub fn close(&self) {
+        match &self.intake {
+            Intake::Pool(pool) => pool.close(),
+            Intake::Chan(tx) => drop(tx.lock().unwrap().take()),
+        }
+    }
+
+    /// Join all workers (after [`Coordinator::close`]): returns once
+    /// every queued request has drained and the threads exited. Safe to
+    /// call more than once (later calls are no-ops).
+    pub fn join_workers(&self) {
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
+        for h in handles {
             h.join().expect("worker panicked");
         }
     }
 
-    fn close_intake(&mut self) {
-        match self.intake.take() {
-            Some(Intake::Pool(pool)) => pool.close(),
-            Some(Intake::Chan(tx)) => drop(tx),
-            None => {}
-        }
+    /// Close the intake and join all workers (queued requests drain
+    /// first — nothing is dropped).
+    pub fn shutdown(self) {
+        self.close();
+        self.join_workers();
     }
 }
 
@@ -192,7 +349,7 @@ impl Coordinator {
 /// still the graceful path — it additionally joins them.
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        self.close_intake();
+        self.close();
     }
 }
 
@@ -205,10 +362,21 @@ fn mcu_worker(
     let energy = EnergyModel::default();
     // Per-worker scratch arena: no allocation on the request path.
     let mut scratch = plan.new_scratch();
-    while let Some(req) = pool.pop(worker) {
+    while let Some(mut req) = pool.pop(worker) {
+        // Tombstone drop: a cancelled/expired request is discarded at
+        // dequeue — no inference, no reply, no shard occupancy beyond
+        // this O(1) check.
+        if req.ctl.as_ref().is_some_and(|c| c.is_dead()) {
+            metrics.record_dropped();
+            continue;
+        }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
-        let xi = plan.quantize_input(&req.x);
+        // Cost-weighted dispatch already quantized the input; reuse it.
+        let xi = match req.xi.take() {
+            Some(xi) => xi,
+            None => plan.quantize_input(&req.x),
+        };
         let out = plan.infer(&xi, &mut scratch);
         let service_us = t_deq.elapsed().as_micros() as u64;
         let resp = InferResponse {
@@ -255,6 +423,15 @@ fn pjrt_executor(
         let [c, h, w] = manifest.input_shape;
         c * h * w
     };
+    // Sessions validate wire requests against the zoo definition
+    // (`Coordinator::input_len`); the executor packs against the
+    // artifact manifest. They must be the same model — disagree loudly
+    // at startup rather than silently dropping admitted requests.
+    assert_eq!(
+        sample_len,
+        crate::models::zoo(&model).input_len(),
+        "artifact manifest input shape disagrees with the model zoo for {model}"
+    );
     let classes = manifest.classes;
     let flat: Vec<Vec<f32>> = params.flat_order().into_iter().map(|s| s.to_vec()).collect();
     let fat = [fat_t];
@@ -262,6 +439,30 @@ fn pjrt_executor(
     let batcher = Batcher { policy };
     while let Some(reqs) = batcher.collect(&rx) {
         let t_svc = Instant::now();
+        // Same tombstone contract as mcu_worker: cancelled/expired
+        // streamed requests are dropped at dequeue, not executed with
+        // the reply thrown away. And defense in depth: sessions
+        // validate wire sample lengths, but a malformed request must
+        // degrade to a dropped sample, never a panic that kills the
+        // only executor thread.
+        let mut reqs = reqs;
+        reqs.retain(|r| {
+            let dead = r.ctl.as_ref().is_some_and(|c| c.is_dead());
+            if dead || r.x.len() != sample_len {
+                // Tombstone a streamed request we are discarding so its
+                // suppression semantics (and any session bookkeeping
+                // keyed to the ctl leaving Active) still engage.
+                if let Some(ctl) = &r.ctl {
+                    ctl.cancel();
+                }
+                metrics.record_dropped();
+                return false;
+            }
+            true
+        });
+        if reqs.is_empty() {
+            continue;
+        }
         let mut bx = vec![0.0f32; batch * sample_len];
         for (i, r) in reqs.iter().enumerate() {
             bx[i * sample_len..(i + 1) * sample_len].copy_from_slice(&r.x);
@@ -384,6 +585,57 @@ mod tests {
             let resp = rx.recv_timeout(std::time::Duration::from_secs(30)).unwrap();
             assert_eq!(resp.logits.len(), 10);
         }
+    }
+
+    #[test]
+    fn placement_policies_serve_identical_results() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 6);
+        let q = QModel::quantize(&def, &params);
+        let xs: Vec<Vec<f32>> =
+            (0..8).map(|i| vec![0.07 * i as f32; def.input_len()]).collect();
+        let mut by_policy = Vec::new();
+        for placement in [Placement::TwoChoice, Placement::CostWeighted] {
+            let coord = Coordinator::start(
+                BackendChoice::McuSim {
+                    q: q.clone(),
+                    mode: PruneMode::Unit,
+                    div: DivKind::Shift,
+                },
+                ServeConfig { workers: 3, placement, ..Default::default() },
+            );
+            let out = coord.submit_batch(xs.clone()).recv().unwrap();
+            by_policy.push(out.iter().map(|r| r.logits.clone()).collect::<Vec<_>>());
+            coord.shutdown();
+        }
+        assert_eq!(by_policy[0], by_policy[1], "placement changed results");
+    }
+
+    #[test]
+    fn streamed_submit_after_close_errors_instead_of_panicking() {
+        use crate::coordinator::request::{InferResponse, RequestCtl, StreamSink};
+        struct Devnull;
+        impl StreamSink for Devnull {
+            fn put(&self, _slot: usize, _resp: InferResponse) {}
+        }
+        let def = zoo("mnist");
+        let params = Params::random(&def, 7);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 1, ..Default::default() },
+        );
+        coord.close();
+        let ctl = RequestCtl::shared();
+        let err = coord.submit_streamed(
+            1,
+            vec![vec![0.0; def.input_len()]],
+            Arc::clone(&ctl),
+            Arc::new(Devnull),
+        );
+        assert_eq!(err, Err(SubmitError::Closed));
+        assert!(ctl.is_dead(), "failed submit must tombstone the request");
+        coord.join_workers();
     }
 
     #[test]

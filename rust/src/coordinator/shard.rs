@@ -38,14 +38,36 @@ use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
 use std::time::Duration;
 
+/// How [`ShardPool::push_with_cost`] picks a target shard.
+///
+/// `TwoChoice` is the original count-based policy; `CostWeighted` is
+/// the latency-aware one: UnIT's per-sample MACs vary with activation
+/// sparsity, so two queues of equal *length* can hold very different
+/// amounts of *work*. Weighting placement by the queued cost gauge
+/// (estimated remaining MACs) balances mixed dense/pruned traffic by
+/// work; queue length only breaks ties.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum Placement {
+    /// Round-robin with a power-of-two-choices length refinement (the
+    /// pre-cost-gauge policy, kept for A/B comparison and benches).
+    TwoChoice,
+    /// Least queued cost across all shards; shorter queue, then
+    /// round-robin order, break ties.
+    #[default]
+    CostWeighted,
+}
+
 /// Per-worker queues with round-robin submission and work stealing.
 #[derive(Debug)]
 pub struct ShardPool<T> {
-    shards: Vec<Mutex<VecDeque<T>>>,
+    shards: Vec<Mutex<VecDeque<(T, u64)>>>,
     /// Approximate per-shard lengths (maintained under each shard's
     /// lock, read without it) — used to pick push targets and steal
     /// victims; correctness never depends on them being exact.
     lens: Vec<AtomicUsize>,
+    /// Per-shard queued-cost gauges (sum of the cost attached to each
+    /// queued item), same maintenance discipline as `lens`.
+    costs: Vec<AtomicU64>,
     rr: AtomicUsize,
     closed: AtomicBool,
     /// Workers currently parked on (or entering) the condvar. Pushes
@@ -65,6 +87,7 @@ impl<T> ShardPool<T> {
         ShardPool {
             shards: (0..n).map(|_| Mutex::new(VecDeque::new())).collect(),
             lens: (0..n).map(|_| AtomicUsize::new(0)).collect(),
+            costs: (0..n).map(|_| AtomicU64::new(0)).collect(),
             rr: AtomicUsize::new(0),
             closed: AtomicBool::new(false),
             parked: AtomicUsize::new(0),
@@ -83,25 +106,91 @@ impl<T> ShardPool<T> {
         self.lens.iter().map(|l| l.load(Ordering::Relaxed)).sum()
     }
 
+    /// Total queued cost (approximate while producers/consumers run).
+    pub fn queue_cost(&self) -> u64 {
+        self.costs.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
     /// Successful steals so far (a shard-imbalance observability knob).
     pub fn steal_count(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
     }
 
-    /// Enqueue on the round-robin shard, or its neighbor when that one
-    /// is shorter (power-of-two-choices keeps the queues balanced even
-    /// under skewed service times).
+    /// Enqueue with unit cost under the legacy two-choice policy (the
+    /// in-process front door; streamed serving uses
+    /// [`ShardPool::push_with_cost`] with real MAC estimates).
     pub fn push(&self, item: T) {
+        self.push_with_cost(item, 1, Placement::TwoChoice);
+    }
+
+    fn pick_shard(&self, placement: Placement) -> usize {
         let n = self.shards.len();
-        let a = self.rr.fetch_add(1, Ordering::Relaxed) % n;
-        let b = (a + 1) % n;
-        let idx = if self.lens[b].load(Ordering::Relaxed) < self.lens[a].load(Ordering::Relaxed)
-        {
-            b
-        } else {
-            a
-        };
-        self.push_to(idx, item);
+        match placement {
+            Placement::TwoChoice => {
+                let a = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                let b = (a + 1) % n;
+                if self.lens[b].load(Ordering::Relaxed) < self.lens[a].load(Ordering::Relaxed)
+                {
+                    b
+                } else {
+                    a
+                }
+            }
+            Placement::CostWeighted => {
+                // Full scan of the cost gauges (n_shards = worker count,
+                // single digits): least queued work wins, queue length
+                // then round-robin origin break ties so equal-cost
+                // (e.g. empty) shards still spread.
+                let start = self.rr.fetch_add(1, Ordering::Relaxed) % n;
+                let mut best = start;
+                let mut best_key = (
+                    self.costs[start].load(Ordering::Relaxed),
+                    self.lens[start].load(Ordering::Relaxed),
+                );
+                for off in 1..n {
+                    let i = (start + off) % n;
+                    let key = (
+                        self.costs[i].load(Ordering::Relaxed),
+                        self.lens[i].load(Ordering::Relaxed),
+                    );
+                    if key < best_key {
+                        best = i;
+                        best_key = key;
+                    }
+                }
+                best
+            }
+        }
+    }
+
+    /// Enqueue `item` carrying `cost` units of estimated service work
+    /// on the shard `placement` picks. Returns the chosen shard index.
+    ///
+    /// Panics if the pool is closed (same contract as
+    /// [`ShardPool::push`]); use [`ShardPool::try_push_with_cost`] from
+    /// paths that must survive a racing shutdown.
+    pub fn push_with_cost(&self, item: T, cost: u64, placement: Placement) -> usize {
+        let idx = self.pick_shard(placement);
+        if self.enqueue_at(idx, item, cost).is_some() {
+            panic!("push on closed ShardPool");
+        }
+        idx
+    }
+
+    /// Non-panicking [`ShardPool::push_with_cost`]: hands the item back
+    /// instead when the pool is closed, so a session racing shutdown
+    /// can turn it into an error reply rather than a worker panic.
+    pub fn try_push_with_cost(
+        &self,
+        item: T,
+        cost: u64,
+        placement: Placement,
+    ) -> Result<usize, T> {
+        let idx = self.pick_shard(placement);
+        match self.enqueue_at(idx, item, cost) {
+            None => Ok(idx),
+            Some(item) => Err(item),
+        }
     }
 
     /// Enqueue on a specific shard (callers that manage placement
@@ -111,11 +200,22 @@ impl<T> ShardPool<T> {
     /// shard lock, so a push cannot race `close` into a drained shard
     /// and silently lose the item.
     pub fn push_to(&self, idx: usize, item: T) {
+        if self.enqueue_at(idx, item, 1).is_some() {
+            panic!("push on closed ShardPool");
+        }
+    }
+
+    /// The one true insert: returns the item back (instead of
+    /// inserting) when the pool is closed.
+    fn enqueue_at(&self, idx: usize, item: T, cost: u64) -> Option<T> {
         {
             let mut q = self.shards[idx].lock().unwrap();
-            assert!(!self.closed.load(Ordering::Acquire), "push on closed ShardPool");
-            q.push_back(item);
+            if self.closed.load(Ordering::Acquire) {
+                return Some(item);
+            }
+            q.push_back((item, cost));
             self.lens[idx].store(q.len(), Ordering::Release);
+            self.costs[idx].fetch_add(cost, Ordering::Release);
         }
         // Wake a sleeper only if one exists (SeqCst pairs with the
         // parked increment in `pop`: if the load sees 0, the worker's
@@ -127,13 +227,20 @@ impl<T> ShardPool<T> {
             let _g = self.gate.lock().unwrap();
             self.cv.notify_one();
         }
+        None
     }
 
     fn pop_front_at(&self, idx: usize) -> Option<T> {
         let mut q = self.shards[idx].lock().unwrap();
-        let item = q.pop_front();
+        let popped = q.pop_front();
         self.lens[idx].store(q.len(), Ordering::Release);
-        item
+        match popped {
+            Some((item, cost)) => {
+                self.costs[idx].fetch_sub(cost, Ordering::Release);
+                Some(item)
+            }
+            None => None,
+        }
     }
 
     fn steal_at(&self, idx: usize) -> Option<T> {
@@ -348,5 +455,74 @@ mod tests {
         let pool: ShardPool<u32> = ShardPool::new(1);
         pool.close();
         pool.push(1);
+    }
+
+    #[test]
+    fn try_push_returns_item_after_close_instead_of_panicking() {
+        let pool: ShardPool<u32> = ShardPool::new(2);
+        assert!(pool.try_push_with_cost(7, 10, Placement::CostWeighted).is_ok());
+        pool.close();
+        assert_eq!(pool.try_push_with_cost(8, 10, Placement::CostWeighted), Err(8));
+        // the pre-close item still drains
+        assert_eq!(pool.pop(0), Some(7));
+        assert_eq!(pool.pop(0), None);
+    }
+
+    #[test]
+    fn cost_weighted_placement_balances_work_not_count() {
+        let pool: ShardPool<u32> = ShardPool::new(2);
+        // One huge item, then many small ones: count-blind cost
+        // weighting must route all the small work away from the loaded
+        // shard (two-choice would alternate by length).
+        let big = pool.push_with_cost(0, 1_000_000, Placement::CostWeighted);
+        for i in 1..10u32 {
+            let idx = pool.push_with_cost(i, 100, Placement::CostWeighted);
+            assert_ne!(idx, big, "small item {i} landed on the loaded shard");
+        }
+        assert_eq!(pool.queue_cost(), 1_000_000 + 900);
+        assert_eq!(pool.queue_len(), 10);
+    }
+
+    /// Satellite property: under BOTH placement policies, any push
+    /// sequence drains to exactly the pushed multiset, per-shard FIFO
+    /// order survives (front-steals included), and the cost gauges
+    /// return to zero.
+    #[test]
+    fn placement_policies_never_lose_or_reorder_items() {
+        crate::util::prop::check(0xC057, 60, |g| {
+            let n_shards = g.usize_in(1, 5);
+            let n_items = g.usize_in(1, 120);
+            let policy = *g.choice(&[Placement::TwoChoice, Placement::CostWeighted]);
+            let pool: ShardPool<usize> = ShardPool::new(n_shards);
+            let mut shard_of = Vec::with_capacity(n_items);
+            let mut total_cost = 0u64;
+            for item in 0..n_items {
+                let cost = g.u32_in(0, 1_000_000) as u64;
+                total_cost += cost;
+                shard_of.push(pool.push_with_cost(item, cost, policy));
+            }
+            assert_eq!(pool.queue_len(), n_items);
+            assert_eq!(pool.queue_cost(), total_cost);
+            // Drain from random workers: mixes local pops with steals.
+            let mut popped = Vec::new();
+            while let Some(v) = pool.try_pop(g.usize_in(0, n_shards.max(1) - 1)) {
+                popped.push(v);
+            }
+            assert_eq!(popped.len(), n_items, "items lost or duplicated");
+            let mut sorted = popped.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n_items).collect::<Vec<_>>());
+            // FIFO per shard: the pop subsequence belonging to one
+            // shard must be in push order (pops always take the front).
+            for s in 0..n_shards {
+                let pushed: Vec<usize> =
+                    (0..n_items).filter(|&i| shard_of[i] == s).collect();
+                let drained: Vec<usize> =
+                    popped.iter().copied().filter(|&i| shard_of[i] == s).collect();
+                assert_eq!(drained, pushed, "shard {s} reordered under {policy:?}");
+            }
+            assert_eq!(pool.queue_cost(), 0, "cost gauge leaked");
+            assert_eq!(pool.queue_len(), 0);
+        });
     }
 }

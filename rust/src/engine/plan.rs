@@ -375,6 +375,124 @@ impl PlannedModel {
     }
 }
 
+impl PlannedModel {
+    /// Total connections (dense MACs) of the whole model — the
+    /// input-independent ceiling of [`PlannedModel::estimate_macs`].
+    pub fn dense_macs(&self) -> u64 {
+        self.layers.iter().map(layer_total_conn).sum()
+    }
+
+    /// Estimate the MACs one sample will execute, **without running
+    /// inference** — the admission/placement cost signal for the
+    /// serving layer, where balancing mixed dense/pruned traffic by
+    /// queue *length* is wrong because UnIT's per-sample work varies
+    /// with activation sparsity.
+    ///
+    /// The estimate reuses the plan's sorted tables as prefix-sum
+    /// queries: for the **first layer** (whose activations are the
+    /// input itself) each nonzero input value binary-searches its
+    /// keep-set cut exactly as the kernel would — Eq. 2's
+    /// `|w| > T/|x|` prefix per linear row, Eq. 3's `w̄ < |x|` prefix
+    /// per conv input channel — so the layer-0 count is exact up to
+    /// conv border clipping (borders are counted as interior and the
+    /// total clamped, a small deliberate overcount). Deeper layers'
+    /// activations are unknown before execution, so each one is billed
+    /// its input-independent executed-MAC total scaled by the layer-0
+    /// keep ratio, the plan's input-density proxy. `Dense` and
+    /// `StaticSparse` have input-independent cost and return it
+    /// exactly.
+    ///
+    /// Cost: O(input_len · log taps) — microseconds against a
+    /// millisecond-scale inference; zeroing input values never raises
+    /// the estimate (property-tested).
+    pub fn estimate_macs(&self, x_raw: &[i16]) -> u64 {
+        assert_eq!(x_raw.len(), self.input_len, "input length");
+        let static_total: u64 = self.layers.iter().map(|l| layer_static_macs(l, self.cfg.mode)).sum();
+        if matches!(self.cfg.mode, PruneMode::Dense | PruneMode::StaticSparse) {
+            return static_total.max(1);
+        }
+        let Some(first) = self.layers.first() else { return 1 };
+        let total0 = layer_static_macs(first, self.cfg.mode);
+        let kept0 = match first {
+            LayerPlan::Conv(cp) => {
+                let mut kept = 0u64;
+                for (ci, &(s, e)) in cp.ci_ranges.iter().enumerate() {
+                    let taps = &cp.taps[s as usize..e as usize];
+                    if taps.is_empty() {
+                        continue;
+                    }
+                    let plane = &x_raw[ci * cp.h * cp.wd..(ci + 1) * cp.h * cp.wd];
+                    for &xv in plane {
+                        if xv == 0 {
+                            continue;
+                        }
+                        let ax = (xv as i32).unsigned_abs();
+                        kept += taps.partition_point(|t| t.wbar < ax) as u64;
+                    }
+                }
+                kept.min(total0)
+            }
+            LayerPlan::Linear(lp) => {
+                let mut kept = 0u64;
+                for (k, &xv) in x_raw.iter().enumerate() {
+                    if xv == 0 {
+                        continue;
+                    }
+                    match self.cfg.mode {
+                        PruneMode::Unit => {
+                            let tbar = if lp.t_eff == 0 {
+                                0
+                            } else {
+                                self.div.div(lp.t_eff, (xv as i32).unsigned_abs())
+                            };
+                            let abs_row = &lp.sorted_abs[k * lp.n_out..(k + 1) * lp.n_out];
+                            kept += abs_row.partition_point(|&a| a as u32 > tbar) as u64;
+                        }
+                        _ => kept += lp.nnz[k] as u64,
+                    }
+                }
+                kept
+            }
+        };
+        if total0 == 0 {
+            return static_total.max(1);
+        }
+        let ratio = kept0 as f64 / total0 as f64;
+        let mut est = kept0;
+        for l in self.layers.iter().skip(1) {
+            let cap = layer_static_macs(l, self.cfg.mode);
+            est += ((cap as f64 * ratio).round() as u64).min(cap);
+        }
+        est.max(1)
+    }
+}
+
+/// Dense connection count of one compiled layer.
+fn layer_total_conn(lp: &LayerPlan) -> u64 {
+    match lp {
+        LayerPlan::Conv(cp) => cp.total_conn,
+        LayerPlan::Linear(lp) => (lp.n_in * lp.n_out) as u64,
+    }
+}
+
+/// Input-independent executed-MAC total of one layer under `mode`: the
+/// exact cost for `Dense`/`StaticSparse`, the all-activations-live
+/// ceiling for `ZeroSkip`/`Unit`.
+fn layer_static_macs(lp: &LayerPlan, mode: PruneMode) -> u64 {
+    match lp {
+        LayerPlan::Conv(cp) => match mode {
+            PruneMode::Dense => cp.total_conn,
+            PruneMode::StaticSparse => cp.stream_taps.len() as u64 * cp.n_pos as u64,
+            // scatter modes store only live taps
+            PruneMode::ZeroSkip | PruneMode::Unit => cp.taps.len() as u64 * cp.n_pos as u64,
+        },
+        LayerPlan::Linear(lin) => match mode {
+            PruneMode::Dense => (lin.n_in * lin.n_out) as u64,
+            _ => lin.nnz.iter().map(|&z| z as u64).sum(),
+        },
+    }
+}
+
 /// Plan handle + private scratch: the drop-in "compile once, infer
 /// many" front door used by workers and benches.
 pub struct PlanBacked {
@@ -975,6 +1093,75 @@ mod tests {
         assert_eq!(oa.logits_raw, ob.logits_raw);
         assert!(ob.ledger.compute_cycles < oa.ledger.compute_cycles);
         assert!(ob.ledger.counts.divs < oa.ledger.counts.divs);
+    }
+
+    #[test]
+    fn estimate_macs_bounds_and_monotonicity() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 26);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.25));
+        for mode in [
+            PruneMode::Dense,
+            PruneMode::StaticSparse,
+            PruneMode::ZeroSkip,
+            PruneMode::Unit,
+        ] {
+            let plan = PlannedModel::compile(&q, PlanConfig::for_mode(mode, DivKind::Shift));
+            let dense = plan.dense_macs();
+            assert!(dense > 0);
+            let x_f: Vec<f32> = (0..def.input_len())
+                .map(|i| (((i * 13) % 29) as f32 - 14.0) / 8.0)
+                .collect();
+            let x = plan.quantize_input(&x_f);
+            let est = plan.estimate_macs(&x);
+            assert!(est >= 1 && est <= dense, "{mode:?}: est {est} vs dense {dense}");
+            // Zeroing inputs never raises the estimate.
+            let mut sparser = x.clone();
+            for v in sparser.iter_mut().step_by(3) {
+                *v = 0;
+            }
+            let est_sparse = plan.estimate_macs(&sparser);
+            assert!(
+                est_sparse <= est,
+                "{mode:?}: sparser input raised estimate {est_sparse} > {est}"
+            );
+            // All-zero input is the floor.
+            let zeros = vec![0i16; def.input_len()];
+            assert!(plan.estimate_macs(&zeros) <= est_sparse.max(1));
+            match mode {
+                // Input-independent modes report their exact cost.
+                PruneMode::Dense => assert_eq!(plan.estimate_macs(&x), dense),
+                PruneMode::StaticSparse => {
+                    assert_eq!(plan.estimate_macs(&zeros), plan.estimate_macs(&x))
+                }
+                _ => {}
+            }
+        }
+    }
+
+    #[test]
+    fn estimate_tracks_actual_work_ordering() {
+        // The estimate's job is placement: ranking a denser sample
+        // above a sparser one. Check it agrees with the executed MACs
+        // on a clearly separated pair.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 27);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let plan = PlannedModel::compile(&q, PlanConfig::unit(DivKind::Shift));
+        let mut scratch = plan.new_scratch();
+        let dense_f: Vec<f32> =
+            (0..def.input_len()).map(|i| ((i % 7) as f32 - 3.0) / 2.0).collect();
+        let dense_x = plan.quantize_input(&dense_f);
+        let sparse_x = plan.quantize_input(
+            &(0..def.input_len())
+                .map(|i| if i % 11 == 0 { 0.4 } else { 0.0 })
+                .collect::<Vec<_>>(),
+        );
+        let (ed, es) = (plan.estimate_macs(&dense_x), plan.estimate_macs(&sparse_x));
+        let kd: u64 = plan.infer(&dense_x, &mut scratch).kept.iter().sum();
+        let ks: u64 = plan.infer(&sparse_x, &mut scratch).kept.iter().sum();
+        assert!(kd > ks, "setup: dense sample must execute more MACs");
+        assert!(ed > es, "estimate ordering disagrees: {ed} vs {es} (actual {kd} vs {ks})");
     }
 
     #[test]

@@ -16,8 +16,10 @@
 //!   ([`engine`]), the UnIT pruning logic and baselines ([`pruning`]),
 //!   the fast division approximations ([`approx`]), synthetic datasets
 //!   ([`data`]), a PJRT runtime that loads the AOT artifacts
-//!   ([`runtime`]), a training driver ([`train`]), and a serving
-//!   coordinator ([`coordinator`]). Python never runs on the request
+//!   ([`runtime`]), a training driver ([`train`]), a serving
+//!   coordinator ([`coordinator`]), and a streamed TCP serving layer —
+//!   framed wire protocol, client sessions with backpressure, deadlines
+//!   and cancellation ([`serve`]). Python never runs on the request
 //!   path.
 //!
 //! See `DESIGN.md` for the substitution ledger (paper testbed → simulated
@@ -36,6 +38,7 @@ pub mod nn;
 pub mod pruning;
 pub mod report;
 pub mod runtime;
+pub mod serve;
 pub mod tensor;
 pub mod train;
 pub mod util;

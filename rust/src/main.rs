@@ -6,6 +6,7 @@
 //! unit train  --model mnist --steps 400 # train via the AOT step artifact
 //! unit eval   --model mnist --div shift --percentile 20
 //! unit serve  --model mnist --requests 64 --workers 2 [--backend pjrt]
+//! unit serve  --listen 127.0.0.1:0 --workers 4   # streamed TCP serving
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
@@ -13,8 +14,9 @@ use anyhow::Result;
 use std::time::Duration;
 
 use unit_pruner::approx::DivKind;
-use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, Placement, ServeConfig};
 use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::serve::{ServeOpts, Server, SessionCfg};
 use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
 use unit_pruner::models::{zoo, MODEL_NAMES};
@@ -243,16 +245,34 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `unit serve`: burst mode (`--requests N`, the in-process demo) or
+/// streamed TCP mode (`--listen ADDR`, the production front door).
 fn cmd_serve(args: &Args) -> Result<()> {
     let model = args.get_or("model", "mnist").to_string();
     let n_req = args.usize_or("requests", 64);
     let backend = args.get_or("backend", "mcu").to_string();
 
-    let rt = Runtime::cpu()?;
-    let store = ArtifactStore::discover();
     let ds = by_name(&model, args.u64_or("seed", 42), Sizes::default());
-    let params = ensure_trained(&rt, &store, &model, &ds, &TrainConfig::default())?;
     let def = zoo(&model);
+    // Trained weights need the PJRT runtime (the trainer runs on AOT
+    // step artifacts). Without it — the default offline build — serve
+    // still works: randomly initialized weights exercise the identical
+    // pruning/serving machinery, which is what the protocol smoke
+    // tests need.
+    let params = match Runtime::cpu().and_then(|rt| {
+        let store = ArtifactStore::discover();
+        ensure_trained(&rt, &store, &model, &ds, &TrainConfig::default())
+    }) {
+        Ok(p) => p,
+        Err(e) => {
+            if backend == "pjrt" {
+                eprintln!("serve: the pjrt backend needs the `xla` feature + artifacts: {e}");
+                std::process::exit(2);
+            }
+            eprintln!("[serve] trained weights unavailable ({e}); using random init");
+            unit_pruner::models::Params::random(&def, args.u64_or("seed", 42))
+        }
+    };
     let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
 
     let choice = if backend == "pjrt" {
@@ -270,14 +290,23 @@ fn cmd_serve(args: &Args) -> Result<()> {
             div: DivKind::parse(args.get_or("div", "shift")).expect("div kind"),
         }
     };
+    let placement = match args.get_or("placement", "cost") {
+        "two-choice" | "count" => Placement::TwoChoice,
+        _ => Placement::CostWeighted,
+    };
     let coord = Coordinator::start(
         choice,
         ServeConfig {
             workers: args.usize_or("workers", 2),
             max_batch: args.usize_or("max-batch", 8),
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+            placement,
         },
     );
+
+    if let Some(addr) = args.get("listen") {
+        return cmd_serve_listen(args, coord, addr);
+    }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_req)
         .map(|i| coord.submit(ds.test.sample(i % ds.test.len()).to_vec()))
@@ -311,6 +340,76 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "queue wait p50/p99 = {}/{} us, service p50/p99 = {}/{} us",
         snap.queue_p50_us, snap.queue_p99_us, snap.service_p50_us, snap.service_p99_us
+    );
+    Ok(())
+}
+
+/// `unit serve --listen ADDR [--window N] [--deadline-ms D]
+/// [--max-conns C] [--serve-secs S] [--stats-secs T]`
+///
+/// Streamed TCP serving: sessions with credit-window backpressure,
+/// deadlines, and cancellation over the framed wire protocol (see
+/// README "Streaming serving"). `--listen 127.0.0.1:0` binds an
+/// ephemeral port; the bound address is printed on one line so
+/// scripts/CI can scrape it. `--serve-secs 0` (default) serves until
+/// killed.
+fn cmd_serve_listen(args: &Args, coord: Coordinator, addr: &str) -> Result<()> {
+    let opts = ServeOpts {
+        max_conns: args.usize_or("max-conns", 64),
+        session: SessionCfg {
+            max_inflight: args.usize_or("window", 64),
+            default_deadline: match args.u64_or("deadline-ms", 0) {
+                0 => None,
+                ms => Some(Duration::from_millis(ms)),
+            },
+            drain_timeout: Duration::from_secs(args.u64_or("drain-secs", 10)),
+            ..Default::default()
+        },
+    };
+    let metrics = std::sync::Arc::clone(&coord.metrics);
+    let server = Server::start(coord, addr, opts).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
+    // Single greppable line, flushed immediately: CI scrapes the
+    // ephemeral port from it.
+    println!("unit serve: listening on {}", server.local_addr());
+    use std::io::Write as _;
+    std::io::stdout().flush().ok();
+
+    let serve_secs = args.u64_or("serve-secs", 0);
+    let stats_secs = args.u64_or("stats-secs", 10);
+    let t0 = std::time::Instant::now();
+    let mut last_stats = std::time::Instant::now();
+    loop {
+        std::thread::sleep(Duration::from_millis(200));
+        if serve_secs > 0 && t0.elapsed() >= Duration::from_secs(serve_secs) {
+            break;
+        }
+        if stats_secs > 0 && last_stats.elapsed() >= Duration::from_secs(stats_secs) {
+            last_stats = std::time::Instant::now();
+            let s = metrics.snapshot();
+            println!(
+                "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
+                 sessions={}/{} p50/p99={}/{}us",
+                s.served,
+                s.inflight,
+                s.rejected,
+                s.expired,
+                s.cancelled,
+                s.dropped,
+                s.sessions_opened - s.sessions_closed,
+                s.sessions_opened,
+                s.p50_us,
+                s.p99_us,
+            );
+            std::io::stdout().flush().ok();
+        }
+    }
+    // Snapshot after the drain so work completed during graceful
+    // shutdown is counted in the summary.
+    server.shutdown();
+    let s = metrics.snapshot();
+    println!(
+        "unit serve: done — served {} ({} rejected, {} expired, {} cancelled, {} dropped) over {} sessions",
+        s.served, s.rejected, s.expired, s.cancelled, s.dropped, s.sessions_opened
     );
     Ok(())
 }

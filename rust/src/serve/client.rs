@@ -1,0 +1,342 @@
+//! Blocking client for the streamed serving protocol: connect, submit
+//! (single or batch, with optional deadline), cancel, ping, goodbye.
+//!
+//! One background reader thread demultiplexes response frames to
+//! per-request channels by id, so any number of requests can be in
+//! flight concurrently over the single connection. Used by the
+//! `stream_clients` load generator and the loopback e2e tests; it is
+//! also the reference implementation for writing clients in other
+//! languages.
+
+use std::collections::HashMap;
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::wire::{self, Frame, FrameReader, Payload, Status, WHOLE_REQUEST};
+
+/// One response event as seen by a client: either a sample result
+/// (`status == Ok`, `slot` = sample index) or a request-level outcome
+/// (`slot == WHOLE_REQUEST`).
+#[derive(Debug, Clone)]
+pub struct WireResponse {
+    pub id: u64,
+    pub slot: u32,
+    pub status: Status,
+    pub predicted: u16,
+    pub queue_us: u32,
+    pub service_us: u32,
+    pub mac_skipped: f32,
+    pub logits: Vec<f32>,
+}
+
+struct Pending {
+    tx: Sender<WireResponse>,
+    /// `Ok` responses still expected before the entry retires.
+    remaining: usize,
+}
+
+struct ClientShared {
+    pending: Mutex<HashMap<u64, Pending>>,
+    pongs: Mutex<HashMap<u64, Sender<()>>>,
+    /// Server said goodbye (or the connection died).
+    closed: AtomicBool,
+    goodbye_tx: Mutex<Option<Sender<()>>>,
+}
+
+/// Blocking protocol client. Cheap to share behind an `Arc`; all
+/// methods take `&self`.
+pub struct Client {
+    writer: Mutex<TcpStream>,
+    shared: Arc<ClientShared>,
+    next_id: AtomicU64,
+    reader: Option<JoinHandle<()>>,
+    goodbye_rx: Mutex<Receiver<()>>,
+}
+
+impl Client {
+    /// Connect and start the demultiplexing reader thread.
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> std::io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        // Symmetric to the server's SessionCfg::write_timeout: a
+        // stalled peer must error a blocked send rather than wedge the
+        // writer mutex (and with it cancel/ping/goodbye/Drop) forever.
+        stream.set_write_timeout(Some(Duration::from_secs(5)))?;
+        let read_half = stream.try_clone()?;
+        let (goodbye_tx, goodbye_rx) = channel();
+        let shared = Arc::new(ClientShared {
+            pending: Mutex::new(HashMap::new()),
+            pongs: Mutex::new(HashMap::new()),
+            closed: AtomicBool::new(false),
+            goodbye_tx: Mutex::new(Some(goodbye_tx)),
+        });
+        let t_shared = Arc::clone(&shared);
+        let reader = std::thread::spawn(move || reader_loop(read_half, t_shared));
+        Ok(Client {
+            writer: Mutex::new(stream),
+            shared,
+            next_id: AtomicU64::new(1),
+            reader: Some(reader),
+            goodbye_rx: Mutex::new(goodbye_rx),
+        })
+    }
+
+    fn send(&self, frame: &Frame) -> std::io::Result<()> {
+        let bytes = wire::encode(frame);
+        let mut w = self.writer.lock().unwrap();
+        w.write_all(&bytes)?;
+        w.flush()
+    }
+
+    /// Next client-chosen request id (unique per connection).
+    pub fn fresh_id(&self) -> u64 {
+        self.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Submit one sample. The receiver yields exactly one event: the
+    /// `Ok` result, or a request-level status (rejected/expired/…).
+    pub fn submit(
+        &self,
+        x: &[f32],
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        self.submit_payload(Payload::F32(x.to_vec()), x.len(), deadline)
+    }
+
+    /// Submit a batch (`xs` must share one length; ragged batches are
+    /// rejected with `InvalidInput`). The receiver streams one event
+    /// per sample in slot order, or a single request-level status.
+    pub fn submit_batch(
+        &self,
+        xs: &[Vec<f32>],
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        let sample_len = xs.first().map_or(0, |x| x.len());
+        if xs.iter().any(|x| x.len() != sample_len) {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                "ragged batch: samples differ in length",
+            ));
+        }
+        let flat: Vec<f32> = xs.iter().flat_map(|x| x.iter().copied()).collect();
+        self.submit_payload(Payload::F32(flat), sample_len, deadline)
+    }
+
+    /// Submit pre-quantized i8 samples (`v / 127.0` dequantization
+    /// server-side) — the compact transport.
+    pub fn submit_i8(
+        &self,
+        flat: &[i8],
+        sample_len: usize,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        self.submit_payload(Payload::I8(flat.to_vec()), sample_len, deadline)
+    }
+
+    fn submit_payload(
+        &self,
+        data: Payload,
+        sample_len: usize,
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        // Catch ragged or oversized input here with an Err: an
+        // inconsistent (or length-capped) frame on the wire would be a
+        // protocol error that kills the whole session and every other
+        // in-flight request on it.
+        if sample_len == 0 || data.is_empty() || data.len() % sample_len != 0 {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!("{} values do not split into samples of {sample_len}", data.len()),
+            ));
+        }
+        // Header (16) + request fields (12) + data + CRC (4) must fit
+        // the decoder's MAX_FRAME_LEN; split bigger batches.
+        let frame_len = wire::HEADER_LEN + 12 + data.byte_len() + 4;
+        if frame_len > wire::MAX_FRAME_LEN {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidInput,
+                format!(
+                    "request frame of {frame_len} bytes exceeds the {} byte protocol cap; \
+                     split the batch",
+                    wire::MAX_FRAME_LEN
+                ),
+            ));
+        }
+        let id = self.fresh_id();
+        let n_samples = data.len() / sample_len;
+        let (tx, rx) = channel();
+        // Register before sending: a reply can arrive arbitrarily fast.
+        self.shared
+            .pending
+            .lock()
+            .unwrap()
+            .insert(id, Pending { tx, remaining: n_samples.max(1) });
+        // Re-check closed AFTER the insert: the reader's shutdown path
+        // stores `closed` and then clears `pending`, so any
+        // interleaving either lands here (we remove and error) or the
+        // reader's clear disconnects the receiver — a submit racing a
+        // server goodbye can never strand a forever-pending entry.
+        if self.shared.closed.load(Ordering::Acquire) {
+            self.shared.pending.lock().unwrap().remove(&id);
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotConnected,
+                "connection closed by server",
+            ));
+        }
+        let deadline_ms = deadline.map_or(0, |d| d.as_millis().min(u32::MAX as u128) as u32);
+        let frame = Frame::Request { id, deadline_ms, sample_len: sample_len as u32, data };
+        if let Err(e) = self.send(&frame) {
+            self.shared.pending.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        Ok((id, rx))
+    }
+
+    /// Cancel request `id`: queued work is dropped server-side and all
+    /// its remaining replies are suppressed (silence, not a status).
+    ///
+    /// The pending entry is retired immediately — the contract is that
+    /// nothing more arrives for `id`, so keeping it would leak one
+    /// entry per cancel on a long-lived connection. The request's
+    /// receiver disconnects; replies that were already in flight when
+    /// the cancel was sent are discarded by the demultiplexer.
+    pub fn cancel(&self, id: u64) -> std::io::Result<()> {
+        let r = self.send(&Frame::Cancel { id });
+        self.shared.pending.lock().unwrap().remove(&id);
+        r
+    }
+
+    /// Liveness probe: true iff the server echoed within `timeout`.
+    pub fn ping(&self, timeout: Duration) -> bool {
+        let id = self.fresh_id();
+        let (tx, rx) = channel();
+        self.shared.pongs.lock().unwrap().insert(id, tx);
+        if self.send(&Frame::Ping { id }).is_err() {
+            self.shared.pongs.lock().unwrap().remove(&id);
+            return false;
+        }
+        let ok = rx.recv_timeout(timeout).is_ok();
+        self.shared.pongs.lock().unwrap().remove(&id);
+        ok
+    }
+
+    /// True once the server said goodbye or the connection died.
+    pub fn is_closed(&self) -> bool {
+        self.shared.closed.load(Ordering::Acquire)
+    }
+
+    /// Graceful close: send `Goodbye`, wait (up to `timeout`) for the
+    /// server's goodbye after it drains our in-flight work. Returns
+    /// whether the handshake completed.
+    pub fn goodbye(mut self, timeout: Duration) -> bool {
+        let _ = self.send(&Frame::Goodbye);
+        let done = self.goodbye_rx.lock().unwrap().recv_timeout(timeout).is_ok();
+        self.teardown();
+        done
+    }
+
+    fn teardown(&mut self) {
+        let _ = self.writer.lock().unwrap().shutdown(Shutdown::Both);
+        if let Some(h) = self.reader.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for Client {
+    fn drop(&mut self) {
+        self.teardown();
+    }
+}
+
+fn reader_loop(mut stream: TcpStream, shared: Arc<ClientShared>) {
+    let mut reader = FrameReader::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    'outer: loop {
+        match stream.read(&mut buf) {
+            Ok(0) | Err(_) => break,
+            Ok(n) => {
+                reader.feed(&buf[..n]);
+                loop {
+                    match reader.next() {
+                        Ok(Some(frame)) => handle_frame(&shared, frame),
+                        Ok(None) => break,
+                        Err(e) => {
+                            eprintln!("[client] protocol error: {e}");
+                            break 'outer;
+                        }
+                    }
+                    if shared.closed.load(Ordering::Acquire) {
+                        break 'outer;
+                    }
+                }
+            }
+        }
+    }
+    shared.closed.store(true, Ordering::Release);
+    // Wake the goodbye waiter and fail over any outstanding requests:
+    // dropping the senders makes every pending receiver disconnect.
+    drop(shared.goodbye_tx.lock().unwrap().take());
+    shared.pending.lock().unwrap().clear();
+    shared.pongs.lock().unwrap().clear();
+}
+
+fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
+    match frame {
+        Frame::Response {
+            id,
+            slot,
+            status,
+            predicted,
+            queue_us,
+            service_us,
+            mac_skipped,
+            logits,
+        } => {
+            let mut pending = shared.pending.lock().unwrap();
+            let retire = match pending.get_mut(&id) {
+                Some(entry) => {
+                    let _ = entry.tx.send(WireResponse {
+                        id,
+                        slot,
+                        status,
+                        predicted,
+                        queue_us,
+                        service_us,
+                        mac_skipped,
+                        logits,
+                    });
+                    if status == Status::Ok && slot != WHOLE_REQUEST {
+                        entry.remaining -= 1;
+                        entry.remaining == 0
+                    } else {
+                        // Request-level outcome: no more events follow.
+                        true
+                    }
+                }
+                None => false, // late reply for a retired/cancelled id
+            };
+            if retire {
+                pending.remove(&id);
+            }
+        }
+        Frame::Pong { id } => {
+            if let Some(tx) = shared.pongs.lock().unwrap().remove(&id) {
+                let _ = tx.send(());
+            }
+        }
+        Frame::Goodbye => {
+            shared.closed.store(true, Ordering::Release);
+            if let Some(tx) = shared.goodbye_tx.lock().unwrap().take() {
+                let _ = tx.send(());
+            }
+        }
+        // Client-only frames from a server: ignore.
+        Frame::Request { .. } | Frame::Cancel { .. } | Frame::Ping { .. } => {}
+    }
+}

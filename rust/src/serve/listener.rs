@@ -1,0 +1,216 @@
+//! TCP accept loop: session-thread-per-connection serving with a
+//! connection cap and ordered shutdown.
+//!
+//! Thread topology: one accept thread (non-blocking listener polled at
+//! 5 ms so shutdown is prompt), one session thread per live
+//! connection, one shared [`Reaper`] timer thread, plus the
+//! coordinator's worker pool underneath.
+//!
+//! Shutdown mirrors [`crate::coordinator::ShardPool`]'s
+//! close-then-drain protocol, one layer up:
+//!
+//! 1. **close the listener** — no new connections;
+//! 2. **drain the sessions** — each stops admitting, finishes its
+//!    in-flight work, answers `Goodbye`, exits;
+//! 3. **close the pool** — the coordinator intake closes and workers
+//!    drain whatever the sessions left queued, then join.
+//!
+//! Order matters: sessions can only finish in-flight work while the
+//! workers are still alive, and the pool can only be closed safely
+//! once no session will submit again (a session racing the close gets
+//! `Err(Closed)` back and answers its client with an `Error` status —
+//! never a panic; `tests/serve_wire.rs` pins this).
+
+use std::io;
+use std::net::{SocketAddr, TcpListener};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use super::session::{spawn_session, Reaper, SessionCfg, SessionHandle};
+use super::wire::{self, Frame};
+use crate::coordinator::{Coordinator, Metrics};
+
+/// Listener configuration.
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Max simultaneous sessions; extra connections get a `Goodbye`
+    /// frame and are closed immediately.
+    pub max_conns: usize,
+    pub session: SessionCfg,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { max_conns: 64, session: SessionCfg::default() }
+    }
+}
+
+/// A listening streamed-serving server wrapped around a running
+/// [`Coordinator`].
+pub struct Server {
+    coord: Arc<Coordinator>,
+    local_addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept_handle: Option<JoinHandle<()>>,
+    sessions: Arc<Mutex<Vec<SessionHandle>>>,
+    reaper: Arc<Reaper>,
+    /// Guards double-shutdown from the explicit path + `Drop`.
+    finished: bool,
+}
+
+impl Server {
+    /// Bind `addr` (e.g. `127.0.0.1:0` for an ephemeral port) and start
+    /// accepting sessions that submit into `coord`.
+    pub fn start(coord: Coordinator, addr: &str, opts: ServeOpts) -> io::Result<Server> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local_addr = listener.local_addr()?;
+        let coord = Arc::new(coord);
+        let reaper = Arc::new(Reaper::new());
+        let stop = Arc::new(AtomicBool::new(false));
+        let sessions: Arc<Mutex<Vec<SessionHandle>>> = Arc::default();
+
+        let t_stop = Arc::clone(&stop);
+        let t_sessions = Arc::clone(&sessions);
+        let t_coord = Arc::clone(&coord);
+        let t_reaper = Arc::clone(&reaper);
+        let session_cfg = opts.session.clone();
+        let max_conns = opts.max_conns.max(1);
+        let accept_handle = std::thread::spawn(move || {
+            accept_loop(listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, max_conns)
+        });
+
+        Ok(Server {
+            coord,
+            local_addr,
+            stop,
+            accept_handle: Some(accept_handle),
+            sessions,
+            reaper,
+            finished: false,
+        })
+    }
+
+    /// The bound address (resolves ephemeral ports).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// The coordinator under this server (metrics, tests simulating
+    /// pathological shutdown orders).
+    pub fn coordinator(&self) -> &Arc<Coordinator> {
+        &self.coord
+    }
+
+    pub fn metrics(&self) -> Arc<Metrics> {
+        Arc::clone(&self.coord.metrics)
+    }
+
+    /// Live (not yet finished) sessions.
+    pub fn session_count(&self) -> usize {
+        self.sessions.lock().unwrap().iter().filter(|s| !s.is_finished()).count()
+    }
+
+    /// Graceful stop: close listener → drain sessions → close pool.
+    pub fn shutdown(mut self) {
+        self.shutdown_inner();
+    }
+
+    fn shutdown_inner(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        // 1. Close the listener.
+        self.stop.store(true, Ordering::Release);
+        if let Some(h) = self.accept_handle.take() {
+            h.join().expect("accept thread panicked");
+        }
+        // 2. Drain the sessions (workers still alive underneath).
+        let handles: Vec<SessionHandle> =
+            std::mem::take(&mut *self.sessions.lock().unwrap());
+        for s in &handles {
+            s.begin_drain();
+        }
+        for s in handles {
+            s.join();
+        }
+        self.reaper.shutdown();
+        // 3. Close the pool and join the workers.
+        self.coord.close();
+        self.coord.join_workers();
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown_inner();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    stop: Arc<AtomicBool>,
+    sessions: Arc<Mutex<Vec<SessionHandle>>>,
+    coord: Arc<Coordinator>,
+    reaper: Arc<Reaper>,
+    session_cfg: SessionCfg,
+    max_conns: usize,
+) {
+    while !stop.load(Ordering::Acquire) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let mut guard = sessions.lock().unwrap();
+                // Reap finished session threads so the cap counts only
+                // live connections and handles don't accumulate.
+                guard.retain(|s| !s.is_finished());
+                if guard.len() >= max_conns {
+                    drop(guard);
+                    // Over the cap: an immediate, well-formed refusal
+                    // beats a silent RST. Half-close and briefly drain
+                    // the read side — closing with unread pipelined
+                    // bytes (a fast client's first Ping) would RST and
+                    // could destroy the Goodbye in flight.
+                    let mut stream = stream;
+                    let _ = std::io::Write::write_all(
+                        &mut stream,
+                        &wire::encode(&Frame::Goodbye),
+                    );
+                    let _ = stream.shutdown(std::net::Shutdown::Write);
+                    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+                    let mut sink = [0u8; 1024];
+                    for _ in 0..8 {
+                        match std::io::Read::read(&mut stream, &mut sink) {
+                            Ok(0) | Err(_) => break,
+                            Ok(_) => {}
+                        }
+                    }
+                    continue;
+                }
+                match spawn_session(
+                    stream,
+                    Arc::clone(&coord),
+                    Arc::clone(&reaper),
+                    session_cfg.clone(),
+                ) {
+                    Ok(handle) => guard.push(handle),
+                    Err(e) => eprintln!("[serve] failed to start session: {e}"),
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                // Reap finished sessions on the idle path too —
+                // otherwise a dead session's write-half FD (and its
+                // join handle) would be held until the next accept.
+                sessions.lock().unwrap().retain(|s| !s.is_finished());
+                std::thread::sleep(Duration::from_millis(5));
+            }
+            Err(e) => {
+                eprintln!("[serve] accept error: {e}");
+                std::thread::sleep(Duration::from_millis(20));
+            }
+        }
+    }
+    // Listener drops here: the port closes before sessions drain.
+}

@@ -1,0 +1,39 @@
+//! Streamed serving: the socket front door of the coordinator.
+//!
+//! PR 2 left a serving stack that could only be driven by in-process
+//! `submit`/`submit_batch` calls. This module makes it a servable
+//! system: a TCP listener speaking a framed binary protocol, long-lived
+//! client sessions with real flow control, and admission informed by
+//! the execution plan's per-sample MAC estimates — the part that is
+//! UnIT-specific, because input-dependent pruning makes per-request
+//! cost vary with activation sparsity, so fair scheduling has to
+//! reason about *work*, not request *count*.
+//!
+//! Layers, bottom-up:
+//!
+//! * [`wire`] — the pure frame codec (length-prefixed, CRC-checked,
+//!   f32/i8 payloads). No I/O: property-testable in memory.
+//! * [`session`] — one protocol state machine per connection: bounded
+//!   in-flight window (credit-based backpressure), per-request
+//!   deadlines enforced by one shared [`session::Reaper`] thread,
+//!   cancellation that tombstones queued work and suppresses in-flight
+//!   replies, ordered streaming of batch sub-replies, graceful drain.
+//! * [`listener`] — the accept loop: session-thread-per-connection,
+//!   connection cap, close-listener → drain-sessions → close-pool
+//!   shutdown.
+//! * [`client`] — the blocking reference client used by the
+//!   `stream_clients` load generator and the loopback e2e tests.
+//!
+//! Everything is `std` (TcpListener/TcpStream + threads), matching the
+//! rest of the crate: no async runtime in the vendored set, and none
+//! needed at simulator throughputs.
+
+pub mod client;
+pub mod listener;
+pub mod session;
+pub mod wire;
+
+pub use client::{Client, WireResponse};
+pub use listener::{ServeOpts, Server};
+pub use session::{Reaper, SessionCfg, SessionExit, SessionHandle};
+pub use wire::{Frame, FrameReader, Payload, Status, WireError, WHOLE_REQUEST};

@@ -1,0 +1,752 @@
+//! Client sessions: the long-lived protocol state machine between one
+//! TCP connection and the coordinator.
+//!
+//! Each session owns:
+//!
+//! * an **in-flight window** — credit-based backpressure: at most
+//!   `max_inflight` admitted-and-unfinished requests per session; a
+//!   request arriving past the limit is answered immediately with a
+//!   `Rejected` status frame and never touches a shard;
+//! * **deadlines** — a per-request expiry registered with the shared
+//!   [`Reaper`] (one monotonic timer thread for the whole server, not
+//!   one per request). Expiry CASes the request's [`RequestCtl`] out of
+//!   `Active`: queued samples become tombstones the workers drop at
+//!   dequeue, in-flight samples get their replies suppressed, and the
+//!   client receives a single `Expired` status frame;
+//! * **cancellation** — a `Cancel` frame does the same CAS; no frame is
+//!   sent back (the contract is silence: every sub-reply after the
+//!   cancel is suppressed);
+//! * **ordered streaming** — sub-replies of a batch are released in
+//!   slot order (the session's stream sink parks out-of-order
+//!   completions), so a client reading the stream sees slots `0..k`
+//!   as a contiguous prefix;
+//! * **graceful drain** — on client `Goodbye`, listener shutdown, or
+//!   disconnect: stop admitting, let in-flight work finish (bounded by
+//!   `drain_timeout`), answer `Goodbye`, close.
+//!
+//! The outcome race (completion vs deadline vs cancel) is decided
+//! entirely by the `RequestCtl` CAS — whichever transition wins
+//! determines both the wire answer and the bookkeeping, so no outcome
+//! can be double-reported.
+
+use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex, Weak};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
+use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
+
+/// Per-session configuration.
+#[derive(Debug, Clone)]
+pub struct SessionCfg {
+    /// Credit window: max admitted-and-unfinished requests. Frames past
+    /// the limit are rejected (`Status::Rejected`), not parked.
+    pub max_inflight: usize,
+    /// Deadline applied when a request carries none (`None` = requests
+    /// without an explicit deadline never expire).
+    pub default_deadline: Option<Duration>,
+    /// Upper bound on the goodbye/shutdown drain: in-flight work still
+    /// unfinished after this long is cancelled so the session thread
+    /// always exits.
+    pub drain_timeout: Duration,
+    /// SO_SNDTIMEO on the session socket. A client that stops reading
+    /// fills its TCP buffer; without this, a blocking reply write
+    /// would pin whichever thread holds the writer mutex (a worker, or
+    /// worse the shared reaper) forever. With it, the first stalled
+    /// write errors, the session is marked dead, and every later write
+    /// short-circuits — one slow client costs at most one timeout.
+    pub write_timeout: Duration,
+}
+
+impl Default for SessionCfg {
+    fn default() -> SessionCfg {
+        SessionCfg {
+            max_inflight: 64,
+            default_deadline: None,
+            drain_timeout: Duration::from_secs(10),
+            write_timeout: Duration::from_secs(5),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Timeout reaper
+
+/// One registered deadline: fires `fire` at (or shortly after) `when`
+/// unless the whole reaper shuts down first. The callback owns its own
+/// idempotence (it CASes the request ctl and no-ops when it loses).
+/// `alive` is the compaction key: once the request's ctl is gone or
+/// terminal, the entry is dead weight and a sweep may drop it early.
+struct Deadline {
+    when: Instant,
+    seq: u64,
+    alive: Weak<RequestCtl>,
+    fire: Box<dyn FnOnce() + Send>,
+}
+
+impl Deadline {
+    /// Could firing still have an effect? (Only an `Active` ctl can
+    /// lose the expire CAS to us.)
+    fn still_matters(&self) -> bool {
+        self.alive.upgrade().is_some_and(|c| c.state() == CtlState::Active)
+    }
+}
+
+impl PartialEq for Deadline {
+    fn eq(&self, other: &Self) -> bool {
+        self.when == other.when && self.seq == other.seq
+    }
+}
+impl Eq for Deadline {}
+impl PartialOrd for Deadline {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for Deadline {
+    /// Reversed so `BinaryHeap` (a max-heap) pops the *earliest*
+    /// deadline first.
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other.when.cmp(&self.when).then(other.seq.cmp(&self.seq))
+    }
+}
+
+/// Heap size that triggers the first compaction sweep.
+const REAPER_COMPACT_MIN: usize = 1024;
+
+#[derive(Default)]
+struct ReaperState {
+    heap: BinaryHeap<Deadline>,
+    seq: u64,
+    closed: bool,
+    /// Next heap length at which to sweep dead entries (amortized
+    /// O(1) per register; doubled after each sweep so a mostly-live
+    /// heap is not rescanned on every push).
+    next_compact: usize,
+}
+
+/// Shared monotonic timeout thread: every session registers its
+/// requests' deadlines here, so deadline enforcement costs one parked
+/// thread total — not one timer per request or per session.
+pub struct Reaper {
+    state: Arc<(Mutex<ReaperState>, Condvar)>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl Default for Reaper {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Reaper {
+    pub fn new() -> Reaper {
+        let state: Arc<(Mutex<ReaperState>, Condvar)> = Arc::default();
+        let thread_state = Arc::clone(&state);
+        let handle = std::thread::spawn(move || reaper_loop(thread_state));
+        Reaper { state, handle: Mutex::new(Some(handle)) }
+    }
+
+    /// Register `fire` to run at `when`, keyed to `ctl` for early
+    /// reclamation: requests that complete or are cancelled long before
+    /// their deadline leave dead heap entries, and a long-deadline
+    /// high-rate server would otherwise hold every one until its
+    /// wall-clock expiry. The callback must be cheap, capture the ctl
+    /// weakly, and tolerate racing the request's other outcomes (CAS
+    /// first).
+    pub fn register(&self, when: Instant, ctl: &Arc<RequestCtl>, fire: Box<dyn FnOnce() + Send>) {
+        let (lock, cv) = &*self.state;
+        let mut st = lock.lock().unwrap();
+        if st.closed {
+            return; // shutting down: pending work is being cancelled anyway
+        }
+        let seq = st.seq;
+        st.seq += 1;
+        st.heap.push(Deadline { when, seq, alive: Arc::downgrade(ctl), fire });
+        // Amortized sweep: drop entries whose requests already reached
+        // a terminal state (their callbacks are guaranteed no-ops).
+        if st.heap.len() >= st.next_compact.max(REAPER_COMPACT_MIN) {
+            st.heap.retain(Deadline::still_matters);
+            st.next_compact = (st.heap.len() * 2).max(REAPER_COMPACT_MIN);
+        }
+        cv.notify_one();
+    }
+
+    /// Deadlines currently pending (tests/observability).
+    pub fn pending(&self) -> usize {
+        self.state.0.lock().unwrap().heap.len()
+    }
+
+    /// Stop the timer thread. Unfired deadlines are dropped — callers
+    /// shut the reaper down only after their sessions have drained.
+    pub fn shutdown(&self) {
+        {
+            let (lock, cv) = &*self.state;
+            lock.lock().unwrap().closed = true;
+            cv.notify_all();
+        }
+        if let Some(h) = self.handle.lock().unwrap().take() {
+            h.join().expect("reaper thread panicked");
+        }
+    }
+}
+
+/// Dropping without [`Reaper::shutdown`] must not leak a permanently
+/// parked timer thread (shutdown is idempotent, so the explicit path
+/// stays the graceful one).
+impl Drop for Reaper {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn reaper_loop(state: Arc<(Mutex<ReaperState>, Condvar)>) {
+    let (lock, cv) = &*state;
+    let mut st = lock.lock().unwrap();
+    loop {
+        if st.closed {
+            return;
+        }
+        let now = Instant::now();
+        // Fire everything due, outside the lock (callbacks take session
+        // locks and write sockets).
+        if st.heap.peek().is_some_and(|d| d.when <= now) {
+            let due = st.heap.pop().unwrap();
+            drop(st);
+            (due.fire)();
+            st = lock.lock().unwrap();
+            continue;
+        }
+        let wait = st.heap.peek().map(|d| d.when.saturating_duration_since(now));
+        st = match wait {
+            Some(w) => cv.wait_timeout(st, w).unwrap().0,
+            None => cv.wait(st).unwrap(),
+        };
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session
+
+/// Why a session stopped reading (logs/tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionExit {
+    /// Clean goodbye handshake (client- or server-initiated).
+    Goodbye,
+    /// Peer closed or the socket failed.
+    Disconnect,
+    /// The peer broke framing (bad magic/CRC/length).
+    ProtocolError,
+}
+
+struct Inflight {
+    ctl: Arc<RequestCtl>,
+}
+
+pub(crate) struct SessionShared {
+    /// Write half (reads go through the session thread's own clone).
+    /// A mutex serializes frames from N workers + the reaper + the
+    /// session thread.
+    writer: Mutex<TcpStream>,
+    /// Socket failed or closed: suppress all further writes.
+    dead: AtomicBool,
+    /// No new admissions; drain and close.
+    draining: AtomicBool,
+    inflight: Mutex<HashMap<u64, Inflight>>,
+    /// Status frames queued by the reaper's deadline callbacks. The
+    /// reaper thread is shared by every session, so it must never
+    /// block on one session's socket — it only CASes and enqueues
+    /// here; the session's own thread flushes (and eats any
+    /// write_timeout stall itself).
+    deferred: Mutex<Vec<(u64, Status)>>,
+    cfg: SessionCfg,
+    coord: Arc<Coordinator>,
+    metrics: Arc<Metrics>,
+}
+
+impl SessionShared {
+    /// Write one frame; on failure mark the session dead (workers keep
+    /// computing, their replies just stop going anywhere).
+    fn send(&self, frame: &Frame) -> bool {
+        if self.dead.load(Ordering::Acquire) {
+            return false;
+        }
+        let bytes = wire::encode(frame);
+        let mut w = self.writer.lock().unwrap();
+        match w.write_all(&bytes).and_then(|()| w.flush()) {
+            Ok(()) => true,
+            Err(_) => {
+                self.dead.store(true, Ordering::Release);
+                false
+            }
+        }
+    }
+
+    /// Remove `id` from the window and update the gauge. Only the
+    /// winner of the ctl CAS calls this, so the accounting is exact.
+    fn finish(&self, id: u64) {
+        if self.inflight.lock().unwrap().remove(&id).is_some() {
+            self.metrics.inflight_delta(-1);
+        }
+    }
+
+    fn status_reply(&self, id: u64, status: Status) {
+        self.send(&Frame::Response {
+            id,
+            slot: WHOLE_REQUEST,
+            status,
+            predicted: 0,
+            queue_us: 0,
+            service_us: 0,
+            mac_skipped: 0.0,
+            logits: Vec::new(),
+        });
+    }
+}
+
+/// In-order streaming sink for one request: workers deposit sample
+/// responses in completion order; the sink releases them to the wire
+/// in slot order (parking gaps), suppresses everything once the
+/// request's ctl leaves `Active`, and completes the request when the
+/// last slot ships.
+struct SessionSink {
+    shared: Arc<SessionShared>,
+    id: u64,
+    ctl: Arc<RequestCtl>,
+    n_samples: usize,
+    order: Mutex<ReorderState>,
+}
+
+#[derive(Default)]
+struct ReorderState {
+    next_slot: usize,
+    parked: BTreeMap<usize, InferResponse>,
+}
+
+impl StreamSink for SessionSink {
+    fn put(&self, slot: usize, resp: InferResponse) {
+        let mut ord = self.order.lock().unwrap();
+        ord.parked.insert(slot, resp);
+        // Ship the contiguous prefix. The ctl check sits inside the
+        // loop: a cancel that lands mid-batch stops the stream exactly
+        // where it caught it.
+        loop {
+            let next = ord.next_slot;
+            let Some(resp) = ord.parked.remove(&next) else { break };
+            if self.ctl.is_dead() {
+                ord.parked.clear();
+                return;
+            }
+            let slot = next as u32;
+            self.shared.send(&Frame::Response {
+                id: self.id,
+                slot,
+                status: Status::Ok,
+                predicted: resp.predicted.min(u16::MAX as usize) as u16,
+                queue_us: resp.queue_us.min(u32::MAX as u64) as u32,
+                service_us: resp.service_us.min(u32::MAX as u64) as u32,
+                mac_skipped: resp.mac_skipped as f32,
+                logits: resp.logits,
+            });
+            ord.next_slot += 1;
+        }
+        if ord.next_slot == self.n_samples {
+            drop(ord);
+            // Beat the reaper to the outcome: only the CAS winner does
+            // the window bookkeeping.
+            if self.ctl.complete() {
+                self.shared.finish(self.id);
+            }
+        }
+    }
+}
+
+/// A running session: the reading thread plus its shared state.
+pub struct SessionHandle {
+    shared: Arc<SessionShared>,
+    join: JoinHandle<SessionExit>,
+}
+
+impl SessionHandle {
+    /// Ask the session to drain: no new admissions, finish in-flight,
+    /// goodbye, exit. Idempotent; used by listener shutdown.
+    pub fn begin_drain(&self) {
+        self.shared.draining.store(true, Ordering::Release);
+    }
+
+    pub fn is_finished(&self) -> bool {
+        self.join.is_finished()
+    }
+
+    /// Join the session thread (after [`SessionHandle::begin_drain`]).
+    pub fn join(self) -> SessionExit {
+        self.join.join().expect("session thread panicked")
+    }
+}
+
+/// Spawn the session thread for one accepted connection.
+pub(crate) fn spawn_session(
+    stream: TcpStream,
+    coord: Arc<Coordinator>,
+    reaper: Arc<Reaper>,
+    cfg: SessionCfg,
+) -> std::io::Result<SessionHandle> {
+    let read_half = stream.try_clone()?;
+    // Period between liveness checks of the draining/dead flags while
+    // blocked on a quiet socket.
+    read_half.set_read_timeout(Some(Duration::from_millis(50)))?;
+    stream.set_write_timeout(Some(cfg.write_timeout))?;
+    let _ = stream.set_nodelay(true);
+    let metrics = Arc::clone(&coord.metrics);
+    let shared = Arc::new(SessionShared {
+        writer: Mutex::new(stream),
+        dead: AtomicBool::new(false),
+        draining: AtomicBool::new(false),
+        inflight: Mutex::new(HashMap::new()),
+        deferred: Mutex::new(Vec::new()),
+        cfg,
+        coord,
+        metrics,
+    });
+    let thread_shared = Arc::clone(&shared);
+    let join = std::thread::spawn(move || session_loop(thread_shared, read_half, reaper));
+    Ok(SessionHandle { shared, join })
+}
+
+fn session_loop(
+    shared: Arc<SessionShared>,
+    mut read_half: TcpStream,
+    reaper: Arc<Reaper>,
+) -> SessionExit {
+    shared.metrics.session_opened();
+    let mut reader = FrameReader::new();
+    let mut buf = vec![0u8; 64 * 1024];
+    let mut drain_started: Option<Instant> = None;
+    let exit = loop {
+        // Flush status frames the reaper deferred to us (the read
+        // timeout bounds the added notification latency to ~50 ms —
+        // the deadline itself has already passed).
+        flush_deferred(&shared);
+        // Drain bookkeeping: once draining, leave as soon as the window
+        // empties (or the timeout forces the issue).
+        if shared.draining.load(Ordering::Acquire) {
+            let t0 = *drain_started.get_or_insert_with(Instant::now);
+            let empty = shared.inflight.lock().unwrap().is_empty();
+            if empty || t0.elapsed() > shared.cfg.drain_timeout {
+                if !empty {
+                    cancel_all(&shared);
+                }
+                // An expiry may have ended the drain after the flush at
+                // the top of this iteration; the reaper queues the
+                // Expired frame before emptying the window, so flushing
+                // again here provably ships it before the goodbye.
+                flush_deferred(&shared);
+                shared.send(&Frame::Goodbye);
+                break SessionExit::Goodbye;
+            }
+        }
+        if shared.dead.load(Ordering::Acquire) {
+            break SessionExit::Disconnect;
+        }
+        match read_half.read(&mut buf) {
+            Ok(0) => break SessionExit::Disconnect,
+            Ok(n) => {
+                reader.feed(&buf[..n]);
+                loop {
+                    match reader.next() {
+                        Ok(Some(frame)) => {
+                            if !handle_frame(&shared, &reaper, frame) {
+                                // Goodbye received: switch to draining;
+                                // keep reading so cancels still land.
+                                shared.draining.store(true, Ordering::Release);
+                            }
+                        }
+                        Ok(None) => break,
+                        Err(e) => {
+                            // Unframed stream: nothing after this point
+                            // can be trusted. Hang up; finish_session
+                            // cancels whatever was in flight.
+                            eprintln!("[serve] protocol error, closing session: {e}");
+                            shared.send(&Frame::Goodbye);
+                            return finish_session(&shared, SessionExit::ProtocolError);
+                        }
+                    }
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue;
+            }
+            Err(_) => break SessionExit::Disconnect,
+        }
+    };
+    finish_session(&shared, exit)
+}
+
+fn finish_session(shared: &Arc<SessionShared>, exit: SessionExit) -> SessionExit {
+    // Whatever is still in flight dies with the connection: suppress
+    // replies, tombstone queued samples.
+    cancel_all(shared);
+    shared.dead.store(true, Ordering::Release);
+    shared.metrics.session_closed();
+    exit
+}
+
+/// Write out status frames the reaper deferred to this session.
+fn flush_deferred(shared: &Arc<SessionShared>) {
+    let deferred: Vec<(u64, Status)> =
+        std::mem::take(&mut *shared.deferred.lock().unwrap());
+    for (id, status) in deferred {
+        shared.status_reply(id, status);
+    }
+}
+
+/// Cancel every in-flight request (disconnect / drain timeout path).
+fn cancel_all(shared: &Arc<SessionShared>) {
+    let drained: Vec<(u64, Inflight)> =
+        shared.inflight.lock().unwrap().drain().collect();
+    for (_, inf) in &drained {
+        inf.ctl.cancel();
+        shared.metrics.inflight_delta(-1);
+    }
+}
+
+/// Process one frame; returns `false` when the frame was a client
+/// `Goodbye` (the caller switches the session into draining).
+fn handle_frame(shared: &Arc<SessionShared>, reaper: &Arc<Reaper>, frame: Frame) -> bool {
+    match frame {
+        Frame::Request { id, deadline_ms, sample_len, data } => {
+            handle_request(shared, reaper, id, deadline_ms, sample_len, data);
+            true
+        }
+        Frame::Cancel { id } => {
+            // Silence is the contract: sub-replies just stop. Only the
+            // CAS winner books the cancel (a cancel racing completion
+            // or expiry is a no-op).
+            let ctl = shared.inflight.lock().unwrap().get(&id).map(|inf| Arc::clone(&inf.ctl));
+            if let Some(ctl) = ctl {
+                if ctl.cancel() {
+                    shared.finish(id);
+                    shared.metrics.record_cancelled();
+                }
+            }
+            true
+        }
+        Frame::Ping { id } => {
+            shared.send(&Frame::Pong { id });
+            true
+        }
+        Frame::Goodbye => false,
+        // Server-only frames arriving from a client are ignored (they
+        // framed correctly; dropping them is safer than hanging up).
+        Frame::Response { .. } | Frame::Pong { .. } => true,
+    }
+}
+
+fn handle_request(
+    shared: &Arc<SessionShared>,
+    reaper: &Arc<Reaper>,
+    id: u64,
+    deadline_ms: u32,
+    sample_len: u32,
+    data: wire::Payload,
+) {
+    if shared.draining.load(Ordering::Acquire) {
+        // Graceful-shutdown refusal is backpressure ("retry elsewhere"),
+        // not a server failure.
+        shared.metrics.record_rejected();
+        shared.status_reply(id, Status::Rejected);
+        return;
+    }
+    // Structural validation.
+    let sample_len = sample_len as usize;
+    if sample_len == 0 || data.is_empty() || data.len() % sample_len != 0 {
+        shared.status_reply(id, Status::Error);
+        return;
+    }
+    if shared.coord.input_len() != sample_len {
+        shared.status_reply(id, Status::Error);
+        return;
+    }
+    let n_samples = data.len() / sample_len;
+
+    // Admission: credit window + unique id, decided under the window
+    // lock so concurrent requests cannot both squeeze in.
+    let ctl = RequestCtl::shared();
+    {
+        let mut window = shared.inflight.lock().unwrap();
+        if window.len() >= shared.cfg.max_inflight {
+            drop(window);
+            shared.metrics.record_rejected();
+            shared.status_reply(id, Status::Rejected);
+            return;
+        }
+        if window.contains_key(&id) {
+            drop(window);
+            shared.status_reply(id, Status::Error);
+            return;
+        }
+        window.insert(id, Inflight { ctl: Arc::clone(&ctl) });
+    }
+    shared.metrics.inflight_delta(1);
+
+    // Deadline: explicit beats the session default; 0 = none.
+    let deadline = if deadline_ms > 0 {
+        Some(Duration::from_millis(deadline_ms as u64))
+    } else {
+        shared.cfg.default_deadline
+    };
+    if let Some(d) = deadline {
+        let weak: Weak<SessionShared> = Arc::downgrade(shared);
+        // Weak captures only: a completed request must be reclaimable
+        // (heap compaction) before its deadline arrives.
+        let weak_ctl = Arc::downgrade(&ctl);
+        reaper.register(
+            Instant::now() + d,
+            &ctl,
+            Box::new(move || {
+                let Some(ctl) = weak_ctl.upgrade() else { return };
+                // Loser of the race against completion/cancel: usually
+                // a no-op — but if the request died somewhere that
+                // could not reach the session's window bookkeeping
+                // (e.g. an executor-side defensive drop), reclaim the
+                // credit here so it does not leak until disconnect.
+                if !ctl.expire() {
+                    if ctl.is_dead() {
+                        if let Some(shared) = weak.upgrade() {
+                            shared.finish(id);
+                        }
+                    }
+                    return;
+                }
+                if let Some(shared) = weak.upgrade() {
+                    shared.metrics.record_expired();
+                    // Never write the socket from the shared reaper
+                    // thread: defer the frame to this session's thread.
+                    // Queue BEFORE finish(id): the drain path exits once
+                    // the window is empty, and this order guarantees the
+                    // frame is already queued by then, so its final
+                    // flush cannot miss it.
+                    shared.deferred.lock().unwrap().push((id, Status::Expired));
+                    shared.finish(id);
+                }
+            }),
+        );
+    }
+
+    let flat = data.into_f32();
+    let xs: Vec<Vec<f32>> = flat.chunks_exact(sample_len).map(|c| c.to_vec()).collect();
+    let sink = Arc::new(SessionSink {
+        shared: Arc::clone(shared),
+        id,
+        ctl: Arc::clone(&ctl),
+        n_samples,
+        order: Mutex::new(ReorderState::default()),
+    });
+    if shared.coord.submit_streamed(id, xs, ctl, sink).is_err() {
+        // Pool closed under us (server shutting down): the ctl is
+        // already tombstoned by submit_streamed.
+        shared.finish(id);
+        shared.status_reply(id, Status::Error);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+
+    #[test]
+    fn reaper_fires_in_deadline_order() {
+        let reaper = Reaper::new();
+        let log: Arc<Mutex<Vec<u32>>> = Arc::default();
+        let ctl = RequestCtl::shared();
+        let now = Instant::now();
+        for (tag, ms) in [(2u32, 60u64), (1, 30), (3, 90)] {
+            let log = Arc::clone(&log);
+            reaper.register(
+                now + Duration::from_millis(ms),
+                &ctl,
+                Box::new(move || {
+                    log.lock().unwrap().push(tag);
+                }),
+            );
+        }
+        std::thread::sleep(Duration::from_millis(250));
+        assert_eq!(*log.lock().unwrap(), vec![1, 2, 3]);
+        assert_eq!(reaper.pending(), 0);
+        reaper.shutdown();
+    }
+
+    #[test]
+    fn reaper_shutdown_drops_unfired() {
+        let reaper = Reaper::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let ctl = RequestCtl::shared();
+        let f = Arc::clone(&fired);
+        reaper.register(
+            Instant::now() + Duration::from_secs(3600),
+            &ctl,
+            Box::new(move || {
+                f.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        reaper.shutdown();
+        assert_eq!(fired.load(Ordering::SeqCst), 0);
+        // register after shutdown is a no-op, not a panic
+        reaper.register(Instant::now(), &ctl, Box::new(|| {}));
+    }
+
+    #[test]
+    fn reaper_handles_already_due_deadlines() {
+        let reaper = Reaper::new();
+        let fired = Arc::new(AtomicUsize::new(0));
+        let ctl = RequestCtl::shared();
+        let f = Arc::clone(&fired);
+        reaper.register(
+            Instant::now() - Duration::from_millis(5),
+            &ctl,
+            Box::new(move || {
+                f.fetch_add(1, Ordering::SeqCst);
+            }),
+        );
+        std::thread::sleep(Duration::from_millis(100));
+        assert_eq!(fired.load(Ordering::SeqCst), 1);
+        reaper.shutdown();
+    }
+
+    #[test]
+    fn reaper_compacts_dead_entries_before_their_deadline() {
+        let reaper = Reaper::new();
+        let far = Instant::now() + Duration::from_secs(3600);
+        // Entries whose requests are already gone (ctl dropped) must
+        // not pile up until their wall-clock expiry.
+        for _ in 0..(3 * REAPER_COMPACT_MIN) {
+            let ctl = RequestCtl::shared();
+            reaper.register(far, &ctl, Box::new(|| {}));
+            drop(ctl);
+        }
+        assert!(
+            reaper.pending() <= REAPER_COMPACT_MIN + 1,
+            "dead deadlines not compacted: {} pending",
+            reaper.pending()
+        );
+        // A live Active entry survives sweeps.
+        let live = RequestCtl::shared();
+        reaper.register(far, &live, Box::new(|| {}));
+        for _ in 0..(3 * REAPER_COMPACT_MIN) {
+            let ctl = RequestCtl::shared();
+            reaper.register(far, &ctl, Box::new(|| {}));
+            drop(ctl);
+        }
+        assert!(reaper.pending() >= 1);
+        reaper.shutdown();
+        drop(live);
+    }
+}

@@ -1,0 +1,683 @@
+//! Framed wire protocol for streamed serving: a length-prefixed binary
+//! codec with CRC-checked payloads.
+//!
+//! The codec layer is **pure** — it maps [`Frame`]s to bytes and back
+//! with no sockets, threads, or clocks involved, so the whole protocol
+//! is property-testable in memory (`tests/serve_wire.rs` round-trips
+//! random frames and fuzzes truncation/corruption). [`FrameReader`] is
+//! the incremental decoder sessions and clients feed raw socket reads
+//! into.
+//!
+//! ## Frame layout
+//!
+//! Every frame on the stream is `[u32 len][body…]` where `len` counts
+//! the bytes after the prefix. The body is:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic   "UnIT"
+//! 4       2     version (little-endian, currently 1)
+//! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong 6=Goodbye)
+//! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
+//! 8       8     request id (u64 LE; client-chosen, echoed on replies)
+//! 16      …     type-specific payload (see below)
+//! end-4   4     crc32 (IEEE) over body[0 .. end-4]
+//! ```
+//!
+//! Payloads:
+//!
+//! * **Request** — `deadline_ms:u32` (0 = none), `n_samples:u32`,
+//!   `sample_len:u32`, then `n_samples * sample_len` values (f32 LE or
+//!   i8 per `dtype`; i8 is normalized fixed-point, dequantized as
+//!   `v / 127.0`). `n_samples > 1` is a batch: the server splits it
+//!   across shards and streams one Response per sample, in slot order.
+//! * **Response** — `status:u8`, `slot:u32` ([`WHOLE_REQUEST`] for
+//!   request-level statuses like Rejected/Expired), `predicted:u16`,
+//!   `queue_us:u32`, `service_us:u32`, `mac_skipped:f32`,
+//!   `n_logits:u32`, then the f32 logits.
+//! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
+//!   operand; Goodbye ignores it).
+//!
+//! Decoding is strict: wrong magic/version/type/status, a length that
+//! disagrees with the payload's own arithmetic, or a CRC mismatch all
+//! return a [`WireError`] — never a panic — so a malicious or corrupt
+//! peer cannot take a session thread down.
+
+/// Frame magic: the protocol's first four bytes.
+pub const MAGIC: [u8; 4] = *b"UnIT";
+/// Protocol version carried (and required) by every frame.
+pub const VERSION: u16 = 1;
+/// Fixed header bytes before the type-specific payload.
+pub const HEADER_LEN: usize = 16;
+/// Hard cap on one frame's post-prefix length: a corrupt length prefix
+/// must not make the reader buffer gigabytes.
+pub const MAX_FRAME_LEN: usize = 1 << 24;
+/// `slot` value meaning "this status applies to the whole request"
+/// (backpressure rejection, deadline expiry, protocol errors).
+pub const WHOLE_REQUEST: u32 = u32::MAX;
+
+/// Sample payload of a request: little-endian f32, or normalized i8
+/// (dequantized as `v / 127.0` server-side — the compact transport for
+/// sensor-style clients).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Payload {
+    F32(Vec<f32>),
+    I8(Vec<i8>),
+}
+
+impl Payload {
+    /// Number of scalar values carried.
+    pub fn len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len(),
+            Payload::I8(v) => v.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Dequantize to the f32 samples the engine consumes (consuming:
+    /// the f32 case hands its vector over without a copy — the request
+    /// hot path owns its payload).
+    pub fn into_f32(self) -> Vec<f32> {
+        match self {
+            Payload::F32(v) => v,
+            Payload::I8(v) => v.iter().map(|&b| b as f32 / 127.0).collect(),
+        }
+    }
+
+    /// Serialized size of the sample data in bytes.
+    pub fn byte_len(&self) -> usize {
+        match self {
+            Payload::F32(v) => v.len() * 4,
+            Payload::I8(v) => v.len(),
+        }
+    }
+
+    fn dtype(&self) -> u8 {
+        match self {
+            Payload::F32(_) => 0,
+            Payload::I8(_) => 1,
+        }
+    }
+}
+
+/// Response status. `Ok` carries a real result; the rest are
+/// request-level outcomes (sent with `slot == WHOLE_REQUEST` except for
+/// per-slot suppression, which sends nothing at all).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Status {
+    /// Successful inference result.
+    Ok = 0,
+    /// Backpressure: the session's in-flight window was full.
+    Rejected = 1,
+    /// The request's deadline passed before a shard picked it up.
+    Expired = 2,
+    /// The request was cancelled by the client.
+    Cancelled = 3,
+    /// Server-side error (malformed sample length, closed pool, …).
+    Error = 4,
+}
+
+impl Status {
+    fn from_u8(v: u8) -> Result<Status, WireError> {
+        Ok(match v {
+            0 => Status::Ok,
+            1 => Status::Rejected,
+            2 => Status::Expired,
+            3 => Status::Cancelled,
+            4 => Status::Error,
+            other => return Err(WireError::BadStatus(other)),
+        })
+    }
+}
+
+/// One protocol frame (see module docs for the byte layout).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// Client → server: run inference on `data` (a batch when
+    /// `data.len() > sample_len`).
+    Request {
+        id: u64,
+        /// Milliseconds from receipt until the request expires (0 = no
+        /// deadline beyond the session default).
+        deadline_ms: u32,
+        /// Values per sample; `data.len()` must be a multiple of it.
+        sample_len: u32,
+        data: Payload,
+    },
+    /// Server → client: one sample's result, or a request-level status.
+    Response {
+        id: u64,
+        /// Sample index inside the request, or [`WHOLE_REQUEST`].
+        slot: u32,
+        status: Status,
+        predicted: u16,
+        queue_us: u32,
+        service_us: u32,
+        mac_skipped: f32,
+        logits: Vec<f32>,
+    },
+    /// Client → server: drop not-yet-started work for `id`, suppress
+    /// all of its remaining replies.
+    Cancel { id: u64 },
+    /// Liveness probe; the server echoes a `Pong` with the same id.
+    Ping { id: u64 },
+    Pong { id: u64 },
+    /// Either side: graceful drain-then-close. The server answers a
+    /// client Goodbye with its own once in-flight work has drained.
+    Goodbye,
+}
+
+impl Frame {
+    fn type_byte(&self) -> u8 {
+        match self {
+            Frame::Request { .. } => 1,
+            Frame::Response { .. } => 2,
+            Frame::Cancel { .. } => 3,
+            Frame::Ping { .. } => 4,
+            Frame::Pong { .. } => 5,
+            Frame::Goodbye => 6,
+        }
+    }
+
+    fn id(&self) -> u64 {
+        match self {
+            Frame::Request { id, .. }
+            | Frame::Response { id, .. }
+            | Frame::Cancel { id }
+            | Frame::Ping { id }
+            | Frame::Pong { id } => *id,
+            Frame::Goodbye => 0,
+        }
+    }
+}
+
+/// Decode failure. Every variant is a protocol error: the connection
+/// that produced it cannot be trusted to stay framed and should close.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum WireError {
+    BadMagic([u8; 4]),
+    BadVersion(u16),
+    BadType(u8),
+    BadStatus(u8),
+    BadDtype(u8),
+    /// CRC mismatch: `(stored, computed)`.
+    Crc(u32, u32),
+    /// Frame length prefix exceeds [`MAX_FRAME_LEN`] or is shorter than
+    /// a header + CRC can be.
+    BadLength(usize),
+    /// The payload's internal arithmetic (sample counts, logit counts)
+    /// disagrees with the frame length.
+    Malformed(&'static str),
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::BadMagic(m) => write!(f, "bad magic {m:?}"),
+            WireError::BadVersion(v) => write!(f, "unsupported version {v}"),
+            WireError::BadType(t) => write!(f, "unknown frame type {t}"),
+            WireError::BadStatus(s) => write!(f, "unknown status {s}"),
+            WireError::BadDtype(d) => write!(f, "unknown dtype {d}"),
+            WireError::Crc(a, b) => write!(f, "crc mismatch: stored {a:#010x}, computed {b:#010x}"),
+            WireError::BadLength(n) => write!(f, "bad frame length {n}"),
+            WireError::Malformed(what) => write!(f, "malformed payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE 802.3, the zlib polynomial) — table built at compile time.
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc32_table();
+
+/// IEEE CRC32 of `data` (matches zlib's `crc32(0, …)`).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+// ---------------------------------------------------------------------------
+// Encoding
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+fn put_f32(out: &mut Vec<u8>, v: f32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+/// Encode `frame` including its length prefix — the exact bytes to put
+/// on the stream.
+pub fn encode(frame: &Frame) -> Vec<u8> {
+    let mut body = Vec::with_capacity(64);
+    body.extend_from_slice(&MAGIC);
+    put_u16(&mut body, VERSION);
+    body.push(frame.type_byte());
+    let dtype = match frame {
+        Frame::Request { data, .. } => data.dtype(),
+        _ => 0,
+    };
+    body.push(dtype);
+    put_u64(&mut body, frame.id());
+    match frame {
+        Frame::Request { deadline_ms, sample_len, data, .. } => {
+            put_u32(&mut body, *deadline_ms);
+            let n_samples =
+                if *sample_len == 0 { 0 } else { (data.len() as u32) / *sample_len };
+            put_u32(&mut body, n_samples);
+            put_u32(&mut body, *sample_len);
+            // Serialize exactly n_samples * sample_len values: a ragged
+            // payload (caller bug) is truncated to whole samples so the
+            // frame stays self-consistent instead of becoming a
+            // session-killing protocol error at the peer.
+            let n_vals = (n_samples * *sample_len) as usize;
+            match data {
+                Payload::F32(v) => {
+                    for &x in &v[..n_vals] {
+                        put_f32(&mut body, x);
+                    }
+                }
+                Payload::I8(v) => {
+                    body.extend(v[..n_vals].iter().map(|&b| b as u8));
+                }
+            }
+        }
+        Frame::Response {
+            slot,
+            status,
+            predicted,
+            queue_us,
+            service_us,
+            mac_skipped,
+            logits,
+            ..
+        } => {
+            body.push(*status as u8);
+            put_u32(&mut body, *slot);
+            put_u16(&mut body, *predicted);
+            put_u32(&mut body, *queue_us);
+            put_u32(&mut body, *service_us);
+            put_f32(&mut body, *mac_skipped);
+            put_u32(&mut body, logits.len() as u32);
+            for &l in logits {
+                put_f32(&mut body, l);
+            }
+        }
+        Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
+    }
+    let crc = crc32(&body);
+    put_u32(&mut body, crc);
+    let mut out = Vec::with_capacity(4 + body.len());
+    put_u32(&mut out, body.len() as u32);
+    out.extend_from_slice(&body);
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Decoding
+
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize, what: &'static str) -> Result<&'a [u8], WireError> {
+        // checked_add: crafted sample/logit counts can make `n` large
+        // enough that `pos + n` would wrap and sneak past the bounds
+        // check — overflow is just another malformed frame.
+        let end = self.pos.checked_add(n).ok_or(WireError::Malformed(what))?;
+        if end > self.buf.len() {
+            return Err(WireError::Malformed(what));
+        }
+        let s = &self.buf[self.pos..end];
+        self.pos = end;
+        Ok(s)
+    }
+    fn u8(&mut self, what: &'static str) -> Result<u8, WireError> {
+        Ok(self.take(1, what)?[0])
+    }
+    fn u16(&mut self, what: &'static str) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2, what)?.try_into().unwrap()))
+    }
+    fn u32(&mut self, what: &'static str) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn u64(&mut self, what: &'static str) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
+    }
+    fn f32(&mut self, what: &'static str) -> Result<f32, WireError> {
+        Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+}
+
+/// Decode one frame from the front of `buf`.
+///
+/// Returns `Ok(None)` when `buf` holds an incomplete frame (read more
+/// bytes), `Ok(Some((frame, consumed)))` on success, and `Err` on any
+/// protocol violation. Never panics on arbitrary input.
+pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
+    if buf.len() < 4 {
+        return Ok(None);
+    }
+    let len = u32::from_le_bytes(buf[..4].try_into().unwrap()) as usize;
+    if len > MAX_FRAME_LEN || len < HEADER_LEN + 4 {
+        return Err(WireError::BadLength(len));
+    }
+    if buf.len() < 4 + len {
+        return Ok(None);
+    }
+    let body = &buf[4..4 + len];
+    let (payload, crc_bytes) = body.split_at(len - 4);
+    let stored = u32::from_le_bytes(crc_bytes.try_into().unwrap());
+    let computed = crc32(payload);
+    if stored != computed {
+        return Err(WireError::Crc(stored, computed));
+    }
+    let mut c = Cursor { buf: payload, pos: 0 };
+    let magic: [u8; 4] = c.take(4, "magic")?.try_into().unwrap();
+    if magic != MAGIC {
+        return Err(WireError::BadMagic(magic));
+    }
+    let version = c.u16("version")?;
+    if version != VERSION {
+        return Err(WireError::BadVersion(version));
+    }
+    let ftype = c.u8("type")?;
+    let dtype = c.u8("dtype")?;
+    let id = c.u64("id")?;
+    let frame = match ftype {
+        1 => {
+            let deadline_ms = c.u32("deadline")?;
+            let n_samples = c.u32("n_samples")?;
+            let sample_len = c.u32("sample_len")?;
+            let n_vals = (n_samples as usize)
+                .checked_mul(sample_len as usize)
+                .filter(|n| n.checked_mul(4).is_some())
+                .ok_or(WireError::Malformed("sample count overflow"))?;
+            let data = match dtype {
+                0 => {
+                    let raw = c.take(n_vals * 4, "f32 samples")?;
+                    Payload::F32(
+                        raw.chunks_exact(4)
+                            .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                            .collect(),
+                    )
+                }
+                1 => {
+                    let raw = c.take(n_vals, "i8 samples")?;
+                    Payload::I8(raw.iter().map(|&b| b as i8).collect())
+                }
+                other => return Err(WireError::BadDtype(other)),
+            };
+            Frame::Request { id, deadline_ms, sample_len, data }
+        }
+        2 => {
+            let status = Status::from_u8(c.u8("status")?)?;
+            let slot = c.u32("slot")?;
+            let predicted = c.u16("predicted")?;
+            let queue_us = c.u32("queue_us")?;
+            let service_us = c.u32("service_us")?;
+            let mac_skipped = c.f32("mac_skipped")?;
+            let n_logits = c.u32("n_logits")? as usize;
+            let raw = c.take(
+                n_logits.checked_mul(4).ok_or(WireError::Malformed("logit count overflow"))?,
+                "logits",
+            )?;
+            let logits = raw
+                .chunks_exact(4)
+                .map(|ch| f32::from_le_bytes(ch.try_into().unwrap()))
+                .collect();
+            Frame::Response {
+                id,
+                slot,
+                status,
+                predicted,
+                queue_us,
+                service_us,
+                mac_skipped,
+                logits,
+            }
+        }
+        3 => Frame::Cancel { id },
+        4 => Frame::Ping { id },
+        5 => Frame::Pong { id },
+        6 => Frame::Goodbye,
+        other => return Err(WireError::BadType(other)),
+    };
+    if c.pos != payload.len() {
+        return Err(WireError::Malformed("trailing bytes"));
+    }
+    Ok(Some((frame, 4 + len)))
+}
+
+/// Incremental decoder: feed it raw socket reads, pop whole frames.
+#[derive(Debug, Default)]
+pub struct FrameReader {
+    buf: Vec<u8>,
+    /// Bytes of `buf` already consumed (compacted lazily).
+    start: usize,
+}
+
+impl FrameReader {
+    pub fn new() -> FrameReader {
+        FrameReader::default()
+    }
+
+    /// Append newly received bytes.
+    pub fn feed(&mut self, bytes: &[u8]) {
+        // Compact before growing so the buffer stays bounded by the
+        // largest in-flight frame, not the session lifetime.
+        if self.start > 0 {
+            self.buf.drain(..self.start);
+            self.start = 0;
+        }
+        self.buf.extend_from_slice(bytes);
+    }
+
+    /// Pop the next complete frame, `Ok(None)` if more bytes are
+    /// needed, or the first protocol error encountered (after which the
+    /// stream is unframed and the connection should close).
+    pub fn next(&mut self) -> Result<Option<Frame>, WireError> {
+        match decode(&self.buf[self.start..])? {
+            Some((frame, consumed)) => {
+                self.start += consumed;
+                Ok(Some(frame))
+            }
+            None => Ok(None),
+        }
+    }
+
+    /// Bytes currently buffered and not yet decoded.
+    pub fn pending(&self) -> usize {
+        self.buf.len() - self.start
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(f: Frame) {
+        let bytes = encode(&f);
+        let (got, used) = decode(&bytes).unwrap().unwrap();
+        assert_eq!(used, bytes.len());
+        assert_eq!(got, f);
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // zlib reference values.
+        assert_eq!(crc32(b""), 0);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"hello"), 0x3610_A686);
+    }
+
+    #[test]
+    fn all_frame_kinds_roundtrip() {
+        roundtrip(Frame::Request {
+            id: 42,
+            deadline_ms: 250,
+            sample_len: 4,
+            data: Payload::F32(vec![1.0, -2.5, 0.0, 3.25, 9.0, 8.0, 7.0, 6.0]),
+        });
+        roundtrip(Frame::Request {
+            id: 7,
+            deadline_ms: 0,
+            sample_len: 3,
+            data: Payload::I8(vec![-128, 0, 127]),
+        });
+        roundtrip(Frame::Response {
+            id: 42,
+            slot: 1,
+            status: Status::Ok,
+            predicted: 9,
+            queue_us: 120,
+            service_us: 480,
+            mac_skipped: 0.82,
+            logits: vec![0.5, -1.5, 2.0],
+        });
+        roundtrip(Frame::Response {
+            id: 9,
+            slot: WHOLE_REQUEST,
+            status: Status::Rejected,
+            predicted: 0,
+            queue_us: 0,
+            service_us: 0,
+            mac_skipped: 0.0,
+            logits: vec![],
+        });
+        roundtrip(Frame::Cancel { id: 3 });
+        roundtrip(Frame::Ping { id: 1 });
+        roundtrip(Frame::Pong { id: 1 });
+        roundtrip(Frame::Goodbye);
+    }
+
+    #[test]
+    fn incomplete_prefix_is_none_not_error() {
+        let bytes = encode(&Frame::Ping { id: 5 });
+        for cut in 0..bytes.len() {
+            assert_eq!(decode(&bytes[..cut]).unwrap(), None, "cut at {cut}");
+        }
+    }
+
+    #[test]
+    fn corrupt_byte_errors_never_panics() {
+        let bytes = encode(&Frame::Request {
+            id: 11,
+            deadline_ms: 5,
+            sample_len: 2,
+            data: Payload::F32(vec![1.0, 2.0]),
+        });
+        // Flip every byte position past the length prefix in turn: all
+        // must fail CRC or a structural check, none may panic or
+        // silently decode.
+        for i in 4..bytes.len() {
+            let mut b = bytes.clone();
+            b[i] ^= 0xA5;
+            assert!(decode(&b).is_err(), "corruption at byte {i} went unnoticed");
+        }
+    }
+
+    #[test]
+    fn crafted_sample_count_overflow_is_error_not_panic() {
+        // n_samples * sample_len = 2^62 - 1 passes a naive product
+        // check and n_vals * 4 = 2^64 - 4 then wraps `pos + n` in the
+        // cursor; the decoder must reject it, never panic.
+        let mut body = Vec::new();
+        body.extend_from_slice(&MAGIC);
+        body.extend_from_slice(&VERSION.to_le_bytes());
+        body.push(1); // Request
+        body.push(0); // f32
+        body.extend_from_slice(&7u64.to_le_bytes()); // id
+        body.extend_from_slice(&0u32.to_le_bytes()); // deadline
+        body.extend_from_slice(&0x7FFF_FFFFu32.to_le_bytes()); // n_samples
+        body.extend_from_slice(&0x8000_0001u32.to_le_bytes()); // sample_len
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let mut frame = (body.len() as u32).to_le_bytes().to_vec();
+        frame.extend_from_slice(&body);
+        assert!(decode(&frame).is_err());
+    }
+
+    #[test]
+    fn oversized_length_prefix_rejected() {
+        let mut b = vec![0u8; 8];
+        b[..4].copy_from_slice(&((MAX_FRAME_LEN as u32) + 1).to_le_bytes());
+        assert!(matches!(decode(&b), Err(WireError::BadLength(_))));
+        // Undersized, too: smaller than header + crc can ever be.
+        let mut b = vec![0u8; 24];
+        b[..4].copy_from_slice(&8u32.to_le_bytes());
+        assert!(matches!(decode(&b), Err(WireError::BadLength(8))));
+    }
+
+    #[test]
+    fn reader_reassembles_across_arbitrary_chunking() {
+        let frames = vec![
+            Frame::Ping { id: 1 },
+            Frame::Request {
+                id: 2,
+                deadline_ms: 9,
+                sample_len: 2,
+                data: Payload::I8(vec![1, -2, 3, -4]),
+            },
+            Frame::Goodbye,
+        ];
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend(encode(f));
+        }
+        for chunk in [1usize, 3, 7, 64] {
+            let mut r = FrameReader::new();
+            let mut got = Vec::new();
+            for piece in stream.chunks(chunk) {
+                r.feed(piece);
+                while let Some(f) = r.next().unwrap() {
+                    got.push(f);
+                }
+            }
+            assert_eq!(got, frames, "chunk size {chunk}");
+            assert_eq!(r.pending(), 0);
+        }
+    }
+
+    #[test]
+    fn i8_payload_dequantizes() {
+        let p = Payload::I8(vec![127, -127, 0]);
+        let f = p.into_f32();
+        assert!((f[0] - 1.0).abs() < 1e-6);
+        assert!((f[1] + 1.0).abs() < 1e-6);
+        assert_eq!(f[2], 0.0);
+    }
+}

@@ -163,7 +163,12 @@ fn pjrt_backend_serves_batches() {
             t_vec: vec![0.0; 3],
             fat_t: 0.0,
         },
-        ServeConfig { workers: 1, max_batch: 8, max_wait: Duration::from_millis(5) },
+        ServeConfig {
+            workers: 1,
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            ..Default::default()
+        },
     );
     let rxs: Vec<_> = (0..16).map(|i| coord.submit(ds.test.sample(i).to_vec())).collect();
     for rx in rxs {

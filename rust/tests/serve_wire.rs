@@ -1,0 +1,446 @@
+//! The streamed-serving acceptance tests.
+//!
+//! Part 1 — wire codec properties (pure, in-memory): random frames
+//! round-trip bit-exactly; truncation is "need more bytes", never an
+//! error; corruption is an error, never a panic; arbitrary garbage
+//! never panics the decoder.
+//!
+//! Part 2 — loopback e2e over a real `Server`:
+//!
+//! * a client that overruns its in-flight window gets
+//!   backpressure-rejected frames while every admitted request still
+//!   completes, bit-identical to the in-process engine;
+//! * an expired-deadline request returns `Expired` without occupying a
+//!   shard (the worker drops the tombstone; `dropped` metric proves
+//!   it);
+//! * cancelling a split batch mid-stream suppresses every remaining
+//!   sub-reply — delivered slots are a contiguous ordered prefix and
+//!   the wire stays silent for that id afterwards;
+//! * listener shutdown with open sessions drains without panicking
+//!   (close listener → drain sessions → close pool), and a session
+//!   racing the closed pool answers `Error` instead of crashing.
+
+use std::time::Duration;
+
+use unit_pruner::coordinator::{BackendChoice, Coordinator, Placement, ServeConfig};
+use unit_pruner::data::{mnist_like, Sizes};
+use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{
+    wire, Client, Frame, FrameReader, Payload, ServeOpts, Server, SessionCfg, Status,
+    WHOLE_REQUEST,
+};
+use unit_pruner::util::prop::{check, Gen};
+
+// ---------------------------------------------------------------------------
+// Part 1: codec properties
+
+fn arbitrary_frame(g: &mut Gen) -> Frame {
+    match g.usize_in(0, 5) {
+        0 => {
+            let sample_len = g.usize_in(1, 32);
+            let n_samples = g.usize_in(1, 5);
+            let n = sample_len * n_samples;
+            let data = if g.bool() {
+                Payload::F32((0..n).map(|_| g.f32_in(-4.0, 4.0)).collect())
+            } else {
+                Payload::I8((0..n).map(|_| g.i32_in(-128, 127) as i8).collect())
+            };
+            Frame::Request {
+                id: g.u32_in(0, u32::MAX - 1) as u64,
+                deadline_ms: g.u32_in(0, 100_000),
+                sample_len: sample_len as u32,
+                data,
+            }
+        }
+        1 => Frame::Response {
+            id: g.u32_in(0, u32::MAX - 1) as u64,
+            slot: if g.bool() { g.u32_in(0, 1000) } else { WHOLE_REQUEST },
+            status: *g.choice(&[
+                Status::Ok,
+                Status::Rejected,
+                Status::Expired,
+                Status::Cancelled,
+                Status::Error,
+            ]),
+            predicted: g.u32_in(0, u16::MAX as u32) as u16,
+            queue_us: g.u32_in(0, u32::MAX - 1),
+            service_us: g.u32_in(0, u32::MAX - 1),
+            mac_skipped: g.f32_in(0.0, 1.0),
+            logits: (0..g.usize_in(0, 40)).map(|_| g.normal()).collect(),
+        },
+        2 => Frame::Cancel { id: g.u32_in(0, u32::MAX - 1) as u64 },
+        3 => Frame::Ping { id: g.u32_in(0, u32::MAX - 1) as u64 },
+        4 => Frame::Pong { id: g.u32_in(0, u32::MAX - 1) as u64 },
+        _ => Frame::Goodbye,
+    }
+}
+
+#[test]
+fn random_frames_roundtrip_exactly() {
+    check(0x31BE, 400, |g| {
+        let frame = arbitrary_frame(g);
+        let bytes = wire::encode(&frame);
+        let (decoded, consumed) = wire::decode(&bytes).unwrap().expect("complete frame");
+        assert_eq!(consumed, bytes.len());
+        assert_eq!(decoded, frame);
+    });
+}
+
+#[test]
+fn truncation_is_incomplete_never_error() {
+    check(0x7123, 150, |g| {
+        let frame = arbitrary_frame(g);
+        let bytes = wire::encode(&frame);
+        let cut = g.usize_in(0, bytes.len() - 1);
+        assert_eq!(wire::decode(&bytes[..cut]).unwrap(), None, "cut at {cut}");
+    });
+}
+
+#[test]
+fn corruption_is_error_never_panic_or_silent_accept() {
+    check(0xC0DE, 300, |g| {
+        let frame = arbitrary_frame(g);
+        let mut bytes = wire::encode(&frame);
+        // Corrupt one byte past the length prefix: CRC (or a stricter
+        // structural check) must catch every single-byte flip.
+        let i = g.usize_in(4, bytes.len() - 1);
+        let flip = g.u32_in(1, 255) as u8;
+        bytes[i] ^= flip;
+        assert!(
+            wire::decode(&bytes).is_err(),
+            "flip {flip:#x} at byte {i} decoded silently"
+        );
+    });
+}
+
+#[test]
+fn garbage_never_panics() {
+    check(0x6A5B, 300, |g| {
+        let n = g.usize_in(0, 256);
+        let garbage: Vec<u8> = (0..n).map(|_| g.i32_in(0, 255) as u8).collect();
+        // Any outcome but a panic is acceptable.
+        let _ = wire::decode(&garbage);
+        let mut r = FrameReader::new();
+        r.feed(&garbage);
+        let _ = r.next();
+    });
+}
+
+#[test]
+fn frame_streams_survive_random_chunking() {
+    check(0x5EAD, 60, |g| {
+        let frames: Vec<Frame> = (0..g.usize_in(1, 8)).map(|_| arbitrary_frame(g)).collect();
+        let mut stream = Vec::new();
+        for f in &frames {
+            stream.extend(wire::encode(f));
+        }
+        let mut r = FrameReader::new();
+        let mut got = Vec::new();
+        let mut off = 0usize;
+        while off < stream.len() {
+            let n = g.usize_in(1, 97).min(stream.len() - off);
+            r.feed(&stream[off..off + n]);
+            off += n;
+            while let Some(f) = r.next().unwrap() {
+                got.push(f);
+            }
+        }
+        assert_eq!(got, frames);
+        assert_eq!(r.pending(), 0);
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Part 2: loopback e2e
+
+fn setup_q(seed: u64) -> QModel {
+    let def = zoo("mnist");
+    let params = Params::random(&def, seed);
+    QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2))
+}
+
+fn start_server(q: QModel, workers: usize, session: SessionCfg) -> Server {
+    let div = unit_pruner::approx::DivKind::Exact;
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div },
+        ServeConfig { workers, placement: Placement::CostWeighted, ..Default::default() },
+    );
+    Server::start(coord, "127.0.0.1:0", ServeOpts { max_conns: 8, session })
+        .expect("bind loopback")
+}
+
+#[test]
+fn loopback_results_bit_identical_to_in_process() {
+    let q = setup_q(31);
+    let ds = mnist_like::generate(12, Sizes { train: 2, val: 2, test: 12 });
+    let server = start_server(q.clone(), 3, SessionCfg::default());
+    let client = Client::connect(server.local_addr()).unwrap();
+
+    // Direct plan-backed engine = what in-process submit_batch returns.
+    let mut pb = PlanBacked::new(
+        &q,
+        PlanConfig::for_mode(PruneMode::Unit, unit_pruner::approx::DivKind::Exact),
+    );
+    let xs: Vec<Vec<f32>> = (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
+    let (_id, rx) = client.submit_batch(&xs, None).unwrap();
+    for (slot, x) in xs.iter().enumerate() {
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(ev.status, Status::Ok);
+        assert_eq!(ev.slot as usize, slot, "sub-replies out of slot order");
+        let direct = pb.infer(&pb.quantize_input(x));
+        // f32 values cross the wire as exact LE bytes: bit-identical.
+        assert_eq!(ev.logits, direct.logits, "slot {slot} logits differ from in-process");
+        assert_eq!(ev.predicted as usize, direct.argmax());
+        assert!((ev.mac_skipped as f64 - direct.skip_fraction()).abs() < 1e-6);
+    }
+    assert!(client.goodbye(Duration::from_secs(10)));
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.served, xs.len() as u64);
+    assert_eq!(snap.rejected + snap.expired + snap.cancelled, 0);
+    server.shutdown();
+}
+
+#[test]
+fn i8_payload_served_as_dequantized_f32() {
+    let q = setup_q(32);
+    let server = start_server(q.clone(), 2, SessionCfg::default());
+    let client = Client::connect(server.local_addr()).unwrap();
+    let def = zoo("mnist");
+    let flat: Vec<i8> = (0..def.input_len()).map(|i| ((i * 37) % 255) as i8).collect();
+    let (_id, rx) = client.submit_i8(&flat, def.input_len(), None).unwrap();
+    let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(ev.status, Status::Ok);
+    let mut pb = PlanBacked::new(
+        &q,
+        PlanConfig::for_mode(PruneMode::Unit, unit_pruner::approx::DivKind::Exact),
+    );
+    let x: Vec<f32> = flat.iter().map(|&b| b as f32 / 127.0).collect();
+    let direct = pb.infer(&pb.quantize_input(&x));
+    assert_eq!(ev.logits, direct.logits);
+    drop(client);
+    server.shutdown();
+}
+
+/// Acceptance: a slow client overrunning its window sees `Rejected`
+/// frames; everything admitted still completes correctly.
+#[test]
+fn backpressure_rejects_past_the_inflight_window() {
+    let q = setup_q(33);
+    let ds = mnist_like::generate(13, Sizes { train: 2, val: 2, test: 8 });
+    // window of 2 on one worker: deterministic pressure.
+    let server = start_server(
+        q,
+        1,
+        SessionCfg { max_inflight: 2, ..Default::default() },
+    );
+    let client = Client::connect(server.local_addr()).unwrap();
+    // Two big batches occupy the window; they take a while on 1 worker.
+    let big: Vec<Vec<f32>> =
+        (0..64).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect();
+    let (_ia, rx_a) = client.submit_batch(&big, None).unwrap();
+    let (_ib, rx_b) = client.submit_batch(&big, None).unwrap();
+    // Overrun: burst more requests while the window is full. At least
+    // the first of these must observe the full window (the admitted
+    // pair cannot finish faster than loopback latency); any that land
+    // after the window frees may legally succeed.
+    let mut rejected = 0usize;
+    let mut overrun_rxs = Vec::new();
+    for i in 0..4 {
+        let (_, rx) =
+            client.submit(ds.test.sample(i % ds.test.len()), None).unwrap();
+        overrun_rxs.push(rx);
+    }
+    for rx in &overrun_rxs {
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        match ev.status {
+            Status::Rejected => {
+                assert_eq!(ev.slot, WHOLE_REQUEST);
+                rejected += 1;
+            }
+            Status::Ok => {}
+            other => panic!("unexpected overrun status {other:?}"),
+        }
+    }
+    assert!(rejected > 0, "window of 2 never rejected a 4-deep overrun burst");
+    // The admitted batches still complete, in order.
+    for rx in [rx_a, rx_b] {
+        for slot in 0..big.len() {
+            let ev = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!(ev.status, Status::Ok);
+            assert_eq!(ev.slot as usize, slot);
+        }
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.rejected, rejected as u64);
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Acceptance: a request whose deadline passes while queued returns
+/// `Expired` and never occupies a shard (workers drop the tombstone).
+#[test]
+fn expired_deadline_returns_expired_without_occupying_a_shard() {
+    let q = setup_q(34);
+    let ds = mnist_like::generate(14, Sizes { train: 2, val: 2, test: 8 });
+    let server = start_server(q, 1, SessionCfg { max_inflight: 8, ..Default::default() });
+    let client = Client::connect(server.local_addr()).unwrap();
+    // Fill the single worker's queue with enough work that the 1 ms
+    // deadline below cannot be beaten even on a fast machine…
+    let big: Vec<Vec<f32>> =
+        (0..192).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect();
+    let (_ib, rx_big) = client.submit_batch(&big, None).unwrap();
+    // …then a 1 ms-deadline request stuck behind it.
+    let (_ie, rx_exp) =
+        client.submit(ds.test.sample(0), Some(Duration::from_millis(1))).unwrap();
+    let ev = rx_exp.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(ev.status, Status::Expired, "queued past its deadline");
+    assert_eq!(ev.slot, WHOLE_REQUEST);
+    // No further events for the expired id.
+    assert!(rx_exp.recv_timeout(Duration::from_millis(300)).is_err());
+    // The big batch is unaffected.
+    for slot in 0..big.len() {
+        let ev = rx_big.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+    }
+    // The tombstone was dropped at dequeue: the expired sample was
+    // never served, and the worker recorded the drop. The pop of the
+    // tombstone races this snapshot by microseconds, so poll briefly.
+    let deadline = std::time::Instant::now() + Duration::from_secs(5);
+    let snap = loop {
+        let snap = server.metrics().snapshot();
+        if snap.dropped >= 1 || std::time::Instant::now() > deadline {
+            break snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.served, big.len() as u64);
+    assert_eq!(snap.dropped, 1);
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Acceptance: cancelling a split batch mid-stream suppresses every
+/// remaining sub-reply; what was delivered is a contiguous ordered
+/// prefix.
+#[test]
+fn mid_batch_cancel_suppresses_remaining_sub_replies() {
+    let q = setup_q(35);
+    let ds = mnist_like::generate(15, Sizes { train: 2, val: 2, test: 8 });
+    let server = start_server(q, 1, SessionCfg { max_inflight: 8, ..Default::default() });
+    let client = Client::connect(server.local_addr()).unwrap();
+    let n = 96usize;
+    let xs: Vec<Vec<f32>> =
+        (0..n).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect();
+    let (id, rx) = client.submit_batch(&xs, None).unwrap();
+    // Read a few sub-replies, then cancel mid-batch.
+    let mut got = 0usize;
+    for slot in 0..4 {
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+        got += 1;
+    }
+    client.cancel(id).unwrap();
+    // Client-side the receiver disconnects at cancel (the contract is
+    // silence, so the pending entry retires immediately). Anything
+    // that still drains out arrived before the cancel.
+    while let Ok(ev) = rx.recv_timeout(Duration::from_millis(500)) {
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, got), "post-cancel reorder");
+        got += 1;
+        assert!(got < n, "cancellation suppressed nothing ({got}/{n} delivered)");
+    }
+    assert!(got < n, "cancellation suppressed nothing ({got}/{n} delivered)");
+    // Server-side proof of suppression: the cancel was booked, the
+    // queued tail was tombstone-dropped (never executed), and the
+    // executed+dropped ledger accounts for every sample of the batch —
+    // nothing was silently lost. Poll briefly: the workers race this
+    // snapshot while draining the tombstones.
+    // (The follow-up request below is not submitted yet, so every
+    // sample counted here belongs to the cancelled batch.)
+    let deadline = std::time::Instant::now() + Duration::from_secs(10);
+    let snap = loop {
+        let snap = server.metrics().snapshot();
+        if snap.served + snap.dropped >= n as u64 || std::time::Instant::now() > deadline {
+            break snap;
+        }
+        std::thread::sleep(Duration::from_millis(10));
+    };
+    assert_eq!(snap.cancelled, 1);
+    assert!(
+        snap.dropped > 0,
+        "queued tail should be tombstone-dropped, not executed"
+    );
+    assert!(
+        (snap.served as usize) < n,
+        "cancellation executed the whole batch anyway"
+    );
+    assert_eq!(snap.served + snap.dropped, n as u64, "samples unaccounted for");
+    // The session survives: a follow-up request on the same connection
+    // completes normally.
+    let (_i2, rx2) = client.submit(ds.test.sample(0), None).unwrap();
+    assert_eq!(rx2.recv_timeout(Duration::from_secs(60)).unwrap().status, Status::Ok);
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Regression (satellite): shutting the listener down with open
+/// sessions and queued work drains cleanly — close listener → drain
+/// sessions → close pool — without panicking, and every in-flight
+/// sample is answered before the goodbye.
+#[test]
+fn shutdown_with_open_sessions_drains_without_panicking() {
+    let q = setup_q(36);
+    let ds = mnist_like::generate(16, Sizes { train: 2, val: 2, test: 8 });
+    let server = start_server(q, 2, SessionCfg::default());
+    let addr = server.local_addr();
+    let clients: Vec<_> =
+        (0..3)
+            .map(|c| {
+                let client = Client::connect(addr).unwrap();
+                let n = 8 + 4 * c;
+                let xs: Vec<Vec<f32>> =
+                    (0..n).map(|i| ds.test.sample(i % ds.test.len()).to_vec()).collect();
+                let (_id, rx) = client.submit_batch(&xs, None).unwrap();
+                (client, rx, n)
+            })
+            .collect();
+    // Shut down while all three sessions have work in flight.
+    let t = std::thread::spawn(move || server.shutdown());
+    for (client, rx, n) in clients {
+        for slot in 0..n {
+            let ev = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+        }
+        // After the drain the server says goodbye and the socket
+        // closes; the client observes it.
+        let deadline = std::time::Instant::now() + Duration::from_secs(30);
+        while !client.is_closed() && std::time::Instant::now() < deadline {
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        assert!(client.is_closed(), "no goodbye after drain");
+    }
+    t.join().expect("shutdown panicked");
+}
+
+/// A session that submits into an already-closed pool answers `Error`
+/// instead of panicking (the old drop-order crash).
+#[test]
+fn submit_racing_pool_close_yields_error_not_panic() {
+    let q = setup_q(37);
+    let ds = mnist_like::generate(17, Sizes { train: 2, val: 2, test: 4 });
+    let server = start_server(q, 2, SessionCfg::default());
+    let client = Client::connect(server.local_addr()).unwrap();
+    // Reach under the hood: close the coordinator's intake while the
+    // listener and session still run (the pathological ordering the
+    // old Coordinator::drop could produce).
+    let metrics = server.metrics();
+    server.coordinator().close();
+    let (_id, rx) = client.submit(ds.test.sample(0), None).unwrap();
+    let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(ev.status, Status::Error, "closed pool must answer Error");
+    assert_eq!(metrics.snapshot().served, 0);
+    drop(client);
+    server.shutdown();
+}
