@@ -1,0 +1,177 @@
+//! Budget-driven adaptive serving, end to end over the wire: sweep the
+//! energy budget on a live server and watch the governor move the
+//! threshold scale — plans served from the scale-indexed cache, never
+//! recompiled on revisits.
+//!
+//! ```text
+//! # self-contained (spawns its own loopback server + governor):
+//! cargo run --release --example adaptive_serve -- --in-process
+//!
+//! # against a running `unit serve --listen ... --budget-mj B`:
+//! cargo run --release --example adaptive_serve -- --addr 127.0.0.1:PORT --base-mj 4.0
+//! ```
+//!
+//! Exit status is the test: 0 iff
+//! * every request completed losslessly and in order,
+//! * starving the budget RAISED the scale step and budget relief
+//!   LOWERED it (the §6.1 direction),
+//! * revisiting an already-visited scale regime was cache-served (the
+//!   miss counter stopped growing).
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{calibrated_cache, Governor, ScaleGrid};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{Client, ServeOpts, Server, Status};
+use unit_pruner::util::cli::Args;
+use unit_pruner::util::table::Table;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let model = args.get_or("model", "mnist").to_string();
+    let seed = args.u64_or("seed", 42);
+    let per_phase = args.usize_or("requests", 48);
+
+    let def = zoo(&model);
+    let ds = by_name(&model, seed, Sizes::default());
+
+    // Either connect to a running adaptive server, or spawn one.
+    let own_server: Option<Server>;
+    let base_mj: f64;
+    let addr: String = match args.get("addr") {
+        Some(a) => {
+            own_server = None;
+            base_mj = args.f64_or("base-mj", 1.0);
+            a.to_string()
+        }
+        None => {
+            if !args.flag("in-process") {
+                eprintln!("adaptive_serve: pass --addr HOST:PORT or --in-process");
+                std::process::exit(2);
+            }
+            let params = Params::random(&def, seed);
+            let q = QModel::quantize(&def, &params)
+                .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.15));
+            let coord = Coordinator::start(
+                BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
+                ServeConfig { workers: args.usize_or("workers", 2), ..Default::default() },
+            );
+            let cal: Vec<Vec<f32>> =
+                (0..ds.val.len().min(6)).map(|i| ds.val.sample(i).to_vec()).collect();
+            let (cache, profile) = calibrated_cache(
+                q,
+                PlanConfig::unit(DivKind::Shift),
+                ScaleGrid::default_grid(),
+                &cal,
+            );
+            // Budgets are expressed relative to the calibrated energy
+            // at scale 1.0.
+            base_mj = profile.mean_mj(cache.grid().snap_q8(256));
+            let governor = Governor::install(&coord, cache, Some(profile), base_mj)
+                .expect("governor on mcu backend");
+            let server = Server::start(
+                coord,
+                "127.0.0.1:0",
+                ServeOpts { governor: Some(governor), ..Default::default() },
+            )?;
+            let a = server.local_addr().to_string();
+            own_server = Some(server);
+            a
+        }
+    };
+
+    let client = Client::connect(&addr)?;
+    let probe = client.query_stats(Duration::from_secs(10))?;
+    if !probe.adaptive() {
+        eprintln!("adaptive_serve: server at {addr} has no governor (run with --budget-mj)");
+        std::process::exit(2);
+    }
+    println!(
+        "adaptive_serve: {addr}, grid of {} steps, base energy {base_mj:.3} mJ",
+        probe.steps_total
+    );
+
+    // Budget sweep: generous → starved → relief. The relief phase
+    // revisits scales compiled on the way up, so the cache must serve
+    // it hit-only.
+    let phases: &[(&str, f64)] =
+        &[("generous", 3.0), ("tight", 0.5), ("starved", 0.05), ("relief", 3.0)];
+    let mut t = Table::new(vec![
+        "phase", "budget mJ", "scale", "step", "ewma mJ", "swaps", "cache hit/miss",
+    ]);
+    let mut violations = 0usize;
+    let mut steps_seen = Vec::new();
+    let mut misses_seen = Vec::new();
+    for (name, mult) in phases {
+        let budget = base_mj * mult;
+        client.set_budget(budget, Duration::from_secs(10))?;
+        // Drive traffic so the governor observes energies and walks.
+        for r in 0..per_phase {
+            let x = ds.test.sample(r % ds.test.len());
+            let (_id, rx) = client.submit(x, None)?;
+            let ev = rx.recv_timeout(Duration::from_secs(60))?;
+            if ev.status != Status::Ok {
+                eprintln!("{name}: request {r} got {:?}", ev.status);
+                violations += 1;
+            }
+        }
+        let s = client.query_stats(Duration::from_secs(10))?;
+        println!(
+            "[{name}] budget {budget:.3} mJ -> scale {:.2}x (step {}/{}), ewma {:.3} mJ",
+            s.scale(),
+            s.step,
+            s.steps_total,
+            s.ewma_mj
+        );
+        t.row(vec![
+            name.to_string(),
+            format!("{budget:.3}"),
+            format!("{:.2}x", s.scale()),
+            format!("{}/{}", s.step, s.steps_total),
+            format!("{:.3}", s.ewma_mj),
+            s.swaps.to_string(),
+            format!("{}/{}", s.cache_hits, s.cache_misses),
+        ]);
+        steps_seen.push(s.step);
+        misses_seen.push(s.cache_misses);
+    }
+    println!("{}", t.render());
+    client.goodbye(Duration::from_secs(10));
+    if let Some(server) = own_server {
+        server.shutdown();
+    }
+
+    // Direction assertions: starved must sit above generous, relief
+    // back below starved.
+    let (generous, starved, relief) = (steps_seen[0], steps_seen[2], steps_seen[3]);
+    if starved <= generous {
+        eprintln!("FAIL: starving the budget did not raise the scale ({generous} -> {starved})");
+        violations += 1;
+    }
+    if relief >= starved {
+        eprintln!("FAIL: budget relief did not lower the scale ({starved} -> {relief})");
+        violations += 1;
+    }
+    // The relief phase walks back through steps compiled on the way
+    // up: the miss counter must not have grown.
+    if misses_seen[3] > misses_seen[2] {
+        eprintln!(
+            "FAIL: revisited scales were recompiled ({} -> {} misses)",
+            misses_seen[2], misses_seen[3]
+        );
+        violations += 1;
+    }
+    if violations > 0 {
+        eprintln!("FAIL: {violations} violations");
+        std::process::exit(1);
+    }
+    println!("OK: scale tracked the budget in both directions; revisits were cache-served");
+    Ok(())
+}

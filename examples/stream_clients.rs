@@ -84,8 +84,10 @@ fn main() -> Result<()> {
                     max_conns: n_clients + 4,
                     session: SessionCfg {
                         max_inflight: args.usize_or("window", 32),
+                        park: args.usize_or("park", 0),
                         ..Default::default()
                     },
+                    ..Default::default()
                 },
             )?;
             let a = server.local_addr().to_string();

@@ -1,0 +1,106 @@
+//! Adaptive control-plane benchmarks: what a scale change costs.
+//!
+//! Three rows per model, in descending cost:
+//!
+//! * **full compile** — `PlannedModel::compile` from scratch (sorts
+//!   every linear row): what a naive "recompile on scale change"
+//!   serving loop would pay per controller move;
+//! * **shared recompile** — `compile_shared` against a donor plan
+//!   (linear tables reused behind an `Arc`, only conv tables and
+//!   `t_eff` rebuilt): the plan cache's miss cost;
+//! * **cache-hit swap** — `PlanCache::plan_at` on a resident step plus
+//!   the `PlanSlot` swap: the steady-state cost of a budget move, which
+//!   is what the serve path pays once the grid is warm.
+//!
+//! Standalone observability bench (not part of the `BENCH_perf.json`
+//! ratio gate): absolute compile times are machine-dependent. Set
+//! `$UNIT_PERF_QUICK` for the CI smoke mode.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{PlanCache, ScaleGrid};
+use unit_pruner::coordinator::PlanSlot;
+use unit_pruner::engine::{PlanConfig, PlannedModel, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::util::table::Table;
+
+fn time_us<F: FnMut()>(reps: usize, mut f: F) -> f64 {
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        f();
+    }
+    t0.elapsed().as_secs_f64() * 1e6 / reps as f64
+}
+
+fn main() {
+    let quick = std::env::var("UNIT_PERF_QUICK").is_ok();
+    if quick {
+        println!("(UNIT_PERF_QUICK set: CI smoke mode, reduced repetitions)\n");
+    }
+    println!("=== Adaptive: plan-swap latency vs full recompile ===\n");
+
+    let models: &[&str] = if quick { &["mnist"] } else { &["mnist", "cifar", "kws"] };
+    let mut t = Table::new(vec![
+        "model",
+        "full compile us",
+        "shared recompile us",
+        "cache-hit swap us",
+        "hit speedup",
+    ]);
+    for &name in models {
+        let def = zoo(name);
+        let params = Params::random(&def, 5);
+        let q = QModel::quantize(&def, &params)
+            .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.2));
+        let cfg = PlanConfig::unit(DivKind::Shift);
+        let grid = ScaleGrid::default_grid();
+        let reps = if quick { 3 } else { 10 };
+
+        let donor = PlannedModel::compile(&q, cfg);
+        let full_us = time_us(reps, || {
+            std::hint::black_box(PlannedModel::compile(
+                &q,
+                PlanConfig { t_scale_q8: 700, ..cfg },
+            ));
+        });
+        let shared_us = time_us(reps, || {
+            std::hint::black_box(PlannedModel::compile_shared(
+                &q,
+                PlanConfig { t_scale_q8: 700, ..cfg },
+                Some(&donor),
+            ));
+        });
+
+        // Warm two steps, then measure the steady-state swap: cache
+        // lookup (hit) + slot swap, alternating steps like an AIMD
+        // walk would.
+        let cache = PlanCache::new(q.clone(), cfg, grid.clone());
+        let slot = PlanSlot::new(Arc::new(PlannedModel::compile(&q, cfg)));
+        let (a, b) = (grid.snap_q8(256), grid.snap_q8(512));
+        cache.plan_at(a);
+        cache.plan_at(b);
+        let mut flip = false;
+        let hit_reps = if quick { 2_000 } else { 20_000 };
+        let hit_us = time_us(hit_reps, || {
+            flip = !flip;
+            let step = if flip { a } else { b };
+            slot.swap(cache.plan_at(step));
+        });
+
+        t.row(vec![
+            name.to_string(),
+            format!("{full_us:.0}"),
+            format!("{shared_us:.0}"),
+            format!("{hit_us:.2}"),
+            format!("{:.0}x", full_us / hit_us.max(1e-9)),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "cache-hit swaps are the serve-path steady state: the grid is warmed at calibration\n\
+         time, so a budget move costs a lookup + Arc swap, not a recompile."
+    );
+}

@@ -25,7 +25,7 @@ use unit_pruner::data::{mnist_like, Sizes};
 use unit_pruner::engine::{PruneMode, QModel};
 use unit_pruner::models::{zoo, Params};
 use unit_pruner::pruning::Thresholds;
-use unit_pruner::serve::{wire, Client, Frame, Payload, ServeOpts, Server, SessionCfg, Status};
+use unit_pruner::serve::{wire, Client, Frame, Payload, ServeOpts, Server, Status};
 use unit_pruner::util::table::Table;
 
 fn main() {
@@ -99,7 +99,7 @@ fn main() {
         let server = Server::start(
             coord,
             "127.0.0.1:0",
-            ServeOpts { max_conns: n_clients + 1, session: SessionCfg::default() },
+            ServeOpts { max_conns: n_clients + 1, ..Default::default() },
         )
         .expect("bind loopback");
         let addr = server.local_addr();

@@ -1,0 +1,364 @@
+//! Per-layer keep-ratio calibration: measured cost curves for the
+//! control plane.
+//!
+//! [`PlannedModel::estimate_macs`] extrapolates deeper layers from the
+//! layer-0 keep ratio — the only thing knowable *per input* without
+//! running inference. That is the right input-density probe, but the
+//! wrong per-layer shape: UnIT's skip fraction varies strongly by layer
+//! (conv vs linear, threshold percentile, activation statistics), and
+//! Daghero et al.'s per-layer kernel-selection results on MCUs show the
+//! per-layer structure is where the cost signal lives. This module
+//! measures it once, at threshold-calibration time:
+//!
+//! * [`KeepProfile::measure`] runs the calibration batch through the
+//!   plan cache at **every grid step** (warming the cache as a side
+//!   effect) and records, per step and per layer, the mean executed
+//!   fraction of that layer's static MAC ceiling — plus the mean
+//!   modeled energy per step, the governor's feed-forward seed.
+//! * Curves are **isotonically projected** (running minimum over
+//!   increasing scale): a larger threshold scale can only shrink each
+//!   keep set, so the physical curve is non-increasing and the
+//!   projection removes calibration-batch sampling noise. Estimate
+//!   monotonicity in scale then holds by construction (property-tested
+//!   below).
+//! * [`KeepProfile::estimate_macs`] combines the calibrated per-layer
+//!   curve with two per-input signals: the exact layer-0 keep count
+//!   (from the plan's prefix-sum tables) and the input's nonzero
+//!   density relative to the calibration batch. Deeper layers are
+//!   billed `ceiling × curve[step][layer] × density_mod` — per-layer
+//!   interpolation instead of layer-0 extrapolation.
+//!
+//! [`ProfiledCost`] packages a profile + step as a
+//! [`CostEstimator`](crate::coordinator::CostEstimator) so the
+//! coordinator's cost-weighted shard placement prices samples off the
+//! calibrated curves; the governor swaps the step on every plan swap.
+
+use std::sync::Arc;
+
+use super::plan_cache::PlanCache;
+use crate::coordinator::CostEstimator;
+use crate::engine::PlannedModel;
+use crate::mcu::EnergyModel;
+
+/// How far the per-input density modulation may swing the calibrated
+/// curves (guards a pathological input from inflating the estimate
+/// past anything the profile has evidence for).
+const DENSITY_MOD_MAX: f64 = 2.0;
+
+/// Calibrated per-layer keep-ratio curves over a [`ScaleGrid`]
+/// (one curve point per `(step, layer)`), plus per-step mean energy.
+///
+/// [`ScaleGrid`]: super::ScaleGrid
+#[derive(Debug, Clone)]
+pub struct KeepProfile {
+    /// `ratios[step][layer]`: mean executed fraction of the layer's
+    /// static MAC ceiling, in `[0, 1]`, non-increasing in `step`.
+    ratios: Vec<Vec<f64>>,
+    /// Per-layer static MAC ceilings, captured once at measure time —
+    /// they depend only on the weights and mode, never on the scale,
+    /// so the per-sample estimate on the placement hot path reuses
+    /// them instead of rebuilding a `Vec` per priced sample.
+    caps: Vec<u64>,
+    /// Mean modeled energy (mJ) per inference at each step.
+    mean_mj: Vec<f64>,
+    /// Mean fraction of nonzero input values over the calibration
+    /// batch (the denominator of the density modulation).
+    input_density: f64,
+}
+
+impl KeepProfile {
+    /// Measure the profile for `cache`'s model over `xs` (one flat
+    /// `C·H·W` f32 sample per entry — typically the validation split
+    /// already used for threshold calibration). Runs
+    /// `grid.len() × xs.len()` plan-backed inferences and warms every
+    /// cache step.
+    pub fn measure(cache: &PlanCache, xs: &[Vec<f32>]) -> KeepProfile {
+        assert!(!xs.is_empty(), "empty calibration batch");
+        let energy = EnergyModel::default();
+        let n_steps = cache.grid().len();
+        // The ceilings are scale-invariant (live-weight counts only),
+        // so one capture covers every step.
+        let caps = cache.plan_at(0).static_macs_per_layer();
+        let mut ratios = Vec::with_capacity(n_steps);
+        let mut mean_mj = Vec::with_capacity(n_steps);
+        let mut input_density = 0.0f64;
+        for step in 0..n_steps {
+            let plan = cache.plan_at(step);
+            let mut scratch = plan.new_scratch();
+            let mut kept = vec![0u64; caps.len()];
+            let mut mj = 0.0f64;
+            for x in xs {
+                let xi = plan.quantize_input(x);
+                if step == 0 {
+                    let nz = xi.iter().filter(|&&v| v != 0).count();
+                    input_density += nz as f64 / xi.len().max(1) as f64;
+                }
+                let out = plan.infer(&xi, &mut scratch);
+                for (k, o) in kept.iter_mut().zip(&out.kept) {
+                    *k += o;
+                }
+                mj += out.ledger.millijoules(&energy);
+            }
+            let n = xs.len() as f64;
+            ratios.push(
+                kept.iter()
+                    .zip(&caps)
+                    .map(|(&k, &cap)| {
+                        if cap == 0 {
+                            0.0
+                        } else {
+                            (k as f64 / (cap as f64 * n)).clamp(0.0, 1.0)
+                        }
+                    })
+                    .collect(),
+            );
+            mean_mj.push(mj / n);
+        }
+        input_density /= xs.len() as f64;
+        // Isotonic projection: a larger scale can only shrink keep
+        // sets, so enforce non-increasing curves (and energies) over
+        // steps — this is what makes profiled estimates provably
+        // monotone in scale.
+        for step in 1..n_steps {
+            for l in 0..ratios[step].len() {
+                let prev = ratios[step - 1][l];
+                if ratios[step][l] > prev {
+                    ratios[step][l] = prev;
+                }
+            }
+            if mean_mj[step] > mean_mj[step - 1] {
+                mean_mj[step] = mean_mj[step - 1];
+            }
+        }
+        KeepProfile { ratios, caps, mean_mj, input_density }
+    }
+
+    /// Calibrated keep ratio of `layer` at `step`.
+    pub fn ratio(&self, step: usize, layer: usize) -> f64 {
+        self.ratios[step][layer]
+    }
+
+    /// Grid steps covered.
+    pub fn n_steps(&self) -> usize {
+        self.ratios.len()
+    }
+
+    /// Mean calibrated energy per inference at `step` (mJ).
+    pub fn mean_mj(&self, step: usize) -> f64 {
+        self.mean_mj[step]
+    }
+
+    /// Whole-model calibrated keep ratio at `step`: profiled MACs over
+    /// the summed static ceilings (the `Stats` frame's keep-ratio
+    /// gauge).
+    pub fn model_keep_ratio(&self, step: usize) -> f64 {
+        let total: u64 = self.caps.iter().sum();
+        if total == 0 {
+            return 0.0;
+        }
+        let est: f64 = self
+            .caps
+            .iter()
+            .enumerate()
+            .map(|(l, &cap)| cap as f64 * self.ratio(step, l))
+            .sum();
+        est / total as f64
+    }
+
+    /// Smallest grid step whose calibrated mean energy fits
+    /// `budget_mj` (scales are non-decreasing in step, energies
+    /// non-increasing), or the last step when even maximum pruning
+    /// overruns the budget — the governor's feed-forward seed before
+    /// the AIMD loop takes over.
+    pub fn seed_step(&self, budget_mj: f64) -> usize {
+        for (step, &mj) in self.mean_mj.iter().enumerate() {
+            if mj <= budget_mj {
+                return step;
+            }
+        }
+        self.mean_mj.len().saturating_sub(1)
+    }
+
+    /// Per-layer interpolated MAC estimate for one sample under the
+    /// plan compiled at `step` (see module docs). Bounded by the
+    /// plan's [`dense_macs`](PlannedModel::dense_macs); monotone
+    /// non-increasing in `step` for a fixed input.
+    pub fn estimate_macs(&self, plan: &PlannedModel, step: usize, x_raw: &[i16]) -> u64 {
+        let (kept0, total0) = plan.layer0_exact_kept(x_raw);
+        let caps = &self.caps;
+        if caps.is_empty() {
+            return 1;
+        }
+        // Density modulation: how dense this input is relative to the
+        // calibration batch. Scale-independent, so it cannot break
+        // step-monotonicity.
+        let nz = x_raw.iter().filter(|&&v| v != 0).count();
+        let density = nz as f64 / x_raw.len().max(1) as f64;
+        let density_mod = if self.input_density > 0.0 {
+            (density / self.input_density).clamp(0.0, DENSITY_MOD_MAX)
+        } else {
+            1.0
+        };
+        let mut est = kept0.min(total0);
+        for (l, &cap) in caps.iter().enumerate().skip(1) {
+            let scaled = (cap as f64 * self.ratio(step, l) * density_mod).round() as u64;
+            est += scaled.min(cap);
+        }
+        est.max(1)
+    }
+}
+
+/// A [`KeepProfile`] bound to the currently served grid step: the
+/// coordinator's placement cost oracle while the governor is attached.
+/// Immutable — the governor installs a fresh one on every plan swap
+/// rather than mutating shared state under the request path.
+#[derive(Debug, Clone)]
+pub struct ProfiledCost {
+    pub profile: Arc<KeepProfile>,
+    pub step: usize,
+}
+
+impl CostEstimator for ProfiledCost {
+    fn estimate(&self, plan: &PlannedModel, x_raw: &[i16]) -> u64 {
+        self.profile.estimate_macs(plan, self.step, x_raw)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivKind;
+    use crate::control::ScaleGrid;
+    use crate::engine::{PlanConfig, QModel};
+    use crate::models::{zoo, Params};
+    use crate::pruning::Thresholds;
+
+    fn setup(seed: u64, n_cal: usize) -> (PlanCache, Vec<Vec<f32>>) {
+        let def = zoo("mnist");
+        let params = Params::random(&def, seed);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let cache = PlanCache::new(
+            q,
+            PlanConfig::unit(DivKind::Shift),
+            ScaleGrid::geometric(0.25, 8.0, 8),
+        );
+        let xs: Vec<Vec<f32>> = (0..n_cal)
+            .map(|s| {
+                (0..def.input_len())
+                    .map(|i| (((i * 7 + s * 13) % 23) as f32 - 11.0) / 8.0)
+                    .collect()
+            })
+            .collect();
+        (cache, xs)
+    }
+
+    #[test]
+    fn curves_are_bounded_and_monotone_in_scale() {
+        let (cache, xs) = setup(41, 4);
+        let p = KeepProfile::measure(&cache, &xs);
+        let n_layers = cache.plan_at(0).static_macs_per_layer().len();
+        for step in 0..p.n_steps() {
+            for l in 0..n_layers {
+                let r = p.ratio(step, l);
+                assert!((0.0..=1.0).contains(&r), "ratio out of range: {r}");
+                if step > 0 {
+                    assert!(
+                        r <= p.ratio(step - 1, l),
+                        "layer {l} ratio rose with scale at step {step}"
+                    );
+                }
+            }
+            if step > 0 {
+                assert!(p.mean_mj(step) <= p.mean_mj(step - 1));
+            }
+        }
+        // Measuring warmed the whole grid.
+        assert_eq!(cache.len(), cache.grid().len());
+    }
+
+    /// Satellite property (b): profiled estimates are monotone in
+    /// scale and bounded by `dense_macs`, across random inputs.
+    #[test]
+    fn profiled_estimates_monotone_in_scale_and_bounded() {
+        let (cache, xs) = setup(42, 4);
+        let p = KeepProfile::measure(&cache, &xs);
+        let def = zoo("mnist");
+        crate::util::prop::check(0xE571, 30, |g| {
+            let x_f: Vec<f32> = (0..def.input_len())
+                .map(|_| if g.bool() { g.f32_in(-2.0, 2.0) } else { 0.0 })
+                .collect();
+            let mut last = u64::MAX;
+            for step in 0..p.n_steps() {
+                let plan = cache.plan_at(step);
+                let xi = plan.quantize_input(&x_f);
+                let est = p.estimate_macs(&plan, step, &xi);
+                assert!(est >= 1 && est <= plan.dense_macs(), "step {step}: est {est}");
+                assert!(est <= last, "estimate rose with scale at step {step}");
+                last = est;
+            }
+        });
+    }
+
+    #[test]
+    fn sparser_inputs_never_raise_the_estimate() {
+        let (cache, xs) = setup(43, 4);
+        let p = KeepProfile::measure(&cache, &xs);
+        let plan = cache.plan_at(3);
+        let def = zoo("mnist");
+        let x_f: Vec<f32> =
+            (0..def.input_len()).map(|i| (((i * 13) % 29) as f32 - 14.0) / 8.0).collect();
+        let xi = plan.quantize_input(&x_f);
+        let est = p.estimate_macs(&plan, 3, &xi);
+        let mut sparse = xi.clone();
+        for v in sparse.iter_mut().step_by(2) {
+            *v = 0;
+        }
+        assert!(p.estimate_macs(&plan, 3, &sparse) <= est);
+        let zeros = vec![0i16; xi.len()];
+        assert!(p.estimate_macs(&plan, 3, &zeros) <= p.estimate_macs(&plan, 3, &sparse));
+    }
+
+    #[test]
+    fn profiled_estimate_tracks_actual_work_better_than_layer0_extrapolation() {
+        // The refinement's reason to exist: across calibration-like
+        // inputs, the profiled estimate's error against the actually
+        // executed MACs is no worse (summed over probes) than the
+        // layer-0 extrapolation's.
+        let (cache, xs) = setup(44, 6);
+        let p = KeepProfile::measure(&cache, &xs);
+        let step = 4;
+        let plan = cache.plan_at(step);
+        let mut scratch = plan.new_scratch();
+        let (mut err_prof, mut err_l0) = (0f64, 0f64);
+        for x in &xs {
+            let xi = plan.quantize_input(x);
+            let actual: u64 = plan.infer(&xi, &mut scratch).kept.iter().sum();
+            let prof = p.estimate_macs(&plan, step, &xi);
+            let l0 = plan.estimate_macs(&xi);
+            err_prof += (prof as f64 - actual as f64).abs();
+            err_l0 += (l0 as f64 - actual as f64).abs();
+        }
+        // Regression guard with a small tolerance (both are estimates;
+        // the profiled one must not be meaningfully worse on the very
+        // distribution it calibrated on).
+        assert!(
+            err_prof <= err_l0 * 1.1 + 1.0,
+            "profiled estimate worse than layer-0 extrapolation: {err_prof:.0} vs {err_l0:.0}"
+        );
+    }
+
+    #[test]
+    fn seed_step_inverts_the_energy_curve() {
+        let (cache, xs) = setup(45, 3);
+        let p = KeepProfile::measure(&cache, &xs);
+        // Generous budget: cheapest step (no pruning pressure).
+        assert_eq!(p.seed_step(f64::INFINITY), 0);
+        // Impossible budget: saturates at the last step.
+        assert_eq!(p.seed_step(0.0), p.n_steps() - 1);
+        // A budget exactly at some step's mean energy seeds that step.
+        let mid = p.n_steps() / 2;
+        let s = p.seed_step(p.mean_mj(mid));
+        assert!(s <= mid, "seed overshot: {s} > {mid}");
+        assert!(p.mean_mj(s) <= p.mean_mj(mid));
+    }
+}

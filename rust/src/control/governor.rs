@@ -1,0 +1,287 @@
+//! The serve-side budget governor: the loop that makes the adaptive
+//! controller act on the serving stack.
+//!
+//! Ownership: the governor owns the [`EnergyController`] and a handle
+//! to every knob it turns —
+//!
+//! * it is installed as the coordinator's
+//!   [`EnergyTap`](crate::coordinator::EnergyTap), so every McuSim
+//!   worker reports each request's modeled ledger energy after
+//!   delivering the reply;
+//! * each observation runs one AIMD update, snaps the resulting scale
+//!   to the [`ScaleGrid`](super::ScaleGrid), and — only when the step
+//!   actually changed — fetches the step's plan from the
+//!   [`PlanCache`] and swaps the coordinator's
+//!   [`PlanSlot`](crate::coordinator::PlanSlot) atomically (workers
+//!   pick the new plan up at their next dequeue; in-flight requests
+//!   finish on the plan they started with);
+//! * on every swap it also retargets the placement cost oracle
+//!   ([`ProfiledCost`](super::ProfiledCost)) to the new step, when a
+//!   calibrated [`KeepProfile`] is attached;
+//! * [`Governor::set_budget`] is the wire-facing knob (the `SetBudget`
+//!   admin frame lands here), [`Governor::status`] the wire-facing
+//!   gauge (the `Stats` frame).
+//!
+//! With a profile attached, installation is **feed-forward seeded**:
+//! the initial step is the cheapest step whose calibrated mean energy
+//! fits the budget, so the loop starts near its operating point
+//! instead of walking there one AIMD nudge at a time.
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+
+use super::calibrate::{KeepProfile, ProfiledCost};
+use super::plan_cache::PlanCache;
+use crate::coordinator::{
+    Coordinator, CostEstimator, CostEstimatorSlot, EnergyController, EnergyTap, PlanSlot,
+};
+
+/// A point-in-time view of the governor (the `Stats` admin frame's
+/// payload).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GovernorStatus {
+    /// Active threshold scale in Q8.8.
+    pub scale_q8: u32,
+    /// Active grid step.
+    pub step: usize,
+    /// Total steps in the grid.
+    pub steps_total: usize,
+    pub budget_mj: f64,
+    /// EWMA of observed per-request energy (mJ).
+    pub ewma_mj: f64,
+    /// Calibrated whole-model keep ratio at the active step (0 when no
+    /// profile is attached).
+    pub keep_ratio: f64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Plan swaps performed since installation.
+    pub swaps: u64,
+}
+
+/// The budget-driven plan governor (see module docs).
+pub struct Governor {
+    cache: Arc<PlanCache>,
+    slot: Arc<PlanSlot>,
+    cost_slot: CostEstimatorSlot,
+    profile: Option<Arc<KeepProfile>>,
+    /// Controller + swap path, serialized: concurrent worker
+    /// observations queue here, so step transitions (and their
+    /// cache lookups) are single-file.
+    ctrl: Mutex<EnergyController>,
+    step: AtomicUsize,
+    swaps: AtomicU64,
+}
+
+impl std::fmt::Debug for Governor {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.status();
+        f.debug_struct("Governor")
+            .field("step", &s.step)
+            .field("scale_q8", &s.scale_q8)
+            .field("budget_mj", &s.budget_mj)
+            .field("swaps", &s.swaps)
+            .finish()
+    }
+}
+
+impl Governor {
+    /// Build a governor over `cache` and install it on `coord`: seeds
+    /// the scale (feed-forward from `profile` when given, else scale
+    /// 1.0 snapped to the grid), swaps the seeded plan into the
+    /// coordinator's slot, installs the profiled cost oracle, and
+    /// registers the energy tap.
+    ///
+    /// Errors when `coord` has no plan slot (Pjrt backend — nothing to
+    /// govern).
+    pub fn install(
+        coord: &Coordinator,
+        cache: Arc<PlanCache>,
+        profile: Option<Arc<KeepProfile>>,
+        budget_mj: f64,
+    ) -> Result<Arc<Governor>, &'static str> {
+        let slot = coord
+            .plan_slot()
+            .ok_or("adaptive governor needs the McuSim backend (no plan slot)")?;
+        let mut ctrl = EnergyController::new(budget_mj);
+        ctrl.snap_to_grid(cache.grid());
+        let step = match &profile {
+            Some(p) => p.seed_step(budget_mj),
+            None => cache.grid().snap_q8(ctrl.t_scale_q8()),
+        };
+        ctrl.set_scale(cache.grid().scale(step));
+        let gov = Arc::new(Governor {
+            cache: Arc::clone(&cache),
+            slot: Arc::clone(&slot),
+            cost_slot: coord.cost_estimator_slot(),
+            profile,
+            ctrl: Mutex::new(ctrl),
+            step: AtomicUsize::new(step),
+            swaps: AtomicU64::new(0),
+        });
+        slot.swap(cache.plan_at(step));
+        gov.retarget_cost(step);
+        coord.set_energy_tap(Some(Arc::clone(&gov) as Arc<dyn EnergyTap>));
+        Ok(gov)
+    }
+
+    fn retarget_cost(&self, step: usize) {
+        if let Some(p) = &self.profile {
+            let est: Arc<dyn CostEstimator> =
+                Arc::new(ProfiledCost { profile: Arc::clone(p), step });
+            *self.cost_slot.write().unwrap() = Some(est);
+        }
+    }
+
+    /// Change the energy budget (the `SetBudget` admin frame; also the
+    /// harvester-forecast path). Takes effect on the next observation.
+    pub fn set_budget(&self, budget_mj: f64) {
+        self.ctrl.lock().unwrap().set_budget(budget_mj);
+    }
+
+    /// Active grid step.
+    pub fn step(&self) -> usize {
+        self.step.load(Ordering::Acquire)
+    }
+
+    pub fn status(&self) -> GovernorStatus {
+        let (scale_q8, budget_mj, ewma_mj) = {
+            let c = self.ctrl.lock().unwrap();
+            (c.t_scale_q8(), c.budget_mj, c.ewma_mj())
+        };
+        let step = self.step();
+        let keep_ratio = match &self.profile {
+            Some(p) => p.model_keep_ratio(step),
+            None => 0.0,
+        };
+        GovernorStatus {
+            scale_q8,
+            step,
+            steps_total: self.cache.grid().len(),
+            budget_mj,
+            ewma_mj,
+            keep_ratio,
+            cache_hits: self.cache.hits(),
+            cache_misses: self.cache.misses(),
+            swaps: self.swaps.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl EnergyTap for Governor {
+    /// One request's measured energy: AIMD update, snap, and — on a
+    /// step change — a plan swap. Serialized under the controller
+    /// mutex so two workers finishing simultaneously cannot race the
+    /// swap; the losing worker just queues behind a (rare, cache-hit
+    /// cheap) transition.
+    fn observe(&self, energy_mj: f64) {
+        let mut ctrl = self.ctrl.lock().unwrap();
+        ctrl.observe(energy_mj);
+        let new_step = self.cache.grid().snap_q8(ctrl.t_scale_q8());
+        let cur = self.step.load(Ordering::Acquire);
+        if new_step != cur {
+            let plan = self.cache.plan_at(new_step);
+            self.slot.swap(plan);
+            self.step.store(new_step, Ordering::Release);
+            self.swaps.fetch_add(1, Ordering::Relaxed);
+            self.retarget_cost(new_step);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivKind;
+    use crate::control::ScaleGrid;
+    use crate::coordinator::{BackendChoice, ServeConfig};
+    use crate::engine::{PlanConfig, PruneMode, QModel};
+    use crate::models::{zoo, Params};
+    use crate::pruning::Thresholds;
+
+    fn boot(workers: usize) -> (Coordinator, Arc<PlanCache>, Vec<Vec<f32>>) {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 91);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.15));
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
+            ServeConfig { workers, ..Default::default() },
+        );
+        let cache = Arc::new(PlanCache::new(
+            q,
+            PlanConfig::unit(DivKind::Shift),
+            ScaleGrid::geometric(0.25, 8.0, 10),
+        ));
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|s| {
+                (0..def.input_len())
+                    .map(|i| (((i * 11 + s * 5) % 19) as f32 - 9.0) / 7.0)
+                    .collect()
+            })
+            .collect();
+        (coord, cache, xs)
+    }
+
+    #[test]
+    fn tight_budget_raises_the_step_and_relief_lowers_it() {
+        let (coord, cache, xs) = boot(2);
+        let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
+        assert_eq!(gov.step(), cache.grid().snap_q8(256), "generous budget should seed ~1.0");
+        // Starve the budget: each served request feeds the tap; the
+        // governor must climb the grid.
+        gov.set_budget(1e-6);
+        for _ in 0..60 {
+            let rx = coord.submit(xs[0].clone());
+            rx.recv().unwrap();
+        }
+        let high = gov.step();
+        assert!(high > cache.grid().snap_q8(256), "step never rose: {high}");
+        assert!(gov.status().swaps > 0);
+        // Relief: the step walks back down.
+        gov.set_budget(1e9);
+        for _ in 0..120 {
+            let rx = coord.submit(xs[1 % xs.len()].clone());
+            rx.recv().unwrap();
+        }
+        assert!(gov.step() < high, "step never fell after budget relief");
+        // Walking back revisits compiled steps: hits, no fresh misses
+        // beyond the distinct steps visited.
+        assert!(cache.hits() > 0, "no cache hits on the walk back");
+        assert!(cache.misses() <= cache.grid().len() as u64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn profiled_install_seeds_from_the_energy_curve() {
+        let (coord, cache, xs) = boot(1);
+        let profile = Arc::new(KeepProfile::measure(&cache, &xs));
+        // A budget between the extremes must seed a step the curve
+        // says fits it.
+        let mid = profile.mean_mj(profile.n_steps() / 2);
+        let gov =
+            Governor::install(&coord, Arc::clone(&cache), Some(Arc::clone(&profile)), mid)
+                .unwrap();
+        let s = gov.step();
+        assert!(profile.mean_mj(s) <= mid, "seeded step overruns the budget curve");
+        // The profiled cost oracle is installed.
+        let est = coord.cost_estimator_slot().read().unwrap().clone();
+        assert!(est.is_some(), "profiled cost estimator not installed");
+        let st = gov.status();
+        assert!(st.keep_ratio > 0.0 && st.keep_ratio <= 1.0);
+        assert_eq!(st.steps_total, cache.grid().len());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn reinstall_replaces_the_previous_governor() {
+        // Installing twice (e.g. a reconfigured budget loop) must not
+        // wedge: the second governor takes over the tap and the slot.
+        let (coord, cache, xs) = boot(1);
+        let _g1 = Governor::install(&coord, Arc::clone(&cache), None, 1.0).unwrap();
+        let g2 = Governor::install(&coord, Arc::clone(&cache), None, 1e-6).unwrap();
+        for _ in 0..40 {
+            coord.submit(xs[0].clone()).recv().unwrap();
+        }
+        assert!(g2.step() > 0, "replacement governor not receiving observations");
+        coord.shutdown();
+    }
+}

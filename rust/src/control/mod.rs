@@ -1,0 +1,58 @@
+//! Adaptive control plane: the runtime subsystem that makes
+//! budget-driven inference-time pruning **servable** end to end.
+//!
+//! The paper's flexibility claim (§6.1) is that UnIT's aggressiveness
+//! is a runtime knob — scaling every threshold trades MACs for
+//! accuracy per input with no retraining. The serving stack could not
+//! act on it: the [`EnergyController`](crate::coordinator::adaptive)
+//! adjusts `t_scale_q8`, but a [`PlannedModel`](crate::engine) bakes
+//! the scale into its sorted tables at compile time. This module
+//! closes that gap with three pieces:
+//!
+//! * [`plan_cache`] — [`ScaleGrid`] quantizes the controller's
+//!   continuous scale to ~20 geometric Q8.8 steps, and [`PlanCache`]
+//!   interns one compiled plan per step (LRU-bounded, linear tables
+//!   shared across scales, bit-identical to fresh compiles);
+//! * [`calibrate`] — [`KeepProfile`] measures per-layer keep-ratio
+//!   curves (and per-step mean energy) over a calibration batch,
+//!   replacing layer-0 extrapolation with per-layer interpolation for
+//!   placement pricing ([`ProfiledCost`]) and seeding the governor's
+//!   scale feed-forward;
+//! * [`governor`] — [`Governor`] owns the controller, observes each
+//!   request's ledger energy through the coordinator's
+//!   [`EnergyTap`](crate::coordinator::EnergyTap), and swaps the
+//!   active plan `Arc` between requests through the
+//!   [`PlanSlot`](crate::coordinator::PlanSlot); the serve layer's
+//!   `SetBudget`/`Stats` admin frames are its wire front door.
+//!
+//! Dependency direction: `coordinator` ← `control` ← `serve` — the
+//! coordinator knows only the two traits it exposes, the serve layer
+//! holds an optional [`Governor`].
+
+pub mod calibrate;
+pub mod governor;
+pub mod plan_cache;
+
+pub use calibrate::{KeepProfile, ProfiledCost};
+pub use governor::{Governor, GovernorStatus};
+pub use plan_cache::{PlanCache, ScaleGrid, DEFAULT_GRID_STEPS};
+
+use std::sync::Arc;
+
+use crate::engine::{PlanConfig, QModel};
+
+/// The standard control-plane bootstrap: intern a plan cache over
+/// `grid` and measure the keep-ratio profile on `cal` (which warms
+/// every grid step as a side effect). Shared by `unit serve
+/// --budget-mj`, `unit eval --adaptive`, and the `adaptive_serve`
+/// example so calibration inputs evolve in one place.
+pub fn calibrated_cache(
+    q: QModel,
+    cfg: PlanConfig,
+    grid: ScaleGrid,
+    cal: &[Vec<f32>],
+) -> (Arc<PlanCache>, Arc<KeepProfile>) {
+    let cache = Arc::new(PlanCache::new(q, cfg, grid));
+    let profile = Arc::new(KeepProfile::measure(&cache, cal));
+    (cache, profile)
+}

@@ -1,0 +1,408 @@
+//! Scale-indexed plan cache: the compiled-plan store that makes the
+//! runtime threshold knob servable.
+//!
+//! The AIMD [`EnergyController`](crate::coordinator::EnergyController)
+//! moves the threshold scale continuously, but a [`PlannedModel`] bakes
+//! `t_scale_q8` at compile time (the sorted conv tables are *ordered
+//! by* the scaled threshold). Recompiling on every controller nudge
+//! would put an O(weights·log) sort on the serve path. The fix is the
+//! SparseRT insight turned into a cache: specialize ahead of time per
+//! sparsity configuration, and make the configuration space finite by
+//! **snapping the continuous scale to a bounded grid** ([`ScaleGrid`],
+//! ~20 geometric Q8.8 steps). The controller then only ever visits grid
+//! steps, each step's plan is compiled at most once, and a budget swing
+//! that revisits a step costs one `Arc` clone.
+//!
+//! Two cost controls keep the cache cheap:
+//!
+//! * **shared tables** — linear layers' magnitude-sorted rows are a
+//!   pure function of the weights, so every cached plan shares the
+//!   first-compiled plan's tables behind an `Arc`
+//!   ([`PlannedModel::compile_shared`]); only conv tables (whose sort
+//!   key `w̄ = T·s/|w|` is scale-dependent) and the linear `t_eff`
+//!   scalars are rebuilt per step. A cache miss is therefore a conv
+//!   re-sort, not a full recompile.
+//! * **LRU eviction** — bounded capacity (default: the whole grid, so
+//!   nothing evicts in practice; smaller capacities are honored for
+//!   memory-tight deployments and exercised by tests).
+//!
+//! Every cache-served plan is **bit-identical** to a fresh
+//! [`PlannedModel::compile`] at the same step — the property tests
+//! below pin logits, kept/skipped counts, and the full ledger across
+//! the model zoo.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::engine::{PlanConfig, PlannedModel, QModel};
+
+/// Quantized threshold-scale grid: a fixed, sorted set of Q8.8 scale
+/// steps the adaptive controller is clamped to. Geometric spacing
+/// (equal *ratios* between steps) matches the controller's
+/// multiplicative AIMD moves: one controller step crosses roughly one
+/// grid step anywhere in the range.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScaleGrid {
+    /// Strictly increasing Q8.8 scale values (deduped after rounding).
+    q8: Vec<u32>,
+}
+
+/// Default grid span and resolution: the controller's historical
+/// clamp range [0.25, 8.0] at 20 steps (~20 % per step).
+pub const DEFAULT_GRID_STEPS: usize = 20;
+
+impl ScaleGrid {
+    /// A geometric grid of `n` steps spanning `[min_scale, max_scale]`.
+    /// Steps are rounded to Q8.8 and deduped, so very tight spans may
+    /// yield fewer than `n` distinct steps.
+    pub fn geometric(min_scale: f64, max_scale: f64, n: usize) -> ScaleGrid {
+        assert!(min_scale > 0.0 && max_scale >= min_scale, "bad grid span");
+        let n = n.max(1);
+        let mut q8 = Vec::with_capacity(n);
+        for i in 0..n {
+            let s = if n == 1 {
+                min_scale
+            } else {
+                min_scale * (max_scale / min_scale).powf(i as f64 / (n - 1) as f64)
+            };
+            let v = (s * 256.0).round().max(1.0) as u32;
+            if q8.last() != Some(&v) {
+                q8.push(v);
+            }
+        }
+        ScaleGrid { q8 }
+    }
+
+    /// The default serving grid: `[0.25, 8.0]` at
+    /// [`DEFAULT_GRID_STEPS`] steps.
+    pub fn default_grid() -> ScaleGrid {
+        ScaleGrid::geometric(0.25, 8.0, DEFAULT_GRID_STEPS)
+    }
+
+    /// Number of distinct steps.
+    pub fn len(&self) -> usize {
+        self.q8.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.q8.is_empty()
+    }
+
+    /// The Q8.8 scale of `step` (panics out of range).
+    pub fn q8(&self, step: usize) -> u32 {
+        self.q8[step]
+    }
+
+    /// The real-valued scale of `step`.
+    pub fn scale(&self, step: usize) -> f64 {
+        self.q8[step] as f64 / 256.0
+    }
+
+    /// Smallest / largest representable scale — the exact clamp bounds
+    /// an [`EnergyController`](crate::coordinator::EnergyController)
+    /// snapped to this grid must use so its output is always on-grid.
+    pub fn min_scale(&self) -> f64 {
+        self.scale(0)
+    }
+
+    pub fn max_scale(&self) -> f64 {
+        self.scale(self.len() - 1)
+    }
+
+    /// Nearest grid step to a Q8.8 scale (out-of-range values clamp to
+    /// the end steps; exact midpoints round down). This is the one
+    /// place controller output becomes a cache key, so
+    /// `snap_q8(q8(s)) == s` for every step `s` by construction.
+    pub fn snap_q8(&self, q8: u32) -> usize {
+        match self.q8.binary_search(&q8) {
+            Ok(i) => i,
+            Err(0) => 0,
+            Err(i) if i == self.q8.len() => self.q8.len() - 1,
+            Err(i) => {
+                // Between steps i-1 and i: pick the nearer one.
+                let lo = self.q8[i - 1];
+                let hi = self.q8[i];
+                if q8 - lo <= hi - q8 {
+                    i - 1
+                } else {
+                    i
+                }
+            }
+        }
+    }
+}
+
+struct Entry {
+    plan: Arc<PlannedModel>,
+    last_used: u64,
+}
+
+struct Inner {
+    slots: HashMap<usize, Entry>,
+    /// Monotone use counter backing the LRU order.
+    tick: u64,
+    /// First plan ever compiled — pinned for the lifetime of the cache
+    /// as the donor of the shared (scale-invariant) linear tables, so
+    /// eviction can never force a full re-sort.
+    donor: Option<Arc<PlannedModel>>,
+}
+
+/// Interning cache of compiled plans keyed by [`ScaleGrid`] step.
+pub struct PlanCache {
+    q: QModel,
+    /// Template config; `t_scale_q8` is overwritten per step.
+    base_cfg: PlanConfig,
+    grid: ScaleGrid,
+    capacity: usize,
+    inner: Mutex<Inner>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl std::fmt::Debug for PlanCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PlanCache")
+            .field("model", &self.q.def.name)
+            .field("grid", &self.grid.len())
+            .field("capacity", &self.capacity)
+            .field("hits", &self.hits())
+            .field("misses", &self.misses())
+            .finish()
+    }
+}
+
+impl PlanCache {
+    /// A cache over `grid` for `q` under `cfg` (whose `t_scale_q8` is
+    /// ignored — each step supplies its own), holding up to the whole
+    /// grid.
+    pub fn new(q: QModel, cfg: PlanConfig, grid: ScaleGrid) -> PlanCache {
+        let capacity = grid.len();
+        PlanCache::with_capacity(q, cfg, grid, capacity)
+    }
+
+    /// As [`PlanCache::new`] with an explicit LRU capacity (≥ 1).
+    pub fn with_capacity(
+        q: QModel,
+        cfg: PlanConfig,
+        grid: ScaleGrid,
+        capacity: usize,
+    ) -> PlanCache {
+        PlanCache {
+            q,
+            base_cfg: cfg,
+            grid,
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner { slots: HashMap::new(), tick: 0, donor: None }),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    pub fn grid(&self) -> &ScaleGrid {
+        &self.grid
+    }
+
+    /// The plan for `step`, compiling (and interning) it on first
+    /// visit. Compilation happens under the cache lock: concurrent
+    /// lookups of the *same* step wait instead of compiling twice, and
+    /// misses are rare by design (≤ one per grid step per eviction).
+    pub fn plan_at(&self, step: usize) -> Arc<PlannedModel> {
+        assert!(step < self.grid.len(), "scale step {step} outside the grid");
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        if let Some(e) = inner.slots.get_mut(&step) {
+            e.last_used = tick;
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(&e.plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let cfg = PlanConfig { t_scale_q8: self.grid.q8(step), ..self.base_cfg };
+        let plan = Arc::new(PlannedModel::compile_shared(&self.q, cfg, inner.donor.as_deref()));
+        if inner.donor.is_none() {
+            inner.donor = Some(Arc::clone(&plan));
+        }
+        if inner.slots.len() >= self.capacity {
+            // Evict the least recently used step. (The donor stays
+            // pinned in `donor` even if its slot goes.)
+            let victim =
+                inner.slots.iter().min_by_key(|(_, e)| e.last_used).map(|(&k, _)| k);
+            if let Some(v) = victim {
+                inner.slots.remove(&v);
+            }
+        }
+        inner.slots.insert(step, Entry { plan: Arc::clone(&plan), last_used: tick });
+        plan
+    }
+
+    /// Compile every grid step (startup warm-up; also what the
+    /// keep-ratio calibration pass does implicitly).
+    pub fn warm(&self) {
+        for step in 0..self.grid.len().min(self.capacity) {
+            self.plan_at(step);
+        }
+    }
+
+    /// Steps currently resident.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivKind;
+    use crate::models::{zoo, Params};
+    use crate::pruning::Thresholds;
+
+    #[test]
+    fn grid_is_strictly_increasing_and_snap_roundtrips() {
+        let g = ScaleGrid::default_grid();
+        assert!(g.len() >= 2);
+        for s in 1..g.len() {
+            assert!(g.q8(s) > g.q8(s - 1), "grid not strictly increasing at {s}");
+        }
+        for s in 0..g.len() {
+            assert_eq!(g.snap_q8(g.q8(s)), s, "snap(q8({s})) != {s}");
+        }
+        // Out-of-range clamps to the ends.
+        assert_eq!(g.snap_q8(0), 0);
+        assert_eq!(g.snap_q8(1), 0);
+        assert_eq!(g.snap_q8(u32::MAX), g.len() - 1);
+    }
+
+    #[test]
+    fn snap_picks_the_nearest_step() {
+        let g = ScaleGrid::default_grid();
+        crate::util::prop::check(0x5CA1E, 300, |gen| {
+            let q8 = gen.u32_in(1, g.q8(g.len() - 1) + 512);
+            let s = g.snap_q8(q8);
+            let d = |step: usize| (g.q8(step) as i64 - q8 as i64).abs();
+            for other in 0..g.len() {
+                assert!(
+                    d(s) <= d(other),
+                    "snap({q8}) -> step {s} (q8 {}) but step {other} (q8 {}) is nearer",
+                    g.q8(s),
+                    g.q8(other)
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn degenerate_grids_are_safe() {
+        let g = ScaleGrid::geometric(1.0, 1.0, 10);
+        assert_eq!(g.len(), 1);
+        assert_eq!(g.snap_q8(0), 0);
+        assert_eq!(g.snap_q8(9999), 0);
+        let g = ScaleGrid::geometric(1.0, 1.001, 8); // rounds to one q8 value
+        assert!(g.len() <= 2);
+    }
+
+    fn q_for(name: &str, seed: u64) -> QModel {
+        let def = zoo(name);
+        let params = Params::random(&def, seed);
+        QModel::quantize(&def, &params)
+            .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.2))
+    }
+
+    /// Satellite property (a): a cache-served plan is bit-identical —
+    /// logits, counts, ledger — to a freshly compiled plan at the same
+    /// scale step, across the model zoo.
+    #[test]
+    fn cached_plans_bit_identical_to_fresh_compiles_across_zoo() {
+        // kws/widar compiles are heavy; probe them at one step each,
+        // sweep mnist/cifar more densely.
+        let cases: &[(&str, &[usize])] =
+            &[("mnist", &[0, 7, 13, 19]), ("cifar", &[3, 16]), ("kws", &[10])];
+        for &(name, steps) in cases {
+            let q = q_for(name, 0xCAFE + name.len() as u64);
+            let grid = ScaleGrid::default_grid();
+            let cache =
+                PlanCache::new(q.clone(), PlanConfig::unit(DivKind::Shift), grid.clone());
+            let def = zoo(name);
+            let x_f: Vec<f32> = (0..def.input_len())
+                .map(|i| (((i * 31) % 37) as f32 - 18.0) / 11.0)
+                .collect();
+            for &step in steps {
+                let cached = cache.plan_at(step);
+                let fresh = PlannedModel::compile(
+                    &q,
+                    PlanConfig {
+                        t_scale_q8: grid.q8(step),
+                        ..PlanConfig::unit(DivKind::Shift)
+                    },
+                );
+                let x = cached.quantize_input(&x_f);
+                let (mut sa, mut sb) = (cached.new_scratch(), fresh.new_scratch());
+                let (oa, ob) = (cached.infer(&x, &mut sa), fresh.infer(&x, &mut sb));
+                assert_eq!(oa.logits_raw, ob.logits_raw, "{name} step {step} logits");
+                assert_eq!(oa.kept, ob.kept, "{name} step {step} kept");
+                assert_eq!(oa.skipped, ob.skipped, "{name} step {step} skipped");
+                assert_eq!(oa.ledger.counts, ob.ledger.counts, "{name} step {step} counts");
+                assert_eq!(oa.ledger.compute_cycles, ob.ledger.compute_cycles);
+                assert_eq!(oa.ledger.mem_cycles, ob.ledger.mem_cycles);
+            }
+        }
+    }
+
+    #[test]
+    fn repeat_visits_hit_without_recompiling() {
+        let q = q_for("mnist", 77);
+        let cache = PlanCache::new(q, PlanConfig::unit(DivKind::Shift), ScaleGrid::default_grid());
+        let a = cache.plan_at(5);
+        assert_eq!((cache.hits(), cache.misses()), (0, 1));
+        let b = cache.plan_at(5);
+        assert!(Arc::ptr_eq(&a, &b), "hit returned a different plan");
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+        cache.plan_at(9);
+        cache.plan_at(5);
+        assert_eq!((cache.hits(), cache.misses()), (2, 2));
+    }
+
+    #[test]
+    fn lru_evicts_least_recent_and_recompiles_on_return() {
+        let q = q_for("mnist", 78);
+        let cache = PlanCache::with_capacity(
+            q,
+            PlanConfig::unit(DivKind::Shift),
+            ScaleGrid::default_grid(),
+            2,
+        );
+        cache.plan_at(0);
+        cache.plan_at(1);
+        cache.plan_at(0); // 1 is now LRU
+        cache.plan_at(2); // evicts 1
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 3);
+        cache.plan_at(0); // still resident
+        assert_eq!(cache.misses(), 3);
+        cache.plan_at(1); // evicted: recompile
+        assert_eq!(cache.misses(), 4);
+    }
+
+    #[test]
+    fn warm_fills_the_grid() {
+        let q = q_for("mnist", 79);
+        let grid = ScaleGrid::geometric(0.5, 2.0, 5);
+        let n = grid.len();
+        let cache = PlanCache::new(q, PlanConfig::unit(DivKind::Shift), grid);
+        cache.warm();
+        assert_eq!(cache.len(), n);
+        assert_eq!(cache.misses(), n as u64);
+    }
+}

@@ -52,9 +52,34 @@ impl EnergyController {
         }
     }
 
-    /// Current scale as the engine's Q8.8 knob.
+    /// Current scale as the engine's Q8.8 knob, clamped to
+    /// `[min_scale, max_scale]`. `observe` already clamps its updates,
+    /// but the *initial* scale (or one set before a `snap_to_grid`
+    /// re-bound) could sit outside the range — clamping at the read
+    /// guarantees the knob and the clamp bounds can never disagree,
+    /// which is what lets the plan cache treat this value as a key.
     pub fn t_scale_q8(&self) -> u32 {
-        (self.scale * 256.0).round().max(1.0) as u32
+        let s = self.scale.clamp(self.min_scale, self.max_scale);
+        (s * 256.0).round().max(1.0) as u32
+    }
+
+    /// Bind the controller to a quantized scale grid: `min_scale` /
+    /// `max_scale` become the grid's exact end steps and the current
+    /// scale is snapped onto a step, so from here on
+    /// `grid.snap_q8(self.t_scale_q8())` is always a valid step and
+    /// round-trips exactly at the bounds — controller output and
+    /// plan-cache keys cannot disagree.
+    pub fn snap_to_grid(&mut self, grid: &crate::control::ScaleGrid) {
+        self.min_scale = grid.min_scale();
+        self.max_scale = grid.max_scale();
+        let step = grid.snap_q8(self.t_scale_q8());
+        self.scale = grid.scale(step);
+    }
+
+    /// Force the scale to an exact value (clamped to the controller's
+    /// range) — the governor's feed-forward seeding path.
+    pub fn set_scale(&mut self, scale: f64) {
+        self.scale = scale.clamp(self.min_scale, self.max_scale);
     }
 
     pub fn scale(&self) -> f64 {
@@ -140,6 +165,42 @@ mod tests {
             c.observe(0.95);
         }
         assert_eq!(c.scale(), s);
+    }
+
+    /// Satellite: after `snap_to_grid`, controller output and
+    /// plan-cache keys can never disagree — every `t_scale_q8` the
+    /// controller emits snaps to a step whose Q8.8 value snaps back to
+    /// the same step, and the bounds round-trip exactly.
+    #[test]
+    fn grid_snapped_controller_round_trips_through_the_grid() {
+        use crate::control::ScaleGrid;
+        let grid = ScaleGrid::default_grid();
+        let mut c = EnergyController::new(1.0);
+        c.snap_to_grid(&grid);
+        // Bounds are exact grid steps.
+        assert_eq!(grid.snap_q8((c.min_scale * 256.0).round() as u32), 0);
+        assert_eq!(
+            grid.snap_q8((c.max_scale * 256.0).round() as u32),
+            grid.len() - 1
+        );
+        // Drive the controller hard in both directions; every reading
+        // must stay within the grid span and snap to a stable step.
+        let mut drive = |mj: f64, n: usize, c: &mut EnergyController| {
+            for _ in 0..n {
+                c.observe(mj);
+                let q8 = c.t_scale_q8();
+                assert!(q8 >= grid.q8(0) && q8 <= grid.q8(grid.len() - 1), "q8 {q8} off-grid");
+                let step = grid.snap_q8(q8);
+                assert_eq!(grid.snap_q8(grid.q8(step)), step, "snap not idempotent");
+            }
+        };
+        drive(100.0, 200, &mut c); // saturate high
+        assert_eq!(grid.snap_q8(c.t_scale_q8()), grid.len() - 1);
+        drive(1e-6, 400, &mut c); // saturate low
+        assert_eq!(grid.snap_q8(c.t_scale_q8()), 0);
+        // An out-of-range forced scale is clamped at the read.
+        c.set_scale(1e9);
+        assert!(c.t_scale_q8() <= grid.q8(grid.len() - 1));
     }
 
     #[test]

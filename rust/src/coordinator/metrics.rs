@@ -66,11 +66,19 @@ struct Inner {
     /// Dead (cancelled/expired) samples dropped by workers at dequeue
     /// — work that never occupied a shard.
     dropped: u64,
+    /// Window-overflow requests parked for admission on credit return
+    /// (instead of rejected) — nonzero only with a park queue enabled.
+    parked: u64,
     sessions_opened: u64,
     sessions_closed: u64,
     /// Requests currently admitted and not yet finished, across all
     /// sessions (gauge).
     inflight: i64,
+    /// Latest per-shard queued-cost gauges (estimated MACs awaiting
+    /// service per worker deque), published by
+    /// `Coordinator::publish_shard_costs` — the cost-weighted
+    /// placement imbalance view.
+    shard_costs: Vec<u64>,
 }
 
 /// Snapshot for reporting.
@@ -99,9 +107,12 @@ pub struct Snapshot {
     pub expired: u64,
     pub cancelled: u64,
     pub dropped: u64,
+    pub parked: u64,
     pub sessions_opened: u64,
     pub sessions_closed: u64,
     pub inflight: i64,
+    /// Latest per-shard queued-cost gauges (empty until published).
+    pub shard_costs: Vec<u64>,
 }
 
 fn percentile(sorted: &[u64], p: f64) -> u64 {
@@ -162,6 +173,17 @@ impl Metrics {
         self.inner.lock().unwrap().dropped += 1;
     }
 
+    /// A window-overflow request parked for later admission.
+    pub fn record_parked(&self) {
+        self.inner.lock().unwrap().parked += 1;
+    }
+
+    /// Publish the latest per-shard queued-cost gauges (replaces the
+    /// previous set; gauges, not counters).
+    pub fn record_shard_costs(&self, costs: &[u64]) {
+        self.inner.lock().unwrap().shard_costs = costs.to_vec();
+    }
+
     pub fn session_opened(&self) {
         self.inner.lock().unwrap().sessions_opened += 1;
     }
@@ -208,9 +230,11 @@ impl Metrics {
             expired: g.expired,
             cancelled: g.cancelled,
             dropped: g.dropped,
+            parked: g.parked,
             sessions_opened: g.sessions_opened,
             sessions_closed: g.sessions_closed,
             inflight: g.inflight,
+            shard_costs: g.shard_costs.clone(),
         }
     }
 }
@@ -278,14 +302,25 @@ mod tests {
         m.record_cancelled();
         m.record_dropped();
         m.record_dropped();
+        m.record_parked();
         m.inflight_delta(-1);
         m.session_closed();
         let s = m.snapshot();
         assert_eq!(
-            (s.rejected, s.expired, s.cancelled, s.dropped),
-            (1, 1, 1, 2)
+            (s.rejected, s.expired, s.cancelled, s.dropped, s.parked),
+            (1, 1, 1, 2, 1)
         );
         assert_eq!((s.sessions_opened, s.sessions_closed), (1, 1));
         assert_eq!(s.inflight, 1);
+    }
+
+    #[test]
+    fn shard_cost_gauges_replace_not_accumulate() {
+        let m = Metrics::new();
+        assert!(m.snapshot().shard_costs.is_empty());
+        m.record_shard_costs(&[10, 20, 30]);
+        assert_eq!(m.snapshot().shard_costs, vec![10, 20, 30]);
+        m.record_shard_costs(&[5, 0, 7]);
+        assert_eq!(m.snapshot().shard_costs, vec![5, 0, 7], "gauges must replace");
     }
 }

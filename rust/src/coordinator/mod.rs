@@ -31,5 +31,8 @@ pub use metrics::Metrics;
 pub use request::{
     BatchSink, CtlState, InferRequest, InferResponse, ReplyTo, RequestCtl, StreamSink,
 };
-pub use server::{BackendChoice, Coordinator, ServeConfig, SubmitError};
+pub use server::{
+    BackendChoice, Coordinator, CostEstimator, CostEstimatorSlot, EnergyTap, PlanSlot,
+    ServeConfig, SubmitError,
+};
 pub use shard::{Placement, ShardPool};

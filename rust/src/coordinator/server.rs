@@ -26,7 +26,7 @@
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, RwLock};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -96,6 +96,61 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// The atomically swappable active plan: workers re-read it at every
+/// dequeue, so the control plane's governor can retarget the whole
+/// pool to a different threshold scale **between requests** — no
+/// worker restart, no in-flight request ever sees a torn plan (each
+/// request runs start-to-finish on the `Arc` it picked up).
+///
+/// `RwLock<Arc<…>>` rather than a lock-free pointer because the read
+/// path is one uncontended `read()` + `Arc` clone per *request* —
+/// nanoseconds against a millisecond-scale inference — and std has no
+/// atomic `Arc` swap.
+#[derive(Debug)]
+pub struct PlanSlot {
+    cur: RwLock<Arc<PlannedModel>>,
+}
+
+impl PlanSlot {
+    pub fn new(plan: Arc<PlannedModel>) -> PlanSlot {
+        PlanSlot { cur: RwLock::new(plan) }
+    }
+
+    /// The currently active plan.
+    pub fn get(&self) -> Arc<PlannedModel> {
+        Arc::clone(&self.cur.read().unwrap())
+    }
+
+    /// Install `plan`; returns the one it replaced.
+    pub fn swap(&self, plan: Arc<PlannedModel>) -> Arc<PlannedModel> {
+        std::mem::replace(&mut *self.cur.write().unwrap(), plan)
+    }
+}
+
+/// Placement cost oracle the control plane can install over the
+/// built-in layer-0 extrapolation ([`PlannedModel::estimate_macs`]):
+/// given the active plan and a quantized sample, price its service
+/// cost in estimated MACs.
+pub trait CostEstimator: Send + Sync {
+    fn estimate(&self, plan: &PlannedModel, x_raw: &[i16]) -> u64;
+}
+
+/// The shared, swappable cost-oracle slot (`None` = use the plan's own
+/// estimate). The governor holds a clone and retargets it per plan
+/// swap.
+pub type CostEstimatorSlot = Arc<RwLock<Option<Arc<dyn CostEstimator>>>>;
+
+/// Per-request energy observer: workers report each McuSim inference's
+/// modeled ledger energy here (when installed). This is the governor's
+/// feedback input — implemented by `control::Governor`, which closes
+/// the budget loop by swapping the [`PlanSlot`].
+pub trait EnergyTap: Send + Sync {
+    fn observe(&self, energy_mj: f64);
+}
+
+/// The shared, swappable energy-observer slot workers read per request.
+type EnergyTapSlot = Arc<RwLock<Option<Arc<dyn EnergyTap>>>>;
+
 /// Request intake: the sharded pool (McuSim) or the executor channel
 /// (Pjrt, whose single thread batches dynamically). The channel sender
 /// sits behind a mutex so `close` works through `&self` — the serve
@@ -111,9 +166,18 @@ pub struct Coordinator {
     intake: Intake,
     handles: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
-    /// Compiled plan (McuSim backend) — the cost oracle for weighted
-    /// placement; `None` on the Pjrt backend.
-    plan: Option<Arc<PlannedModel>>,
+    /// Active-plan slot (McuSim backend) — cost oracle for weighted
+    /// placement and the control plane's swap point; `None` on the
+    /// Pjrt backend.
+    plan: Option<Arc<PlanSlot>>,
+    /// Optional control-plane cost oracle (profiled per-layer
+    /// estimates); `None` falls back to the plan's own
+    /// `estimate_macs`. Shared handle so the governor can retarget it
+    /// without holding the coordinator.
+    cost_est: CostEstimatorSlot,
+    /// Optional per-request energy observer (the governor's feedback
+    /// input), read by every McuSim worker after each inference.
+    energy_tap: EnergyTapSlot,
     /// Flat `C·H·W` sample length the backend expects (both backends
     /// know their model) — sessions validate wire requests against it
     /// so a wrong-length sample is an `Error` reply, not a worker
@@ -132,22 +196,29 @@ impl Coordinator {
             BackendChoice::McuSim { q, .. } => q.def.input_len(),
             BackendChoice::Pjrt { model, .. } => crate::models::zoo(model).input_len(),
         };
+        let energy_tap: EnergyTapSlot = Arc::new(RwLock::new(None));
         let (intake, handles, plan) = match backend {
             BackendChoice::McuSim { q, mode, div } => {
                 let workers = cfg.workers.max(1);
                 let pool = Arc::new(ShardPool::new(workers));
                 // Compile the execution plan once; workers share the
-                // packed tables (read-only) and own their scratch.
-                let plan = Arc::new(PlannedModel::compile(&q, PlanConfig::for_mode(mode, div)));
+                // packed tables (read-only) and own their scratch. The
+                // slot lets the control plane swap the plan at runtime
+                // (workers re-read it per dequeue).
+                let slot = Arc::new(PlanSlot::new(Arc::new(PlannedModel::compile(
+                    &q,
+                    PlanConfig::for_mode(mode, div),
+                ))));
                 let handles = (0..workers)
                     .map(|w| {
                         let pool = Arc::clone(&pool);
-                        let plan = Arc::clone(&plan);
+                        let slot = Arc::clone(&slot);
                         let metrics = Arc::clone(&metrics);
-                        std::thread::spawn(move || mcu_worker(w, pool, plan, metrics))
+                        let tap = Arc::clone(&energy_tap);
+                        std::thread::spawn(move || mcu_worker(w, pool, slot, metrics, tap))
                     })
                     .collect();
-                (Intake::Pool(pool), handles, Some(plan))
+                (Intake::Pool(pool), handles, Some(slot))
             }
             BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
                 let (tx, rx) = channel::<InferRequest>();
@@ -164,25 +235,70 @@ impl Coordinator {
             handles: Mutex::new(handles),
             next_id: AtomicU64::new(0),
             plan,
+            cost_est: Arc::new(RwLock::new(None)),
+            energy_tap,
             input_len,
             placement,
             metrics,
         }
     }
 
-    /// Price one sample for placement: the plan's per-sample MAC
-    /// estimate under cost-weighted placement, unit cost otherwise
-    /// (the Pjrt backend batches dynamically; its queue is one
-    /// channel). The quantized buffer the estimate needed rides along
-    /// in the request so the McuSim worker does not quantize again.
+    /// Price one sample for placement: the active plan's per-sample
+    /// MAC estimate under cost-weighted placement (via the installed
+    /// [`CostEstimator`] when the control plane calibrated one), unit
+    /// cost otherwise (the Pjrt backend batches dynamically; its queue
+    /// is one channel). The quantized buffer the estimate needed rides
+    /// along in the request so the McuSim worker does not quantize
+    /// again.
     fn price(&self, x: &[f32]) -> (u64, Option<Vec<i16>>) {
         match (&self.plan, self.placement) {
-            (Some(plan), Placement::CostWeighted) => {
+            (Some(slot), Placement::CostWeighted) => {
+                let plan = slot.get();
                 let xi = plan.quantize_input(x);
-                (plan.estimate_macs(&xi), Some(xi))
+                let est = self.cost_est.read().unwrap().clone();
+                let cost = match est {
+                    Some(e) => e.estimate(&plan, &xi),
+                    None => plan.estimate_macs(&xi),
+                };
+                (cost, Some(xi))
             }
             _ => (1, None),
         }
+    }
+
+    /// The active-plan slot (McuSim backend): the control plane's swap
+    /// point. `None` on the Pjrt backend.
+    pub fn plan_slot(&self) -> Option<Arc<PlanSlot>> {
+        self.plan.as_ref().map(Arc::clone)
+    }
+
+    /// Shared handle to the placement cost-oracle slot; the governor
+    /// retargets it on every plan swap.
+    pub fn cost_estimator_slot(&self) -> CostEstimatorSlot {
+        Arc::clone(&self.cost_est)
+    }
+
+    /// Install (or clear) the per-request energy observer the McuSim
+    /// workers report to.
+    pub fn set_energy_tap(&self, tap: Option<Arc<dyn EnergyTap>>) {
+        *self.energy_tap.write().unwrap() = tap;
+    }
+
+    /// Per-shard queued-cost gauges (estimated MACs awaiting service
+    /// per worker deque) — empty on the Pjrt backend. The observability
+    /// feed for cost-weighted placement imbalance.
+    pub fn shard_costs(&self) -> Vec<u64> {
+        match &self.intake {
+            Intake::Pool(pool) => pool.per_shard_costs(),
+            Intake::Chan(_) => Vec::new(),
+        }
+    }
+
+    /// Copy the current per-shard cost gauges into [`Metrics`] so they
+    /// appear in snapshots (called by reporting paths, not per
+    /// request).
+    pub fn publish_shard_costs(&self) {
+        self.metrics.record_shard_costs(&self.shard_costs());
     }
 
     /// Estimated service cost of one sample (see `price`).
@@ -356,11 +472,16 @@ impl Drop for Coordinator {
 fn mcu_worker(
     worker: usize,
     pool: Arc<ShardPool<InferRequest>>,
-    plan: Arc<PlannedModel>,
+    slot: Arc<PlanSlot>,
     metrics: Arc<Metrics>,
+    tap: EnergyTapSlot,
 ) {
     let energy = EnergyModel::default();
-    // Per-worker scratch arena: no allocation on the request path.
+    // Per-worker scratch arena: no allocation on the request path. The
+    // arena is re-sized only when the governor swaps the plan (same
+    // model ⇒ same sizes in practice, but a realloc per swap is cheap
+    // insurance against a differently shaped plan).
+    let mut plan = slot.get();
     let mut scratch = plan.new_scratch();
     while let Some(mut req) = pool.pop(worker) {
         // Tombstone drop: a cancelled/expired request is discarded at
@@ -369,6 +490,13 @@ fn mcu_worker(
         if req.ctl.as_ref().is_some_and(|c| c.is_dead()) {
             metrics.record_dropped();
             continue;
+        }
+        // Pick up the active plan for this request: the governor swaps
+        // the slot between requests, never under one.
+        let cur = slot.get();
+        if !Arc::ptr_eq(&cur, &plan) {
+            scratch = cur.new_scratch();
+            plan = cur;
         }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
@@ -400,7 +528,16 @@ fn mcu_worker(
             resp.energy_mj,
             resp.mcu_secs,
         );
+        let energy_mj = resp.energy_mj;
         req.reply.deliver(req.slot, resp);
+        // Feed the governor AFTER delivering the reply: a scale change
+        // (and a possible cache-miss compile) never sits between a
+        // finished inference and its client. Clone the Arc out of the
+        // lock so a slow observe holds no lock.
+        let observer = tap.read().unwrap().clone();
+        if let Some(observer) = observer {
+            observer.observe(energy_mj);
+        }
     }
 }
 

@@ -111,6 +111,14 @@ impl<T> ShardPool<T> {
         self.costs.iter().map(|c| c.load(Ordering::Relaxed)).sum()
     }
 
+    /// Per-shard queued-cost gauges, one entry per shard (approximate
+    /// while producers/consumers run) — the observability view behind
+    /// `Metrics::record_shard_costs`, so cost-weighted placement
+    /// imbalance is visible without poking individual shards.
+    pub fn per_shard_costs(&self) -> Vec<u64> {
+        self.costs.iter().map(|c| c.load(Ordering::Relaxed)).collect()
+    }
+
     /// Successful steals so far (a shard-imbalance observability knob).
     pub fn steal_count(&self) -> u64 {
         self.steals.load(Ordering::Relaxed)
@@ -481,6 +489,10 @@ mod tests {
         }
         assert_eq!(pool.queue_cost(), 1_000_000 + 900);
         assert_eq!(pool.queue_len(), 10);
+        let per = pool.per_shard_costs();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per.iter().sum::<u64>(), pool.queue_cost());
+        assert!(per.contains(&1_000_000), "loaded shard gauge missing: {per:?}");
     }
 
     /// Satellite property: under BOTH placement policies, any push

@@ -147,15 +147,14 @@ struct ConvPlan {
     charges: LayerCharges,
 }
 
-#[derive(Debug, Clone)]
-struct LinPlan {
-    n_in: usize,
-    n_out: usize,
-    relu: bool,
-    bias_acc: Vec<i64>,
-    requant_m: i64,
-    /// Effective layer threshold (already `t_scale_q8`-scaled).
-    t_eff: u32,
+/// The scale-invariant packed tables of one linear layer: the
+/// magnitude-sorted rows depend only on the weights, never on
+/// `t_scale_q8`, so every plan compiled for a different runtime scale
+/// of the same model can share one copy behind an `Arc` (the plan
+/// cache's "recompile only threshold-dependent tables" contract — for
+/// the KWS model this is 5.6 M entries shared across ~20 scale steps).
+#[derive(Debug)]
+struct LinTables {
     /// Per input row: the weight row sorted by descending `|w|`.
     sorted_w: Vec<i16>,
     /// `|w|` of `sorted_w` (the binary-search key).
@@ -165,6 +164,19 @@ struct LinPlan {
     /// Per input row: number of nonzero weights (prefix length, since
     /// zeros sort to the tail).
     nnz: Vec<u32>,
+}
+
+#[derive(Debug, Clone)]
+struct LinPlan {
+    n_in: usize,
+    n_out: usize,
+    relu: bool,
+    bias_acc: Vec<i64>,
+    requant_m: i64,
+    /// Effective layer threshold (already `t_scale_q8`-scaled) — the
+    /// only scale-dependent field of a linear plan.
+    t_eff: u32,
+    tables: Arc<LinTables>,
     charges: LayerCharges,
 }
 
@@ -210,6 +222,31 @@ impl PlannedModel {
     /// Compile `q` against `cfg`. One-time cost ~O(weights · log n_out);
     /// every subsequent [`infer`](Self::infer) reuses the packed tables.
     pub fn compile(q: &QModel, cfg: PlanConfig) -> PlannedModel {
+        PlannedModel::compile_shared(q, cfg, None)
+    }
+
+    /// Compile `q` against `cfg`, sharing scale-invariant tables with
+    /// `base` — a plan previously compiled from the **same model under
+    /// the same mode/div**, differing only in `t_scale_q8`.
+    ///
+    /// Linear layers' magnitude-sorted rows depend only on the weights,
+    /// so they are reused behind their `Arc` (no copy, no re-sort);
+    /// only the effective threshold `t_eff` is recomputed. Conv layers
+    /// are recompiled in full: their taps are *sorted by* the
+    /// scale-dependent threshold `w̄ = T·s/|w|`, so the table order
+    /// itself changes with the scale. The result is bit-identical to a
+    /// fresh [`PlannedModel::compile`] at the same `cfg` (property-
+    /// tested across the zoo in `control::plan_cache`).
+    pub fn compile_shared(
+        q: &QModel,
+        cfg: PlanConfig,
+        base: Option<&PlannedModel>,
+    ) -> PlannedModel {
+        if let Some(b) = base {
+            debug_assert_eq!(b.def.name, q.def.name, "shared compile across models");
+            debug_assert_eq!(b.cfg.mode, cfg.mode, "shared compile across modes");
+            debug_assert_eq!(b.cfg.div, cfg.div, "shared compile across div kinds");
+        }
         let div = cfg.div.build();
         let mut shape = q.def.input_shape;
         let input_len = q.def.input_len();
@@ -240,7 +277,12 @@ impl PlannedModel {
                         n_in,
                         "linear input size"
                     );
-                    let lp = compile_linear(ql, &cfg, n_in, n_out, relu);
+                    // Reuse the donor's sorted tables when sharing.
+                    let reuse = base.and_then(|b| match &b.layers[li] {
+                        LayerPlan::Linear(bl) => Some(Arc::clone(&bl.tables)),
+                        _ => None,
+                    });
+                    let lp = compile_linear(ql, &cfg, n_in, n_out, relu, reuse);
                     max_acc = max_acc.max(n_out);
                     max_act = max_act.max(n_out);
                     shape = [n_out, 1, 1];
@@ -411,8 +453,42 @@ impl PlannedModel {
         if matches!(self.cfg.mode, PruneMode::Dense | PruneMode::StaticSparse) {
             return static_total.max(1);
         }
-        let Some(first) = self.layers.first() else { return 1 };
+        if self.layers.is_empty() {
+            return 1;
+        }
+        let (kept0, total0) = self.layer0_exact_kept(x_raw);
+        if total0 == 0 {
+            return static_total.max(1);
+        }
+        let ratio = kept0 as f64 / total0 as f64;
+        let mut est = kept0;
+        for l in self.layers.iter().skip(1) {
+            let cap = layer_static_macs(l, self.cfg.mode);
+            est += ((cap as f64 * ratio).round() as u64).min(cap);
+        }
+        est.max(1)
+    }
+
+    /// Input-independent executed-MAC ceiling of every layer under this
+    /// plan's mode (exact for `Dense`/`StaticSparse`, the
+    /// all-activations-live ceiling otherwise) — the denominators the
+    /// control plane's calibrated keep-ratio curves are expressed over.
+    pub fn static_macs_per_layer(&self) -> Vec<u64> {
+        self.layers.iter().map(|l| layer_static_macs(l, self.cfg.mode)).collect()
+    }
+
+    /// Exact kept-MAC count of the **first** layer for `x_raw`, as
+    /// `(kept, ceiling)` — the input-density probe shared by
+    /// [`PlannedModel::estimate_macs`] and the control plane's
+    /// per-layer profiled estimator. For the input-independent modes
+    /// (`Dense`/`StaticSparse`) this is `(ceiling, ceiling)`.
+    pub fn layer0_exact_kept(&self, x_raw: &[i16]) -> (u64, u64) {
+        assert_eq!(x_raw.len(), self.input_len, "input length");
+        let Some(first) = self.layers.first() else { return (0, 0) };
         let total0 = layer_static_macs(first, self.cfg.mode);
+        if matches!(self.cfg.mode, PruneMode::Dense | PruneMode::StaticSparse) {
+            return (total0, total0);
+        }
         let kept0 = match first {
             LayerPlan::Conv(cp) => {
                 let mut kept = 0u64;
@@ -445,25 +521,17 @@ impl PlannedModel {
                             } else {
                                 self.div.div(lp.t_eff, (xv as i32).unsigned_abs())
                             };
-                            let abs_row = &lp.sorted_abs[k * lp.n_out..(k + 1) * lp.n_out];
+                            let abs_row =
+                                &lp.tables.sorted_abs[k * lp.n_out..(k + 1) * lp.n_out];
                             kept += abs_row.partition_point(|&a| a as u32 > tbar) as u64;
                         }
-                        _ => kept += lp.nnz[k] as u64,
+                        _ => kept += lp.tables.nnz[k] as u64,
                     }
                 }
                 kept
             }
         };
-        if total0 == 0 {
-            return static_total.max(1);
-        }
-        let ratio = kept0 as f64 / total0 as f64;
-        let mut est = kept0;
-        for l in self.layers.iter().skip(1) {
-            let cap = layer_static_macs(l, self.cfg.mode);
-            est += ((cap as f64 * ratio).round() as u64).min(cap);
-        }
-        est.max(1)
+        (kept0, total0)
     }
 }
 
@@ -488,7 +556,7 @@ fn layer_static_macs(lp: &LayerPlan, mode: PruneMode) -> u64 {
         },
         LayerPlan::Linear(lin) => match mode {
             PruneMode::Dense => (lin.n_in * lin.n_out) as u64,
-            _ => lin.nnz.iter().map(|&z| z as u64).sum(),
+            _ => lin.tables.nnz.iter().map(|&z| z as u64).sum(),
         },
     }
 }
@@ -717,32 +785,44 @@ fn compile_linear(
     n_in: usize,
     n_out: usize,
     relu: bool,
+    reuse: Option<Arc<LinTables>>,
 ) -> LinPlan {
     let t_eff = scaled_t(ql.t_raw, cfg.t_scale_q8);
-    let mut sorted_w = Vec::with_capacity(n_in * n_out);
-    let mut sorted_abs = Vec::with_capacity(n_in * n_out);
-    let mut sorted_idx = Vec::with_capacity(n_in * n_out);
-    let mut nnz = Vec::with_capacity(n_in);
-    let mut order: Vec<u16> = Vec::with_capacity(n_out);
-    for k in 0..n_in {
-        let row = &ql.w[k * n_out..(k + 1) * n_out];
-        order.clear();
-        order.extend(0..n_out as u16);
-        order.sort_by(|&a, &b| {
-            row[b as usize].unsigned_abs().cmp(&row[a as usize].unsigned_abs())
-        });
-        let mut nnz_k = 0u32;
-        for &j in &order {
-            let wv = row[j as usize];
-            sorted_w.push(wv as i16);
-            sorted_abs.push(wv.unsigned_abs() as u16);
-            sorted_idx.push(j);
-            if wv != 0 {
-                nnz_k += 1;
-            }
+    let tables = match reuse {
+        // The sorted tables are a pure function of the weights; a donor
+        // plan for the same model hands them over without a re-sort.
+        Some(t) => {
+            debug_assert_eq!(t.nnz.len(), n_in, "shared linear tables shape");
+            t
         }
-        nnz.push(nnz_k);
-    }
+        None => {
+            let mut sorted_w = Vec::with_capacity(n_in * n_out);
+            let mut sorted_abs = Vec::with_capacity(n_in * n_out);
+            let mut sorted_idx = Vec::with_capacity(n_in * n_out);
+            let mut nnz = Vec::with_capacity(n_in);
+            let mut order: Vec<u16> = Vec::with_capacity(n_out);
+            for k in 0..n_in {
+                let row = &ql.w[k * n_out..(k + 1) * n_out];
+                order.clear();
+                order.extend(0..n_out as u16);
+                order.sort_by(|&a, &b| {
+                    row[b as usize].unsigned_abs().cmp(&row[a as usize].unsigned_abs())
+                });
+                let mut nnz_k = 0u32;
+                for &j in &order {
+                    let wv = row[j as usize];
+                    sorted_w.push(wv as i16);
+                    sorted_abs.push(wv.unsigned_abs() as u16);
+                    sorted_idx.push(j);
+                    if wv != 0 {
+                        nnz_k += 1;
+                    }
+                }
+                nnz.push(nnz_k);
+            }
+            Arc::new(LinTables { sorted_w, sorted_abs, sorted_idx, nnz })
+        }
+    };
 
     let mut charges = LayerCharges::default();
     // bias preload
@@ -756,7 +836,7 @@ fn compile_linear(
     match cfg.mode {
         PruneMode::Dense => charges.fram_reads += (n_in * n_out) as u64,
         PruneMode::StaticSparse => {
-            charges.fram_reads += nnz.iter().map(|&z| z as u64).sum::<u64>()
+            charges.fram_reads += tables.nnz.iter().map(|&z| z as u64).sum::<u64>()
         }
         // ZeroSkip/Unit stream weights only for nonzero activations —
         // billed at runtime in infer().
@@ -774,10 +854,7 @@ fn compile_linear(
         bias_acc: ql.bias_acc.clone(),
         requant_m: ql.requant_m,
         t_eff,
-        sorted_w,
-        sorted_abs,
-        sorted_idx,
-        nnz,
+        tables,
         charges,
     }
 }
@@ -896,6 +973,7 @@ fn linear_exec(
     acc: &mut [i64],
 ) -> LinRun {
     let (n_in, n_out) = (lp.n_in, lp.n_out);
+    let t = &*lp.tables;
     let mut kept = 0u64;
     let mut live_rows = 0u64;
     let mut divs = 0u64;
@@ -908,8 +986,8 @@ fn linear_exec(
                 // exactly zero, so skipping the arithmetic is bit-identical.
                 if xv != 0 {
                     let xv64 = xv as i64;
-                    let row = &lp.sorted_w[k * n_out..(k + 1) * n_out];
-                    let idx = &lp.sorted_idx[k * n_out..(k + 1) * n_out];
+                    let row = &t.sorted_w[k * n_out..(k + 1) * n_out];
+                    let idx = &t.sorted_idx[k * n_out..(k + 1) * n_out];
                     for (w, &j) in row.iter().zip(idx) {
                         acc[j as usize] += xv64 * *w as i64;
                     }
@@ -920,12 +998,12 @@ fn linear_exec(
         PruneMode::StaticSparse => {
             for k in 0..n_in {
                 let xv = src[k];
-                let nz = lp.nnz[k] as usize;
+                let nz = t.nnz[k] as usize;
                 kept += nz as u64;
                 if xv != 0 {
                     let xv64 = xv as i64;
-                    let row = &lp.sorted_w[k * n_out..k * n_out + nz];
-                    let idx = &lp.sorted_idx[k * n_out..k * n_out + nz];
+                    let row = &t.sorted_w[k * n_out..k * n_out + nz];
+                    let idx = &t.sorted_idx[k * n_out..k * n_out + nz];
                     for (w, &j) in row.iter().zip(idx) {
                         acc[j as usize] += xv64 * *w as i64;
                     }
@@ -939,11 +1017,11 @@ fn linear_exec(
                     continue; // whole row skipped with one compare
                 }
                 live_rows += 1;
-                let nz = lp.nnz[k] as usize;
+                let nz = t.nnz[k] as usize;
                 kept += nz as u64;
                 let xv64 = xv as i64;
-                let row = &lp.sorted_w[k * n_out..k * n_out + nz];
-                let idx = &lp.sorted_idx[k * n_out..k * n_out + nz];
+                let row = &t.sorted_w[k * n_out..k * n_out + nz];
+                let idx = &t.sorted_idx[k * n_out..k * n_out + nz];
                 for (w, &j) in row.iter().zip(idx) {
                     acc[j as usize] += xv64 * *w as i64;
                 }
@@ -964,14 +1042,14 @@ fn linear_exec(
                     div_cycles += div.cycles(lp.t_eff, c);
                     div.div(lp.t_eff, c)
                 };
-                let abs_row = &lp.sorted_abs[k * n_out..(k + 1) * n_out];
+                let abs_row = &t.sorted_abs[k * n_out..(k + 1) * n_out];
                 // Eq. 2: keep iff |w| > x̄ — a prefix of the sorted row.
                 let cut = abs_row.partition_point(|&a| a as u32 > tbar);
                 kept += cut as u64;
                 if cut > 0 {
                     let xv64 = xv as i64;
-                    let row = &lp.sorted_w[k * n_out..k * n_out + cut];
-                    let idx = &lp.sorted_idx[k * n_out..k * n_out + cut];
+                    let row = &t.sorted_w[k * n_out..k * n_out + cut];
+                    let idx = &t.sorted_idx[k * n_out..k * n_out + cut];
                     for (w, &j) in row.iter().zip(idx) {
                         acc[j as usize] += xv64 * *w as i64;
                     }
@@ -1162,6 +1240,43 @@ mod tests {
         let ks: u64 = plan.infer(&sparse_x, &mut scratch).kept.iter().sum();
         assert!(kd > ks, "setup: dense sample must execute more MACs");
         assert!(ed > es, "estimate ordering disagrees: {ed} vs {es} (actual {kd} vs {ks})");
+    }
+
+    #[test]
+    fn shared_recompile_is_bit_identical_and_shares_linear_tables() {
+        // The plan cache's contract: a plan recompiled at a new scale
+        // with a donor's scale-invariant tables must be bit-identical
+        // to a fresh compile at that scale, while actually sharing the
+        // linear tables (no copy).
+        let def = zoo("mnist");
+        let params = Params::random(&def, 28);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let base_cfg = PlanConfig::unit(DivKind::Shift);
+        let base = PlannedModel::compile(&q, base_cfg);
+        let x = q.quantize_input(
+            &(0..def.input_len()).map(|i| ((i % 19) as f32 - 9.0) / 6.0).collect::<Vec<_>>(),
+        );
+        for scale in [64u32, 256, 700, 2048] {
+            let cfg = PlanConfig { t_scale_q8: scale, ..base_cfg };
+            let fresh = PlannedModel::compile(&q, cfg);
+            let shared = PlannedModel::compile_shared(&q, cfg, Some(&base));
+            let (mut sa, mut sb) = (fresh.new_scratch(), shared.new_scratch());
+            let (oa, ob) = (fresh.infer(&x, &mut sa), shared.infer(&x, &mut sb));
+            assert_eq!(oa.logits_raw, ob.logits_raw, "scale {scale} logits");
+            assert_eq!(oa.kept, ob.kept, "scale {scale} kept");
+            assert_eq!(oa.ledger.counts, ob.ledger.counts, "scale {scale} counts");
+            assert_eq!(oa.ledger.compute_cycles, ob.ledger.compute_cycles);
+            assert_eq!(oa.ledger.mem_cycles, ob.ledger.mem_cycles);
+            assert_eq!(fresh.estimate_macs(&x), shared.estimate_macs(&x));
+            let mut linear_seen = false;
+            for (ls, lb) in shared.layers.iter().zip(&base.layers) {
+                if let (LayerPlan::Linear(a), LayerPlan::Linear(b)) = (ls, lb) {
+                    assert!(Arc::ptr_eq(&a.tables, &b.tables), "tables copied, not shared");
+                    linear_seen = true;
+                }
+            }
+            assert!(linear_seen, "mnist plan must contain a linear layer");
+        }
     }
 
     #[test]

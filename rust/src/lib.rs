@@ -17,10 +17,12 @@
 //!   the fast division approximations ([`approx`]), synthetic datasets
 //!   ([`data`]), a PJRT runtime that loads the AOT artifacts
 //!   ([`runtime`]), a training driver ([`train`]), a serving
-//!   coordinator ([`coordinator`]), and a streamed TCP serving layer —
-//!   framed wire protocol, client sessions with backpressure, deadlines
-//!   and cancellation ([`serve`]). Python never runs on the request
-//!   path.
+//!   coordinator ([`coordinator`]), an adaptive control plane —
+//!   scale-indexed plan cache, per-layer keep-ratio calibration, and a
+//!   budget-driven governor ([`control`]) — and a streamed TCP serving
+//!   layer — framed wire protocol, client sessions with backpressure,
+//!   deadlines and cancellation ([`serve`]). Python never runs on the
+//!   request path.
 //!
 //! See `DESIGN.md` for the substitution ledger (paper testbed → simulated
 //! equivalent) and the experiment index, and `EXPERIMENTS.md` for
@@ -28,6 +30,7 @@
 
 pub mod approx;
 pub mod blas;
+pub mod control;
 pub mod coordinator;
 pub mod data;
 pub mod engine;

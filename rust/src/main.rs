@@ -5,16 +5,22 @@
 //! unit info                             # model zoo + cost model summary
 //! unit train  --model mnist --steps 400 # train via the AOT step artifact
 //! unit eval   --model mnist --div shift --percentile 20
+//! unit eval   --model mnist --adaptive --budget-mj 3.5   # budget sweep on the plan cache
 //! unit serve  --model mnist --requests 64 --workers 2 [--backend pjrt]
 //! unit serve  --listen 127.0.0.1:0 --workers 4   # streamed TCP serving
+//! unit serve  --listen 127.0.0.1:0 --budget-mj 4.0 --park 16  # adaptive + parked admission
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
 use anyhow::Result;
+use std::sync::Arc;
 use std::time::Duration;
 
 use unit_pruner::approx::DivKind;
-use unit_pruner::coordinator::{BackendChoice, Coordinator, Placement, ServeConfig};
+use unit_pruner::control::{calibrated_cache, Governor, ScaleGrid};
+use unit_pruner::coordinator::{
+    BackendChoice, Coordinator, EnergyController, Placement, ServeConfig,
+};
 use unit_pruner::data::{by_name, Sizes};
 use unit_pruner::serve::{ServeOpts, Server, SessionCfg};
 use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
@@ -209,6 +215,10 @@ fn cmd_eval(args: &Args) -> Result<()> {
     let qp = q.clone().with_thresholds(&th);
     let energy = EnergyModel::default();
 
+    if args.flag("adaptive") {
+        return cmd_eval_adaptive(args, &qp, &ds, div);
+    }
+
     let mut rows = Table::new(vec!["config", "accuracy", "MAC skipped", "mcu secs", "energy mJ"]);
     for (label, qm, mode) in [
         ("dense", &q, PruneMode::Dense),
@@ -245,6 +255,87 @@ fn cmd_eval(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `unit eval --adaptive [--budget-mj B] [--calib-samples N]`:
+/// budget-driven evaluation on the plan cache. Sweeps a set of budget
+/// phases (fractions of the measured dense energy, or a fixed
+/// `--budget-mj`), running the AIMD controller snapped to the default
+/// scale grid with every plan served from the cache — the in-process
+/// twin of `unit serve --budget-mj`.
+fn cmd_eval_adaptive(
+    args: &Args,
+    qp: &QModel,
+    ds: &unit_pruner::data::Dataset,
+    div: DivKind,
+) -> Result<()> {
+    let n_cal = ds.val.len().min(args.usize_or("calib-samples", 8));
+    let cal: Vec<Vec<f32>> = (0..n_cal).map(|i| ds.val.sample(i).to_vec()).collect();
+    let (cache, profile) = calibrated_cache(
+        qp.clone(),
+        PlanConfig::for_mode(PruneMode::Unit, div),
+        ScaleGrid::default_grid(),
+        &cal,
+    );
+    let energy = EnergyModel::default();
+
+    // Budget phases: fractions of the measured scale-1.0 energy, or
+    // one fixed budget when --budget-mj is given.
+    let base_step = cache.grid().snap_q8(256);
+    let base_mj = profile.mean_mj(base_step);
+    let fixed = args.f64_or("budget-mj", 0.0);
+    let phases: Vec<(String, f64)> = if fixed > 0.0 {
+        vec![(format!("{fixed} mJ"), fixed)]
+    } else {
+        [2.0, 1.0, 0.6, 0.35, 1.2]
+            .iter()
+            .map(|m| (format!("{m}x base"), base_mj * m))
+            .collect()
+    };
+
+    let mut ctrl = EnergyController::new(phases[0].1);
+    ctrl.snap_to_grid(cache.grid());
+    let steps_per_phase = args.usize_or("samples", 60);
+    let mut t = Table::new(vec![
+        "phase", "budget mJ", "mean mJ", "scale", "step", "mean skip %", "accuracy",
+    ]);
+    let mut idx = 0usize;
+    for (name, budget) in &phases {
+        ctrl.set_budget(*budget);
+        let (mut mj_sum, mut skip_sum, mut hits) = (0.0f64, 0.0f64, 0usize);
+        for _ in 0..steps_per_phase {
+            let i = idx % ds.test.len();
+            idx += 1;
+            let step = cache.grid().snap_q8(ctrl.t_scale_q8());
+            let plan = cache.plan_at(step);
+            let mut scratch = plan.new_scratch();
+            let out = plan.infer(&plan.quantize_input(ds.test.sample(i)), &mut scratch);
+            let mj = out.ledger.millijoules(&energy);
+            ctrl.observe(mj);
+            mj_sum += mj;
+            skip_sum += out.skip_fraction();
+            hits += (out.argmax() == ds.test.y[i]) as usize;
+        }
+        let n = steps_per_phase as f64;
+        t.row(vec![
+            name.clone(),
+            format!("{budget:.3}"),
+            format!("{:.3}", mj_sum / n),
+            format!("{:.2}x", ctrl.scale()),
+            format!("{}/{}", cache.grid().snap_q8(ctrl.t_scale_q8()), cache.grid().len()),
+            format!("{:.1}%", 100.0 * skip_sum / n),
+            format!("{:.1}%", 100.0 * hits as f64 / n),
+        ]);
+    }
+    println!("{}", t.render());
+    println!(
+        "plan cache: {} hits, {} misses over {} grid steps (calibration warmed the grid; \
+         every phase transition was cache-served)",
+        cache.hits(),
+        cache.misses(),
+        cache.grid().len()
+    );
+    Ok(())
+}
+
 /// `unit serve`: burst mode (`--requests N`, the in-process demo) or
 /// streamed TCP mode (`--listen ADDR`, the production front door).
 fn cmd_serve(args: &Args) -> Result<()> {
@@ -275,6 +366,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
     let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
 
+    // `--budget-mj B` (> 0) turns on budget-driven adaptive serving.
+    let budget_mj = args.f64_or("budget-mj", 0.0);
+    // Kept aside for the adaptive control plane: the governor's plan
+    // cache compiles from the same quantized model + mode/div. Cloned
+    // only when a governor will actually be installed.
+    let mut adaptive_src: Option<(QModel, PruneMode, DivKind)> = None;
     let choice = if backend == "pjrt" {
         BackendChoice::Pjrt {
             model: model.clone(),
@@ -284,11 +381,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
         }
     } else {
         let q = QModel::quantize(&def, &params).with_thresholds(&th);
-        BackendChoice::McuSim {
-            q,
-            mode: PruneMode::Unit,
-            div: DivKind::parse(args.get_or("div", "shift")).expect("div kind"),
+        let div = DivKind::parse(args.get_or("div", "shift")).expect("div kind");
+        if budget_mj > 0.0 {
+            adaptive_src = Some((q.clone(), PruneMode::Unit, div));
         }
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div }
     };
     let placement = match args.get_or("placement", "cost") {
         "two-choice" | "count" => Placement::TwoChoice,
@@ -304,8 +401,56 @@ fn cmd_serve(args: &Args) -> Result<()> {
         },
     );
 
+    // Adaptive serving: a plan cache over the default scale grid,
+    // per-layer keep-ratio curves calibrated on the validation split
+    // (which warms the cache), and the governor installed as the
+    // coordinator's energy tap.
+    let governor = if budget_mj > 0.0 {
+        match adaptive_src {
+            Some((q, mode, div)) => {
+                let n_cal = ds.val.len().min(args.usize_or("calib-samples", 8));
+                let cal: Vec<Vec<f32>> =
+                    (0..n_cal).map(|i| ds.val.sample(i).to_vec()).collect();
+                eprintln!(
+                    "[serve] calibrating keep-ratio curves over the scale grid \
+                     ({} samples)…",
+                    cal.len()
+                );
+                let (cache, profile) = calibrated_cache(
+                    q,
+                    PlanConfig::for_mode(mode, div),
+                    ScaleGrid::default_grid(),
+                    &cal,
+                );
+                match Governor::install(&coord, cache, Some(profile), budget_mj) {
+                    Ok(g) => {
+                        let s = g.status();
+                        println!(
+                            "[serve] adaptive governor on: budget {budget_mj} mJ, seeded at \
+                             scale {:.2}x (step {}/{})",
+                            s.scale_q8 as f64 / 256.0,
+                            s.step,
+                            s.steps_total
+                        );
+                        Some(g)
+                    }
+                    Err(e) => {
+                        eprintln!("[serve] adaptive governor unavailable: {e}");
+                        None
+                    }
+                }
+            }
+            None => {
+                eprintln!("[serve] --budget-mj needs the mcu backend; ignoring");
+                None
+            }
+        }
+    } else {
+        None
+    };
+
     if let Some(addr) = args.get("listen") {
-        return cmd_serve_listen(args, coord, addr);
+        return cmd_serve_listen(args, coord, governor, addr);
     }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_req)
@@ -341,23 +486,45 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "queue wait p50/p99 = {}/{} us, service p50/p99 = {}/{} us",
         snap.queue_p50_us, snap.queue_p99_us, snap.service_p50_us, snap.service_p99_us
     );
+    if let Some(g) = &governor {
+        let s = g.status();
+        println!(
+            "adaptive: scale {:.2}x (step {}/{}), ewma {:.3} mJ vs budget {:.3} mJ, \
+             {} swaps, plan cache {} hits / {} misses",
+            s.scale_q8 as f64 / 256.0,
+            s.step,
+            s.steps_total,
+            s.ewma_mj,
+            s.budget_mj,
+            s.swaps,
+            s.cache_hits,
+            s.cache_misses
+        );
+    }
     Ok(())
 }
 
-/// `unit serve --listen ADDR [--window N] [--deadline-ms D]
-/// [--max-conns C] [--serve-secs S] [--stats-secs T]`
+/// `unit serve --listen ADDR [--window N] [--park P] [--deadline-ms D]
+/// [--max-conns C] [--serve-secs S] [--stats-secs T] [--budget-mj B]`
 ///
-/// Streamed TCP serving: sessions with credit-window backpressure,
-/// deadlines, and cancellation over the framed wire protocol (see
-/// README "Streaming serving"). `--listen 127.0.0.1:0` binds an
-/// ephemeral port; the bound address is printed on one line so
-/// scripts/CI can scrape it. `--serve-secs 0` (default) serves until
-/// killed.
-fn cmd_serve_listen(args: &Args, coord: Coordinator, addr: &str) -> Result<()> {
+/// Streamed TCP serving: sessions with credit-window backpressure
+/// (window-overflow frames parked for credit-return admission when
+/// `--park` > 0), deadlines, and cancellation over the framed wire
+/// protocol (see README "Streaming serving" / "Adaptive serving").
+/// `--listen 127.0.0.1:0` binds an ephemeral port; the bound address
+/// is printed on one line so scripts/CI can scrape it. `--serve-secs
+/// 0` (default) serves until killed.
+fn cmd_serve_listen(
+    args: &Args,
+    coord: Coordinator,
+    governor: Option<Arc<Governor>>,
+    addr: &str,
+) -> Result<()> {
     let opts = ServeOpts {
         max_conns: args.usize_or("max-conns", 64),
         session: SessionCfg {
             max_inflight: args.usize_or("window", 64),
+            park: args.usize_or("park", 0),
             default_deadline: match args.u64_or("deadline-ms", 0) {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
@@ -365,6 +532,7 @@ fn cmd_serve_listen(args: &Args, coord: Coordinator, addr: &str) -> Result<()> {
             drain_timeout: Duration::from_secs(args.u64_or("drain-secs", 10)),
             ..Default::default()
         },
+        governor: governor.clone(),
     };
     let metrics = std::sync::Arc::clone(&coord.metrics);
     let server = Server::start(coord, addr, opts).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
@@ -385,16 +553,42 @@ fn cmd_serve_listen(args: &Args, coord: Coordinator, addr: &str) -> Result<()> {
         }
         if stats_secs > 0 && last_stats.elapsed() >= Duration::from_secs(stats_secs) {
             last_stats = std::time::Instant::now();
+            // Refresh the per-shard queued-cost gauges so placement
+            // imbalance is visible in the snapshot.
+            server.coordinator().publish_shard_costs();
             let s = metrics.snapshot();
+            let shard_cost_str = if s.shard_costs.is_empty() {
+                String::new()
+            } else {
+                let strs: Vec<String> =
+                    s.shard_costs.iter().map(|c| c.to_string()).collect();
+                format!(" shard-cost=[{}]", strs.join(","))
+            };
+            let adaptive_str = match &governor {
+                Some(g) => {
+                    let gs = g.status();
+                    format!(
+                        " scale={:.2}x step={}/{} ewma={:.3}mJ budget={:.3}mJ swaps={}",
+                        gs.scale_q8 as f64 / 256.0,
+                        gs.step,
+                        gs.steps_total,
+                        gs.ewma_mj,
+                        gs.budget_mj,
+                        gs.swaps
+                    )
+                }
+                None => String::new(),
+            };
             println!(
                 "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
-                 sessions={}/{} p50/p99={}/{}us",
+                 parked={} sessions={}/{} p50/p99={}/{}us{shard_cost_str}{adaptive_str}",
                 s.served,
                 s.inflight,
                 s.rejected,
                 s.expired,
                 s.cancelled,
                 s.dropped,
+                s.parked,
                 s.sessions_opened - s.sessions_closed,
                 s.sessions_opened,
                 s.p50_us,
@@ -408,8 +602,9 @@ fn cmd_serve_listen(args: &Args, coord: Coordinator, addr: &str) -> Result<()> {
     server.shutdown();
     let s = metrics.snapshot();
     println!(
-        "unit serve: done — served {} ({} rejected, {} expired, {} cancelled, {} dropped) over {} sessions",
-        s.served, s.rejected, s.expired, s.cancelled, s.dropped, s.sessions_opened
+        "unit serve: done — served {} ({} rejected, {} expired, {} cancelled, {} dropped, \
+         {} parked) over {} sessions",
+        s.served, s.rejected, s.expired, s.cancelled, s.dropped, s.parked, s.sessions_opened
     );
     Ok(())
 }

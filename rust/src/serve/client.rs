@@ -40,9 +40,37 @@ struct Pending {
     remaining: usize,
 }
 
+/// The adaptive governor's state as answered to a `SetBudget` frame.
+/// `scale_q8 == 0` means the server runs no adaptive control plane.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdminStats {
+    pub scale_q8: u32,
+    pub step: u32,
+    pub steps_total: u32,
+    pub budget_mj: f64,
+    pub ewma_mj: f64,
+    pub keep_ratio: f32,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub swaps: u64,
+}
+
+impl AdminStats {
+    /// Whether the server reported an attached adaptive governor.
+    pub fn adaptive(&self) -> bool {
+        self.scale_q8 != 0
+    }
+
+    /// The scale as a real value (0.0 when not adaptive).
+    pub fn scale(&self) -> f64 {
+        self.scale_q8 as f64 / 256.0
+    }
+}
+
 struct ClientShared {
     pending: Mutex<HashMap<u64, Pending>>,
     pongs: Mutex<HashMap<u64, Sender<()>>>,
+    stats: Mutex<HashMap<u64, Sender<AdminStats>>>,
     /// Server said goodbye (or the connection died).
     closed: AtomicBool,
     goodbye_tx: Mutex<Option<Sender<()>>>,
@@ -72,6 +100,7 @@ impl Client {
         let shared = Arc::new(ClientShared {
             pending: Mutex::new(HashMap::new()),
             pongs: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
             closed: AtomicBool::new(false),
             goodbye_tx: Mutex::new(Some(goodbye_tx)),
         });
@@ -211,6 +240,34 @@ impl Client {
         r
     }
 
+    /// Admin: set the server's adaptive energy budget (mJ/inference)
+    /// and return the governor's resulting state. Check
+    /// [`AdminStats::adaptive`] on the answer — a server without a
+    /// governor answers with the disabled shape instead of an error.
+    pub fn set_budget(&self, budget_mj: f64, timeout: Duration) -> std::io::Result<AdminStats> {
+        self.admin_roundtrip(budget_mj, timeout)
+    }
+
+    /// Admin: query the governor's state without changing the budget.
+    pub fn query_stats(&self, timeout: Duration) -> std::io::Result<AdminStats> {
+        self.admin_roundtrip(0.0, timeout)
+    }
+
+    fn admin_roundtrip(&self, budget_mj: f64, timeout: Duration) -> std::io::Result<AdminStats> {
+        let id = self.fresh_id();
+        let (tx, rx) = channel();
+        self.shared.stats.lock().unwrap().insert(id, tx);
+        if let Err(e) = self.send(&Frame::SetBudget { id, budget_mj }) {
+            self.shared.stats.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        let out = rx.recv_timeout(timeout).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "no Stats reply")
+        });
+        self.shared.stats.lock().unwrap().remove(&id);
+        out
+    }
+
     /// Liveness probe: true iff the server echoed within `timeout`.
     pub fn ping(&self, timeout: Duration) -> bool {
         let id = self.fresh_id();
@@ -284,6 +341,7 @@ fn reader_loop(mut stream: TcpStream, shared: Arc<ClientShared>) {
     drop(shared.goodbye_tx.lock().unwrap().take());
     shared.pending.lock().unwrap().clear();
     shared.pongs.lock().unwrap().clear();
+    shared.stats.lock().unwrap().clear();
 }
 
 fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
@@ -330,6 +388,32 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
                 let _ = tx.send(());
             }
         }
+        Frame::Stats {
+            id,
+            scale_q8,
+            step,
+            steps_total,
+            budget_mj,
+            ewma_mj,
+            keep_ratio,
+            cache_hits,
+            cache_misses,
+            swaps,
+        } => {
+            if let Some(tx) = shared.stats.lock().unwrap().remove(&id) {
+                let _ = tx.send(AdminStats {
+                    scale_q8,
+                    step,
+                    steps_total,
+                    budget_mj,
+                    ewma_mj,
+                    keep_ratio,
+                    cache_hits,
+                    cache_misses,
+                    swaps,
+                });
+            }
+        }
         Frame::Goodbye => {
             shared.closed.store(true, Ordering::Release);
             if let Some(tx) = shared.goodbye_tx.lock().unwrap().take() {
@@ -337,6 +421,7 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
             }
         }
         // Client-only frames from a server: ignore.
-        Frame::Request { .. } | Frame::Cancel { .. } | Frame::Ping { .. } => {}
+        Frame::Request { .. } | Frame::Cancel { .. } | Frame::Ping { .. }
+        | Frame::SetBudget { .. } => {}
     }
 }

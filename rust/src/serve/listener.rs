@@ -30,6 +30,7 @@ use std::time::Duration;
 
 use super::session::{spawn_session, Reaper, SessionCfg, SessionHandle};
 use super::wire::{self, Frame};
+use crate::control::Governor;
 use crate::coordinator::{Coordinator, Metrics};
 
 /// Listener configuration.
@@ -39,11 +40,17 @@ pub struct ServeOpts {
     /// frame and are closed immediately.
     pub max_conns: usize,
     pub session: SessionCfg,
+    /// Adaptive control plane, when the server runs one (built with
+    /// `Governor::install` on the same coordinator *before* the server
+    /// starts). Sessions answer `SetBudget`/`Stats` admin frames
+    /// through it; `None` answers them with the "adaptive control
+    /// disabled" Stats shape.
+    pub governor: Option<Arc<Governor>>,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_conns: 64, session: SessionCfg::default() }
+        ServeOpts { max_conns: 64, session: SessionCfg::default(), governor: None }
     }
 }
 
@@ -77,9 +84,13 @@ impl Server {
         let t_coord = Arc::clone(&coord);
         let t_reaper = Arc::clone(&reaper);
         let session_cfg = opts.session.clone();
+        let governor = opts.governor.clone();
         let max_conns = opts.max_conns.max(1);
         let accept_handle = std::thread::spawn(move || {
-            accept_loop(listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, max_conns)
+            accept_loop(
+                listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, governor,
+                max_conns,
+            )
         });
 
         Ok(Server {
@@ -150,6 +161,7 @@ impl Drop for Server {
     }
 }
 
+#[allow(clippy::too_many_arguments)]
 fn accept_loop(
     listener: TcpListener,
     stop: Arc<AtomicBool>,
@@ -157,6 +169,7 @@ fn accept_loop(
     coord: Arc<Coordinator>,
     reaper: Arc<Reaper>,
     session_cfg: SessionCfg,
+    governor: Option<Arc<Governor>>,
     max_conns: usize,
 ) {
     while !stop.load(Ordering::Acquire) {
@@ -194,6 +207,7 @@ fn accept_loop(
                     Arc::clone(&coord),
                     Arc::clone(&reaper),
                     session_cfg.clone(),
+                    governor.clone(),
                 ) {
                     Ok(handle) => guard.push(handle),
                     Err(e) => eprintln!("[serve] failed to start session: {e}"),

@@ -33,7 +33,7 @@ pub mod listener;
 pub mod session;
 pub mod wire;
 
-pub use client::{Client, WireResponse};
+pub use client::{AdminStats, Client, WireResponse};
 pub use listener::{ServeOpts, Server};
 pub use session::{Reaper, SessionCfg, SessionExit, SessionHandle};
 pub use wire::{Frame, FrameReader, Payload, Status, WireError, WHOLE_REQUEST};

@@ -6,7 +6,11 @@
 //! * an **in-flight window** — credit-based backpressure: at most
 //!   `max_inflight` admitted-and-unfinished requests per session; a
 //!   request arriving past the limit is answered immediately with a
-//!   `Rejected` status frame and never touches a shard;
+//!   `Rejected` status frame and never touches a shard — unless a
+//!   **park queue** is configured (`SessionCfg::park`), in which case
+//!   up to that many overflow requests wait FIFO and are admitted as
+//!   credits return (completion, cancel, expiry), their deadline
+//!   clocks still running from frame receipt;
 //! * **deadlines** — a per-request expiry registered with the shared
 //!   [`Reaper`] (one monotonic timer thread for the whole server, not
 //!   one per request). Expiry CASes the request's [`RequestCtl`] out of
@@ -29,7 +33,7 @@
 //! determines both the wire answer and the bookkeeping, so no outcome
 //! can be double-reported.
 
-use std::collections::{BTreeMap, BinaryHeap, HashMap};
+use std::collections::{BTreeMap, BinaryHeap, HashMap, VecDeque};
 use std::io::{Read, Write};
 use std::net::TcpStream;
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -38,14 +42,24 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
+use crate::control::Governor;
 use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
 
 /// Per-session configuration.
 #[derive(Debug, Clone)]
 pub struct SessionCfg {
     /// Credit window: max admitted-and-unfinished requests. Frames past
-    /// the limit are rejected (`Status::Rejected`), not parked.
+    /// the limit are parked (when `park > 0` and the park queue has
+    /// room) or rejected (`Status::Rejected`).
     pub max_inflight: usize,
+    /// Park-queue capacity for window-overflow requests: instead of an
+    /// immediate `Rejected`, up to this many overflow requests wait
+    /// (FIFO) and are admitted as in-flight credit returns — so a
+    /// well-behaved bursty client needs no client-side retry loop.
+    /// `0` (the default) keeps the original reject-on-overflow
+    /// behavior. A parked request's deadline clock keeps running from
+    /// frame receipt: parked time counts against it.
+    pub park: usize,
     /// Deadline applied when a request carries none (`None` = requests
     /// without an explicit deadline never expire).
     pub default_deadline: Option<Duration>,
@@ -66,6 +80,7 @@ impl Default for SessionCfg {
     fn default() -> SessionCfg {
         SessionCfg {
             max_inflight: 64,
+            park: 0,
             default_deadline: None,
             drain_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(5),
@@ -247,6 +262,22 @@ struct Inflight {
     ctl: Arc<RequestCtl>,
 }
 
+/// A validated window-overflow request waiting for in-flight credit.
+struct Parked {
+    id: u64,
+    deadline_ms: u32,
+    sample_len: usize,
+    data: wire::Payload,
+    /// Frame receipt time — the deadline clock's origin, so time spent
+    /// parked counts against the request's deadline.
+    t_recv: Instant,
+    /// Lifecycle control, created at receipt: the reaper's deadline
+    /// entry is registered against it immediately, so a parked request
+    /// whose deadline lapses gets its `Expired` frame promptly — not
+    /// whenever a credit happens to return.
+    ctl: Arc<RequestCtl>,
+}
+
 pub(crate) struct SessionShared {
     /// Write half (reads go through the session thread's own clone).
     /// A mutex serializes frames from N workers + the reaper + the
@@ -263,8 +294,18 @@ pub(crate) struct SessionShared {
     /// here; the session's own thread flushes (and eats any
     /// write_timeout stall itself).
     deferred: Mutex<Vec<(u64, Status)>>,
+    /// FIFO of validated window-overflow requests awaiting admission
+    /// (bounded by `cfg.park`; empty forever when parking is off).
+    park: Mutex<VecDeque<Parked>>,
     cfg: SessionCfg,
     coord: Arc<Coordinator>,
+    /// Shared deadline timer (one thread server-wide); held here so
+    /// credit-return admission can register parked requests' deadlines
+    /// from whichever thread frees the credit.
+    reaper: Arc<Reaper>,
+    /// Adaptive control plane, when the server runs one: the
+    /// `SetBudget`/`Stats` admin frames land here.
+    governor: Option<Arc<Governor>>,
     metrics: Arc<Metrics>,
 }
 
@@ -360,6 +401,8 @@ impl StreamSink for SessionSink {
             // the window bookkeeping.
             if self.ctl.complete() {
                 self.shared.finish(self.id);
+                // The freed credit may admit a parked request.
+                try_admit_parked(&self.shared);
             }
         }
     }
@@ -394,6 +437,7 @@ pub(crate) fn spawn_session(
     coord: Arc<Coordinator>,
     reaper: Arc<Reaper>,
     cfg: SessionCfg,
+    governor: Option<Arc<Governor>>,
 ) -> std::io::Result<SessionHandle> {
     let read_half = stream.try_clone()?;
     // Period between liveness checks of the draining/dead flags while
@@ -408,20 +452,19 @@ pub(crate) fn spawn_session(
         draining: AtomicBool::new(false),
         inflight: Mutex::new(HashMap::new()),
         deferred: Mutex::new(Vec::new()),
+        park: Mutex::new(VecDeque::new()),
         cfg,
         coord,
+        reaper,
+        governor,
         metrics,
     });
     let thread_shared = Arc::clone(&shared);
-    let join = std::thread::spawn(move || session_loop(thread_shared, read_half, reaper));
+    let join = std::thread::spawn(move || session_loop(thread_shared, read_half));
     Ok(SessionHandle { shared, join })
 }
 
-fn session_loop(
-    shared: Arc<SessionShared>,
-    mut read_half: TcpStream,
-    reaper: Arc<Reaper>,
-) -> SessionExit {
+fn session_loop(shared: Arc<SessionShared>, mut read_half: TcpStream) -> SessionExit {
     shared.metrics.session_opened();
     let mut reader = FrameReader::new();
     let mut buf = vec![0u8; 64 * 1024];
@@ -440,6 +483,10 @@ fn session_loop(
                 if !empty {
                     cancel_all(&shared);
                 }
+                // Parked overflow is never admitted during a drain:
+                // answer it Rejected (graceful-shutdown backpressure)
+                // before saying goodbye.
+                reject_parked(&shared);
                 // An expiry may have ended the drain after the flush at
                 // the top of this iteration; the reaper queues the
                 // Expired frame before emptying the window, so flushing
@@ -459,7 +506,7 @@ fn session_loop(
                 loop {
                     match reader.next() {
                         Ok(Some(frame)) => {
-                            if !handle_frame(&shared, &reaper, frame) {
+                            if !handle_frame(&shared, frame) {
                                 // Goodbye received: switch to draining;
                                 // keep reading so cancels still land.
                                 shared.draining.store(true, Ordering::Release);
@@ -491,11 +538,27 @@ fn session_loop(
 
 fn finish_session(shared: &Arc<SessionShared>, exit: SessionExit) -> SessionExit {
     // Whatever is still in flight dies with the connection: suppress
-    // replies, tombstone queued samples.
+    // replies, tombstone queued samples. Parked overflow is answered
+    // Rejected (a no-op write if the socket is already gone).
+    reject_parked(shared);
     cancel_all(shared);
     shared.dead.store(true, Ordering::Release);
     shared.metrics.session_closed();
     exit
+}
+
+/// Reject every parked request (drain/disconnect: parked work is never
+/// admitted once the session stops accepting). Session-thread only —
+/// it writes the socket.
+fn reject_parked(shared: &Arc<SessionShared>) {
+    let drained: Vec<Parked> = {
+        let mut park = shared.park.lock().unwrap();
+        park.drain(..).collect()
+    };
+    for p in drained {
+        shared.metrics.record_rejected();
+        shared.status_reply(p.id, Status::Rejected);
+    }
 }
 
 /// Write out status frames the reaper deferred to this session.
@@ -519,10 +582,10 @@ fn cancel_all(shared: &Arc<SessionShared>) {
 
 /// Process one frame; returns `false` when the frame was a client
 /// `Goodbye` (the caller switches the session into draining).
-fn handle_frame(shared: &Arc<SessionShared>, reaper: &Arc<Reaper>, frame: Frame) -> bool {
+fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
     match frame {
         Frame::Request { id, deadline_ms, sample_len, data } => {
-            handle_request(shared, reaper, id, deadline_ms, sample_len, data);
+            handle_request(shared, id, deadline_ms, sample_len, data);
             true
         }
         Frame::Cancel { id } => {
@@ -534,6 +597,25 @@ fn handle_frame(shared: &Arc<SessionShared>, reaper: &Arc<Reaper>, frame: Frame)
                 if ctl.cancel() {
                     shared.finish(id);
                     shared.metrics.record_cancelled();
+                    // The cancel returned a credit: a parked request
+                    // may now be admissible.
+                    try_admit_parked(shared);
+                }
+            } else {
+                // Cancelling a still-parked request drops it silently
+                // (same contract as cancelling queued work); the CAS
+                // keeps a racing expiry from double-reporting.
+                let parked_ctl = {
+                    let mut park = shared.park.lock().unwrap();
+                    match park.iter().position(|p| p.id == id) {
+                        Some(i) => park.remove(i).map(|p| p.ctl),
+                        None => None,
+                    }
+                };
+                if let Some(ctl) = parked_ctl {
+                    if ctl.cancel() {
+                        shared.metrics.record_cancelled();
+                    }
                 }
             }
             true
@@ -542,16 +624,55 @@ fn handle_frame(shared: &Arc<SessionShared>, reaper: &Arc<Reaper>, frame: Frame)
             shared.send(&Frame::Pong { id });
             true
         }
+        // Admin pair: adjust the adaptive budget (positive values) or
+        // just query; always answered with a Stats frame. Without a
+        // governor the reply carries `scale_q8 == 0` — "adaptive
+        // control disabled" — instead of an error, so probes are cheap.
+        Frame::SetBudget { id, budget_mj } => {
+            let stats = match &shared.governor {
+                Some(g) => {
+                    if budget_mj > 0.0 {
+                        g.set_budget(budget_mj);
+                    }
+                    let s = g.status();
+                    Frame::Stats {
+                        id,
+                        scale_q8: s.scale_q8,
+                        step: s.step as u32,
+                        steps_total: s.steps_total as u32,
+                        budget_mj: s.budget_mj,
+                        ewma_mj: s.ewma_mj,
+                        keep_ratio: s.keep_ratio as f32,
+                        cache_hits: s.cache_hits,
+                        cache_misses: s.cache_misses,
+                        swaps: s.swaps,
+                    }
+                }
+                None => Frame::Stats {
+                    id,
+                    scale_q8: 0,
+                    step: 0,
+                    steps_total: 0,
+                    budget_mj: 0.0,
+                    ewma_mj: 0.0,
+                    keep_ratio: 0.0,
+                    cache_hits: 0,
+                    cache_misses: 0,
+                    swaps: 0,
+                },
+            };
+            shared.send(&stats);
+            true
+        }
         Frame::Goodbye => false,
         // Server-only frames arriving from a client are ignored (they
         // framed correctly; dropping them is safer than hanging up).
-        Frame::Response { .. } | Frame::Pong { .. } => true,
+        Frame::Response { .. } | Frame::Pong { .. } | Frame::Stats { .. } => true,
     }
 }
 
 fn handle_request(
     shared: &Arc<SessionShared>,
-    reaper: &Arc<Reaper>,
     id: u64,
     deadline_ms: u32,
     sample_len: u32,
@@ -574,73 +695,204 @@ fn handle_request(
         shared.status_reply(id, Status::Error);
         return;
     }
-    let n_samples = data.len() / sample_len;
-
-    // Admission: credit window + unique id, decided under the window
-    // lock so concurrent requests cannot both squeeze in.
-    let ctl = RequestCtl::shared();
+    // Unique id across both the window and the park queue (a parked
+    // duplicate would otherwise collide with itself at admission).
     {
-        let mut window = shared.inflight.lock().unwrap();
-        if window.len() >= shared.cfg.max_inflight {
-            drop(window);
-            shared.metrics.record_rejected();
-            shared.status_reply(id, Status::Rejected);
-            return;
-        }
-        if window.contains_key(&id) {
-            drop(window);
+        let dup_window = shared.inflight.lock().unwrap().contains_key(&id);
+        let dup_park = shared.park.lock().unwrap().iter().any(|p| p.id == id);
+        if dup_window || dup_park {
             shared.status_reply(id, Status::Error);
             return;
         }
-        window.insert(id, Inflight { ctl: Arc::clone(&ctl) });
     }
-    shared.metrics.inflight_delta(1);
 
-    // Deadline: explicit beats the session default; 0 = none.
-    let deadline = if deadline_ms > 0 {
+    let ctl = RequestCtl::shared();
+    let t_recv = Instant::now();
+    let parked = Parked {
+        id,
+        deadline_ms,
+        sample_len,
+        data,
+        t_recv,
+        ctl: Arc::clone(&ctl),
+    };
+    // One park-lock hold covers the whole decide-then-park sequence
+    // (lock order park → window, same as try_admit_parked), so a
+    // credit returning concurrently either sees the queue before this
+    // frame or after it — the frame can neither strand unparked nor
+    // jump an older parked request (FIFO fairness: a new arrival lines
+    // up behind existing overflow instead of racing a freed credit
+    // past it).
+    let outcome = {
+        let mut park = shared.park.lock().unwrap();
+        if shared.cfg.park > 0 && !park.is_empty() {
+            park_or_reject(shared, &mut park, parked)
+        } else {
+            match admit_and_submit(shared, parked) {
+                Admit::Full(p) => park_or_reject(shared, &mut park, p),
+                other => other,
+            }
+        }
+    };
+    match outcome {
+        Admit::Ok => {
+            if let Some(d) = request_deadline(shared, deadline_ms) {
+                register_expiry(shared, id, &ctl, t_recv + d);
+            }
+        }
+        Admit::Parked => {
+            shared.metrics.record_parked();
+            // Registered at receipt, even while parked: the Expired
+            // frame is due at the deadline, not at the next credit
+            // return.
+            if let Some(d) = request_deadline(shared, deadline_ms) {
+                register_expiry(shared, id, &ctl, t_recv + d);
+            }
+        }
+        Admit::Full(p) => {
+            // Unreachable (park_or_reject consumes Full), kept total.
+            shared.metrics.record_rejected();
+            shared.status_reply(p.id, Status::Rejected);
+        }
+        Admit::Rejected(id) => {
+            shared.metrics.record_rejected();
+            shared.status_reply(id, Status::Rejected);
+        }
+        Admit::Dup(id) => shared.status_reply(id, Status::Error),
+    }
+}
+
+/// Outcome of one admission attempt.
+enum Admit {
+    /// Admitted and submitted (or consumed as already dead/lapsed).
+    Ok,
+    /// Window full: the request is handed back untouched.
+    Full(Parked),
+    /// Parked for credit-return admission.
+    Parked,
+    /// Park queue full too: reject (carries the id for the reply).
+    Rejected(u64),
+    /// The window already holds this id (carries it for the error
+    /// reply).
+    Dup(u64),
+}
+
+/// Park `p` if the queue has room (caller holds the park lock), else
+/// report rejection.
+fn park_or_reject(
+    shared: &Arc<SessionShared>,
+    park: &mut VecDeque<Parked>,
+    p: Parked,
+) -> Admit {
+    if park.len() < shared.cfg.park {
+        park.push_back(p);
+        Admit::Parked
+    } else {
+        Admit::Rejected(p.id)
+    }
+}
+
+/// Effective deadline of a request: explicit beats the session
+/// default; 0 = none. The clock runs from frame receipt, so time
+/// spent parked counts.
+fn request_deadline(shared: &SessionShared, deadline_ms: u32) -> Option<Duration> {
+    if deadline_ms > 0 {
         Some(Duration::from_millis(deadline_ms as u64))
     } else {
         shared.cfg.default_deadline
-    };
-    if let Some(d) = deadline {
-        let weak: Weak<SessionShared> = Arc::downgrade(shared);
-        // Weak captures only: a completed request must be reclaimable
-        // (heap compaction) before its deadline arrives.
-        let weak_ctl = Arc::downgrade(&ctl);
-        reaper.register(
-            Instant::now() + d,
-            &ctl,
-            Box::new(move || {
-                let Some(ctl) = weak_ctl.upgrade() else { return };
-                // Loser of the race against completion/cancel: usually
-                // a no-op — but if the request died somewhere that
-                // could not reach the session's window bookkeeping
-                // (e.g. an executor-side defensive drop), reclaim the
-                // credit here so it does not leak until disconnect.
-                if !ctl.expire() {
-                    if ctl.is_dead() {
-                        if let Some(shared) = weak.upgrade() {
-                            shared.finish(id);
-                        }
-                    }
-                    return;
-                }
-                if let Some(shared) = weak.upgrade() {
-                    shared.metrics.record_expired();
-                    // Never write the socket from the shared reaper
-                    // thread: defer the frame to this session's thread.
-                    // Queue BEFORE finish(id): the drain path exits once
-                    // the window is empty, and this order guarantees the
-                    // frame is already queued by then, so its final
-                    // flush cannot miss it.
-                    shared.deferred.lock().unwrap().push((id, Status::Expired));
-                    shared.finish(id);
-                }
-            }),
-        );
     }
+}
+
+/// Register a request's expiry with the shared reaper. The callback
+/// handles the request wherever it sits at fire time: a parked entry
+/// is removed from the queue, an admitted one has its credit
+/// reclaimed and its queued samples tombstoned — either way exactly
+/// one `Expired` frame is deferred to the session thread.
+fn register_expiry(shared: &Arc<SessionShared>, id: u64, ctl: &Arc<RequestCtl>, when: Instant) {
+    let weak: Weak<SessionShared> = Arc::downgrade(shared);
+    // Weak captures only: a completed request must be reclaimable
+    // (heap compaction) before its deadline arrives.
+    let weak_ctl = Arc::downgrade(ctl);
+    shared.reaper.register(
+        when,
+        ctl,
+        Box::new(move || {
+            let Some(ctl) = weak_ctl.upgrade() else { return };
+            // Loser of the race against completion/cancel: usually
+            // a no-op — but if the request died somewhere that
+            // could not reach the session's window bookkeeping
+            // (e.g. an executor-side defensive drop), reclaim the
+            // credit here so it does not leak until disconnect.
+            if !ctl.expire() {
+                if ctl.is_dead() {
+                    if let Some(shared) = weak.upgrade() {
+                        shared.finish(id);
+                        try_admit_parked(&shared);
+                    }
+                }
+                return;
+            }
+            if let Some(shared) = weak.upgrade() {
+                shared.metrics.record_expired();
+                // Never write the socket from the shared reaper
+                // thread: defer the frame to this session's thread.
+                // Queue BEFORE finish(id): the drain path exits once
+                // the window is empty, and this order guarantees the
+                // frame is already queued by then, so its final
+                // flush cannot miss it.
+                shared.deferred.lock().unwrap().push((id, Status::Expired));
+                // Wherever the request sits: drop it from the park
+                // queue (not yet admitted) and/or return its window
+                // credit.
+                shared.park.lock().unwrap().retain(|p| p.id != id);
+                shared.finish(id);
+                // Expiry returns a credit too.
+                try_admit_parked(&shared);
+            }
+        }),
+    );
+}
+
+/// Admit one validated request into the in-flight window and submit
+/// it: the shared tail of the direct path and credit-return admission.
+/// Callable from any thread — failures are reported through the
+/// session's deferred status queue, never by writing the socket here.
+fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
+    // Expired (or cancelled) while parked: the CAS winner already did
+    // the bookkeeping; just consume the entry.
+    if p.ctl.is_dead() {
+        return Admit::Ok;
+    }
+    // Deterministic lapse check: the reaper may not have fired yet for
+    // a deadline that passed in the park queue — racing a worker
+    // against it over already-dead work could serve a request past its
+    // deadline.
+    if let Some(d) = request_deadline(shared, p.deadline_ms) {
+        if p.t_recv.elapsed() >= d {
+            if p.ctl.expire() {
+                shared.metrics.record_expired();
+                shared.deferred.lock().unwrap().push((p.id, Status::Expired));
+            }
+            return Admit::Ok;
+        }
+    }
+    {
+        // Credit window + unique id, decided under the window lock so
+        // concurrent admissions cannot both squeeze in.
+        let mut window = shared.inflight.lock().unwrap();
+        if window.len() >= shared.cfg.max_inflight {
+            return Admit::Full(p);
+        }
+        if window.contains_key(&p.id) {
+            return Admit::Dup(p.id);
+        }
+        window.insert(p.id, Inflight { ctl: Arc::clone(&p.ctl) });
+    }
+    shared.metrics.inflight_delta(1);
+    let Parked { id, sample_len, data, ctl, .. } = p;
 
     let flat = data.into_f32();
+    let n_samples = flat.len() / sample_len;
     let xs: Vec<Vec<f32>> = flat.chunks_exact(sample_len).map(|c| c.to_vec()).collect();
     let sink = Arc::new(SessionSink {
         shared: Arc::clone(shared),
@@ -651,9 +903,49 @@ fn handle_request(
     });
     if shared.coord.submit_streamed(id, xs, ctl, sink).is_err() {
         // Pool closed under us (server shutting down): the ctl is
-        // already tombstoned by submit_streamed.
+        // already tombstoned by submit_streamed. Deferred rather than
+        // written here — this path can run on the reaper thread.
         shared.finish(id);
-        shared.status_reply(id, Status::Error);
+        shared.deferred.lock().unwrap().push((id, Status::Error));
+    }
+    Admit::Ok
+}
+
+/// Admit parked requests while in-flight credit is available. Called
+/// whenever a credit returns (completion, cancel, expiry). Any thread;
+/// never writes the socket.
+///
+/// The park lock is held across each admission attempt so concurrent
+/// credit returns admit in strict FIFO order. Lock order is
+/// park → window (via `admit_and_submit`); no other path nests these
+/// two, so the ordering is acyclic.
+fn try_admit_parked(shared: &Arc<SessionShared>) {
+    if shared.cfg.park == 0 {
+        return;
+    }
+    loop {
+        // No admissions during a drain: the session thread answers the
+        // remaining parked frames `Rejected` on its way out.
+        if shared.draining.load(Ordering::Acquire) {
+            return;
+        }
+        let mut park = shared.park.lock().unwrap();
+        let Some(p) = park.pop_front() else { return };
+        match admit_and_submit(shared, p) {
+            Admit::Ok => continue, // more credit may be free
+            Admit::Full(p) => {
+                // Lost the race for the credit: back to the front so
+                // FIFO order is preserved.
+                park.push_front(p);
+                return;
+            }
+            Admit::Dup(id) => {
+                shared.deferred.lock().unwrap().push((id, Status::Error));
+                continue;
+            }
+            // admit_and_submit never parks or rejects.
+            Admit::Parked | Admit::Rejected(_) => unreachable!(),
+        }
     }
 }
 

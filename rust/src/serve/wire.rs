@@ -17,7 +17,8 @@
 //! offset  size  field
 //! 0       4     magic   "UnIT"
 //! 4       2     version (little-endian, currently 1)
-//! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong 6=Goodbye)
+//! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
+//!               6=Goodbye 7=SetBudget 8=Stats)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
 //! 8       8     request id (u64 LE; client-chosen, echoed on replies)
 //! 16      …     type-specific payload (see below)
@@ -35,6 +36,16 @@
 //!   request-level statuses like Rejected/Expired), `predicted:u16`,
 //!   `queue_us:u32`, `service_us:u32`, `mac_skipped:f32`,
 //!   `n_logits:u32`, then the f32 logits.
+//! * **SetBudget** — `budget_mj:f64` (client → server). A value
+//!   `<= 0.0` changes nothing (pure stats query). The server answers
+//!   with a `Stats` frame echoing the id; when the server has no
+//!   adaptive governor attached, the answered `Stats` carries
+//!   `scale_q8 == 0`.
+//! * **Stats** — `scale_q8:u32` (0 ⇒ adaptive control disabled),
+//!   `step:u32`, `steps_total:u32`, `budget_mj:f64`, `ewma_mj:f64`,
+//!   `keep_ratio:f32`, `cache_hits:u64`, `cache_misses:u64`,
+//!   `swaps:u64` — the governor's scale/keep-ratio/budget state
+//!   (server → client, answering a `SetBudget`).
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
@@ -169,6 +180,31 @@ pub enum Frame {
     /// Either side: graceful drain-then-close. The server answers a
     /// client Goodbye with its own once in-flight work has drained.
     Goodbye,
+    /// Client → server (admin): change the adaptive energy budget
+    /// (mJ/inference); `budget_mj <= 0.0` is a pure stats query. The
+    /// server always answers with a [`Frame::Stats`] echoing `id`.
+    SetBudget { id: u64, budget_mj: f64 },
+    /// Server → client (admin): the adaptive governor's state.
+    /// `scale_q8 == 0` means no governor is attached (every other
+    /// field is then meaningless and zero).
+    Stats {
+        id: u64,
+        /// Active threshold scale in Q8.8 (256 = 1.0).
+        scale_q8: u32,
+        /// Active grid step and the grid's total step count.
+        step: u32,
+        steps_total: u32,
+        budget_mj: f64,
+        /// EWMA of observed per-request energy (mJ).
+        ewma_mj: f64,
+        /// Calibrated whole-model keep ratio at the active step (0
+        /// when no keep-ratio profile is attached).
+        keep_ratio: f32,
+        cache_hits: u64,
+        cache_misses: u64,
+        /// Plan swaps since the governor was installed.
+        swaps: u64,
+    },
 }
 
 impl Frame {
@@ -180,6 +216,8 @@ impl Frame {
             Frame::Ping { .. } => 4,
             Frame::Pong { .. } => 5,
             Frame::Goodbye => 6,
+            Frame::SetBudget { .. } => 7,
+            Frame::Stats { .. } => 8,
         }
     }
 
@@ -189,7 +227,9 @@ impl Frame {
             | Frame::Response { id, .. }
             | Frame::Cancel { id }
             | Frame::Ping { id }
-            | Frame::Pong { id } => *id,
+            | Frame::Pong { id }
+            | Frame::SetBudget { id, .. }
+            | Frame::Stats { id, .. } => *id,
             Frame::Goodbye => 0,
         }
     }
@@ -276,6 +316,9 @@ fn put_u64(out: &mut Vec<u8>, v: u64) {
 fn put_f32(out: &mut Vec<u8>, v: f32) {
     out.extend_from_slice(&v.to_le_bytes());
 }
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
 
 /// Encode `frame` including its length prefix — the exact bytes to put
 /// on the stream.
@@ -334,6 +377,31 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put_f32(&mut body, l);
             }
         }
+        Frame::SetBudget { budget_mj, .. } => {
+            put_f64(&mut body, *budget_mj);
+        }
+        Frame::Stats {
+            scale_q8,
+            step,
+            steps_total,
+            budget_mj,
+            ewma_mj,
+            keep_ratio,
+            cache_hits,
+            cache_misses,
+            swaps,
+            ..
+        } => {
+            put_u32(&mut body, *scale_q8);
+            put_u32(&mut body, *step);
+            put_u32(&mut body, *steps_total);
+            put_f64(&mut body, *budget_mj);
+            put_f64(&mut body, *ewma_mj);
+            put_f32(&mut body, *keep_ratio);
+            put_u64(&mut body, *cache_hits);
+            put_u64(&mut body, *cache_misses);
+            put_u64(&mut body, *swaps);
+        }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
     let crc = crc32(&body);
@@ -379,6 +447,9 @@ impl<'a> Cursor<'a> {
     }
     fn f32(&mut self, what: &'static str) -> Result<f32, WireError> {
         Ok(f32::from_le_bytes(self.take(4, what)?.try_into().unwrap()))
+    }
+    fn f64(&mut self, what: &'static str) -> Result<f64, WireError> {
+        Ok(f64::from_le_bytes(self.take(8, what)?.try_into().unwrap()))
     }
 }
 
@@ -474,6 +545,19 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
         4 => Frame::Ping { id },
         5 => Frame::Pong { id },
         6 => Frame::Goodbye,
+        7 => Frame::SetBudget { id, budget_mj: c.f64("budget_mj")? },
+        8 => Frame::Stats {
+            id,
+            scale_q8: c.u32("scale_q8")?,
+            step: c.u32("step")?,
+            steps_total: c.u32("steps_total")?,
+            budget_mj: c.f64("budget_mj")?,
+            ewma_mj: c.f64("ewma_mj")?,
+            keep_ratio: c.f32("keep_ratio")?,
+            cache_hits: c.u64("cache_hits")?,
+            cache_misses: c.u64("cache_misses")?,
+            swaps: c.u64("swaps")?,
+        },
         other => return Err(WireError::BadType(other)),
     };
     if c.pos != payload.len() {
@@ -582,6 +666,33 @@ mod tests {
         roundtrip(Frame::Ping { id: 1 });
         roundtrip(Frame::Pong { id: 1 });
         roundtrip(Frame::Goodbye);
+        roundtrip(Frame::SetBudget { id: 5, budget_mj: 3.25 });
+        roundtrip(Frame::SetBudget { id: 6, budget_mj: 0.0 }); // pure query
+        roundtrip(Frame::Stats {
+            id: 5,
+            scale_q8: 712,
+            step: 11,
+            steps_total: 20,
+            budget_mj: 3.25,
+            ewma_mj: 3.31,
+            keep_ratio: 0.41,
+            cache_hits: 190,
+            cache_misses: 12,
+            swaps: 17,
+        });
+        // "no governor" shape
+        roundtrip(Frame::Stats {
+            id: 9,
+            scale_q8: 0,
+            step: 0,
+            steps_total: 0,
+            budget_mj: 0.0,
+            ewma_mj: 0.0,
+            keep_ratio: 0.0,
+            cache_hits: 0,
+            cache_misses: 0,
+            swaps: 0,
+        });
     }
 
     #[test]

@@ -1,0 +1,296 @@
+//! Adaptive-serving acceptance tests (ISSUE 4):
+//!
+//! * a loopback client streams requests while the budget is lowered
+//!   mid-run; the governor raises the scale, the plan cache serves the
+//!   new scale without recompiling on repeat visits (hit counter
+//!   asserted), replies stay lossless/ordered, and logits at each
+//!   scale step are bit-identical to a single-shot run compiled at
+//!   that scale;
+//! * parked-frame admission (satellite): window-overflow requests wait
+//!   in the park queue and are admitted FIFO as credits return, with
+//!   deadlines still enforced from frame receipt.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{Governor, KeepProfile, PlanCache, ScaleGrid};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, Placement, ServeConfig};
+use unit_pruner::data::{mnist_like, Sizes};
+use unit_pruner::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg, Status, WHOLE_REQUEST};
+
+fn setup_q(seed: u64) -> QModel {
+    let def = zoo("mnist");
+    let params = Params::random(&def, seed);
+    QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.15))
+}
+
+struct AdaptiveRig {
+    server: Server,
+    cache: Arc<PlanCache>,
+    q: QModel,
+}
+
+fn start_adaptive(seed: u64, workers: usize, budget_mj: f64) -> AdaptiveRig {
+    let q = setup_q(seed);
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Exact },
+        ServeConfig { workers, placement: Placement::CostWeighted, ..Default::default() },
+    );
+    let cache = Arc::new(PlanCache::new(
+        q.clone(),
+        PlanConfig::unit(DivKind::Exact),
+        ScaleGrid::default_grid(),
+    ));
+    let def = zoo("mnist");
+    let cal: Vec<Vec<f32>> = (0..3)
+        .map(|s| {
+            (0..def.input_len())
+                .map(|i| (((i * 7 + s * 3) % 21) as f32 - 10.0) / 8.0)
+                .collect()
+        })
+        .collect();
+    let profile = Arc::new(KeepProfile::measure(&cache, &cal));
+    let governor = Governor::install(&coord, Arc::clone(&cache), Some(profile), budget_mj)
+        .expect("governor installs on mcu backend");
+    let server = Server::start(
+        coord,
+        "127.0.0.1:0",
+        ServeOpts { max_conns: 8, governor: Some(governor), ..Default::default() },
+    )
+    .expect("bind loopback");
+    AdaptiveRig { server, cache, q }
+}
+
+/// Drive singles until the governor's reported step stabilizes at
+/// `target` (saturation under an extreme budget), or panic after a
+/// bounded number of requests.
+fn drive_until_step(client: &Client, xs: &[Vec<f32>], target: u32, max_requests: usize) {
+    for r in 0..max_requests {
+        let x = &xs[r % xs.len()];
+        let (_id, rx) = client.submit(x, None).unwrap();
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(ev.status, Status::Ok, "warmup request failed");
+        let s = client.query_stats(Duration::from_secs(10)).unwrap();
+        if s.step == target {
+            return;
+        }
+    }
+    let s = client.query_stats(Duration::from_secs(10)).unwrap();
+    panic!("step never reached {target} within {max_requests} requests (at {})", s.step);
+}
+
+/// The ISSUE 4 acceptance test: budget lowered mid-run → scale rises,
+/// cache-served on repeat, lossless/ordered, bit-identical per step.
+#[test]
+fn budget_swing_end_to_end_is_cache_served_and_bit_identical() {
+    let rig = start_adaptive(51, 2, 1e9);
+    let grid = ScaleGrid::default_grid();
+    let max_step = (grid.len() - 1) as u32;
+    let client = Client::connect(rig.server.local_addr()).unwrap();
+    let probe = client.query_stats(Duration::from_secs(10)).unwrap();
+    assert!(probe.adaptive(), "governor not reported over the wire");
+    assert_eq!(probe.steps_total as usize, grid.len());
+
+    let ds = mnist_like::generate(21, Sizes { train: 2, val: 2, test: 10 });
+    let xs: Vec<Vec<f32>> = (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
+
+    // A plan compiled OUTSIDE the serving stack at a given step — the
+    // single-shot reference the wire replies must match bit-for-bit.
+    let reference = |step: u32| {
+        PlannedModel::compile(
+            &rig.q,
+            PlanConfig { t_scale_q8: grid.q8(step as usize), ..PlanConfig::unit(DivKind::Exact) },
+        )
+    };
+    let assert_batch_matches = |step: u32| {
+        let reference = reference(step);
+        let mut scratch = reference.new_scratch();
+        let (_id, rx) = client.submit_batch(&xs, None).unwrap();
+        for (slot, x) in xs.iter().enumerate() {
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(ev.status, Status::Ok, "step {step} slot {slot}");
+            assert_eq!(ev.slot as usize, slot, "step {step}: sub-replies out of order");
+            let direct = reference.infer(&reference.quantize_input(x), &mut scratch);
+            assert_eq!(
+                ev.logits, direct.logits,
+                "step {step} slot {slot}: logits differ from single-shot compile"
+            );
+            assert_eq!(ev.predicted as usize, direct.argmax(), "step {step} slot {slot}");
+        }
+        // The governor observed the batch under an extreme budget, so
+        // the step must not have moved off saturation.
+        let s = client.query_stats(Duration::from_secs(10)).unwrap();
+        assert_eq!(s.step, step, "step moved mid-batch despite a saturating budget");
+        assert_eq!(s.scale_q8, grid.q8(step as usize), "reported scale off-grid");
+    };
+
+    // Phase 1 — generous budget: saturate at the minimum step, then a
+    // batch must be lossless, ordered, and bit-identical to a fresh
+    // compile at that step.
+    client.set_budget(1e9, Duration::from_secs(10)).unwrap();
+    drive_until_step(&client, &xs, 0, 300);
+    assert_batch_matches(0);
+
+    // Phase 2 — budget lowered mid-run to starvation: the governor
+    // must raise the scale to the top step; same guarantees there.
+    client.set_budget(1e-9, Duration::from_secs(10)).unwrap();
+    drive_until_step(&client, &xs, max_step, 600);
+    assert_batch_matches(max_step);
+    let after_up = client.query_stats(Duration::from_secs(10)).unwrap();
+    assert!(after_up.swaps > 0, "no plan swaps during the budget swing");
+
+    // Phase 3 — relief: walk back down. Every step on the way down was
+    // compiled on the way up, so the cache must serve the walk hit-only
+    // (miss counter frozen, hit counter growing).
+    let misses_before = after_up.cache_misses;
+    let hits_before = after_up.cache_hits;
+    client.set_budget(1e9, Duration::from_secs(10)).unwrap();
+    drive_until_step(&client, &xs, 0, 600);
+    let s = client.query_stats(Duration::from_secs(10)).unwrap();
+    assert_eq!(
+        s.cache_misses, misses_before,
+        "revisited scale steps were recompiled instead of cache-served"
+    );
+    assert!(s.cache_hits > hits_before, "walk-down produced no cache hits");
+    // Local cache handle agrees with the wire-reported counters.
+    assert_eq!(rig.cache.hits(), s.cache_hits);
+    assert_eq!(rig.cache.misses(), s.cache_misses);
+
+    assert!(client.goodbye(Duration::from_secs(10)));
+    let snap = rig.server.metrics().snapshot();
+    assert_eq!(snap.rejected + snap.expired + snap.cancelled, 0, "lossy run");
+    rig.server.shutdown();
+}
+
+/// A server without a governor answers admin frames with the disabled
+/// shape instead of an error.
+#[test]
+fn set_budget_without_governor_reports_disabled() {
+    let q = setup_q(52);
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+        ServeConfig { workers: 1, ..Default::default() },
+    );
+    let server =
+        Server::start(coord, "127.0.0.1:0", ServeOpts::default()).expect("bind loopback");
+    let client = Client::connect(server.local_addr()).unwrap();
+    let s = client.set_budget(5.0, Duration::from_secs(10)).unwrap();
+    assert!(!s.adaptive());
+    assert_eq!(s.scale_q8, 0);
+    drop(client);
+    server.shutdown();
+}
+
+// ---------------------------------------------------------------------------
+// Parked-frame admission (satellite)
+
+fn start_parked(
+    seed: u64,
+    workers: usize,
+    window: usize,
+    park: usize,
+) -> (Server, Vec<Vec<f32>>) {
+    let q = setup_q(seed);
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+        ServeConfig { workers, ..Default::default() },
+    );
+    let server = Server::start(
+        coord,
+        "127.0.0.1:0",
+        ServeOpts {
+            max_conns: 4,
+            session: SessionCfg { max_inflight: window, park, ..Default::default() },
+            governor: None,
+        },
+    )
+    .expect("bind loopback");
+    let ds = mnist_like::generate(22, Sizes { train: 2, val: 2, test: 8 });
+    let xs = (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
+    (server, xs)
+}
+
+/// Overflow requests are parked (no Rejected frame), admitted FIFO on
+/// credit return, and complete normally; overflow past the park bound
+/// still rejects.
+#[test]
+fn parked_overflow_admitted_on_credit_return() {
+    let (server, xs) = start_parked(53, 1, 1, 3);
+    let client = Client::connect(server.local_addr()).unwrap();
+    // Occupy the window-of-1 with a long batch on the single worker.
+    let big: Vec<Vec<f32>> = (0..48).map(|i| xs[i % xs.len()].clone()).collect();
+    let (_ib, rx_big) = client.submit_batch(&big, None).unwrap();
+    // Three singles overflow the window into the park queue…
+    let parked_rxs: Vec<_> =
+        (0..3).map(|i| client.submit(&xs[i], None).unwrap().1).collect();
+    // …and a fourth overflows the park bound: immediate rejection.
+    let (_ir, rx_rej) = client.submit(&xs[3], None).unwrap();
+    let ev = rx_rej.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!((ev.status, ev.slot), (Status::Rejected, WHOLE_REQUEST));
+    // The batch drains; every parked request is then admitted and
+    // completes with a real result — no client-side retry loop.
+    for slot in 0..big.len() {
+        let ev = rx_big.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+    }
+    for (i, rx) in parked_rxs.iter().enumerate() {
+        let ev = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(ev.status, Status::Ok, "parked request {i} failed");
+        assert_eq!(ev.slot, 0);
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.parked, 3, "park admissions miscounted");
+    assert_eq!(snap.rejected, 1, "park-bound overflow must still reject");
+    assert_eq!(snap.served, big.len() as u64 + 3);
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// A deadline keeps running while parked: a request that cannot be
+/// admitted before its deadline comes back `Expired`, not `Ok`.
+#[test]
+fn parked_request_deadline_runs_from_receipt() {
+    let (server, xs) = start_parked(54, 1, 1, 4);
+    let client = Client::connect(server.local_addr()).unwrap();
+    let big: Vec<Vec<f32>> = (0..96).map(|i| xs[i % xs.len()].clone()).collect();
+    let (_ib, rx_big) = client.submit_batch(&big, None).unwrap();
+    // Parked behind ~96 samples on one worker with a 1 ms deadline:
+    // expired long before a credit returns.
+    let (_ie, rx_exp) = client.submit(&xs[0], Some(Duration::from_millis(1))).unwrap();
+    let ev = rx_exp.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!((ev.status, ev.slot), (Status::Expired, WHOLE_REQUEST));
+    for slot in 0..big.len() {
+        let ev = rx_big.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+    }
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.expired, 1);
+    assert_eq!(snap.served, big.len() as u64, "the expired request must not be served");
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Draining a session with parked work answers it `Rejected` before
+/// the goodbye — parked frames are never silently dropped.
+#[test]
+fn drain_rejects_parked_work() {
+    let (server, xs) = start_parked(55, 1, 1, 4);
+    let client = Client::connect(server.local_addr()).unwrap();
+    let big: Vec<Vec<f32>> = (0..64).map(|i| xs[i % xs.len()].clone()).collect();
+    let (_ib, rx_big) = client.submit_batch(&big, None).unwrap();
+    let (_ip, rx_parked) = client.submit(&xs[0], None).unwrap();
+    // Shut the server down while the single sits parked. The drain
+    // completes the in-flight batch, then rejects the parked frame.
+    let t = std::thread::spawn(move || server.shutdown());
+    for slot in 0..big.len() {
+        let ev = rx_big.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!((ev.status, ev.slot as usize), (Status::Ok, slot));
+    }
+    let ev = rx_parked.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!((ev.status, ev.slot), (Status::Rejected, WHOLE_REQUEST));
+    t.join().expect("shutdown panicked");
+}

@@ -37,7 +37,7 @@ use unit_pruner::util::prop::{check, Gen};
 // Part 1: codec properties
 
 fn arbitrary_frame(g: &mut Gen) -> Frame {
-    match g.usize_in(0, 5) {
+    match g.usize_in(0, 7) {
         0 => {
             let sample_len = g.usize_in(1, 32);
             let n_samples = g.usize_in(1, 5);
@@ -73,6 +73,24 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
         2 => Frame::Cancel { id: g.u32_in(0, u32::MAX - 1) as u64 },
         3 => Frame::Ping { id: g.u32_in(0, u32::MAX - 1) as u64 },
         4 => Frame::Pong { id: g.u32_in(0, u32::MAX - 1) as u64 },
+        5 => Frame::SetBudget {
+            id: g.u32_in(0, u32::MAX - 1) as u64,
+            // Finite values only: NaN would break the equality check,
+            // and the protocol treats <= 0.0 as a pure query anyway.
+            budget_mj: g.f32_in(0.0, 1000.0) as f64,
+        },
+        6 => Frame::Stats {
+            id: g.u32_in(0, u32::MAX - 1) as u64,
+            scale_q8: g.u32_in(0, 4096),
+            step: g.u32_in(0, 64),
+            steps_total: g.u32_in(0, 64),
+            budget_mj: g.f32_in(0.0, 1000.0) as f64,
+            ewma_mj: g.f32_in(0.0, 1000.0) as f64,
+            keep_ratio: g.f32_in(0.0, 1.0),
+            cache_hits: g.u32_in(0, u32::MAX - 1) as u64,
+            cache_misses: g.u32_in(0, u32::MAX - 1) as u64,
+            swaps: g.u32_in(0, u32::MAX - 1) as u64,
+        },
         _ => Frame::Goodbye,
     }
 }
@@ -167,7 +185,7 @@ fn start_server(q: QModel, workers: usize, session: SessionCfg) -> Server {
         BackendChoice::McuSim { q, mode: PruneMode::Unit, div },
         ServeConfig { workers, placement: Placement::CostWeighted, ..Default::default() },
     );
-    Server::start(coord, "127.0.0.1:0", ServeOpts { max_conns: 8, session })
+    Server::start(coord, "127.0.0.1:0", ServeOpts { max_conns: 8, session, governor: None })
         .expect("bind loopback")
 }
 
