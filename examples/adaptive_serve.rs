@@ -105,6 +105,7 @@ fn main() -> Result<()> {
         &[("generous", 3.0), ("tight", 0.5), ("starved", 0.05), ("relief", 3.0)];
     let mut t = Table::new(vec![
         "phase", "budget mJ", "scale", "step", "ewma mJ", "swaps", "cache hit/miss",
+        "bg pend/comp/upg",
     ]);
     let mut violations = 0usize;
     let mut steps_seen = Vec::new();
@@ -138,6 +139,7 @@ fn main() -> Result<()> {
             format!("{:.3}", s.ewma_mj),
             s.swaps.to_string(),
             format!("{}/{}", s.cache_hits, s.cache_misses),
+            format!("{}/{}/{}", s.bg_pending, s.bg_compiled, s.bg_upgrades),
         ]);
         steps_seen.push(s.step);
         misses_seen.push(s.cache_misses);

@@ -3,14 +3,23 @@
 //! Three rows per model, in descending cost:
 //!
 //! * **full compile** — `PlannedModel::compile` from scratch (sorts
-//!   every linear row): what a naive "recompile on scale change"
-//!   serving loop would pay per controller move;
-//! * **shared recompile** — `compile_shared` against a donor plan
-//!   (linear tables reused behind an `Arc`, only conv tables and
-//!   `t_eff` rebuilt): the plan cache's miss cost;
+//!   every linear row and every conv segment): what a naive
+//!   "recompile on scale change" serving loop would pay per
+//!   controller move;
+//! * **cut-table stamp** — `compile_shared` against a donor plan
+//!   (linear tables *and* conv tap/lane tables reused behind `Arc`s;
+//!   only the conv cut tables — stamped `w̄` + `always`/`live`
+//!   prefix lengths — and the linear `t_eff` scalars rebuilt): the
+//!   plan cache's miss cost, now `n` divisions with **no sorting**;
 //! * **cache-hit swap** — `PlanCache::plan_at` on a resident step plus
 //!   the `PlanSlot` swap: the steady-state cost of a budget move, which
 //!   is what the serve path pays once the grid is warm.
+//!
+//! The remaining misses don't even run on the serve path: the
+//! governor's background compile thread stamps them while the pool
+//! serves the nearest resident plan (`benches/perf_hotpath.rs`
+//! measures that miss→upgrade latency into `BENCH_perf.json`, section
+//! `plan_compile_us`).
 //!
 //! Standalone observability bench (not part of the `BENCH_perf.json`
 //! ratio gate): absolute compile times are machine-dependent. Set
@@ -46,7 +55,7 @@ fn main() {
     let mut t = Table::new(vec![
         "model",
         "full compile us",
-        "shared recompile us",
+        "cut-table stamp us",
         "cache-hit swap us",
         "hit speedup",
     ]);

@@ -22,16 +22,20 @@
 //! fewer repetitions).
 
 use std::hint::black_box;
+use std::sync::Arc;
 use std::time::Instant;
 
 use unit_pruner::approx::DivKind;
-use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::control::{Governor, PlanCache, ScaleGrid};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, EnergyTap, PlanSlot, ServeConfig};
 use unit_pruner::data::{mnist_like, Sizes};
-use unit_pruner::engine::{infer, EngineConfig, PlanBacked, PlanConfig, PruneMode, QModel};
+use unit_pruner::engine::{
+    infer, ConvInterior, EngineConfig, PlanBacked, PlanConfig, PlannedModel, PruneMode, QModel,
+};
 use unit_pruner::models::{zoo, Params};
 use unit_pruner::nn::ForwardOpts;
 use unit_pruner::pruning::Thresholds;
-use unit_pruner::report::bench::{BenchPerf, CoordRow, DivRow, EngineRow, EvalRow};
+use unit_pruner::report::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow};
 use unit_pruner::train::{
     evaluate_float, evaluate_float_parallel, evaluate_quant, evaluate_quant_parallel,
 };
@@ -127,6 +131,151 @@ fn main() {
         println!("planned/{mode} speedup vs naive: {s:.2}x");
     }
     println!();
+
+    // 1b. conv interior kernel: scalar taps vs lane-packed ------------------
+    // Same plan tables, same cut tables; only the interior-pixel
+    // accumulation loop differs. Bit-identical outputs (pinned by the
+    // plan tests); the ratio is the CI-gated payoff of the lane
+    // packing.
+    println!("=== Perf 1b: conv interior kernel, scalar vs lane-packed ===\n");
+    {
+        let q = QModel::quantize(&def, &params).with_thresholds(&th);
+        let inputs: Vec<Vec<i16>> =
+            (0..ds.test.len()).map(|i| q.quantize_input(ds.test.sample(i))).collect();
+        let mut t = Table::new(vec!["interior kernel", "inferences/s", "us/inference"]);
+        let reps = if quick { 96usize } else { 400 };
+        let mut per_kernel = Vec::new();
+        for (label, interior) in
+            [("scalar", ConvInterior::Scalar), ("lanes", ConvInterior::Lanes)]
+        {
+            let mut pb = PlanBacked::new(
+                &q,
+                PlanConfig { conv_interior: interior, ..PlanConfig::unit(DivKind::Shift) },
+            );
+            black_box(pb.infer(&inputs[0])); // warmup
+            let t0 = Instant::now();
+            for r in 0..reps {
+                black_box(pb.infer(&inputs[r % inputs.len()]));
+            }
+            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            t.row(vec![
+                label.to_string(),
+                format!("{:.1}", 1.0 / per),
+                format!("{:.0}", per * 1e6),
+            ]);
+            json.engine.push(EngineRow {
+                mode: "unit-conv".to_string(),
+                backend: format!("{label}-interior"),
+                inf_per_s: 1.0 / per,
+                mconn_per_s: total_conn as f64 / per / 1e6,
+                us_per_inf: per * 1e6,
+            });
+            per_kernel.push(1.0 / per);
+        }
+        json.speedups.push(("conv-lane".to_string(), per_kernel[1] / per_kernel[0]));
+        println!("{}", t.render());
+        println!("lane/scalar interior speedup: {:.2}x\n", per_kernel[1] / per_kernel[0]);
+    }
+
+    // 1c. scale-change latency tiers ----------------------------------------
+    // What a plan-cache miss costs at each tier of the scale-indexed
+    // layout: a from-scratch compile, a cut-table stamp over shared
+    // tables, a warm cache-hit swap, and a governor background
+    // miss→upgrade (the serve path's worst case — which no longer runs
+    // on a worker thread).
+    println!("=== Perf 1c: scale-change latency (full / stamp / hit / bg upgrade) ===\n");
+    {
+        let q = QModel::quantize(&def, &params).with_thresholds(&th);
+        let cfg = PlanConfig::unit(DivKind::Shift);
+        let grid = ScaleGrid::default_grid();
+        let reps = if quick { 3 } else { 12 };
+        let donor = PlannedModel::compile(&q, cfg);
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(PlannedModel::compile(&q, PlanConfig { t_scale_q8: 700, ..cfg }));
+        }
+        let full_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            black_box(PlannedModel::compile_shared(
+                &q,
+                PlanConfig { t_scale_q8: 700, ..cfg },
+                Some(&donor),
+            ));
+        }
+        let stamp_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        // Warm hit + slot swap, alternating two steps.
+        let cache = PlanCache::new(q.clone(), cfg, grid.clone());
+        let slot = PlanSlot::new(Arc::new(PlannedModel::compile(&q, cfg)));
+        let (a, b) = (grid.snap_q8(256), grid.snap_q8(512));
+        cache.plan_at(a);
+        cache.plan_at(b);
+        let hit_reps = if quick { 2_000 } else { 20_000 };
+        let mut flip = false;
+        let t0 = Instant::now();
+        for _ in 0..hit_reps {
+            flip = !flip;
+            slot.swap(cache.plan_at(if flip { a } else { b }));
+        }
+        let hit_us = t0.elapsed().as_secs_f64() * 1e6 / hit_reps as f64;
+
+        // Background miss→upgrade: starve a cold governor, time from
+        // the first pending compile to the slot landing on the wanted
+        // step (observations stop once the miss is queued, so the
+        // upgrade is the only mover).
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
+            ServeConfig { workers: 1, ..Default::default() },
+        );
+        let cold = Arc::new(PlanCache::new(q.clone(), cfg, grid.clone()));
+        let gov = Governor::install(&coord, Arc::clone(&cold), None, 1e9).unwrap();
+        gov.set_budget(1e-9);
+        let upgrade_reps = if quick { 3usize } else { 8 };
+        let mut upgrade_total = 0.0f64;
+        let mut upgrades = 0usize;
+        for _ in 0..upgrade_reps {
+            while gov.status().bg_pending == 0 && gov.step() + 1 < grid.len() {
+                gov.observe(1e9);
+            }
+            if gov.status().bg_pending == 0 {
+                break; // grid exhausted
+            }
+            let want = grid.snap_q8(gov.status().scale_q8);
+            let t0 = Instant::now();
+            let mut timed_out = false;
+            while gov.step() != want {
+                if t0.elapsed().as_secs() > 30 {
+                    timed_out = true; // never wedge CI on a lost upgrade
+                    break;
+                }
+                std::hint::spin_loop();
+            }
+            if timed_out {
+                break;
+            }
+            upgrade_total += t0.elapsed().as_secs_f64() * 1e6;
+            upgrades += 1;
+        }
+        coord.shutdown();
+        let upgrade_us = if upgrades > 0 { upgrade_total / upgrades as f64 } else { 0.0 };
+
+        let mut t = Table::new(vec!["tier", "us"]);
+        for (label, us) in [
+            ("conv-full-compile", full_us),
+            ("conv-cut-stamp", stamp_us),
+            ("cache-hit-swap", hit_us),
+            ("bg-miss-upgrade", upgrade_us),
+        ] {
+            t.row(vec![label.to_string(), format!("{us:.1}")]);
+            json.compile.push(CompileRow { label: label.to_string(), us });
+        }
+        println!("{}", t.render());
+        println!(
+            "stamp/full: {:.2}x cheaper; a warm budget move costs a lookup + Arc swap\n",
+            full_us / stamp_us.max(1e-9)
+        );
+    }
 
     // 2. division estimators (host ns/op) ----------------------------------
     println!("=== Perf 2: division estimators, host ns/op ===\n");

@@ -136,6 +136,30 @@ mod tests {
     }
 
     #[test]
+    fn all_estimators_monotone_in_divisor() {
+        // The planned conv layout's load-bearing contract: for a fixed
+        // numerator, every estimator is non-increasing in its divisor,
+        // so taps sorted by descending |w| have non-decreasing
+        // w̄ = div(T, |w|) at every threshold scale — which is what
+        // makes the |w| order scale-independent and the keep-set a
+        // prefix (`engine::plan`). A new DivApprox that violates this
+        // must not ship.
+        let all: Vec<Box<dyn DivApprox>> = DivKind::all().iter().map(|k| k.build()).collect();
+        crate::util::prop::check(9, 2000, |g| {
+            let t = g.u32_in(0, 1 << 26);
+            let c = g.u32_in(1, 1 << 16);
+            let c2 = c + g.u32_in(1, 1 << 10); // strictly larger divisor
+            for a in &all {
+                assert!(
+                    a.div(t, c2) <= a.div(t, c),
+                    "{}: div({t}, {c2}) > div({t}, {c}) — not monotone",
+                    a.name()
+                );
+            }
+        });
+    }
+
+    #[test]
     fn shift_and_tree_agree() {
         // Same estimate (t >> floor(log2 c)), different cost model.
         crate::util::prop::check(8, 1000, |g| {

@@ -10,8 +10,7 @@
 //!   delivering the reply;
 //! * each observation runs one AIMD update, snaps the resulting scale
 //!   to the [`ScaleGrid`](super::ScaleGrid), and — only when the step
-//!   actually changed — fetches the step's plan from the
-//!   [`PlanCache`] and swaps the coordinator's
+//!   actually changed — swaps the coordinator's
 //!   [`PlanSlot`](crate::coordinator::PlanSlot) atomically (workers
 //!   pick the new plan up at their next dequeue; in-flight requests
 //!   finish on the plan they started with);
@@ -22,18 +21,47 @@
 //!   admin frame lands here), [`Governor::status`] the wire-facing
 //!   gauge (the `Stats` frame).
 //!
+//! ## Background compiles — misses never stall the swap path
+//!
+//! A step change whose plan is already resident swaps inline (an `Arc`
+//! clone). A step change that **misses** the cache used to compile
+//! under the cache lock on the observing worker's thread; now the
+//! governor hands the compile to its own **background compile thread**
+//! and the swap path keeps moving:
+//!
+//! 1. the miss enqueues the wanted step (deduplicated — a step is
+//!    compiled at most once per residency);
+//! 2. the swap path immediately publishes the **nearest resident**
+//!    plan ([`PlanCache::nearest_resident`]) so the pool tracks the
+//!    budget direction without waiting;
+//! 3. when the background stamp lands, the thread re-checks the
+//!    controller's *current* wanted step under the controller lock and
+//!    — if still wanted — **upgrades** the [`PlanSlot`] to the exact
+//!    plan (a stale compile is interned for later but not swapped).
+//!
+//! All slot swaps (inline and upgrade) are serialized under the
+//! controller mutex, so the published plan always corresponds to the
+//! stored step. The pending/completed/upgrade counters surface through
+//! [`GovernorStatus`], the `Stats` admin frame, and
+//! [`Metrics`](crate::coordinator::Metrics) so load tests can assert
+//! the swap path never blocked on a compile.
+//!
 //! With a profile attached, installation is **feed-forward seeded**:
 //! the initial step is the cheapest step whose calibrated mean energy
 //! fits the budget, so the loop starts near its operating point
 //! instead of walking there one AIMD nudge at a time.
 
+use std::collections::HashSet;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread::JoinHandle;
 
 use super::calibrate::{KeepProfile, ProfiledCost};
 use super::plan_cache::PlanCache;
 use crate::coordinator::{
-    Coordinator, CostEstimator, CostEstimatorSlot, EnergyController, EnergyTap, PlanSlot,
+    Coordinator, CostEstimator, CostEstimatorSlot, EnergyController, EnergyTap, Metrics,
+    PlanSlot,
 };
 
 /// A point-in-time view of the governor (the `Stats` admin frame's
@@ -54,8 +82,16 @@ pub struct GovernorStatus {
     pub keep_ratio: f64,
     pub cache_hits: u64,
     pub cache_misses: u64,
-    /// Plan swaps performed since installation.
+    /// Plan swaps performed since installation (inline + upgrades).
     pub swaps: u64,
+    /// Background compiles currently queued or in flight (gauge).
+    pub bg_pending: u64,
+    /// Background compiles completed since installation.
+    pub bg_compiled: u64,
+    /// Completed background compiles that upgraded the live plan slot
+    /// (the rest were stale by the time they landed — interned, not
+    /// swapped).
+    pub bg_upgrades: u64,
 }
 
 /// The budget-driven plan governor (see module docs).
@@ -65,11 +101,21 @@ pub struct Governor {
     cost_slot: CostEstimatorSlot,
     profile: Option<Arc<KeepProfile>>,
     /// Controller + swap path, serialized: concurrent worker
-    /// observations queue here, so step transitions (and their
-    /// cache lookups) are single-file.
+    /// observations queue here, so step transitions (and the
+    /// background thread's upgrades) are single-file.
     ctrl: Mutex<EnergyController>,
     step: AtomicUsize,
     swaps: AtomicU64,
+    /// Steps queued for (or undergoing) a background compile — the
+    /// dedup set; its size is the `bg_pending` gauge.
+    compiling: Mutex<HashSet<usize>>,
+    compile_tx: Mutex<Option<Sender<usize>>>,
+    compile_handle: Mutex<Option<JoinHandle<()>>>,
+    bg_compiled: AtomicU64,
+    bg_upgrades: AtomicU64,
+    /// Coordinator metrics mirror for the bg counters (serve stats
+    /// line / snapshots).
+    metrics: Arc<Metrics>,
 }
 
 impl std::fmt::Debug for Governor {
@@ -80,6 +126,7 @@ impl std::fmt::Debug for Governor {
             .field("scale_q8", &s.scale_q8)
             .field("budget_mj", &s.budget_mj)
             .field("swaps", &s.swaps)
+            .field("bg_pending", &s.bg_pending)
             .finish()
     }
 }
@@ -88,8 +135,8 @@ impl Governor {
     /// Build a governor over `cache` and install it on `coord`: seeds
     /// the scale (feed-forward from `profile` when given, else scale
     /// 1.0 snapped to the grid), swaps the seeded plan into the
-    /// coordinator's slot, installs the profiled cost oracle, and
-    /// registers the energy tap.
+    /// coordinator's slot, installs the profiled cost oracle, starts
+    /// the background compile thread, and registers the energy tap.
     ///
     /// Errors when `coord` has no plan slot (Pjrt backend — nothing to
     /// govern).
@@ -109,6 +156,7 @@ impl Governor {
             None => cache.grid().snap_q8(ctrl.t_scale_q8()),
         };
         ctrl.set_scale(cache.grid().scale(step));
+        let (tx, rx) = channel::<usize>();
         let gov = Arc::new(Governor {
             cache: Arc::clone(&cache),
             slot: Arc::clone(&slot),
@@ -117,9 +165,22 @@ impl Governor {
             ctrl: Mutex::new(ctrl),
             step: AtomicUsize::new(step),
             swaps: AtomicU64::new(0),
+            compiling: Mutex::new(HashSet::new()),
+            compile_tx: Mutex::new(Some(tx)),
+            compile_handle: Mutex::new(None),
+            bg_compiled: AtomicU64::new(0),
+            bg_upgrades: AtomicU64::new(0),
+            metrics: Arc::clone(&coord.metrics),
         });
+        // The compile thread holds only a Weak: the governor's Drop
+        // closes the channel and joins it.
+        let weak = Arc::downgrade(&gov);
+        let handle = std::thread::spawn(move || compile_loop(weak, rx));
+        *gov.compile_handle.lock().unwrap() = Some(handle);
+        // Startup seed compiles synchronously: nothing is serving yet.
         slot.swap(cache.plan_at(step));
         gov.retarget_cost(step);
+        gov.publish_bg_metrics();
         coord.set_energy_tap(Some(Arc::clone(&gov) as Arc<dyn EnergyTap>));
         Ok(gov)
     }
@@ -129,6 +190,44 @@ impl Governor {
             let est: Arc<dyn CostEstimator> =
                 Arc::new(ProfiledCost { profile: Arc::clone(p), step });
             *self.cost_slot.write().unwrap() = Some(est);
+        }
+    }
+
+    /// Mirror the background-compile counters into the coordinator's
+    /// [`Metrics`] (gauge + counters, replace-style). Called only from
+    /// single-writer contexts — `install` (before any compile activity
+    /// can exist) and the compile thread (serial) — because a
+    /// replace-style publish from a concurrent path could land a stale
+    /// snapshot *after* a newer one and wedge the mirror. A pending
+    /// request enqueued between publishes is picked up by the compile
+    /// thread's next end-of-item publish, so the mirror is eventually
+    /// exact in every quiescent state. (`GovernorStatus` reads the
+    /// true counters directly and is never stale.)
+    fn publish_bg_metrics(&self) {
+        self.metrics.record_bg_compile(
+            self.compiling.lock().unwrap().len() as u64,
+            self.bg_compiled.load(Ordering::Relaxed),
+            self.bg_upgrades.load(Ordering::Relaxed),
+        );
+    }
+
+    /// Queue `step` for a background compile (deduplicated). Returns
+    /// immediately; the compile thread upgrades the slot when done.
+    /// Does NOT publish the metrics mirror (see `publish_bg_metrics`):
+    /// the compile thread this enqueues to will.
+    fn request_compile(&self, step: usize) {
+        let mut compiling = self.compiling.lock().unwrap();
+        if !compiling.insert(step) {
+            return; // already queued or in flight
+        }
+        drop(compiling);
+        let tx = self.compile_tx.lock().unwrap();
+        match tx.as_ref().map(|tx| tx.send(step)) {
+            Some(Ok(())) => {}
+            // Channel gone (shutdown race): forget the reservation.
+            _ => {
+                self.compiling.lock().unwrap().remove(&step);
+            }
         }
     }
 
@@ -163,6 +262,9 @@ impl Governor {
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             swaps: self.swaps.load(Ordering::Relaxed),
+            bg_pending: self.compiling.lock().unwrap().len() as u64,
+            bg_compiled: self.bg_compiled.load(Ordering::Relaxed),
+            bg_upgrades: self.bg_upgrades.load(Ordering::Relaxed),
         }
     }
 }
@@ -171,19 +273,88 @@ impl EnergyTap for Governor {
     /// One request's measured energy: AIMD update, snap, and — on a
     /// step change — a plan swap. Serialized under the controller
     /// mutex so two workers finishing simultaneously cannot race the
-    /// swap; the losing worker just queues behind a (rare, cache-hit
-    /// cheap) transition.
+    /// swap. **Never compiles**: a resident plan swaps inline, a miss
+    /// publishes the nearest resident and hands the compile to the
+    /// background thread.
     fn observe(&self, energy_mj: f64) {
         let mut ctrl = self.ctrl.lock().unwrap();
         ctrl.observe(energy_mj);
-        let new_step = self.cache.grid().snap_q8(ctrl.t_scale_q8());
+        let want = self.cache.grid().snap_q8(ctrl.t_scale_q8());
         let cur = self.step.load(Ordering::Acquire);
-        if new_step != cur {
-            let plan = self.cache.plan_at(new_step);
+        if want == cur {
+            return;
+        }
+        if let Some(plan) = self.cache.try_get(want) {
             self.slot.swap(plan);
-            self.step.store(new_step, Ordering::Release);
+            self.step.store(want, Ordering::Release);
             self.swaps.fetch_add(1, Ordering::Relaxed);
-            self.retarget_cost(new_step);
+            self.retarget_cost(want);
+            return;
+        }
+        // Miss: compile off-thread, serve the nearest ready plan now —
+        // but only if it actually moves the pool CLOSER to the wanted
+        // scale. (The current step's entry can be LRU-evicted from a
+        // capacity-bounded cache even while it is being served, so the
+        // nearest resident may be farther from `want` than the plan
+        // already in the slot; swapping there would walk the pool in
+        // the wrong budget direction.)
+        self.request_compile(want);
+        if let Some((near, plan)) = self.cache.nearest_resident(want) {
+            let grid = self.cache.grid();
+            let dist = |s: usize| (grid.q8(s) as i64 - grid.q8(want) as i64).abs();
+            if near != cur && dist(near) < dist(cur) {
+                self.slot.swap(plan);
+                self.step.store(near, Ordering::Release);
+                self.swaps.fetch_add(1, Ordering::Relaxed);
+                self.retarget_cost(near);
+            }
+        }
+    }
+}
+
+/// The background compile loop: stamp each requested step's plan off
+/// every worker thread (and off the cache lock — `plan_at` compiles
+/// lock-free and interns after), then upgrade the live slot if the
+/// step is still wanted.
+fn compile_loop(gov: Weak<Governor>, rx: Receiver<usize>) {
+    while let Ok(step) = rx.recv() {
+        let Some(gov) = gov.upgrade() else { return };
+        let plan = gov.cache.plan_at(step);
+        gov.compiling.lock().unwrap().remove(&step);
+        gov.bg_compiled.fetch_add(1, Ordering::Relaxed);
+        // Upgrade under the controller lock so inline swaps and
+        // upgrades are serialized against each other. A stale step
+        // (controller moved on while we compiled) stays interned in
+        // the cache but does not touch the slot.
+        {
+            let ctrl = gov.ctrl.lock().unwrap();
+            let want = gov.cache.grid().snap_q8(ctrl.t_scale_q8());
+            if want == step && gov.step.load(Ordering::Acquire) != step {
+                gov.slot.swap(plan);
+                gov.step.store(step, Ordering::Release);
+                gov.swaps.fetch_add(1, Ordering::Relaxed);
+                gov.bg_upgrades.fetch_add(1, Ordering::Relaxed);
+                gov.retarget_cost(step);
+            }
+        }
+        gov.publish_bg_metrics();
+        // Drop the strong handle before blocking on the next request,
+        // so the governor can be torn down while the queue is idle.
+        drop(gov);
+    }
+}
+
+/// Close the compile channel and join the thread. The compile thread
+/// itself can hold the last strong reference transiently — joining
+/// from that thread would deadlock, so it detaches instead (the thread
+/// is already on its way out once the channel is gone).
+impl Drop for Governor {
+    fn drop(&mut self) {
+        drop(self.compile_tx.lock().unwrap().take());
+        if let Some(h) = self.compile_handle.lock().unwrap().take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
         }
     }
 }
@@ -197,8 +368,16 @@ mod tests {
     use crate::engine::{PlanConfig, PruneMode, QModel};
     use crate::models::{zoo, Params};
     use crate::pruning::Thresholds;
+    use std::time::{Duration, Instant};
 
     fn boot(workers: usize) -> (Coordinator, Arc<PlanCache>, Vec<Vec<f32>>) {
+        boot_with_capacity(workers, usize::MAX)
+    }
+
+    fn boot_with_capacity(
+        workers: usize,
+        capacity: usize,
+    ) -> (Coordinator, Arc<PlanCache>, Vec<Vec<f32>>) {
         let def = zoo("mnist");
         let params = Params::random(&def, 91);
         let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.15));
@@ -206,10 +385,13 @@ mod tests {
             BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
             ServeConfig { workers, ..Default::default() },
         );
-        let cache = Arc::new(PlanCache::new(
+        let grid = ScaleGrid::geometric(0.25, 8.0, 10);
+        let capacity = capacity.min(grid.len());
+        let cache = Arc::new(PlanCache::with_capacity(
             q,
             PlanConfig::unit(DivKind::Shift),
-            ScaleGrid::geometric(0.25, 8.0, 10),
+            grid,
+            capacity,
         ));
         let xs: Vec<Vec<f32>> = (0..4)
             .map(|s| {
@@ -227,9 +409,10 @@ mod tests {
         let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
         assert_eq!(gov.step(), cache.grid().snap_q8(256), "generous budget should seed ~1.0");
         // Starve the budget: each served request feeds the tap; the
-        // governor must climb the grid.
+        // governor must climb the grid (misses compile in the
+        // background, so give the loop enough observations).
         gov.set_budget(1e-6);
-        for _ in 0..60 {
+        for _ in 0..120 {
             let rx = coord.submit(xs[0].clone());
             rx.recv().unwrap();
         }
@@ -238,7 +421,7 @@ mod tests {
         assert!(gov.status().swaps > 0);
         // Relief: the step walks back down.
         gov.set_budget(1e9);
-        for _ in 0..120 {
+        for _ in 0..160 {
             let rx = coord.submit(xs[1 % xs.len()].clone());
             rx.recv().unwrap();
         }
@@ -247,6 +430,124 @@ mod tests {
         // beyond the distinct steps visited.
         assert!(cache.hits() > 0, "no cache hits on the walk back");
         assert!(cache.misses() <= cache.grid().len() as u64);
+        coord.shutdown();
+    }
+
+    #[test]
+    fn misses_compile_in_the_background_and_the_climb_still_lands() {
+        // Cold cache beyond the seeded step: every climb step is a
+        // miss. The swap path must keep answering (publishing nearest
+        // residents) while the background thread compiles; the pool
+        // still reaches the top step under starvation.
+        let (coord, cache, xs) = boot(1);
+        let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
+        assert_eq!(cache.len(), 1, "install must seed exactly one resident step");
+        gov.set_budget(1e-9);
+        let top = cache.grid().len() - 1;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while gov.step() != top {
+            assert!(Instant::now() < deadline, "never climbed to the top step");
+            coord.submit(xs[0].clone()).recv().unwrap();
+        }
+        let st = gov.status();
+        assert!(st.bg_compiled > 0, "no background compiles ran");
+        assert!(
+            st.bg_compiled >= st.bg_upgrades,
+            "more upgrades than compiles: {} vs {}",
+            st.bg_upgrades,
+            st.bg_compiled
+        );
+        // Wait for the queue to drain, then the pending gauge is zero.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while gov.status().bg_pending != 0 {
+            assert!(Instant::now() < deadline, "compile queue never drained");
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        // The coordinator metrics mirror converges to the governor's
+        // counters (published at the end of each compile iteration, so
+        // give the last publish a moment to land).
+        let want = gov.status().bg_compiled;
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while coord.metrics.snapshot().bg_compiled != want {
+            assert!(
+                Instant::now() < deadline,
+                "metrics mirror never converged: {} vs {}",
+                coord.metrics.snapshot().bg_compiled,
+                want
+            );
+            std::thread::sleep(Duration::from_millis(10));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn capacity_bounded_cache_still_climbs_under_eviction_churn() {
+        // A 2-entry LRU under a 10-step grid: background compiles
+        // evict each other constantly and the currently served step's
+        // entry can vanish from the cache while it is live in the
+        // slot. The pool must still converge upward under starvation —
+        // the nearest-resident guard never walks it AWAY from the
+        // wanted scale — and the LRU bound must hold throughout.
+        let (coord, cache, xs) = boot_with_capacity(1, 2);
+        let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
+        gov.set_budget(1e-9);
+        let top = cache.grid().len() - 1;
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while gov.step() != top {
+            assert!(
+                Instant::now() < deadline,
+                "eviction churn stalled the climb at step {}",
+                gov.step()
+            );
+            coord.submit(xs[0].clone()).recv().unwrap();
+            assert!(cache.len() <= 2, "LRU capacity violated");
+        }
+        assert!(gov.status().bg_compiled > 0, "capacity-bounded climb never compiled");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn a_miss_publishes_the_nearest_resident_and_upgrades_when_ready() {
+        // Deterministic upgrade: feed observations directly (no worker
+        // traffic racing us), stop as soon as a background compile is
+        // pending, and watch the slot upgrade to the exact step once
+        // the stamp lands — the controller cannot move in between.
+        let (coord, cache, _xs) = boot(1);
+        let slot = coord.plan_slot().unwrap();
+        let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
+        let seeded = gov.step();
+        gov.set_budget(1e-9);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while gov.status().bg_pending == 0 {
+            assert!(Instant::now() < deadline, "starvation never produced a miss");
+            gov.observe(1e9);
+        }
+        // The swap path answered without compiling: whatever is
+        // published now is a resident plan (the nearest one), and the
+        // observe calls above returned immediately.
+        let published = cache.grid().snap_q8(slot.get().cfg.t_scale_q8);
+        assert!(
+            cache.try_get(published).is_some(),
+            "published step {published} is not resident"
+        );
+        // With observations stopped, only the background thread can
+        // move the step — to exactly the wanted (pending) one.
+        let want = {
+            let st = gov.status();
+            cache.grid().snap_q8(st.scale_q8)
+        };
+        assert_ne!(want, seeded, "setup: the wanted step never left the seed");
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while gov.step() != want {
+            assert!(Instant::now() < deadline, "background upgrade never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(gov.status().bg_upgrades >= 1, "upgrade not counted");
+        assert_eq!(
+            cache.grid().snap_q8(slot.get().cfg.t_scale_q8),
+            want,
+            "slot plan does not match the upgraded step"
+        );
         coord.shutdown();
     }
 
@@ -274,10 +575,13 @@ mod tests {
     #[test]
     fn reinstall_replaces_the_previous_governor() {
         // Installing twice (e.g. a reconfigured budget loop) must not
-        // wedge: the second governor takes over the tap and the slot.
+        // wedge: the second governor takes over the tap and the slot,
+        // and the first one's compile thread shuts down cleanly when
+        // its last handle drops.
         let (coord, cache, xs) = boot(1);
-        let _g1 = Governor::install(&coord, Arc::clone(&cache), None, 1.0).unwrap();
+        let g1 = Governor::install(&coord, Arc::clone(&cache), None, 1.0).unwrap();
         let g2 = Governor::install(&coord, Arc::clone(&cache), None, 1e-6).unwrap();
+        drop(g1);
         for _ in 0..40 {
             coord.submit(xs[0].clone()).recv().unwrap();
         }

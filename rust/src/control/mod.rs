@@ -11,8 +11,10 @@
 //!
 //! * [`plan_cache`] — [`ScaleGrid`] quantizes the controller's
 //!   continuous scale to ~20 geometric Q8.8 steps, and [`PlanCache`]
-//!   interns one compiled plan per step (LRU-bounded, linear tables
-//!   shared across scales, bit-identical to fresh compiles);
+//!   interns one compiled plan per step (LRU-bounded; every
+//!   weight-derived table — linear sorted rows and conv tap/lane
+//!   tables — shared across scales, misses stamp only the per-scale
+//!   cut tables, bit-identical to fresh compiles);
 //! * [`calibrate`] — [`KeepProfile`] measures per-layer keep-ratio
 //!   curves (and per-step mean energy) over a calibration batch,
 //!   replacing layer-0 extrapolation with per-layer interpolation for
@@ -22,7 +24,10 @@
 //!   request's ledger energy through the coordinator's
 //!   [`EnergyTap`](crate::coordinator::EnergyTap), and swaps the
 //!   active plan `Arc` between requests through the
-//!   [`PlanSlot`](crate::coordinator::PlanSlot); the serve layer's
+//!   [`PlanSlot`](crate::coordinator::PlanSlot). Cache misses never
+//!   run on the swap path: the governor's background compile thread
+//!   stamps them while the pool serves the nearest resident plan,
+//!   upgrading the slot when the compile lands. The serve layer's
 //!   `SetBudget`/`Stats` admin frames are its wire front door.
 //!
 //! Dependency direction: `coordinator` ← `control` ← `serve` — the

@@ -15,16 +15,25 @@
 //!
 //! Two cost controls keep the cache cheap:
 //!
-//! * **shared tables** — linear layers' magnitude-sorted rows are a
-//!   pure function of the weights, so every cached plan shares the
-//!   first-compiled plan's tables behind an `Arc`
-//!   ([`PlannedModel::compile_shared`]); only conv tables (whose sort
-//!   key `w̄ = T·s/|w|` is scale-dependent) and the linear `t_eff`
-//!   scalars are rebuilt per step. A cache miss is therefore a conv
-//!   re-sort, not a full recompile.
+//! * **shared tables** — linear layers' magnitude-sorted rows *and*
+//!   conv layers' `|w|`-sorted tap/lane tables are pure functions of
+//!   the weights, so every cached plan shares the first-compiled
+//!   plan's tables behind `Arc`s ([`PlannedModel::compile_shared`]);
+//!   only the scale-dependent residue is rebuilt per step — the
+//!   linear `t_eff` scalars and the conv **cut tables** (stamped `w̄`
+//!   values + `always`/`live` prefix lengths per segment). A cache
+//!   miss is therefore a cut-table *stamp* (`n` divisions per conv
+//!   layer), not a re-sort and not a full recompile.
 //! * **LRU eviction** — bounded capacity (default: the whole grid, so
 //!   nothing evicts in practice; smaller capacities are honored for
 //!   memory-tight deployments and exercised by tests).
+//!
+//! Misses that do remain (cold steps, tight capacities) can further be
+//! taken **off the serve path entirely**: [`PlanCache::try_get`] and
+//! [`PlanCache::nearest_resident`] are the non-compiling lookups the
+//! [`Governor`](super::Governor)'s background compile thread builds
+//! on — the swap path publishes the nearest ready plan immediately and
+//! upgrades when the background stamp lands.
 //!
 //! Every cache-served plan is **bit-identical** to a fresh
 //! [`PlannedModel::compile`] at the same step — the property tests
@@ -203,23 +212,72 @@ impl PlanCache {
         &self.grid
     }
 
-    /// The plan for `step`, compiling (and interning) it on first
-    /// visit. Compilation happens under the cache lock: concurrent
-    /// lookups of the *same* step wait instead of compiling twice, and
-    /// misses are rare by design (≤ one per grid step per eviction).
-    pub fn plan_at(&self, step: usize) -> Arc<PlannedModel> {
+    /// The plan for `step` **only if it is already resident** — a
+    /// non-compiling lookup for callers that must never block on a
+    /// compile (the governor's swap path). Counts a hit when it
+    /// returns `Some`; a `None` is not counted as a miss (the caller
+    /// decides whether to compile, and [`PlanCache::plan_at`] counts
+    /// the miss when it does).
+    pub fn try_get(&self, step: usize) -> Option<Arc<PlannedModel>> {
         assert!(step < self.grid.len(), "scale step {step} outside the grid");
         let mut inner = self.inner.lock().unwrap();
         inner.tick += 1;
         let tick = inner.tick;
+        let e = inner.slots.get_mut(&step)?;
+        e.last_used = tick;
+        self.hits.fetch_add(1, Ordering::Relaxed);
+        Some(Arc::clone(&e.plan))
+    }
+
+    /// The resident plan whose grid scale is nearest to `step`'s
+    /// (`None` on an empty cache) — what the governor publishes while
+    /// a background compile of the exact step is in flight. Does not
+    /// touch the hit/miss counters or the LRU order: it is a fallback
+    /// probe, not a demand signal for the returned step.
+    pub fn nearest_resident(&self, step: usize) -> Option<(usize, Arc<PlannedModel>)> {
+        assert!(step < self.grid.len(), "scale step {step} outside the grid");
+        let want_q8 = self.grid.q8(step) as i64;
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .min_by_key(|(&s, _)| ((self.grid.q8(s) as i64 - want_q8).abs(), s))
+            .map(|(&s, e)| (s, Arc::clone(&e.plan)))
+    }
+
+    /// The plan for `step`, compiling (and interning) it on first
+    /// visit. The compile itself runs **outside the cache lock** —
+    /// the lock protects only the lookup/intern bookkeeping — so
+    /// non-compiling callers ([`PlanCache::try_get`],
+    /// [`PlanCache::nearest_resident`], i.e. the governor's swap path)
+    /// are never blocked behind a stamp. Two threads racing the same
+    /// cold step may both compile; the loser's (bit-identical) plan is
+    /// dropped in favor of the interned one — a cheap, rare duplicate
+    /// now that a miss is a cut-table stamp rather than a full sort.
+    pub fn plan_at(&self, step: usize) -> Arc<PlannedModel> {
+        assert!(step < self.grid.len(), "scale step {step} outside the grid");
+        let donor = {
+            let mut inner = self.inner.lock().unwrap();
+            inner.tick += 1;
+            let tick = inner.tick;
+            if let Some(e) = inner.slots.get_mut(&step) {
+                e.last_used = tick;
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Arc::clone(&e.plan);
+            }
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            inner.donor.clone()
+        };
+        let cfg = PlanConfig { t_scale_q8: self.grid.q8(step), ..self.base_cfg };
+        let plan = Arc::new(PlannedModel::compile_shared(&self.q, cfg, donor.as_deref()));
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        // Lost a compile race? Serve the interned plan; ours drops.
         if let Some(e) = inner.slots.get_mut(&step) {
             e.last_used = tick;
-            self.hits.fetch_add(1, Ordering::Relaxed);
             return Arc::clone(&e.plan);
         }
-        self.misses.fetch_add(1, Ordering::Relaxed);
-        let cfg = PlanConfig { t_scale_q8: self.grid.q8(step), ..self.base_cfg };
-        let plan = Arc::new(PlannedModel::compile_shared(&self.q, cfg, inner.donor.as_deref()));
         if inner.donor.is_none() {
             inner.donor = Some(Arc::clone(&plan));
         }
@@ -320,44 +378,128 @@ mod tests {
             .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.2))
     }
 
-    /// Satellite property (a): a cache-served plan is bit-identical —
-    /// logits, counts, ledger — to a freshly compiled plan at the same
-    /// scale step, across the model zoo.
+    fn assert_cache_matches_fresh(name: &str, mode: crate::engine::PruneMode, steps: &[usize]) {
+        use crate::engine::PruneMode;
+        let q = match mode {
+            // ZeroSkip needs no thresholds; Unit gets the uniform set.
+            PruneMode::Unit => q_for(name, 0xCAFE + name.len() as u64),
+            _ => {
+                let def = zoo(name);
+                let params = Params::random(&def, 0xCAFE + name.len() as u64);
+                QModel::quantize(&def, &params)
+            }
+        };
+        let grid = ScaleGrid::default_grid();
+        let cfg = PlanConfig::for_mode(mode, DivKind::Shift);
+        let cache = PlanCache::new(q.clone(), cfg, grid.clone());
+        let def = zoo(name);
+        let x_f: Vec<f32> = (0..def.input_len())
+            .map(|i| (((i * 31) % 37) as f32 - 18.0) / 11.0)
+            .collect();
+        for &step in steps {
+            let cached = cache.plan_at(step);
+            let fresh =
+                PlannedModel::compile(&q, PlanConfig { t_scale_q8: grid.q8(step), ..cfg });
+            let x = cached.quantize_input(&x_f);
+            let (mut sa, mut sb) = (cached.new_scratch(), fresh.new_scratch());
+            let (oa, ob) = (cached.infer(&x, &mut sa), fresh.infer(&x, &mut sb));
+            assert_eq!(oa.logits_raw, ob.logits_raw, "{name}/{mode:?} step {step} logits");
+            assert_eq!(oa.kept, ob.kept, "{name}/{mode:?} step {step} kept");
+            assert_eq!(oa.skipped, ob.skipped, "{name}/{mode:?} step {step} skipped");
+            assert_eq!(oa.ledger.counts, ob.ledger.counts, "{name}/{mode:?} step {step}");
+            assert_eq!(oa.ledger.compute_cycles, ob.ledger.compute_cycles);
+            assert_eq!(oa.ledger.mem_cycles, ob.ledger.mem_cycles);
+        }
+    }
+
+    /// Satellite property (a): a cache-served plan — cut tables
+    /// stamped over the donor's shared `|w|`-sorted tables — is
+    /// bit-identical (logits, counts, ledger) to a freshly compiled
+    /// plan at the same scale step, across the model zoo, in both
+    /// scatter modes.
     #[test]
     fn cached_plans_bit_identical_to_fresh_compiles_across_zoo() {
-        // kws/widar compiles are heavy; probe them at one step each,
-        // sweep mnist/cifar more densely.
-        let cases: &[(&str, &[usize])] =
-            &[("mnist", &[0, 7, 13, 19]), ("cifar", &[3, 16]), ("kws", &[10])];
-        for &(name, steps) in cases {
-            let q = q_for(name, 0xCAFE + name.len() as u64);
-            let grid = ScaleGrid::default_grid();
-            let cache =
-                PlanCache::new(q.clone(), PlanConfig::unit(DivKind::Shift), grid.clone());
-            let def = zoo(name);
-            let x_f: Vec<f32> = (0..def.input_len())
-                .map(|i| (((i * 31) % 37) as f32 - 18.0) / 11.0)
-                .collect();
-            for &step in steps {
-                let cached = cache.plan_at(step);
-                let fresh = PlannedModel::compile(
-                    &q,
-                    PlanConfig {
-                        t_scale_q8: grid.q8(step),
-                        ..PlanConfig::unit(DivKind::Shift)
-                    },
-                );
-                let x = cached.quantize_input(&x_f);
-                let (mut sa, mut sb) = (cached.new_scratch(), fresh.new_scratch());
-                let (oa, ob) = (cached.infer(&x, &mut sa), fresh.infer(&x, &mut sb));
-                assert_eq!(oa.logits_raw, ob.logits_raw, "{name} step {step} logits");
-                assert_eq!(oa.kept, ob.kept, "{name} step {step} kept");
-                assert_eq!(oa.skipped, ob.skipped, "{name} step {step} skipped");
-                assert_eq!(oa.ledger.counts, ob.ledger.counts, "{name} step {step} counts");
-                assert_eq!(oa.ledger.compute_cycles, ob.ledger.compute_cycles);
-                assert_eq!(oa.ledger.mem_cycles, ob.ledger.mem_cycles);
-            }
+        use crate::engine::PruneMode;
+        let all: Vec<usize> = (0..ScaleGrid::default_grid().len()).collect();
+        // mnist: every grid step, both scatter modes. cifar/kws are
+        // heavier compiles: sweep cifar on a stride, probe kws at the
+        // ends and middle.
+        assert_cache_matches_fresh("mnist", PruneMode::Unit, &all);
+        assert_cache_matches_fresh("mnist", PruneMode::ZeroSkip, &[0, 9, 19]);
+        let cifar: Vec<usize> = all.iter().copied().step_by(3).collect();
+        assert_cache_matches_fresh("cifar", PruneMode::Unit, &cifar);
+        assert_cache_matches_fresh("cifar", PruneMode::ZeroSkip, &[5, 16]);
+        assert_cache_matches_fresh("kws", PruneMode::Unit, &[0, 19]);
+        assert_cache_matches_fresh("kws", PruneMode::ZeroSkip, &[10]);
+    }
+
+    /// Border-heavy shape (kernel spans the whole input: every pixel
+    /// is a border pixel) through the cache at every grid step.
+    #[test]
+    fn cached_plans_bit_identical_on_border_only_shapes() {
+        use crate::models::ModelDef;
+        use crate::nn::Layer;
+        let def = ModelDef {
+            name: "border-heavy".into(),
+            input_shape: [2, 4, 6],
+            classes: 3,
+            layers: vec![
+                Layer::Conv { out_ch: 4, in_ch: 2, kh: 4, kw: 6, pool: false },
+                Layer::Linear { n_in: 4, n_out: 3, relu: false },
+            ],
+        };
+        let params = Params::random(&def, 0xB0D3);
+        let q = QModel::quantize(&def, &params)
+            .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.25));
+        let grid = ScaleGrid::default_grid();
+        let cfg = PlanConfig::unit(DivKind::Exact);
+        let cache = PlanCache::new(q.clone(), cfg, grid.clone());
+        let x_f: Vec<f32> = (0..def.input_len())
+            .map(|i| (((i * 11) % 23) as f32 - 11.0) / 6.0)
+            .collect();
+        for step in 0..grid.len() {
+            let cached = cache.plan_at(step);
+            let fresh =
+                PlannedModel::compile(&q, PlanConfig { t_scale_q8: grid.q8(step), ..cfg });
+            let x = cached.quantize_input(&x_f);
+            let (mut sa, mut sb) = (cached.new_scratch(), fresh.new_scratch());
+            let (oa, ob) = (cached.infer(&x, &mut sa), fresh.infer(&x, &mut sb));
+            assert_eq!(oa.logits_raw, ob.logits_raw, "border step {step}");
+            assert_eq!(oa.kept, ob.kept, "border step {step}");
+            assert_eq!(oa.ledger.counts, ob.ledger.counts, "border step {step}");
         }
+    }
+
+    #[test]
+    fn try_get_serves_residents_without_compiling() {
+        let q = q_for("mnist", 80);
+        let cache = PlanCache::new(q, PlanConfig::unit(DivKind::Shift), ScaleGrid::default_grid());
+        assert!(cache.try_get(4).is_none(), "cold step served from nowhere");
+        assert_eq!(cache.misses(), 0, "try_get must not count a miss");
+        let a = cache.plan_at(4);
+        let b = cache.try_get(4).expect("resident step not served");
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!((cache.hits(), cache.misses()), (1, 1));
+    }
+
+    #[test]
+    fn nearest_resident_picks_the_closest_scale() {
+        let q = q_for("mnist", 81);
+        let grid = ScaleGrid::default_grid();
+        let cache = PlanCache::new(q, PlanConfig::unit(DivKind::Shift), grid.clone());
+        assert!(cache.nearest_resident(0).is_none(), "empty cache has no nearest");
+        cache.plan_at(2);
+        cache.plan_at(10);
+        let (hits0, misses0) = (cache.hits(), cache.misses());
+        let (s, _) = cache.nearest_resident(3).unwrap();
+        assert_eq!(s, 2, "step 3 is nearer to 2 than to 10 on a geometric grid");
+        let (s, plan) = cache.nearest_resident(9).unwrap();
+        assert_eq!(s, 10);
+        assert_eq!(plan.cfg.t_scale_q8, grid.q8(10));
+        let (s, _) = cache.nearest_resident(10).unwrap();
+        assert_eq!(s, 10, "an exact resident is its own nearest");
+        // A fallback probe, not demand: counters untouched.
+        assert_eq!((cache.hits(), cache.misses()), (hits0, misses0));
     }
 
     #[test]

@@ -79,6 +79,13 @@ struct Inner {
     /// `Coordinator::publish_shard_costs` — the cost-weighted
     /// placement imbalance view.
     shard_costs: Vec<u64>,
+    /// Background plan compiles queued or in flight on the governor's
+    /// compile thread (gauge; zero without an adaptive governor).
+    bg_pending: u64,
+    /// Background plan compiles completed since governor install.
+    bg_compiled: u64,
+    /// Background compiles that upgraded the live plan slot.
+    bg_upgrades: u64,
 }
 
 /// Snapshot for reporting.
@@ -113,6 +120,10 @@ pub struct Snapshot {
     pub inflight: i64,
     /// Latest per-shard queued-cost gauges (empty until published).
     pub shard_costs: Vec<u64>,
+    /// Governor background-compile gauges/counters (see `Inner`).
+    pub bg_pending: u64,
+    pub bg_compiled: u64,
+    pub bg_upgrades: u64,
 }
 
 fn percentile(sorted: &[u64], p: f64) -> u64 {
@@ -184,6 +195,16 @@ impl Metrics {
         self.inner.lock().unwrap().shard_costs = costs.to_vec();
     }
 
+    /// Publish the governor's background-compile state (replace-style:
+    /// the governor owns the true counters and mirrors them here so
+    /// serve snapshots can assert misses never block the swap path).
+    pub fn record_bg_compile(&self, pending: u64, compiled: u64, upgrades: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.bg_pending = pending;
+        g.bg_compiled = compiled;
+        g.bg_upgrades = upgrades;
+    }
+
     pub fn session_opened(&self) {
         self.inner.lock().unwrap().sessions_opened += 1;
     }
@@ -235,6 +256,9 @@ impl Metrics {
             sessions_closed: g.sessions_closed,
             inflight: g.inflight,
             shard_costs: g.shard_costs.clone(),
+            bg_pending: g.bg_pending,
+            bg_compiled: g.bg_compiled,
+            bg_upgrades: g.bg_upgrades,
         }
     }
 }
@@ -312,6 +336,19 @@ mod tests {
         );
         assert_eq!((s.sessions_opened, s.sessions_closed), (1, 1));
         assert_eq!(s.inflight, 1);
+    }
+
+    #[test]
+    fn bg_compile_gauges_replace_not_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.bg_pending, s.bg_compiled, s.bg_upgrades), (0, 0, 0));
+        m.record_bg_compile(2, 5, 3);
+        let s = m.snapshot();
+        assert_eq!((s.bg_pending, s.bg_compiled, s.bg_upgrades), (2, 5, 3));
+        m.record_bg_compile(0, 6, 4);
+        let s = m.snapshot();
+        assert_eq!((s.bg_pending, s.bg_compiled, s.bg_upgrades), (0, 6, 4), "must replace");
     }
 
     #[test]

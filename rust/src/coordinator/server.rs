@@ -96,24 +96,30 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-/// The atomically swappable active plan: workers re-read it at every
+/// The atomically swappable active plan: workers check it at every
 /// dequeue, so the control plane's governor can retarget the whole
 /// pool to a different threshold scale **between requests** — no
 /// worker restart, no in-flight request ever sees a torn plan (each
-/// request runs start-to-finish on the `Arc` it picked up).
+/// request runs start-to-finish on the `Arc` it picked up). Swaps come
+/// from two places: the governor's inline path (resident plans) and
+/// its background compile thread's **upgrades** — workers observe both
+/// the same way.
 ///
-/// `RwLock<Arc<…>>` rather than a lock-free pointer because the read
-/// path is one uncontended `read()` + `Arc` clone per *request* —
-/// nanoseconds against a millisecond-scale inference — and std has no
-/// atomic `Arc` swap.
+/// `RwLock<Arc<…>>` rather than a lock-free pointer because the write
+/// path is rare and std has no atomic `Arc` swap. The read path is
+/// cheaper still: a monotone **generation counter** bumps on every
+/// swap, so a worker's per-dequeue check is one relaxed atomic load —
+/// it takes the lock only when the generation actually moved (plan
+/// swaps are orders of magnitude rarer than dequeues).
 #[derive(Debug)]
 pub struct PlanSlot {
     cur: RwLock<Arc<PlannedModel>>,
+    generation: AtomicU64,
 }
 
 impl PlanSlot {
     pub fn new(plan: Arc<PlannedModel>) -> PlanSlot {
-        PlanSlot { cur: RwLock::new(plan) }
+        PlanSlot { cur: RwLock::new(plan), generation: AtomicU64::new(0) }
     }
 
     /// The currently active plan.
@@ -121,9 +127,19 @@ impl PlanSlot {
         Arc::clone(&self.cur.read().unwrap())
     }
 
+    /// Monotone swap counter: unchanged generation ⇒ `get` would
+    /// return the same plan the caller already holds.
+    pub fn generation(&self) -> u64 {
+        self.generation.load(Ordering::Acquire)
+    }
+
     /// Install `plan`; returns the one it replaced.
     pub fn swap(&self, plan: Arc<PlannedModel>) -> Arc<PlannedModel> {
-        std::mem::replace(&mut *self.cur.write().unwrap(), plan)
+        let mut cur = self.cur.write().unwrap();
+        // Bump under the write lock so a reader that sees the new
+        // generation is guaranteed to read the new plan.
+        self.generation.fetch_add(1, Ordering::Release);
+        std::mem::replace(&mut *cur, plan)
     }
 }
 
@@ -481,6 +497,12 @@ fn mcu_worker(
     // arena is re-sized only when the governor swaps the plan (same
     // model ⇒ same sizes in practice, but a realloc per swap is cheap
     // insurance against a differently shaped plan).
+    // Generation is read BEFORE the plan: a swap landing in between
+    // then pairs the new plan with a stale generation, which only
+    // costs one redundant re-read at the next dequeue. (The other
+    // order would pair the OLD plan with the NEW generation and pin
+    // the worker on a stale plan until the next swap.)
+    let mut plan_gen = slot.generation();
     let mut plan = slot.get();
     let mut scratch = plan.new_scratch();
     while let Some(mut req) = pool.pop(worker) {
@@ -492,11 +514,18 @@ fn mcu_worker(
             continue;
         }
         // Pick up the active plan for this request: the governor swaps
-        // the slot between requests, never under one.
-        let cur = slot.get();
-        if !Arc::ptr_eq(&cur, &plan) {
-            scratch = cur.new_scratch();
-            plan = cur;
+        // the slot between requests, never under one. The generation
+        // probe makes inline swaps *and* background-compile upgrades
+        // visible for one atomic load; the slot lock is touched only
+        // when a swap actually happened.
+        let gen = slot.generation();
+        if gen != plan_gen {
+            plan_gen = gen;
+            let cur = slot.get();
+            if !Arc::ptr_eq(&cur, &plan) {
+                scratch = cur.new_scratch();
+                plan = cur;
+            }
         }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
@@ -773,6 +802,26 @@ mod tests {
         assert_eq!(err, Err(SubmitError::Closed));
         assert!(ctl.is_dead(), "failed submit must tombstone the request");
         coord.join_workers();
+    }
+
+    #[test]
+    fn plan_slot_generation_tracks_swaps() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 8);
+        let q = QModel::quantize(&def, &params);
+        let cfg = PlanConfig::for_mode(PruneMode::Dense, DivKind::Shift);
+        let a = Arc::new(PlannedModel::compile(&q, cfg));
+        let b = Arc::new(PlannedModel::compile(&q, PlanConfig { t_scale_q8: 512, ..cfg }));
+        let slot = PlanSlot::new(Arc::clone(&a));
+        let g0 = slot.generation();
+        assert!(Arc::ptr_eq(&slot.get(), &a));
+        let old = slot.swap(Arc::clone(&b));
+        assert!(Arc::ptr_eq(&old, &a), "swap must return the replaced plan");
+        assert!(slot.generation() > g0, "generation must move on swap");
+        assert!(Arc::ptr_eq(&slot.get(), &b));
+        let g1 = slot.generation();
+        slot.swap(a);
+        assert!(slot.generation() > g1);
     }
 
     #[test]

@@ -20,5 +20,5 @@ pub mod plan;
 pub mod qmodel;
 
 pub use infer::{infer, EngineConfig, InferOutput, PruneMode};
-pub use plan::{PlanBacked, PlanConfig, PlannedModel, Scratch};
+pub use plan::{ConvInterior, PlanBacked, PlanConfig, PlannedModel, Scratch, CONV_LANES};
 pub use qmodel::QModel;

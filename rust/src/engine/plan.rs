@@ -16,12 +16,26 @@
 //!   row, found by one binary search per activation; the kernel
 //!   iterates kept taps only, so a skipped MAC costs O(log n)
 //!   amortized instead of a compare.
-//! * **Conv layers (Eq. 3)** — taps are regrouped per input channel
-//!   and sorted by their precomputed threshold `w̄ = T_raw/|w|` (the
-//!   input-independent division the naive path redoes every
-//!   inference). Eq. 3's keep-set `|x| > w̄` is a prefix of that
-//!   order, so each input pixel binary-searches its cutoff and
-//!   scatters only kept taps into the output accumulators.
+//! * **Conv layers (Eq. 3)** — taps are regrouped into per-input-
+//!   channel **segments** (one per distinct layer threshold) and
+//!   sorted by **descending `|w|`** — a *scale-independent* order.
+//!   Every division estimator is monotone non-increasing in its
+//!   divisor, so the per-tap threshold `w̄ = T·s/|w|` is non-decreasing
+//!   along each segment at *every* runtime scale `s`, and Eq. 3's
+//!   keep-set `w̄ < |x|` stays a prefix. The scale-dependent state per
+//!   segment collapses to a **cut table**: the stamped `w̄` values plus
+//!   two `u16` prefix lengths (`always`: taps kept by every nonzero
+//!   pixel, `live`: taps reachable by any `|x|` at all) that bound the
+//!   per-pixel binary search. A scale change re-*stamps* the cut
+//!   tables (`n` divisions, no sort) instead of recompiling the layer
+//!   — the plan cache's miss cost.
+//! * **Interior/border split + lane packing** — each conv segment is
+//!   compiled into two tables: a lane-packed interior mirror
+//!   (`[i16; 8]` weight groups / `[i32; 8]` accumulator-offset groups,
+//!   scalar tail) whose kept-MAC multiply loop autovectorizes, used
+//!   for pixels where every tap lands in-bounds; and the scalar
+//!   `(w, kbase, u, v)` taps that keep the clipped per-tap path for
+//!   border pixels.
 //! * **Scratch arena** — [`Scratch`] owns the accumulator and
 //!   ping-pong activation buffers, eliminating all per-inference
 //!   `Vec` allocations.
@@ -38,7 +52,9 @@
 //! are **bit-identical** to the reference engine for every
 //! [`PruneMode`], division estimator, threshold configuration, and
 //! FATReLU cut-off — the equivalence property tests in
-//! `tests/engine_cross_layer.rs` pin this across the whole zoo. The
+//! `tests/engine_cross_layer.rs` pin this across the whole zoo (and
+//! i64 accumulation is order-independent, so the lane-packed interior
+//! path and the scalar reference produce identical accumulators). The
 //! MCU never executes the sorted kernels; it is still modeled as the
 //! naive loops. The plan is purely a simulator accelerator, which is
 //! why serving, eval, and benches can all sit on it without touching
@@ -53,6 +69,29 @@ use crate::mcu::{cost, FramModel, Ledger};
 use crate::models::ModelDef;
 use crate::nn::layers::{conv2d_shape, Layer};
 
+/// Lane width of the interior conv kernel: 8 × i16 weights / 8 × i32
+/// offsets per group — one 128-bit vector register each, the narrowest
+/// width every target this runs on can autovectorize.
+pub const CONV_LANES: usize = 8;
+
+/// The largest attainable `|x|` for Q8.8 activations (`|-32768|`,
+/// inclusive). A tap whose stamped `w̄` is ≥ this can never satisfy
+/// the strict keep predicate `w̄ < |x|` (since `|x| ≤ AX_CEIL`) and is
+/// dead at that scale — the `live` cut excludes it from the search.
+const AX_CEIL: u32 = 1 << 15;
+
+/// Interior-pixel conv kernel flavor. `Lanes` (the default) runs the
+/// lane-packed tables; `Scalar` runs the same taps through the plain
+/// per-tap loop. Both are bit-identical (i64 accumulation is
+/// order-independent); `Scalar` exists so benches and property tests
+/// can price and pin the lane packing against its reference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ConvInterior {
+    #[default]
+    Lanes,
+    Scalar,
+}
+
 /// Build-time configuration a plan is compiled against (the plan
 /// equivalent of [`super::infer::EngineConfig`], with the estimator
 /// passed by kind so the plan owns its estimator and stays `Send`).
@@ -66,6 +105,9 @@ pub struct PlanConfig {
     pub precomputed_conv_thresholds: bool,
     /// Runtime threshold scale in Q8.8 (256 = 1.0), baked at compile.
     pub t_scale_q8: u32,
+    /// Interior conv kernel flavor (bench/test knob; see
+    /// [`ConvInterior`]).
+    pub conv_interior: ConvInterior,
 }
 
 impl PlanConfig {
@@ -80,6 +122,7 @@ impl PlanConfig {
             sonic_accumulators: true,
             precomputed_conv_thresholds: false,
             t_scale_q8: 256,
+            conv_interior: ConvInterior::default(),
         }
     }
 }
@@ -107,18 +150,61 @@ struct StreamTap {
     w: i64,
 }
 
-/// One scatter conv tap (Unit / ZeroSkip), stored sorted by `wbar`
-/// ascending within its input channel so the keep-set per pixel is a
-/// prefix.
+/// One scatter conv tap in the canonical scale-independent order
+/// (descending `|w|` within its segment). The border path reads all
+/// four fields; the interior path reads the lane-packed mirror
+/// instead.
 #[derive(Debug, Clone, Copy)]
-struct ScatterTap {
-    /// Precomputed Eq. 3 threshold `w̄ = T_raw/|w|` (0 in ZeroSkip).
-    wbar: u32,
-    w: i64,
+struct ConvTap {
+    w: i16,
     /// `o*oh*ow - u*ow - v`: accumulator index is `kbase + iy*ow + ix`.
     kbase: i32,
     u: u8,
     v: u8,
+}
+
+/// One tap segment: a maximal run of taps sharing one input channel
+/// and one raw threshold, sorted by descending `|w|` so the stamped
+/// `w̄` values are non-decreasing along it at every scale.
+#[derive(Debug, Clone, Copy)]
+struct ConvSeg {
+    /// `[start, end)` into `ConvTables::taps` / `abs_w` (and the
+    /// plan's stamped `wbar`).
+    start: u32,
+    end: u32,
+    /// First lane group of this segment in `lane_w` / `lane_off`.
+    lane_start: u32,
+    /// Raw (unscaled) Eq. 3 threshold shared by every tap here.
+    t_raw: u32,
+}
+
+/// The scale-invariant packed tables of one conv layer: tap order,
+/// lane-packed interior mirror, and the charge constants depend only
+/// on the weights and mode — never on `t_scale_q8` — so every plan
+/// compiled for a different runtime scale of the same model shares one
+/// copy behind an `Arc`. A plan-cache miss stamps fresh cut tables
+/// over these ([`stamp_conv_cuts`]) instead of re-sorting.
+#[derive(Debug)]
+struct ConvTables {
+    /// Scatter taps in segment order (Unit / ZeroSkip; empty for the
+    /// streaming modes).
+    taps: Vec<ConvTap>,
+    /// `|w|` per tap — the stamping input for `w̄ = T·s/|w|`.
+    abs_w: Vec<u16>,
+    /// Tap segments, grouped per input channel (see `ci_segs`).
+    segs: Vec<ConvSeg>,
+    /// Per input channel `[start, end)` into `segs`.
+    ci_segs: Vec<(u32, u32)>,
+    /// Interior mirror of `taps`: weights and accumulator offsets in
+    /// [`CONV_LANES`]-wide groups, each segment padded to whole groups
+    /// (padding is never read — the per-pixel cut bounds every loop).
+    lane_w: Vec<[i16; CONV_LANES]>,
+    lane_off: Vec<[i32; CONV_LANES]>,
+    /// Streaming taps in reference order (Dense / StaticSparse only).
+    stream_taps: Vec<StreamTap>,
+    /// Input-independent ledger charges minus the division terms
+    /// (those are scale-dependent and stamped per plan).
+    charges_base: LayerCharges,
 }
 
 #[derive(Debug, Clone)]
@@ -137,12 +223,18 @@ struct ConvPlan {
     out_len: usize,
     bias_acc: Vec<i64>,
     requant_m: i64,
-    /// Scatter taps flattened, grouped per input channel (see `ci_ranges`).
-    taps: Vec<ScatterTap>,
-    /// Per input channel `[start, end)` into `taps`.
-    ci_ranges: Vec<(u32, u32)>,
-    /// Streaming taps in reference order (Dense / StaticSparse only).
-    stream_taps: Vec<StreamTap>,
+    /// Shared scale-invariant tables (tap order, lanes, stream taps).
+    tables: Arc<ConvTables>,
+    /// Stamped `w̄` per tap, aligned with `tables.taps` —
+    /// non-decreasing within each segment (the prefix invariant).
+    wbar: Vec<u32>,
+    /// Per segment: taps with `w̄ == 0` (kept by every nonzero pixel).
+    always: Vec<u16>,
+    /// Per segment: taps with `w̄ < AX_CEIL` (reachable at all); the
+    /// per-pixel binary search runs only over `[always, live)`.
+    live: Vec<u16>,
+    /// Interior kernel flavor baked from the config.
+    lanes: bool,
     total_conn: u64,
     charges: LayerCharges,
 }
@@ -229,14 +321,15 @@ impl PlannedModel {
     /// `base` — a plan previously compiled from the **same model under
     /// the same mode/div**, differing only in `t_scale_q8`.
     ///
-    /// Linear layers' magnitude-sorted rows depend only on the weights,
-    /// so they are reused behind their `Arc` (no copy, no re-sort);
-    /// only the effective threshold `t_eff` is recomputed. Conv layers
-    /// are recompiled in full: their taps are *sorted by* the
-    /// scale-dependent threshold `w̄ = T·s/|w|`, so the table order
-    /// itself changes with the scale. The result is bit-identical to a
-    /// fresh [`PlannedModel::compile`] at the same `cfg` (property-
-    /// tested across the zoo in `control::plan_cache`).
+    /// Linear layers' magnitude-sorted rows *and* conv layers' tap
+    /// order + lane packing depend only on the weights, so both are
+    /// reused behind their `Arc`s (no copy, no re-sort). Only the
+    /// scale-dependent residue is rebuilt: the linear `t_eff` scalars
+    /// and the conv **cut tables** (stamped `w̄` values plus the
+    /// `always`/`live` prefix lengths per segment) — `n` divisions per
+    /// conv layer, no sorting. The result is bit-identical to a fresh
+    /// [`PlannedModel::compile`] at the same `cfg` (property-tested
+    /// across the zoo in `control::plan_cache`).
     pub fn compile_shared(
         q: &QModel,
         cfg: PlanConfig,
@@ -259,8 +352,14 @@ impl PlannedModel {
                 Layer::Conv { out_ch, in_ch, kh, kw, pool } => {
                     let [c, h, wd] = shape;
                     debug_assert_eq!(c, in_ch, "conv input channels");
+                    // Reuse the donor's tap order + lane tables when
+                    // sharing; only the cut tables are stamped fresh.
+                    let reuse = base.and_then(|b| match &b.layers[li] {
+                        LayerPlan::Conv(bc) => Some(Arc::clone(&bc.tables)),
+                        _ => None,
+                    });
                     let cp = compile_conv(
-                        ql, &cfg, div.as_ref(), out_ch, in_ch, h, wd, kh, kw, pool,
+                        ql, &cfg, div.as_ref(), out_ch, in_ch, h, wd, kh, kw, pool, reuse,
                     );
                     max_acc = max_acc.max(out_ch * cp.n_pos);
                     max_act = max_act.max(out_ch * cp.n_pos);
@@ -435,9 +534,9 @@ impl PlannedModel {
     /// input itself) each nonzero input value binary-searches its
     /// keep-set cut exactly as the kernel would — Eq. 2's
     /// `|w| > T/|x|` prefix per linear row, Eq. 3's `w̄ < |x|` prefix
-    /// per conv input channel — so the layer-0 count is exact up to
-    /// conv border clipping (borders are counted as interior and the
-    /// total clamped, a small deliberate overcount). Deeper layers'
+    /// per conv segment — and, since the interior/border split, border
+    /// pixels count only their clipped in-bounds taps, so the layer-0
+    /// count is **exact** (asserted by the plan tests). Deeper layers'
     /// activations are unknown before execution, so each one is billed
     /// its input-independent executed-MAC total scaled by the layer-0
     /// keep ratio, the plan's input-density proxy. `Dense` and
@@ -480,8 +579,10 @@ impl PlannedModel {
     /// Exact kept-MAC count of the **first** layer for `x_raw`, as
     /// `(kept, ceiling)` — the input-density probe shared by
     /// [`PlannedModel::estimate_macs`] and the control plane's
-    /// per-layer profiled estimator. For the input-independent modes
-    /// (`Dense`/`StaticSparse`) this is `(ceiling, ceiling)`.
+    /// per-layer profiled estimator. Exact for conv first layers too:
+    /// border pixels count only their clipped in-bounds taps, exactly
+    /// as the split kernel executes them. For the input-independent
+    /// modes (`Dense`/`StaticSparse`) this is `(ceiling, ceiling)`.
     pub fn layer0_exact_kept(&self, x_raw: &[i16]) -> (u64, u64) {
         assert_eq!(x_raw.len(), self.input_len, "input length");
         let Some(first) = self.layers.first() else { return (0, 0) };
@@ -490,24 +591,7 @@ impl PlannedModel {
             return (total0, total0);
         }
         let kept0 = match first {
-            LayerPlan::Conv(cp) => {
-                let mut kept = 0u64;
-                for (ci, &(s, e)) in cp.ci_ranges.iter().enumerate() {
-                    let taps = &cp.taps[s as usize..e as usize];
-                    if taps.is_empty() {
-                        continue;
-                    }
-                    let plane = &x_raw[ci * cp.h * cp.wd..(ci + 1) * cp.h * cp.wd];
-                    for &xv in plane {
-                        if xv == 0 {
-                            continue;
-                        }
-                        let ax = (xv as i32).unsigned_abs();
-                        kept += taps.partition_point(|t| t.wbar < ax) as u64;
-                    }
-                }
-                kept.min(total0)
-            }
+            LayerPlan::Conv(cp) => conv_count_kept(cp, x_raw),
             LayerPlan::Linear(lp) => {
                 let mut kept = 0u64;
                 for (k, &xv) in x_raw.iter().enumerate() {
@@ -550,9 +634,13 @@ fn layer_static_macs(lp: &LayerPlan, mode: PruneMode) -> u64 {
     match lp {
         LayerPlan::Conv(cp) => match mode {
             PruneMode::Dense => cp.total_conn,
-            PruneMode::StaticSparse => cp.stream_taps.len() as u64 * cp.n_pos as u64,
+            PruneMode::StaticSparse => {
+                cp.tables.stream_taps.len() as u64 * cp.n_pos as u64
+            }
             // scatter modes store only live taps
-            PruneMode::ZeroSkip | PruneMode::Unit => cp.taps.len() as u64 * cp.n_pos as u64,
+            PruneMode::ZeroSkip | PruneMode::Unit => {
+                cp.tables.taps.len() as u64 * cp.n_pos as u64
+            }
         },
         LayerPlan::Linear(lin) => match mode {
             PruneMode::Dense => (lin.n_in * lin.n_out) as u64,
@@ -610,11 +698,17 @@ fn charge_layer(ledger: &mut Ledger, ch: &LayerCharges, kept: u64, total_conn: u
     ledger.fram_write(writes);
 }
 
+/// Build the scale-invariant conv tables (see [`ConvTables`]): one
+/// enumeration of the live taps, grouped into per-input-channel
+/// segments by raw threshold, each segment sorted by descending `|w|`
+/// (stable, so equal-magnitude taps keep their reference enumeration
+/// order — deterministic tables for a given model), plus the
+/// lane-packed interior mirror and the scale-independent charge
+/// constants.
 #[allow(clippy::too_many_arguments)]
-fn compile_conv(
+fn build_conv_tables(
     ql: &super::qmodel::QLayer,
-    cfg: &PlanConfig,
-    div: &dyn DivApprox,
+    mode: PruneMode,
     out_ch: usize,
     in_ch: usize,
     h: usize,
@@ -622,63 +716,42 @@ fn compile_conv(
     kh: usize,
     kw: usize,
     pool: bool,
-) -> ConvPlan {
+) -> ConvTables {
     let (oh, ow) = conv2d_shape(h, wd, kh, kw);
     let n_pos = oh * ow;
     let n_taps_total = (out_ch * in_ch * kh * kw) as u64;
-    let scatter_mode = matches!(cfg.mode, PruneMode::Unit | PruneMode::ZeroSkip);
+    let scatter_mode = matches!(mode, PruneMode::Unit | PruneMode::ZeroSkip);
 
-    let mut per_ci: Vec<Vec<ScatterTap>> = vec![Vec::new(); in_ch];
+    // Per input channel, taps bucketed by raw threshold (BTreeMap ⇒
+    // deterministic segment order). ZeroSkip has no threshold: one
+    // bucket (t_raw = 0) per channel.
+    let mut per_ci: Vec<std::collections::BTreeMap<u32, Vec<(u16, ConvTap)>>> =
+        (0..in_ch).map(|_| std::collections::BTreeMap::new()).collect();
     let mut stream_taps = Vec::new();
     let mut n_live = 0u64;
-    let mut divs = 0u64;
-    let mut div_cycles = 0u64;
 
     for o in 0..out_ch {
-        let t_layer = scaled_t(
-            if !ql.t_raw_groups.is_empty() { ql.t_raw_groups[o] } else { ql.t_raw },
-            cfg.t_scale_q8,
-        );
+        let t_raw_o = if !ql.t_raw_groups.is_empty() { ql.t_raw_groups[o] } else { ql.t_raw };
         for ci in 0..in_ch {
             for u in 0..kh {
                 for v in 0..kw {
                     let wv = ql.w[((o * in_ch + ci) * kh + u) * kw + v];
-                    match cfg.mode {
-                        PruneMode::Unit => {
+                    match mode {
+                        PruneMode::Unit | PruneMode::ZeroSkip => {
                             if wv == 0 {
                                 continue; // pruned for free at plan time
                             }
-                            let wbar = if t_layer == 0 {
-                                0
-                            } else {
-                                let c = wv.unsigned_abs() as u32;
-                                if !cfg.precomputed_conv_thresholds {
-                                    divs += 1;
-                                    div_cycles += div.cycles(t_layer, c);
-                                }
-                                div.div(t_layer, c)
-                            };
                             n_live += 1;
-                            per_ci[ci].push(ScatterTap {
-                                wbar,
-                                w: wv as i64,
-                                kbase: (o * n_pos) as i32 - (u * ow) as i32 - v as i32,
-                                u: u as u8,
-                                v: v as u8,
-                            });
-                        }
-                        PruneMode::ZeroSkip => {
-                            if wv == 0 {
-                                continue;
-                            }
-                            n_live += 1;
-                            per_ci[ci].push(ScatterTap {
-                                wbar: 0,
-                                w: wv as i64,
-                                kbase: (o * n_pos) as i32 - (u * ow) as i32 - v as i32,
-                                u: u as u8,
-                                v: v as u8,
-                            });
+                            let key = if mode == PruneMode::Unit { t_raw_o } else { 0 };
+                            per_ci[ci].entry(key).or_default().push((
+                                wv.unsigned_abs() as u16,
+                                ConvTap {
+                                    w: wv as i16,
+                                    kbase: (o * n_pos) as i32 - (u * ow) as i32 - v as i32,
+                                    u: u as u8,
+                                    v: v as u8,
+                                },
+                            ));
                         }
                         PruneMode::StaticSparse => {
                             if wv == 0 {
@@ -706,31 +779,63 @@ fn compile_conv(
         }
     }
 
-    // Sort each input channel's taps by ascending threshold so the
-    // per-pixel keep-set `w̄ < |x|` is a prefix.
+    // Flatten buckets into segments: descending |w| inside each (the
+    // stamped w̄ is then non-decreasing at every scale, because every
+    // division estimator is monotone non-increasing in its divisor —
+    // property-pinned in `crate::approx`), lane-packed mirror padded
+    // per segment.
     let mut taps = Vec::new();
-    let mut ci_ranges = Vec::with_capacity(in_ch);
+    let mut abs_w = Vec::new();
+    let mut segs = Vec::new();
+    let mut ci_segs = Vec::with_capacity(in_ch);
+    let mut lane_w: Vec<[i16; CONV_LANES]> = Vec::new();
+    let mut lane_off: Vec<[i32; CONV_LANES]> = Vec::new();
     if scatter_mode {
-        for group in per_ci.iter_mut() {
-            group.sort_by_key(|t| t.wbar);
-            let start = taps.len() as u32;
-            taps.extend_from_slice(group);
-            ci_ranges.push((start, taps.len() as u32));
+        for buckets in per_ci.iter_mut() {
+            let seg_lo = segs.len() as u32;
+            for (&t_raw, group) in buckets.iter_mut() {
+                // Stable: ties in |w| keep reference enumeration order.
+                group.sort_by_key(|&(a, _)| std::cmp::Reverse(a));
+                assert!(
+                    group.len() <= u16::MAX as usize,
+                    "conv segment of {} taps overflows the u16 cut table",
+                    group.len()
+                );
+                let start = taps.len() as u32;
+                let lane_start = lane_w.len() as u32;
+                for &(a, t) in group.iter() {
+                    abs_w.push(a);
+                    taps.push(t);
+                }
+                for chunk in group.chunks(CONV_LANES) {
+                    let mut wl = [0i16; CONV_LANES];
+                    let mut ol = [0i32; CONV_LANES];
+                    for (l, &(_, t)) in chunk.iter().enumerate() {
+                        wl[l] = t.w;
+                        ol[l] = t.kbase;
+                    }
+                    lane_w.push(wl);
+                    lane_off.push(ol);
+                }
+                segs.push(ConvSeg { start, end: taps.len() as u32, lane_start, t_raw });
+            }
+            ci_segs.push((seg_lo, segs.len() as u32));
+        }
+    } else {
+        for _ in 0..in_ch {
+            ci_segs.push((0, 0));
         }
     }
 
     // Input-independent ledger charges (mirrors the reference loop's
     // per-tap billing exactly — see charge_layer for the kept-dependent
-    // remainder).
-    let mut charges = LayerCharges {
-        divs,
-        div_cycles,
-        ..LayerCharges::default()
-    };
+    // remainder; the division terms are scale-dependent and stamped in
+    // compile_conv).
+    let mut charges = LayerCharges::default();
     // bias preload: one MOV per output element
     charges.control_cycles += (out_ch * n_pos) as u64 * cost::MOV;
     // per-tap head: weight fetch (+ zero-compare in ZeroSkip)
-    match cfg.mode {
+    match mode {
         PruneMode::Unit | PruneMode::Dense => charges.fram_reads += n_taps_total,
         PruneMode::ZeroSkip => {
             charges.fram_reads += n_taps_total;
@@ -740,7 +845,7 @@ fn compile_conv(
     }
     // per live tap: the OH*OW activation stream (+ Eq. 3 compares)
     charges.fram_reads += n_live * n_pos as u64;
-    if matches!(cfg.mode, PruneMode::Unit | PruneMode::ZeroSkip) {
+    if matches!(mode, PruneMode::Unit | PruneMode::ZeroSkip) {
         charges.compares += n_live * n_pos as u64;
     }
     // requantization + activation threshold per output element
@@ -758,6 +863,92 @@ fn compile_conv(
     // commit output activations (SONIC double buffer)
     charges.fram_writes += FramModel::default().commit_words(out_len as u64);
 
+    ConvTables {
+        taps,
+        abs_w,
+        segs,
+        ci_segs,
+        lane_w,
+        lane_off,
+        stream_taps,
+        charges_base: charges,
+    }
+}
+
+/// Stamp the scale-dependent cut tables over `tables` at `cfg`'s
+/// scale: the per-tap `w̄ = T·s/|w|` values, the `always`/`live`
+/// prefix lengths per segment, and the division ledger charges. This
+/// is the whole per-scale cost of a conv layer — `n` divisions, no
+/// sorting.
+fn stamp_conv_cuts(
+    tables: &ConvTables,
+    cfg: &PlanConfig,
+    div: &dyn DivApprox,
+) -> (Vec<u32>, Vec<u16>, Vec<u16>, u64, u64) {
+    let mut wbar = vec![0u32; tables.taps.len()];
+    let mut always = Vec::with_capacity(tables.segs.len());
+    let mut live = Vec::with_capacity(tables.segs.len());
+    let mut divs = 0u64;
+    let mut div_cycles = 0u64;
+    for seg in &tables.segs {
+        let (s, e) = (seg.start as usize, seg.end as usize);
+        let t_layer = scaled_t(seg.t_raw, cfg.t_scale_q8);
+        if t_layer != 0 {
+            for i in s..e {
+                let c = tables.abs_w[i] as u32;
+                if !cfg.precomputed_conv_thresholds {
+                    divs += 1;
+                    div_cycles += div.cycles(t_layer, c);
+                }
+                wbar[i] = div.div(t_layer, c);
+            }
+        }
+        // |w| descending + div monotone in its divisor ⇒ w̄
+        // non-decreasing: the prefix invariant every per-pixel binary
+        // search rests on.
+        debug_assert!(
+            wbar[s..e].windows(2).all(|p| p[0] <= p[1]),
+            "w̄ not monotone along a |w|-sorted segment (non-monotone DivApprox?)"
+        );
+        always.push(wbar[s..e].partition_point(|&w| w == 0) as u16);
+        live.push(wbar[s..e].partition_point(|&w| w < AX_CEIL) as u16);
+    }
+    (wbar, always, live, divs, div_cycles)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn compile_conv(
+    ql: &super::qmodel::QLayer,
+    cfg: &PlanConfig,
+    div: &dyn DivApprox,
+    out_ch: usize,
+    in_ch: usize,
+    h: usize,
+    wd: usize,
+    kh: usize,
+    kw: usize,
+    pool: bool,
+    reuse: Option<Arc<ConvTables>>,
+) -> ConvPlan {
+    let (oh, ow) = conv2d_shape(h, wd, kh, kw);
+    let n_pos = oh * ow;
+    let n_taps_total = (out_ch * in_ch * kh * kw) as u64;
+    let tables = match reuse {
+        // The tap order and lane packing are a pure function of the
+        // weights; a donor plan for the same model hands them over
+        // without a re-sort.
+        Some(t) => {
+            debug_assert_eq!(t.ci_segs.len(), in_ch, "shared conv tables shape");
+            t
+        }
+        None => Arc::new(build_conv_tables(ql, cfg.mode, out_ch, in_ch, h, wd, kh, kw, pool)),
+    };
+    let (wbar, always, live, divs, div_cycles) = stamp_conv_cuts(&tables, cfg, div);
+    let mut charges = tables.charges_base;
+    charges.divs = divs;
+    charges.div_cycles = div_cycles;
+    let out_len = if pool { out_ch * (oh / 2) * (ow / 2) } else { out_ch * n_pos };
+
     ConvPlan {
         out_ch,
         h,
@@ -771,9 +962,11 @@ fn compile_conv(
         out_len,
         bias_acc: ql.bias_acc.clone(),
         requant_m: ql.requant_m,
-        taps,
-        ci_ranges,
-        stream_taps,
+        tables,
+        wbar,
+        always,
+        live,
+        lanes: cfg.conv_interior == ConvInterior::Lanes,
         total_conn: n_taps_total * n_pos as u64,
         charges,
     }
@@ -859,18 +1052,69 @@ fn compile_linear(
     }
 }
 
-/// Scatter conv kernel (Unit / ZeroSkip): per nonzero input pixel, one
-/// binary search finds the kept-tap prefix; only kept taps touch the
-/// accumulators. Returns the layer's kept-MAC count.
+/// Per-pixel keep-set cut of segment `gi` for activation magnitude
+/// `ax` (≥ 1): `always` taps have `w̄ == 0 < ax` unconditionally,
+/// taps past `live` have `w̄ ≥ AX_CEIL ≥ ax` unconditionally, so the
+/// binary search runs only over the window between them.
+#[inline]
+fn seg_cut(cp: &ConvPlan, gi: usize, ax: u32) -> usize {
+    let seg = &cp.tables.segs[gi];
+    let base = seg.start as usize;
+    let always = cp.always[gi] as usize;
+    let live = cp.live[gi] as usize;
+    always + cp.wbar[base + always..base + live].partition_point(|&w| w < ax)
+}
+
+/// Interior-pixel accumulation over the lane-packed tables: the kept
+/// prefix is walked in [`CONV_LANES`]-wide groups — the per-group
+/// `i16 × i16 → i32` multiply autovectorizes — with a scalar tail for
+/// the remainder. Bit-identical to the scalar tap loop (exact i32
+/// products, order-independent i64 accumulation).
+#[inline]
+fn scatter_lanes(
+    lane_w: &[[i16; CONV_LANES]],
+    lane_off: &[[i32; CONV_LANES]],
+    lane_start: usize,
+    cut: usize,
+    xv: i16,
+    pix: i32,
+    acc: &mut [i64],
+) {
+    let xv32 = xv as i32;
+    let full = cut / CONV_LANES;
+    for g in 0..full {
+        let w = &lane_w[lane_start + g];
+        let off = &lane_off[lane_start + g];
+        let mut prod = [0i32; CONV_LANES];
+        for l in 0..CONV_LANES {
+            prod[l] = xv32 * w[l] as i32;
+        }
+        for l in 0..CONV_LANES {
+            acc[(off[l] + pix) as usize] += prod[l] as i64;
+        }
+    }
+    let tail = cut - full * CONV_LANES;
+    if tail > 0 {
+        let w = &lane_w[lane_start + full];
+        let off = &lane_off[lane_start + full];
+        for l in 0..tail {
+            acc[(off[l] + pix) as usize] += (xv32 * w[l] as i32) as i64;
+        }
+    }
+}
+
+/// Scatter conv kernel (Unit / ZeroSkip): per nonzero input pixel and
+/// tap segment, one bounded binary search finds the kept-tap prefix;
+/// interior pixels run the lane-packed tables, border pixels the
+/// clipped scalar taps. Returns the layer's kept-MAC count.
 fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
+    let t = &*cp.tables;
     let (h, wd, kh, kw, oh, ow) = (cp.h, cp.wd, cp.kh, cp.kw, cp.oh, cp.ow);
     let mut kept = 0u64;
-    for (ci, &(s, e)) in cp.ci_ranges.iter().enumerate() {
-        let (s, e) = (s as usize, e as usize);
-        if s == e {
+    for (ci, &(g0, g1)) in t.ci_segs.iter().enumerate() {
+        if g0 == g1 {
             continue;
         }
-        let taps = &cp.taps[s..e];
         let plane = &src[ci * h * wd..(ci + 1) * h * wd];
         for iy in 0..h {
             let row_interior = iy + 1 >= kh && iy < oh;
@@ -881,27 +1125,93 @@ fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
                     continue; // |x| > w̄ ≥ 0 can never hold
                 }
                 let ax = (xv as i32).unsigned_abs();
-                // Eq. 3 keep-set is the prefix with w̄ < |x|.
-                let cut = taps.partition_point(|t| t.wbar < ax);
-                if cut == 0 {
+                let pix = (iy * ow + ix) as i32;
+                let interior = row_interior && ix + 1 >= kw && ix < ow;
+                for gi in g0 as usize..g1 as usize {
+                    // Eq. 3 keep-set is the segment prefix with w̄ < |x|.
+                    let cut = seg_cut(cp, gi, ax);
+                    if cut == 0 {
+                        continue;
+                    }
+                    let seg = &t.segs[gi];
+                    if interior {
+                        // Interior pixel: every tap lands in-bounds.
+                        if cp.lanes {
+                            scatter_lanes(
+                                &t.lane_w,
+                                &t.lane_off,
+                                seg.lane_start as usize,
+                                cut,
+                                xv,
+                                pix,
+                                acc,
+                            );
+                        } else {
+                            let base = seg.start as usize;
+                            let xv64 = xv as i64;
+                            for tp in &t.taps[base..base + cut] {
+                                acc[(tp.kbase + pix) as usize] += xv64 * tp.w as i64;
+                            }
+                        }
+                        kept += cut as u64;
+                    } else {
+                        // Border pixel: keep only taps whose output
+                        // position exists (p = iy-u, q = ix-v inside the
+                        // OH×OW grid).
+                        let base = seg.start as usize;
+                        let xv64 = xv as i64;
+                        for tp in &t.taps[base..base + cut] {
+                            let (u, v) = (tp.u as usize, tp.v as usize);
+                            if iy >= u && iy - u < oh && ix >= v && ix - v < ow {
+                                acc[(tp.kbase + pix) as usize] += xv64 * tp.w as i64;
+                                kept += 1;
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    kept
+}
+
+/// Count (without accumulating) the kept MACs [`conv_scatter`] would
+/// execute for `src` — the exact layer-0 probe behind
+/// [`PlannedModel::layer0_exact_kept`]. Mirrors the kernel's
+/// interior/border split tap for tap.
+fn conv_count_kept(cp: &ConvPlan, src: &[i16]) -> u64 {
+    let t = &*cp.tables;
+    let (h, wd, kh, kw, oh, ow) = (cp.h, cp.wd, cp.kh, cp.kw, cp.oh, cp.ow);
+    let mut kept = 0u64;
+    for (ci, &(g0, g1)) in t.ci_segs.iter().enumerate() {
+        if g0 == g1 {
+            continue;
+        }
+        let plane = &src[ci * h * wd..(ci + 1) * h * wd];
+        for iy in 0..h {
+            let row_interior = iy + 1 >= kh && iy < oh;
+            let row_base = iy * wd;
+            for ix in 0..wd {
+                let xv = plane[row_base + ix];
+                if xv == 0 {
                     continue;
                 }
-                let xv64 = xv as i64;
-                let pix = (iy * ow + ix) as i32;
-                if row_interior && ix + 1 >= kw && ix < ow {
-                    // Interior pixel: every tap lands in-bounds.
-                    for t in &taps[..cut] {
-                        acc[(t.kbase + pix) as usize] += xv64 * t.w;
+                let ax = (xv as i32).unsigned_abs();
+                let interior = row_interior && ix + 1 >= kw && ix < ow;
+                for gi in g0 as usize..g1 as usize {
+                    let cut = seg_cut(cp, gi, ax);
+                    if cut == 0 {
+                        continue;
                     }
-                    kept += cut as u64;
-                } else {
-                    // Border pixel: keep only taps whose output position
-                    // exists (p = iy-u, q = ix-v inside the OH×OW grid).
-                    for t in &taps[..cut] {
-                        let (u, v) = (t.u as usize, t.v as usize);
-                        if iy >= u && iy - u < oh && ix >= v && ix - v < ow {
-                            acc[(t.kbase + pix) as usize] += xv64 * t.w;
-                            kept += 1;
+                    if interior {
+                        kept += cut as u64;
+                    } else {
+                        let base = t.segs[gi].start as usize;
+                        for tp in &t.taps[base..base + cut] {
+                            let (u, v) = (tp.u as usize, tp.v as usize);
+                            if iy >= u && iy - u < oh && ix >= v && ix - v < ow {
+                                kept += 1;
+                            }
                         }
                     }
                 }
@@ -915,7 +1225,7 @@ fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
 /// accumulate per tap, no per-position predicate.
 fn conv_stream(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
     let (wd, oh, ow) = (cp.wd, cp.oh, cp.ow);
-    for t in &cp.stream_taps {
+    for t in &cp.tables.stream_taps {
         let base = t.acc_base as usize;
         let src_off = t.src_off as usize;
         let w = t.w;
@@ -928,7 +1238,7 @@ fn conv_stream(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
             }
         }
     }
-    cp.stream_taps.len() as u64 * cp.n_pos as u64
+    cp.tables.stream_taps.len() as u64 * cp.n_pos as u64
 }
 
 /// In-place 2×2 max pool over a `C×OH×OW` buffer (writes are always at
@@ -1092,6 +1402,19 @@ mod tests {
             planned.ledger.mem_cycles, naive.ledger.mem_cycles,
             "{mode:?}/{kind:?} mem cycles"
         );
+        // The scalar interior kernel is the lane path's reference:
+        // identical output, always.
+        let mut ps = PlanBacked::new(
+            q,
+            PlanConfig {
+                conv_interior: ConvInterior::Scalar,
+                ..PlanConfig::for_mode(mode, kind)
+            },
+        );
+        let scalar = ps.infer(x);
+        assert_eq!(scalar.logits_raw, planned.logits_raw, "{mode:?}/{kind:?} lane/scalar");
+        assert_eq!(scalar.kept, planned.kept, "{mode:?}/{kind:?} lane/scalar kept");
+        assert_eq!(scalar.ledger.counts, planned.ledger.counts);
     }
 
     #[test]
@@ -1115,6 +1438,41 @@ mod tests {
             let x = q.quantize_input(&x_f);
             for kind in [DivKind::Exact, DivKind::Shift] {
                 assert_identical(&q, &x, mode, kind);
+            }
+        }
+    }
+
+    /// Border-heavy shape: the kernel spans the whole input, so every
+    /// pixel takes the clipped border path (oh = ow = 1, no interior
+    /// pixels at all). The split kernel must stay bit-identical to the
+    /// naive engine here — this is the shape where an interior/border
+    /// bookkeeping bug cannot hide.
+    #[test]
+    fn planned_matches_naive_on_border_only_shapes() {
+        let def = ModelDef {
+            name: "border-heavy".into(),
+            input_shape: [2, 5, 5],
+            classes: 4,
+            layers: vec![
+                Layer::Conv { out_ch: 3, in_ch: 2, kh: 5, kw: 5, pool: false },
+                Layer::Linear { n_in: 3, n_out: 4, relu: false },
+            ],
+        };
+        let params = Params::random(&def, 29);
+        let th = Thresholds::uniform(2, 0.3);
+        for mode in [PruneMode::Unit, PruneMode::ZeroSkip] {
+            let mut q = QModel::quantize(&def, &params);
+            if mode == PruneMode::Unit {
+                q = q.with_thresholds(&th);
+            }
+            for seed in 0..4u64 {
+                let x_f: Vec<f32> = (0..def.input_len())
+                    .map(|i| (((i as u64 * 13 + seed * 7) % 27) as f32 - 13.0) / 7.0)
+                    .collect();
+                let x = q.quantize_input(&x_f);
+                for kind in [DivKind::Exact, DivKind::Shift, DivKind::Mask] {
+                    assert_identical(&q, &x, mode, kind);
+                }
             }
         }
     }
@@ -1145,7 +1503,8 @@ mod tests {
         let def = zoo("mnist");
         let params = Params::random(&def, 23);
         let mut th = Thresholds::uniform(3, 0.2);
-        // per-output-channel refinement on the conv layers
+        // per-output-channel refinement on the conv layers: exercises
+        // the multi-segment (one per distinct t_raw) tap grouping
         th.groups[0] = (0..6).map(|i| 0.1 + 0.05 * i as f32).collect();
         th.groups[1] = (0..16).map(|i| 0.05 + 0.02 * i as f32).collect();
         let q = QModel::quantize(&def, &params).with_thresholds(&th).with_fatrelu(0.3);
@@ -1193,6 +1552,18 @@ mod tests {
             let x = plan.quantize_input(&x_f);
             let est = plan.estimate_macs(&x);
             assert!(est >= 1 && est <= dense, "{mode:?}: est {est} vs dense {dense}");
+            // Since the interior/border split, the layer-0 probe is
+            // EXACT for the conv first layer: it must equal the kept
+            // count the kernel actually executes.
+            let mut scratch = plan.new_scratch();
+            let out = plan.infer(&x, &mut scratch);
+            let (kept0, total0) = plan.layer0_exact_kept(&x);
+            assert_eq!(kept0, out.kept[0], "{mode:?}: layer-0 probe not exact");
+            assert_eq!(
+                total0,
+                out.kept[0] + out.skipped[0],
+                "{mode:?}: layer-0 ceiling off"
+            );
             // Zeroing inputs never raises the estimate.
             let mut sparser = x.clone();
             for v in sparser.iter_mut().step_by(3) {
@@ -1243,11 +1614,12 @@ mod tests {
     }
 
     #[test]
-    fn shared_recompile_is_bit_identical_and_shares_linear_tables() {
+    fn shared_recompile_is_bit_identical_and_shares_tables() {
         // The plan cache's contract: a plan recompiled at a new scale
         // with a donor's scale-invariant tables must be bit-identical
-        // to a fresh compile at that scale, while actually sharing the
-        // linear tables (no copy).
+        // to a fresh compile at that scale, while actually sharing BOTH
+        // the linear tables and the conv tap/lane tables (no copy, no
+        // re-sort — only the cut tables and t_eff are stamped).
         let def = zoo("mnist");
         let params = Params::random(&def, 28);
         let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
@@ -1268,14 +1640,51 @@ mod tests {
             assert_eq!(oa.ledger.compute_cycles, ob.ledger.compute_cycles);
             assert_eq!(oa.ledger.mem_cycles, ob.ledger.mem_cycles);
             assert_eq!(fresh.estimate_macs(&x), shared.estimate_macs(&x));
-            let mut linear_seen = false;
+            let (mut linear_seen, mut conv_seen) = (false, false);
             for (ls, lb) in shared.layers.iter().zip(&base.layers) {
-                if let (LayerPlan::Linear(a), LayerPlan::Linear(b)) = (ls, lb) {
-                    assert!(Arc::ptr_eq(&a.tables, &b.tables), "tables copied, not shared");
-                    linear_seen = true;
+                match (ls, lb) {
+                    (LayerPlan::Linear(a), LayerPlan::Linear(b)) => {
+                        assert!(Arc::ptr_eq(&a.tables, &b.tables), "linear tables copied");
+                        linear_seen = true;
+                    }
+                    (LayerPlan::Conv(a), LayerPlan::Conv(b)) => {
+                        assert!(Arc::ptr_eq(&a.tables, &b.tables), "conv tables copied");
+                        conv_seen = true;
+                    }
+                    _ => {}
                 }
             }
-            assert!(linear_seen, "mnist plan must contain a linear layer");
+            assert!(linear_seen && conv_seen, "mnist plan must have conv + linear layers");
+        }
+    }
+
+    #[test]
+    fn cut_tables_bound_the_search_window() {
+        // The always/live prefix lengths must bracket exactly the taps
+        // the per-pixel search can distinguish: w̄ == 0 before
+        // `always`, 0 < w̄ < AX_CEIL inside the window, w̄ ≥ AX_CEIL
+        // after `live`.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 30);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        for scale in [0u32, 64, 256, 1024, 60000] {
+            let plan = PlannedModel::compile(
+                &q,
+                PlanConfig { t_scale_q8: scale, ..PlanConfig::unit(DivKind::Shift) },
+            );
+            for lp in &plan.layers {
+                let LayerPlan::Conv(cp) = lp else { continue };
+                for (gi, seg) in cp.tables.segs.iter().enumerate() {
+                    let (s, e) = (seg.start as usize, seg.end as usize);
+                    let (a, l) = (cp.always[gi] as usize, cp.live[gi] as usize);
+                    assert!(a <= l && l <= e - s, "cut order");
+                    assert!(cp.wbar[s..s + a].iter().all(|&w| w == 0));
+                    assert!(cp.wbar[s + a..s + l].iter().all(|&w| w > 0 && w < AX_CEIL));
+                    assert!(cp.wbar[s + l..e].iter().all(|&w| w >= AX_CEIL));
+                    // And the segment is monotone — the prefix invariant.
+                    assert!(cp.wbar[s..e].windows(2).all(|p| p[0] <= p[1]));
+                }
+            }
         }
     }
 

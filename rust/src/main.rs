@@ -504,13 +504,16 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// `unit serve --listen ADDR [--window N] [--park P] [--deadline-ms D]
-/// [--max-conns C] [--serve-secs S] [--stats-secs T] [--budget-mj B]`
+/// `unit serve --listen ADDR [--window N] [--park P] [--park-bytes B]
+/// [--deadline-ms D] [--max-conns C] [--serve-secs S] [--stats-secs T]
+/// [--budget-mj B]`
 ///
 /// Streamed TCP serving: sessions with credit-window backpressure
 /// (window-overflow frames parked for credit-return admission when
-/// `--park` > 0), deadlines, and cancellation over the framed wire
-/// protocol (see README "Streaming serving" / "Adaptive serving").
+/// `--park` > 0, with `--park-bytes` optionally capping the decoded
+/// bytes the queue may pin), deadlines, and cancellation over the
+/// framed wire protocol (see README "Streaming serving" / "Adaptive
+/// serving").
 /// `--listen 127.0.0.1:0` binds an ephemeral port; the bound address
 /// is printed on one line so scripts/CI can scrape it. `--serve-secs
 /// 0` (default) serves until killed.
@@ -525,6 +528,7 @@ fn cmd_serve_listen(
         session: SessionCfg {
             max_inflight: args.usize_or("window", 64),
             park: args.usize_or("park", 0),
+            park_bytes: args.usize_or("park-bytes", 0),
             default_deadline: match args.u64_or("deadline-ms", 0) {
                 0 => None,
                 ms => Some(Duration::from_millis(ms)),
@@ -568,13 +572,17 @@ fn cmd_serve_listen(
                 Some(g) => {
                     let gs = g.status();
                     format!(
-                        " scale={:.2}x step={}/{} ewma={:.3}mJ budget={:.3}mJ swaps={}",
+                        " scale={:.2}x step={}/{} ewma={:.3}mJ budget={:.3}mJ swaps={} \
+                         bg={}p/{}c/{}u",
                         gs.scale_q8 as f64 / 256.0,
                         gs.step,
                         gs.steps_total,
                         gs.ewma_mj,
                         gs.budget_mj,
-                        gs.swaps
+                        gs.swaps,
+                        gs.bg_pending,
+                        gs.bg_compiled,
+                        gs.bg_upgrades
                     )
                 }
                 None => String::new(),

@@ -11,16 +11,43 @@
 //!   cost O(log n_out) amortized instead of one compare each;
 //! * [`FloatScratch`] ping-pong buffers remove per-call allocation.
 //!
+//! The float path shares the quant plan's **scale-indexed layout
+//! contract** ([`crate::engine::plan`]): everything that depends only
+//! on the *weights* — conv weight/bias buffers and the linear
+//! magnitude-sorted tables — lives behind `Arc`s, and everything that
+//! depends on the *thresholds* (conv `w̄` tables, linear `t`, the
+//! FATReLU cut) is a thin stamped residue. [`FloatPlan::restamp`]
+//! rebuilds only the residue for a new [`ForwardOpts`]: a threshold
+//! sweep (Fig. 5 percentile curves, the Table-2 mechanism comparison)
+//! pays the O(weights · log) sort once, then O(weights) per setting.
+//!
 //! Results are **bit-identical** to the reference pass: per output
 //! element, contributions are applied in the same order (ascending
 //! input index, taps in declaration order), and the same f32 predicate
 //! decides every keep/skip, so logits and per-layer kept/skipped
-//! counts match exactly. `evaluate_float` and the parallel batched
-//! eval in [`crate::train::eval`] run on this path.
+//! counts match exactly. (This is also why the float conv does *not*
+//! reorder taps the way the quant plan does: f32 accumulation is
+//! order-sensitive, so the hoisted `w̄` table keeps declaration
+//! order.) `evaluate_float` and the parallel batched eval in
+//! [`crate::train::eval`] run on this path.
+
+use std::sync::Arc;
 
 use super::forward::{ForwardOpts, ForwardStats};
 use super::layers::{conv2d_shape, Layer};
 use crate::models::{ModelDef, Params};
+
+/// The weight-only (threshold-invariant) tables of one linear layer,
+/// shared across every [`FloatPlan::restamp`] of the same model.
+#[derive(Debug)]
+struct FloatLinTables {
+    /// Per input row: weights sorted by descending `|w|`.
+    sorted_w: Vec<f32>,
+    /// `|w|` of `sorted_w` (binary-search key).
+    sorted_abs: Vec<f32>,
+    /// Original output index per sorted tap.
+    sorted_idx: Vec<u32>,
+}
 
 #[derive(Debug, Clone)]
 enum FLayer {
@@ -34,25 +61,22 @@ enum FLayer {
         oh: usize,
         ow: usize,
         pool: bool,
-        w: Vec<f32>,
-        b: Vec<f32>,
+        /// Weight-invariant buffers, shared across restamps.
+        w: Arc<Vec<f32>>,
+        b: Arc<Vec<f32>>,
         /// Hoisted Eq. 3 thresholds `T/|w|` (∞ for zero weights), same
-        /// layout as `w`.
+        /// layout as `w` — the threshold-dependent stamped residue.
         wbar: Vec<f32>,
     },
     Linear {
         n_in: usize,
         n_out: usize,
         relu: bool,
-        b: Vec<f32>,
-        /// Layer threshold `T`.
+        b: Arc<Vec<f32>>,
+        /// Layer threshold `T` (the stamped residue).
         t: f32,
-        /// Per input row: weights sorted by descending `|w|`.
-        sorted_w: Vec<f32>,
-        /// `|w|` of `sorted_w` (binary-search key).
-        sorted_abs: Vec<f32>,
-        /// Original output index per sorted tap.
-        sorted_idx: Vec<u32>,
+        /// Magnitude-sorted rows, shared across restamps.
+        tables: Arc<FloatLinTables>,
     },
 }
 
@@ -64,7 +88,8 @@ pub struct FloatScratch {
 }
 
 /// A `ModelDef + Params + ForwardOpts` triple compiled for fast host
-/// execution (thresholds and FATReLU cut-off are baked in).
+/// execution (thresholds and FATReLU cut-off are baked in; see
+/// [`FloatPlan::restamp`] for re-baking them cheaply).
 #[derive(Debug, Clone)]
 pub struct FloatPlan {
     layers: Vec<FLayer>,
@@ -72,6 +97,22 @@ pub struct FloatPlan {
     input_len: usize,
     n_layers: usize,
     max_act: usize,
+}
+
+/// Hoisted Eq. 3 threshold table for one conv weight buffer
+/// (identical formula to the reference pass — the whole point is
+/// computing it once, not per call).
+fn conv_wbar(w: &[f32], t: f32) -> Vec<f32> {
+    w.iter()
+        .map(|&wv| {
+            let a = wv.abs();
+            if a > 0.0 {
+                t / a
+            } else {
+                f32::INFINITY
+            }
+        })
+        .collect()
 }
 
 impl FloatPlan {
@@ -90,19 +131,7 @@ impl FloatPlan {
                     let [c, h, wd] = shape;
                     debug_assert_eq!(c, in_ch, "conv input channels");
                     let (oh, ow) = conv2d_shape(h, wd, kh, kw);
-                    // Identical formula to the reference pass — the
-                    // whole point is computing it once, not per call.
-                    let wbar: Vec<f32> = w
-                        .iter()
-                        .map(|&wv| {
-                            let a = wv.abs();
-                            if a > 0.0 {
-                                t / a
-                            } else {
-                                f32::INFINITY
-                            }
-                        })
-                        .collect();
+                    let wbar = conv_wbar(w, t);
                     max_act = max_act.max(out_ch * oh * ow);
                     shape = if pool { [out_ch, oh / 2, ow / 2] } else { [out_ch, oh, ow] };
                     layers.push(FLayer::Conv {
@@ -115,8 +144,8 @@ impl FloatPlan {
                         oh,
                         ow,
                         pool,
-                        w: w.clone(),
-                        b: b.clone(),
+                        w: Arc::new(w.clone()),
+                        b: Arc::new(b.clone()),
                         wbar,
                     });
                 }
@@ -146,11 +175,9 @@ impl FloatPlan {
                         n_in,
                         n_out,
                         relu,
-                        b: b.clone(),
+                        b: Arc::new(b.clone()),
                         t,
-                        sorted_w,
-                        sorted_abs,
-                        sorted_idx,
+                        tables: Arc::new(FloatLinTables { sorted_w, sorted_abs, sorted_idx }),
                     });
                 }
             }
@@ -161,6 +188,70 @@ impl FloatPlan {
             fat_t: opts.fat_t,
             input_len,
             max_act,
+        }
+    }
+
+    /// Re-bake this plan for new thresholds / FATReLU cut, **sharing**
+    /// every weight-derived table with `self` (conv weight/bias
+    /// buffers, linear sorted rows — behind `Arc`s, no copy, no
+    /// re-sort). Only the conv `w̄` tables and the linear `t` scalars
+    /// are recomputed: the float twin of the quant plan's cut-table
+    /// stamp. The result is bit-identical to a fresh
+    /// [`FloatPlan::compile`] of the same model under `opts`
+    /// (property-tested below).
+    pub fn restamp(&self, opts: &ForwardOpts) -> FloatPlan {
+        assert_eq!(opts.t_vec.len(), self.layers.len(), "t_vec arity");
+        let layers = self
+            .layers
+            .iter()
+            .zip(&opts.t_vec)
+            .map(|(layer, &t)| match layer {
+                // Constructed field by field (not cloned-then-patched)
+                // so the outgoing wbar Vec is never copied — only the
+                // Arcs are cloned and the new wbar is computed.
+                FLayer::Conv {
+                    out_ch,
+                    in_ch,
+                    kh,
+                    kw,
+                    h,
+                    wd,
+                    oh,
+                    ow,
+                    pool,
+                    w,
+                    b,
+                    wbar: _,
+                } => FLayer::Conv {
+                    out_ch: *out_ch,
+                    in_ch: *in_ch,
+                    kh: *kh,
+                    kw: *kw,
+                    h: *h,
+                    wd: *wd,
+                    oh: *oh,
+                    ow: *ow,
+                    pool: *pool,
+                    w: Arc::clone(w),
+                    b: Arc::clone(b),
+                    wbar: conv_wbar(w, t),
+                },
+                FLayer::Linear { n_in, n_out, relu, b, t: _, tables } => FLayer::Linear {
+                    n_in: *n_in,
+                    n_out: *n_out,
+                    relu: *relu,
+                    b: Arc::clone(b),
+                    t,
+                    tables: Arc::clone(tables),
+                },
+            })
+            .collect();
+        FloatPlan {
+            layers,
+            fat_t: opts.fat_t,
+            input_len: self.input_len,
+            n_layers: self.n_layers,
+            max_act: self.max_act,
         }
     }
 
@@ -270,16 +361,7 @@ impl FloatPlan {
                         cur_len = out_ch * ph * pw;
                     }
                 }
-                FLayer::Linear {
-                    n_in,
-                    n_out,
-                    relu,
-                    b,
-                    t,
-                    sorted_w,
-                    sorted_abs,
-                    sorted_idx,
-                } => {
+                FLayer::Linear { n_in, n_out, relu, b, t, tables } => {
                     let (n_in, n_out) = (*n_in, *n_out);
                     dst_buf[..n_out].copy_from_slice(b);
                     let mut kept = 0u64;
@@ -289,15 +371,15 @@ impl FloatPlan {
                         let a = xv.abs();
                         if a > 0.0 {
                             let tbar = *t / a;
-                            let abs_row = &sorted_abs[k * n_out..(k + 1) * n_out];
+                            let abs_row = &tables.sorted_abs[k * n_out..(k + 1) * n_out];
                             // Eq. 2 keep-set = the sorted-row prefix with
                             // |w| > T/|x|.
                             let cut = abs_row.partition_point(|&ab| ab > tbar);
                             kept += cut as u64;
                             skipped += (n_out - cut) as u64;
                             if cut > 0 {
-                                let ws = &sorted_w[k * n_out..k * n_out + cut];
-                                let idx = &sorted_idx[k * n_out..k * n_out + cut];
+                                let ws = &tables.sorted_w[k * n_out..k * n_out + cut];
+                                let idx = &tables.sorted_idx[k * n_out..k * n_out + cut];
                                 for (wv, &j) in ws.iter().zip(idx) {
                                     dst_buf[j as usize] += xv * *wv;
                                 }
@@ -372,6 +454,53 @@ mod tests {
             (0..def.input_len()).map(|i| ((i % 27) as f32 - 13.0) / 8.0).collect();
         let opts = ForwardOpts { t_vec: vec![0.15; def.layers.len()], fat_t: 0.3 };
         bit_identical(&def, &params, &x, &opts);
+    }
+
+    /// The float twin of the quant plan's cut-table stamp: a restamp
+    /// at new thresholds is bit-identical to a fresh compile AND
+    /// actually shares the weight-derived tables (Arc pointer
+    /// equality — no re-sort, no copy).
+    #[test]
+    fn restamp_bit_identical_and_shares_weight_tables() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 37);
+        let base_opts = ForwardOpts { t_vec: vec![0.0; def.layers.len()], fat_t: 0.0 };
+        let base = FloatPlan::compile(&def, &params, &base_opts);
+        let x: Vec<f32> = (0..def.input_len())
+            .map(|i| (((i * 23) % 31) as f32 - 15.0) / 9.0)
+            .collect();
+        for (t, fat) in [(0.0f32, 0.0f32), (0.07, 0.0), (0.3, 0.25), (0.6, 0.1)] {
+            let opts = ForwardOpts { t_vec: vec![t; def.layers.len()], fat_t: fat };
+            let stamped = base.restamp(&opts);
+            let fresh = FloatPlan::compile(&def, &params, &opts);
+            let (mut ss, mut sf) = (stamped.new_scratch(), fresh.new_scratch());
+            let (ls, stats_s) = stamped.forward(&x, &mut ss);
+            let (lf, stats_f) = fresh.forward(&x, &mut sf);
+            for (a, b) in ls.iter().zip(&lf) {
+                assert_eq!(a.to_bits(), b.to_bits(), "t={t} fat={fat}: logits differ");
+            }
+            assert_eq!(stats_s.kept, stats_f.kept, "t={t}: kept differ");
+            assert_eq!(stats_s.skipped, stats_f.skipped, "t={t}: skipped differ");
+            for (a, b) in stamped.layers.iter().zip(&base.layers) {
+                match (a, b) {
+                    (
+                        FLayer::Conv { w: wa, b: ba, .. },
+                        FLayer::Conv { w: wb, b: bb, .. },
+                    ) => {
+                        assert!(Arc::ptr_eq(wa, wb), "conv weights copied, not shared");
+                        assert!(Arc::ptr_eq(ba, bb), "conv bias copied, not shared");
+                    }
+                    (
+                        FLayer::Linear { tables: ta, b: ba, .. },
+                        FLayer::Linear { tables: tb, b: bb, .. },
+                    ) => {
+                        assert!(Arc::ptr_eq(ta, tb), "sorted rows copied, not shared");
+                        assert!(Arc::ptr_eq(ba, bb), "linear bias copied, not shared");
+                    }
+                    _ => panic!("layer kinds diverged across restamp"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -50,16 +50,28 @@ pub struct EvalRow {
     pub samples_per_s: f64,
 }
 
+/// One plan-compile latency measurement (µs): what a scale change
+/// costs at each tier — full compile, cut-table stamp, cache-hit
+/// swap, background miss→upgrade.
+#[derive(Debug, Clone)]
+pub struct CompileRow {
+    pub label: String,
+    pub us: f64,
+}
+
 /// The full perf snapshot emitted by `perf_hotpath`.
 #[derive(Debug, Clone, Default)]
 pub struct BenchPerf {
     pub model: String,
     pub engine: Vec<EngineRow>,
-    /// Planned-vs-naive throughput ratios per mode.
+    /// Planned-vs-naive throughput ratios per mode (plus the
+    /// lane-vs-scalar conv interior ratio, key `conv-lane`).
     pub speedups: Vec<(String, f64)>,
     pub divs: Vec<DivRow>,
     pub coord: Vec<CoordRow>,
     pub eval: Vec<EvalRow>,
+    /// Plan-compile latency tiers (section `plan_compile_us`).
+    pub compile: Vec<CompileRow>,
 }
 
 fn esc(s: &str) -> String {
@@ -135,6 +147,15 @@ impl BenchPerf {
                 if i + 1 < self.eval.len() { "," } else { "" }
             ));
         }
+        out.push_str("  ],\n  \"plan_compile_us\": [\n");
+        for (i, c) in self.compile.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"label\": \"{}\", \"us\": {}}}{}\n",
+                esc(&c.label),
+                num(c.us),
+                if i + 1 < self.compile.len() { "," } else { "" }
+            ));
+        }
         out.push_str("  ]\n}\n");
         out
     }
@@ -188,10 +209,13 @@ mod tests {
                 service_p99_us: 210,
             }],
             eval: vec![EvalRow { label: "parallel-4".into(), samples_per_s: 800.0 }],
+            compile: vec![CompileRow { label: "conv-stamp".into(), us: 120.5 }],
         };
         let j = b.to_json();
         assert!(j.contains("\"planned_speedup\": {\"unit\": 3.000}"));
         assert!(j.contains("\"backend\": \"planned\""));
+        assert!(j.contains("\"plan_compile_us\""));
+        assert!(j.contains("\"label\": \"conv-stamp\", \"us\": 120.500"));
         assert!(j.contains("shift\\\"x"));
         // balanced braces/brackets (cheap well-formedness check)
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -19,7 +19,7 @@
 
 use std::path::Path;
 
-use super::bench::{BenchPerf, CoordRow, DivRow, EngineRow, EvalRow};
+use super::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow};
 
 // ---------------------------------------------------------------- JSON
 
@@ -282,6 +282,12 @@ pub fn snapshot_from_json(text: &str) -> Result<BenchPerf, String> {
             samples_per_s: row.num_or("samples_per_s", 0.0),
         });
     }
+    for row in v.get("plan_compile_us").map(Json::as_arr).unwrap_or(&[]) {
+        out.compile.push(CompileRow {
+            label: row.get("label").and_then(Json::as_str).unwrap_or("").into(),
+            us: row.num_or("us", 0.0),
+        });
+    }
     Ok(out)
 }
 
@@ -297,7 +303,8 @@ pub fn load_snapshot(path: &Path) -> Result<BenchPerf, String> {
 /// One matched metric across two snapshots.
 #[derive(Debug, Clone)]
 pub struct DiffRow {
-    /// Snapshot section (`engine`, `speedup`, `coord`, `eval`, `div`).
+    /// Snapshot section (`engine`, `speedup`, `coord`, `eval`, `div`,
+    /// `compile`).
     pub section: &'static str,
     /// Row key inside the section (e.g. `unit/planned`, `workers=4`).
     pub key: String,
@@ -462,6 +469,19 @@ pub fn diff_snapshots(
             });
         }
     }
+    for o in &old.compile {
+        if let Some(n) = new.compile.iter().find(|n| n.label == o.label) {
+            rows.push(DiffRow {
+                section: "compile",
+                key: o.label.clone(),
+                metric: "us",
+                old: o.us,
+                new: n.us,
+                delta_pct: delta_pct(o.us, n.us, false),
+                gated: false, // absolute compile latency: machine-dependent
+            });
+        }
+    }
     DiffReport { rows, tolerance_pct }
 }
 
@@ -501,7 +521,27 @@ mod tests {
                 service_p99_us: 220,
             }],
             eval: vec![EvalRow { label: "quant-parallel-auto".into(), samples_per_s: eval_par }],
+            compile: vec![CompileRow { label: "conv-stamp".into(), us: 150.0 }],
         }
+    }
+
+    #[test]
+    fn compile_rows_roundtrip_and_stay_informational() {
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        let mut new = snapshot_from_json(&old.to_json()).unwrap();
+        assert_eq!(new.compile.len(), 1);
+        assert_eq!(new.compile[0].label, "conv-stamp");
+        // A big compile-latency swing shows in the table but never
+        // gates the build (machine-dependent absolute).
+        new.compile[0].us = 400.0;
+        let report = diff_snapshots(&old, &new, 10.0, false);
+        let row = report
+            .rows
+            .iter()
+            .find(|r| r.section == "compile")
+            .expect("compile row not diffed");
+        assert!(!row.gated);
+        assert!(report.regressions().iter().all(|r| r.section != "compile"));
     }
 
     #[test]

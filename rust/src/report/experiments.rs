@@ -20,12 +20,12 @@ use crate::data::Dataset;
 use crate::engine::{PlanConfig, PruneMode, QModel};
 use crate::mcu::{cost, EnergyModel};
 use crate::models::{zoo, ModelDef, Params};
-use crate::nn::ForwardOpts;
+use crate::nn::{FloatPlan, ForwardOpts};
 use crate::pruning::{
     apply_global_magnitude, calibrate, calibrate_fatrelu, CalibConfig, Thresholds,
 };
 use crate::runtime::{ArtifactStore, Runtime};
-use crate::train::{ensure_trained, evaluate_float, evaluate_quant_parallel, TrainConfig};
+use crate::train::{ensure_trained, evaluate_float_plan, evaluate_quant_parallel, TrainConfig};
 
 /// Mechanism sweep options.
 #[derive(Debug, Clone)]
@@ -203,14 +203,22 @@ pub fn run_mcu_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResu
 }
 
 /// Evaluate all mechanisms on the float engine (widar / desktop).
+///
+/// The sweep shares each parameter set's magnitude-sorted tables
+/// across mechanisms: one [`FloatPlan::compile`] per `ParamsChoice`,
+/// then a [`FloatPlan::restamp`] (conv `w̄` + linear `t` only — the
+/// float twin of the quant plan's cut-table stamp) per mechanism row.
 pub fn run_float_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismResult>) {
     let n = opts.n_eval;
     let mut rows = Vec::new();
     let nl = p.def.layers.len();
+    let dense_opts = ForwardOpts { t_vec: vec![0.0; nl], fat_t: 0.0 };
+    let base_dense = FloatPlan::compile(&p.def, &p.params, &dense_opts);
+    let base_ttp = FloatPlan::compile(&p.def, &p.params_ttp, &dense_opts);
     for setup in mechanism_setups() {
-        let (params, th) = match setup.params {
-            ParamsChoice::Dense => (&p.params, &p.thresholds),
-            ParamsChoice::Ttp => (&p.params_ttp, &p.thresholds_ttp),
+        let (base, th) = match setup.params {
+            ParamsChoice::Dense => (&base_dense, &p.thresholds),
+            ParamsChoice::Ttp => (&base_ttp, &p.thresholds_ttp),
         };
         let t_vec = if setup.with_thresholds {
             th.per_layer.clone()
@@ -219,7 +227,8 @@ pub fn run_float_dataset(p: &Prepared, opts: &MechOpts) -> (f64, Vec<MechanismRe
         };
         let fopts =
             ForwardOpts { t_vec, fat_t: if setup.with_fat { p.fat_t } else { 0.0 } };
-        let r = evaluate_float(&p.def, params, &p.ds.test, &fopts, n);
+        let plan = base.restamp(&fopts);
+        let r = evaluate_float_plan(&p.def, &plan, &p.ds.test, n);
         rows.push(MechanismResult {
             mechanism: setup.label.to_string(),
             accuracy: r.accuracy,

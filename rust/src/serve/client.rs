@@ -53,6 +53,13 @@ pub struct AdminStats {
     pub cache_hits: u64,
     pub cache_misses: u64,
     pub swaps: u64,
+    /// Background compiles queued or in flight on the governor's
+    /// compile thread (gauge).
+    pub bg_pending: u64,
+    /// Background compiles completed since governor install.
+    pub bg_compiled: u64,
+    /// Background compiles that upgraded the live plan slot.
+    pub bg_upgrades: u64,
 }
 
 impl AdminStats {
@@ -399,6 +406,9 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
             cache_hits,
             cache_misses,
             swaps,
+            bg_pending,
+            bg_compiled,
+            bg_upgrades,
         } => {
             if let Some(tx) = shared.stats.lock().unwrap().remove(&id) {
                 let _ = tx.send(AdminStats {
@@ -411,6 +421,9 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
                     cache_hits,
                     cache_misses,
                     swaps,
+                    bg_pending,
+                    bg_compiled,
+                    bg_upgrades,
                 });
             }
         }

@@ -10,7 +10,9 @@
 //!   **park queue** is configured (`SessionCfg::park`), in which case
 //!   up to that many overflow requests wait FIFO and are admitted as
 //!   credits return (completion, cancel, expiry), their deadline
-//!   clocks still running from frame receipt;
+//!   clocks still running from frame receipt; parked payloads are held
+//!   decoded, so `SessionCfg::park_bytes` optionally caps the queue's
+//!   total decoded bytes alongside the entry count;
 //! * **deadlines** — a per-request expiry registered with the shared
 //!   [`Reaper`] (one monotonic timer thread for the whole server, not
 //!   one per request). Expiry CASes the request's [`RequestCtl`] out of
@@ -60,6 +62,13 @@ pub struct SessionCfg {
     /// behavior. A parked request's deadline clock keeps running from
     /// frame receipt: parked time counts against it.
     pub park: usize,
+    /// Byte budget for the park queue: parked payloads are held
+    /// **decoded** in memory, so a count cap alone lets one client pin
+    /// `park × max-frame` bytes. When nonzero, a request whose decoded
+    /// payload would push the queue's total past this budget is
+    /// answered `Rejected` even if the count cap has room. `0` (the
+    /// default) = no byte cap.
+    pub park_bytes: usize,
     /// Deadline applied when a request carries none (`None` = requests
     /// without an explicit deadline never expire).
     pub default_deadline: Option<Duration>,
@@ -81,6 +90,7 @@ impl Default for SessionCfg {
         SessionCfg {
             max_inflight: 64,
             park: 0,
+            park_bytes: 0,
             default_deadline: None,
             drain_timeout: Duration::from_secs(10),
             write_timeout: Duration::from_secs(5),
@@ -278,6 +288,67 @@ struct Parked {
     ctl: Arc<RequestCtl>,
 }
 
+impl Parked {
+    /// Decoded payload bytes this entry pins while parked (the byte
+    /// budget's unit of account).
+    fn byte_cost(&self) -> usize {
+        self.data.byte_len()
+    }
+}
+
+/// The park queue plus its running decoded-byte total: every mutation
+/// goes through these methods so the byte gauge can never drift from
+/// the queue contents.
+#[derive(Default)]
+struct ParkQueue {
+    q: VecDeque<Parked>,
+    /// Sum of `byte_cost` over `q`.
+    bytes: usize,
+}
+
+impl ParkQueue {
+    fn is_empty(&self) -> bool {
+        self.q.is_empty()
+    }
+
+    fn len(&self) -> usize {
+        self.q.len()
+    }
+
+    fn contains_id(&self, id: u64) -> bool {
+        self.q.iter().any(|p| p.id == id)
+    }
+
+    fn push_back(&mut self, p: Parked) {
+        self.bytes += p.byte_cost();
+        self.q.push_back(p);
+    }
+
+    fn push_front(&mut self, p: Parked) {
+        self.bytes += p.byte_cost();
+        self.q.push_front(p);
+    }
+
+    fn pop_front(&mut self) -> Option<Parked> {
+        let p = self.q.pop_front()?;
+        self.bytes -= p.byte_cost();
+        Some(p)
+    }
+
+    /// Remove the entry with `id`, if parked.
+    fn remove_id(&mut self, id: u64) -> Option<Parked> {
+        let i = self.q.iter().position(|p| p.id == id)?;
+        let p = self.q.remove(i)?;
+        self.bytes -= p.byte_cost();
+        Some(p)
+    }
+
+    fn drain_all(&mut self) -> Vec<Parked> {
+        self.bytes = 0;
+        self.q.drain(..).collect()
+    }
+}
+
 pub(crate) struct SessionShared {
     /// Write half (reads go through the session thread's own clone).
     /// A mutex serializes frames from N workers + the reaper + the
@@ -295,8 +366,9 @@ pub(crate) struct SessionShared {
     /// write_timeout stall itself).
     deferred: Mutex<Vec<(u64, Status)>>,
     /// FIFO of validated window-overflow requests awaiting admission
-    /// (bounded by `cfg.park`; empty forever when parking is off).
-    park: Mutex<VecDeque<Parked>>,
+    /// (bounded by `cfg.park` entries and `cfg.park_bytes` decoded
+    /// bytes; empty forever when parking is off).
+    park: Mutex<ParkQueue>,
     cfg: SessionCfg,
     coord: Arc<Coordinator>,
     /// Shared deadline timer (one thread server-wide); held here so
@@ -452,7 +524,7 @@ pub(crate) fn spawn_session(
         draining: AtomicBool::new(false),
         inflight: Mutex::new(HashMap::new()),
         deferred: Mutex::new(Vec::new()),
-        park: Mutex::new(VecDeque::new()),
+        park: Mutex::new(ParkQueue::default()),
         cfg,
         coord,
         reaper,
@@ -551,10 +623,7 @@ fn finish_session(shared: &Arc<SessionShared>, exit: SessionExit) -> SessionExit
 /// admitted once the session stops accepting). Session-thread only —
 /// it writes the socket.
 fn reject_parked(shared: &Arc<SessionShared>) {
-    let drained: Vec<Parked> = {
-        let mut park = shared.park.lock().unwrap();
-        park.drain(..).collect()
-    };
+    let drained: Vec<Parked> = shared.park.lock().unwrap().drain_all();
     for p in drained {
         shared.metrics.record_rejected();
         shared.status_reply(p.id, Status::Rejected);
@@ -605,13 +674,8 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                 // Cancelling a still-parked request drops it silently
                 // (same contract as cancelling queued work); the CAS
                 // keeps a racing expiry from double-reporting.
-                let parked_ctl = {
-                    let mut park = shared.park.lock().unwrap();
-                    match park.iter().position(|p| p.id == id) {
-                        Some(i) => park.remove(i).map(|p| p.ctl),
-                        None => None,
-                    }
-                };
+                let parked_ctl =
+                    shared.park.lock().unwrap().remove_id(id).map(|p| p.ctl);
                 if let Some(ctl) = parked_ctl {
                     if ctl.cancel() {
                         shared.metrics.record_cancelled();
@@ -646,6 +710,9 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                         cache_hits: s.cache_hits,
                         cache_misses: s.cache_misses,
                         swaps: s.swaps,
+                        bg_pending: s.bg_pending,
+                        bg_compiled: s.bg_compiled,
+                        bg_upgrades: s.bg_upgrades,
                     }
                 }
                 None => Frame::Stats {
@@ -659,6 +726,9 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                     cache_hits: 0,
                     cache_misses: 0,
                     swaps: 0,
+                    bg_pending: 0,
+                    bg_compiled: 0,
+                    bg_upgrades: 0,
                 },
             };
             shared.send(&stats);
@@ -699,7 +769,7 @@ fn handle_request(
     // duplicate would otherwise collide with itself at admission).
     {
         let dup_window = shared.inflight.lock().unwrap().contains_key(&id);
-        let dup_park = shared.park.lock().unwrap().iter().any(|p| p.id == id);
+        let dup_park = shared.park.lock().unwrap().contains_id(id);
         if dup_window || dup_park {
             shared.status_reply(id, Status::Error);
             return;
@@ -777,14 +847,18 @@ enum Admit {
     Dup(u64),
 }
 
-/// Park `p` if the queue has room (caller holds the park lock), else
-/// report rejection.
+/// Park `p` if the queue has room under BOTH caps — entry count and
+/// decoded-byte budget (caller holds the park lock) — else report
+/// rejection.
 fn park_or_reject(
     shared: &Arc<SessionShared>,
-    park: &mut VecDeque<Parked>,
+    park: &mut ParkQueue,
     p: Parked,
 ) -> Admit {
-    if park.len() < shared.cfg.park {
+    let fits_count = park.len() < shared.cfg.park;
+    let fits_bytes =
+        shared.cfg.park_bytes == 0 || park.bytes + p.byte_cost() <= shared.cfg.park_bytes;
+    if fits_count && fits_bytes {
         park.push_back(p);
         Admit::Parked
     } else {
@@ -844,7 +918,7 @@ fn register_expiry(shared: &Arc<SessionShared>, id: u64, ctl: &Arc<RequestCtl>, 
                 // Wherever the request sits: drop it from the park
                 // queue (not yet admitted) and/or return its window
                 // credit.
-                shared.park.lock().unwrap().retain(|p| p.id != id);
+                shared.park.lock().unwrap().remove_id(id);
                 shared.finish(id);
                 // Expiry returns a credit too.
                 try_admit_parked(&shared);

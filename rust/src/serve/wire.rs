@@ -16,7 +16,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "UnIT"
-//! 4       2     version (little-endian, currently 1)
+//! 4       2     version (little-endian, currently 2)
 //! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
 //!               6=Goodbye 7=SetBudget 8=Stats)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
@@ -44,8 +44,11 @@
 //! * **Stats** — `scale_q8:u32` (0 ⇒ adaptive control disabled),
 //!   `step:u32`, `steps_total:u32`, `budget_mj:f64`, `ewma_mj:f64`,
 //!   `keep_ratio:f32`, `cache_hits:u64`, `cache_misses:u64`,
-//!   `swaps:u64` — the governor's scale/keep-ratio/budget state
-//!   (server → client, answering a `SetBudget`).
+//!   `swaps:u64`, `bg_pending:u64`, `bg_compiled:u64`,
+//!   `bg_upgrades:u64` — the governor's scale/keep-ratio/budget state
+//!   plus its background-compile-thread health (server → client,
+//!   answering a `SetBudget`). The three `bg_*` fields were added in
+//!   protocol version 2.
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
@@ -56,8 +59,11 @@
 
 /// Frame magic: the protocol's first four bytes.
 pub const MAGIC: [u8; 4] = *b"UnIT";
-/// Protocol version carried (and required) by every frame.
-pub const VERSION: u16 = 1;
+/// Protocol version carried (and required) by every frame. Version 2
+/// extended the `Stats` payload with the governor's background-compile
+/// counters; decoding is strict, so v1 peers are refused rather than
+/// mis-framed.
+pub const VERSION: u16 = 2;
 /// Fixed header bytes before the type-specific payload.
 pub const HEADER_LEN: usize = 16;
 /// Hard cap on one frame's post-prefix length: a corrupt length prefix
@@ -202,8 +208,15 @@ pub enum Frame {
         keep_ratio: f32,
         cache_hits: u64,
         cache_misses: u64,
-        /// Plan swaps since the governor was installed.
+        /// Plan swaps since the governor was installed (inline +
+        /// background upgrades).
         swaps: u64,
+        /// Background compiles queued or in flight (gauge).
+        bg_pending: u64,
+        /// Background compiles completed since install.
+        bg_compiled: u64,
+        /// Background compiles that upgraded the live plan slot.
+        bg_upgrades: u64,
     },
 }
 
@@ -390,6 +403,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             cache_hits,
             cache_misses,
             swaps,
+            bg_pending,
+            bg_compiled,
+            bg_upgrades,
             ..
         } => {
             put_u32(&mut body, *scale_q8);
@@ -401,6 +417,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u64(&mut body, *cache_hits);
             put_u64(&mut body, *cache_misses);
             put_u64(&mut body, *swaps);
+            put_u64(&mut body, *bg_pending);
+            put_u64(&mut body, *bg_compiled);
+            put_u64(&mut body, *bg_upgrades);
         }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
@@ -557,6 +576,9 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
             cache_hits: c.u64("cache_hits")?,
             cache_misses: c.u64("cache_misses")?,
             swaps: c.u64("swaps")?,
+            bg_pending: c.u64("bg_pending")?,
+            bg_compiled: c.u64("bg_compiled")?,
+            bg_upgrades: c.u64("bg_upgrades")?,
         },
         other => return Err(WireError::BadType(other)),
     };
@@ -679,6 +701,9 @@ mod tests {
             cache_hits: 190,
             cache_misses: 12,
             swaps: 17,
+            bg_pending: 1,
+            bg_compiled: 9,
+            bg_upgrades: 7,
         });
         // "no governor" shape
         roundtrip(Frame::Stats {
@@ -692,6 +717,9 @@ mod tests {
             cache_hits: 0,
             cache_misses: 0,
             swaps: 0,
+            bg_pending: 0,
+            bg_compiled: 0,
+            bg_upgrades: 0,
         });
     }
 

@@ -68,9 +68,22 @@ pub fn evaluate_float(
     opts: &ForwardOpts,
     max_samples: usize,
 ) -> EvalResult {
+    let plan = FloatPlan::compile(def, params, opts);
+    evaluate_float_plan(def, &plan, split, max_samples)
+}
+
+/// Evaluate an already-compiled (or restamped) [`FloatPlan`] — the
+/// sweep-friendly variant of [`evaluate_float`]: a threshold sweep
+/// compiles the sorted tables once ([`FloatPlan::compile`]), then
+/// pays only a [`FloatPlan::restamp`] + this call per setting.
+pub fn evaluate_float_plan(
+    def: &ModelDef,
+    plan: &FloatPlan,
+    split: &Split,
+    max_samples: usize,
+) -> EvalResult {
     let n = split.len().min(max_samples);
     assert!(n > 0, "empty eval split");
-    let plan = FloatPlan::compile(def, params, opts);
     let mut scratch = plan.new_scratch();
     let mut preds = Vec::with_capacity(n);
     let mut labels = Vec::with_capacity(n);

@@ -5,7 +5,7 @@ pub mod eval;
 pub mod trainer;
 
 pub use eval::{
-    evaluate_float, evaluate_float_parallel, evaluate_quant, evaluate_quant_parallel,
-    EvalResult, QuantEvalResult,
+    evaluate_float, evaluate_float_parallel, evaluate_float_plan, evaluate_quant,
+    evaluate_quant_parallel, EvalResult, QuantEvalResult,
 };
 pub use trainer::{ensure_trained, ensure_trained_tagged, train, TrainConfig};

@@ -4,7 +4,7 @@
 
 use unit_pruner::approx::{DivApprox, DivExact, DivKind};
 use unit_pruner::engine::{
-    infer, EngineConfig, InferOutput, PlanBacked, PlanConfig, PruneMode, QModel,
+    infer, ConvInterior, EngineConfig, InferOutput, PlanBacked, PlanConfig, PruneMode, QModel,
 };
 use unit_pruner::models::{zoo, Params, MODEL_NAMES};
 use unit_pruner::nn::{forward, ForwardOpts};
@@ -297,6 +297,9 @@ fn prop_planned_equivalence_random_configs() {
             sonic_accumulators: g.bool(),
             precomputed_conv_thresholds: g.bool(),
             t_scale_q8: g.u32_in(0, 640),
+            // Lane-packed and scalar interior kernels must both match
+            // the naive engine bit for bit.
+            conv_interior: *g.choice(&[ConvInterior::Lanes, ConvInterior::Scalar]),
         };
         let x_f = g.vec_sparse_normal(def.input_len(), 0.3);
         let x = q.quantize_input(&x_f);

@@ -90,6 +90,9 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
             cache_hits: g.u32_in(0, u32::MAX - 1) as u64,
             cache_misses: g.u32_in(0, u32::MAX - 1) as u64,
             swaps: g.u32_in(0, u32::MAX - 1) as u64,
+            bg_pending: g.u32_in(0, 64) as u64,
+            bg_compiled: g.u32_in(0, u32::MAX - 1) as u64,
+            bg_upgrades: g.u32_in(0, u32::MAX - 1) as u64,
         },
         _ => Frame::Goodbye,
     }
