@@ -15,6 +15,13 @@
 //! produced exactly its expected `Ok` responses in strict slot order,
 //! cancelled requests produced only an ordered prefix, and every
 //! request-level status was accounted for.
+//!
+//! `--retry` switches every client to the self-healing
+//! [`RetryClient`]: sequential requests that reconnect and resubmit
+//! through `Rejected`/`Failed` outcomes — the mode the CI chaos-smoke
+//! job drives against `unit serve --chaos-seed`, where injected worker
+//! panics, corrupted frames, and stalls are expected and every request
+//! must still land.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
@@ -28,7 +35,9 @@ use unit_pruner::data::{by_name, Sizes};
 use unit_pruner::engine::{PruneMode, QModel};
 use unit_pruner::models::{zoo, Params};
 use unit_pruner::pruning::{calibrate, CalibConfig};
-use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg, Status, WHOLE_REQUEST};
+use unit_pruner::serve::{
+    Client, RetryCfg, RetryClient, ServeOpts, Server, SessionCfg, Status, WHOLE_REQUEST,
+};
 use unit_pruner::util::cli::Args;
 use unit_pruner::util::Rng;
 
@@ -39,6 +48,10 @@ struct Tally {
     expired: AtomicU64,
     errors: AtomicU64,
     cancelled: AtomicU64,
+    /// Requests answered `Failed` (a contained worker panic). Retries
+    /// absorb these in `--retry` mode; the plain pipelined client just
+    /// counts them.
+    failed: AtomicU64,
     violations: AtomicU64,
 }
 
@@ -51,6 +64,7 @@ fn main() -> Result<()> {
     let deadline_frac = args.f64_or("deadline-frac", 0.15);
     let cancel_frac = args.f64_or("cancel-frac", 0.15);
     let seed = args.u64_or("seed", 42);
+    let retry = args.flag("retry");
 
     let def = zoo(&model);
     let ds = by_name(&model, seed, Sizes::default());
@@ -97,9 +111,10 @@ fn main() -> Result<()> {
     };
     println!(
         "stream_clients: {n_clients} clients x {n_requests} requests -> {addr} \
-         (batch <= {max_batch}, deadline {:.0}%, cancel {:.0}%)",
+         (batch <= {max_batch}, deadline {:.0}%, cancel {:.0}%{})",
         deadline_frac * 100.0,
         cancel_frac * 100.0,
+        if retry { ", retry mode" } else { "" },
     );
 
     let tally = Arc::new(Tally::default());
@@ -111,17 +126,23 @@ fn main() -> Result<()> {
             let samples: Vec<Vec<f32>> =
                 (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect();
             std::thread::spawn(move || {
-                client_run(
-                    c as u64,
-                    &addr,
-                    &samples,
-                    classes,
-                    n_requests,
-                    max_batch,
-                    deadline_frac,
-                    cancel_frac,
-                    &tally,
-                )
+                if retry {
+                    client_run_retry(
+                        c as u64, &addr, &samples, classes, n_requests, max_batch, &tally,
+                    )
+                } else {
+                    client_run(
+                        c as u64,
+                        &addr,
+                        &samples,
+                        classes,
+                        n_requests,
+                        max_batch,
+                        deadline_frac,
+                        cancel_frac,
+                        &tally,
+                    )
+                }
             })
         })
         .collect();
@@ -130,17 +151,18 @@ fn main() -> Result<()> {
     }
     let dt = t0.elapsed().as_secs_f64();
 
-    let (ok, rej, exp, err, can, bad) = (
+    let (ok, rej, exp, err, can, fail, bad) = (
         tally.ok.load(Ordering::Relaxed),
         tally.rejected.load(Ordering::Relaxed),
         tally.expired.load(Ordering::Relaxed),
         tally.errors.load(Ordering::Relaxed),
         tally.cancelled.load(Ordering::Relaxed),
+        tally.failed.load(Ordering::Relaxed),
         tally.violations.load(Ordering::Relaxed),
     );
     println!(
         "done in {dt:.2}s: {ok} ok samples ({:.0} samp/s), {rej} rejected, {exp} expired, \
-         {can} cancelled, {err} errors, {bad} protocol violations",
+         {can} cancelled, {fail} failed, {err} errors, {bad} protocol violations",
         ok as f64 / dt
     );
     if let Some(server) = own_server {
@@ -263,6 +285,12 @@ fn client_run(
                     violated = true; // only deadline'd requests may expire
                 }
             }
+            Some(Status::Failed) => {
+                // A worker panic was contained mid-request: a terminal
+                // outcome, not a violation (the `--retry` mode is the
+                // one that resubmits these).
+                tally.failed.fetch_add(1, Ordering::Relaxed);
+            }
             Some(Status::Error) | Some(Status::Cancelled) => {
                 tally.errors.fetch_add(1, Ordering::Relaxed);
             }
@@ -284,4 +312,53 @@ fn client_run(
         }
     }
     client.goodbye(Duration::from_secs(10));
+}
+
+/// `--retry` mode: sequential requests through the self-healing
+/// [`RetryClient`]. Under chaos injection every request must still end
+/// `Ok` (or `Expired`, its deadline respected) — reconnects and
+/// resubmits are the client's job, slot order and completeness are
+/// still hard-asserted.
+fn client_run_retry(
+    client_id: u64,
+    addr: &str,
+    samples: &[Vec<f32>],
+    classes: usize,
+    n_requests: usize,
+    max_batch: usize,
+    tally: &Tally,
+) {
+    let cfg = RetryCfg { max_attempts: 32, seed: 0xC1A0_0000 + client_id, ..Default::default() };
+    let client = RetryClient::connect(addr, cfg);
+    let mut rng = Rng::new(0x57EA_8000 + client_id);
+    for _ in 0..n_requests {
+        let n = 1 + rng.below(max_batch as u64) as usize;
+        let xs: Vec<Vec<f32>> = (0..n)
+            .map(|_| samples[rng.below(samples.len() as u64) as usize].clone())
+            .collect();
+        match client.infer_batch(&xs, Some(Duration::from_secs(60))) {
+            Ok(events) => {
+                if events.len() == 1 && events[0].status == Status::Expired {
+                    tally.expired.fetch_add(1, Ordering::Relaxed);
+                    continue;
+                }
+                let ordered = events.iter().enumerate().all(|(i, ev)| {
+                    ev.status == Status::Ok && ev.slot as usize == i && ev.logits.len() == classes
+                });
+                if events.len() == n && ordered {
+                    tally.ok.fetch_add(events.len() as u64, Ordering::Relaxed);
+                } else {
+                    eprintln!(
+                        "client {client_id}: retry result malformed ({} events for {n} samples)",
+                        events.len()
+                    );
+                    tally.violations.fetch_add(1, Ordering::Relaxed);
+                }
+            }
+            Err(e) => {
+                eprintln!("client {client_id}: retry budget exhausted: {e}");
+                tally.violations.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
 }

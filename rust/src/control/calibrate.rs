@@ -224,6 +224,166 @@ impl CostEstimator for ProfiledCost {
     }
 }
 
+/// [`DriftTracker`] tuning knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct DriftCfg {
+    /// CUSUM slack δ: per-observation residual magnitude absorbed
+    /// without accumulating evidence. Calibration-batch sampling noise
+    /// must live below this for a stationary stream to never trip
+    /// (property-tested below).
+    pub slack: f64,
+    /// CUSUM decision threshold λ: accumulated one-sided evidence
+    /// needed to declare sustained divergence.
+    pub threshold: f64,
+    /// Smoothing factor of the published EWMA residual gauge.
+    pub ewma_alpha: f64,
+    /// Observations required before the tracker may trip, so a cold
+    /// (or freshly recalibrated) tracker never fires off its first few
+    /// samples.
+    pub min_samples: u64,
+}
+
+impl Default for DriftCfg {
+    fn default() -> DriftCfg {
+        DriftCfg { slack: 0.02, threshold: 0.5, ewma_alpha: 0.1, min_samples: 32 }
+    }
+}
+
+/// Sustained-divergence detector over keep-ratio residuals: the
+/// recalibration trigger.
+///
+/// Each served inference reports its observed model-level keep ratio;
+/// the tracker compares it against the calibrated expectation
+/// ([`KeepProfile::model_keep_ratio`] at the active step) with a
+/// two-sided CUSUM (the Page–Hinkley scheme): evidence accumulators
+/// `g⁺ ← max(0, g⁺ + r − δ)` and `g⁻ ← max(0, g⁻ − r − δ)` over the
+/// residual `r = observed − expected`, tripping when either exceeds
+/// `λ`. Mean-zero noise of magnitude below the slack `δ` cancels
+/// before it accumulates — a stationary stream never trips — while a
+/// sustained shift of `Δ > δ` trips within about `λ / (Δ − δ)`
+/// observations. An EWMA of the residual rides along as the
+/// observability gauge (it does not gate the trigger).
+#[derive(Debug, Clone)]
+pub struct DriftTracker {
+    cfg: DriftCfg,
+    ewma: f64,
+    seen: u64,
+    g_pos: f64,
+    g_neg: f64,
+    trips: u64,
+}
+
+impl DriftTracker {
+    pub fn new(cfg: DriftCfg) -> DriftTracker {
+        DriftTracker { cfg, ewma: 0.0, seen: 0, g_pos: 0.0, g_neg: 0.0, trips: 0 }
+    }
+
+    /// Feed one observation; returns `true` when sustained divergence
+    /// trips the detector (which also re-arms it: accumulators reset,
+    /// trip counted).
+    pub fn observe(&mut self, observed: f64, expected: f64) -> bool {
+        let r = observed - expected;
+        self.seen += 1;
+        self.ewma = if self.seen == 1 {
+            r
+        } else {
+            self.cfg.ewma_alpha * r + (1.0 - self.cfg.ewma_alpha) * self.ewma
+        };
+        self.g_pos = (self.g_pos + r - self.cfg.slack).max(0.0);
+        self.g_neg = (self.g_neg - r - self.cfg.slack).max(0.0);
+        if self.seen >= self.cfg.min_samples
+            && (self.g_pos > self.cfg.threshold || self.g_neg > self.cfg.threshold)
+        {
+            self.g_pos = 0.0;
+            self.g_neg = 0.0;
+            self.trips += 1;
+            return true;
+        }
+        false
+    }
+
+    /// Smoothed residual gauge (observed − expected).
+    pub fn ewma_residual(&self) -> f64 {
+        self.ewma
+    }
+
+    /// Sustained-divergence trips since construction.
+    pub fn trips(&self) -> u64 {
+        self.trips
+    }
+
+    /// Re-arm after a recalibration rebased the expectation: evidence
+    /// and the warm-up gate reset (the stream effectively restarts
+    /// against a new baseline); the trip count survives.
+    pub fn reset(&mut self) {
+        self.g_pos = 0.0;
+        self.g_neg = 0.0;
+        self.ewma = 0.0;
+        self.seen = 0;
+    }
+}
+
+/// Fixed-capacity uniform sample of recently served inputs — the
+/// recalibration batch source. Classic reservoir sampling (Algorithm
+/// R): after `n` offers each one is present with probability
+/// `cap / n`, so the held batch tracks the *current* traffic mix
+/// without unbounded memory.
+#[derive(Debug, Clone)]
+pub struct InputReservoir {
+    cap: usize,
+    seen: u64,
+    xs: Vec<Vec<f32>>,
+    rng: crate::util::Rng,
+}
+
+impl InputReservoir {
+    pub fn new(cap: usize, seed: u64) -> InputReservoir {
+        assert!(cap > 0, "reservoir capacity must be positive");
+        let rng = crate::util::Rng::new(seed);
+        InputReservoir { cap, seen: 0, xs: Vec::with_capacity(cap), rng }
+    }
+
+    /// Offer one served input.
+    pub fn push(&mut self, x: &[f32]) {
+        self.seen += 1;
+        if self.xs.len() < self.cap {
+            self.xs.push(x.to_vec());
+        } else {
+            let j = self.rng.below(self.seen);
+            if (j as usize) < self.cap {
+                self.xs[j as usize] = x.to_vec();
+            }
+        }
+    }
+
+    /// Snapshot of the held batch (cloned: measurement runs off-lock).
+    pub fn samples(&self) -> Vec<Vec<f32>> {
+        self.xs.clone()
+    }
+
+    pub fn len(&self) -> usize {
+        self.xs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.xs.is_empty()
+    }
+
+    /// Inputs offered since construction or the last [`clear`].
+    ///
+    /// [`clear`]: InputReservoir::clear
+    pub fn seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Drop the held batch (a recalibration consumed it) so the next
+    /// one reflects post-shift traffic only.
+    pub fn clear(&mut self) {
+        self.xs.clear();
+        self.seen = 0;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -345,6 +505,138 @@ mod tests {
             err_prof <= err_l0 * 1.1 + 1.0,
             "profiled estimate worse than layer-0 extrapolation: {err_prof:.0} vs {err_l0:.0}"
         );
+    }
+
+    /// Drift property (no false positives): under stationary load —
+    /// observations fluctuating around the calibrated expectation with
+    /// noise bounded below the CUSUM slack — the tracker never trips,
+    /// at **every** grid step, over 1000 batches.
+    #[test]
+    fn stationary_load_never_trips_at_any_grid_step() {
+        let (cache, xs) = setup(46, 3);
+        let p = KeepProfile::measure(&cache, &xs);
+        let cfg = DriftCfg::default();
+        for step in 0..p.n_steps() {
+            let expected = p.model_keep_ratio(step);
+            let mut tr = DriftTracker::new(cfg);
+            crate::util::prop::check(0xD21F + step as u64, 1000, |g| {
+                // |noise| < slack: evidence can never accumulate.
+                let noise = g.f32_in(-0.015, 0.015) as f64;
+                assert!(
+                    !tr.observe(expected + noise, expected),
+                    "stationary trip at step {step} after {} obs",
+                    tr.trips()
+                );
+            });
+            assert_eq!(tr.trips(), 0);
+            assert!(tr.ewma_residual().abs() < cfg.slack);
+        }
+    }
+
+    /// Drift property (guaranteed detection): a sustained step change
+    /// larger than the slack trips the detector within a bounded
+    /// number of observations — on either side — and re-arms itself.
+    #[test]
+    fn sustained_shift_trips_within_bounded_observations() {
+        let cfg = DriftCfg::default();
+        for delta in [0.15f64, -0.15] {
+            let mut tr = DriftTracker::new(cfg);
+            let expected = 0.6;
+            // Warm up stationary, then shift. Bound: min_samples plus
+            // λ/(|Δ|−δ) ≈ 32 + 4 observations, doubled for slack.
+            for _ in 0..16 {
+                assert!(!tr.observe(expected, expected));
+            }
+            let mut tripped_at = None;
+            for i in 0..64 {
+                if tr.observe(expected + delta, expected) {
+                    tripped_at = Some(i);
+                    break;
+                }
+            }
+            let at = tripped_at.unwrap_or_else(|| panic!("no trip for shift {delta}"));
+            assert!(at < 40, "shift {delta} tripped too late: {at}");
+            assert_eq!(tr.trips(), 1);
+            // Re-armed: the warm-up gate holds right after a trip.
+            assert!(!tr.observe(expected + delta, expected));
+            // And reset() rebases for a recalibrated expectation.
+            tr.reset();
+            for _ in 0..100 {
+                assert!(!tr.observe(expected + delta, expected + delta));
+            }
+            assert_eq!(tr.trips(), 1);
+        }
+    }
+
+    /// Drift property (recalibration safety): a profile re-measured
+    /// from a *different* input distribution — exactly what the
+    /// governor's live recalibration does from its reservoir — still
+    /// yields isotonic curves with estimates bounded by `dense_macs`.
+    #[test]
+    fn recalibrated_curves_stay_isotonic_and_bounded() {
+        let (cache, _) = setup(47, 3);
+        // A sparser, shifted distribution standing in for post-drift
+        // traffic.
+        let def = zoo("mnist");
+        let shifted: Vec<Vec<f32>> = (0..4)
+            .map(|s| {
+                (0..def.input_len())
+                    .map(|i| {
+                        if (i + s) % 3 == 0 {
+                            0.0
+                        } else {
+                            (((i * 11 + s * 17) % 19) as f32 - 5.0) / 4.0
+                        }
+                    })
+                    .collect()
+            })
+            .collect();
+        let p = KeepProfile::measure(&cache, &shifted);
+        let n_layers = cache.plan_at(0).static_macs_per_layer().len();
+        for step in 0..p.n_steps() {
+            for l in 0..n_layers {
+                assert!((0.0..=1.0).contains(&p.ratio(step, l)));
+                if step > 0 {
+                    assert!(p.ratio(step, l) <= p.ratio(step - 1, l));
+                }
+            }
+        }
+        crate::util::prop::check(0x5ECA, 20, |g| {
+            let x_f = g.vec_sparse_normal(def.input_len(), 0.4);
+            let mut last = u64::MAX;
+            for step in 0..p.n_steps() {
+                let plan = cache.plan_at(step);
+                let xi = plan.quantize_input(&x_f);
+                let est = p.estimate_macs(&plan, step, &xi);
+                assert!(est >= 1 && est <= plan.dense_macs());
+                assert!(est <= last);
+                last = est;
+            }
+        });
+    }
+
+    #[test]
+    fn reservoir_is_bounded_uniform_and_deterministic() {
+        let mut r = InputReservoir::new(8, 77);
+        for i in 0..500u64 {
+            r.push(&[i as f32]);
+        }
+        assert_eq!(r.len(), 8);
+        assert_eq!(r.seen(), 500);
+        // Every held sample is one of the offered ones and they are
+        // not simply the first (or last) eight: replacement happened.
+        let held: Vec<f32> = r.samples().iter().map(|x| x[0]).collect();
+        assert!(held.iter().all(|&v| v >= 0.0 && v < 500.0));
+        assert!(held.iter().any(|&v| v >= 8.0), "reservoir never replaced");
+        // Same seed, same offers, same sample.
+        let mut r2 = InputReservoir::new(8, 77);
+        for i in 0..500u64 {
+            r2.push(&[i as f32]);
+        }
+        assert_eq!(r.samples(), r2.samples());
+        r.clear();
+        assert!(r.is_empty());
+        assert_eq!(r.seen(), 0);
     }
 
     #[test]

@@ -50,19 +50,47 @@
 //! the initial step is the cheapest step whose calibrated mean energy
 //! fits the budget, so the loop starts near its operating point
 //! instead of walking there one AIMD nudge at a time.
+//!
+//! ## Drift-triggered live recalibration
+//!
+//! The calibrated [`KeepProfile`] is a snapshot of the traffic it was
+//! measured on. When the serving distribution shifts (new sensor
+//! placement, new speaker population), its curves go stale: placement
+//! prices drift from real costs and the feed-forward seed points at
+//! the wrong step. The governor closes this loop **live**:
+//!
+//! 1. workers report each inference's *observed* model keep ratio
+//!    (via [`EnergyTap::observe_keep`]) and offer its raw input to a
+//!    bounded [`InputReservoir`];
+//! 2. a [`DriftTracker`] (two-sided CUSUM over observed − calibrated
+//!    residuals) declares **sustained** divergence — stationary noise
+//!    below its slack can never trip it;
+//! 3. a trip enqueues one `Recalibrate` job on the background compile
+//!    thread (deduplicated while pending), which re-measures the
+//!    profile from the reservoir **off-lock**, then — under the
+//!    controller lock — publishes the fresh profile, swaps the
+//!    re-seeded plan, retargets [`ProfiledCost`], and re-arms the
+//!    tracker.
+//!
+//! Publishes are additionally accounted in a **published-vs-wanted
+//! step distance histogram** ([`Governor::publish_distance_histogram`]):
+//! bucket 0 is an exact publish, bucket `d` a nearest-resident stand-in
+//! `d` grid steps away — the observable cost of compiling off the swap
+//! path.
 
 use std::collections::HashSet;
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex, Weak};
+use std::sync::{Arc, Mutex, RwLock, Weak};
 use std::thread::JoinHandle;
 
-use super::calibrate::{KeepProfile, ProfiledCost};
+use super::calibrate::{DriftCfg, DriftTracker, InputReservoir, KeepProfile, ProfiledCost};
 use super::plan_cache::PlanCache;
 use crate::coordinator::{
     Coordinator, CostEstimator, CostEstimatorSlot, EnergyController, EnergyTap, Metrics,
     PlanSlot,
 };
+use crate::util::{lock_recover, read_recover, write_recover};
 
 /// A point-in-time view of the governor (the `Stats` admin frame's
 /// payload).
@@ -92,6 +120,20 @@ pub struct GovernorStatus {
     /// (the rest were stale by the time they landed — interned, not
     /// swapped).
     pub bg_upgrades: u64,
+    /// Sustained-divergence trips of the drift tracker since
+    /// installation.
+    pub drift_trips: u64,
+    /// Live recalibrations completed (profile re-measured from the
+    /// reservoir and republished).
+    pub recalibrations: u64,
+}
+
+/// Work items for the governor's background thread: plan compiles and
+/// profile recalibrations share it, so neither ever runs on a worker's
+/// observation path.
+enum Job {
+    Compile(usize),
+    Recalibrate,
 }
 
 /// The budget-driven plan governor (see module docs).
@@ -99,7 +141,11 @@ pub struct Governor {
     cache: Arc<PlanCache>,
     slot: Arc<PlanSlot>,
     cost_slot: CostEstimatorSlot,
-    profile: Option<Arc<KeepProfile>>,
+    /// The live calibrated profile. Behind a lock (unlike everything
+    /// else the request path reads) because recalibration *replaces*
+    /// it at runtime; readers clone the `Arc` out and never block on a
+    /// measurement.
+    profile: RwLock<Option<Arc<KeepProfile>>>,
     /// Controller + swap path, serialized: concurrent worker
     /// observations queue here, so step transitions (and the
     /// background thread's upgrades) are single-file.
@@ -109,10 +155,21 @@ pub struct Governor {
     /// Steps queued for (or undergoing) a background compile — the
     /// dedup set; its size is the `bg_pending` gauge.
     compiling: Mutex<HashSet<usize>>,
-    compile_tx: Mutex<Option<Sender<usize>>>,
+    compile_tx: Mutex<Option<Sender<Job>>>,
     compile_handle: Mutex<Option<JoinHandle<()>>>,
     bg_compiled: AtomicU64,
     bg_upgrades: AtomicU64,
+    /// Sustained-divergence detector over observed keep ratios.
+    drift: Mutex<DriftTracker>,
+    /// Bounded uniform sample of recent inputs — the recalibration
+    /// batch.
+    reservoir: Mutex<InputReservoir>,
+    /// A `Recalibrate` job is queued or running (dedup: one at a time).
+    recal_pending: AtomicBool,
+    drift_trips: AtomicU64,
+    recalibrations: AtomicU64,
+    /// Published-vs-wanted step distance histogram (bucket 7 = ≥7).
+    publish_dist: [AtomicU64; 8],
     /// Coordinator metrics mirror for the bg counters (serve stats
     /// line / snapshots).
     metrics: Arc<Metrics>,
@@ -156,12 +213,12 @@ impl Governor {
             None => cache.grid().snap_q8(ctrl.t_scale_q8()),
         };
         ctrl.set_scale(cache.grid().scale(step));
-        let (tx, rx) = channel::<usize>();
+        let (tx, rx) = channel::<Job>();
         let gov = Arc::new(Governor {
             cache: Arc::clone(&cache),
             slot: Arc::clone(&slot),
             cost_slot: coord.cost_estimator_slot(),
-            profile,
+            profile: RwLock::new(profile),
             ctrl: Mutex::new(ctrl),
             step: AtomicUsize::new(step),
             swaps: AtomicU64::new(0),
@@ -170,13 +227,19 @@ impl Governor {
             compile_handle: Mutex::new(None),
             bg_compiled: AtomicU64::new(0),
             bg_upgrades: AtomicU64::new(0),
+            drift: Mutex::new(DriftTracker::new(DriftCfg::default())),
+            reservoir: Mutex::new(InputReservoir::new(64, 0x5EED_D81F)),
+            recal_pending: AtomicBool::new(false),
+            drift_trips: AtomicU64::new(0),
+            recalibrations: AtomicU64::new(0),
+            publish_dist: Default::default(),
             metrics: Arc::clone(&coord.metrics),
         });
         // The compile thread holds only a Weak: the governor's Drop
         // closes the channel and joins it.
         let weak = Arc::downgrade(&gov);
         let handle = std::thread::spawn(move || compile_loop(weak, rx));
-        *gov.compile_handle.lock().unwrap() = Some(handle);
+        *lock_recover(&gov.compile_handle) = Some(handle);
         // Startup seed compiles synchronously: nothing is serving yet.
         slot.swap(cache.plan_at(step));
         gov.retarget_cost(step);
@@ -186,10 +249,48 @@ impl Governor {
     }
 
     fn retarget_cost(&self, step: usize) {
-        if let Some(p) = &self.profile {
-            let est: Arc<dyn CostEstimator> =
-                Arc::new(ProfiledCost { profile: Arc::clone(p), step });
-            *self.cost_slot.write().unwrap() = Some(est);
+        let profile = read_recover(&self.profile).clone();
+        if let Some(p) = profile {
+            let est: Arc<dyn CostEstimator> = Arc::new(ProfiledCost { profile: p, step });
+            *write_recover(&self.cost_slot) = Some(est);
+        }
+    }
+
+    /// The live calibrated profile (replaced wholesale by
+    /// recalibration — compare `Arc::ptr_eq` to detect a republish).
+    pub fn profile(&self) -> Option<Arc<KeepProfile>> {
+        read_recover(&self.profile).clone()
+    }
+
+    /// Published-vs-wanted step distance histogram: bucket `d` counts
+    /// plan publishes that landed `d` grid steps from the wanted step
+    /// (bucket 7 aggregates everything farther). Bucket 0 is an exact
+    /// publish — inline hits, background upgrades, recalibration
+    /// re-seeds; nonzero buckets are nearest-resident stand-ins.
+    pub fn publish_distance_histogram(&self) -> [u64; 8] {
+        let mut out = [0u64; 8];
+        for (o, c) in out.iter_mut().zip(&self.publish_dist) {
+            *o = c.load(Ordering::Relaxed);
+        }
+        out
+    }
+
+    fn record_publish_distance(&self, dist: usize) {
+        self.publish_dist[dist.min(7)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Queue one live recalibration (deduplicated while pending).
+    fn request_recalibrate(&self) {
+        if self.recal_pending.swap(true, Ordering::AcqRel) {
+            return; // already queued or running
+        }
+        let sent = matches!(
+            lock_recover(&self.compile_tx).as_ref().map(|tx| tx.send(Job::Recalibrate)),
+            Some(Ok(()))
+        );
+        if !sent {
+            // Channel gone (shutdown race): release the reservation.
+            self.recal_pending.store(false, Ordering::Release);
         }
     }
 
@@ -205,7 +306,7 @@ impl Governor {
     /// true counters directly and is never stale.)
     fn publish_bg_metrics(&self) {
         self.metrics.record_bg_compile(
-            self.compiling.lock().unwrap().len() as u64,
+            lock_recover(&self.compiling).len() as u64,
             self.bg_compiled.load(Ordering::Relaxed),
             self.bg_upgrades.load(Ordering::Relaxed),
         );
@@ -216,17 +317,17 @@ impl Governor {
     /// Does NOT publish the metrics mirror (see `publish_bg_metrics`):
     /// the compile thread this enqueues to will.
     fn request_compile(&self, step: usize) {
-        let mut compiling = self.compiling.lock().unwrap();
+        let mut compiling = lock_recover(&self.compiling);
         if !compiling.insert(step) {
             return; // already queued or in flight
         }
         drop(compiling);
-        let tx = self.compile_tx.lock().unwrap();
-        match tx.as_ref().map(|tx| tx.send(step)) {
+        let tx = lock_recover(&self.compile_tx);
+        match tx.as_ref().map(|tx| tx.send(Job::Compile(step))) {
             Some(Ok(())) => {}
             // Channel gone (shutdown race): forget the reservation.
             _ => {
-                self.compiling.lock().unwrap().remove(&step);
+                lock_recover(&self.compiling).remove(&step);
             }
         }
     }
@@ -234,7 +335,7 @@ impl Governor {
     /// Change the energy budget (the `SetBudget` admin frame; also the
     /// harvester-forecast path). Takes effect on the next observation.
     pub fn set_budget(&self, budget_mj: f64) {
-        self.ctrl.lock().unwrap().set_budget(budget_mj);
+        lock_recover(&self.ctrl).set_budget(budget_mj);
     }
 
     /// Active grid step.
@@ -244,11 +345,11 @@ impl Governor {
 
     pub fn status(&self) -> GovernorStatus {
         let (scale_q8, budget_mj, ewma_mj) = {
-            let c = self.ctrl.lock().unwrap();
+            let c = lock_recover(&self.ctrl);
             (c.t_scale_q8(), c.budget_mj, c.ewma_mj())
         };
         let step = self.step();
-        let keep_ratio = match &self.profile {
+        let keep_ratio = match read_recover(&self.profile).as_ref() {
             Some(p) => p.model_keep_ratio(step),
             None => 0.0,
         };
@@ -262,9 +363,11 @@ impl Governor {
             cache_hits: self.cache.hits(),
             cache_misses: self.cache.misses(),
             swaps: self.swaps.load(Ordering::Relaxed),
-            bg_pending: self.compiling.lock().unwrap().len() as u64,
+            bg_pending: lock_recover(&self.compiling).len() as u64,
             bg_compiled: self.bg_compiled.load(Ordering::Relaxed),
             bg_upgrades: self.bg_upgrades.load(Ordering::Relaxed),
+            drift_trips: self.drift_trips.load(Ordering::Relaxed),
+            recalibrations: self.recalibrations.load(Ordering::Relaxed),
         }
     }
 }
@@ -277,7 +380,7 @@ impl EnergyTap for Governor {
     /// publishes the nearest resident and hands the compile to the
     /// background thread.
     fn observe(&self, energy_mj: f64) {
-        let mut ctrl = self.ctrl.lock().unwrap();
+        let mut ctrl = lock_recover(&self.ctrl);
         ctrl.observe(energy_mj);
         let want = self.cache.grid().snap_q8(ctrl.t_scale_q8());
         let cur = self.step.load(Ordering::Acquire);
@@ -288,6 +391,7 @@ impl EnergyTap for Governor {
             self.slot.swap(plan);
             self.step.store(want, Ordering::Release);
             self.swaps.fetch_add(1, Ordering::Relaxed);
+            self.record_publish_distance(0);
             self.retarget_cost(want);
             return;
         }
@@ -306,8 +410,33 @@ impl EnergyTap for Governor {
                 self.slot.swap(plan);
                 self.step.store(near, Ordering::Release);
                 self.swaps.fetch_add(1, Ordering::Relaxed);
+                self.record_publish_distance(near.abs_diff(want));
                 self.retarget_cost(near);
             }
+        }
+    }
+
+    /// One request's observed model keep ratio — the drift detector's
+    /// feed. Compares against the calibrated expectation at the active
+    /// step; a sustained-divergence trip queues one live recalibration
+    /// on the background thread. No profile ⇒ no expectation ⇒ no-op.
+    fn observe_keep(&self, ratio: f64) {
+        let Some(profile) = read_recover(&self.profile).clone() else {
+            return;
+        };
+        let expected = profile.model_keep_ratio(self.step.load(Ordering::Acquire));
+        let tripped = lock_recover(&self.drift).observe(ratio, expected);
+        if tripped {
+            self.drift_trips.fetch_add(1, Ordering::Relaxed);
+            self.request_recalibrate();
+        }
+    }
+
+    /// Offer a served input to the recalibration reservoir (only while
+    /// a profile is attached — drift is only detectable against one).
+    fn sample_input(&self, x: &[f32]) {
+        if read_recover(&self.profile).is_some() {
+            lock_recover(&self.reservoir).push(x);
         }
     }
 }
@@ -316,32 +445,80 @@ impl EnergyTap for Governor {
 /// every worker thread (and off the cache lock — `plan_at` compiles
 /// lock-free and interns after), then upgrade the live slot if the
 /// step is still wanted.
-fn compile_loop(gov: Weak<Governor>, rx: Receiver<usize>) {
-    while let Ok(step) = rx.recv() {
+fn compile_loop(gov: Weak<Governor>, rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
         let Some(gov) = gov.upgrade() else { return };
-        let plan = gov.cache.plan_at(step);
-        gov.compiling.lock().unwrap().remove(&step);
-        gov.bg_compiled.fetch_add(1, Ordering::Relaxed);
-        // Upgrade under the controller lock so inline swaps and
-        // upgrades are serialized against each other. A stale step
-        // (controller moved on while we compiled) stays interned in
-        // the cache but does not touch the slot.
-        {
-            let ctrl = gov.ctrl.lock().unwrap();
-            let want = gov.cache.grid().snap_q8(ctrl.t_scale_q8());
-            if want == step && gov.step.load(Ordering::Acquire) != step {
-                gov.slot.swap(plan);
-                gov.step.store(step, Ordering::Release);
-                gov.swaps.fetch_add(1, Ordering::Relaxed);
-                gov.bg_upgrades.fetch_add(1, Ordering::Relaxed);
-                gov.retarget_cost(step);
+        match job {
+            Job::Compile(step) => {
+                let plan = gov.cache.plan_at(step);
+                lock_recover(&gov.compiling).remove(&step);
+                gov.bg_compiled.fetch_add(1, Ordering::Relaxed);
+                // Upgrade under the controller lock so inline swaps and
+                // upgrades are serialized against each other. A stale
+                // step (controller moved on while we compiled) stays
+                // interned in the cache but does not touch the slot.
+                {
+                    let ctrl = lock_recover(&gov.ctrl);
+                    let want = gov.cache.grid().snap_q8(ctrl.t_scale_q8());
+                    if want == step && gov.step.load(Ordering::Acquire) != step {
+                        gov.slot.swap(plan);
+                        gov.step.store(step, Ordering::Release);
+                        gov.swaps.fetch_add(1, Ordering::Relaxed);
+                        gov.bg_upgrades.fetch_add(1, Ordering::Relaxed);
+                        gov.record_publish_distance(0);
+                        gov.retarget_cost(step);
+                    }
+                }
+                gov.publish_bg_metrics();
             }
+            Job::Recalibrate => recalibrate(&gov),
         }
-        gov.publish_bg_metrics();
         // Drop the strong handle before blocking on the next request,
         // so the governor can be torn down while the queue is idle.
         drop(gov);
     }
+}
+
+/// Live recalibration (background thread only). Measurement — the
+/// expensive part, `grid.len() × reservoir` inferences that also warm
+/// every cache step — runs **off** the controller lock; only the
+/// publish (profile swap, re-seeded plan swap, cost retarget, tracker
+/// re-arm) holds it, the same discipline as a background upgrade.
+fn recalibrate(gov: &Arc<Governor>) {
+    let xs = lock_recover(&gov.reservoir).samples();
+    if xs.is_empty() {
+        // Nothing observed yet (trip raced an empty reservoir): drop
+        // the reservation; a later trip retries with data.
+        gov.recal_pending.store(false, Ordering::Release);
+        return;
+    }
+    let fresh = Arc::new(KeepProfile::measure(&gov.cache, &xs));
+    {
+        let mut ctrl = lock_recover(&gov.ctrl);
+        *write_recover(&gov.profile) = Some(Arc::clone(&fresh));
+        // Feed-forward re-seed off the fresh energy curve, exactly as
+        // installation does — the AIMD loop then fine-tunes from a
+        // point the *current* traffic says fits the budget.
+        let seed = fresh.seed_step(ctrl.budget_mj);
+        ctrl.set_scale(gov.cache.grid().scale(seed));
+        if gov.step.load(Ordering::Acquire) != seed {
+            // measure() warmed every grid step, so the seed is
+            // resident by construction.
+            if let Some(plan) = gov.cache.try_get(seed) {
+                gov.slot.swap(plan);
+                gov.step.store(seed, Ordering::Release);
+                gov.swaps.fetch_add(1, Ordering::Relaxed);
+                gov.record_publish_distance(0);
+            }
+        }
+        gov.retarget_cost(gov.step.load(Ordering::Acquire));
+        // Re-arm against the new baseline; the trip count survives.
+        lock_recover(&gov.drift).reset();
+    }
+    lock_recover(&gov.reservoir).clear();
+    gov.recalibrations.fetch_add(1, Ordering::Relaxed);
+    gov.recal_pending.store(false, Ordering::Release);
+    gov.publish_bg_metrics();
 }
 
 /// Close the compile channel and join the thread. The compile thread
@@ -350,8 +527,8 @@ fn compile_loop(gov: Weak<Governor>, rx: Receiver<usize>) {
 /// is already on its way out once the channel is gone).
 impl Drop for Governor {
     fn drop(&mut self) {
-        drop(self.compile_tx.lock().unwrap().take());
-        if let Some(h) = self.compile_handle.lock().unwrap().take() {
+        drop(lock_recover(&self.compile_tx).take());
+        if let Some(h) = lock_recover(&self.compile_handle).take() {
             if h.thread().id() != std::thread::current().id() {
                 let _ = h.join();
             }
@@ -586,6 +763,96 @@ mod tests {
             coord.submit(xs[0].clone()).recv().unwrap();
         }
         assert!(g2.step() > 0, "replacement governor not receiving observations");
+        coord.shutdown();
+    }
+
+    #[test]
+    fn sustained_drift_trips_and_recalibrates_live() {
+        let (coord, cache, xs) = boot(1);
+        let profile = Arc::new(KeepProfile::measure(&cache, &xs));
+        let budget = profile.mean_mj(profile.n_steps() / 2);
+        let gov =
+            Governor::install(&coord, Arc::clone(&cache), Some(Arc::clone(&profile)), budget)
+                .unwrap();
+        let before = gov.profile().unwrap();
+        // Fill the reservoir with the post-shift inputs recalibration
+        // will re-measure on.
+        for x in &xs {
+            for _ in 0..10 {
+                gov.sample_input(x);
+            }
+        }
+        // A sustained keep-ratio shift well past the CUSUM slack: the
+        // tracker must trip within min_samples + λ/(Δ−δ) observations.
+        let expected = profile.model_keep_ratio(gov.step());
+        let shifted = if expected > 0.25 { expected - 0.2 } else { expected + 0.2 };
+        for _ in 0..200 {
+            gov.observe_keep(shifted);
+        }
+        assert!(gov.status().drift_trips >= 1, "sustained shift never tripped");
+        // The background thread re-measures and republishes.
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while gov.status().recalibrations == 0 {
+            assert!(Instant::now() < deadline, "recalibration never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let after = gov.profile().unwrap();
+        assert!(!Arc::ptr_eq(&before, &after), "profile not republished");
+        // Pricing was retargeted (a profiled estimator is installed).
+        assert!(coord.cost_estimator_slot().read().unwrap().is_some());
+        coord.shutdown();
+    }
+
+    #[test]
+    fn stationary_keep_ratios_never_trigger_recalibration() {
+        let (coord, cache, xs) = boot(1);
+        let profile = Arc::new(KeepProfile::measure(&cache, &xs));
+        let gov =
+            Governor::install(&coord, Arc::clone(&cache), Some(Arc::clone(&profile)), 1e9)
+                .unwrap();
+        let expected = profile.model_keep_ratio(gov.step());
+        // 1000 observations fluctuating inside the CUSUM slack.
+        for i in 0..1000 {
+            let noise = 0.015 * if i % 2 == 0 { 1.0 } else { -1.0 };
+            gov.observe_keep(expected + noise);
+        }
+        let st = gov.status();
+        assert_eq!(st.drift_trips, 0, "stationary load tripped the detector");
+        assert_eq!(st.recalibrations, 0);
+        assert!(Arc::ptr_eq(&gov.profile().unwrap(), &profile));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn publish_distance_histogram_accounts_every_swap() {
+        let (coord, cache, _xs) = boot(1);
+        let gov = Governor::install(&coord, Arc::clone(&cache), None, 1e9).unwrap();
+        gov.set_budget(1e-9);
+        // Drive the controller directly (no worker traffic racing us):
+        // every swap — inline, nearest-resident stand-in, or background
+        // upgrade — must land in exactly one histogram bucket.
+        for _ in 0..200 {
+            gov.observe(1e9);
+        }
+        // Quiesce: with observations stopped, the histogram converges
+        // onto the swap counter once in-flight upgrades land.
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = gov.status();
+            let hist = gov.publish_distance_histogram();
+            if st.bg_pending == 0 && hist.iter().sum::<u64>() == st.swaps {
+                assert!(st.swaps > 0, "starvation produced no swaps");
+                assert!(hist[0] > 0, "no exact publishes recorded");
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "histogram never converged: {:?} vs {} swaps",
+                hist,
+                st.swaps
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
         coord.shutdown();
     }
 }

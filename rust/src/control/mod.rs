@@ -19,7 +19,10 @@
 //!   curves (and per-step mean energy) over a calibration batch,
 //!   replacing layer-0 extrapolation with per-layer interpolation for
 //!   placement pricing ([`ProfiledCost`]) and seeding the governor's
-//!   scale feed-forward;
+//!   scale feed-forward; [`DriftTracker`] + [`InputReservoir`] keep
+//!   that profile honest at runtime — sustained divergence between
+//!   observed and calibrated keep ratios triggers a live
+//!   re-measurement from a reservoir of recent inputs;
 //! * [`governor`] — [`Governor`] owns the controller, observes each
 //!   request's ledger energy through the coordinator's
 //!   [`EnergyTap`](crate::coordinator::EnergyTap), and swaps the
@@ -38,7 +41,7 @@ pub mod calibrate;
 pub mod governor;
 pub mod plan_cache;
 
-pub use calibrate::{KeepProfile, ProfiledCost};
+pub use calibrate::{DriftCfg, DriftTracker, InputReservoir, KeepProfile, ProfiledCost};
 pub use governor::{Governor, GovernorStatus};
 pub use plan_cache::{PlanCache, ScaleGrid, DEFAULT_GRID_STEPS};
 

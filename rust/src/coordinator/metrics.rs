@@ -86,6 +86,14 @@ struct Inner {
     bg_compiled: u64,
     /// Background compiles that upgraded the live plan slot.
     bg_upgrades: u64,
+    /// Worker panics caught by the panic supervisor.
+    worker_panics: u64,
+    /// Worker loops re-entered (with fresh scratch) after a caught
+    /// panic.
+    respawns: u64,
+    /// Requests terminated with a `Failed` outcome because a worker
+    /// panicked while executing one of their samples.
+    failed: u64,
 }
 
 /// Snapshot for reporting.
@@ -124,6 +132,10 @@ pub struct Snapshot {
     pub bg_pending: u64,
     pub bg_compiled: u64,
     pub bg_upgrades: u64,
+    /// Self-healing counters (see `Inner`).
+    pub worker_panics: u64,
+    pub respawns: u64,
+    pub failed: u64,
 }
 
 fn percentile(sorted: &[u64], p: f64) -> u64 {
@@ -205,6 +217,22 @@ impl Metrics {
         g.bg_upgrades = upgrades;
     }
 
+    /// A worker panic was caught by the supervisor.
+    pub fn record_worker_panic(&self) {
+        self.inner.lock().unwrap().worker_panics += 1;
+    }
+
+    /// The supervisor re-entered a worker loop after a caught panic.
+    pub fn record_respawn(&self) {
+        self.inner.lock().unwrap().respawns += 1;
+    }
+
+    /// A request reached the `Failed` terminal outcome (worker panic
+    /// while one of its samples was executing).
+    pub fn record_failed(&self) {
+        self.inner.lock().unwrap().failed += 1;
+    }
+
     pub fn session_opened(&self) {
         self.inner.lock().unwrap().sessions_opened += 1;
     }
@@ -259,6 +287,9 @@ impl Metrics {
             bg_pending: g.bg_pending,
             bg_compiled: g.bg_compiled,
             bg_upgrades: g.bg_upgrades,
+            worker_panics: g.worker_panics,
+            respawns: g.respawns,
+            failed: g.failed,
         }
     }
 }
@@ -349,6 +380,20 @@ mod tests {
         m.record_bg_compile(0, 6, 4);
         let s = m.snapshot();
         assert_eq!((s.bg_pending, s.bg_compiled, s.bg_upgrades), (0, 6, 4), "must replace");
+    }
+
+    #[test]
+    fn self_healing_counters_accumulate() {
+        let m = Metrics::new();
+        let s = m.snapshot();
+        assert_eq!((s.worker_panics, s.respawns, s.failed), (0, 0, 0));
+        m.record_worker_panic();
+        m.record_failed();
+        m.record_respawn();
+        m.record_worker_panic();
+        m.record_respawn();
+        let s = m.snapshot();
+        assert_eq!((s.worker_panics, s.respawns, s.failed), (2, 2, 1));
     }
 
     #[test]

@@ -46,6 +46,12 @@ pub enum CtlState {
     Expired = 2,
     /// Every sample's reply was delivered; terminal.
     Done = 3,
+    /// A worker panicked while executing a sample of this request: same
+    /// suppression as cancel (remaining queued samples tombstone-drop,
+    /// in-flight replies are suppressed), plus a single `Failed` status
+    /// frame from the panic supervisor — the request is terminal, never
+    /// silently lost.
+    Failed = 4,
 }
 
 /// Shared control block for one streamed request (all samples of a
@@ -70,6 +76,7 @@ impl RequestCtl {
             0 => CtlState::Active,
             1 => CtlState::Cancelled,
             2 => CtlState::Expired,
+            4 => CtlState::Failed,
             _ => CtlState::Done,
         }
     }
@@ -97,10 +104,17 @@ impl RequestCtl {
         self.transition(CtlState::Done)
     }
 
+    /// Worker panic (supervisor). Returns `false` when the request was
+    /// already terminal — exactly one `Failed` outcome can win, so the
+    /// supervisor emits at most one `Failed` frame per request.
+    pub fn fail(&self) -> bool {
+        self.transition(CtlState::Failed)
+    }
+
     /// True when a worker should drop this request instead of running
     /// it (and a sink should suppress its reply).
     pub fn is_dead(&self) -> bool {
-        matches!(self.state(), CtlState::Cancelled | CtlState::Expired)
+        matches!(self.state(), CtlState::Cancelled | CtlState::Expired | CtlState::Failed)
     }
 }
 
@@ -109,6 +123,15 @@ impl RequestCtl {
 /// layer's session sink (which re-orders slots and writes wire frames).
 pub trait StreamSink: Send + Sync {
     fn put(&self, slot: usize, resp: InferResponse);
+
+    /// The request failed terminally (worker panic). Called by the
+    /// panic supervisor *after* it wins the [`RequestCtl::fail`] CAS,
+    /// so an implementation is invoked at most once per request and
+    /// should emit its request-level failure notification (the serve
+    /// layer's session sink sends one `Failed` status frame). Default:
+    /// no-op — in-process callers learn of the failure from their
+    /// reply channel disconnecting.
+    fn fail(&self) {}
 }
 
 /// Where a worker delivers the finished response.
@@ -284,6 +307,27 @@ mod tests {
         assert!(!ctl.expire());
         assert_eq!(ctl.state(), CtlState::Done);
         assert!(!ctl.is_dead());
+    }
+
+    #[test]
+    fn ctl_fail_is_terminal_and_dead() {
+        let ctl = RequestCtl::shared();
+        assert!(ctl.fail());
+        assert_eq!(ctl.state(), CtlState::Failed);
+        assert!(ctl.is_dead(), "failed requests must tombstone queued siblings");
+        // Late completion / expiry / a second panic are no-ops.
+        assert!(!ctl.complete());
+        assert!(!ctl.expire());
+        assert!(!ctl.fail());
+        assert_eq!(ctl.state(), CtlState::Failed);
+    }
+
+    #[test]
+    fn ctl_complete_beats_late_fail() {
+        let ctl = RequestCtl::shared();
+        assert!(ctl.complete());
+        assert!(!ctl.fail(), "a delivered request cannot be failed after the fact");
+        assert_eq!(ctl.state(), CtlState::Done);
     }
 
     #[test]

@@ -24,6 +24,7 @@
 //! [`Metrics`] aggregates both), so a shard-balance regression shows up
 //! as a queue-percentile blowup even when service time is flat.
 
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex, RwLock};
@@ -39,6 +40,7 @@ use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
 use crate::mcu::EnergyModel;
 use crate::models::Params;
 use crate::util::stats::argmax;
+use crate::util::{lock_recover, read_recover, write_recover, FaultPlan};
 
 /// Which execution backend serves requests.
 #[derive(Debug, Clone)]
@@ -65,6 +67,9 @@ pub struct ServeConfig {
     /// per-sample MAC estimate by default; `Placement::TwoChoice` is
     /// the legacy count-based policy.
     pub placement: Placement,
+    /// Deterministic fault-injection plan (worker panics, for the
+    /// chaos harness); `None` — no probes taken — in production.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeConfig {
@@ -74,6 +79,7 @@ impl Default for ServeConfig {
             max_batch: 8,
             max_wait: Duration::from_millis(2),
             placement: Placement::default(),
+            fault: None,
         }
     }
 }
@@ -122,9 +128,11 @@ impl PlanSlot {
         PlanSlot { cur: RwLock::new(plan), generation: AtomicU64::new(0) }
     }
 
-    /// The currently active plan.
+    /// The currently active plan. Poison-tolerant: a worker that
+    /// panicked while reading can never invalidate the slot — the last
+    /// published plan stays valid (see [`crate::util::lock`]).
     pub fn get(&self) -> Arc<PlannedModel> {
-        Arc::clone(&self.cur.read().unwrap())
+        Arc::clone(&read_recover(&self.cur))
     }
 
     /// Monotone swap counter: unchanged generation ⇒ `get` would
@@ -135,7 +143,7 @@ impl PlanSlot {
 
     /// Install `plan`; returns the one it replaced.
     pub fn swap(&self, plan: Arc<PlannedModel>) -> Arc<PlannedModel> {
-        let mut cur = self.cur.write().unwrap();
+        let mut cur = write_recover(&self.cur);
         // Bump under the write lock so a reader that sees the new
         // generation is guaranteed to read the new plan.
         self.generation.fetch_add(1, Ordering::Release);
@@ -162,6 +170,15 @@ pub type CostEstimatorSlot = Arc<RwLock<Option<Arc<dyn CostEstimator>>>>;
 /// the budget loop by swapping the [`PlanSlot`].
 pub trait EnergyTap: Send + Sync {
     fn observe(&self, energy_mj: f64);
+
+    /// Observed model-level keep ratio of one inference (kept MACs
+    /// over total MAC positions) — the drift detector's feedback
+    /// signal. Default no-op so plain energy observers are unaffected.
+    fn observe_keep(&self, _ratio: f64) {}
+
+    /// Offer a served sample's raw input to the observer's
+    /// recalibration reservoir. Default no-op.
+    fn sample_input(&self, _x: &[f32]) {}
 }
 
 /// The shared, swappable energy-observer slot workers read per request.
@@ -231,7 +248,43 @@ impl Coordinator {
                         let slot = Arc::clone(&slot);
                         let metrics = Arc::clone(&metrics);
                         let tap = Arc::clone(&energy_tap);
-                        std::thread::spawn(move || mcu_worker(w, pool, slot, metrics, tap))
+                        let fault = cfg.fault.clone();
+                        // Panic supervisor: a worker panic (engine bug
+                        // or injected chaos) fails the stranded request
+                        // through its ctl and re-enters the loop with
+                        // fresh scratch, instead of silently shrinking
+                        // the pool. Unwind safety is by construction:
+                        // shared state is atomics and recover-on-poison
+                        // locks, and the one value a panic can strand —
+                        // the in-flight request — is reconciled from
+                        // the stash right here.
+                        std::thread::spawn(move || {
+                            let inflight: Mutex<Option<InFlight>> = Mutex::new(None);
+                            loop {
+                                let run = catch_unwind(AssertUnwindSafe(|| {
+                                    mcu_worker(
+                                        w,
+                                        &pool,
+                                        &slot,
+                                        &metrics,
+                                        &tap,
+                                        fault.as_deref(),
+                                        &inflight,
+                                    )
+                                }));
+                                match run {
+                                    // Pool closed and drained: clean exit.
+                                    Ok(()) => break,
+                                    Err(_) => {
+                                        metrics.record_worker_panic();
+                                        if let Some(fl) = lock_recover(&inflight).take() {
+                                            fail_inflight(fl, &metrics);
+                                        }
+                                        metrics.record_respawn();
+                                    }
+                                }
+                            }
+                        })
                     })
                     .collect();
                 (Intake::Pool(pool), handles, Some(slot))
@@ -271,7 +324,7 @@ impl Coordinator {
             (Some(slot), Placement::CostWeighted) => {
                 let plan = slot.get();
                 let xi = plan.quantize_input(x);
-                let est = self.cost_est.read().unwrap().clone();
+                let est = read_recover(&self.cost_est).clone();
                 let cost = match est {
                     Some(e) => e.estimate(&plan, &xi),
                     None => plan.estimate_macs(&xi),
@@ -297,7 +350,7 @@ impl Coordinator {
     /// Install (or clear) the per-request energy observer the McuSim
     /// workers report to.
     pub fn set_energy_tap(&self, tap: Option<Arc<dyn EnergyTap>>) {
-        *self.energy_tap.write().unwrap() = tap;
+        *write_recover(&self.energy_tap) = tap;
     }
 
     /// Per-shard queued-cost gauges (estimated MACs awaiting service
@@ -328,20 +381,23 @@ impl Coordinator {
         self.input_len
     }
 
+    /// Dispatch on the infallible in-process paths. A closed intake
+    /// (shutdown racing a submit) drops the request, which the caller
+    /// observes as its reply channel disconnecting — this used to
+    /// panic inside the shard pool, taking the *submitting* thread
+    /// down with it.
     fn dispatch(&self, mut req: InferRequest) {
         let (cost, xi) = self.price(&req.x);
         req.xi = xi;
         match &self.intake {
             Intake::Pool(pool) => {
-                pool.push_with_cost(req, cost, self.placement);
+                let _ = pool.try_push_with_cost(req, cost, self.placement);
             }
-            Intake::Chan(tx) => tx
-                .lock()
-                .unwrap()
-                .as_ref()
-                .expect("coordinator closed")
-                .send(req)
-                .expect("queue closed"),
+            Intake::Chan(tx) => {
+                if let Some(tx) = lock_recover(tx).as_ref() {
+                    let _ = tx.send(req);
+                }
+            }
         }
     }
 
@@ -354,7 +410,7 @@ impl Coordinator {
                 .try_push_with_cost(req, cost, self.placement)
                 .map(|_| ())
                 .map_err(|_| SubmitError::Closed),
-            Intake::Chan(tx) => match tx.lock().unwrap().as_ref() {
+            Intake::Chan(tx) => match lock_recover(tx).as_ref() {
                 Some(tx) => tx.send(req).map_err(|_| SubmitError::Closed),
                 None => Err(SubmitError::Closed),
             },
@@ -453,7 +509,7 @@ impl Coordinator {
     pub fn close(&self) {
         match &self.intake {
             Intake::Pool(pool) => pool.close(),
-            Intake::Chan(tx) => drop(tx.lock().unwrap().take()),
+            Intake::Chan(tx) => drop(lock_recover(tx).take()),
         }
     }
 
@@ -461,9 +517,11 @@ impl Coordinator {
     /// every queued request has drained and the threads exited. Safe to
     /// call more than once (later calls are no-ops).
     pub fn join_workers(&self) {
-        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *self.handles.lock().unwrap());
+        let handles: Vec<JoinHandle<()>> = std::mem::take(&mut *lock_recover(&self.handles));
         for h in handles {
-            h.join().expect("worker panicked");
+            // The supervisor absorbs worker panics; a panic escaping it
+            // (catastrophic) must not cascade into the joining thread.
+            let _ = h.join();
         }
     }
 
@@ -485,12 +543,42 @@ impl Drop for Coordinator {
     }
 }
 
+/// What a worker holds when it might die: enough to route the
+/// `Failed` terminal outcome to the waiting client instead of losing
+/// the request. Stashed at dequeue, taken back on the normal reply
+/// path, reconciled by the panic supervisor otherwise.
+struct InFlight {
+    ctl: Option<Arc<RequestCtl>>,
+    reply: ReplyTo,
+}
+
+/// Terminal-fail a request stranded by a worker panic. A streamed
+/// request gets exactly one `Failed` status through its sink iff the
+/// supervisor wins the ctl's terminal CAS (a concurrent cancel/expiry
+/// may beat it — then that outcome already answered the client).
+/// In-process callers have no ctl: dropping the stashed reply
+/// disconnects their channel, which is their failure signal.
+fn fail_inflight(fl: InFlight, metrics: &Metrics) {
+    let won = match &fl.ctl {
+        Some(ctl) => ctl.fail(),
+        None => true,
+    };
+    if won {
+        metrics.record_failed();
+        if let ReplyTo::Stream(sink) = fl.reply {
+            sink.fail();
+        }
+    }
+}
+
 fn mcu_worker(
     worker: usize,
-    pool: Arc<ShardPool<InferRequest>>,
-    slot: Arc<PlanSlot>,
-    metrics: Arc<Metrics>,
-    tap: EnergyTapSlot,
+    pool: &ShardPool<InferRequest>,
+    slot: &PlanSlot,
+    metrics: &Metrics,
+    tap: &EnergyTapSlot,
+    fault: Option<&FaultPlan>,
+    inflight: &Mutex<Option<InFlight>>,
 ) {
     let energy = EnergyModel::default();
     // Per-worker scratch arena: no allocation on the request path. The
@@ -527,6 +615,15 @@ fn mcu_worker(
                 plan = cur;
             }
         }
+        // Stash what we are about to execute: if this iteration
+        // panics, the supervisor fails the request from the stash
+        // instead of losing it. The reply handle moves into the stash
+        // (it is not Clone) and moves back out on the normal path.
+        let is_single = matches!(req.reply, ReplyTo::Single(_));
+        *lock_recover(inflight) = Some(InFlight { ctl: req.ctl.clone(), reply: req.reply });
+        if fault.is_some_and(|f| f.inject_panic()) {
+            panic!("injected worker panic (chaos plan, seed {})", fault.unwrap().seed());
+        }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
         // Cost-weighted dispatch already quantized the input; reuse it.
@@ -547,7 +644,7 @@ fn mcu_worker(
             service_us,
             latency_us: queue_us + service_us,
         };
-        if matches!(req.reply, ReplyTo::Single(_)) {
+        if is_single {
             metrics.record_batch(1);
         }
         metrics.record_request(
@@ -558,14 +655,23 @@ fn mcu_worker(
             resp.mcu_secs,
         );
         let energy_mj = resp.energy_mj;
-        req.reply.deliver(req.slot, resp);
+        // Model-level keep ratio of this inference: the drift
+        // detector's feedback signal, complementary to the skip
+        // fraction already on the response.
+        let keep_ratio = 1.0 - resp.mac_skipped;
+        // Normal path: take the reply back out of the stash — from
+        // here on a panic has nothing to reconcile.
+        let fl = lock_recover(inflight).take().expect("in-flight stash present");
+        fl.reply.deliver(req.slot, resp);
         // Feed the governor AFTER delivering the reply: a scale change
         // (and a possible cache-miss compile) never sits between a
         // finished inference and its client. Clone the Arc out of the
         // lock so a slow observe holds no lock.
-        let observer = tap.read().unwrap().clone();
+        let observer = read_recover(tap).clone();
         if let Some(observer) = observer {
             observer.observe(energy_mj);
+            observer.observe_keep(keep_ratio);
+            observer.sample_input(&req.x);
         }
     }
 }
@@ -822,6 +928,110 @@ mod tests {
         let g1 = slot.generation();
         slot.swap(a);
         assert!(slot.generation() > g1);
+    }
+
+    #[test]
+    fn submit_after_close_disconnects_instead_of_panicking() {
+        let def = zoo("mnist");
+        let params = Params::random(&def, 10);
+        let q = QModel::quantize(&def, &params);
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 1, ..Default::default() },
+        );
+        coord.close();
+        // Regression: these in-process paths used to panic inside the
+        // shard pool when racing shutdown; they must now degrade to a
+        // disconnected reply channel.
+        let rx = coord.submit(vec![0.0; def.input_len()]);
+        assert!(rx.recv().is_err(), "closed intake must disconnect, not serve");
+        let brx = coord.submit_batch(vec![vec![0.0; def.input_len()]; 2]);
+        assert!(brx.recv().is_err());
+        coord.join_workers();
+    }
+
+    #[test]
+    fn worker_panics_are_contained_and_requests_fail_terminally() {
+        use crate::util::FaultRates;
+        let def = zoo("mnist");
+        let params = Params::random(&def, 11);
+        let q = QModel::quantize(&def, &params);
+        let fault = Arc::new(FaultPlan::with_rates(
+            7,
+            FaultRates { panic_rate: 1.0, ..FaultRates::default() },
+        ));
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 2, fault: Some(fault), ..Default::default() },
+        );
+        // Every dequeue panics: each request must end disconnected
+        // (failed), never hang, and the pool must keep accepting work
+        // (respawns) rather than bleed workers.
+        let n = 6u64;
+        for i in 0..n {
+            let rx = coord.submit(vec![0.01 * i as f32; def.input_len()]);
+            assert!(
+                rx.recv_timeout(Duration::from_secs(30)).is_err(),
+                "request {i} should fail via disconnect"
+            );
+        }
+        coord.close();
+        coord.join_workers();
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.worker_panics, n, "one caught panic per request");
+        assert_eq!(snap.respawns, n, "every caught panic must respawn");
+        assert_eq!(snap.failed, n, "every stranded request must fail terminally");
+    }
+
+    #[test]
+    fn panic_fails_streamed_request_exactly_once() {
+        use crate::coordinator::request::CtlState;
+        use crate::util::FaultRates;
+        struct FailCounter {
+            fails: AtomicU64,
+        }
+        impl StreamSink for FailCounter {
+            fn put(&self, _slot: usize, _resp: InferResponse) {}
+            fn fail(&self) {
+                self.fails.fetch_add(1, Ordering::SeqCst);
+            }
+        }
+        let def = zoo("mnist");
+        let params = Params::random(&def, 12);
+        let q = QModel::quantize(&def, &params);
+        let fault = Arc::new(FaultPlan::with_rates(
+            3,
+            FaultRates { panic_rate: 1.0, ..FaultRates::default() },
+        ));
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 1, fault: Some(fault), ..Default::default() },
+        );
+        let sink = Arc::new(FailCounter { fails: AtomicU64::new(0) });
+        let ctl = RequestCtl::shared();
+        // Three samples, one worker: the first dequeue panics and wins
+        // the fail CAS; the remaining samples are tombstone-dropped at
+        // dequeue — the client hears `Failed` exactly once.
+        coord
+            .submit_streamed(
+                1,
+                vec![vec![0.2; def.input_len()]; 3],
+                Arc::clone(&ctl),
+                Arc::clone(&sink) as Arc<dyn StreamSink>,
+            )
+            .unwrap();
+        let t0 = Instant::now();
+        while !ctl.is_dead() && t0.elapsed() < Duration::from_secs(30) {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        assert_eq!(ctl.state(), CtlState::Failed);
+        coord.close();
+        coord.join_workers();
+        assert_eq!(sink.fails.load(Ordering::SeqCst), 1, "exactly one Failed notification");
+        let snap = coord.metrics.snapshot();
+        assert_eq!(snap.failed, 1);
+        assert!(snap.worker_panics >= 1);
+        assert_eq!(snap.dropped, 2, "surviving samples tombstone-dropped");
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! unit serve  --model mnist --requests 64 --workers 2 [--backend pjrt]
 //! unit serve  --listen 127.0.0.1:0 --workers 4   # streamed TCP serving
 //! unit serve  --listen 127.0.0.1:0 --budget-mj 4.0 --park 16  # adaptive + parked admission
+//! unit serve  --listen 127.0.0.1:0 --chaos-seed 7   # deterministic fault injection (chaos)
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
@@ -32,6 +33,7 @@ use unit_pruner::runtime::{ArtifactStore, Runtime};
 use unit_pruner::train::{ensure_trained, evaluate_float, TrainConfig};
 use unit_pruner::util::cli::Args;
 use unit_pruner::util::table::Table;
+use unit_pruner::util::FaultPlan;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
@@ -391,6 +393,15 @@ fn cmd_serve(args: &Args) -> Result<()> {
         "two-choice" | "count" => Placement::TwoChoice,
         _ => Placement::CostWeighted,
     };
+    // `--chaos-seed S` (non-zero) arms the deterministic fault plan:
+    // injected worker panics coordinator-side plus reply corruption,
+    // delays, and read stalls session-side — the self-healing paths
+    // under test in CI's chaos-smoke job.
+    let chaos_seed = args.u64_or("chaos-seed", 0);
+    let fault = (chaos_seed != 0).then(|| Arc::new(FaultPlan::new(chaos_seed)));
+    if let Some(f) = &fault {
+        eprintln!("[serve] chaos plan armed (seed {})", f.seed());
+    }
     let coord = Coordinator::start(
         choice,
         ServeConfig {
@@ -398,6 +409,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_batch: args.usize_or("max-batch", 8),
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
             placement,
+            fault: fault.clone(),
         },
     );
 
@@ -450,7 +462,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     if let Some(addr) = args.get("listen") {
-        return cmd_serve_listen(args, coord, governor, addr);
+        return cmd_serve_listen(args, coord, governor, fault, addr);
     }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_req)
@@ -506,7 +518,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
 
 /// `unit serve --listen ADDR [--window N] [--park P] [--park-bytes B]
 /// [--deadline-ms D] [--max-conns C] [--serve-secs S] [--stats-secs T]
-/// [--budget-mj B]`
+/// [--budget-mj B] [--chaos-seed S]`
 ///
 /// Streamed TCP serving: sessions with credit-window backpressure
 /// (window-overflow frames parked for credit-return admission when
@@ -521,6 +533,7 @@ fn cmd_serve_listen(
     args: &Args,
     coord: Coordinator,
     governor: Option<Arc<Governor>>,
+    fault: Option<Arc<FaultPlan>>,
     addr: &str,
 ) -> Result<()> {
     let opts = ServeOpts {
@@ -537,6 +550,7 @@ fn cmd_serve_listen(
             ..Default::default()
         },
         governor: governor.clone(),
+        fault,
     };
     let metrics = std::sync::Arc::clone(&coord.metrics);
     let server = Server::start(coord, addr, opts).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
@@ -573,7 +587,7 @@ fn cmd_serve_listen(
                     let gs = g.status();
                     format!(
                         " scale={:.2}x step={}/{} ewma={:.3}mJ budget={:.3}mJ swaps={} \
-                         bg={}p/{}c/{}u",
+                         bg={}p/{}c/{}u drift={}t/{}r",
                         gs.scale_q8 as f64 / 256.0,
                         gs.step,
                         gs.steps_total,
@@ -582,20 +596,26 @@ fn cmd_serve_listen(
                         gs.swaps,
                         gs.bg_pending,
                         gs.bg_compiled,
-                        gs.bg_upgrades
+                        gs.bg_upgrades,
+                        gs.drift_trips,
+                        gs.recalibrations
                     )
                 }
                 None => String::new(),
             };
             println!(
                 "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
-                 parked={} sessions={}/{} p50/p99={}/{}us{shard_cost_str}{adaptive_str}",
+                 failed={} panics={} respawns={} parked={} sessions={}/{} \
+                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}",
                 s.served,
                 s.inflight,
                 s.rejected,
                 s.expired,
                 s.cancelled,
                 s.dropped,
+                s.failed,
+                s.worker_panics,
+                s.respawns,
                 s.parked,
                 s.sessions_opened - s.sessions_closed,
                 s.sessions_opened,
@@ -611,8 +631,17 @@ fn cmd_serve_listen(
     let s = metrics.snapshot();
     println!(
         "unit serve: done — served {} ({} rejected, {} expired, {} cancelled, {} dropped, \
-         {} parked) over {} sessions",
-        s.served, s.rejected, s.expired, s.cancelled, s.dropped, s.parked, s.sessions_opened
+         {} failed, {} parked; {} panics contained, {} respawns) over {} sessions",
+        s.served,
+        s.rejected,
+        s.expired,
+        s.cancelled,
+        s.dropped,
+        s.failed,
+        s.parked,
+        s.worker_panics,
+        s.respawns,
+        s.sessions_opened
     );
     Ok(())
 }

@@ -15,9 +15,10 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::wire::{self, Frame, FrameReader, Payload, Status, WHOLE_REQUEST};
+use crate::util::Rng;
 
 /// One response event as seen by a client: either a sample result
 /// (`status == Ok`, `slot` = sample index) or a request-level outcome
@@ -60,6 +61,14 @@ pub struct AdminStats {
     pub bg_compiled: u64,
     /// Background compiles that upgraded the live plan slot.
     pub bg_upgrades: u64,
+    /// Worker panics contained by the coordinator's supervisor.
+    pub worker_panics: u64,
+    /// Workers respawned with fresh scratch after a contained panic.
+    pub respawns: u64,
+    /// Sustained keep-ratio divergences flagged by the drift tracker.
+    pub drift_trips: u64,
+    /// Live profile re-measurements completed after drift trips.
+    pub recalibrations: u64,
 }
 
 impl AdminStats {
@@ -409,6 +418,10 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
             bg_pending,
             bg_compiled,
             bg_upgrades,
+            worker_panics,
+            respawns,
+            drift_trips,
+            recalibrations,
         } => {
             if let Some(tx) = shared.stats.lock().unwrap().remove(&id) {
                 let _ = tx.send(AdminStats {
@@ -424,6 +437,10 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
                     bg_pending,
                     bg_compiled,
                     bg_upgrades,
+                    worker_panics,
+                    respawns,
+                    drift_trips,
+                    recalibrations,
                 });
             }
         }
@@ -437,4 +454,210 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
         Frame::Request { .. } | Frame::Cancel { .. } | Frame::Ping { .. }
         | Frame::SetBudget { .. } => {}
     }
+}
+
+// ---------------------------------------------------------------------------
+// Retrying client
+
+/// Retry policy for [`RetryClient`].
+#[derive(Debug, Clone, Copy)]
+pub struct RetryCfg {
+    /// Total submission attempts per request (first try included).
+    pub max_attempts: usize,
+    /// First backoff; doubles per failed attempt (jittered ±50%).
+    pub base_backoff: Duration,
+    /// Backoff ceiling.
+    pub max_backoff: Duration,
+    /// Seed for the jitter stream — fixed so chaos runs replay
+    /// identically; give concurrent clients distinct seeds to decorrelate
+    /// their retry storms.
+    pub seed: u64,
+}
+
+impl Default for RetryCfg {
+    fn default() -> RetryCfg {
+        RetryCfg {
+            max_attempts: 8,
+            base_backoff: Duration::from_millis(25),
+            max_backoff: Duration::from_secs(1),
+            seed: 1,
+        }
+    }
+}
+
+/// Self-healing wrapper over [`Client`]: reconnects on connection loss
+/// and resubmits requests answered `Rejected` (backpressure) or
+/// `Failed` (a contained worker panic), with jittered exponential
+/// backoff between attempts. `Expired` is terminal — a lapsed deadline
+/// must not be retried into a second bite at the budget — and the
+/// overall deadline bounds the whole retry loop, sleeps included.
+///
+/// Requests are submitted one at a time (no pipelining): the point is
+/// a correctness-first caller for chaos runs and scripts, not a load
+/// generator.
+pub struct RetryClient {
+    addr: String,
+    cfg: RetryCfg,
+    inner: Mutex<Option<Client>>,
+    rng: Mutex<Rng>,
+}
+
+impl RetryClient {
+    /// Build the wrapper. No connection is attempted until the first
+    /// request — a server that is still booting costs a backoff, not
+    /// an error.
+    pub fn connect(addr: impl Into<String>, cfg: RetryCfg) -> RetryClient {
+        RetryClient {
+            addr: addr.into(),
+            cfg,
+            inner: Mutex::new(None),
+            rng: Mutex::new(Rng::new(cfg.seed ^ 0xC1A0_5EED)),
+        }
+    }
+
+    /// Infer one sample, retrying through rejections, contained worker
+    /// failures, and connection loss. Returns the final `Ok` (or
+    /// `Expired`) event.
+    pub fn infer(&self, x: &[f32], deadline: Option<Duration>) -> std::io::Result<WireResponse> {
+        let mut out = self.infer_batch(std::slice::from_ref(&x.to_vec()), deadline)?;
+        Ok(out.remove(0))
+    }
+
+    /// Infer a batch, retrying the whole batch on any retryable
+    /// outcome. On success the returned events are in slot order,
+    /// one per sample; a terminal `Expired` comes back as a single
+    /// whole-request event.
+    pub fn infer_batch(
+        &self,
+        xs: &[Vec<f32>],
+        deadline: Option<Duration>,
+    ) -> std::io::Result<Vec<WireResponse>> {
+        let t0 = Instant::now();
+        let mut last_err: Option<std::io::Error> = None;
+        for attempt in 0..self.cfg.max_attempts {
+            if attempt > 0 {
+                let slept = self.backoff(attempt, deadline.map(|d| d.saturating_sub(t0.elapsed())));
+                if !slept {
+                    break; // deadline would lapse mid-backoff
+                }
+            }
+            match self.try_once(xs, deadline, t0) {
+                Attempt::Done(events) => return Ok(events),
+                Attempt::Retry(e) => last_err = Some(e),
+                Attempt::Fatal(e) => return Err(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "retry budget exhausted")
+        }))
+    }
+
+    /// One submission attempt over the current (or a fresh) connection.
+    fn try_once(
+        &self,
+        xs: &[Vec<f32>],
+        deadline: Option<Duration>,
+        t0: Instant,
+    ) -> Attempt {
+        let mut guard = self.inner.lock().unwrap();
+        if guard.as_ref().is_none_or(|c| c.is_closed()) {
+            match Client::connect(self.addr.as_str()) {
+                Ok(c) => *guard = Some(c),
+                Err(e) => {
+                    *guard = None;
+                    return Attempt::Retry(e);
+                }
+            }
+        }
+        let client = guard.as_ref().expect("connection just ensured");
+        let rx = match client.submit_batch(xs, deadline.map(|d| d.saturating_sub(t0.elapsed()))) {
+            Ok((_, rx)) => rx,
+            Err(e) if e.kind() == std::io::ErrorKind::InvalidInput => return Attempt::Fatal(e),
+            Err(e) => {
+                *guard = None; // dead or closing connection: reconnect next attempt
+                return Attempt::Retry(e);
+            }
+        };
+        drop(guard);
+        let mut events: Vec<WireResponse> = Vec::with_capacity(xs.len());
+        loop {
+            let wait = deadline
+                .map(|d| d.saturating_sub(t0.elapsed()))
+                .unwrap_or(Duration::from_secs(30));
+            let ev = match rx.recv_timeout(wait) {
+                Ok(ev) => ev,
+                Err(_) => {
+                    // Disconnected mid-stream (or the wait ran out):
+                    // drop the connection and retry — a corrupted or
+                    // lost reply is indistinguishable from a dead peer.
+                    *self.inner.lock().unwrap() = None;
+                    return Attempt::Retry(std::io::Error::new(
+                        std::io::ErrorKind::ConnectionAborted,
+                        "reply stream broke mid-request",
+                    ));
+                }
+            };
+            match ev.status {
+                Status::Ok => {
+                    // The server contract is contiguous slot order; a
+                    // violation is a protocol bug, not chaos noise.
+                    if ev.slot as usize != events.len() {
+                        return Attempt::Fatal(std::io::Error::new(
+                            std::io::ErrorKind::InvalidData,
+                            format!("out-of-order slot {} (expected {})", ev.slot, events.len()),
+                        ));
+                    }
+                    events.push(ev);
+                    if events.len() == xs.len() {
+                        return Attempt::Done(events);
+                    }
+                }
+                // Backpressure or a contained worker panic: resubmit.
+                Status::Rejected | Status::Failed => {
+                    return Attempt::Retry(std::io::Error::new(
+                        std::io::ErrorKind::Interrupted,
+                        format!("request answered {:?}; resubmitting", ev.status),
+                    ));
+                }
+                // The deadline lapsed server-side: terminal by design.
+                Status::Expired => return Attempt::Done(vec![ev]),
+                Status::Error => {
+                    return Attempt::Fatal(std::io::Error::new(
+                        std::io::ErrorKind::InvalidInput,
+                        "server answered Error (malformed request)",
+                    ));
+                }
+            }
+        }
+    }
+
+    /// Sleep the jittered exponential backoff for `attempt` (≥ 1).
+    /// Returns false — without sleeping — when the remaining deadline
+    /// cannot cover the sleep.
+    fn backoff(&self, attempt: usize, remaining: Option<Duration>) -> bool {
+        let exp = self
+            .cfg
+            .base_backoff
+            .saturating_mul(1u32 << (attempt - 1).min(16) as u32)
+            .min(self.cfg.max_backoff);
+        let jitter = 0.5 + 0.5 * self.rng.lock().unwrap().f64();
+        let sleep = exp.mul_f64(jitter);
+        if let Some(rem) = remaining {
+            if sleep >= rem {
+                return false;
+            }
+        }
+        std::thread::sleep(sleep);
+        true
+    }
+}
+
+/// Outcome of one [`RetryClient`] submission attempt.
+enum Attempt {
+    /// Final events (slot-ordered `Ok`s, or one terminal `Expired`).
+    Done(Vec<WireResponse>),
+    /// Retryable: backoff, then resubmit (reconnecting if needed).
+    Retry(std::io::Error),
+    /// Not retryable: caller bug or protocol violation.
+    Fatal(std::io::Error),
 }

@@ -32,6 +32,7 @@ use super::session::{spawn_session, Reaper, SessionCfg, SessionHandle};
 use super::wire::{self, Frame};
 use crate::control::Governor;
 use crate::coordinator::{Coordinator, Metrics};
+use crate::util::FaultPlan;
 
 /// Listener configuration.
 #[derive(Debug, Clone)]
@@ -46,11 +47,16 @@ pub struct ServeOpts {
     /// through it; `None` answers them with the "adaptive control
     /// disabled" Stats shape.
     pub governor: Option<Arc<Governor>>,
+    /// Deterministic fault-injection plan for chaos runs: sessions
+    /// draw reply delays, frame corruption, and read stalls from it.
+    /// Share the same `Arc` with `ServeConfig::fault` to also inject
+    /// worker panics. `None` (the default) injects nothing.
+    pub fault: Option<Arc<FaultPlan>>,
 }
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_conns: 64, session: SessionCfg::default(), governor: None }
+        ServeOpts { max_conns: 64, session: SessionCfg::default(), governor: None, fault: None }
     }
 }
 
@@ -85,11 +91,12 @@ impl Server {
         let t_reaper = Arc::clone(&reaper);
         let session_cfg = opts.session.clone();
         let governor = opts.governor.clone();
+        let fault = opts.fault.clone();
         let max_conns = opts.max_conns.max(1);
         let accept_handle = std::thread::spawn(move || {
             accept_loop(
                 listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, governor,
-                max_conns,
+                fault, max_conns,
             )
         });
 
@@ -170,6 +177,7 @@ fn accept_loop(
     reaper: Arc<Reaper>,
     session_cfg: SessionCfg,
     governor: Option<Arc<Governor>>,
+    fault: Option<Arc<FaultPlan>>,
     max_conns: usize,
 ) {
     while !stop.load(Ordering::Acquire) {
@@ -208,6 +216,7 @@ fn accept_loop(
                     Arc::clone(&reaper),
                     session_cfg.clone(),
                     governor.clone(),
+                    fault.clone(),
                 ) {
                     Ok(handle) => guard.push(handle),
                     Err(e) => eprintln!("[serve] failed to start session: {e}"),

@@ -22,7 +22,10 @@
 //!   connection cap, close-listener → drain-sessions → close-pool
 //!   shutdown.
 //! * [`client`] — the blocking reference client used by the
-//!   `stream_clients` load generator and the loopback e2e tests.
+//!   `stream_clients` load generator and the loopback e2e tests, plus
+//!   [`client::RetryClient`], the self-healing wrapper that reconnects
+//!   and resubmits through `Rejected`/`Failed` outcomes with jittered
+//!   exponential backoff.
 //!
 //! Everything is `std` (TcpListener/TcpStream + threads), matching the
 //! rest of the crate: no async runtime in the vendored set, and none
@@ -33,7 +36,7 @@ pub mod listener;
 pub mod session;
 pub mod wire;
 
-pub use client::{AdminStats, Client, WireResponse};
+pub use client::{AdminStats, Client, RetryCfg, RetryClient, WireResponse};
 pub use listener::{ServeOpts, Server};
 pub use session::{Reaper, SessionCfg, SessionExit, SessionHandle};
 pub use wire::{Frame, FrameReader, Payload, Status, WireError, WHOLE_REQUEST};

@@ -28,7 +28,12 @@
 //!   as a contiguous prefix;
 //! * **graceful drain** — on client `Goodbye`, listener shutdown, or
 //!   disconnect: stop admitting, let in-flight work finish (bounded by
-//!   `drain_timeout`), answer `Goodbye`, close.
+//!   `drain_timeout`), answer `Goodbye`, close;
+//! * **failure reporting** — when a worker panics with one of this
+//!   session's samples in flight, the coordinator's supervisor wins
+//!   the ctl CAS and calls the sink's `fail()`: the client gets a
+//!   single `Failed` status frame, the window credit returns, and no
+//!   later sub-reply can contradict the outcome.
 //!
 //! The outcome race (completion vs deadline vs cancel) is decided
 //! entirely by the `RequestCtl` CAS — whichever transition wins
@@ -46,6 +51,7 @@ use std::time::{Duration, Instant};
 use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
 use crate::control::Governor;
 use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
+use crate::util::{lock_recover, FaultPlan};
 
 /// Per-session configuration.
 #[derive(Debug, Clone)]
@@ -378,6 +384,11 @@ pub(crate) struct SessionShared {
     /// Adaptive control plane, when the server runs one: the
     /// `SetBudget`/`Stats` admin frames land here.
     governor: Option<Arc<Governor>>,
+    /// Deterministic chaos plan, when the server runs one: injects
+    /// reply delays and frame corruption on the write path and read
+    /// stalls on the session thread (worker-side panics are injected
+    /// by the coordinator's own copy of the plan).
+    fault: Option<Arc<FaultPlan>>,
     metrics: Arc<Metrics>,
 }
 
@@ -388,8 +399,18 @@ impl SessionShared {
         if self.dead.load(Ordering::Acquire) {
             return false;
         }
-        let bytes = wire::encode(frame);
-        let mut w = self.writer.lock().unwrap();
+        let mut bytes = wire::encode(frame);
+        if let Some(f) = &self.fault {
+            // Delay outside the writer lock so one injected stall
+            // never serializes every other sender on this session.
+            if let Some(d) = f.reply_delay() {
+                std::thread::sleep(d);
+            }
+            // A corrupted frame fails the client's CRC check; the
+            // retry client treats that as a dead connection.
+            f.corrupt_frame(&mut bytes);
+        }
+        let mut w = lock_recover(&self.writer);
         match w.write_all(&bytes).and_then(|()| w.flush()) {
             Ok(()) => true,
             Err(_) => {
@@ -402,7 +423,7 @@ impl SessionShared {
     /// Remove `id` from the window and update the gauge. Only the
     /// winner of the ctl CAS calls this, so the accounting is exact.
     fn finish(&self, id: u64) {
-        if self.inflight.lock().unwrap().remove(&id).is_some() {
+        if lock_recover(&self.inflight).remove(&id).is_some() {
             self.metrics.inflight_delta(-1);
         }
     }
@@ -442,7 +463,7 @@ struct ReorderState {
 
 impl StreamSink for SessionSink {
     fn put(&self, slot: usize, resp: InferResponse) {
-        let mut ord = self.order.lock().unwrap();
+        let mut ord = lock_recover(&self.order);
         ord.parked.insert(slot, resp);
         // Ship the contiguous prefix. The ctl check sits inside the
         // loop: a cancel that lands mid-batch stops the stream exactly
@@ -478,6 +499,20 @@ impl StreamSink for SessionSink {
             }
         }
     }
+
+    /// A worker panicked with this request's sample in flight. The
+    /// supervisor already won the ctl CAS (`fail()`), so every
+    /// still-queued sibling sample is a tombstone and no sub-reply can
+    /// race this: report the terminal outcome once, return the window
+    /// credit, and let the freed credit admit parked work. Runs on the
+    /// supervisor's (worker) thread, which writes sockets like any
+    /// other worker reply.
+    fn fail(&self) {
+        lock_recover(&self.order).parked.clear();
+        self.shared.finish(self.id);
+        self.shared.status_reply(self.id, Status::Failed);
+        try_admit_parked(&self.shared);
+    }
 }
 
 /// A running session: the reading thread plus its shared state.
@@ -510,6 +545,7 @@ pub(crate) fn spawn_session(
     reaper: Arc<Reaper>,
     cfg: SessionCfg,
     governor: Option<Arc<Governor>>,
+    fault: Option<Arc<FaultPlan>>,
 ) -> std::io::Result<SessionHandle> {
     let read_half = stream.try_clone()?;
     // Period between liveness checks of the draining/dead flags while
@@ -529,6 +565,7 @@ pub(crate) fn spawn_session(
         coord,
         reaper,
         governor,
+        fault,
         metrics,
     });
     let thread_shared = Arc::clone(&shared);
@@ -550,7 +587,7 @@ fn session_loop(shared: Arc<SessionShared>, mut read_half: TcpStream) -> Session
         // empties (or the timeout forces the issue).
         if shared.draining.load(Ordering::Acquire) {
             let t0 = *drain_started.get_or_insert_with(Instant::now);
-            let empty = shared.inflight.lock().unwrap().is_empty();
+            let empty = lock_recover(&shared.inflight).is_empty();
             if empty || t0.elapsed() > shared.cfg.drain_timeout {
                 if !empty {
                     cancel_all(&shared);
@@ -574,6 +611,12 @@ fn session_loop(shared: Arc<SessionShared>, mut read_half: TcpStream) -> Session
         match read_half.read(&mut buf) {
             Ok(0) => break SessionExit::Disconnect,
             Ok(n) => {
+                // Injected read stall: the peer's bytes sit unparsed
+                // for a bounded moment, exercising deadline expiry and
+                // client-side timeouts under a slow server.
+                if let Some(d) = shared.fault.as_ref().and_then(|f| f.read_stall()) {
+                    std::thread::sleep(d);
+                }
                 reader.feed(&buf[..n]);
                 loop {
                     match reader.next() {
@@ -623,7 +666,7 @@ fn finish_session(shared: &Arc<SessionShared>, exit: SessionExit) -> SessionExit
 /// admitted once the session stops accepting). Session-thread only —
 /// it writes the socket.
 fn reject_parked(shared: &Arc<SessionShared>) {
-    let drained: Vec<Parked> = shared.park.lock().unwrap().drain_all();
+    let drained: Vec<Parked> = lock_recover(&shared.park).drain_all();
     for p in drained {
         shared.metrics.record_rejected();
         shared.status_reply(p.id, Status::Rejected);
@@ -633,7 +676,7 @@ fn reject_parked(shared: &Arc<SessionShared>) {
 /// Write out status frames the reaper deferred to this session.
 fn flush_deferred(shared: &Arc<SessionShared>) {
     let deferred: Vec<(u64, Status)> =
-        std::mem::take(&mut *shared.deferred.lock().unwrap());
+        std::mem::take(&mut *lock_recover(&shared.deferred));
     for (id, status) in deferred {
         shared.status_reply(id, status);
     }
@@ -642,7 +685,7 @@ fn flush_deferred(shared: &Arc<SessionShared>) {
 /// Cancel every in-flight request (disconnect / drain timeout path).
 fn cancel_all(shared: &Arc<SessionShared>) {
     let drained: Vec<(u64, Inflight)> =
-        shared.inflight.lock().unwrap().drain().collect();
+        lock_recover(&shared.inflight).drain().collect();
     for (_, inf) in &drained {
         inf.ctl.cancel();
         shared.metrics.inflight_delta(-1);
@@ -661,7 +704,7 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
             // Silence is the contract: sub-replies just stop. Only the
             // CAS winner books the cancel (a cancel racing completion
             // or expiry is a no-op).
-            let ctl = shared.inflight.lock().unwrap().get(&id).map(|inf| Arc::clone(&inf.ctl));
+            let ctl = lock_recover(&shared.inflight).get(&id).map(|inf| Arc::clone(&inf.ctl));
             if let Some(ctl) = ctl {
                 if ctl.cancel() {
                     shared.finish(id);
@@ -675,7 +718,7 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                 // (same contract as cancelling queued work); the CAS
                 // keeps a racing expiry from double-reporting.
                 let parked_ctl =
-                    shared.park.lock().unwrap().remove_id(id).map(|p| p.ctl);
+                    lock_recover(&shared.park).remove_id(id).map(|p| p.ctl);
                 if let Some(ctl) = parked_ctl {
                     if ctl.cancel() {
                         shared.metrics.record_cancelled();
@@ -693,6 +736,10 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
         // governor the reply carries `scale_q8 == 0` — "adaptive
         // control disabled" — instead of an error, so probes are cheap.
         Frame::SetBudget { id, budget_mj } => {
+            // Self-healing gauges ride the same frame whether or not a
+            // governor is attached: panic containment is a coordinator
+            // property, not a control-plane one.
+            let m = shared.metrics.snapshot();
             let stats = match &shared.governor {
                 Some(g) => {
                     if budget_mj > 0.0 {
@@ -713,6 +760,10 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                         bg_pending: s.bg_pending,
                         bg_compiled: s.bg_compiled,
                         bg_upgrades: s.bg_upgrades,
+                        worker_panics: m.worker_panics,
+                        respawns: m.respawns,
+                        drift_trips: s.drift_trips,
+                        recalibrations: s.recalibrations,
                     }
                 }
                 None => Frame::Stats {
@@ -729,6 +780,10 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
                     bg_pending: 0,
                     bg_compiled: 0,
                     bg_upgrades: 0,
+                    worker_panics: m.worker_panics,
+                    respawns: m.respawns,
+                    drift_trips: 0,
+                    recalibrations: 0,
                 },
             };
             shared.send(&stats);
@@ -768,8 +823,8 @@ fn handle_request(
     // Unique id across both the window and the park queue (a parked
     // duplicate would otherwise collide with itself at admission).
     {
-        let dup_window = shared.inflight.lock().unwrap().contains_key(&id);
-        let dup_park = shared.park.lock().unwrap().contains_id(id);
+        let dup_window = lock_recover(&shared.inflight).contains_key(&id);
+        let dup_park = lock_recover(&shared.park).contains_id(id);
         if dup_window || dup_park {
             shared.status_reply(id, Status::Error);
             return;
@@ -794,7 +849,7 @@ fn handle_request(
     // up behind existing overflow instead of racing a freed credit
     // past it).
     let outcome = {
-        let mut park = shared.park.lock().unwrap();
+        let mut park = lock_recover(&shared.park);
         if shared.cfg.park > 0 && !park.is_empty() {
             park_or_reject(shared, &mut park, parked)
         } else {
@@ -914,11 +969,11 @@ fn register_expiry(shared: &Arc<SessionShared>, id: u64, ctl: &Arc<RequestCtl>, 
                 // the window is empty, and this order guarantees the
                 // frame is already queued by then, so its final
                 // flush cannot miss it.
-                shared.deferred.lock().unwrap().push((id, Status::Expired));
+                lock_recover(&shared.deferred).push((id, Status::Expired));
                 // Wherever the request sits: drop it from the park
                 // queue (not yet admitted) and/or return its window
                 // credit.
-                shared.park.lock().unwrap().remove_id(id);
+                lock_recover(&shared.park).remove_id(id);
                 shared.finish(id);
                 // Expiry returns a credit too.
                 try_admit_parked(&shared);
@@ -945,7 +1000,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         if p.t_recv.elapsed() >= d {
             if p.ctl.expire() {
                 shared.metrics.record_expired();
-                shared.deferred.lock().unwrap().push((p.id, Status::Expired));
+                lock_recover(&shared.deferred).push((p.id, Status::Expired));
             }
             return Admit::Ok;
         }
@@ -953,7 +1008,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
     {
         // Credit window + unique id, decided under the window lock so
         // concurrent admissions cannot both squeeze in.
-        let mut window = shared.inflight.lock().unwrap();
+        let mut window = lock_recover(&shared.inflight);
         if window.len() >= shared.cfg.max_inflight {
             return Admit::Full(p);
         }
@@ -980,7 +1035,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         // already tombstoned by submit_streamed. Deferred rather than
         // written here — this path can run on the reaper thread.
         shared.finish(id);
-        shared.deferred.lock().unwrap().push((id, Status::Error));
+        lock_recover(&shared.deferred).push((id, Status::Error));
     }
     Admit::Ok
 }
@@ -1003,7 +1058,7 @@ fn try_admit_parked(shared: &Arc<SessionShared>) {
         if shared.draining.load(Ordering::Acquire) {
             return;
         }
-        let mut park = shared.park.lock().unwrap();
+        let mut park = lock_recover(&shared.park);
         let Some(p) = park.pop_front() else { return };
         match admit_and_submit(shared, p) {
             Admit::Ok => continue, // more credit may be free
@@ -1014,7 +1069,7 @@ fn try_admit_parked(shared: &Arc<SessionShared>) {
                 return;
             }
             Admit::Dup(id) => {
-                shared.deferred.lock().unwrap().push((id, Status::Error));
+                lock_recover(&shared.deferred).push((id, Status::Error));
                 continue;
             }
             // admit_and_submit never parks or rejects.

@@ -16,7 +16,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "UnIT"
-//! 4       2     version (little-endian, currently 2)
+//! 4       2     version (little-endian, currently 3)
 //! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
 //!               6=Goodbye 7=SetBudget 8=Stats)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
@@ -45,10 +45,13 @@
 //!   `step:u32`, `steps_total:u32`, `budget_mj:f64`, `ewma_mj:f64`,
 //!   `keep_ratio:f32`, `cache_hits:u64`, `cache_misses:u64`,
 //!   `swaps:u64`, `bg_pending:u64`, `bg_compiled:u64`,
-//!   `bg_upgrades:u64` — the governor's scale/keep-ratio/budget state
-//!   plus its background-compile-thread health (server → client,
-//!   answering a `SetBudget`). The three `bg_*` fields were added in
-//!   protocol version 2.
+//!   `bg_upgrades:u64`, `worker_panics:u64`, `respawns:u64`,
+//!   `drift_trips:u64`, `recalibrations:u64` — the governor's
+//!   scale/keep-ratio/budget state, its background-compile-thread
+//!   health, and the self-healing counters (server → client, answering
+//!   a `SetBudget`). The three `bg_*` fields were added in protocol
+//!   version 2; the panic/respawn and drift/recalibration counters in
+//!   version 3 (panic counters are served even without a governor).
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
@@ -61,9 +64,11 @@
 pub const MAGIC: [u8; 4] = *b"UnIT";
 /// Protocol version carried (and required) by every frame. Version 2
 /// extended the `Stats` payload with the governor's background-compile
-/// counters; decoding is strict, so v1 peers are refused rather than
-/// mis-framed.
-pub const VERSION: u16 = 2;
+/// counters; version 3 added the `Failed` response status and the
+/// `Stats` self-healing counters (worker panics/respawns, drift
+/// trips/recalibrations). Decoding is strict, so older peers are
+/// refused rather than mis-framed.
+pub const VERSION: u16 = 3;
 /// Fixed header bytes before the type-specific payload.
 pub const HEADER_LEN: usize = 16;
 /// Hard cap on one frame's post-prefix length: a corrupt length prefix
@@ -136,6 +141,11 @@ pub enum Status {
     Cancelled = 3,
     /// Server-side error (malformed sample length, closed pool, …).
     Error = 4,
+    /// A worker panicked while executing the request (v3). The request
+    /// is terminal: remaining queued samples were dropped and no
+    /// further replies follow. Safe to resubmit — the panic supervisor
+    /// has already respawned the worker.
+    Failed = 5,
 }
 
 impl Status {
@@ -146,6 +156,7 @@ impl Status {
             2 => Status::Expired,
             3 => Status::Cancelled,
             4 => Status::Error,
+            5 => Status::Failed,
             other => return Err(WireError::BadStatus(other)),
         })
     }
@@ -217,6 +228,17 @@ pub enum Frame {
         bg_compiled: u64,
         /// Background compiles that upgraded the live plan slot.
         bg_upgrades: u64,
+        /// Worker panics caught by the supervisor (v3; served even
+        /// without a governor).
+        worker_panics: u64,
+        /// Worker loops respawned after a caught panic (v3).
+        respawns: u64,
+        /// Drift-detector trips since install (v3; 0 without a
+        /// governor).
+        drift_trips: u64,
+        /// Completed live recalibrations since install (v3; 0 without a
+        /// governor).
+        recalibrations: u64,
     },
 }
 
@@ -406,6 +428,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             bg_pending,
             bg_compiled,
             bg_upgrades,
+            worker_panics,
+            respawns,
+            drift_trips,
+            recalibrations,
             ..
         } => {
             put_u32(&mut body, *scale_q8);
@@ -420,6 +446,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u64(&mut body, *bg_pending);
             put_u64(&mut body, *bg_compiled);
             put_u64(&mut body, *bg_upgrades);
+            put_u64(&mut body, *worker_panics);
+            put_u64(&mut body, *respawns);
+            put_u64(&mut body, *drift_trips);
+            put_u64(&mut body, *recalibrations);
         }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
@@ -579,6 +609,10 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
             bg_pending: c.u64("bg_pending")?,
             bg_compiled: c.u64("bg_compiled")?,
             bg_upgrades: c.u64("bg_upgrades")?,
+            worker_panics: c.u64("worker_panics")?,
+            respawns: c.u64("respawns")?,
+            drift_trips: c.u64("drift_trips")?,
+            recalibrations: c.u64("recalibrations")?,
         },
         other => return Err(WireError::BadType(other)),
     };
@@ -684,6 +718,17 @@ mod tests {
             mac_skipped: 0.0,
             logits: vec![],
         });
+        // v3 terminal failure shape (worker panic).
+        roundtrip(Frame::Response {
+            id: 10,
+            slot: WHOLE_REQUEST,
+            status: Status::Failed,
+            predicted: 0,
+            queue_us: 0,
+            service_us: 0,
+            mac_skipped: 0.0,
+            logits: vec![],
+        });
         roundtrip(Frame::Cancel { id: 3 });
         roundtrip(Frame::Ping { id: 1 });
         roundtrip(Frame::Pong { id: 1 });
@@ -704,8 +749,12 @@ mod tests {
             bg_pending: 1,
             bg_compiled: 9,
             bg_upgrades: 7,
+            worker_panics: 2,
+            respawns: 2,
+            drift_trips: 1,
+            recalibrations: 1,
         });
-        // "no governor" shape
+        // "no governor" shape (panic counters still served)
         roundtrip(Frame::Stats {
             id: 9,
             scale_q8: 0,
@@ -720,6 +769,10 @@ mod tests {
             bg_pending: 0,
             bg_compiled: 0,
             bg_upgrades: 0,
+            worker_panics: 3,
+            respawns: 3,
+            drift_trips: 0,
+            recalibrations: 0,
         });
     }
 

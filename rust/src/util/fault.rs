@@ -1,0 +1,244 @@
+//! Deterministic fault-injection plan — the seed of the chaos harness.
+//!
+//! A [`FaultPlan`] is a pure function from `(seed, site, draw index)`
+//! to an injection decision: each site (worker panic, outbound frame
+//! corruption, delayed reply, stalled read) keeps its own atomic draw
+//! counter, and every decision hashes `(seed, site, n)` through a
+//! splitmix64 finalizer. Two consequences:
+//!
+//! * **reproducible** — the k-th decision at a given site is the same
+//!   for a given seed, every run, with no shared RNG lock on any hot
+//!   path (one relaxed `fetch_add` per probe);
+//! * **independent streams** — sites never perturb each other's
+//!   sequences, so adding a probe at one site does not reshuffle the
+//!   faults injected at another.
+//!
+//! The plan is threaded behind `ServeOpts::fault` /
+//! `ServeConfig::fault` (built by `unit serve --chaos-seed N`) and is
+//! entirely absent — a `None`, zero branches taken — in production
+//! builds of the serve path.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Injection probabilities and magnitudes. Rates are per-probe
+/// Bernoulli probabilities in `[0, 1]`.
+#[derive(Debug, Clone, Copy)]
+pub struct FaultRates {
+    /// Worker panics per dequeued request.
+    pub panic_rate: f64,
+    /// Outbound frame corruptions per sent frame.
+    pub corrupt_rate: f64,
+    /// Delayed replies per sent frame.
+    pub delay_rate: f64,
+    /// Upper bound on an injected reply delay.
+    pub delay_max_ms: u64,
+    /// Stalled reads per inbound frame.
+    pub stall_rate: f64,
+    /// Upper bound on an injected read stall.
+    pub stall_max_ms: u64,
+}
+
+impl Default for FaultRates {
+    fn default() -> FaultRates {
+        FaultRates {
+            panic_rate: 0.04,
+            corrupt_rate: 0.01,
+            delay_rate: 0.05,
+            delay_max_ms: 3,
+            stall_rate: 0.02,
+            stall_max_ms: 5,
+        }
+    }
+}
+
+const SITE_PANIC: usize = 0;
+const SITE_CORRUPT: usize = 1;
+const SITE_DELAY: usize = 2;
+const SITE_STALL: usize = 3;
+const SITES: usize = 4;
+
+/// Seeded, lock-free fault injector (see module docs).
+pub struct FaultPlan {
+    seed: u64,
+    rates: FaultRates,
+    counters: [AtomicU64; SITES],
+}
+
+/// splitmix64 finalizer: a high-quality 64-bit mix, used here as a
+/// stateless hash of `(seed, site, n)`.
+fn mix(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    z ^ (z >> 31)
+}
+
+impl FaultPlan {
+    /// A plan with the default chaos rates.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan::with_rates(seed, FaultRates::default())
+    }
+
+    pub fn with_rates(seed: u64, rates: FaultRates) -> FaultPlan {
+        FaultPlan { seed, rates, counters: Default::default() }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    pub fn rates(&self) -> FaultRates {
+        self.rates
+    }
+
+    /// The n-th raw draw at `site` (advances the site counter).
+    fn draw(&self, site: usize) -> u64 {
+        let n = self.counters[site].fetch_add(1, Ordering::Relaxed);
+        let stream = (site as u64).wrapping_mul(0xA24B_AED4_963E_E407);
+        mix(self.seed ^ stream ^ n.wrapping_mul(0x2545_F491_4F6C_DD1D))
+    }
+
+    /// Uniform in `[0, 1)` from a raw draw.
+    fn unit(raw: u64) -> f64 {
+        (raw >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Should the worker panic on this dequeued request?
+    pub fn inject_panic(&self) -> bool {
+        Self::unit(self.draw(SITE_PANIC)) < self.rates.panic_rate
+    }
+
+    /// Maybe corrupt an encoded outbound frame in place (one byte
+    /// XOR-flipped at a seed-chosen offset — enough to fail the CRC or
+    /// the header checks, never enough to resize the buffer). Returns
+    /// whether a corruption was injected.
+    pub fn corrupt_frame(&self, frame: &mut [u8]) -> bool {
+        let raw = self.draw(SITE_CORRUPT);
+        if frame.is_empty() || Self::unit(raw) >= self.rates.corrupt_rate {
+            return false;
+        }
+        let off = (mix(raw) as usize) % frame.len();
+        frame[off] ^= 0xA5;
+        true
+    }
+
+    /// An injected delay to apply before writing a reply frame.
+    pub fn reply_delay(&self) -> Option<Duration> {
+        let raw = self.draw(SITE_DELAY);
+        if self.rates.delay_max_ms == 0 || Self::unit(raw) >= self.rates.delay_rate {
+            return None;
+        }
+        Some(Duration::from_millis(mix(raw) % self.rates.delay_max_ms + 1))
+    }
+
+    /// An injected stall to apply before servicing an inbound frame.
+    pub fn read_stall(&self) -> Option<Duration> {
+        let raw = self.draw(SITE_STALL);
+        if self.rates.stall_max_ms == 0 || Self::unit(raw) >= self.rates.stall_rate {
+            return None;
+        }
+        Some(Duration::from_millis(mix(raw) % self.rates.stall_max_ms + 1))
+    }
+}
+
+impl std::fmt::Debug for FaultPlan {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("FaultPlan").field("seed", &self.seed).field("rates", &self.rates).finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decision_sequences_are_reproducible_per_seed() {
+        let always = FaultRates {
+            panic_rate: 0.5,
+            corrupt_rate: 0.5,
+            delay_rate: 0.5,
+            stall_rate: 0.5,
+            ..FaultRates::default()
+        };
+        let a = FaultPlan::with_rates(7, always);
+        let b = FaultPlan::with_rates(7, always);
+        let seq = |p: &FaultPlan| -> Vec<bool> { (0..256).map(|_| p.inject_panic()).collect() };
+        assert_eq!(seq(&a), seq(&b), "same seed must replay the same panics");
+        let c = FaultPlan::with_rates(8, always);
+        assert_ne!(seq(&a), seq(&c), "different seeds must diverge");
+    }
+
+    #[test]
+    fn sites_are_independent_streams() {
+        // Interleaving probes at another site must not reshuffle the
+        // panic stream.
+        let a = FaultPlan::new(11);
+        let b = FaultPlan::new(11);
+        let mut seq_a = Vec::new();
+        let mut seq_b = Vec::new();
+        for _ in 0..128 {
+            seq_a.push(a.inject_panic());
+            let _ = a.reply_delay();
+        }
+        for _ in 0..128 {
+            seq_b.push(b.inject_panic());
+        }
+        assert_eq!(seq_a, seq_b);
+    }
+
+    #[test]
+    fn rates_are_respected_in_the_large() {
+        let tenth = FaultRates { panic_rate: 0.1, ..FaultRates::default() };
+        let p = FaultPlan::with_rates(3, tenth);
+        let n = 20_000;
+        let hits = (0..n).filter(|_| p.inject_panic()).count();
+        let frac = hits as f64 / n as f64;
+        assert!((frac - 0.1).abs() < 0.02, "panic rate off: {frac}");
+        let silent = FaultRates {
+            panic_rate: 0.0,
+            corrupt_rate: 0.0,
+            delay_rate: 0.0,
+            stall_rate: 0.0,
+            ..FaultRates::default()
+        };
+        let zero = FaultPlan::with_rates(3, silent);
+        assert!((0..1000).all(|_| !zero.inject_panic()));
+        let mut buf = vec![0u8; 64];
+        assert!((0..1000).all(|_| !zero.corrupt_frame(&mut buf)));
+        assert!(buf.iter().all(|&b| b == 0), "zero-rate corrupt touched the buffer");
+    }
+
+    #[test]
+    fn corruption_flips_exactly_one_byte_in_bounds() {
+        let always = FaultRates { corrupt_rate: 1.0, ..FaultRates::default() };
+        let p = FaultPlan::with_rates(5, always);
+        for len in [1usize, 2, 16, 1024] {
+            let mut buf = vec![0u8; len];
+            assert!(p.corrupt_frame(&mut buf));
+            let flipped: Vec<usize> = (0..len).filter(|&i| buf[i] != 0).collect();
+            assert_eq!(flipped.len(), 1, "len {len}: expected exactly one flipped byte");
+            assert_eq!(buf[flipped[0]], 0xA5);
+        }
+        let mut empty: [u8; 0] = [];
+        assert!(!p.corrupt_frame(&mut empty), "empty frames cannot be corrupted");
+    }
+
+    #[test]
+    fn delays_and_stalls_are_bounded() {
+        let slow = FaultRates {
+            delay_rate: 1.0,
+            stall_rate: 1.0,
+            delay_max_ms: 3,
+            stall_max_ms: 5,
+            ..FaultRates::default()
+        };
+        let p = FaultPlan::with_rates(9, slow);
+        for _ in 0..500 {
+            let d = p.reply_delay().expect("rate 1.0 must always delay");
+            assert!(d >= Duration::from_millis(1) && d <= Duration::from_millis(3));
+            let s = p.read_stall().expect("rate 1.0 must always stall");
+            assert!(s >= Duration::from_millis(1) && s <= Duration::from_millis(5));
+        }
+    }
+}

@@ -1,0 +1,105 @@
+//! Poison-tolerant lock acquisition: recover the guard instead of
+//! propagating a `PoisonError`.
+//!
+//! A panicking thread poisons every `Mutex`/`RwLock` it holds, and the
+//! default `.lock().unwrap()` idiom then re-panics every *subsequent*
+//! locker — one contained worker panic would cascade through the plan
+//! slot, the governor's controller, and the energy tap until the whole
+//! process is down. That is exactly backwards for the values this crate
+//! keeps behind shared locks: they are **last-published snapshots**
+//! (the active plan `Arc`, the cost-estimator `Arc`, AIMD controller
+//! state, background-compile bookkeeping), written atomically from the
+//! caller's point of view — a swap either happened or it did not, so
+//! the value observed after recovering a poisoned guard is always a
+//! consistent previously-published one ("last published value wins").
+//!
+//! These helpers clear the poison flag on recovery so later lockers do
+//! not pay the `Err` branch again. They are **not** appropriate for
+//! locks guarding multi-step invariants that a mid-flight panic could
+//! tear (none of the call sites below are: see each site's comment).
+
+use std::sync::{Mutex, MutexGuard, RwLock, RwLockReadGuard, RwLockWriteGuard};
+
+/// Lock a mutex, recovering (and clearing) poison from a previous
+/// holder's panic. The returned guard sees the last value published
+/// before the panic.
+pub fn lock_recover<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`lock_recover`] for `RwLock` readers.
+pub fn read_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockReadGuard<'_, T> {
+    match l.read() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            l.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// [`lock_recover`] for `RwLock` writers.
+pub fn write_recover<T: ?Sized>(l: &RwLock<T>) -> RwLockWriteGuard<'_, T> {
+    match l.write() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            l.clear_poison();
+            poisoned.into_inner()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn mutex_recovers_last_published_value() {
+        let m = Arc::new(Mutex::new(7u32));
+        let m2 = Arc::clone(&m);
+        let _ = std::thread::spawn(move || {
+            let mut g = m2.lock().unwrap();
+            *g = 42; // published before the panic below
+            panic!("poison the lock");
+        })
+        .join();
+        assert!(m.is_poisoned(), "test setup: lock must start poisoned");
+        assert_eq!(*lock_recover(&m), 42, "last published value lost");
+        // Poison is cleared: the plain idiom works again afterwards.
+        assert!(!m.is_poisoned());
+        assert_eq!(*m.lock().unwrap(), 42);
+    }
+
+    #[test]
+    fn rwlock_recovers_for_readers_and_writers() {
+        let l = Arc::new(RwLock::new(vec![1, 2, 3]));
+        let l2 = Arc::clone(&l);
+        let _ = std::thread::spawn(move || {
+            let _g = l2.write().unwrap();
+            panic!("poison the rwlock");
+        })
+        .join();
+        assert!(l.is_poisoned());
+        assert_eq!(read_recover(&l).len(), 3);
+        write_recover(&l).push(4);
+        assert!(!l.is_poisoned());
+        assert_eq!(l.read().unwrap().len(), 4);
+    }
+
+    #[test]
+    fn unpoisoned_locks_pass_straight_through() {
+        let m = Mutex::new(1);
+        *lock_recover(&m) += 1;
+        assert_eq!(*lock_recover(&m), 2);
+        let l = RwLock::new(1);
+        *write_recover(&l) += 1;
+        assert_eq!(*read_recover(&l), 2);
+    }
+}

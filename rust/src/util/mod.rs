@@ -2,9 +2,13 @@
 //! serde / proptest / criterion, so these are hand-rolled).
 
 pub mod cli;
+pub mod fault;
+pub mod lock;
 pub mod prop;
 pub mod rng;
 pub mod stats;
 pub mod table;
 
+pub use fault::{FaultPlan, FaultRates};
+pub use lock::{lock_recover, read_recover, write_recover};
 pub use rng::Rng;

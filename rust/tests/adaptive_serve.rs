@@ -290,6 +290,7 @@ fn start_parked_with_bytes(
                 ..Default::default()
             },
             governor: None,
+            fault: None,
         },
     )
     .expect("bind loopback");

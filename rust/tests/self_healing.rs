@@ -1,0 +1,274 @@
+//! Self-healing acceptance tests (ISSUE 6):
+//!
+//! * **domain shift** — a governor calibrated on kws-derived traffic
+//!   serves a sudden flip to widar-derived traffic: the drift tracker
+//!   trips within a bounded number of observations and the background
+//!   recalibration re-measures the keep profile from the reservoir of
+//!   recent inputs; the expectation walks to the new distribution
+//!   (possibly via one intermediate mixed-reservoir profile, since the
+//!   reservoir is only cleared on publish) and, once inside the
+//!   tracker's slack, stops tripping — all while every request
+//!   completes `Ok`;
+//! * **chaos soak** — a loopback server with a seeded fault plan
+//!   (injected worker panics, corrupted reply frames, delays, read
+//!   stalls) driven by retrying clients: every request still lands
+//!   with complete, slot-ordered results, panicked workers are
+//!   respawned (counted), and shutdown stays clean.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{DriftCfg, Governor, KeepProfile, PlanCache, ScaleGrid};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{RetryCfg, RetryClient, ServeOpts, Server, Status};
+use unit_pruner::util::{FaultPlan, FaultRates};
+
+fn setup_q(seed: u64) -> QModel {
+    let def = zoo("mnist");
+    let params = Params::random(&def, seed);
+    QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.15))
+}
+
+/// First `len` values of a longer sample: kws (9920) and widar (3718)
+/// features reshaped onto the mnist-architecture input so one model
+/// can serve both "domains".
+fn truncate(sample: &[f32], len: usize) -> Vec<f32> {
+    sample[..len].to_vec()
+}
+
+/// The ISSUE 6 drift acceptance test: kws→widar distribution flip
+/// mid-run re-converges profile and pricing within bounded batches.
+///
+/// Single-sample phases keep it deterministic: the profile is measured
+/// on exactly the streamed input, so the stationary phase's residual
+/// is ~0 (no false trips possible) and the shifted phase's residual is
+/// a fixed, pre-verified gap (a trip is guaranteed once the CUSUM
+/// warmup is past). Convergence is asserted against the tracker's
+/// slack: any published expectation farther than the slack from the
+/// live distribution keeps tripping and recalibrating (the reservoir
+/// holds only shifted inputs after the first publish clears it), so
+/// within-slack is the unique fixed point.
+#[test]
+fn domain_shift_recalibrates_live_and_reconverges() {
+    let q = setup_q(71);
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Exact },
+        ServeConfig { workers: 2, ..Default::default() },
+    );
+    let cache = Arc::new(PlanCache::new(
+        q,
+        PlanConfig::unit(DivKind::Exact),
+        ScaleGrid::default_grid(),
+    ));
+    let input_len = zoo("mnist").input_len();
+    let kws = by_name("kws", 9, Sizes { train: 2, val: 2, test: 2 });
+    let x_kws = truncate(kws.val.sample(0), input_len);
+    let profile = Arc::new(KeepProfile::measure(&cache, &[x_kws.clone()]));
+    // Effectively infinite budget: the controller pins the scale at its
+    // seeded step, so drift — not budget pressure — is the only thing
+    // that can move the control plane during this test.
+    let g = Governor::install(&coord, Arc::clone(&cache), Some(Arc::clone(&profile)), 1e9)
+        .expect("governor installs on mcu backend");
+    let step = g.status().step;
+    let expected = profile.model_keep_ratio(step);
+
+    let submit_ok = |x: &[f32]| {
+        let rx = coord.submit(x.to_vec());
+        rx.recv_timeout(Duration::from_secs(60)).expect("request lost");
+    };
+    let expectation = || {
+        let p = g.profile().expect("profile uninstalled during recalibration");
+        p.model_keep_ratio(g.status().step)
+    };
+
+    // Phase 1 — stationary kws traffic: enough observations to clear
+    // the tracker's warmup, zero trips.
+    for _ in 0..48 {
+        submit_ok(&x_kws);
+    }
+    let s = g.status();
+    assert_eq!(s.drift_trips, 0, "stationary traffic tripped the drift tracker");
+    assert_eq!(s.recalibrations, 0);
+
+    // Phase 2 — flip to widar-derived traffic. Amplitudes are searched
+    // so the shifted input's true keep ratio diverges from the
+    // kws-calibrated expectation by ≥ 0.1 (input-dependent pruning
+    // guarantees the extremes bracket any calibrated value).
+    let widar = by_name("widar", 9, Sizes { train: 2, val: 2, test: 2 });
+    let base = truncate(widar.val.sample(0), input_len);
+    let plan = cache.plan_at(step);
+    let mut scratch = plan.new_scratch();
+    let shifted: Vec<f32> = [1.0f32, 3.0, 0.3, 8.0, 0.05]
+        .iter()
+        .find_map(|&amp| {
+            let x: Vec<f32> = base.iter().map(|v| v * amp).collect();
+            let out = plan.infer(&plan.quantize_input(&x), &mut scratch);
+            let keep = 1.0 - out.skip_fraction();
+            ((keep - expected).abs() >= 0.1).then_some(x)
+        })
+        .expect("no amplitude of the widar input diverged from the kws-calibrated keep ratio");
+    let shifted_keep = {
+        let out = plan.infer(&plan.quantize_input(&shifted), &mut scratch);
+        1.0 - out.skip_fraction()
+    };
+    let slack = DriftCfg::default().slack;
+
+    // Drive shifted batches until the published expectation parks
+    // within the tracker's slack of the live distribution. The CUSUM
+    // needs ~λ/(|residual|−slack) observations past its warmup per
+    // trip, and at most two trip→recalibrate cycles are ever required
+    // (the second always measures a pure-shifted reservoir), so the
+    // bound is generous.
+    let mut converged = false;
+    'drive: for _ in 0..150 {
+        for _ in 0..8 {
+            submit_ok(&shifted);
+        }
+        let s = g.status();
+        if s.recalibrations >= 1 && (expectation() - shifted_keep).abs() <= slack {
+            converged = true;
+            break 'drive;
+        }
+    }
+    // A trip near the end of the loop may still have its recalibration
+    // in flight on the background thread — give it time to land.
+    let t0 = Instant::now();
+    while !converged && t0.elapsed() < Duration::from_secs(60) {
+        let s = g.status();
+        converged = s.recalibrations >= 1 && (expectation() - shifted_keep).abs() <= slack;
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    let s = g.status();
+    assert!(
+        converged,
+        "control plane did not re-converge to the shifted distribution (trips={}, recals={})",
+        s.drift_trips,
+        s.recalibrations
+    );
+    assert!(s.drift_trips >= 1, "recalibration without a drift trip");
+    assert!(s.recalibrations >= 1);
+    let new_profile = g.profile().expect("profile uninstalled by recalibration");
+    assert!(!Arc::ptr_eq(&new_profile, &profile), "recalibration did not publish a new profile");
+
+    // Quiet period: with the expectation inside the slack band, the
+    // residual on further shifted traffic contributes nothing to the
+    // CUSUM — the re-converged control plane must stop tripping.
+    let trips_converged = g.status().drift_trips;
+    for _ in 0..100 {
+        submit_ok(&shifted);
+    }
+    assert_eq!(
+        g.status().drift_trips,
+        trips_converged,
+        "re-converged profile kept tripping on its own distribution"
+    );
+    drop(g);
+    coord.shutdown();
+}
+
+/// The ISSUE 6 chaos acceptance test: a fixed-seed fault plan injects
+/// worker panics, corrupted frames, delays, and stalls while retrying
+/// clients hammer the loopback server — every request must end with
+/// complete, slot-ordered `Ok` results, and the supervisor must have
+/// contained and respawned at least one panicked worker.
+#[test]
+fn chaos_soak_completes_every_request_and_respawns_workers() {
+    // Rates raised well above the serving defaults so a short soak
+    // deterministically exercises every injection site.
+    let rates = FaultRates {
+        panic_rate: 0.15,
+        corrupt_rate: 0.03,
+        delay_rate: 0.08,
+        delay_max_ms: 3,
+        stall_rate: 0.05,
+        stall_max_ms: 5,
+    };
+    let fault = Arc::new(FaultPlan::with_rates(7, rates));
+    let q = setup_q(83);
+    let coord = Coordinator::start(
+        BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+        ServeConfig { workers: 3, fault: Some(Arc::clone(&fault)), ..Default::default() },
+    );
+    let metrics = Arc::clone(&coord.metrics);
+    let server = Server::start(
+        coord,
+        "127.0.0.1:0",
+        ServeOpts { max_conns: 8, fault: Some(Arc::clone(&fault)), ..Default::default() },
+    )
+    .expect("bind loopback");
+    let addr = server.local_addr().to_string();
+
+    let mnist = by_name("mnist", 17, Sizes { train: 2, val: 2, test: 6 });
+    let n_samples = mnist.test.len();
+    let xs: Vec<Vec<f32>> = (0..n_samples).map(|i| mnist.test.sample(i).to_vec()).collect();
+
+    let n_clients = 3usize;
+    let n_requests = 12usize;
+    let ok_samples = Arc::new(AtomicU64::new(0));
+    let handles: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let addr = addr.clone();
+            let xs = xs.clone();
+            let ok_samples = Arc::clone(&ok_samples);
+            std::thread::spawn(move || {
+                let seed = 100 + c as u64;
+                let cfg = RetryCfg { max_attempts: 64, seed, ..Default::default() };
+                let client = RetryClient::connect(addr, cfg);
+                for r in 0..n_requests {
+                    let n = 1 + (r + c) % 3;
+                    let batch: Vec<Vec<f32>> =
+                        (0..n).map(|k| xs[(r + k) % xs.len()].clone()).collect();
+                    // No deadline: under chaos the only legal terminal
+                    // outcome is complete, ordered success.
+                    let events = client
+                        .infer_batch(&batch, None)
+                        .expect("request lost under chaos (retry budget exhausted)");
+                    assert_eq!(events.len(), n, "incomplete result under chaos");
+                    for (slot, ev) in events.iter().enumerate() {
+                        assert_eq!(ev.status, Status::Ok);
+                        assert_eq!(ev.slot as usize, slot, "misordered result under chaos");
+                    }
+                    ok_samples.fetch_add(n as u64, Ordering::Relaxed);
+                }
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().expect("chaos client panicked");
+    }
+
+    // The soak above draws the panic site dozens of times at 15%, but
+    // the draw sequence is a fixed function of the seed — top up with
+    // singles until at least one panic provably happened, so the
+    // respawn assertions cannot depend on seed luck.
+    let cfg = RetryCfg { max_attempts: 64, seed: 999, ..Default::default() };
+    let client = RetryClient::connect(addr, cfg);
+    let mut topped_up = 0usize;
+    while metrics.snapshot().worker_panics == 0 && topped_up < 400 {
+        let ev = client.infer(&xs[topped_up % xs.len()], None).expect("top-up request lost");
+        assert_eq!(ev.status, Status::Ok);
+        topped_up += 1;
+    }
+
+    // Clean shutdown with the chaos plan still armed: drain, goodbye,
+    // close — no hang, no thread panic propagating. Shutdown joins the
+    // supervisor, so the final snapshot cannot catch a respawn counter
+    // lagging its panic counter.
+    drop(client);
+    server.shutdown();
+
+    let snap = metrics.snapshot();
+    assert!(
+        snap.worker_panics > 0,
+        "chaos plan (seed 7) never injected a worker panic in {} draws",
+        ok_samples.load(Ordering::Relaxed) as usize + topped_up
+    );
+    assert_eq!(snap.worker_panics, snap.respawns, "every contained panic must respawn its worker");
+    assert!(snap.failed > 0, "panics terminalized no request as Failed");
+}

@@ -93,6 +93,10 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
             bg_pending: g.u32_in(0, 64) as u64,
             bg_compiled: g.u32_in(0, u32::MAX - 1) as u64,
             bg_upgrades: g.u32_in(0, u32::MAX - 1) as u64,
+            worker_panics: g.u32_in(0, u32::MAX - 1) as u64,
+            respawns: g.u32_in(0, u32::MAX - 1) as u64,
+            drift_trips: g.u32_in(0, u32::MAX - 1) as u64,
+            recalibrations: g.u32_in(0, u32::MAX - 1) as u64,
         },
         _ => Frame::Goodbye,
     }
@@ -188,8 +192,8 @@ fn start_server(q: QModel, workers: usize, session: SessionCfg) -> Server {
         BackendChoice::McuSim { q, mode: PruneMode::Unit, div },
         ServeConfig { workers, placement: Placement::CostWeighted, ..Default::default() },
     );
-    Server::start(coord, "127.0.0.1:0", ServeOpts { max_conns: 8, session, governor: None })
-        .expect("bind loopback")
+    let opts = ServeOpts { max_conns: 8, session, governor: None, fault: None };
+    Server::start(coord, "127.0.0.1:0", opts).expect("bind loopback")
 }
 
 #[test]
