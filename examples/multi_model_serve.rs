@@ -1,0 +1,184 @@
+//! Multi-model serving under one fleet budget, end to end over the
+//! wire: two zoo models behind a single coordinator, the fleet
+//! scheduler dividing a global energy budget between them by marginal
+//! keep-per-millijoule, and wire-v4 clients addressing each tenant by
+//! model id.
+//!
+//! ```text
+//! # self-contained (spawns its own loopback fleet server):
+//! cargo run --release --example multi_model_serve
+//!
+//! # against a running `unit serve --listen ... --models mnist,kws`:
+//! cargo run --release --example multi_model_serve -- --addr 127.0.0.1:PORT
+//! ```
+//!
+//! Exit status is the test: 0 iff
+//! * the server reports ≥ 2 models loaded and a live fleet budget,
+//! * interleaved per-model traffic completed losslessly with every
+//!   reply routed back to the submitting request,
+//! * starving the fleet budget pushed at least one tenant up its scale
+//!   grid, and budget relief brought the fleet back down.
+
+use std::time::Duration;
+
+use anyhow::Result;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{calibrated_cache, FleetScheduler, ScaleGrid};
+use unit_pruner::coordinator::{Coordinator, ModelSpec, ServeConfig};
+use unit_pruner::data::{by_name, Sizes, Split};
+use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{Client, ServeOpts, Server, Status};
+use unit_pruner::util::cli::Args;
+use unit_pruner::util::table::Table;
+
+const MODELS: &[&str] = &["mnist", "kws"];
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let seed = args.u64_or("seed", 42);
+    let per_model = args.usize_or("requests", 32);
+
+    // Per-model sample pools (the fleet server's tenants expect their
+    // own input lengths — submitting a sample to the wrong model id is
+    // an Error status, which this example treats as a violation).
+    let pools: Vec<Split> =
+        MODELS.iter().map(|m| by_name(m, seed, Sizes::default()).test).collect();
+
+    // Either connect to a running fleet server, or spawn one.
+    let own_server: Option<Server>;
+    let addr: String = match args.get("addr") {
+        Some(a) => {
+            own_server = None;
+            a.to_string()
+        }
+        None => {
+            let mut specs = Vec::new();
+            let mut tenants = Vec::new();
+            for name in MODELS {
+                let def = zoo(name);
+                let params = Params::random(&def, seed);
+                let q = QModel::quantize(&def, &params)
+                    .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.15));
+                let ds = by_name(name, seed, Sizes::default());
+                let cal: Vec<Vec<f32>> =
+                    (0..ds.val.len().min(6)).map(|i| ds.val.sample(i).to_vec()).collect();
+                let (cache, profile) = calibrated_cache(
+                    q.clone(),
+                    PlanConfig::unit(DivKind::Shift),
+                    ScaleGrid::default_grid(),
+                    &cal,
+                );
+                specs.push(ModelSpec {
+                    name: name.to_string(),
+                    q,
+                    mode: PruneMode::Unit,
+                    div: DivKind::Shift,
+                });
+                tenants.push((cache, profile));
+            }
+            // Budget = every tenant's 1.0x-scale energy summed: roomy,
+            // so the scheduler seeds near the top of each curve.
+            let base_mj: f64 =
+                tenants.iter().map(|(c, p)| p.mean_mj(c.grid().snap_q8(256))).sum();
+            let coord = Coordinator::start_multi(
+                specs,
+                ServeConfig { workers: args.usize_or("workers", 2), ..Default::default() },
+            );
+            let sched = FleetScheduler::install(&coord, tenants, base_mj)
+                .expect("fleet scheduler on mcu backend");
+            let server = Server::start(
+                coord,
+                "127.0.0.1:0",
+                ServeOpts { scheduler: Some(sched), ..Default::default() },
+            )?;
+            let a = server.local_addr().to_string();
+            own_server = Some(server);
+            a
+        }
+    };
+
+    let client = Client::connect(&addr)?;
+    let probe = client.query_stats(Duration::from_secs(10))?;
+    if probe.models_loaded < 2 || probe.fleet_budget_mj <= 0.0 {
+        eprintln!(
+            "multi_model_serve: server at {addr} is not a fleet \
+             ({} models, fleet budget {} mJ) — run `unit serve --models A,B --listen …`",
+            probe.models_loaded, probe.fleet_budget_mj
+        );
+        std::process::exit(2);
+    }
+    let n_models = (probe.models_loaded as usize).min(pools.len());
+    let base_mj = probe.fleet_budget_mj;
+    println!(
+        "multi_model_serve: {addr}, {} models, fleet budget {base_mj:.3} mJ",
+        probe.models_loaded
+    );
+
+    // Fleet budget sweep: generous → starved → relief, with traffic to
+    // every tenant interleaved inside each phase.
+    let phases: &[(&str, f64)] = &[("generous", 1.0), ("starved", 0.05), ("relief", 1.0)];
+    let mut t = Table::new(vec!["phase", "fleet mJ", "model", "scale", "step", "cap mJ"]);
+    let mut violations = 0usize;
+    let mut step_sums = Vec::new();
+    for (phase, mult) in phases {
+        let budget = base_mj * mult;
+        client.set_budget(budget, Duration::from_secs(10))?;
+        // Interleave tenants request-by-request: ordering and loss
+        // accounting must hold under mixed-tenant load.
+        let mut rxs = Vec::new();
+        for r in 0..per_model {
+            for (m, pool) in pools.iter().enumerate().take(n_models) {
+                let x = pool.sample(r % pool.len());
+                let (id, rx) = client.submit_to(m as u32, x, None)?;
+                rxs.push((m, id, rx));
+            }
+        }
+        for (m, id, rx) in rxs {
+            let ev = rx.recv_timeout(Duration::from_secs(60))?;
+            if ev.status != Status::Ok {
+                eprintln!("{phase}: model {m} request {id} got {:?}", ev.status);
+                violations += 1;
+            }
+        }
+        let mut sum = 0u64;
+        for m in 0..n_models as u32 {
+            let s = client.query_model_stats(m, Duration::from_secs(10))?;
+            sum += s.step as u64;
+            t.row(vec![
+                phase.to_string(),
+                format!("{budget:.3}"),
+                m.to_string(),
+                format!("{:.2}x", s.scale()),
+                format!("{}/{}", s.step, s.steps_total),
+                format!("{:.3}", s.budget_mj),
+            ]);
+        }
+        step_sums.push(sum);
+    }
+    println!("{}", t.render());
+    client.goodbye(Duration::from_secs(10));
+    if let Some(server) = own_server {
+        server.shutdown();
+    }
+
+    // Direction assertions on the summed allocation: starving the
+    // fleet must push tenants up the grid, relief must bring them back.
+    let (generous, starved, relief) = (step_sums[0], step_sums[1], step_sums[2]);
+    if starved <= generous {
+        eprintln!("FAIL: starving the fleet did not raise any tenant ({generous} -> {starved})");
+        violations += 1;
+    }
+    if relief >= starved {
+        eprintln!("FAIL: fleet relief did not lower the allocation ({starved} -> {relief})");
+        violations += 1;
+    }
+    if violations > 0 {
+        eprintln!("FAIL: {violations} violations");
+        std::process::exit(1);
+    }
+    println!("OK: lossless mixed-tenant serving; the fleet allocation tracked the budget");
+    Ok(())
+}

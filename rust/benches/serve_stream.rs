@@ -42,6 +42,7 @@ fn main() {
         id: 7,
         deadline_ms: 100,
         sample_len: 784,
+        model: 0,
         data: Payload::F32((0..784).map(|i| (i % 17) as f32 / 16.0).collect()),
     };
     let response = Frame::Response {

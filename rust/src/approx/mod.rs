@@ -46,6 +46,7 @@ pub use tree::DivTree;
 
 /// A `T / c` estimator with a modeled per-call MSP430 cycle cost.
 pub trait DivApprox: Send + Sync {
+    /// Estimator name for CLI/bench selection.
     fn name(&self) -> &'static str;
 
     /// Approximate `t / c`. `c` must be ≥ 1 (the engine prunes
@@ -59,13 +60,18 @@ pub trait DivApprox: Send + Sync {
 /// All estimator kinds, for CLI/bench selection.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum DivKind {
+    /// True integer division (the baseline; costs a real software divide).
     Exact,
+    /// Bit-shifting estimator: `t >> ⌊log₂ c⌋` by repeated shifts.
     Shift,
+    /// Binary-tree-search estimator: same quotient as `Shift`, pivot-compare cost.
     Tree,
+    /// Bit-masking estimator over IEEE-754 exponent fields.
     Mask,
 }
 
 impl DivKind {
+    /// Parse a CLI name (`exact`, `shift`, `tree`, `mask`).
     pub fn parse(s: &str) -> Option<DivKind> {
         match s {
             "exact" => Some(DivKind::Exact),
@@ -76,6 +82,7 @@ impl DivKind {
         }
     }
 
+    /// Construct the estimator.
     pub fn build(self) -> Box<dyn DivApprox> {
         match self {
             DivKind::Exact => Box::new(DivExact),
@@ -85,6 +92,7 @@ impl DivKind {
         }
     }
 
+    /// Every kind, in CLI order.
     pub fn all() -> [DivKind; 4] {
         [DivKind::Exact, DivKind::Shift, DivKind::Tree, DivKind::Mask]
     }

@@ -27,6 +27,7 @@ pub struct BlasStats {
 }
 
 impl BlasStats {
+    /// Fraction of products skipped (0 when none ran).
     pub fn skip_fraction(&self) -> f64 {
         let t = self.kept + self.skipped;
         if t == 0 {

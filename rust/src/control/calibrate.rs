@@ -214,7 +214,9 @@ impl KeepProfile {
 /// rather than mutating shared state under the request path.
 #[derive(Debug, Clone)]
 pub struct ProfiledCost {
+    /// The calibrated profile.
     pub profile: Arc<KeepProfile>,
+    /// Grid step the profile is bound to.
     pub step: usize,
 }
 
@@ -274,6 +276,7 @@ pub struct DriftTracker {
 }
 
 impl DriftTracker {
+    /// Armed tracker with zeroed accumulators.
     pub fn new(cfg: DriftCfg) -> DriftTracker {
         DriftTracker { cfg, ewma: 0.0, seen: 0, g_pos: 0.0, g_neg: 0.0, trips: 0 }
     }
@@ -337,6 +340,7 @@ pub struct InputReservoir {
 }
 
 impl InputReservoir {
+    /// Empty reservoir holding at most `cap` inputs.
     pub fn new(cap: usize, seed: u64) -> InputReservoir {
         assert!(cap > 0, "reservoir capacity must be positive");
         let rng = crate::util::Rng::new(seed);
@@ -361,10 +365,12 @@ impl InputReservoir {
         self.xs.clone()
     }
 
+    /// Inputs currently held.
     pub fn len(&self) -> usize {
         self.xs.len()
     }
 
+    /// Whether no inputs are held.
     pub fn is_empty(&self) -> bool {
         self.xs.is_empty()
     }

@@ -102,13 +102,16 @@ pub struct GovernorStatus {
     pub step: usize,
     /// Total steps in the grid.
     pub steps_total: usize,
+    /// Energy budget (mJ/inference).
     pub budget_mj: f64,
     /// EWMA of observed per-request energy (mJ).
     pub ewma_mj: f64,
     /// Calibrated whole-model keep ratio at the active step (0 when no
     /// profile is attached).
     pub keep_ratio: f64,
+    /// Plan-cache hits since install.
     pub cache_hits: u64,
+    /// Plan-cache misses since install.
     pub cache_misses: u64,
     /// Plan swaps performed since installation (inline + upgrades).
     pub swaps: u64,
@@ -343,6 +346,7 @@ impl Governor {
         self.step.load(Ordering::Acquire)
     }
 
+    /// Snapshot of the governor's control state.
     pub fn status(&self) -> GovernorStatus {
         let (scale_q8, budget_mj, ewma_mj) = {
             let c = lock_recover(&self.ctrl);

@@ -31,19 +31,27 @@
 //!   run on the swap path: the governor's background compile thread
 //!   stamps them while the pool serves the nearest resident plan,
 //!   upgrading the slot when the compile lands. The serve layer's
-//!   `SetBudget`/`Stats` admin frames are its wire front door.
+//!   `SetBudget`/`Stats` admin frames are its wire front door;
+//! * [`scheduler`] — [`FleetScheduler`] generalizes the governor to a
+//!   multi-model coordinator: one fleet-wide budget allocated across
+//!   every hosted model by greedy buy-down on the calibrated marginal
+//!   keep-per-millijoule curves, with per-tenant caps, per-tenant
+//!   drift tracking / live recalibration, and one background solve
+//!   thread publishing per-model plan swaps.
 //!
 //! Dependency direction: `coordinator` ← `control` ← `serve` — the
 //! coordinator knows only the two traits it exposes, the serve layer
-//! holds an optional [`Governor`].
+//! holds an optional [`Governor`] or [`FleetScheduler`].
 
 pub mod calibrate;
 pub mod governor;
 pub mod plan_cache;
+pub mod scheduler;
 
 pub use calibrate::{DriftCfg, DriftTracker, InputReservoir, KeepProfile, ProfiledCost};
 pub use governor::{Governor, GovernorStatus};
 pub use plan_cache::{PlanCache, ScaleGrid, DEFAULT_GRID_STEPS};
+pub use scheduler::{allocate_fleet, FleetScheduler, FleetStatus, TenantCurve, TenantStatus};
 
 use std::sync::Arc;
 

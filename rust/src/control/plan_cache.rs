@@ -94,6 +94,7 @@ impl ScaleGrid {
         self.q8.len()
     }
 
+    /// Whether the grid has no steps.
     pub fn is_empty(&self) -> bool {
         self.q8.is_empty()
     }
@@ -115,6 +116,7 @@ impl ScaleGrid {
         self.scale(0)
     }
 
+    /// Largest representable scale.
     pub fn max_scale(&self) -> f64 {
         self.scale(self.len() - 1)
     }
@@ -123,6 +125,19 @@ impl ScaleGrid {
     /// the end steps; exact midpoints round down). This is the one
     /// place controller output becomes a cache key, so
     /// `snap_q8(q8(s)) == s` for every step `s` by construction.
+    ///
+    /// ```
+    /// use unit_pruner::control::ScaleGrid;
+    ///
+    /// let grid = ScaleGrid::default_grid();
+    /// // Every step snaps to itself…
+    /// for s in 0..grid.len() {
+    ///     assert_eq!(grid.snap_q8(grid.q8(s)), s);
+    /// }
+    /// // …and out-of-range scales clamp to the end steps.
+    /// assert_eq!(grid.snap_q8(1), 0);
+    /// assert_eq!(grid.snap_q8(u32::MAX), grid.len() - 1);
+    /// ```
     pub fn snap_q8(&self, q8: u32) -> usize {
         match self.q8.binary_search(&q8) {
             Ok(i) => i,
@@ -208,6 +223,7 @@ impl PlanCache {
         }
     }
 
+    /// The grid this cache is indexed by.
     pub fn grid(&self) -> &ScaleGrid {
         &self.grid
     }
@@ -307,14 +323,17 @@ impl PlanCache {
         self.inner.lock().unwrap().slots.len()
     }
 
+    /// Whether no plans are resident.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
+    /// Cache hits since creation.
     pub fn hits(&self) -> u64 {
         self.hits.load(Ordering::Relaxed)
     }
 
+    /// Cache misses (inline compiles) since creation.
     pub fn misses(&self) -> u64 {
         self.misses.load(Ordering::Relaxed)
     }

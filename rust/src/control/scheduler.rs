@@ -1,0 +1,876 @@
+//! The fleet scheduler: one global MAC/energy budget allocated across
+//! every model a multi-tenant coordinator hosts.
+//!
+//! The single-model [`Governor`](super::Governor) closes its budget
+//! loop with AIMD: nudge the threshold scale until observed energy
+//! meets the budget. With several models sharing one process that
+//! feedback rule has no notion of *who deserves the energy* — the
+//! interesting question becomes an allocation problem: every
+//! `(model, grid-step)` pair has a calibrated mean energy and a
+//! calibrated whole-model keep ratio (the [`KeepProfile`] curves), and
+//! keep ratio is the marginal accuracy-per-MAC signal UnIT exposes at
+//! runtime. Ranking those marginals globally and spending a fleet-wide
+//! budget on the best ones is exactly the compile-time MAC-budget
+//! search of Liberis & Lane (arXiv 2110.08350), re-solved live.
+//!
+//! ## The allocation ([`allocate_fleet`])
+//!
+//! Greedy buy-down on isotonized curves:
+//!
+//! 1. every model starts at its **cheapest** grid step (max pruning);
+//! 2. the candidate move for a model is one step down (less pruning):
+//!    it buys `Δkeep` calibrated keep ratio for `Δmj` energy;
+//! 3. repeatedly take the globally best `Δkeep/Δmj` move that a
+//!    per-tenant cap does not forbid, until the **first** move the
+//!    fleet budget cannot afford.
+//!
+//! Stopping at the first unaffordable best move (rather than skipping
+//! to a cheaper one) makes the chosen moves a *prefix of a
+//! budget-independent chain*: raising the budget can only extend the
+//! prefix, so no model's step ever moves toward more pruning when the
+//! fleet gets richer — the monotonicity the property tests pin. It
+//! also yields the acceptance-test shape: the **flattest** marginal
+//! curve (least keep ratio bought per millijoule) is bought down last,
+//! i.e. starved first when the budget tightens. With a single model
+//! loaded the buy-down walks the one curve and stops exactly at
+//! [`KeepProfile::seed_step`]'s choice — the governor's feed-forward
+//! seed.
+//!
+//! ## The runtime ([`FleetScheduler`])
+//!
+//! Installed on a multi-model [`Coordinator`] the same way the
+//! governor is installed on a single-model one: it is the pool's
+//! [`EnergyTap`], but consumes the **model-attributed** observation
+//! variants. Per tenant it keeps an energy EWMA (stats), a
+//! [`DriftTracker`] CUSUM over observed-vs-calibrated keep ratios, and
+//! an [`InputReservoir`] of recent inputs. Budget or cap changes and
+//! drift trips enqueue work on one background **solve thread** (the
+//! governor's compile-thread idiom: jobs over a channel, `Weak` back
+//! reference, `Drop` closes the channel and joins): a re-solve
+//! recomputes the allocation and swaps each changed tenant's
+//! [`PlanSlot`] + [`ProfiledCost`]; a drift trip first re-measures
+//! that tenant's profile from its reservoir, then re-solves. Plan
+//! compiles therefore never run on a worker's observation path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::thread::JoinHandle;
+
+use super::calibrate::{DriftCfg, DriftTracker, InputReservoir, KeepProfile, ProfiledCost};
+use super::plan_cache::PlanCache;
+use crate::coordinator::{Coordinator, CostEstimator, CostEstimatorSlot, EnergyTap, PlanSlot};
+use crate::util::{lock_recover, read_recover, write_recover};
+
+/// One model's allocation inputs: the calibrated per-step curves (grid
+/// step indexes both) and an optional per-tenant energy cap.
+#[derive(Debug, Clone)]
+pub struct TenantCurve {
+    /// Calibrated mean energy per request at each grid step (mJ).
+    pub mean_mj: Vec<f64>,
+    /// Calibrated whole-model keep ratio at each grid step.
+    pub keep_ratio: Vec<f64>,
+    /// Per-tenant cap: this model may not occupy a step whose mean
+    /// energy exceeds it (`None` = uncapped).
+    pub cap_mj: Option<f64>,
+}
+
+/// Solve the fleet allocation: given every tenant's calibrated curves
+/// and a fleet-wide budget (mJ per request, summed across tenants),
+/// return the grid step each model should serve at.
+///
+/// Curves are isotonized first (mean energy and keep ratio forced
+/// non-increasing in step by a running minimum — raw measured curves
+/// can wiggle), then bought down greedily by marginal `Δkeep/Δmj`; see
+/// the module docs for why the result is monotone in the budget and
+/// starves the flattest curve first. Tenants whose curves are empty
+/// stay at step 0.
+pub fn allocate_fleet(curves: &[TenantCurve], fleet_budget_mj: f64) -> Vec<usize> {
+    // Isotonize: non-increasing mean energy and keep ratio in step.
+    let iso: Vec<(Vec<f64>, Vec<f64>)> = curves
+        .iter()
+        .map(|c| {
+            let mut m = c.mean_mj.clone();
+            let mut k = c.keep_ratio.clone();
+            for i in 1..m.len() {
+                m[i] = m[i].min(m[i - 1]);
+            }
+            for i in 1..k.len() {
+                k[i] = k[i].min(k[i - 1]);
+            }
+            (m, k)
+        })
+        .collect();
+    // Baseline: everyone at the cheapest (last) step.
+    let mut steps: Vec<usize> = iso.iter().map(|(m, _)| m.len().saturating_sub(1)).collect();
+    let mut spend: f64 = iso
+        .iter()
+        .zip(&steps)
+        .map(|((m, _), &s)| m.get(s).copied().unwrap_or(0.0))
+        .sum();
+    loop {
+        // The candidate move per model is one step down; take the
+        // globally best marginal keep-per-millijoule. Ties break on
+        // the lowest model index (strict `>`), so the move chain is
+        // deterministic — and, crucially, independent of the budget.
+        let mut best: Option<(usize, f64)> = None;
+        for (i, (m, k)) in iso.iter().enumerate() {
+            let s = steps[i];
+            if s == 0 {
+                continue;
+            }
+            if curves[i].cap_mj.is_some_and(|cap| m[s - 1] > cap) {
+                continue; // capped out: this tenant descends no further
+            }
+            let dmj = m[s - 1] - m[s];
+            let dkeep = k[s - 1] - k[s];
+            let ratio = if dmj > 0.0 { dkeep / dmj } else { f64::INFINITY };
+            if best.is_none_or(|(_, r)| ratio > r) {
+                best = Some((i, ratio));
+            }
+        }
+        let Some((i, _)) = best else { break };
+        let s = steps[i];
+        let m = &iso[i].0;
+        let next_spend = spend - m[s] + m[s - 1];
+        // First unaffordable best move ends the allocation — no
+        // skipping to cheaper moves, which would break the prefix
+        // property budget monotonicity rests on.
+        if next_spend > fleet_budget_mj {
+            break;
+        }
+        steps[i] = s - 1;
+        spend = next_spend;
+    }
+    steps
+}
+
+/// Work items for the scheduler's background solve thread.
+enum Job {
+    /// Recompute the allocation (budget / cap change, post-recal).
+    Resolve,
+    /// Re-measure one tenant's profile from its reservoir, then
+    /// re-solve.
+    Recalibrate(usize),
+}
+
+/// Everything the scheduler tracks per hosted model.
+struct Tenant {
+    name: String,
+    cache: Arc<PlanCache>,
+    slot: Arc<PlanSlot>,
+    cost_slot: CostEstimatorSlot,
+    /// Live calibrated profile (replaced wholesale by recalibration).
+    profile: RwLock<Arc<KeepProfile>>,
+    /// The published grid step (what the last solve allocated).
+    step: AtomicUsize,
+    /// Per-tenant energy cap (`SetBudget` with a model id), if any.
+    cap_mj: RwLock<Option<f64>>,
+    /// EWMA of this tenant's observed per-request energy (stats).
+    ewma_mj: Mutex<Option<f64>>,
+    drift: Mutex<DriftTracker>,
+    reservoir: Mutex<InputReservoir>,
+    /// A `Recalibrate` job for this tenant is queued or running.
+    recal_pending: AtomicBool,
+    drift_trips: AtomicU64,
+    recalibrations: AtomicU64,
+    swaps: AtomicU64,
+}
+
+/// A point-in-time view of one tenant (the per-model `Stats` frame).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantStatus {
+    /// Tenant name (zoo model name).
+    pub name: String,
+    /// Published grid step.
+    pub step: usize,
+    /// Total steps in this tenant's grid.
+    pub steps_total: usize,
+    /// Published threshold scale in Q8.8.
+    pub scale_q8: u32,
+    /// Calibrated whole-model keep ratio at the published step.
+    pub keep_ratio: f64,
+    /// Calibrated mean energy at the published step (mJ).
+    pub mean_mj: f64,
+    /// EWMA of observed per-request energy (0 until traffic flows).
+    pub ewma_mj: f64,
+    /// Per-tenant energy cap, if one is set.
+    pub cap_mj: Option<f64>,
+    /// This tenant's plan-cache hits since construction.
+    pub cache_hits: u64,
+    /// This tenant's plan-cache misses since construction.
+    pub cache_misses: u64,
+    /// Drift-tracker trips for this tenant since installation.
+    pub drift_trips: u64,
+    /// Live recalibrations completed for this tenant.
+    pub recalibrations: u64,
+    /// Plan swaps published for this tenant (solve-driven).
+    pub swaps: u64,
+}
+
+/// A point-in-time view of the whole fleet.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FleetStatus {
+    /// Fleet-wide budget (mJ per request, summed across tenants).
+    pub fleet_budget_mj: f64,
+    /// Hosted model count.
+    pub models: usize,
+    /// Allocation solves completed since installation (the initial
+    /// synchronous seed counts as the first).
+    pub resolves: u64,
+}
+
+/// The fleet-wide budget scheduler (see module docs).
+pub struct FleetScheduler {
+    tenants: Vec<Tenant>,
+    fleet_budget_mj: RwLock<f64>,
+    /// Serializes solves: the background thread is single, but the
+    /// synchronous install seed shares this discipline for clarity.
+    solve_lock: Mutex<()>,
+    resolves: AtomicU64,
+    job_tx: Mutex<Option<Sender<Job>>>,
+    handle: Mutex<Option<JoinHandle<()>>>,
+}
+
+impl std::fmt::Debug for FleetScheduler {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = self.fleet_status();
+        f.debug_struct("FleetScheduler")
+            .field("models", &s.models)
+            .field("fleet_budget_mj", &s.fleet_budget_mj)
+            .field("resolves", &s.resolves)
+            .finish()
+    }
+}
+
+impl FleetScheduler {
+    /// Build a scheduler over per-model `(cache, profile)` pairs —
+    /// index-aligned with `coord`'s model table — and install it:
+    /// solves the initial allocation synchronously (nothing is serving
+    /// yet), swaps each tenant's seeded plan into its slot, installs
+    /// the per-model profiled cost oracles, starts the background
+    /// solve thread, and registers itself as the energy tap.
+    ///
+    /// Errors when the tenant count does not match the coordinator's
+    /// model table, or any model lacks a plan slot (Pjrt backend).
+    pub fn install(
+        coord: &Coordinator,
+        tenants: Vec<(Arc<PlanCache>, Arc<KeepProfile>)>,
+        fleet_budget_mj: f64,
+    ) -> Result<Arc<FleetScheduler>, &'static str> {
+        if tenants.len() != coord.model_count() {
+            return Err("fleet scheduler tenant list must match the coordinator's model table");
+        }
+        if tenants.is_empty() {
+            return Err("fleet scheduler needs at least one model");
+        }
+        let mut rows = Vec::with_capacity(tenants.len());
+        for (i, (cache, profile)) in tenants.into_iter().enumerate() {
+            let model = i as u32;
+            let slot = coord
+                .plan_slot_of(model)
+                .ok_or("fleet scheduler needs the McuSim backend (no plan slot)")?;
+            let cost_slot = coord
+                .cost_estimator_slot_of(model)
+                .ok_or("fleet scheduler model id out of range")?;
+            let name = coord.model_name(model).unwrap_or("?").to_string();
+            rows.push(Tenant {
+                name,
+                cache,
+                slot,
+                cost_slot,
+                profile: RwLock::new(profile),
+                step: AtomicUsize::new(usize::MAX), // forces the seed publish
+                cap_mj: RwLock::new(None),
+                ewma_mj: Mutex::new(None),
+                drift: Mutex::new(DriftTracker::new(DriftCfg::default())),
+                reservoir: Mutex::new(InputReservoir::new(64, 0x5EED_F1EE + i as u64)),
+                recal_pending: AtomicBool::new(false),
+                drift_trips: AtomicU64::new(0),
+                recalibrations: AtomicU64::new(0),
+                swaps: AtomicU64::new(0),
+            });
+        }
+        let (tx, rx) = channel::<Job>();
+        let sched = Arc::new(FleetScheduler {
+            tenants: rows,
+            fleet_budget_mj: RwLock::new(fleet_budget_mj),
+            solve_lock: Mutex::new(()),
+            resolves: AtomicU64::new(0),
+            job_tx: Mutex::new(Some(tx)),
+            handle: Mutex::new(None),
+        });
+        // Startup seed solves synchronously: nothing is serving yet,
+        // so the (possibly cache-missing) plan compiles are free.
+        sched.resolve();
+        // The solve thread holds only a Weak: Drop closes the channel
+        // and joins it.
+        let weak = Arc::downgrade(&sched);
+        let handle = std::thread::spawn(move || solve_loop(weak, rx));
+        *lock_recover(&sched.handle) = Some(handle);
+        coord.set_energy_tap(Some(Arc::clone(&sched) as Arc<dyn EnergyTap>));
+        Ok(sched)
+    }
+
+    /// Recompute the allocation from the live curves and publish it:
+    /// per changed tenant, swap the plan slot (compiling here — off
+    /// every worker thread — when the step is not resident) and
+    /// retarget the profiled cost oracle.
+    fn resolve(&self) {
+        let _g = lock_recover(&self.solve_lock);
+        let budget = *read_recover(&self.fleet_budget_mj);
+        let profiles: Vec<Arc<KeepProfile>> =
+            self.tenants.iter().map(|t| read_recover(&t.profile).clone()).collect();
+        let curves: Vec<TenantCurve> = self
+            .tenants
+            .iter()
+            .zip(&profiles)
+            .map(|(t, p)| TenantCurve {
+                mean_mj: (0..p.n_steps()).map(|s| p.mean_mj(s)).collect(),
+                keep_ratio: (0..p.n_steps()).map(|s| p.model_keep_ratio(s)).collect(),
+                cap_mj: *read_recover(&t.cap_mj),
+            })
+            .collect();
+        let steps = allocate_fleet(&curves, budget);
+        for ((t, p), &s) in self.tenants.iter().zip(&profiles).zip(&steps) {
+            if t.step.load(Ordering::Acquire) != s {
+                t.slot.swap(t.cache.plan_at(s));
+                t.step.store(s, Ordering::Release);
+                t.swaps.fetch_add(1, Ordering::Relaxed);
+            }
+            // Always retarget pricing: the profile may have been
+            // republished even when the step held still.
+            let est: Arc<dyn CostEstimator> =
+                Arc::new(ProfiledCost { profile: Arc::clone(p), step: s });
+            *write_recover(&t.cost_slot) = Some(est);
+        }
+        self.resolves.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Enqueue a background re-solve (budget/cap changes, tests).
+    fn request_resolve(&self) {
+        let tx = lock_recover(&self.job_tx);
+        if let Some(tx) = tx.as_ref() {
+            let _ = tx.send(Job::Resolve);
+        }
+    }
+
+    /// Queue one live recalibration of tenant `i` (deduplicated while
+    /// pending).
+    fn request_recalibrate(&self, i: usize) {
+        let t = &self.tenants[i];
+        if t.recal_pending.swap(true, Ordering::AcqRel) {
+            return; // already queued or running
+        }
+        let sent = matches!(
+            lock_recover(&self.job_tx).as_ref().map(|tx| tx.send(Job::Recalibrate(i))),
+            Some(Ok(()))
+        );
+        if !sent {
+            // Channel gone (shutdown race): release the reservation.
+            t.recal_pending.store(false, Ordering::Release);
+        }
+    }
+
+    /// Change the fleet-wide budget (the fleet-scoped `SetBudget`
+    /// admin frame). The re-solve runs on the background thread; the
+    /// published steps move shortly after.
+    pub fn set_fleet_budget(&self, budget_mj: f64) {
+        *write_recover(&self.fleet_budget_mj) = budget_mj;
+        self.request_resolve();
+    }
+
+    /// Set (or clear, with `None`) one tenant's energy cap — the
+    /// model-scoped `SetBudget` admin frame. Returns `false` for an
+    /// unknown model id.
+    pub fn set_tenant_cap(&self, model: u32, cap_mj: Option<f64>) -> bool {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return false;
+        };
+        *write_recover(&t.cap_mj) = cap_mj;
+        self.request_resolve();
+        true
+    }
+
+    /// The current fleet-wide budget (mJ per request, summed).
+    pub fn fleet_budget_mj(&self) -> f64 {
+        *read_recover(&self.fleet_budget_mj)
+    }
+
+    /// The published grid step of `model`, if the id is known.
+    pub fn step(&self, model: u32) -> Option<usize> {
+        self.tenants.get(model as usize).map(|t| t.step.load(Ordering::Acquire))
+    }
+
+    /// Point-in-time view of one tenant; `None` for an unknown id.
+    pub fn status(&self, model: u32) -> Option<TenantStatus> {
+        let t = self.tenants.get(model as usize)?;
+        let step = t.step.load(Ordering::Acquire);
+        let profile = read_recover(&t.profile).clone();
+        Some(TenantStatus {
+            name: t.name.clone(),
+            step,
+            steps_total: t.cache.grid().len(),
+            scale_q8: t.cache.grid().q8(step.min(t.cache.grid().len().saturating_sub(1))),
+            keep_ratio: profile.model_keep_ratio(step),
+            mean_mj: profile.mean_mj(step),
+            ewma_mj: lock_recover(&t.ewma_mj).unwrap_or(0.0),
+            cap_mj: *read_recover(&t.cap_mj),
+            cache_hits: t.cache.hits(),
+            cache_misses: t.cache.misses(),
+            drift_trips: t.drift_trips.load(Ordering::Relaxed),
+            recalibrations: t.recalibrations.load(Ordering::Relaxed),
+            swaps: t.swaps.load(Ordering::Relaxed),
+        })
+    }
+
+    /// Point-in-time view of the whole fleet.
+    pub fn fleet_status(&self) -> FleetStatus {
+        FleetStatus {
+            fleet_budget_mj: self.fleet_budget_mj(),
+            models: self.tenants.len(),
+            resolves: self.resolves.load(Ordering::Relaxed),
+        }
+    }
+
+    /// The live calibrated profile of `model` (replaced wholesale by
+    /// recalibration — compare `Arc::ptr_eq` to detect a republish).
+    pub fn profile(&self, model: u32) -> Option<Arc<KeepProfile>> {
+        self.tenants.get(model as usize).map(|t| read_recover(&t.profile).clone())
+    }
+}
+
+impl EnergyTap for FleetScheduler {
+    /// Unattributed observation (a worker predating model attribution,
+    /// or a single-model pool): account it to model 0.
+    fn observe(&self, energy_mj: f64) {
+        self.observe_model(0, energy_mj);
+    }
+
+    /// Per-tenant energy EWMA — observability only; unlike the AIMD
+    /// governor, allocation moves on budget changes and drift trips,
+    /// not on every observation.
+    fn observe_model(&self, model: u32, energy_mj: f64) {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return;
+        };
+        let mut e = lock_recover(&t.ewma_mj);
+        *e = Some(match *e {
+            Some(prev) => 0.8 * prev + 0.2 * energy_mj,
+            None => energy_mj,
+        });
+    }
+
+    /// One request's observed keep ratio, attributed to its model:
+    /// compared against that tenant's calibrated expectation at its
+    /// published step; a sustained-divergence trip queues one live
+    /// recalibration (and the re-solve that follows it).
+    fn observe_keep_model(&self, model: u32, ratio: f64) {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return;
+        };
+        let expected =
+            read_recover(&t.profile).model_keep_ratio(t.step.load(Ordering::Acquire));
+        let tripped = lock_recover(&t.drift).observe(ratio, expected);
+        if tripped {
+            t.drift_trips.fetch_add(1, Ordering::Relaxed);
+            self.request_recalibrate(model as usize);
+        }
+    }
+
+    /// Offer a served input to its model's recalibration reservoir.
+    fn sample_input_model(&self, model: u32, x: &[f32]) {
+        if let Some(t) = self.tenants.get(model as usize) {
+            lock_recover(&t.reservoir).push(x);
+        }
+    }
+}
+
+/// The background solve loop: allocation re-solves and per-tenant
+/// recalibrations run here, off every worker thread (the governor's
+/// compile-loop idiom).
+fn solve_loop(sched: Weak<FleetScheduler>, rx: Receiver<Job>) {
+    while let Ok(job) = rx.recv() {
+        let Some(sched) = sched.upgrade() else { return };
+        match job {
+            Job::Resolve => sched.resolve(),
+            Job::Recalibrate(i) => recalibrate_tenant(&sched, i),
+        }
+        // Drop the strong handle before blocking on the next job, so
+        // the scheduler can be torn down while the queue is idle.
+        drop(sched);
+    }
+}
+
+/// Live recalibration of one tenant (background thread only).
+/// Measurement — `grid.len() × reservoir` inferences — runs off every
+/// lock; the republish is the subsequent `resolve`, which re-allocates
+/// the whole fleet under the fresh curve.
+fn recalibrate_tenant(sched: &Arc<FleetScheduler>, i: usize) {
+    let t = &sched.tenants[i];
+    let xs = lock_recover(&t.reservoir).samples();
+    if xs.is_empty() {
+        // Nothing observed yet (trip raced an empty reservoir): drop
+        // the reservation; a later trip retries with data.
+        t.recal_pending.store(false, Ordering::Release);
+        return;
+    }
+    let fresh = Arc::new(KeepProfile::measure(&t.cache, &xs));
+    *write_recover(&t.profile) = fresh;
+    // Re-arm against the new baseline; the trip count survives.
+    lock_recover(&t.drift).reset();
+    lock_recover(&t.reservoir).clear();
+    t.recalibrations.fetch_add(1, Ordering::Relaxed);
+    t.recal_pending.store(false, Ordering::Release);
+    sched.resolve();
+}
+
+/// Close the solve channel and join the thread; the thread itself can
+/// transiently hold the last strong reference, in which case it
+/// detaches instead of self-joining (the governor's Drop discipline).
+impl Drop for FleetScheduler {
+    fn drop(&mut self) {
+        drop(lock_recover(&self.job_tx).take());
+        if let Some(h) = lock_recover(&self.handle).take() {
+            if h.thread().id() != std::thread::current().id() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::approx::DivKind;
+    use crate::control::ScaleGrid;
+    use crate::coordinator::{BackendChoice, Coordinator, ModelSpec, ServeConfig};
+    use crate::engine::{PlanConfig, PruneMode, QModel};
+    use crate::models::{zoo, Params};
+    use crate::pruning::Thresholds;
+    use std::time::{Duration, Instant};
+
+    /// Deterministic xorshift for synthetic-curve property tests.
+    struct Lcg(u64);
+    impl Lcg {
+        fn next_f64(&mut self) -> f64 {
+            self.0 = self
+                .0
+                .wrapping_mul(6364136223846793005)
+                .wrapping_add(1442695040888963407);
+            ((self.0 >> 33) as f64) / (u32::MAX as f64 + 1.0)
+        }
+    }
+
+    /// A strictly decreasing synthetic (energy, keep) curve pair —
+    /// the isotonic shape real calibration measures.
+    fn synth_curve(seed: u64, steps: usize) -> TenantCurve {
+        let mut rng = Lcg(seed.wrapping_mul(0x9E37_79B9_7F4A_7C15) | 1);
+        let mut mean = Vec::with_capacity(steps);
+        let mut keep = Vec::with_capacity(steps);
+        let mut m = 5.0 + 10.0 * rng.next_f64();
+        let mut k = 1.0;
+        for _ in 0..steps {
+            mean.push(m);
+            keep.push(k);
+            m *= 0.55 + 0.35 * rng.next_f64(); // decay 10%..45% per step
+            k -= (0.02 + 0.1 * rng.next_f64()) * k;
+        }
+        TenantCurve { mean_mj: mean, keep_ratio: keep, cap_mj: None }
+    }
+
+    /// The single-model governor's feed-forward choice: the first step
+    /// whose calibrated mean energy fits the budget (the cheapest step
+    /// when none does) — `KeepProfile::seed_step`'s rule.
+    fn governor_choice(curve: &TenantCurve, budget: f64) -> usize {
+        curve
+            .mean_mj
+            .iter()
+            .position(|&m| m <= budget)
+            .unwrap_or(curve.mean_mj.len().saturating_sub(1))
+    }
+
+    #[test]
+    fn allocation_is_monotone_in_fleet_budget() {
+        // Property: for every random fleet, raising the budget never
+        // raises any model's step (more budget ⇒ no model prunes
+        // harder).
+        for trial in 0..50u64 {
+            let n_models = 1 + (trial % 4) as usize;
+            let curves: Vec<TenantCurve> =
+                (0..n_models).map(|i| synth_curve(trial * 31 + i as u64, 10)).collect();
+            let ceiling: f64 = curves.iter().map(|c| c.mean_mj[0]).sum::<f64>() * 1.2;
+            let mut prev: Option<Vec<usize>> = None;
+            // Sweep the budget upward; each allocation must dominate
+            // the previous (component-wise ≤ in step).
+            for pct in 0..=20 {
+                let budget = ceiling * (pct as f64) / 20.0;
+                let steps = allocate_fleet(&curves, budget);
+                if let Some(prev) = &prev {
+                    for (i, (&now, &before)) in steps.iter().zip(prev).enumerate() {
+                        assert!(
+                            now <= before,
+                            "trial {trial}: budget rose but model {i} stepped {before} -> {now}"
+                        );
+                    }
+                }
+                prev = Some(steps);
+            }
+        }
+    }
+
+    #[test]
+    fn allocation_respects_per_tenant_caps() {
+        for trial in 0..50u64 {
+            let n_models = 2 + (trial % 3) as usize;
+            let mut curves: Vec<TenantCurve> =
+                (0..n_models).map(|i| synth_curve(trial * 47 + i as u64, 10)).collect();
+            let mut rng = Lcg(trial + 99);
+            for c in &mut curves {
+                // A cap somewhere inside the curve's range (always at
+                // or above the cheapest step, which is a fallback no
+                // cap can forbid).
+                let lo = *c.mean_mj.last().unwrap();
+                let hi = c.mean_mj[0];
+                c.cap_mj = Some(lo + (hi - lo) * rng.next_f64());
+            }
+            // Generous fleet budget: only the caps constrain.
+            let budget: f64 = curves.iter().map(|c| c.mean_mj[0]).sum::<f64>() * 2.0;
+            let steps = allocate_fleet(&curves, budget);
+            for (i, (c, &s)) in curves.iter().zip(&steps).enumerate() {
+                assert!(
+                    c.mean_mj[s] <= c.cap_mj.unwrap() + 1e-12,
+                    "trial {trial}: model {i} at step {s} spends {} over its cap {:?}",
+                    c.mean_mj[s],
+                    c.cap_mj
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn single_model_degrades_to_the_governor_choice() {
+        // With one model loaded the buy-down must stop exactly where
+        // the single-model governor's feed-forward seed would.
+        for trial in 0..60u64 {
+            let curve = synth_curve(trial * 13 + 1, 12);
+            let mut rng = Lcg(trial);
+            let budget = curve.mean_mj[0] * 1.1 * rng.next_f64();
+            let got = allocate_fleet(std::slice::from_ref(&curve), budget)[0];
+            let want = governor_choice(&curve, budget);
+            assert_eq!(got, want, "trial {trial}: allocator {got} vs governor {want}");
+        }
+    }
+
+    #[test]
+    fn tight_budget_starves_the_flattest_marginal_curve_first() {
+        // Two tenants, identical energy curves; A's keep curve is
+        // steep (pruning costs a lot of signal), B's is flat (pruning
+        // is nearly free). Any budget that affords only part of the
+        // buy-down must spend it on A — B is starved at deeper
+        // pruning.
+        let mean: Vec<f64> = (0..8).map(|s| 8.0 * 0.7f64.powi(s)).collect();
+        let steep = TenantCurve {
+            mean_mj: mean.clone(),
+            keep_ratio: (0..8).map(|s| 1.0 - 0.1 * s as f64).collect(),
+            cap_mj: None,
+        };
+        let flat = TenantCurve {
+            mean_mj: mean.clone(),
+            keep_ratio: (0..8).map(|s| 1.0 - 0.005 * s as f64).collect(),
+            cap_mj: None,
+        };
+        // Mid-range budget: enough to walk one tenant most of the way
+        // down, not both.
+        let budget = mean[0] + mean[7];
+        let steps = allocate_fleet(&[steep, flat], budget);
+        assert!(
+            steps[0] < steps[1],
+            "steep curve should be bought down first: {steps:?}"
+        );
+        assert_eq!(steps[1], 7, "flat curve should be fully starved: {steps:?}");
+    }
+
+    // ---- runtime (FleetScheduler over a live coordinator) ----
+
+    fn boot_fleet(
+        seeds: &[u64],
+        workers: usize,
+    ) -> (Coordinator, Vec<(Arc<PlanCache>, Arc<KeepProfile>)>, Vec<Vec<f32>>) {
+        let def = zoo("mnist");
+        let mut specs = Vec::new();
+        let mut tenants = Vec::new();
+        let xs: Vec<Vec<f32>> = (0..4)
+            .map(|s| {
+                (0..def.input_len())
+                    .map(|i| (((i * 11 + s * 5) % 19) as f32 - 9.0) / 7.0)
+                    .collect()
+            })
+            .collect();
+        for (i, &seed) in seeds.iter().enumerate() {
+            let params = Params::random(&def, seed);
+            let q = QModel::quantize(&def, &params)
+                .with_thresholds(&Thresholds::uniform(3, 0.15));
+            specs.push(ModelSpec {
+                name: format!("m{i}"),
+                q: q.clone(),
+                mode: PruneMode::Unit,
+                div: DivKind::Shift,
+            });
+            let grid = ScaleGrid::geometric(0.25, 8.0, 10);
+            let cache =
+                Arc::new(PlanCache::new(q, PlanConfig::unit(DivKind::Shift), grid));
+            let profile = Arc::new(KeepProfile::measure(&cache, &xs));
+            tenants.push((cache, profile));
+        }
+        let coord = Coordinator::start_multi(
+            specs,
+            ServeConfig { workers, ..Default::default() },
+        );
+        (coord, tenants, xs)
+    }
+
+    #[test]
+    fn install_seeds_each_tenant_and_prices_it() {
+        let (coord, tenants, xs) = boot_fleet(&[31, 32], 2);
+        let budget: f64 = tenants.iter().map(|(_, p)| p.mean_mj(p.n_steps() / 2)).sum();
+        let sched = FleetScheduler::install(&coord, tenants.clone(), budget).unwrap();
+        assert_eq!(sched.fleet_status().models, 2);
+        assert!(sched.fleet_status().resolves >= 1, "install must seed-solve");
+        // The seeded steps are exactly what the pure allocator says.
+        let curves: Vec<TenantCurve> = tenants
+            .iter()
+            .map(|(_, p)| TenantCurve {
+                mean_mj: (0..p.n_steps()).map(|s| p.mean_mj(s)).collect(),
+                keep_ratio: (0..p.n_steps()).map(|s| p.model_keep_ratio(s)).collect(),
+                cap_mj: None,
+            })
+            .collect();
+        let want = allocate_fleet(&curves, budget);
+        for m in 0..2u32 {
+            assert_eq!(sched.step(m), Some(want[m as usize]), "tenant {m} mis-seeded");
+        }
+        // Both cost oracles are installed.
+        for m in 0..2u32 {
+            assert!(
+                coord.cost_estimator_slot_of(m).unwrap().read().unwrap().is_some(),
+                "tenant {m} has no profiled cost oracle"
+            );
+        }
+        // Serving still works and feeds the per-tenant EWMA.
+        for m in 0..2u32 {
+            coord.submit_to(m, xs[0].clone()).unwrap().recv().unwrap();
+        }
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while (0..2u32).any(|m| sched.status(m).unwrap().ewma_mj == 0.0) {
+            assert!(Instant::now() < deadline, "tenant EWMA never fed");
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn single_tenant_install_matches_the_governor_seed() {
+        let (coord, tenants, _xs) = boot_fleet(&[33], 1);
+        let profile = Arc::clone(&tenants[0].1);
+        let budget = profile.mean_mj(profile.n_steps() / 2);
+        let sched = FleetScheduler::install(&coord, tenants, budget).unwrap();
+        assert_eq!(
+            sched.step(0),
+            Some(profile.seed_step(budget)),
+            "one loaded model must degrade to the governor's feed-forward seed"
+        );
+        coord.shutdown();
+    }
+
+    #[test]
+    fn budget_changes_republish_steps_monotonically() {
+        let (coord, tenants, _xs) = boot_fleet(&[34, 35], 1);
+        let rich: f64 = tenants.iter().map(|(_, p)| p.mean_mj(0)).sum::<f64>() * 2.0;
+        let poor: f64 = tenants.iter().map(|(_, p)| p.mean_mj(p.n_steps() - 1)).sum();
+        let sched = FleetScheduler::install(&coord, tenants, rich).unwrap();
+        let generous: Vec<usize> = (0..2).map(|m| sched.step(m).unwrap()).collect();
+        assert_eq!(generous, vec![0, 0], "a rich fleet serves both models unpruned");
+        sched.set_fleet_budget(poor);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let starved: Vec<usize> = (0..2).map(|m| sched.step(m).unwrap()).collect();
+            if starved.iter().zip(&generous).all(|(s, g)| s > g) {
+                break;
+            }
+            assert!(
+                Instant::now() < deadline,
+                "starvation never republished: {starved:?}"
+            );
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        // And relief walks every tenant back down.
+        sched.set_fleet_budget(rich);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while (0..2).map(|m| sched.step(m).unwrap()).sum::<usize>() != 0 {
+            assert!(Instant::now() < deadline, "relief never republished");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        coord.shutdown();
+    }
+
+    #[test]
+    fn tenant_cap_constrains_one_model_only() {
+        let (coord, tenants, _xs) = boot_fleet(&[36, 37], 1);
+        let rich: f64 = tenants.iter().map(|(_, p)| p.mean_mj(0)).sum::<f64>() * 2.0;
+        let profile0 = Arc::clone(&tenants[0].1);
+        let sched = FleetScheduler::install(&coord, tenants, rich).unwrap();
+        assert_eq!(sched.step(0), Some(0));
+        // Cap tenant 0 at its mid-curve spend: it must retreat to a
+        // step whose calibrated mean fits the cap; tenant 1 stays.
+        let cap = profile0.mean_mj(profile0.n_steps() / 2);
+        assert!(sched.set_tenant_cap(0, Some(cap)));
+        assert!(!sched.set_tenant_cap(9, Some(cap)), "unknown tenant must be rejected");
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = sched.status(0).unwrap();
+            if st.mean_mj <= cap + 1e-12 {
+                break;
+            }
+            assert!(Instant::now() < deadline, "cap never enforced: {st:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(sched.step(1), Some(0), "uncapped tenant must not move");
+        assert_eq!(sched.status(0).unwrap().cap_mj, Some(cap));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn per_tenant_drift_recalibrates_that_tenant_live() {
+        let (coord, tenants, xs) = boot_fleet(&[38, 39], 1);
+        let rich: f64 = tenants.iter().map(|(_, p)| p.mean_mj(0)).sum::<f64>() * 2.0;
+        let sched = FleetScheduler::install(&coord, tenants, rich).unwrap();
+        let before = sched.profile(0).unwrap();
+        // Fill tenant 0's reservoir, then feed it a sustained keep
+        // shift; tenant 1 sees stationary traffic.
+        for x in &xs {
+            for _ in 0..10 {
+                sched.sample_input_model(0, x);
+            }
+        }
+        let expected = before.model_keep_ratio(sched.step(0).unwrap());
+        let shifted = if expected > 0.25 { expected - 0.2 } else { expected + 0.2 };
+        for _ in 0..200 {
+            sched.observe_keep_model(0, shifted);
+        }
+        assert!(sched.status(0).unwrap().drift_trips >= 1, "shift never tripped");
+        let deadline = Instant::now() + Duration::from_secs(60);
+        while sched.status(0).unwrap().recalibrations == 0 {
+            assert!(Instant::now() < deadline, "recalibration never landed");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            !Arc::ptr_eq(&before, &sched.profile(0).unwrap()),
+            "tenant 0's profile not republished"
+        );
+        let st1 = sched.status(1).unwrap();
+        assert_eq!(st1.drift_trips, 0, "stationary tenant tripped");
+        assert_eq!(st1.recalibrations, 0, "stationary tenant recalibrated");
+        coord.shutdown();
+    }
+}

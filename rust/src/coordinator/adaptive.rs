@@ -29,6 +29,7 @@ pub struct EnergyController {
     scale: f64,
     /// Clamp range for the scale.
     pub min_scale: f64,
+    /// Upper end of the clamp range.
     pub max_scale: f64,
     /// Multiplicative step per update.
     pub step: f64,
@@ -39,6 +40,7 @@ pub struct EnergyController {
 }
 
 impl EnergyController {
+    /// Controller at scale 1.0 with the default clamp, step, and EWMA settings.
     pub fn new(budget_mj: f64) -> EnergyController {
         EnergyController {
             budget_mj,
@@ -82,10 +84,12 @@ impl EnergyController {
         self.scale = scale.clamp(self.min_scale, self.max_scale);
     }
 
+    /// Current threshold scale (1.0 = calibrated).
     pub fn scale(&self) -> f64 {
         self.scale
     }
 
+    /// EWMA of observed per-inference energy (mJ).
     pub fn ewma_mj(&self) -> f64 {
         self.ewma_mj
     }

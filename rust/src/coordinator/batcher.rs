@@ -13,7 +13,9 @@ use super::request::InferRequest;
 /// Pure batching policy.
 #[derive(Debug, Clone, Copy)]
 pub struct BatchPolicy {
+    /// Max samples per planned batch.
     pub max_batch: usize,
+    /// Max time to wait filling a batch before dispatching.
     pub max_wait: Duration,
 }
 
@@ -34,6 +36,7 @@ impl BatchPolicy {
 
 /// Channel-driven batch collector.
 pub struct Batcher {
+    /// The batching policy this collector applies.
     pub policy: BatchPolicy,
 }
 

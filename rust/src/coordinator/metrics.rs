@@ -99,42 +99,65 @@ struct Inner {
 /// Snapshot for reporting.
 #[derive(Debug, Clone, Default)]
 pub struct Snapshot {
+    /// Samples completed `Ok` since start.
     pub served: u64,
+    /// Worker batches executed.
     pub batches: u64,
     /// Total latency (queue + service) percentiles.
     pub p50_us: u64,
+    /// 95th-percentile total latency (µs).
     pub p95_us: u64,
+    /// 99th-percentile total latency (µs).
     pub p99_us: u64,
     /// Queue-wait percentiles (enqueue → worker pickup).
     pub queue_p50_us: u64,
+    /// 95th-percentile queue wait (µs).
     pub queue_p95_us: u64,
+    /// 99th-percentile queue wait (µs).
     pub queue_p99_us: u64,
     /// Service-time percentiles (worker pickup → response).
     pub service_p50_us: u64,
+    /// 95th-percentile service time (µs).
     pub service_p95_us: u64,
+    /// 99th-percentile service time (µs).
     pub service_p99_us: u64,
+    /// Mean executed batch size.
     pub mean_batch: f64,
+    /// Mean fraction of MACs skipped per sample.
     pub mean_mac_skipped: f64,
+    /// Mean modeled energy per sample (mJ).
     pub mean_energy_mj: f64,
+    /// Mean modeled MCU seconds per sample.
     pub mean_mcu_secs: f64,
     /// Streamed-serving outcomes (see the matching `Inner` fields).
     pub rejected: u64,
+    /// Requests that hit their deadline.
     pub expired: u64,
+    /// Requests cancelled by the client.
     pub cancelled: u64,
+    /// Queued samples tombstone-dropped at dequeue.
     pub dropped: u64,
+    /// Requests admitted via the park queue.
     pub parked: u64,
+    /// Sessions ever opened.
     pub sessions_opened: u64,
+    /// Sessions closed.
     pub sessions_closed: u64,
+    /// Admitted-but-unfinished request gauge.
     pub inflight: i64,
     /// Latest per-shard queued-cost gauges (empty until published).
     pub shard_costs: Vec<u64>,
     /// Governor background-compile gauges/counters (see `Inner`).
     pub bg_pending: u64,
+    /// Background compiles completed.
     pub bg_compiled: u64,
+    /// Background compiles that upgraded the live plan.
     pub bg_upgrades: u64,
     /// Self-healing counters (see `Inner`).
     pub worker_panics: u64,
+    /// Workers respawned after a contained panic.
     pub respawns: u64,
+    /// Requests that reached the `Failed` terminal outcome.
     pub failed: u64,
 }
 
@@ -147,10 +170,12 @@ fn percentile(sorted: &[u64], p: f64) -> u64 {
 }
 
 impl Metrics {
+    /// Fresh zeroed metrics.
     pub fn new() -> Metrics {
         Metrics::default()
     }
 
+    /// Count one executed worker batch.
     pub fn record_batch(&self, n: usize) {
         let mut g = self.inner.lock().unwrap();
         g.batches += 1;
@@ -233,10 +258,12 @@ impl Metrics {
         self.inner.lock().unwrap().failed += 1;
     }
 
+    /// Count one accepted session.
     pub fn session_opened(&self) {
         self.inner.lock().unwrap().sessions_opened += 1;
     }
 
+    /// Count one closed session.
     pub fn session_closed(&self) {
         self.inner.lock().unwrap().sessions_closed += 1;
     }
@@ -247,6 +274,7 @@ impl Metrics {
         self.inner.lock().unwrap().inflight += d;
     }
 
+    /// Consistent copy of all counters and percentile estimates.
     pub fn snapshot(&self) -> Snapshot {
         let g = self.inner.lock().unwrap();
         let mut que = g.queue_us.buf.clone();

@@ -32,7 +32,7 @@ pub use request::{
     BatchSink, CtlState, InferRequest, InferResponse, ReplyTo, RequestCtl, StreamSink,
 };
 pub use server::{
-    BackendChoice, Coordinator, CostEstimator, CostEstimatorSlot, EnergyTap, PlanSlot,
-    ServeConfig, SubmitError,
+    BackendChoice, Coordinator, CostEstimator, CostEstimatorSlot, EnergyTap, ModelSpec,
+    PlanSlot, ServeConfig, SubmitError,
 };
 pub use shard::{Placement, ShardPool};

@@ -11,7 +11,14 @@ use std::time::Instant;
 /// One inference request (a single submission, or one sample of a
 /// split batch).
 pub struct InferRequest {
+    /// Request id (wire id for streamed requests, coordinator-assigned
+    /// for in-process submissions).
     pub id: u64,
+    /// Index of the target model in the coordinator's model table
+    /// (always `0` on single-model coordinators). Workers look up the
+    /// plan slot for this model per dequeue; the submit paths validate
+    /// it, so by the time a request is queued the index is in range.
+    pub model: u32,
     /// Flat `C·H·W` f32 input.
     pub x: Vec<f32>,
     /// Q8.8-quantized `x`, populated when cost-weighted dispatch
@@ -71,6 +78,8 @@ impl RequestCtl {
         Arc::new(RequestCtl::default())
     }
 
+    /// Current lifecycle state (racy by nature; terminal states are
+    /// stable once observed).
     pub fn state(&self) -> CtlState {
         match self.state.load(Ordering::Acquire) {
             0 => CtlState::Active,
@@ -122,6 +131,7 @@ impl RequestCtl {
 /// order the sink chooses to release them. Implemented by the serve
 /// layer's session sink (which re-orders slots and writes wire frames).
 pub trait StreamSink: Send + Sync {
+    /// Deliver the finished response for batch position `slot`.
     fn put(&self, slot: usize, resp: InferResponse);
 
     /// The request failed terminally (worker panic). Called by the
@@ -205,8 +215,11 @@ impl BatchSink {
 /// The coordinator's answer.
 #[derive(Debug, Clone)]
 pub struct InferResponse {
+    /// Echo of the request id this response answers.
     pub id: u64,
+    /// Raw output logits, one per class.
     pub logits: Vec<f32>,
+    /// Argmax of `logits`.
     pub predicted: usize,
     /// Fraction of MACs skipped (MCU backend; 0 for PJRT).
     pub mac_skipped: f64,
@@ -246,6 +259,7 @@ mod tests {
         let (tx, rx) = channel();
         let req = InferRequest {
             id: 9,
+            model: 0,
             x: vec![0.0; 4],
             xi: None,
             slot: 0,

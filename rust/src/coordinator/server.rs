@@ -20,6 +20,17 @@
 //!   batch size (8), zero-pads partial batches, and fans results back
 //!   out.
 //!
+//! One McuSim coordinator can host **several models** at once
+//! ([`Coordinator::start_multi`]): each model gets its own
+//! [`PlanSlot`] + [`CostEstimatorSlot`] row in an immutable model
+//! table, every [`InferRequest`] carries the index of its target
+//! model, and workers pick up the right plan per dequeue (with one
+//! cached `(generation, plan, scratch)` triple per model, so the
+//! single-model fast path — one relaxed atomic load per dequeue — is
+//! unchanged). The fleet scheduler
+//! ([`crate::control::FleetScheduler`]) retargets the per-model slots;
+//! [`Coordinator::start`] is the single-model special case.
+//!
 //! Every response carries queue wait and service time separately (and
 //! [`Metrics`] aggregates both), so a shard-balance regression shows up
 //! as a queue-percentile blowup even when service time is flat.
@@ -36,7 +47,7 @@ use super::metrics::Metrics;
 use super::request::{BatchSink, InferRequest, InferResponse, ReplyTo, RequestCtl, StreamSink};
 use super::shard::{Placement, ShardPool};
 use crate::approx::DivKind;
-use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel};
+use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel, Scratch};
 use crate::mcu::EnergyModel;
 use crate::models::Params;
 use crate::util::stats::argmax;
@@ -46,22 +57,52 @@ use crate::util::{lock_recover, read_recover, write_recover, FaultPlan};
 #[derive(Debug, Clone)]
 pub enum BackendChoice {
     /// Fixed-point MCU simulator with the given pruning setup.
-    McuSim { q: QModel, mode: PruneMode, div: DivKind },
+    McuSim {
+        /// Quantized model to serve.
+        q: QModel,
+        /// Pruning mode (dense / UnIT / fat-neuron).
+        mode: PruneMode,
+        /// Division strategy for the threshold comparisons.
+        div: DivKind,
+    },
     /// Float AOT artifact at batch 8 through PJRT.
     Pjrt {
+        /// Zoo model name (selects the AOT artifact).
         model: String,
+        /// Float parameters fed to the artifact.
         params: Params,
         /// Per-layer UnIT thresholds fed to the artifact.
         t_vec: Vec<f32>,
+        /// Fat-neuron threshold fed to the artifact.
         fat_t: f32,
     },
+}
+
+/// One model hosted by a multi-model McuSim coordinator: the zoo name
+/// clients address it by, its quantized weights, and its pruning
+/// setup. The position in the `Vec` passed to
+/// [`Coordinator::start_multi`] becomes the model's wire id.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    /// Tenant name (`unit serve --models` order decides the id).
+    pub name: String,
+    /// Quantized model to serve under this id.
+    pub q: QModel,
+    /// Pruning mode (dense / UnIT / fat-neuron).
+    pub mode: PruneMode,
+    /// Division strategy for the threshold comparisons.
+    pub div: DivKind,
 }
 
 /// Serving configuration.
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
+    /// McuSim worker-thread count (one shard each); clamped to ≥ 1.
     pub workers: usize,
+    /// Pjrt dynamic-batch cap (clamped to the artifact's batch size).
     pub max_batch: usize,
+    /// Pjrt dynamic-batch linger: how long the executor waits to fill
+    /// a partial batch before running it.
     pub max_wait: Duration,
     /// Shard placement policy (McuSim): cost-weighted by the plan's
     /// per-sample MAC estimate by default; `Placement::TwoChoice` is
@@ -90,12 +131,15 @@ impl Default for ServeConfig {
 pub enum SubmitError {
     /// The coordinator's intake is closed (shutdown in progress).
     Closed,
+    /// The target model id is not in this coordinator's model table.
+    UnknownModel,
 }
 
 impl std::fmt::Display for SubmitError {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         match self {
             SubmitError::Closed => write!(f, "coordinator intake closed"),
+            SubmitError::UnknownModel => write!(f, "unknown model id"),
         }
     }
 }
@@ -109,7 +153,7 @@ impl std::error::Error for SubmitError {}
 /// request runs start-to-finish on the `Arc` it picked up). Swaps come
 /// from two places: the governor's inline path (resident plans) and
 /// its background compile thread's **upgrades** — workers observe both
-/// the same way.
+/// the same way. Multi-model coordinators hold one slot per model.
 ///
 /// `RwLock<Arc<…>>` rather than a lock-free pointer because the write
 /// path is rare and std has no atomic `Arc` swap. The read path is
@@ -124,6 +168,7 @@ pub struct PlanSlot {
 }
 
 impl PlanSlot {
+    /// A slot initially holding `plan`, at generation 0.
     pub fn new(plan: Arc<PlannedModel>) -> PlanSlot {
         PlanSlot { cur: RwLock::new(plan), generation: AtomicU64::new(0) }
     }
@@ -156,19 +201,23 @@ impl PlanSlot {
 /// given the active plan and a quantized sample, price its service
 /// cost in estimated MACs.
 pub trait CostEstimator: Send + Sync {
+    /// Estimated MACs to serve the quantized sample `x_raw` on `plan`.
     fn estimate(&self, plan: &PlannedModel, x_raw: &[i16]) -> u64;
 }
 
 /// The shared, swappable cost-oracle slot (`None` = use the plan's own
 /// estimate). The governor holds a clone and retargets it per plan
-/// swap.
+/// swap; multi-model coordinators keep one slot per model, so each
+/// tenant's queue cost is priced by its own calibrated profile.
 pub type CostEstimatorSlot = Arc<RwLock<Option<Arc<dyn CostEstimator>>>>;
 
 /// Per-request energy observer: workers report each McuSim inference's
-/// modeled ledger energy here (when installed). This is the governor's
-/// feedback input — implemented by `control::Governor`, which closes
-/// the budget loop by swapping the [`PlanSlot`].
+/// modeled ledger energy here (when installed). This is the control
+/// plane's feedback input — implemented by `control::Governor`
+/// (single-model) and `control::FleetScheduler` (multi-model), which
+/// close the budget loop by swapping [`PlanSlot`]s.
 pub trait EnergyTap: Send + Sync {
+    /// Report one inference's modeled ledger energy in millijoules.
     fn observe(&self, energy_mj: f64);
 
     /// Observed model-level keep ratio of one inference (kept MACs
@@ -179,10 +228,44 @@ pub trait EnergyTap: Send + Sync {
     /// Offer a served sample's raw input to the observer's
     /// recalibration reservoir. Default no-op.
     fn sample_input(&self, _x: &[f32]) {}
+
+    /// Model-attributed energy report. Workers always call this
+    /// variant; the default forwards to [`EnergyTap::observe`], so a
+    /// single-model observer never sees the id. Multi-model observers
+    /// override it to route feedback per tenant.
+    fn observe_model(&self, _model: u32, energy_mj: f64) {
+        self.observe(energy_mj);
+    }
+
+    /// Model-attributed keep-ratio report (see
+    /// [`EnergyTap::observe_keep`]).
+    fn observe_keep_model(&self, _model: u32, ratio: f64) {
+        self.observe_keep(ratio);
+    }
+
+    /// Model-attributed reservoir offer (see
+    /// [`EnergyTap::sample_input`]).
+    fn sample_input_model(&self, _model: u32, x: &[f32]) {
+        self.sample_input(x);
+    }
 }
 
 /// The shared, swappable energy-observer slot workers read per request.
 type EnergyTapSlot = Arc<RwLock<Option<Arc<dyn EnergyTap>>>>;
+
+/// One row of the coordinator's immutable model table: everything the
+/// submit paths and workers need to serve (and price) one tenant.
+struct ModelEntry {
+    /// Tenant name (zoo model name on real deployments).
+    name: String,
+    /// Active-plan slot; `None` on the Pjrt backend, whose executor
+    /// owns its artifact.
+    plan: Option<Arc<PlanSlot>>,
+    /// Per-model placement cost oracle.
+    cost_est: CostEstimatorSlot,
+    /// Flat `C·H·W` sample length this model expects.
+    input_len: usize,
+}
 
 /// Request intake: the sharded pool (McuSim) or the executor channel
 /// (Pjrt, whose single thread batches dynamically). The channel sender
@@ -199,132 +282,165 @@ pub struct Coordinator {
     intake: Intake,
     handles: Mutex<Vec<JoinHandle<()>>>,
     next_id: AtomicU64,
-    /// Active-plan slot (McuSim backend) — cost oracle for weighted
-    /// placement and the control plane's swap point; `None` on the
-    /// Pjrt backend.
-    plan: Option<Arc<PlanSlot>>,
-    /// Optional control-plane cost oracle (profiled per-layer
-    /// estimates); `None` falls back to the plan's own
-    /// `estimate_macs`. Shared handle so the governor can retarget it
-    /// without holding the coordinator.
-    cost_est: CostEstimatorSlot,
-    /// Optional per-request energy observer (the governor's feedback
-    /// input), read by every McuSim worker after each inference.
+    /// Immutable model table: index = model id. Single-backend
+    /// coordinators have exactly one row; every mutable per-model
+    /// state (plan, cost oracle) lives behind its row's shared slots,
+    /// so the table itself is never written after start.
+    models: Arc<Vec<ModelEntry>>,
+    /// Optional per-request energy observer (the control plane's
+    /// feedback input), read by every McuSim worker after each
+    /// inference.
     energy_tap: EnergyTapSlot,
-    /// Flat `C·H·W` sample length the backend expects (both backends
-    /// know their model) — sessions validate wire requests against it
-    /// so a wrong-length sample is an `Error` reply, not a worker
-    /// panic.
-    input_len: usize,
     placement: Placement,
+    /// Shared serving metrics (latency, batches, panics, drops).
     pub metrics: Arc<Metrics>,
 }
 
 impl Coordinator {
-    /// Start serving with the chosen backend.
+    /// Start serving with the chosen backend (single model — the
+    /// common case; see [`Coordinator::start_multi`] for multi-tenant
+    /// McuSim serving).
     pub fn start(backend: BackendChoice, cfg: ServeConfig) -> Coordinator {
+        match backend {
+            BackendChoice::McuSim { q, mode, div } => Coordinator::start_multi(
+                vec![ModelSpec { name: "default".to_string(), q, mode, div }],
+                cfg,
+            ),
+            BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
+                let metrics = Arc::new(Metrics::new());
+                let input_len = crate::models::zoo(&model).input_len();
+                let (tx, rx) = channel::<InferRequest>();
+                let policy =
+                    BatchPolicy { max_batch: cfg.max_batch.min(8), max_wait: cfg.max_wait };
+                let exec_metrics = Arc::clone(&metrics);
+                let name = model.clone();
+                let handles = vec![std::thread::spawn(move || {
+                    pjrt_executor(rx, model, params, t_vec, fat_t, policy, exec_metrics)
+                })];
+                Coordinator {
+                    intake: Intake::Chan(Mutex::new(Some(tx))),
+                    handles: Mutex::new(handles),
+                    next_id: AtomicU64::new(0),
+                    models: Arc::new(vec![ModelEntry {
+                        name,
+                        plan: None,
+                        cost_est: Arc::new(RwLock::new(None)),
+                        input_len,
+                    }]),
+                    energy_tap: Arc::new(RwLock::new(None)),
+                    placement: cfg.placement,
+                    metrics,
+                }
+            }
+        }
+    }
+
+    /// Start a multi-model McuSim coordinator: one shared
+    /// work-stealing pool serves every model in `specs`, and the
+    /// position of a spec in the `Vec` is its model id (what wire v4
+    /// `Request.model` addresses). Each model gets its own
+    /// [`PlanSlot`] and [`CostEstimatorSlot`]; workers look the plan
+    /// up per dequeue, so the control plane retargets tenants
+    /// independently. Panics if `specs` is empty.
+    pub fn start_multi(specs: Vec<ModelSpec>, cfg: ServeConfig) -> Coordinator {
+        assert!(!specs.is_empty(), "start_multi needs at least one model");
         let metrics = Arc::new(Metrics::new());
         let placement = cfg.placement;
-        let input_len = match &backend {
-            BackendChoice::McuSim { q, .. } => q.def.input_len(),
-            BackendChoice::Pjrt { model, .. } => crate::models::zoo(model).input_len(),
-        };
         let energy_tap: EnergyTapSlot = Arc::new(RwLock::new(None));
-        let (intake, handles, plan) = match backend {
-            BackendChoice::McuSim { q, mode, div } => {
-                let workers = cfg.workers.max(1);
-                let pool = Arc::new(ShardPool::new(workers));
-                // Compile the execution plan once; workers share the
-                // packed tables (read-only) and own their scratch. The
-                // slot lets the control plane swap the plan at runtime
-                // (workers re-read it per dequeue).
-                let slot = Arc::new(PlanSlot::new(Arc::new(PlannedModel::compile(
-                    &q,
-                    PlanConfig::for_mode(mode, div),
+        // Compile each model's execution plan once; workers share the
+        // packed tables (read-only) and own their scratch. The slots
+        // let the control plane swap any model's plan at runtime
+        // (workers re-read them per dequeue).
+        let entries: Vec<ModelEntry> = specs
+            .into_iter()
+            .map(|spec| {
+                let input_len = spec.q.def.input_len();
+                let plan = Arc::new(PlanSlot::new(Arc::new(PlannedModel::compile(
+                    &spec.q,
+                    PlanConfig::for_mode(spec.mode, spec.div),
                 ))));
-                let handles = (0..workers)
-                    .map(|w| {
-                        let pool = Arc::clone(&pool);
-                        let slot = Arc::clone(&slot);
-                        let metrics = Arc::clone(&metrics);
-                        let tap = Arc::clone(&energy_tap);
-                        let fault = cfg.fault.clone();
-                        // Panic supervisor: a worker panic (engine bug
-                        // or injected chaos) fails the stranded request
-                        // through its ctl and re-enters the loop with
-                        // fresh scratch, instead of silently shrinking
-                        // the pool. Unwind safety is by construction:
-                        // shared state is atomics and recover-on-poison
-                        // locks, and the one value a panic can strand —
-                        // the in-flight request — is reconciled from
-                        // the stash right here.
-                        std::thread::spawn(move || {
-                            let inflight: Mutex<Option<InFlight>> = Mutex::new(None);
-                            loop {
-                                let run = catch_unwind(AssertUnwindSafe(|| {
-                                    mcu_worker(
-                                        w,
-                                        &pool,
-                                        &slot,
-                                        &metrics,
-                                        &tap,
-                                        fault.as_deref(),
-                                        &inflight,
-                                    )
-                                }));
-                                match run {
-                                    // Pool closed and drained: clean exit.
-                                    Ok(()) => break,
-                                    Err(_) => {
-                                        metrics.record_worker_panic();
-                                        if let Some(fl) = lock_recover(&inflight).take() {
-                                            fail_inflight(fl, &metrics);
-                                        }
-                                        metrics.record_respawn();
-                                    }
-                                }
-                            }
-                        })
-                    })
-                    .collect();
-                (Intake::Pool(pool), handles, Some(slot))
-            }
-            BackendChoice::Pjrt { model, params, t_vec, fat_t } => {
-                let (tx, rx) = channel::<InferRequest>();
+                ModelEntry {
+                    name: spec.name,
+                    plan: Some(plan),
+                    cost_est: Arc::new(RwLock::new(None)),
+                    input_len,
+                }
+            })
+            .collect();
+        let models = Arc::new(entries);
+        let workers = cfg.workers.max(1);
+        let pool = Arc::new(ShardPool::new(workers));
+        let handles = (0..workers)
+            .map(|w| {
+                let pool = Arc::clone(&pool);
+                let models = Arc::clone(&models);
                 let metrics = Arc::clone(&metrics);
-                let policy = BatchPolicy { max_batch: cfg.max_batch.min(8), max_wait: cfg.max_wait };
-                let handles = vec![std::thread::spawn(move || {
-                    pjrt_executor(rx, model, params, t_vec, fat_t, policy, metrics)
-                })];
-                (Intake::Chan(Mutex::new(Some(tx))), handles, None)
-            }
-        };
+                let tap = Arc::clone(&energy_tap);
+                let fault = cfg.fault.clone();
+                // Panic supervisor: a worker panic (engine bug or
+                // injected chaos) fails the stranded request through
+                // its ctl and re-enters the loop with fresh scratch,
+                // instead of silently shrinking the pool. Unwind
+                // safety is by construction: shared state is atomics
+                // and recover-on-poison locks, and the one value a
+                // panic can strand — the in-flight request — is
+                // reconciled from the stash right here.
+                std::thread::spawn(move || {
+                    let inflight: Mutex<Option<InFlight>> = Mutex::new(None);
+                    loop {
+                        let run = catch_unwind(AssertUnwindSafe(|| {
+                            mcu_worker(
+                                w,
+                                &pool,
+                                &models,
+                                &metrics,
+                                &tap,
+                                fault.as_deref(),
+                                &inflight,
+                            )
+                        }));
+                        match run {
+                            // Pool closed and drained: clean exit.
+                            Ok(()) => break,
+                            Err(_) => {
+                                metrics.record_worker_panic();
+                                if let Some(fl) = lock_recover(&inflight).take() {
+                                    fail_inflight(fl, &metrics);
+                                }
+                                metrics.record_respawn();
+                            }
+                        }
+                    }
+                })
+            })
+            .collect();
         Coordinator {
-            intake,
+            intake: Intake::Pool(pool),
             handles: Mutex::new(handles),
             next_id: AtomicU64::new(0),
-            plan,
-            cost_est: Arc::new(RwLock::new(None)),
+            models,
             energy_tap,
-            input_len,
             placement,
             metrics,
         }
     }
 
-    /// Price one sample for placement: the active plan's per-sample
-    /// MAC estimate under cost-weighted placement (via the installed
-    /// [`CostEstimator`] when the control plane calibrated one), unit
-    /// cost otherwise (the Pjrt backend batches dynamically; its queue
-    /// is one channel). The quantized buffer the estimate needed rides
-    /// along in the request so the McuSim worker does not quantize
-    /// again.
-    fn price(&self, x: &[f32]) -> (u64, Option<Vec<i16>>) {
-        match (&self.plan, self.placement) {
+    /// Price one sample for placement: the owning model's active-plan
+    /// MAC estimate under cost-weighted placement (via that model's
+    /// installed [`CostEstimator`] when the control plane calibrated
+    /// one), unit cost otherwise (the Pjrt backend batches
+    /// dynamically; its queue is one channel). The quantized buffer
+    /// the estimate needed rides along in the request so the McuSim
+    /// worker does not quantize again.
+    fn price(&self, model: u32, x: &[f32]) -> (u64, Option<Vec<i16>>) {
+        let Some(entry) = self.models.get(model as usize) else {
+            return (1, None);
+        };
+        match (&entry.plan, self.placement) {
             (Some(slot), Placement::CostWeighted) => {
                 let plan = slot.get();
                 let xi = plan.quantize_input(x);
-                let est = read_recover(&self.cost_est).clone();
+                let est = read_recover(&entry.cost_est).clone();
                 let cost = match est {
                     Some(e) => e.estimate(&plan, &xi),
                     None => plan.estimate_macs(&xi),
@@ -335,16 +451,28 @@ impl Coordinator {
         }
     }
 
-    /// The active-plan slot (McuSim backend): the control plane's swap
-    /// point. `None` on the Pjrt backend.
+    /// Model 0's active-plan slot (McuSim backend): the single-model
+    /// control plane's swap point. `None` on the Pjrt backend.
     pub fn plan_slot(&self) -> Option<Arc<PlanSlot>> {
-        self.plan.as_ref().map(Arc::clone)
+        self.plan_slot_of(0)
     }
 
-    /// Shared handle to the placement cost-oracle slot; the governor
-    /// retargets it on every plan swap.
+    /// The active-plan slot of `model`; `None` for an unknown id or on
+    /// the Pjrt backend.
+    pub fn plan_slot_of(&self, model: u32) -> Option<Arc<PlanSlot>> {
+        self.models.get(model as usize).and_then(|e| e.plan.as_ref().map(Arc::clone))
+    }
+
+    /// Shared handle to model 0's placement cost-oracle slot; the
+    /// governor retargets it on every plan swap.
     pub fn cost_estimator_slot(&self) -> CostEstimatorSlot {
-        Arc::clone(&self.cost_est)
+        Arc::clone(&self.models[0].cost_est)
+    }
+
+    /// Shared handle to the placement cost-oracle slot of `model`;
+    /// `None` for an unknown id.
+    pub fn cost_estimator_slot_of(&self, model: u32) -> Option<CostEstimatorSlot> {
+        self.models.get(model as usize).map(|e| Arc::clone(&e.cost_est))
     }
 
     /// Install (or clear) the per-request energy observer the McuSim
@@ -370,15 +498,37 @@ impl Coordinator {
         self.metrics.record_shard_costs(&self.shard_costs());
     }
 
-    /// Estimated service cost of one sample (see `price`).
+    /// Estimated service cost of one model-0 sample (see `price`).
     pub fn estimate_cost(&self, x: &[f32]) -> u64 {
-        self.price(x).0
+        self.price(0, x).0
     }
 
-    /// Expected flat sample length (`C·H·W`) of the served model, for
-    /// session-side request validation.
+    /// Expected flat sample length (`C·H·W`) of model 0, for
+    /// session-side request validation on single-model servers.
     pub fn input_len(&self) -> usize {
-        self.input_len
+        self.models[0].input_len
+    }
+
+    /// Expected flat sample length of `model`; `None` for an unknown
+    /// id — sessions turn that into an `Error` reply instead of
+    /// queueing the request.
+    pub fn input_len_of(&self, model: u32) -> Option<usize> {
+        self.models.get(model as usize).map(|e| e.input_len)
+    }
+
+    /// Number of models in the table (≥ 1).
+    pub fn model_count(&self) -> usize {
+        self.models.len()
+    }
+
+    /// The tenant name serving under `model`, if the id is known.
+    pub fn model_name(&self, model: u32) -> Option<&str> {
+        self.models.get(model as usize).map(|e| e.name.as_str())
+    }
+
+    /// The model id registered under `name` (first match), if any.
+    pub fn model_id_of(&self, name: &str) -> Option<u32> {
+        self.models.iter().position(|e| e.name == name).map(|i| i as u32)
     }
 
     /// Dispatch on the infallible in-process paths. A closed intake
@@ -387,7 +537,7 @@ impl Coordinator {
     /// panic inside the shard pool, taking the *submitting* thread
     /// down with it.
     fn dispatch(&self, mut req: InferRequest) {
-        let (cost, xi) = self.price(&req.x);
+        let (cost, xi) = self.price(req.model, &req.x);
         req.xi = xi;
         match &self.intake {
             Intake::Pool(pool) => {
@@ -403,7 +553,7 @@ impl Coordinator {
 
     /// Fallible dispatch for streamed sessions racing shutdown.
     fn try_dispatch(&self, mut req: InferRequest) -> Result<(), SubmitError> {
-        let (cost, xi) = self.price(&req.x);
+        let (cost, xi) = self.price(req.model, &req.x);
         req.xi = xi;
         match &self.intake {
             Intake::Pool(pool) => pool
@@ -417,11 +567,25 @@ impl Coordinator {
         }
     }
 
-    /// Submit one request; returns the response channel.
+    /// Submit one request to model 0; returns the response channel.
     pub fn submit(&self, x: Vec<f32>) -> Receiver<InferResponse> {
+        self.submit_to(0, x).expect("model 0 always exists")
+    }
+
+    /// Submit one request to `model`; returns the response channel, or
+    /// [`SubmitError::UnknownModel`] for an id outside the table.
+    pub fn submit_to(
+        &self,
+        model: u32,
+        x: Vec<f32>,
+    ) -> Result<Receiver<InferResponse>, SubmitError> {
+        if (model as usize) >= self.models.len() {
+            return Err(SubmitError::UnknownModel);
+        }
         let (rtx, rrx) = channel();
         let req = InferRequest {
             id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            model,
             x,
             xi: None,
             slot: 0,
@@ -430,13 +594,14 @@ impl Coordinator {
             ctl: None,
         };
         self.dispatch(req);
-        rrx
+        Ok(rrx)
     }
 
     /// Submit a streamed request on behalf of a socket session: all
-    /// samples share `id` and `ctl`, and every reply flows through
-    /// `sink` (which handles ordering and suppression). Samples are
-    /// placed cost-weighted across shards like any other submission.
+    /// samples target `model`, share `id` and `ctl`, and every reply
+    /// flows through `sink` (which handles ordering and suppression).
+    /// Samples are placed cost-weighted across shards like any other
+    /// submission.
     ///
     /// On `Err`, `ctl` has been cancelled: any samples already queued
     /// before the intake closed are tombstoned, so no replies flow and
@@ -444,10 +609,15 @@ impl Coordinator {
     pub fn submit_streamed(
         &self,
         id: u64,
+        model: u32,
         xs: Vec<Vec<f32>>,
         ctl: Arc<RequestCtl>,
         sink: Arc<dyn StreamSink>,
     ) -> Result<(), SubmitError> {
+        if (model as usize) >= self.models.len() {
+            ctl.cancel();
+            return Err(SubmitError::UnknownModel);
+        }
         if matches!(self.intake, Intake::Pool(_)) {
             self.metrics.record_batch(xs.len().max(1));
         }
@@ -455,6 +625,7 @@ impl Coordinator {
         for (slot, x) in xs.into_iter().enumerate() {
             let req = InferRequest {
                 id,
+                model,
                 x,
                 xi: None,
                 slot,
@@ -470,14 +641,28 @@ impl Coordinator {
         Ok(())
     }
 
-    /// Submit one *batched* request: its samples are split across the
-    /// worker shards (so a large batch executes in parallel) and the
-    /// responses arrive as a single `Vec` in input order.
+    /// Submit one *batched* request to model 0: its samples are split
+    /// across the worker shards (so a large batch executes in
+    /// parallel) and the responses arrive as a single `Vec` in input
+    /// order.
     pub fn submit_batch(&self, xs: Vec<Vec<f32>>) -> Receiver<Vec<InferResponse>> {
+        self.submit_batch_to(0, xs).expect("model 0 always exists")
+    }
+
+    /// Submit one batched request to `model` (see
+    /// [`Coordinator::submit_batch`]).
+    pub fn submit_batch_to(
+        &self,
+        model: u32,
+        xs: Vec<Vec<f32>>,
+    ) -> Result<Receiver<Vec<InferResponse>>, SubmitError> {
+        if (model as usize) >= self.models.len() {
+            return Err(SubmitError::UnknownModel);
+        }
         let (rtx, rrx) = channel();
         if xs.is_empty() {
             let _ = rtx.send(Vec::new());
-            return rrx;
+            return Ok(rrx);
         }
         // The Pjrt executor re-batches dynamically and records its own
         // batch sizes; for the sharded pool the split request *is* the
@@ -490,6 +675,7 @@ impl Coordinator {
         for (slot, x) in xs.into_iter().enumerate() {
             self.dispatch(InferRequest {
                 id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                model,
                 x,
                 xi: None,
                 slot,
@@ -498,7 +684,7 @@ impl Coordinator {
                 ctl: None,
             });
         }
-        rrx
+        Ok(rrx)
     }
 
     /// Close the intake through a shared handle: queued requests still
@@ -574,25 +760,21 @@ fn fail_inflight(fl: InFlight, metrics: &Metrics) {
 fn mcu_worker(
     worker: usize,
     pool: &ShardPool<InferRequest>,
-    slot: &PlanSlot,
+    models: &[ModelEntry],
     metrics: &Metrics,
     tap: &EnergyTapSlot,
     fault: Option<&FaultPlan>,
     inflight: &Mutex<Option<InFlight>>,
 ) {
     let energy = EnergyModel::default();
-    // Per-worker scratch arena: no allocation on the request path. The
-    // arena is re-sized only when the governor swaps the plan (same
-    // model ⇒ same sizes in practice, but a realloc per swap is cheap
-    // insurance against a differently shaped plan).
-    // Generation is read BEFORE the plan: a swap landing in between
-    // then pairs the new plan with a stale generation, which only
-    // costs one redundant re-read at the next dequeue. (The other
-    // order would pair the OLD plan with the NEW generation and pin
-    // the worker on a stale plan until the next swap.)
-    let mut plan_gen = slot.generation();
-    let mut plan = slot.get();
-    let mut scratch = plan.new_scratch();
+    // Per-worker, per-model `(generation, plan, scratch)` cache: no
+    // allocation on the request path once a model has served. The
+    // scratch arena is re-sized only when that model's plan is swapped
+    // (same model ⇒ same sizes in practice, but a realloc per swap is
+    // cheap insurance against a differently shaped plan). With one
+    // model loaded this is exactly the old single-slot fast path.
+    let mut cached: Vec<Option<(u64, Arc<PlannedModel>, Scratch)>> =
+        models.iter().map(|_| None).collect();
     while let Some(mut req) = pool.pop(worker) {
         // Tombstone drop: a cancelled/expired request is discarded at
         // dequeue — no inference, no reply, no shard occupancy beyond
@@ -601,20 +783,49 @@ fn mcu_worker(
             metrics.record_dropped();
             continue;
         }
-        // Pick up the active plan for this request: the governor swaps
-        // the slot between requests, never under one. The generation
-        // probe makes inline swaps *and* background-compile upgrades
-        // visible for one atomic load; the slot lock is touched only
-        // when a swap actually happened.
+        // Pick up the owning model's active plan for this request: the
+        // control plane swaps slots between requests, never under one.
+        // The generation probe makes inline swaps *and*
+        // background-compile upgrades visible for one atomic load; the
+        // slot lock is touched only when a swap actually happened.
+        // Submit paths validate the model id, so a missing row here is
+        // a bug — degrade to a tombstone drop, never a panic.
+        let m = req.model as usize;
+        let Some(slot) = models.get(m).and_then(|e| e.plan.as_ref()) else {
+            if let Some(ctl) = &req.ctl {
+                ctl.cancel();
+            }
+            metrics.record_dropped();
+            continue;
+        };
+        // Generation is read BEFORE the plan: a swap landing in
+        // between then pairs the new plan with a stale generation,
+        // which only costs one redundant re-read at the next dequeue.
+        // (The other order would pair the OLD plan with the NEW
+        // generation and pin the worker on a stale plan until the next
+        // swap.)
         let gen = slot.generation();
-        if gen != plan_gen {
-            plan_gen = gen;
+        let stale = match &cached[m] {
+            Some((g, _, _)) => *g != gen,
+            None => true,
+        };
+        if stale {
             let cur = slot.get();
-            if !Arc::ptr_eq(&cur, &plan) {
-                scratch = cur.new_scratch();
-                plan = cur;
+            match &mut cached[m] {
+                Some((g, plan, scratch)) => {
+                    *g = gen;
+                    if !Arc::ptr_eq(&cur, plan) {
+                        *scratch = cur.new_scratch();
+                        *plan = cur;
+                    }
+                }
+                entry @ None => {
+                    let scratch = cur.new_scratch();
+                    *entry = Some((gen, cur, scratch));
+                }
             }
         }
+        let (_, plan, scratch) = cached[m].as_mut().expect("model cache filled above");
         // Stash what we are about to execute: if this iteration
         // panics, the supervisor fails the request from the stash
         // instead of losing it. The reply handle moves into the stash
@@ -631,7 +842,7 @@ fn mcu_worker(
             Some(xi) => xi,
             None => plan.quantize_input(&req.x),
         };
-        let out = plan.infer(&xi, &mut scratch);
+        let out = plan.infer(&xi, scratch);
         let service_us = t_deq.elapsed().as_micros() as u64;
         let resp = InferResponse {
             id: req.id,
@@ -663,15 +874,17 @@ fn mcu_worker(
         // here on a panic has nothing to reconcile.
         let fl = lock_recover(inflight).take().expect("in-flight stash present");
         fl.reply.deliver(req.slot, resp);
-        // Feed the governor AFTER delivering the reply: a scale change
-        // (and a possible cache-miss compile) never sits between a
-        // finished inference and its client. Clone the Arc out of the
-        // lock so a slow observe holds no lock.
+        // Feed the control plane AFTER delivering the reply: a scale
+        // change (and a possible cache-miss compile) never sits
+        // between a finished inference and its client. Clone the Arc
+        // out of the lock so a slow observe holds no lock. The
+        // model-attributed variants default to the plain ones, so a
+        // single-model governor is oblivious to the id.
         let observer = read_recover(tap).clone();
         if let Some(observer) = observer {
-            observer.observe(energy_mj);
-            observer.observe_keep(keep_ratio);
-            observer.sample_input(&req.x);
+            observer.observe_model(req.model, energy_mj);
+            observer.observe_keep_model(req.model, keep_ratio);
+            observer.sample_input_model(req.model, &req.x);
         }
     }
 }
@@ -884,6 +1097,78 @@ mod tests {
     }
 
     #[test]
+    fn multi_model_routes_to_the_right_plan_bit_identically() {
+        let def = zoo("mnist");
+        let qa = QModel::quantize(&def, &Params::random(&def, 21));
+        let qb = QModel::quantize(&def, &Params::random(&def, 22));
+        let x: Vec<f32> =
+            (0..def.input_len()).map(|i| ((i % 13) as f32 - 6.0) / 5.0).collect();
+        // Reference: each model served alone.
+        let mut solo = Vec::new();
+        for q in [&qa, &qb] {
+            let coord = Coordinator::start(
+                BackendChoice::McuSim {
+                    q: q.clone(),
+                    mode: PruneMode::Unit,
+                    div: DivKind::Shift,
+                },
+                ServeConfig { workers: 2, ..Default::default() },
+            );
+            solo.push(coord.submit(x.clone()).recv().unwrap().logits);
+            coord.shutdown();
+        }
+        assert_ne!(solo[0], solo[1], "distinct params must disagree");
+        let coord = Coordinator::start_multi(
+            vec![
+                ModelSpec { name: "a".into(), q: qa, mode: PruneMode::Unit, div: DivKind::Shift },
+                ModelSpec { name: "b".into(), q: qb, mode: PruneMode::Unit, div: DivKind::Shift },
+            ],
+            ServeConfig { workers: 2, ..Default::default() },
+        );
+        assert_eq!(coord.model_count(), 2);
+        assert_eq!(coord.model_id_of("b"), Some(1));
+        assert_eq!(coord.model_name(1), Some("b"));
+        assert_eq!(coord.input_len_of(1), Some(def.input_len()));
+        assert_eq!(coord.input_len_of(2), None, "unknown id must not resolve");
+        // Interleave the tenants: every reply must come from the
+        // request's own model, bit-identical to solo serving.
+        for _ in 0..3 {
+            let ra = coord.submit_to(0, x.clone()).unwrap();
+            let rb = coord.submit_to(1, x.clone()).unwrap();
+            assert_eq!(ra.recv().unwrap().logits, solo[0], "model a diverged from solo run");
+            assert_eq!(rb.recv().unwrap().logits, solo[1], "model b diverged from solo run");
+        }
+        assert_eq!(coord.submit_to(7, x.clone()).err(), Some(SubmitError::UnknownModel));
+        assert_eq!(coord.submit_batch_to(7, vec![x]).err(), Some(SubmitError::UnknownModel));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn streamed_submit_to_unknown_model_tombstones() {
+        struct Devnull;
+        impl StreamSink for Devnull {
+            fn put(&self, _slot: usize, _resp: InferResponse) {}
+        }
+        let def = zoo("mnist");
+        let q = QModel::quantize(&def, &Params::random(&def, 23));
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Dense, div: DivKind::Shift },
+            ServeConfig { workers: 1, ..Default::default() },
+        );
+        let ctl = RequestCtl::shared();
+        let err = coord.submit_streamed(
+            1,
+            5,
+            vec![vec![0.0; def.input_len()]],
+            Arc::clone(&ctl),
+            Arc::new(Devnull),
+        );
+        assert_eq!(err, Err(SubmitError::UnknownModel));
+        assert!(ctl.is_dead(), "failed submit must tombstone the request");
+        coord.shutdown();
+    }
+
+    #[test]
     fn streamed_submit_after_close_errors_instead_of_panicking() {
         use crate::coordinator::request::{InferResponse, RequestCtl, StreamSink};
         struct Devnull;
@@ -901,6 +1186,7 @@ mod tests {
         let ctl = RequestCtl::shared();
         let err = coord.submit_streamed(
             1,
+            0,
             vec![vec![0.0; def.input_len()]],
             Arc::clone(&ctl),
             Arc::new(Devnull),
@@ -1015,6 +1301,7 @@ mod tests {
         coord
             .submit_streamed(
                 1,
+                0,
                 vec![vec![0.2; def.input_len()]; 3],
                 Arc::clone(&ctl),
                 Arc::clone(&sink) as Arc<dyn StreamSink>,

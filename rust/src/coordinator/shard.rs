@@ -97,6 +97,7 @@ impl<T> ShardPool<T> {
         }
     }
 
+    /// Number of shards in the pool.
     pub fn n_shards(&self) -> usize {
         self.shards.len()
     }

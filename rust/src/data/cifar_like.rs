@@ -11,9 +11,13 @@ use super::{Dataset, Sizes, Split};
 use crate::data::synth::{add_noise, stamp_gauss, standardize};
 use crate::util::Rng;
 
+/// Input channels.
 pub const C: usize = 3;
+/// Input height.
 pub const H: usize = 32;
+/// Input width.
 pub const W: usize = 32;
+/// Number of classes.
 pub const CLASSES: usize = 10;
 
 struct Blob {
@@ -89,6 +93,7 @@ fn fill_split(split: &mut Split, n: usize, scenes: &[Scene], rng: &mut Rng) {
     }
 }
 
+/// Generate the dataset deterministically from `seed`.
 pub fn generate(seed: u64, sizes: Sizes) -> Dataset {
     let scenes: Vec<Scene> = (0..CLASSES).map(|c| class_scene(c, seed)).collect();
     let mut root = Rng::new(seed ^ 0xC1FA_7);

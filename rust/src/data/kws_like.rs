@@ -11,8 +11,11 @@ use super::{Dataset, Sizes, Split};
 use crate::data::synth::{add_noise, standardize};
 use crate::util::Rng;
 
+/// Spectrogram time frames.
 pub const H: usize = 124; // time frames
+/// Mel bins.
 pub const W: usize = 80; // mel bins
+/// Number of keyword classes.
 pub const CLASSES: usize = 12;
 
 struct Formant {
@@ -81,6 +84,7 @@ fn fill_split(split: &mut Split, n: usize, classes: &[Vec<Formant>], rng: &mut R
     }
 }
 
+/// Generate the dataset deterministically from `seed`.
 pub fn generate(seed: u64, sizes: Sizes) -> Dataset {
     let classes: Vec<Vec<Formant>> = (0..CLASSES).map(|c| class_formants(c, seed)).collect();
     let mut root = Rng::new(seed ^ 0x5EEC_7);

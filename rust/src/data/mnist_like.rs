@@ -11,8 +11,11 @@ use super::{Dataset, Sizes, Split};
 use crate::data::synth::{add_noise, draw_line, standardize};
 use crate::util::Rng;
 
+/// Input height.
 pub const H: usize = 28;
+/// Input width.
 pub const W: usize = 28;
+/// Number of classes.
 pub const CLASSES: usize = 10;
 
 struct Stroke {

@@ -24,24 +24,31 @@ pub mod widar_like;
 /// One split of samples, stored flat (n × C·H·W, row-major).
 #[derive(Debug, Clone)]
 pub struct Split {
+    /// Flat sample values, n × `sample_len`.
     pub x: Vec<f32>,
+    /// Labels, one per sample.
     pub y: Vec<usize>,
+    /// Values per sample (C·H·W).
     pub sample_len: usize,
 }
 
 impl Split {
+    /// Empty split for samples of `sample_len` values.
     pub fn new(sample_len: usize) -> Split {
         Split { x: Vec::new(), y: Vec::new(), sample_len }
     }
 
+    /// Number of samples.
     pub fn len(&self) -> usize {
         self.y.len()
     }
 
+    /// Whether the split has no samples.
     pub fn is_empty(&self) -> bool {
         self.y.is_empty()
     }
 
+    /// Append one sample (length-checked).
     pub fn push(&mut self, sample: &[f32], label: usize) {
         assert_eq!(sample.len(), self.sample_len);
         self.x.extend_from_slice(sample);
@@ -68,15 +75,22 @@ impl Split {
 /// A full dataset: three splits plus shape metadata.
 #[derive(Debug, Clone)]
 pub struct Dataset {
+    /// Dataset name.
     pub name: String,
+    /// Input shape as `[C, H, W]`.
     pub input_shape: [usize; 3],
+    /// Number of classes.
     pub classes: usize,
+    /// Training split.
     pub train: Split,
+    /// Calibration/validation split.
     pub val: Split,
+    /// Test split.
     pub test: Split,
 }
 
 impl Dataset {
+    /// Values per sample (C·H·W).
     pub fn sample_len(&self) -> usize {
         self.input_shape.iter().product()
     }
@@ -86,8 +100,11 @@ impl Dataset {
 /// single-core PJRT trainer converges in minutes).
 #[derive(Debug, Clone, Copy)]
 pub struct Sizes {
+    /// Training samples to generate.
     pub train: usize,
+    /// Validation samples to generate.
     pub val: usize,
+    /// Test samples to generate.
     pub test: usize,
 }
 

@@ -18,9 +18,13 @@ use super::{Dataset, Sizes, Split};
 use crate::data::synth::{add_noise, stamp_gauss, standardize};
 use crate::util::Rng;
 
+/// Input channels (CSI slices).
 pub const C: usize = 22; // channel slices
+/// Input height.
 pub const H: usize = 13;
+/// Input width.
 pub const W: usize = 13;
+/// Number of gesture classes.
 pub const CLASSES: usize = 6;
 
 /// Deployment environment (Table 2 contexts).
@@ -33,6 +37,7 @@ pub enum Room {
 }
 
 impl Room {
+    /// Lowercase room label.
     pub fn name(self) -> &'static str {
         match self {
             Room::Room1 => "room1",

@@ -50,6 +50,7 @@ pub enum PruneMode {
 
 /// Engine configuration.
 pub struct EngineConfig<'a> {
+    /// Pruning mechanism to run.
     pub mode: PruneMode,
     /// Division estimator for UnIT thresholds.
     pub div: &'a dyn DivApprox,
@@ -77,6 +78,7 @@ pub(crate) fn scaled_t(t_raw: u32, scale_q8: u32) -> u32 {
 }
 
 impl<'a> EngineConfig<'a> {
+    /// UnIT thresholding with the given division estimator.
     pub fn unit(div: &'a dyn DivApprox) -> EngineConfig<'a> {
         EngineConfig {
             mode: PruneMode::Unit,
@@ -87,14 +89,17 @@ impl<'a> EngineConfig<'a> {
         }
     }
 
+    /// Dense execution (no skipping).
     pub fn dense(div: &'a dyn DivApprox) -> EngineConfig<'a> {
         EngineConfig { mode: PruneMode::Dense, div, sonic_accumulators: true, precomputed_conv_thresholds: false, t_scale_q8: 256 }
     }
 
+    /// Skip on zero operands only.
     pub fn zero_skip(div: &'a dyn DivApprox) -> EngineConfig<'a> {
         EngineConfig { mode: PruneMode::ZeroSkip, div, sonic_accumulators: true, precomputed_conv_thresholds: false, t_scale_q8: 256 }
     }
 
+    /// Static (train-time-pruned) sparsity.
     pub fn static_sparse(div: &'a dyn DivApprox) -> EngineConfig<'a> {
         EngineConfig { mode: PruneMode::StaticSparse, div, sonic_accumulators: true, precomputed_conv_thresholds: false, t_scale_q8: 256 }
     }
@@ -116,10 +121,12 @@ pub struct InferOutput {
 }
 
 impl InferOutput {
+    /// Index of the largest logit.
     pub fn argmax(&self) -> usize {
         crate::util::stats::argmax(&self.logits)
     }
 
+    /// Fraction of all MACs skipped (0 when nothing ran).
     pub fn skip_fraction(&self) -> f64 {
         let k: u64 = self.kept.iter().sum();
         let s: u64 = self.skipped.iter().sum();

@@ -87,8 +87,10 @@ const AX_CEIL: u32 = 1 << 15;
 /// can price and pin the lane packing against its reference.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ConvInterior {
+    /// Lane-packed interior tables (the fast default).
     #[default]
     Lanes,
+    /// Plain per-tap reference loop over the same taps.
     Scalar,
 }
 
@@ -97,7 +99,9 @@ pub enum ConvInterior {
 /// passed by kind so the plan owns its estimator and stays `Send`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PlanConfig {
+    /// Pruning mechanism baked into the plan.
     pub mode: PruneMode,
+    /// Division estimator kind.
     pub div: DivKind,
     /// Model SONIC-style FRAM-resident accumulator traffic.
     pub sonic_accumulators: bool,
@@ -111,10 +115,12 @@ pub struct PlanConfig {
 }
 
 impl PlanConfig {
+    /// UnIT-mode config with defaults.
     pub fn unit(div: DivKind) -> PlanConfig {
         PlanConfig::for_mode(PruneMode::Unit, div)
     }
 
+    /// Config for any mechanism with defaults.
     pub fn for_mode(mode: PruneMode, div: DivKind) -> PlanConfig {
         PlanConfig {
             mode,
@@ -290,7 +296,9 @@ pub struct Scratch {
 
 /// A `QModel` compiled for fast host execution (see module docs).
 pub struct PlannedModel {
+    /// The model definition this plan executes.
     pub def: ModelDef,
+    /// The config the plan was compiled with.
     pub cfg: PlanConfig,
     div: Box<dyn DivApprox>,
     fat_t_raw: i16,
@@ -652,11 +660,13 @@ fn layer_static_macs(lp: &LayerPlan, mode: PruneMode) -> u64 {
 /// Plan handle + private scratch: the drop-in "compile once, infer
 /// many" front door used by workers and benches.
 pub struct PlanBacked {
+    /// The shared compiled plan.
     pub plan: Arc<PlannedModel>,
     scratch: Scratch,
 }
 
 impl PlanBacked {
+    /// Compile `q` and wrap it with fresh scratch.
     pub fn new(q: &QModel, cfg: PlanConfig) -> PlanBacked {
         let plan = Arc::new(PlannedModel::compile(q, cfg));
         PlanBacked::from_plan(plan)
@@ -669,10 +679,12 @@ impl PlanBacked {
         PlanBacked { plan, scratch }
     }
 
+    /// Run one raw Q8.8 sample through the plan.
     pub fn infer(&mut self, x_raw: &[i16]) -> InferOutput {
         self.plan.infer(x_raw, &mut self.scratch)
     }
 
+    /// Quantize an f32 sample to the plan's Q8.8 input domain.
     pub fn quantize_input(&self, x: &[f32]) -> Vec<i16> {
         self.plan.quantize_input(x)
     }

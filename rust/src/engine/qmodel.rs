@@ -38,7 +38,9 @@ pub struct QLayer {
 /// A fully quantized Table-1 model ready for the MCU engine.
 #[derive(Debug, Clone)]
 pub struct QModel {
+    /// The source model definition.
     pub def: ModelDef,
+    /// Quantized layers in execution order.
     pub layers: Vec<QLayer>,
     /// FATReLU cut-off in Q8.8 raw units (0 ⇒ plain ReLU).
     pub fat_t_raw: i16,

@@ -21,9 +21,13 @@ pub fn clamp_i16(v: i32) -> i16 {
 pub struct Q88(pub i16);
 
 impl Q88 {
+    /// 0.0.
     pub const ZERO: Q88 = Q88(0);
+    /// 1.0.
     pub const ONE: Q88 = Q88(Q_ONE as i16);
+    /// Largest representable value (≈ 127.996).
     pub const MAX: Q88 = Q88(i16::MAX);
+    /// Most negative representable value (−128.0).
     pub const MIN: Q88 = Q88(i16::MIN);
 
     /// Convert from f32 with rounding and saturation.
@@ -39,16 +43,19 @@ impl Q88 {
         }
     }
 
+    /// Convert to `f32`.
     #[inline]
     pub fn to_f32(self) -> f32 {
         self.0 as f32 / Q_ONE as f32
     }
 
+    /// The raw `i16` representation.
     #[inline]
     pub fn raw(self) -> i16 {
         self.0
     }
 
+    /// Absolute value of the raw representation (no overflow at `MIN`).
     #[inline]
     pub fn abs_raw(self) -> u32 {
         (self.0 as i32).unsigned_abs()

@@ -24,9 +24,12 @@
 //!   deadlines and cancellation ([`serve`]). Python never runs on the
 //!   request path.
 //!
-//! See `DESIGN.md` for the substitution ledger (paper testbed → simulated
-//! equivalent) and the experiment index, and `EXPERIMENTS.md` for
-//! paper-vs-measured results.
+//! See `PAPER.md` for the source paper's abstract, `docs/architecture.md`
+//! for a diagram-backed tour of the serving stack, `docs/wire-protocol.md`
+//! for the normative framed TCP protocol, and `docs/operations.md` for the
+//! operator's guide to `unit serve`.
+
+#![warn(missing_docs)]
 
 pub mod approx;
 pub mod blas;

@@ -10,6 +10,7 @@
 //! unit serve  --listen 127.0.0.1:0 --workers 4   # streamed TCP serving
 //! unit serve  --listen 127.0.0.1:0 --budget-mj 4.0 --park 16  # adaptive + parked admission
 //! unit serve  --listen 127.0.0.1:0 --chaos-seed 7   # deterministic fault injection (chaos)
+//! unit serve  --listen 127.0.0.1:0 --models mnist,kws --fleet-budget-mj 8  # multi-model fleet
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
@@ -18,9 +19,9 @@ use std::sync::Arc;
 use std::time::Duration;
 
 use unit_pruner::approx::DivKind;
-use unit_pruner::control::{calibrated_cache, Governor, ScaleGrid};
+use unit_pruner::control::{calibrated_cache, FleetScheduler, Governor, ScaleGrid};
 use unit_pruner::coordinator::{
-    BackendChoice, Coordinator, EnergyController, Placement, ServeConfig,
+    BackendChoice, Coordinator, EnergyController, ModelSpec, Placement, ServeConfig,
 };
 use unit_pruner::data::{by_name, Sizes};
 use unit_pruner::serve::{ServeOpts, Server, SessionCfg};
@@ -341,6 +342,12 @@ fn cmd_eval_adaptive(
 /// `unit serve`: burst mode (`--requests N`, the in-process demo) or
 /// streamed TCP mode (`--listen ADDR`, the production front door).
 fn cmd_serve(args: &Args) -> Result<()> {
+    // `--models A,B` switches to the multi-model fleet path (its own
+    // bootstrap: one plan cache + keep profile per model, a fleet
+    // scheduler instead of a governor).
+    if args.get("models").is_some() {
+        return cmd_serve_multi(args);
+    }
     let model = args.get_or("model", "mnist").to_string();
     let n_req = args.usize_or("requests", 64);
     let backend = args.get_or("backend", "mcu").to_string();
@@ -462,7 +469,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     if let Some(addr) = args.get("listen") {
-        return cmd_serve_listen(args, coord, governor, fault, addr);
+        return cmd_serve_listen(args, coord, governor, None, fault, addr);
     }
     let t0 = std::time::Instant::now();
     let rxs: Vec<_> = (0..n_req)
@@ -516,9 +523,116 @@ fn cmd_serve(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `unit serve --models A,B[,C…] [--fleet-budget-mj N] --listen ADDR`:
+/// one process hosting several zoo models behind a fleet-wide energy
+/// budget. Each model gets its own plan cache and calibrated keep
+/// profile; the [`FleetScheduler`] divides the budget across them by
+/// marginal keep-per-millijoule (see `control::scheduler`) and answers
+/// the per-tenant `SetBudget` caps and per-model `Stats` admin frames.
+/// Without `--fleet-budget-mj` the budget defaults to every model's
+/// 1.0x-scale energy summed — roomy, so the scheduler only bites once
+/// an admin tightens it.
+fn cmd_serve_multi(args: &Args) -> Result<()> {
+    let names: Vec<String> = args
+        .get("models")
+        .unwrap_or_default()
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if names.is_empty() {
+        eprintln!("serve: --models needs a comma-separated list (e.g. --models mnist,kws)");
+        std::process::exit(2);
+    }
+    let div = DivKind::parse(args.get_or("div", "shift")).expect("div kind");
+    let n_cal = args.usize_or("calib-samples", 8);
+    let mut specs = Vec::new();
+    let mut tenants = Vec::new();
+    for name in &names {
+        let def = zoo(name);
+        let ds = by_name(name, args.u64_or("seed", 42), Sizes::default());
+        // Same trained-weights-or-random-init fallback as single-model
+        // serve: the scheduling machinery is identical either way.
+        let params = match Runtime::cpu().and_then(|rt| {
+            let store = ArtifactStore::discover();
+            ensure_trained(&rt, &store, name, &ds, &TrainConfig::default())
+        }) {
+            Ok(p) => p,
+            Err(e) => {
+                eprintln!(
+                    "[serve] {name}: trained weights unavailable ({e}); using random init"
+                );
+                unit_pruner::models::Params::random(&def, args.u64_or("seed", 42))
+            }
+        };
+        let th = calibrate(&def, &params, &ds.val, &CalibConfig::default());
+        let q = QModel::quantize(&def, &params).with_thresholds(&th);
+        let cal: Vec<Vec<f32>> =
+            (0..ds.val.len().min(n_cal)).map(|i| ds.val.sample(i).to_vec()).collect();
+        eprintln!(
+            "[serve] {name}: calibrating keep-ratio curves over the scale grid \
+             ({} samples)…",
+            cal.len()
+        );
+        let (cache, profile) = calibrated_cache(
+            q.clone(),
+            PlanConfig::for_mode(PruneMode::Unit, div),
+            ScaleGrid::default_grid(),
+            &cal,
+        );
+        specs.push(ModelSpec { name: name.clone(), q, mode: PruneMode::Unit, div });
+        tenants.push((cache, profile));
+    }
+    let default_budget: f64 =
+        tenants.iter().map(|(c, p)| p.mean_mj(c.grid().snap_q8(256))).sum();
+    let flag_budget = args.f64_or("fleet-budget-mj", 0.0);
+    let fleet_budget = if flag_budget > 0.0 { flag_budget } else { default_budget };
+
+    let placement = match args.get_or("placement", "cost") {
+        "two-choice" | "count" => Placement::TwoChoice,
+        _ => Placement::CostWeighted,
+    };
+    let chaos_seed = args.u64_or("chaos-seed", 0);
+    let fault = (chaos_seed != 0).then(|| Arc::new(FaultPlan::new(chaos_seed)));
+    if let Some(f) = &fault {
+        eprintln!("[serve] chaos plan armed (seed {})", f.seed());
+    }
+    let coord = Coordinator::start_multi(
+        specs,
+        ServeConfig {
+            workers: args.usize_or("workers", 2),
+            max_batch: args.usize_or("max-batch", 8),
+            max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
+            placement,
+            fault: fault.clone(),
+        },
+    );
+    let sched = FleetScheduler::install(&coord, tenants, fleet_budget)
+        .map_err(|e| anyhow::anyhow!("fleet scheduler: {e}"))?;
+    for (i, name) in names.iter().enumerate() {
+        let st = sched.status(i as u32).expect("tenant status");
+        println!(
+            "[serve] model {i} ({name}): seeded at scale {:.2}x (step {}/{})",
+            st.scale_q8 as f64 / 256.0,
+            st.step,
+            st.steps_total
+        );
+    }
+    println!(
+        "[serve] fleet scheduler on: {} models, fleet budget {fleet_budget:.3} mJ{}",
+        names.len(),
+        if flag_budget > 0.0 { "" } else { " (defaulted: sum of 1.0x-scale energies)" }
+    );
+    let Some(addr) = args.get("listen") else {
+        eprintln!("serve: --models requires --listen (multi-model serving is TCP-only)");
+        std::process::exit(2);
+    };
+    cmd_serve_listen(args, coord, None, Some(sched), fault, addr)
+}
+
 /// `unit serve --listen ADDR [--window N] [--park P] [--park-bytes B]
 /// [--deadline-ms D] [--max-conns C] [--serve-secs S] [--stats-secs T]
-/// [--budget-mj B] [--chaos-seed S]`
+/// [--budget-mj B] [--chaos-seed S] [--models A,B --fleet-budget-mj N]`
 ///
 /// Streamed TCP serving: sessions with credit-window backpressure
 /// (window-overflow frames parked for credit-return admission when
@@ -533,6 +647,7 @@ fn cmd_serve_listen(
     args: &Args,
     coord: Coordinator,
     governor: Option<Arc<Governor>>,
+    scheduler: Option<Arc<FleetScheduler>>,
     fault: Option<Arc<FaultPlan>>,
     addr: &str,
 ) -> Result<()> {
@@ -550,6 +665,7 @@ fn cmd_serve_listen(
             ..Default::default()
         },
         governor: governor.clone(),
+        scheduler: scheduler.clone(),
         fault,
     };
     let metrics = std::sync::Arc::clone(&coord.metrics);
@@ -603,10 +719,34 @@ fn cmd_serve_listen(
                 }
                 None => String::new(),
             };
+            let fleet_str = match &scheduler {
+                Some(sched) => {
+                    let fs = sched.fleet_status();
+                    let parts: Vec<String> = (0..fs.models as u32)
+                        .filter_map(|i| sched.status(i))
+                        .map(|m| {
+                            format!(
+                                "{}:{}/{}@{:.2}x",
+                                m.name,
+                                m.step,
+                                m.steps_total,
+                                m.scale_q8 as f64 / 256.0
+                            )
+                        })
+                        .collect();
+                    format!(
+                        " fleet={:.3}mJ resolves={} models=[{}]",
+                        fs.fleet_budget_mj,
+                        fs.resolves,
+                        parts.join(",")
+                    )
+                }
+                None => String::new(),
+            };
             println!(
                 "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
                  failed={} panics={} respawns={} parked={} sessions={}/{} \
-                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}",
+                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}{fleet_str}",
                 s.served,
                 s.inflight,
                 s.rejected,

@@ -55,6 +55,7 @@ pub struct IntermittentRun {
 
 /// Simulator: executes tasks sequentially under the harvest profile.
 pub struct IntermittentSim {
+    /// The energy-harvest profile driving the run.
     pub profile: HarvestProfile,
     /// FRAM words committed per task boundary (SONIC writes the loop
     /// index + dirty buffer words; we charge a fixed small state block).
@@ -63,6 +64,7 @@ pub struct IntermittentSim {
 }
 
 impl IntermittentSim {
+    /// Simulator with the default checkpoint state block.
     pub fn new(profile: HarvestProfile, seed: u64) -> Self {
         IntermittentSim { profile, checkpoint_state_words: 16, rng: Rng::new(seed) }
     }

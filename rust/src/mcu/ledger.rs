@@ -29,10 +29,12 @@ pub struct OpCounts {
 }
 
 impl OpCounts {
+    /// Executed plus skipped MACs.
     pub fn total_connections(&self) -> u64 {
         self.macs + self.skipped
     }
 
+    /// Fraction of connections skipped (0 when none ran).
     pub fn skip_fraction(&self) -> f64 {
         let total = self.total_connections();
         if total == 0 {
@@ -46,6 +48,7 @@ impl OpCounts {
 /// Accumulating execution ledger (cycles + op counts).
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct Ledger {
+    /// Operation counts.
     pub counts: OpCounts,
     /// Compute cycles (CPU arithmetic + control).
     pub compute_cycles: u64,
@@ -55,6 +58,7 @@ pub struct Ledger {
 }
 
 impl Ledger {
+    /// Fresh zeroed ledger.
     pub fn new() -> Ledger {
         Ledger::default()
     }
@@ -90,12 +94,14 @@ impl Ledger {
         self.compute_cycles += n * cost::MAC;
     }
 
+    /// Charge `n` threshold comparisons.
     #[inline(always)]
     pub fn compare_n(&mut self, n: u64) {
         self.counts.compares += n;
         self.compute_cycles += n * cost::CMP_BRANCH;
     }
 
+    /// Count `n` skipped MACs (no cycles — the skip is the saving).
     #[inline(always)]
     pub fn skip_n(&mut self, n: u64) {
         self.counts.skipped += n;
@@ -145,6 +151,7 @@ impl Ledger {
         self.mem_cycles += words * super::fram::WRITE_CYCLES;
     }
 
+    /// Compute plus memory cycles.
     pub fn total_cycles(&self) -> u64 {
         self.compute_cycles + self.mem_cycles
     }

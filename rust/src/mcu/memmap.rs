@@ -18,13 +18,16 @@ pub const RUNTIME_RESERVED: usize = 24 * 1024;
 /// One named section of the deployment image.
 #[derive(Debug, Clone)]
 pub struct Section {
+    /// Section label.
     pub name: String,
+    /// Section size in bytes.
     pub bytes: usize,
 }
 
 /// A planned memory map.
 #[derive(Debug, Clone)]
 pub struct MemMap {
+    /// Sections in layout order.
     pub sections: Vec<Section>,
 }
 
@@ -69,14 +72,17 @@ impl MemMap {
         MemMap { sections }
     }
 
+    /// Total planned bytes.
     pub fn total(&self) -> usize {
         self.sections.iter().map(|s| s.bytes).sum()
     }
 
+    /// Whether the plan fits MSP430FR5994 FRAM.
     pub fn fits(&self) -> bool {
         self.total() <= FRAM_BYTES
     }
 
+    /// FRAM bytes to spare (negative = over).
     pub fn headroom(&self) -> isize {
         FRAM_BYTES as isize - self.total() as isize
     }

@@ -18,9 +18,13 @@ use anyhow::{bail, Context, Result};
 /// parameter order and shapes.
 #[derive(Debug, Clone)]
 pub struct Manifest {
+    /// Model name.
     pub model: String,
+    /// Input shape as `[C, H, W]`.
     pub input_shape: [usize; 3],
+    /// Output classes.
     pub classes: usize,
+    /// Number of prunable layers.
     pub prunable: usize,
     /// `(name, shape)` in HLO parameter order.
     pub params: Vec<(String, Vec<usize>)>,
@@ -29,6 +33,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Parse manifest text.
     pub fn parse(text: &str) -> Result<Manifest> {
         let mut model = None;
         let mut input_shape = None;
@@ -82,6 +87,7 @@ impl Manifest {
         })
     }
 
+    /// Read and parse a manifest file.
     pub fn load(path: &std::path::Path) -> Result<Manifest> {
         let text =
             std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;

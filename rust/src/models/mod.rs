@@ -12,13 +12,18 @@ use crate::nn::Layer;
 /// A sequential Table-1 model definition.
 #[derive(Debug, Clone)]
 pub struct ModelDef {
+    /// Zoo name (`mnist`, `cifar`, `kws`, `widar`).
     pub name: String,
+    /// Input shape as `[C, H, W]`.
     pub input_shape: [usize; 3],
+    /// Output classes.
     pub classes: usize,
+    /// Layers in execution order.
     pub layers: Vec<Layer>,
 }
 
 impl ModelDef {
+    /// Flattened input length (C·H·W).
     pub fn input_len(&self) -> usize {
         self.input_shape.iter().product()
     }
@@ -36,6 +41,7 @@ impl ModelDef {
             .collect()
     }
 
+    /// Dense MACs summed over all layers.
     pub fn total_dense_macs(&self) -> u64 {
         self.dense_macs().iter().sum()
     }
@@ -103,6 +109,7 @@ pub fn zoo(name: &str) -> ModelDef {
     }
 }
 
+/// The four Table-1 zoo model names.
 pub const MODEL_NAMES: [&str; 4] = ["mnist", "cifar", "kws", "widar"];
 
 #[cfg(test)]

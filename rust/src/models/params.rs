@@ -14,7 +14,9 @@ use std::path::Path;
 /// conv `O×I×KH×KW`, linear `N_in×N_out`).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Params {
+    /// Per-layer flat weights.
     pub weights: Vec<Vec<f32>>,
+    /// Per-layer biases.
     pub biases: Vec<Vec<f32>>,
 }
 
@@ -78,6 +80,7 @@ impl Params {
         Ok(Params { weights, biases })
     }
 
+    /// Write the binary weights format (creates parent dirs).
     pub fn save(&self, path: &Path) -> Result<()> {
         if let Some(dir) = path.parent() {
             std::fs::create_dir_all(dir)?;
@@ -99,6 +102,7 @@ impl Params {
         Ok(())
     }
 
+    /// Read the binary weights format.
     pub fn load(path: &Path) -> Result<Params> {
         let mut f = std::io::BufReader::new(
             std::fs::File::open(path).with_context(|| format!("opening {path:?}"))?,

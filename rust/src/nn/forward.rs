@@ -30,10 +30,12 @@ pub struct ForwardOpts {
 }
 
 impl ForwardOpts {
+    /// Dense numerics: zero thresholds, plain ReLU.
     pub fn dense(n_layers: usize) -> ForwardOpts {
         ForwardOpts { t_vec: vec![0.0; n_layers], fat_t: 0.0 }
     }
 
+    /// UnIT thresholds, plain ReLU.
     pub fn unit(t_vec: Vec<f32>) -> ForwardOpts {
         ForwardOpts { t_vec, fat_t: 0.0 }
     }
@@ -42,19 +44,24 @@ impl ForwardOpts {
 /// Per-layer kept/skipped MAC counts for one forward pass.
 #[derive(Debug, Clone, Default)]
 pub struct ForwardStats {
+    /// Kept MACs per layer.
     pub kept: Vec<u64>,
+    /// Skipped MACs per layer.
     pub skipped: Vec<u64>,
 }
 
 impl ForwardStats {
+    /// Kept MACs summed over layers.
     pub fn total_kept(&self) -> u64 {
         self.kept.iter().sum()
     }
 
+    /// Skipped MACs summed over layers.
     pub fn total_skipped(&self) -> u64 {
         self.skipped.iter().sum()
     }
 
+    /// Fraction of all MACs skipped (0 when nothing ran).
     pub fn skip_fraction(&self) -> f64 {
         let total = self.total_kept() + self.total_skipped();
         if total == 0 {
@@ -64,6 +71,7 @@ impl ForwardStats {
         }
     }
 
+    /// Accumulate another pass's counts into this one.
     pub fn merge(&mut self, other: &ForwardStats) {
         if self.kept.is_empty() {
             self.kept = vec![0; other.kept.len()];

@@ -36,6 +36,7 @@ impl Layer {
         }
     }
 
+    /// Whether this layer is a convolution.
     pub fn is_conv(&self) -> bool {
         matches!(self, Layer::Conv { .. })
     }

@@ -116,6 +116,7 @@ fn conv_wbar(w: &[f32], t: f32) -> Vec<f32> {
 }
 
 impl FloatPlan {
+    /// Compile per-layer magnitude-sorted tables for prefix keep-set lookup.
     pub fn compile(def: &ModelDef, params: &Params, opts: &ForwardOpts) -> FloatPlan {
         assert_eq!(opts.t_vec.len(), def.layers.len(), "t_vec arity");
         let input_len = def.input_len();

@@ -26,10 +26,12 @@ pub struct Thresholds {
 }
 
 impl Thresholds {
+    /// One identical threshold per layer (no group refinement).
     pub fn uniform(n_layers: usize, t: f32) -> Thresholds {
         Thresholds { per_layer: vec![t; n_layers], groups: vec![Vec::new(); n_layers] }
     }
 
+    /// All-zero thresholds (dense numerics).
     pub fn zero(n_layers: usize) -> Thresholds {
         Self::uniform(n_layers, 0.0)
     }

@@ -12,18 +12,24 @@ use std::path::Path;
 /// One engine-throughput measurement (per mode × backend).
 #[derive(Debug, Clone)]
 pub struct EngineRow {
+    /// Pruning mode label.
     pub mode: String,
     /// `"naive"` (reference loops) or `"planned"` (prepacked plans).
     pub backend: String,
+    /// Inferences per second.
     pub inf_per_s: f64,
+    /// Millions of connections (MACs + skips) per second.
     pub mconn_per_s: f64,
+    /// Microseconds per inference.
     pub us_per_inf: f64,
 }
 
 /// One division-estimator measurement.
 #[derive(Debug, Clone)]
 pub struct DivRow {
+    /// Estimator name.
     pub name: String,
+    /// Nanoseconds per division.
     pub ns_per_op: f64,
 }
 
@@ -33,20 +39,30 @@ pub struct DivRow {
 /// percentiles blow up, service stays flat).
 #[derive(Debug, Clone, Default)]
 pub struct CoordRow {
+    /// Worker threads used.
     pub workers: usize,
+    /// Completed requests per second.
     pub req_per_s: f64,
+    /// Median total latency (µs).
     pub p50_us: u64,
+    /// 99th-percentile total latency (µs).
     pub p99_us: u64,
+    /// Median queue wait (µs).
     pub queue_p50_us: u64,
+    /// 99th-percentile queue wait (µs).
     pub queue_p99_us: u64,
+    /// Median service time (µs).
     pub service_p50_us: u64,
+    /// 99th-percentile service time (µs).
     pub service_p99_us: u64,
 }
 
 /// One batched-eval measurement.
 #[derive(Debug, Clone)]
 pub struct EvalRow {
+    /// Measurement label.
     pub label: String,
+    /// Samples evaluated per second.
     pub samples_per_s: f64,
 }
 
@@ -55,20 +71,27 @@ pub struct EvalRow {
 /// swap, background miss→upgrade.
 #[derive(Debug, Clone)]
 pub struct CompileRow {
+    /// Tier label (`full`, `stamp`, `hit`, …).
     pub label: String,
+    /// Microseconds per operation.
     pub us: f64,
 }
 
 /// The full perf snapshot emitted by `perf_hotpath`.
 #[derive(Debug, Clone, Default)]
 pub struct BenchPerf {
+    /// Model the snapshot was taken on.
     pub model: String,
+    /// Engine-throughput rows.
     pub engine: Vec<EngineRow>,
     /// Planned-vs-naive throughput ratios per mode (plus the
     /// lane-vs-scalar conv interior ratio, key `conv-lane`).
     pub speedups: Vec<(String, f64)>,
+    /// Division-estimator rows.
     pub divs: Vec<DivRow>,
+    /// Coordinator round-trip rows.
     pub coord: Vec<CoordRow>,
+    /// Batched-eval rows.
     pub eval: Vec<EvalRow>,
     /// Plan-compile latency tiers (section `plan_compile_us`).
     pub compile: Vec<CompileRow>,
@@ -87,6 +110,7 @@ fn num(x: f64) -> String {
 }
 
 impl BenchPerf {
+    /// Serialize the snapshot as pretty-printed JSON.
     pub fn to_json(&self) -> String {
         let mut out = String::from("{\n");
         out.push_str(&format!("  \"model\": \"{}\",\n", esc(&self.model)));

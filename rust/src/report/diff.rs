@@ -26,15 +26,22 @@ use super::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow};
 /// Minimal JSON value (everything `BENCH_perf.json` needs).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// JSON `null`.
     Null,
+    /// Boolean.
     Bool(bool),
+    /// Number (all numerics are `f64`).
     Num(f64),
+    /// String.
     Str(String),
+    /// Array.
     Arr(Vec<Json>),
+    /// Object (ordered key→value pairs).
     Obj(Vec<(String, Json)>),
 }
 
 impl Json {
+    /// Object field lookup (`None` on non-objects).
     pub fn get(&self, key: &str) -> Option<&Json> {
         match self {
             Json::Obj(fields) => fields.iter().find(|(k, _)| k == key).map(|(_, v)| v),
@@ -42,6 +49,7 @@ impl Json {
         }
     }
 
+    /// The number, if this is `Num`.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -49,6 +57,7 @@ impl Json {
         }
     }
 
+    /// The string, if this is `Str`.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -56,6 +65,7 @@ impl Json {
         }
     }
 
+    /// The items, if this is `Arr` (empty otherwise).
     pub fn as_arr(&self) -> &[Json] {
         match self {
             Json::Arr(items) => items,
@@ -308,8 +318,11 @@ pub struct DiffRow {
     pub section: &'static str,
     /// Row key inside the section (e.g. `unit/planned`, `workers=4`).
     pub key: String,
+    /// Metric name within the row.
     pub metric: &'static str,
+    /// Baseline value.
     pub old: f64,
+    /// Current value.
     pub new: f64,
     /// Relative change in %, oriented so negative is always *worse*.
     pub delta_pct: f64,
@@ -318,6 +331,7 @@ pub struct DiffRow {
 }
 
 impl DiffRow {
+    /// Whether this gated row got worse by more than the tolerance.
     pub fn regressed(&self, tolerance_pct: f64) -> bool {
         self.gated && self.delta_pct < -tolerance_pct
     }
@@ -326,7 +340,9 @@ impl DiffRow {
 /// The matched delta table plus the gate verdict inputs.
 #[derive(Debug, Clone)]
 pub struct DiffReport {
+    /// All matched rows.
     pub rows: Vec<DiffRow>,
+    /// Gate tolerance in percent.
     pub tolerance_pct: f64,
 }
 

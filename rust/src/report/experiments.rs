@@ -30,6 +30,7 @@ use crate::train::{ensure_trained, evaluate_float_plan, evaluate_quant_parallel,
 /// Mechanism sweep options.
 #[derive(Debug, Clone)]
 pub struct MechOpts {
+    /// Division estimator for the UnIT threshold check.
     pub div: DivKind,
     /// Global magnitude sparsity for the TTP baseline.
     pub ttp_sparsity: f64,
@@ -45,7 +46,9 @@ pub struct MechOpts {
     /// result is bit-identical for any value — see
     /// [`crate::train::evaluate_quant_parallel`].
     pub threads: usize,
+    /// Dataset/weights seed.
     pub seed: u64,
+    /// Training steps when weights must be trained.
     pub train_steps: usize,
 }
 
@@ -68,12 +71,19 @@ impl Default for MechOpts {
 
 /// A trained, calibrated model bundle ready for mechanism evaluation.
 pub struct Prepared {
+    /// The model definition.
     pub def: ModelDef,
+    /// The generated dataset.
     pub ds: Dataset,
+    /// Trained parameters.
     pub params: Params,
+    /// TTP-pruned parameters.
     pub params_ttp: Params,
+    /// Calibrated UnIT thresholds.
     pub thresholds: Thresholds,
+    /// Thresholds calibrated on the TTP weights.
     pub thresholds_ttp: Thresholds,
+    /// Calibrated FATReLU cut-off.
     pub fat_t: f32,
 }
 

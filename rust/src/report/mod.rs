@@ -12,13 +12,21 @@ use crate::util::table::{f, pct, Table};
 /// One mechanism's result on one dataset (the Fig. 5/6/7 row unit).
 #[derive(Debug, Clone)]
 pub struct MechanismResult {
+    /// Mechanism label (`unit`, `dense`, …).
     pub mechanism: String,
+    /// Top-1 accuracy on the evaluated split.
     pub accuracy: f64,
+    /// Macro-averaged F1.
     pub macro_f1: f64,
+    /// Fraction of MACs skipped.
     pub mac_skipped: f64,
+    /// Modeled MCU seconds per sample (compute + data).
     pub mcu_secs: f64,
+    /// Compute-cycle share of `mcu_secs`.
     pub compute_secs: f64,
+    /// Memory-traffic share of `mcu_secs`.
     pub data_secs: f64,
+    /// Modeled energy per sample (mJ).
     pub energy_mj: f64,
 }
 

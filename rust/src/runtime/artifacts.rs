@@ -15,6 +15,7 @@ use crate::models::Manifest;
 
 /// Resolves artifact paths and loads executables with the right shapes.
 pub struct ArtifactStore {
+    /// Artifact root directory.
     pub dir: PathBuf,
 }
 
@@ -34,14 +35,17 @@ impl ArtifactStore {
         ArtifactStore { dir: PathBuf::from("artifacts") }
     }
 
+    /// Load `{model}_manifest.txt` from the store.
     pub fn manifest(&self, model: &str) -> Result<Manifest> {
         Manifest::load(&self.dir.join(format!("{model}_manifest.txt")))
     }
 
+    /// Path of the model's trained-weights binary.
     pub fn weights_path(&self, model: &str) -> PathBuf {
         self.dir.join("weights").join(format!("{model}.bin"))
     }
 
+    /// Path of a named HLO text artifact.
     pub fn hlo_path(&self, name: &str) -> PathBuf {
         self.dir.join(format!("{name}.hlo.txt"))
     }

@@ -41,6 +41,7 @@ mod imp {
             Ok(Runtime { client })
         }
 
+        /// PJRT platform name (e.g. `"cpu"`).
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -114,6 +115,7 @@ mod imp {
     }
 
     impl Runtime {
+        /// Stub: always fails — built without the `xla` feature.
         pub fn cpu() -> Result<Runtime> {
             bail!(
                 "PJRT unavailable: unit_pruner was built without the `xla` \
@@ -122,16 +124,19 @@ mod imp {
             )
         }
 
+        /// Stub platform name (`"stub"`).
         pub fn platform(&self) -> String {
             "stub".to_string()
         }
 
+        /// Stub: always fails — built without the `xla` feature.
         pub fn load_hlo(&self, _path: &Path, _arg_shapes: Vec<Vec<usize>>) -> Result<Executable> {
             bail!("PJRT unavailable: built without the `xla` feature")
         }
     }
 
     impl Executable {
+        /// Stub: always fails — built without the `xla` feature.
         pub fn run_f32(&self, _args: &[&[f32]]) -> Result<Vec<Vec<f32>>> {
             bail!("PJRT unavailable: built without the `xla` feature")
         }

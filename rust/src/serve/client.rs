@@ -25,13 +25,21 @@ use crate::util::Rng;
 /// (`slot == WHOLE_REQUEST`).
 #[derive(Debug, Clone)]
 pub struct WireResponse {
+    /// The request id this event answers.
     pub id: u64,
+    /// Sample index inside the request, or `WHOLE_REQUEST`.
     pub slot: u32,
+    /// Outcome for this slot (or the whole request).
     pub status: Status,
+    /// Argmax class of the logits (0 on non-`Ok` statuses).
     pub predicted: u16,
+    /// Microseconds the sample waited in a shard queue.
     pub queue_us: u32,
+    /// Microseconds the worker spent computing the sample.
     pub service_us: u32,
+    /// Fraction of MACs the pruned plan skipped for this sample.
     pub mac_skipped: f32,
+    /// The raw logits (empty on non-`Ok` statuses).
     pub logits: Vec<f32>,
 }
 
@@ -41,18 +49,27 @@ struct Pending {
     remaining: usize,
 }
 
-/// The adaptive governor's state as answered to a `SetBudget` frame.
-/// `scale_q8 == 0` means the server runs no adaptive control plane.
+/// The adaptive control plane's state as answered to a `SetBudget`
+/// frame. `scale_q8 == 0` means the server runs no adaptive control.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AdminStats {
+    /// Active threshold scale in Q8.8 (256 = 1.0; 0 = not adaptive).
     pub scale_q8: u32,
+    /// Active scale-grid step for the reported model.
     pub step: u32,
+    /// The scale grid's total step count.
     pub steps_total: u32,
+    /// The reported model's energy budget (mJ/inference).
     pub budget_mj: f64,
+    /// EWMA of observed per-request energy (mJ).
     pub ewma_mj: f64,
+    /// Calibrated whole-model keep ratio at the active step.
     pub keep_ratio: f32,
+    /// Plan-cache hits since control-plane install.
     pub cache_hits: u64,
+    /// Plan-cache misses (inline compiles) since install.
     pub cache_misses: u64,
+    /// Plan swaps since install (inline + background upgrades).
     pub swaps: u64,
     /// Background compiles queued or in flight on the governor's
     /// compile thread (gauge).
@@ -69,6 +86,13 @@ pub struct AdminStats {
     pub drift_trips: u64,
     /// Live profile re-measurements completed after drift trips.
     pub recalibrations: u64,
+    /// Which model this report covers (v4; 0 from a v3 server).
+    pub model: u32,
+    /// Models hosted by the server (v4; 0 from a v3 server).
+    pub models_loaded: u32,
+    /// Fleet-wide energy budget being divided by the scheduler (v4; 0
+    /// without a scheduler).
+    pub fleet_budget_mj: f64,
 }
 
 impl AdminStats {
@@ -143,21 +167,44 @@ impl Client {
         self.next_id.fetch_add(1, Ordering::Relaxed)
     }
 
-    /// Submit one sample. The receiver yields exactly one event: the
-    /// `Ok` result, or a request-level status (rejected/expired/…).
+    /// Submit one sample to model `0` (the single-model default). The
+    /// receiver yields exactly one event: the `Ok` result, or a
+    /// request-level status (rejected/expired/…).
     pub fn submit(
         &self,
         x: &[f32],
         deadline: Option<Duration>,
     ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
-        self.submit_payload(Payload::F32(x.to_vec()), x.len(), deadline)
+        self.submit_payload(Payload::F32(x.to_vec()), x.len(), 0, deadline)
     }
 
-    /// Submit a batch (`xs` must share one length; ragged batches are
-    /// rejected with `InvalidInput`). The receiver streams one event
-    /// per sample in slot order, or a single request-level status.
+    /// Submit one sample addressed to a specific model on a
+    /// multi-model server (wire v4).
+    pub fn submit_to(
+        &self,
+        model: u32,
+        x: &[f32],
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        self.submit_payload(Payload::F32(x.to_vec()), x.len(), model, deadline)
+    }
+
+    /// Submit a batch to model `0` (`xs` must share one length; ragged
+    /// batches are rejected with `InvalidInput`). The receiver streams
+    /// one event per sample in slot order, or a single request-level
+    /// status.
     pub fn submit_batch(
         &self,
+        xs: &[Vec<f32>],
+        deadline: Option<Duration>,
+    ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
+        self.submit_batch_to(0, xs, deadline)
+    }
+
+    /// Submit a batch addressed to a specific model (wire v4).
+    pub fn submit_batch_to(
+        &self,
+        model: u32,
         xs: &[Vec<f32>],
         deadline: Option<Duration>,
     ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
@@ -169,24 +216,25 @@ impl Client {
             ));
         }
         let flat: Vec<f32> = xs.iter().flat_map(|x| x.iter().copied()).collect();
-        self.submit_payload(Payload::F32(flat), sample_len, deadline)
+        self.submit_payload(Payload::F32(flat), sample_len, model, deadline)
     }
 
-    /// Submit pre-quantized i8 samples (`v / 127.0` dequantization
-    /// server-side) — the compact transport.
+    /// Submit pre-quantized i8 samples to model `0` (`v / 127.0`
+    /// dequantization server-side) — the compact transport.
     pub fn submit_i8(
         &self,
         flat: &[i8],
         sample_len: usize,
         deadline: Option<Duration>,
     ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
-        self.submit_payload(Payload::I8(flat.to_vec()), sample_len, deadline)
+        self.submit_payload(Payload::I8(flat.to_vec()), sample_len, 0, deadline)
     }
 
     fn submit_payload(
         &self,
         data: Payload,
         sample_len: usize,
+        model: u32,
         deadline: Option<Duration>,
     ) -> std::io::Result<(u64, Receiver<WireResponse>)> {
         // Catch ragged or oversized input here with an Err: an
@@ -199,9 +247,9 @@ impl Client {
                 format!("{} values do not split into samples of {sample_len}", data.len()),
             ));
         }
-        // Header (16) + request fields (12) + data + CRC (4) must fit
+        // Header (16) + request fields (16) + data + CRC (4) must fit
         // the decoder's MAX_FRAME_LEN; split bigger batches.
-        let frame_len = wire::HEADER_LEN + 12 + data.byte_len() + 4;
+        let frame_len = wire::HEADER_LEN + 16 + data.byte_len() + 4;
         if frame_len > wire::MAX_FRAME_LEN {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidInput,
@@ -234,7 +282,7 @@ impl Client {
             ));
         }
         let deadline_ms = deadline.map_or(0, |d| d.as_millis().min(u32::MAX as u128) as u32);
-        let frame = Frame::Request { id, deadline_ms, sample_len: sample_len as u32, data };
+        let frame = Frame::Request { id, deadline_ms, sample_len: sample_len as u32, model, data };
         if let Err(e) = self.send(&frame) {
             self.shared.pending.lock().unwrap().remove(&id);
             return Err(e);
@@ -256,24 +304,47 @@ impl Client {
         r
     }
 
-    /// Admin: set the server's adaptive energy budget (mJ/inference)
-    /// and return the governor's resulting state. Check
+    /// Admin: set the server's fleet-wide energy budget (mJ/inference)
+    /// and return the control plane's resulting state. Check
     /// [`AdminStats::adaptive`] on the answer — a server without a
-    /// governor answers with the disabled shape instead of an error.
+    /// governor or scheduler answers with the disabled shape instead of
+    /// an error.
     pub fn set_budget(&self, budget_mj: f64, timeout: Duration) -> std::io::Result<AdminStats> {
-        self.admin_roundtrip(budget_mj, timeout)
+        self.admin_roundtrip(budget_mj, wire::FLEET_MODEL, timeout)
     }
 
-    /// Admin: query the governor's state without changing the budget.
+    /// Admin: cap one tenant's budget on a multi-model server (wire
+    /// v4). The reply reports that model's allocation.
+    pub fn set_model_budget(
+        &self,
+        model: u32,
+        budget_mj: f64,
+        timeout: Duration,
+    ) -> std::io::Result<AdminStats> {
+        self.admin_roundtrip(budget_mj, model, timeout)
+    }
+
+    /// Admin: query the control plane's state without changing any
+    /// budget.
     pub fn query_stats(&self, timeout: Duration) -> std::io::Result<AdminStats> {
-        self.admin_roundtrip(0.0, timeout)
+        self.admin_roundtrip(0.0, wire::FLEET_MODEL, timeout)
     }
 
-    fn admin_roundtrip(&self, budget_mj: f64, timeout: Duration) -> std::io::Result<AdminStats> {
+    /// Admin: query one model's allocation on a multi-model server.
+    pub fn query_model_stats(&self, model: u32, timeout: Duration) -> std::io::Result<AdminStats> {
+        self.admin_roundtrip(0.0, model, timeout)
+    }
+
+    fn admin_roundtrip(
+        &self,
+        budget_mj: f64,
+        model: u32,
+        timeout: Duration,
+    ) -> std::io::Result<AdminStats> {
         let id = self.fresh_id();
         let (tx, rx) = channel();
         self.shared.stats.lock().unwrap().insert(id, tx);
-        if let Err(e) = self.send(&Frame::SetBudget { id, budget_mj }) {
+        if let Err(e) = self.send(&Frame::SetBudget { id, budget_mj, model }) {
             self.shared.stats.lock().unwrap().remove(&id);
             return Err(e);
         }
@@ -422,6 +493,9 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
             respawns,
             drift_trips,
             recalibrations,
+            model,
+            models_loaded,
+            fleet_budget_mj,
         } => {
             if let Some(tx) = shared.stats.lock().unwrap().remove(&id) {
                 let _ = tx.send(AdminStats {
@@ -441,6 +515,9 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
                     respawns,
                     drift_trips,
                     recalibrations,
+                    model,
+                    models_loaded,
+                    fleet_budget_mj,
                 });
             }
         }
@@ -460,6 +537,21 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
 // Retrying client
 
 /// Retry policy for [`RetryClient`].
+///
+/// The default is 8 attempts with 25 ms base backoff doubling to a
+/// 1 s ceiling; tune fields from the default rather than building the
+/// struct from scratch:
+///
+/// ```
+/// use std::time::Duration;
+/// use unit_pruner::serve::RetryCfg;
+///
+/// let cfg = RetryCfg { max_attempts: 3, ..RetryCfg::default() };
+/// assert_eq!(cfg.max_attempts, 3);
+/// assert_eq!(cfg.base_backoff, Duration::from_millis(25));
+/// assert_eq!(cfg.max_backoff, Duration::from_secs(1));
+/// assert_eq!(cfg.seed, 1); // fixed jitter seed: chaos runs replay
+/// ```
 #[derive(Debug, Clone, Copy)]
 pub struct RetryCfg {
     /// Total submission attempts per request (first try included).

@@ -30,7 +30,7 @@ use std::time::Duration;
 
 use super::session::{spawn_session, Reaper, SessionCfg, SessionHandle};
 use super::wire::{self, Frame};
-use crate::control::Governor;
+use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::{Coordinator, Metrics};
 use crate::util::FaultPlan;
 
@@ -40,6 +40,7 @@ pub struct ServeOpts {
     /// Max simultaneous sessions; extra connections get a `Goodbye`
     /// frame and are closed immediately.
     pub max_conns: usize,
+    /// Per-session configuration.
     pub session: SessionCfg,
     /// Adaptive control plane, when the server runs one (built with
     /// `Governor::install` on the same coordinator *before* the server
@@ -47,6 +48,12 @@ pub struct ServeOpts {
     /// through it; `None` answers them with the "adaptive control
     /// disabled" Stats shape.
     pub governor: Option<Arc<Governor>>,
+    /// Multi-model control plane, when the server hosts several models
+    /// under one fleet budget (built with `FleetScheduler::install` on
+    /// the same coordinator before the server starts). Mutually
+    /// exclusive with `governor` in practice; when both are set the
+    /// scheduler answers the admin frames.
+    pub scheduler: Option<Arc<FleetScheduler>>,
     /// Deterministic fault-injection plan for chaos runs: sessions
     /// draw reply delays, frame corruption, and read stalls from it.
     /// Share the same `Arc` with `ServeConfig::fault` to also inject
@@ -56,7 +63,13 @@ pub struct ServeOpts {
 
 impl Default for ServeOpts {
     fn default() -> ServeOpts {
-        ServeOpts { max_conns: 64, session: SessionCfg::default(), governor: None, fault: None }
+        ServeOpts {
+            max_conns: 64,
+            session: SessionCfg::default(),
+            governor: None,
+            scheduler: None,
+            fault: None,
+        }
     }
 }
 
@@ -91,12 +104,13 @@ impl Server {
         let t_reaper = Arc::clone(&reaper);
         let session_cfg = opts.session.clone();
         let governor = opts.governor.clone();
+        let scheduler = opts.scheduler.clone();
         let fault = opts.fault.clone();
         let max_conns = opts.max_conns.max(1);
         let accept_handle = std::thread::spawn(move || {
             accept_loop(
                 listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, governor,
-                fault, max_conns,
+                scheduler, fault, max_conns,
             )
         });
 
@@ -122,6 +136,7 @@ impl Server {
         &self.coord
     }
 
+    /// The coordinator's metrics registry (shared with every session).
     pub fn metrics(&self) -> Arc<Metrics> {
         Arc::clone(&self.coord.metrics)
     }
@@ -177,6 +192,7 @@ fn accept_loop(
     reaper: Arc<Reaper>,
     session_cfg: SessionCfg,
     governor: Option<Arc<Governor>>,
+    scheduler: Option<Arc<FleetScheduler>>,
     fault: Option<Arc<FaultPlan>>,
     max_conns: usize,
 ) {
@@ -216,6 +232,7 @@ fn accept_loop(
                     Arc::clone(&reaper),
                     session_cfg.clone(),
                     governor.clone(),
+                    scheduler.clone(),
                     fault.clone(),
                 ) {
                     Ok(handle) => guard.push(handle),

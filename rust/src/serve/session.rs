@@ -26,6 +26,10 @@
 //!   slot order (the session's stream sink parks out-of-order
 //!   completions), so a client reading the stream sees slots `0..k`
 //!   as a contiguous prefix;
+//! * **model routing** — a v4 request names its target model; the
+//!   session validates the id and the model's input length before
+//!   admission, so an unknown tenant is a structured `Error` reply,
+//!   never a worker-side surprise (v3 requests decode as model 0);
 //! * **graceful drain** — on client `Goodbye`, listener shutdown, or
 //!   disconnect: stop admitting, let in-flight work finish (bounded by
 //!   `drain_timeout`), answer `Goodbye`, close;
@@ -49,7 +53,7 @@ use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
-use crate::control::Governor;
+use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
 use crate::util::{lock_recover, FaultPlan};
 
@@ -175,6 +179,7 @@ impl Default for Reaper {
 }
 
 impl Reaper {
+    /// Start the reaper thread.
     pub fn new() -> Reaper {
         let state: Arc<(Mutex<ReaperState>, Condvar)> = Arc::default();
         let thread_state = Arc::clone(&state);
@@ -283,6 +288,8 @@ struct Parked {
     id: u64,
     deadline_ms: u32,
     sample_len: usize,
+    /// Validated target model (the coordinator id the request named).
+    model: u32,
     data: wire::Payload,
     /// Frame receipt time — the deadline clock's origin, so time spent
     /// parked counts against the request's deadline.
@@ -384,6 +391,10 @@ pub(crate) struct SessionShared {
     /// Adaptive control plane, when the server runs one: the
     /// `SetBudget`/`Stats` admin frames land here.
     governor: Option<Arc<Governor>>,
+    /// Multi-model control plane; takes precedence over `governor` for
+    /// the admin frames when both are configured (they never should
+    /// be — the listener installs one or the other).
+    scheduler: Option<Arc<FleetScheduler>>,
     /// Deterministic chaos plan, when the server runs one: injects
     /// reply delays and frame corruption on the write path and read
     /// stalls on the session thread (worker-side panics are injected
@@ -528,6 +539,7 @@ impl SessionHandle {
         self.shared.draining.store(true, Ordering::Release);
     }
 
+    /// Whether the session thread has exited.
     pub fn is_finished(&self) -> bool {
         self.join.is_finished()
     }
@@ -545,6 +557,7 @@ pub(crate) fn spawn_session(
     reaper: Arc<Reaper>,
     cfg: SessionCfg,
     governor: Option<Arc<Governor>>,
+    scheduler: Option<Arc<FleetScheduler>>,
     fault: Option<Arc<FaultPlan>>,
 ) -> std::io::Result<SessionHandle> {
     let read_half = stream.try_clone()?;
@@ -565,6 +578,7 @@ pub(crate) fn spawn_session(
         coord,
         reaper,
         governor,
+        scheduler,
         fault,
         metrics,
     });
@@ -628,6 +642,18 @@ fn session_loop(shared: Arc<SessionShared>, mut read_half: TcpStream) -> Session
                             }
                         }
                         Ok(None) => break,
+                        Err(wire::WireError::BadVersion(v)) => {
+                            // A well-framed peer speaking a protocol
+                            // version we don't: refuse it cleanly — a
+                            // Goodbye and an orderly close — so its
+                            // fallback logic sees a negotiation
+                            // failure, not line noise.
+                            eprintln!(
+                                "[serve] unsupported wire version {v}, closing session"
+                            );
+                            shared.send(&Frame::Goodbye);
+                            return finish_session(&shared, SessionExit::Goodbye);
+                        }
                         Err(e) => {
                             // Unframed stream: nothing after this point
                             // can be trusted. Hang up; finish_session
@@ -696,8 +722,8 @@ fn cancel_all(shared: &Arc<SessionShared>) {
 /// `Goodbye` (the caller switches the session into draining).
 fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
     match frame {
-        Frame::Request { id, deadline_ms, sample_len, data } => {
-            handle_request(shared, id, deadline_ms, sample_len, data);
+        Frame::Request { id, deadline_ms, sample_len, model, data } => {
+            handle_request(shared, id, deadline_ms, sample_len, model, data);
             true
         }
         Frame::Cancel { id } => {
@@ -731,62 +757,12 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
             shared.send(&Frame::Pong { id });
             true
         }
-        // Admin pair: adjust the adaptive budget (positive values) or
-        // just query; always answered with a Stats frame. Without a
-        // governor the reply carries `scale_q8 == 0` — "adaptive
+        // Admin pair: adjust an energy budget (positive values) or
+        // just query; always answered with a Stats frame. Without any
+        // control plane the reply carries `scale_q8 == 0` — "adaptive
         // control disabled" — instead of an error, so probes are cheap.
-        Frame::SetBudget { id, budget_mj } => {
-            // Self-healing gauges ride the same frame whether or not a
-            // governor is attached: panic containment is a coordinator
-            // property, not a control-plane one.
-            let m = shared.metrics.snapshot();
-            let stats = match &shared.governor {
-                Some(g) => {
-                    if budget_mj > 0.0 {
-                        g.set_budget(budget_mj);
-                    }
-                    let s = g.status();
-                    Frame::Stats {
-                        id,
-                        scale_q8: s.scale_q8,
-                        step: s.step as u32,
-                        steps_total: s.steps_total as u32,
-                        budget_mj: s.budget_mj,
-                        ewma_mj: s.ewma_mj,
-                        keep_ratio: s.keep_ratio as f32,
-                        cache_hits: s.cache_hits,
-                        cache_misses: s.cache_misses,
-                        swaps: s.swaps,
-                        bg_pending: s.bg_pending,
-                        bg_compiled: s.bg_compiled,
-                        bg_upgrades: s.bg_upgrades,
-                        worker_panics: m.worker_panics,
-                        respawns: m.respawns,
-                        drift_trips: s.drift_trips,
-                        recalibrations: s.recalibrations,
-                    }
-                }
-                None => Frame::Stats {
-                    id,
-                    scale_q8: 0,
-                    step: 0,
-                    steps_total: 0,
-                    budget_mj: 0.0,
-                    ewma_mj: 0.0,
-                    keep_ratio: 0.0,
-                    cache_hits: 0,
-                    cache_misses: 0,
-                    swaps: 0,
-                    bg_pending: 0,
-                    bg_compiled: 0,
-                    bg_upgrades: 0,
-                    worker_panics: m.worker_panics,
-                    respawns: m.respawns,
-                    drift_trips: 0,
-                    recalibrations: 0,
-                },
-            };
-            shared.send(&stats);
+        Frame::SetBudget { id, budget_mj, model } => {
+            shared.send(&handle_set_budget(shared, id, budget_mj, model));
             true
         }
         Frame::Goodbye => false,
@@ -796,11 +772,135 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
     }
 }
 
+/// Build the `Stats` reply to one `SetBudget` admin frame, applying
+/// the budget change first when `budget_mj > 0`.
+///
+/// Routing: with a [`FleetScheduler`], [`wire::FLEET_MODEL`] scope
+/// re-budgets the whole fleet and a model id caps that tenant (the
+/// reply then reports that tenant; fleet scope reports model 0, the
+/// convention a single-model v3 client already expects). With a
+/// [`Governor`], only fleet scope or model 0 applies the change —
+/// there is exactly one budget to move. The self-healing gauges
+/// (`worker_panics`, `respawns`) ride every reply: panic containment
+/// is a coordinator property, not a control-plane one.
+fn handle_set_budget(
+    shared: &Arc<SessionShared>,
+    id: u64,
+    budget_mj: f64,
+    model: u32,
+) -> Frame {
+    let m = shared.metrics.snapshot();
+    // Common "no control / unknown tenant" shape; the caller fills in
+    // whatever fleet shape it does know.
+    let disabled = |model: u32, models_loaded: u32, fleet_budget_mj: f64| Frame::Stats {
+        id,
+        scale_q8: 0,
+        step: 0,
+        steps_total: 0,
+        budget_mj: 0.0,
+        ewma_mj: 0.0,
+        keep_ratio: 0.0,
+        cache_hits: 0,
+        cache_misses: 0,
+        swaps: 0,
+        bg_pending: 0,
+        bg_compiled: 0,
+        bg_upgrades: 0,
+        worker_panics: m.worker_panics,
+        respawns: m.respawns,
+        drift_trips: 0,
+        recalibrations: 0,
+        model,
+        models_loaded,
+        fleet_budget_mj,
+    };
+    if let Some(sched) = &shared.scheduler {
+        if budget_mj > 0.0 {
+            if model == wire::FLEET_MODEL {
+                sched.set_fleet_budget(budget_mj);
+            } else {
+                // Unknown tenant: rejected silently here, visible in
+                // the reply (scale_q8 == 0 for that model id).
+                let _ = sched.set_tenant_cap(model, Some(budget_mj));
+            }
+        }
+        let fleet = sched.fleet_status();
+        let stat_model = if model == wire::FLEET_MODEL { 0 } else { model };
+        return match sched.status(stat_model) {
+            Some(s) => Frame::Stats {
+                id,
+                scale_q8: s.scale_q8,
+                step: s.step as u32,
+                steps_total: s.steps_total as u32,
+                // Fleet scope reports the fleet budget; model scope
+                // that tenant's cap (0 = uncapped).
+                budget_mj: if model == wire::FLEET_MODEL {
+                    fleet.fleet_budget_mj
+                } else {
+                    s.cap_mj.unwrap_or(0.0)
+                },
+                ewma_mj: s.ewma_mj,
+                keep_ratio: s.keep_ratio as f32,
+                cache_hits: s.cache_hits,
+                cache_misses: s.cache_misses,
+                swaps: s.swaps,
+                // The scheduler compiles on its solve thread, not a
+                // background compile pipeline: the bg_* gauges are
+                // governor-specific and read 0 here.
+                bg_pending: 0,
+                bg_compiled: 0,
+                bg_upgrades: 0,
+                worker_panics: m.worker_panics,
+                respawns: m.respawns,
+                drift_trips: s.drift_trips,
+                recalibrations: s.recalibrations,
+                model: stat_model,
+                models_loaded: fleet.models as u32,
+                fleet_budget_mj: fleet.fleet_budget_mj,
+            },
+            None => disabled(stat_model, fleet.models as u32, fleet.fleet_budget_mj),
+        };
+    }
+    let models_loaded = shared.coord.model_count() as u32;
+    match &shared.governor {
+        Some(g) => {
+            if budget_mj > 0.0 && (model == wire::FLEET_MODEL || model == 0) {
+                g.set_budget(budget_mj);
+            }
+            let s = g.status();
+            Frame::Stats {
+                id,
+                scale_q8: s.scale_q8,
+                step: s.step as u32,
+                steps_total: s.steps_total as u32,
+                budget_mj: s.budget_mj,
+                ewma_mj: s.ewma_mj,
+                keep_ratio: s.keep_ratio as f32,
+                cache_hits: s.cache_hits,
+                cache_misses: s.cache_misses,
+                swaps: s.swaps,
+                bg_pending: s.bg_pending,
+                bg_compiled: s.bg_compiled,
+                bg_upgrades: s.bg_upgrades,
+                worker_panics: m.worker_panics,
+                respawns: m.respawns,
+                drift_trips: s.drift_trips,
+                recalibrations: s.recalibrations,
+                model: 0,
+                models_loaded,
+                fleet_budget_mj: 0.0,
+            }
+        }
+        None => disabled(0, models_loaded, 0.0),
+    }
+}
+
 fn handle_request(
     shared: &Arc<SessionShared>,
     id: u64,
     deadline_ms: u32,
     sample_len: u32,
+    model: u32,
     data: wire::Payload,
 ) {
     if shared.draining.load(Ordering::Acquire) {
@@ -816,7 +916,14 @@ fn handle_request(
         shared.status_reply(id, Status::Error);
         return;
     }
-    if shared.coord.input_len() != sample_len {
+    // Model validation: the id must name a hosted model, and the
+    // sample length must match THAT model's input — checked here so an
+    // unknown tenant is a structured refusal, never queued work.
+    let Some(expect) = shared.coord.input_len_of(model) else {
+        shared.status_reply(id, Status::Error);
+        return;
+    };
+    if expect != sample_len {
         shared.status_reply(id, Status::Error);
         return;
     }
@@ -837,6 +944,7 @@ fn handle_request(
         id,
         deadline_ms,
         sample_len,
+        model,
         data,
         t_recv,
         ctl: Arc::clone(&ctl),
@@ -1018,7 +1126,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         window.insert(p.id, Inflight { ctl: Arc::clone(&p.ctl) });
     }
     shared.metrics.inflight_delta(1);
-    let Parked { id, sample_len, data, ctl, .. } = p;
+    let Parked { id, sample_len, model, data, ctl, .. } = p;
 
     let flat = data.into_f32();
     let n_samples = flat.len() / sample_len;
@@ -1030,10 +1138,11 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         n_samples,
         order: Mutex::new(ReorderState::default()),
     });
-    if shared.coord.submit_streamed(id, xs, ctl, sink).is_err() {
-        // Pool closed under us (server shutting down): the ctl is
-        // already tombstoned by submit_streamed. Deferred rather than
-        // written here — this path can run on the reaper thread.
+    if shared.coord.submit_streamed(id, model, xs, ctl, sink).is_err() {
+        // Pool closed under us (server shutting down) or the model
+        // table shifted: the ctl is already tombstoned by
+        // submit_streamed. Deferred rather than written here — this
+        // path can run on the reaper thread.
         shared.finish(id);
         lock_recover(&shared.deferred).push((id, Status::Error));
     }

@@ -16,7 +16,7 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "UnIT"
-//! 4       2     version (little-endian, currently 3)
+//! 4       2     version (little-endian, currently 4; 3 still accepted)
 //! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
 //!               6=Goodbye 7=SetBudget 8=Stats)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
@@ -25,50 +25,69 @@
 //! end-4   4     crc32 (IEEE) over body[0 .. end-4]
 //! ```
 //!
-//! Payloads:
+//! Payloads (v4 layout; the v3 differences are noted inline):
 //!
 //! * **Request** — `deadline_ms:u32` (0 = none), `n_samples:u32`,
-//!   `sample_len:u32`, then `n_samples * sample_len` values (f32 LE or
-//!   i8 per `dtype`; i8 is normalized fixed-point, dequantized as
-//!   `v / 127.0`). `n_samples > 1` is a batch: the server splits it
-//!   across shards and streams one Response per sample, in slot order.
+//!   `sample_len:u32`, `model:u32` (v4; a v3 frame has no model field
+//!   and decodes as model `0`), then `n_samples * sample_len` values
+//!   (f32 LE or i8 per `dtype`; i8 is normalized fixed-point,
+//!   dequantized as `v / 127.0`). `n_samples > 1` is a batch: the
+//!   server splits it across shards and streams one Response per
+//!   sample, in slot order.
 //! * **Response** — `status:u8`, `slot:u32` ([`WHOLE_REQUEST`] for
 //!   request-level statuses like Rejected/Expired), `predicted:u16`,
 //!   `queue_us:u32`, `service_us:u32`, `mac_skipped:f32`,
 //!   `n_logits:u32`, then the f32 logits.
-//! * **SetBudget** — `budget_mj:f64` (client → server). A value
-//!   `<= 0.0` changes nothing (pure stats query). The server answers
-//!   with a `Stats` frame echoing the id; when the server has no
-//!   adaptive governor attached, the answered `Stats` carries
-//!   `scale_q8 == 0`.
+//! * **SetBudget** — `budget_mj:f64`, `model:u32` (v4; a v3 frame has
+//!   no model field and decodes as [`FLEET_MODEL`] — "the whole
+//!   fleet"). A budget `<= 0.0` changes nothing (pure stats query).
+//!   The server answers with a `Stats` frame echoing the id; when the
+//!   server has no adaptive control attached, the answered `Stats`
+//!   carries `scale_q8 == 0`.
 //! * **Stats** — `scale_q8:u32` (0 ⇒ adaptive control disabled),
 //!   `step:u32`, `steps_total:u32`, `budget_mj:f64`, `ewma_mj:f64`,
 //!   `keep_ratio:f32`, `cache_hits:u64`, `cache_misses:u64`,
 //!   `swaps:u64`, `bg_pending:u64`, `bg_compiled:u64`,
 //!   `bg_upgrades:u64`, `worker_panics:u64`, `respawns:u64`,
-//!   `drift_trips:u64`, `recalibrations:u64` — the governor's
-//!   scale/keep-ratio/budget state, its background-compile-thread
-//!   health, and the self-healing counters (server → client, answering
-//!   a `SetBudget`). The three `bg_*` fields were added in protocol
-//!   version 2; the panic/respawn and drift/recalibration counters in
-//!   version 3 (panic counters are served even without a governor).
+//!   `drift_trips:u64`, `recalibrations:u64`, then the v4 tail
+//!   `model:u32`, `models_loaded:u32`, `fleet_budget_mj:f64` — the
+//!   control plane's scale/keep-ratio/budget state for one model, its
+//!   background-compile-thread health, the self-healing counters, and
+//!   the fleet shape (server → client, answering a `SetBudget`). The
+//!   three `bg_*` fields were added in protocol version 2; the
+//!   panic/respawn and drift/recalibration counters in version 3
+//!   (panic counters are served even without a governor); the
+//!   model/fleet tail in version 4. **Stats decoding is
+//!   forward-tolerant**: a missing v4 tail decodes to defaults and
+//!   extra trailing bytes after the known fields are ignored, so a v3
+//!   parser of this codec reads a v4 `Stats` (and a v4 parser will
+//!   read a v5 one) without a `Malformed` error.
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
-//! Decoding is strict: wrong magic/version/type/status, a length that
-//! disagrees with the payload's own arithmetic, or a CRC mismatch all
-//! return a [`WireError`] — never a panic — so a malicious or corrupt
-//! peer cannot take a session thread down.
+//! Decoding is otherwise strict: wrong magic/version/type/status, a
+//! length that disagrees with the payload's own arithmetic, or a CRC
+//! mismatch all return a [`WireError`] — never a panic — so a
+//! malicious or corrupt peer cannot take a session thread down. An
+//! unsupported version is reported as [`WireError::BadVersion`], which
+//! sessions answer with a clean `Goodbye` rather than treating the
+//! peer as unframed.
 
 /// Frame magic: the protocol's first four bytes.
 pub const MAGIC: [u8; 4] = *b"UnIT";
-/// Protocol version carried (and required) by every frame. Version 2
-/// extended the `Stats` payload with the governor's background-compile
-/// counters; version 3 added the `Failed` response status and the
-/// `Stats` self-healing counters (worker panics/respawns, drift
-/// trips/recalibrations). Decoding is strict, so older peers are
-/// refused rather than mis-framed.
-pub const VERSION: u16 = 3;
+/// Protocol version carried by every encoded frame. Version 2 extended
+/// the `Stats` payload with the governor's background-compile counters;
+/// version 3 added the `Failed` response status and the `Stats`
+/// self-healing counters (worker panics/respawns, drift
+/// trips/recalibrations); version 4 added multi-tenant model identity
+/// (`model` on `Request`/`SetBudget`, the model/fleet `Stats` tail).
+/// Decoding accepts [`MIN_VERSION`]..=`VERSION`; anything else is
+/// refused with [`WireError::BadVersion`] rather than mis-framed.
+pub const VERSION: u16 = 4;
+/// Oldest protocol version the decoder still accepts. v3 frames carry
+/// no model identity: their requests decode as model `0` and their
+/// `SetBudget` as [`FLEET_MODEL`].
+pub const MIN_VERSION: u16 = 3;
 /// Fixed header bytes before the type-specific payload.
 pub const HEADER_LEN: usize = 16;
 /// Hard cap on one frame's post-prefix length: a corrupt length prefix
@@ -77,13 +96,20 @@ pub const MAX_FRAME_LEN: usize = 1 << 24;
 /// `slot` value meaning "this status applies to the whole request"
 /// (backpressure rejection, deadline expiry, protocol errors).
 pub const WHOLE_REQUEST: u32 = u32::MAX;
+/// `model` value meaning "the whole fleet" on a `SetBudget` frame: the
+/// budget applies to the global scheduler (or the single governor)
+/// rather than one tenant. Also what a v3 `SetBudget` — which predates
+/// model identity — decodes to.
+pub const FLEET_MODEL: u32 = u32::MAX;
 
 /// Sample payload of a request: little-endian f32, or normalized i8
 /// (dequantized as `v / 127.0` server-side — the compact transport for
 /// sensor-style clients).
 #[derive(Debug, Clone, PartialEq)]
 pub enum Payload {
+    /// Little-endian f32 samples (the engine's native dtype).
     F32(Vec<f32>),
+    /// Normalized i8 samples, dequantized server-side as `v / 127.0`.
     I8(Vec<i8>),
 }
 
@@ -96,6 +122,7 @@ impl Payload {
         }
     }
 
+    /// True when no scalar values are carried.
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -168,56 +195,92 @@ pub enum Frame {
     /// Client → server: run inference on `data` (a batch when
     /// `data.len() > sample_len`).
     Request {
+        /// Client-chosen request id, echoed on every reply.
         id: u64,
         /// Milliseconds from receipt until the request expires (0 = no
         /// deadline beyond the session default).
         deadline_ms: u32,
         /// Values per sample; `data.len()` must be a multiple of it.
         sample_len: u32,
+        /// Target model id (v4). Single-model servers (and every v3
+        /// client) use `0`; an unknown id is answered `Error`.
+        model: u32,
+        /// The samples themselves.
         data: Payload,
     },
     /// Server → client: one sample's result, or a request-level status.
     Response {
+        /// The request id this reply answers.
         id: u64,
         /// Sample index inside the request, or [`WHOLE_REQUEST`].
         slot: u32,
+        /// Outcome for this slot (or the whole request).
         status: Status,
+        /// Argmax class of the logits (0 on non-`Ok` statuses).
         predicted: u16,
+        /// Microseconds the sample waited in a shard queue.
         queue_us: u32,
+        /// Microseconds the worker spent computing the sample.
         service_us: u32,
+        /// Fraction of MACs the pruned plan skipped for this sample.
         mac_skipped: f32,
+        /// The raw logits (empty on non-`Ok` statuses).
         logits: Vec<f32>,
     },
     /// Client → server: drop not-yet-started work for `id`, suppress
     /// all of its remaining replies.
-    Cancel { id: u64 },
+    Cancel {
+        /// Id of the request to cancel.
+        id: u64,
+    },
     /// Liveness probe; the server echoes a `Pong` with the same id.
-    Ping { id: u64 },
-    Pong { id: u64 },
+    Ping {
+        /// Probe id, echoed on the `Pong`.
+        id: u64,
+    },
+    /// Server → client: answer to a `Ping`.
+    Pong {
+        /// The probed id, echoed back.
+        id: u64,
+    },
     /// Either side: graceful drain-then-close. The server answers a
     /// client Goodbye with its own once in-flight work has drained.
     Goodbye,
-    /// Client → server (admin): change the adaptive energy budget
+    /// Client → server (admin): change an energy budget
     /// (mJ/inference); `budget_mj <= 0.0` is a pure stats query. The
     /// server always answers with a [`Frame::Stats`] echoing `id`.
-    SetBudget { id: u64, budget_mj: f64 },
-    /// Server → client (admin): the adaptive governor's state.
-    /// `scale_q8 == 0` means no governor is attached (every other
-    /// field is then meaningless and zero).
+    SetBudget {
+        /// Admin exchange id, echoed on the `Stats` reply.
+        id: u64,
+        /// New budget in mJ/inference; `<= 0.0` queries without
+        /// changing anything.
+        budget_mj: f64,
+        /// Scope: a model id for one tenant's cap, or [`FLEET_MODEL`]
+        /// for the fleet-wide budget (what a v3 frame decodes to).
+        model: u32,
+    },
+    /// Server → client (admin): the adaptive control plane's state.
+    /// `scale_q8 == 0` means no governor/scheduler is attached (every
+    /// other control field is then meaningless and zero).
     Stats {
+        /// The admin exchange id this reply answers.
         id: u64,
         /// Active threshold scale in Q8.8 (256 = 1.0).
         scale_q8: u32,
-        /// Active grid step and the grid's total step count.
+        /// Active grid step for the reported model.
         step: u32,
+        /// The scale grid's total step count.
         steps_total: u32,
+        /// The reported model's energy budget (mJ/inference).
         budget_mj: f64,
         /// EWMA of observed per-request energy (mJ).
         ewma_mj: f64,
         /// Calibrated whole-model keep ratio at the active step (0
         /// when no keep-ratio profile is attached).
         keep_ratio: f32,
+        /// Plan-cache hits since install.
         cache_hits: u64,
+        /// Plan-cache misses (inline compiles) since install.
         cache_misses: u64,
         /// Plan swaps since the governor was installed (inline +
         /// background upgrades).
@@ -239,6 +302,15 @@ pub enum Frame {
         /// Completed live recalibrations since install (v3; 0 without a
         /// governor).
         recalibrations: u64,
+        /// Which model this frame reports (v4). `0` for a v3 peer or a
+        /// single-model server.
+        model: u32,
+        /// Number of models the server is hosting (v4; 0 from a v3
+        /// peer).
+        models_loaded: u32,
+        /// The fleet-wide energy budget the scheduler is dividing (v4;
+        /// 0 from a v3 peer or when no scheduler is attached).
+        fleet_budget_mj: f64,
     },
 }
 
@@ -274,10 +346,16 @@ impl Frame {
 /// that produced it cannot be trusted to stay framed and should close.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum WireError {
+    /// The frame's first four bytes were not [`MAGIC`].
     BadMagic([u8; 4]),
+    /// Version outside [`MIN_VERSION`]`..=`[`VERSION`]. Sessions answer
+    /// this one with a clean `Goodbye` (refused, not unframed).
     BadVersion(u16),
+    /// Unknown frame-type byte.
     BadType(u8),
+    /// Unknown response-status byte.
     BadStatus(u8),
+    /// Unknown request-payload dtype byte.
     BadDtype(u8),
     /// CRC mismatch: `(stored, computed)`.
     Crc(u32, u32),
@@ -369,12 +447,13 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
     body.push(dtype);
     put_u64(&mut body, frame.id());
     match frame {
-        Frame::Request { deadline_ms, sample_len, data, .. } => {
+        Frame::Request { deadline_ms, sample_len, model, data, .. } => {
             put_u32(&mut body, *deadline_ms);
             let n_samples =
                 if *sample_len == 0 { 0 } else { (data.len() as u32) / *sample_len };
             put_u32(&mut body, n_samples);
             put_u32(&mut body, *sample_len);
+            put_u32(&mut body, *model);
             // Serialize exactly n_samples * sample_len values: a ragged
             // payload (caller bug) is truncated to whole samples so the
             // frame stays self-consistent instead of becoming a
@@ -412,8 +491,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
                 put_f32(&mut body, l);
             }
         }
-        Frame::SetBudget { budget_mj, .. } => {
+        Frame::SetBudget { budget_mj, model, .. } => {
             put_f64(&mut body, *budget_mj);
+            put_u32(&mut body, *model);
         }
         Frame::Stats {
             scale_q8,
@@ -432,6 +512,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             respawns,
             drift_trips,
             recalibrations,
+            model,
+            models_loaded,
+            fleet_budget_mj,
             ..
         } => {
             put_u32(&mut body, *scale_q8);
@@ -450,6 +533,9 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u64(&mut body, *respawns);
             put_u64(&mut body, *drift_trips);
             put_u64(&mut body, *recalibrations);
+            put_u32(&mut body, *model);
+            put_u32(&mut body, *models_loaded);
+            put_f64(&mut body, *fleet_budget_mj);
         }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
@@ -531,7 +617,7 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
         return Err(WireError::BadMagic(magic));
     }
     let version = c.u16("version")?;
-    if version != VERSION {
+    if !(MIN_VERSION..=VERSION).contains(&version) {
         return Err(WireError::BadVersion(version));
     }
     let ftype = c.u8("type")?;
@@ -542,6 +628,8 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
             let deadline_ms = c.u32("deadline")?;
             let n_samples = c.u32("n_samples")?;
             let sample_len = c.u32("sample_len")?;
+            // v3 requests predate model identity: model 0.
+            let model = if version >= 4 { c.u32("model")? } else { 0 };
             let n_vals = (n_samples as usize)
                 .checked_mul(sample_len as usize)
                 .filter(|n| n.checked_mul(4).is_some())
@@ -561,7 +649,7 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
                 }
                 other => return Err(WireError::BadDtype(other)),
             };
-            Frame::Request { id, deadline_ms, sample_len, data }
+            Frame::Request { id, deadline_ms, sample_len, model, data }
         }
         2 => {
             let status = Status::from_u8(c.u8("status")?)?;
@@ -594,35 +682,89 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
         4 => Frame::Ping { id },
         5 => Frame::Pong { id },
         6 => Frame::Goodbye,
-        7 => Frame::SetBudget { id, budget_mj: c.f64("budget_mj")? },
-        8 => Frame::Stats {
-            id,
-            scale_q8: c.u32("scale_q8")?,
-            step: c.u32("step")?,
-            steps_total: c.u32("steps_total")?,
-            budget_mj: c.f64("budget_mj")?,
-            ewma_mj: c.f64("ewma_mj")?,
-            keep_ratio: c.f32("keep_ratio")?,
-            cache_hits: c.u64("cache_hits")?,
-            cache_misses: c.u64("cache_misses")?,
-            swaps: c.u64("swaps")?,
-            bg_pending: c.u64("bg_pending")?,
-            bg_compiled: c.u64("bg_compiled")?,
-            bg_upgrades: c.u64("bg_upgrades")?,
-            worker_panics: c.u64("worker_panics")?,
-            respawns: c.u64("respawns")?,
-            drift_trips: c.u64("drift_trips")?,
-            recalibrations: c.u64("recalibrations")?,
-        },
+        7 => {
+            let budget_mj = c.f64("budget_mj")?;
+            // v3 SetBudget predates per-tenant scoping: fleet-wide.
+            let model = if version >= 4 { c.u32("model")? } else { FLEET_MODEL };
+            Frame::SetBudget { id, budget_mj, model }
+        }
+        8 => {
+            let scale_q8 = c.u32("scale_q8")?;
+            let step = c.u32("step")?;
+            let steps_total = c.u32("steps_total")?;
+            let budget_mj = c.f64("budget_mj")?;
+            let ewma_mj = c.f64("ewma_mj")?;
+            let keep_ratio = c.f32("keep_ratio")?;
+            let cache_hits = c.u64("cache_hits")?;
+            let cache_misses = c.u64("cache_misses")?;
+            let swaps = c.u64("swaps")?;
+            let bg_pending = c.u64("bg_pending")?;
+            let bg_compiled = c.u64("bg_compiled")?;
+            let bg_upgrades = c.u64("bg_upgrades")?;
+            let worker_panics = c.u64("worker_panics")?;
+            let respawns = c.u64("respawns")?;
+            let drift_trips = c.u64("drift_trips")?;
+            let recalibrations = c.u64("recalibrations")?;
+            // Forward-tolerant tail: a v3 frame stops here (defaults),
+            // and any bytes past the fields we know are ignored so a
+            // future extension does not break this parser.
+            let (model, models_loaded, fleet_budget_mj) =
+                if payload.len().saturating_sub(c.pos) >= 16 {
+                    (c.u32("model")?, c.u32("models_loaded")?, c.f64("fleet_budget_mj")?)
+                } else {
+                    (0, 0, 0.0)
+                };
+            Frame::Stats {
+                id,
+                scale_q8,
+                step,
+                steps_total,
+                budget_mj,
+                ewma_mj,
+                keep_ratio,
+                cache_hits,
+                cache_misses,
+                swaps,
+                bg_pending,
+                bg_compiled,
+                bg_upgrades,
+                worker_panics,
+                respawns,
+                drift_trips,
+                recalibrations,
+                model,
+                models_loaded,
+                fleet_budget_mj,
+            }
+        }
         other => return Err(WireError::BadType(other)),
     };
-    if c.pos != payload.len() {
+    // Stats is forward-tolerant (see above); every other frame type is
+    // strict about consuming its payload exactly.
+    if ftype != 8 && c.pos != payload.len() {
         return Err(WireError::Malformed("trailing bytes"));
     }
     Ok(Some((frame, 4 + len)))
 }
 
 /// Incremental decoder: feed it raw socket reads, pop whole frames.
+///
+/// Bytes may arrive in any chunking — a frame split across reads stays
+/// buffered until it completes:
+///
+/// ```
+/// use unit_pruner::serve::wire::{encode, Frame, FrameReader};
+///
+/// let bytes = encode(&Frame::Ping { id: 7 });
+/// let (head, tail) = bytes.split_at(5); // mid-frame split
+///
+/// let mut reader = FrameReader::new();
+/// reader.feed(head);
+/// assert_eq!(reader.next().unwrap(), None); // incomplete: need more
+/// reader.feed(tail);
+/// assert_eq!(reader.next().unwrap(), Some(Frame::Ping { id: 7 }));
+/// assert_eq!(reader.pending(), 0);
+/// ```
 #[derive(Debug, Default)]
 pub struct FrameReader {
     buf: Vec<u8>,
@@ -631,6 +773,7 @@ pub struct FrameReader {
 }
 
 impl FrameReader {
+    /// An empty reader.
     pub fn new() -> FrameReader {
         FrameReader::default()
     }
@@ -690,12 +833,14 @@ mod tests {
             id: 42,
             deadline_ms: 250,
             sample_len: 4,
+            model: 0,
             data: Payload::F32(vec![1.0, -2.5, 0.0, 3.25, 9.0, 8.0, 7.0, 6.0]),
         });
         roundtrip(Frame::Request {
             id: 7,
             deadline_ms: 0,
             sample_len: 3,
+            model: 2, // v4 multi-tenant addressing
             data: Payload::I8(vec![-128, 0, 127]),
         });
         roundtrip(Frame::Response {
@@ -733,8 +878,8 @@ mod tests {
         roundtrip(Frame::Ping { id: 1 });
         roundtrip(Frame::Pong { id: 1 });
         roundtrip(Frame::Goodbye);
-        roundtrip(Frame::SetBudget { id: 5, budget_mj: 3.25 });
-        roundtrip(Frame::SetBudget { id: 6, budget_mj: 0.0 }); // pure query
+        roundtrip(Frame::SetBudget { id: 5, budget_mj: 3.25, model: FLEET_MODEL });
+        roundtrip(Frame::SetBudget { id: 6, budget_mj: 0.0, model: 1 }); // per-tenant query
         roundtrip(Frame::Stats {
             id: 5,
             scale_q8: 712,
@@ -753,6 +898,9 @@ mod tests {
             respawns: 2,
             drift_trips: 1,
             recalibrations: 1,
+            model: 1,
+            models_loaded: 2,
+            fleet_budget_mj: 6.5,
         });
         // "no governor" shape (panic counters still served)
         roundtrip(Frame::Stats {
@@ -773,6 +921,9 @@ mod tests {
             respawns: 3,
             drift_trips: 0,
             recalibrations: 0,
+            model: 0,
+            models_loaded: 0,
+            fleet_budget_mj: 0.0,
         });
     }
 
@@ -790,6 +941,7 @@ mod tests {
             id: 11,
             deadline_ms: 5,
             sample_len: 2,
+            model: 0,
             data: Payload::F32(vec![1.0, 2.0]),
         });
         // Flip every byte position past the length prefix in turn: all
@@ -816,6 +968,7 @@ mod tests {
         body.extend_from_slice(&0u32.to_le_bytes()); // deadline
         body.extend_from_slice(&0x7FFF_FFFFu32.to_le_bytes()); // n_samples
         body.extend_from_slice(&0x8000_0001u32.to_le_bytes()); // sample_len
+        body.extend_from_slice(&0u32.to_le_bytes()); // model
         let crc = crc32(&body);
         body.extend_from_slice(&crc.to_le_bytes());
         let mut frame = (body.len() as u32).to_le_bytes().to_vec();
@@ -842,6 +995,7 @@ mod tests {
                 id: 2,
                 deadline_ms: 9,
                 sample_len: 2,
+                model: 1,
                 data: Payload::I8(vec![1, -2, 3, -4]),
             },
             Frame::Goodbye,
@@ -871,5 +1025,136 @@ mod tests {
         assert!((f[0] - 1.0).abs() < 1e-6);
         assert!((f[1] + 1.0).abs() < 1e-6);
         assert_eq!(f[2], 0.0);
+    }
+
+    /// Wrap a hand-built body (magic/version/type/dtype/id already
+    /// inside) with its CRC and length prefix.
+    fn seal(mut body: Vec<u8>) -> Vec<u8> {
+        let crc = crc32(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        let mut out = (body.len() as u32).to_le_bytes().to_vec();
+        out.extend_from_slice(&body);
+        out
+    }
+
+    fn header(version: u16, ftype: u8, dtype: u8, id: u64) -> Vec<u8> {
+        let mut b = Vec::new();
+        b.extend_from_slice(&MAGIC);
+        b.extend_from_slice(&version.to_le_bytes());
+        b.push(ftype);
+        b.push(dtype);
+        b.extend_from_slice(&id.to_le_bytes());
+        b
+    }
+
+    #[test]
+    fn v3_request_decodes_as_model_zero() {
+        // A v3 peer's Request has no model field; it must land on the
+        // default model, not error.
+        let mut body = header(3, 1, 0, 21);
+        body.extend_from_slice(&50u32.to_le_bytes()); // deadline_ms
+        body.extend_from_slice(&1u32.to_le_bytes()); // n_samples
+        body.extend_from_slice(&2u32.to_le_bytes()); // sample_len
+        for v in [0.5f32, -0.5] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let (frame, _) = decode(&seal(body)).unwrap().unwrap();
+        assert_eq!(
+            frame,
+            Frame::Request {
+                id: 21,
+                deadline_ms: 50,
+                sample_len: 2,
+                model: 0,
+                data: Payload::F32(vec![0.5, -0.5]),
+            }
+        );
+    }
+
+    #[test]
+    fn v3_setbudget_decodes_as_fleet_scope() {
+        let mut body = header(3, 7, 0, 4);
+        body.extend_from_slice(&2.5f64.to_le_bytes());
+        let (frame, _) = decode(&seal(body)).unwrap().unwrap();
+        assert_eq!(frame, Frame::SetBudget { id: 4, budget_mj: 2.5, model: FLEET_MODEL });
+    }
+
+    #[test]
+    fn v3_stats_decodes_with_default_tail() {
+        // v3 Stats body: the 16 known fields, no v4 tail.
+        let mut body = header(3, 8, 0, 6);
+        for v in [712u32, 11, 20] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        for v in [3.25f64, 3.31] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        body.extend_from_slice(&0.41f32.to_le_bytes());
+        for v in [190u64, 12, 17, 1, 9, 7, 2, 2, 1, 1] {
+            body.extend_from_slice(&v.to_le_bytes());
+        }
+        let (frame, _) = decode(&seal(body)).unwrap().unwrap();
+        match frame {
+            Frame::Stats { model, models_loaded, fleet_budget_mj, scale_q8, .. } => {
+                assert_eq!(scale_q8, 712);
+                assert_eq!(model, 0);
+                assert_eq!(models_loaded, 0);
+                assert_eq!(fleet_budget_mj, 0.0);
+            }
+            other => panic!("expected Stats, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn stats_tolerates_trailing_extension() {
+        // Regression: the old decoder rejected any trailing payload
+        // bytes, so Stats could never grow compatibly. A hypothetical
+        // v4.1 peer appending fields must still parse.
+        let full = encode(&Frame::Stats {
+            id: 8,
+            scale_q8: 300,
+            step: 4,
+            steps_total: 20,
+            budget_mj: 1.5,
+            ewma_mj: 1.4,
+            keep_ratio: 0.7,
+            cache_hits: 5,
+            cache_misses: 1,
+            swaps: 2,
+            bg_pending: 0,
+            bg_compiled: 2,
+            bg_upgrades: 1,
+            worker_panics: 0,
+            respawns: 0,
+            drift_trips: 0,
+            recalibrations: 0,
+            model: 1,
+            models_loaded: 3,
+            fleet_budget_mj: 9.0,
+        });
+        // Rebuild the body with 12 extra bytes before the CRC.
+        let body_len = full.len() - 4;
+        let mut body = full[4..4 + body_len - 4].to_vec(); // strip prefix + crc
+        body.extend_from_slice(&[0xAB; 12]);
+        let (frame, used) = decode(&seal(body)).unwrap().unwrap();
+        match frame {
+            Frame::Stats { id, scale_q8, model, models_loaded, fleet_budget_mj, .. } => {
+                assert_eq!((id, scale_q8, model, models_loaded), (8, 300, 1, 3));
+                assert_eq!(fleet_budget_mj, 9.0);
+            }
+            other => panic!("expected Stats, got {other:?}"),
+        }
+        assert!(used > 0);
+    }
+
+    #[test]
+    fn unknown_version_is_bad_version_not_generic_error() {
+        // Sessions special-case BadVersion into a clean Goodbye, so the
+        // decoder must report it precisely — not as Malformed/BadType.
+        let mut body = header(99, 4, 0, 1);
+        body.extend_from_slice(&[0u8; 0]);
+        assert_eq!(decode(&seal(body)), Err(WireError::BadVersion(99)));
+        let body = header(2, 4, 0, 1); // pre-MIN_VERSION peer
+        assert_eq!(decode(&seal(body)), Err(WireError::BadVersion(2)));
     }
 }

@@ -7,29 +7,36 @@
 /// Dense row-major tensor.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Tensor {
+    /// Dimension sizes.
     pub shape: Vec<usize>,
+    /// Row-major values.
     pub data: Vec<f32>,
 }
 
 impl Tensor {
+    /// All-zero tensor of the given shape.
     pub fn zeros(shape: &[usize]) -> Tensor {
         let n: usize = shape.iter().product();
         Tensor { shape: shape.to_vec(), data: vec![0.0; n] }
     }
 
+    /// Tensor from existing data (length-checked).
     pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Tensor {
         assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
         Tensor { shape: shape.to_vec(), data }
     }
 
+    /// Total element count.
     pub fn len(&self) -> usize {
         self.data.len()
     }
 
+    /// Whether the tensor has no elements.
     pub fn is_empty(&self) -> bool {
         self.data.is_empty()
     }
 
+    /// Number of dimensions.
     pub fn rank(&self) -> usize {
         self.shape.len()
     }
@@ -72,6 +79,7 @@ impl Tensor {
         self.data[((o * ii + i) * hh + h) * ww + w]
     }
 
+    /// Largest absolute element (0 when empty).
     pub fn max_abs(&self) -> f32 {
         self.data.iter().fold(0f32, |m, &v| m.max(v.abs()))
     }

@@ -35,12 +35,15 @@ use crate::util::stats::{accuracy, argmax, macro_f1};
 /// Aggregated evaluation result.
 #[derive(Debug, Clone)]
 pub struct EvalResult {
+    /// Top-1 accuracy.
     pub accuracy: f64,
+    /// Macro-averaged F1.
     pub macro_f1: f64,
     /// Fraction of MACs skipped across the whole split.
     pub mac_skipped: f64,
     /// Per-layer aggregate stats.
     pub stats: ForwardStats,
+    /// Samples evaluated.
     pub n: usize,
 }
 
@@ -153,7 +156,9 @@ pub fn evaluate_float_parallel(
 /// per-layer MAC counts and the merged MCU ledger of the whole split.
 #[derive(Debug, Clone)]
 pub struct QuantEvalResult {
+    /// Top-1 accuracy.
     pub accuracy: f64,
+    /// Macro-averaged F1.
     pub macro_f1: f64,
     /// Global fraction of MACs skipped across the split.
     pub mac_skipped: f64,
@@ -165,6 +170,7 @@ pub struct QuantEvalResult {
     pub skipped: Vec<u64>,
     /// Merged execution ledger (op counts, compute + memory cycles).
     pub ledger: Ledger,
+    /// Samples evaluated.
     pub n: usize,
 }
 

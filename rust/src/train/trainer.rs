@@ -18,9 +18,13 @@ use crate::util::Rng;
 /// Training hyperparameters.
 #[derive(Debug, Clone)]
 pub struct TrainConfig {
+    /// SGD steps.
     pub steps: usize,
+    /// Initial learning rate.
     pub lr: f32,
+    /// Shuffle/init seed.
     pub seed: u64,
+    /// Loss log period in steps (0 = silent).
     pub log_every: usize,
     /// Cosine-decay the learning rate to 10 % over the run.
     pub lr_decay: bool,
@@ -45,6 +49,7 @@ impl TrainConfig {
     }
 }
 
+/// Minibatch size used by the trainer.
 pub const TRAIN_BATCH: usize = 32;
 
 /// Train `model` on `ds.train`, returning trained params and the loss

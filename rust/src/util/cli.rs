@@ -8,6 +8,7 @@ use std::collections::HashMap;
 /// Parsed command line: positionals plus a key→value map.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Positional arguments, in order.
     pub positional: Vec<String>,
     flags: HashMap<String, String>,
 }
@@ -39,26 +40,32 @@ impl Args {
         Args::parse(std::env::args().skip(1))
     }
 
+    /// The value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.flags.get(key).map(|s| s.as_str())
     }
 
+    /// The value of `--key`, or `default`.
     pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
         self.get(key).unwrap_or(default)
     }
 
+    /// Whether `--key` was passed at all.
     pub fn flag(&self, key: &str) -> bool {
         matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
     }
 
+    /// `--key` parsed as `usize`, or `default`.
     pub fn usize_or(&self, key: &str, default: usize) -> usize {
         self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
     }
 
+    /// `--key` parsed as `u64`, or `default`.
     pub fn u64_or(&self, key: &str, default: u64) -> u64 {
         self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
     }
 
+    /// `--key` parsed as `f64`, or `default`.
     pub fn f64_or(&self, key: &str, default: f64) -> f64 {
         self.get(key).map(|v| v.parse().expect(key)).unwrap_or(default)
     }

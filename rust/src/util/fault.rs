@@ -80,14 +80,17 @@ impl FaultPlan {
         FaultPlan::with_rates(seed, FaultRates::default())
     }
 
+    /// A plan with explicit rates.
     pub fn with_rates(seed: u64, rates: FaultRates) -> FaultPlan {
         FaultPlan { seed, rates, counters: Default::default() }
     }
 
+    /// The plan's seed.
     pub fn seed(&self) -> u64 {
         self.seed
     }
 
+    /// The plan's rates.
     pub fn rates(&self) -> FaultRates {
         self.rates
     }

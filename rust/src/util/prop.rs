@@ -10,39 +10,48 @@ use crate::util::Rng;
 /// Case generator handed to property closures.
 pub struct Gen {
     rng: Rng,
+    /// Zero-based index of the current case.
     pub case: usize,
 }
 
 impl Gen {
+    /// Uniform `usize` in `lo..=hi`.
     pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
         assert!(hi >= lo);
         lo + self.rng.below((hi - lo + 1) as u64) as usize
     }
 
+    /// Uniform `i32` in `lo..=hi`.
     pub fn i32_in(&mut self, lo: i32, hi: i32) -> i32 {
         lo + self.rng.below((hi - lo + 1) as u64) as i32
     }
 
+    /// Uniform `u32` in `lo..=hi`.
     pub fn u32_in(&mut self, lo: u32, hi: u32) -> u32 {
         lo + self.rng.below((hi - lo + 1) as u64) as u32
     }
 
+    /// Uniform `f32` in `[lo, hi)`.
     pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
         self.rng.range(lo, hi)
     }
 
+    /// Standard-normal `f32`.
     pub fn normal(&mut self) -> f32 {
         self.rng.normal()
     }
 
+    /// Fair coin flip.
     pub fn bool(&mut self) -> bool {
         self.rng.chance(0.5)
     }
 
+    /// `len` uniform `f32`s in `[lo, hi)`.
     pub fn vec_f32(&mut self, len: usize, lo: f32, hi: f32) -> Vec<f32> {
         (0..len).map(|_| self.f32_in(lo, hi)).collect()
     }
 
+    /// `len` standard-normal `f32`s.
     pub fn vec_normal(&mut self, len: usize) -> Vec<f32> {
         (0..len).map(|_| self.normal()).collect()
     }

@@ -22,10 +22,12 @@ pub struct Reservoir {
 }
 
 impl Reservoir {
+    /// Empty reservoir holding at most `cap` samples.
     pub fn new(cap: usize, seed: u64) -> Self {
         Reservoir { cap, seen: 0, buf: Vec::with_capacity(cap), rng: crate::util::Rng::new(seed) }
     }
 
+    /// Offer one sample (reservoir-replaces once full).
     pub fn push(&mut self, x: f32) {
         self.seen += 1;
         if self.buf.len() < self.cap {
@@ -38,19 +40,23 @@ impl Reservoir {
         }
     }
 
+    /// The `p`-th percentile of the held samples (0 when empty).
     pub fn percentile(&self, p: f64) -> f32 {
         percentile(&self.buf, p)
     }
 
+    /// Samples currently held.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// Whether no samples are held.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 }
 
+/// Arithmetic mean (0 for an empty slice).
 pub fn mean(xs: &[f32]) -> f32 {
     if xs.is_empty() {
         return 0.0;

@@ -8,10 +8,12 @@ pub struct Table {
 }
 
 impl Table {
+    /// Table with the given column headers.
     pub fn new<S: Into<String>>(header: Vec<S>) -> Table {
         Table { header: header.into_iter().map(Into::into).collect(), rows: Vec::new() }
     }
 
+    /// Append one row (must match the header arity).
     pub fn row<S: Into<String>>(&mut self, cells: Vec<S>) -> &mut Self {
         let cells: Vec<String> = cells.into_iter().map(Into::into).collect();
         assert_eq!(cells.len(), self.header.len(), "row arity mismatch");
@@ -19,6 +21,7 @@ impl Table {
         self
     }
 
+    /// Render with aligned columns.
     pub fn render(&self) -> String {
         let ncol = self.header.len();
         let mut widths = vec![0usize; ncol];

@@ -289,8 +289,7 @@ fn start_parked_with_bytes(
                 park_bytes,
                 ..Default::default()
             },
-            governor: None,
-            fault: None,
+            ..Default::default()
         },
     )
     .expect("bind loopback");

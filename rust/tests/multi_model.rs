@@ -1,0 +1,340 @@
+//! Multi-model serving acceptance tests (PR 7's tentpole).
+//!
+//! * **routing** — a fleet coordinator hosting two different zoo models
+//!   serves each tenant bit-identically to a dedicated single-model
+//!   server: the wire-v4 `model` field threads end to end without
+//!   perturbing the engine;
+//! * **mixed-tenant load** — interleaved batches addressed to both
+//!   tenants complete losslessly and in slot order per request;
+//! * **fleet budget over the wire** — `SetBudget` at fleet scope moves
+//!   every tenant's published scale step in the right direction, and a
+//!   model-scoped cap starves only that tenant;
+//! * **addressing errors** — an unknown model id answers `Error`
+//!   without killing the session;
+//! * **version negotiation (satellite regression)** — a frame carrying
+//!   an unsupported wire version is answered with a clean `Goodbye`
+//!   and an orderly close, not a decode-error hangup.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{calibrated_cache, FleetScheduler, ScaleGrid};
+use unit_pruner::coordinator::{BackendChoice, Coordinator, ModelSpec, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{wire, Client, Frame, FrameReader, ServeOpts, Server, Status};
+
+const SIZES: Sizes = Sizes { train: 2, val: 4, test: 8 };
+
+fn model_q(name: &str, seed: u64) -> QModel {
+    let def = zoo(name);
+    let params = Params::random(&def, seed);
+    QModel::quantize(&def, &params)
+        .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.2))
+}
+
+/// Test samples for one zoo model (its own input length — routing a
+/// sample to the wrong tenant is a length mismatch and an `Error`).
+fn samples(name: &str, seed: u64) -> Vec<Vec<f32>> {
+    let ds = by_name(name, seed, SIZES);
+    (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect()
+}
+
+fn specs_for(models: &[(&str, u64)]) -> Vec<ModelSpec> {
+    models
+        .iter()
+        .map(|&(name, seed)| ModelSpec {
+            name: name.to_string(),
+            q: model_q(name, seed),
+            mode: PruneMode::Unit,
+            div: DivKind::Exact,
+        })
+        .collect()
+}
+
+/// A fleet server with a scheduler dividing `budget_mj`, plus each
+/// tenant's calibrated base cost (mean energy at its most expensive
+/// step) for budget arithmetic in the tests.
+fn fleet_with_scheduler(
+    models: &[(&str, u64)],
+    budget_mj: f64,
+) -> (Server, Arc<FleetScheduler>, Vec<f64>) {
+    let specs = specs_for(models);
+    let mut tenants = Vec::new();
+    let mut base = Vec::new();
+    for (spec, &(name, seed)) in specs.iter().zip(models) {
+        let ds = by_name(name, seed, SIZES);
+        let cal: Vec<Vec<f32>> =
+            (0..ds.val.len()).map(|i| ds.val.sample(i).to_vec()).collect();
+        let (cache, profile) = calibrated_cache(
+            spec.q.clone(),
+            PlanConfig::for_mode(PruneMode::Unit, DivKind::Exact),
+            ScaleGrid::default_grid(),
+            &cal,
+        );
+        base.push(profile.mean_mj(0));
+        tenants.push((cache, profile));
+    }
+    let coord =
+        Coordinator::start_multi(specs, ServeConfig { workers: 2, ..Default::default() });
+    let sched = FleetScheduler::install(&coord, tenants, budget_mj).expect("install");
+    let server = Server::start(
+        coord,
+        "127.0.0.1:0",
+        ServeOpts { scheduler: Some(Arc::clone(&sched)), ..Default::default() },
+    )
+    .expect("bind loopback");
+    (server, sched, base)
+}
+
+fn poll_until(mut f: impl FnMut() -> bool, secs: u64) -> bool {
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    while std::time::Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    f()
+}
+
+/// Acceptance: each tenant of a fleet server answers bit-identically
+/// to a dedicated single-model server built from the same quantized
+/// model — the v4 `model` field selects the pipeline and nothing else.
+#[test]
+fn fleet_tenants_serve_bit_identical_to_single_model_servers() {
+    let models: &[(&str, u64)] = &[("mnist", 41), ("cifar", 42)];
+    // Reference: one dedicated server per model.
+    let mut reference: Vec<Vec<Vec<f32>>> = Vec::new();
+    for &(name, seed) in models {
+        let coord = Coordinator::start(
+            BackendChoice::McuSim {
+                q: model_q(name, seed),
+                mode: PruneMode::Unit,
+                div: DivKind::Exact,
+            },
+            ServeConfig { workers: 2, ..Default::default() },
+        );
+        let server = Server::start(coord, "127.0.0.1:0", ServeOpts::default()).unwrap();
+        let client = Client::connect(server.local_addr()).unwrap();
+        let mut logits = Vec::new();
+        for x in samples(name, seed) {
+            let (_id, rx) = client.submit(&x, None).unwrap();
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(ev.status, Status::Ok);
+            logits.push(ev.logits);
+        }
+        assert!(client.goodbye(Duration::from_secs(10)));
+        server.shutdown();
+        reference.push(logits);
+    }
+    // Fleet: both models behind one coordinator, no control plane — the
+    // per-model default plans are exactly what the dedicated servers
+    // compiled.
+    let coord = Coordinator::start_multi(
+        specs_for(models),
+        ServeConfig { workers: 2, ..Default::default() },
+    );
+    let server = Server::start(coord, "127.0.0.1:0", ServeOpts::default()).unwrap();
+    let client = Client::connect(server.local_addr()).unwrap();
+    for (m, &(name, seed)) in models.iter().enumerate() {
+        for (i, x) in samples(name, seed).iter().enumerate() {
+            let (_id, rx) = client.submit_to(m as u32, x, None).unwrap();
+            let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert_eq!(ev.status, Status::Ok);
+            assert_eq!(
+                ev.logits, reference[m][i],
+                "model {m} sample {i}: fleet logits differ from single-model serving"
+            );
+        }
+    }
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Acceptance: interleaved batches addressed to both tenants are
+/// lossless and slot-ordered per request under concurrent clients.
+#[test]
+fn mixed_tenant_load_is_lossless_and_slot_ordered() {
+    let models: &[(&str, u64)] = &[("mnist", 43), ("cifar", 44)];
+    let budget: f64 = 1e12; // generous: allocation plays no part here
+    let (server, _sched, _base) = fleet_with_scheduler(models, budget);
+    let addr = server.local_addr();
+    let handles: Vec<_> = (0..2)
+        .map(|c| {
+            let pools: Vec<Vec<Vec<f32>>> =
+                models.iter().map(|&(n, s)| samples(n, s)).collect();
+            std::thread::spawn(move || {
+                let client = Client::connect(addr).unwrap();
+                let mut done = 0usize;
+                for round in 0..3 {
+                    // One in-flight batch per tenant, interleaved.
+                    let rxs: Vec<_> = pools
+                        .iter()
+                        .enumerate()
+                        .map(|(m, pool)| {
+                            let xs: Vec<Vec<f32>> = (0..pool.len())
+                                .map(|i| pool[(i + round + c) % pool.len()].clone())
+                                .collect();
+                            let n = xs.len();
+                            let (_id, rx) =
+                                client.submit_batch_to(m as u32, &xs, None).unwrap();
+                            (rx, n)
+                        })
+                        .collect();
+                    for (rx, n) in rxs {
+                        for slot in 0..n {
+                            let ev = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+                            assert_eq!(ev.status, Status::Ok);
+                            assert_eq!(ev.slot as usize, slot, "sub-replies out of order");
+                            done += 1;
+                        }
+                    }
+                }
+                client.goodbye(Duration::from_secs(10));
+                done
+            })
+        })
+        .collect();
+    let total: usize = handles.into_iter().map(|h| h.join().unwrap()).sum();
+    let snap = server.metrics().snapshot();
+    assert_eq!(snap.served, total as u64, "samples lost under mixed-tenant load");
+    assert_eq!(snap.rejected + snap.expired + snap.cancelled + snap.failed, 0);
+    server.shutdown();
+}
+
+/// Acceptance: fleet-scoped `SetBudget` re-solves the global
+/// allocation — starving pushes every tenant to its cheapest step,
+/// relief buys everyone back down — and a model-scoped cap starves
+/// only that tenant.
+#[test]
+fn fleet_budget_moves_published_steps_over_the_wire() {
+    let models: &[(&str, u64)] = &[("mnist", 51), ("cifar", 52)];
+    let (server, _sched, base) = fleet_with_scheduler(models, 1.0);
+    // Generous: both tenants' most expensive steps are affordable.
+    let generous = base.iter().sum::<f64>() * 2.0;
+    let client = Client::connect(server.local_addr()).unwrap();
+    let probe = client.query_stats(Duration::from_secs(10)).unwrap();
+    assert_eq!(probe.models_loaded, 2);
+    let last = probe.steps_total - 1;
+
+    let step_of = |m: u32| {
+        client.query_model_stats(m, Duration::from_secs(10)).unwrap().step
+    };
+    // Relief to generous: everyone buys down to the most expensive
+    // (most accurate) step.
+    client.set_budget(generous, Duration::from_secs(10)).unwrap();
+    assert!(
+        poll_until(|| step_of(0) == 0 && step_of(1) == 0, 30),
+        "generous fleet budget did not buy both tenants down (steps {}/{})",
+        step_of(0),
+        step_of(1)
+    );
+    // Starvation: no buy-down move is affordable; everyone stays at
+    // the cheapest step.
+    client.set_budget(1e-9, Duration::from_secs(10)).unwrap();
+    assert!(
+        poll_until(|| step_of(0) == last && step_of(1) == last, 30),
+        "starved fleet budget did not push both tenants up (steps {}/{})",
+        step_of(0),
+        step_of(1)
+    );
+    // Relief again: the walk is reversible.
+    client.set_budget(generous, Duration::from_secs(10)).unwrap();
+    assert!(
+        poll_until(|| step_of(0) == 0 && step_of(1) == 0, 30),
+        "fleet relief did not restore the allocation"
+    );
+    // Model-scoped cap: tenant 0 is pinned to affordable steps only,
+    // tenant 1 keeps its full allocation. The cap is far below tenant
+    // 0's cheapest isotonized cost, so it sits at the last step.
+    let reply = client
+        .set_model_budget(0, base[0] * 1e-9, Duration::from_secs(10))
+        .unwrap();
+    assert_eq!(reply.model, 0, "model-scoped reply must report that tenant");
+    assert!(
+        poll_until(|| step_of(0) == last && step_of(1) == 0, 30),
+        "tenant cap did not starve exactly the capped tenant (steps {}/{})",
+        step_of(0),
+        step_of(1)
+    );
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// An unknown model id answers `Error` without killing the session.
+#[test]
+fn unknown_model_id_answers_error_and_session_survives() {
+    let models: &[(&str, u64)] = &[("mnist", 61), ("cifar", 62)];
+    let coord = Coordinator::start_multi(
+        specs_for(models),
+        ServeConfig { workers: 2, ..Default::default() },
+    );
+    let server = Server::start(coord, "127.0.0.1:0", ServeOpts::default()).unwrap();
+    let client = Client::connect(server.local_addr()).unwrap();
+    let xs = samples("mnist", 61);
+    let (_id, rx) = client.submit_to(7, &xs[0], None).unwrap();
+    let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(ev.status, Status::Error, "unknown model must answer Error");
+    // A wrong-length sample (mnist data to the kws tenant) is the same
+    // protocol error, not a worker crash.
+    let (_id, rx) = client.submit_to(1, &xs[0], None).unwrap();
+    let ev = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+    assert_eq!(ev.status, Status::Error, "length mismatch must answer Error");
+    // The session survives both.
+    let (_id, rx) = client.submit_to(0, &xs[0], None).unwrap();
+    assert_eq!(rx.recv_timeout(Duration::from_secs(60)).unwrap().status, Status::Ok);
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}
+
+/// Satellite regression: an unsupported wire version is refused with a
+/// clean `Goodbye` and an orderly close — not a decode-error hangup.
+#[test]
+fn unsupported_wire_version_gets_goodbye_then_clean_close() {
+    use std::io::{Read, Write};
+
+    let coord = Coordinator::start(
+        BackendChoice::McuSim {
+            q: model_q("mnist", 71),
+            mode: PruneMode::Unit,
+            div: DivKind::Exact,
+        },
+        ServeConfig { workers: 1, ..Default::default() },
+    );
+    let server = Server::start(coord, "127.0.0.1:0", ServeOpts::default()).unwrap();
+
+    // A structurally valid Ping whose version field claims 99: patch
+    // the version bytes and re-seal the CRC so only the version check
+    // can reject it.
+    let mut bytes = wire::encode(&Frame::Ping { id: 9 });
+    bytes[8..10].copy_from_slice(&99u16.to_le_bytes());
+    let n = bytes.len();
+    let crc = wire::crc32(&bytes[4..n - 4]);
+    bytes[n - 4..].copy_from_slice(&crc.to_le_bytes());
+
+    let mut stream = std::net::TcpStream::connect(server.local_addr()).unwrap();
+    stream.write_all(&bytes).unwrap();
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut reader = FrameReader::new();
+    let mut got = Vec::new();
+    let mut buf = [0u8; 4096];
+    let clean_eof = loop {
+        match stream.read(&mut buf) {
+            Ok(0) => break true,
+            Ok(k) => {
+                reader.feed(&buf[..k]);
+                while let Some(f) = reader.next().expect("server reply must stay framed") {
+                    got.push(f);
+                }
+            }
+            Err(e) => panic!("read after bad-version frame failed: {e}"),
+        }
+    };
+    assert_eq!(got, vec![Frame::Goodbye], "expected exactly one Goodbye");
+    assert!(clean_eof, "connection must close cleanly after the Goodbye");
+    server.shutdown();
+}

@@ -51,6 +51,7 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
                 id: g.u32_in(0, u32::MAX - 1) as u64,
                 deadline_ms: g.u32_in(0, 100_000),
                 sample_len: sample_len as u32,
+                model: g.u32_in(0, 8),
                 data,
             }
         }
@@ -78,6 +79,7 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
             // Finite values only: NaN would break the equality check,
             // and the protocol treats <= 0.0 as a pure query anyway.
             budget_mj: g.f32_in(0.0, 1000.0) as f64,
+            model: if g.bool() { wire::FLEET_MODEL } else { g.u32_in(0, 8) },
         },
         6 => Frame::Stats {
             id: g.u32_in(0, u32::MAX - 1) as u64,
@@ -97,6 +99,9 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
             respawns: g.u32_in(0, u32::MAX - 1) as u64,
             drift_trips: g.u32_in(0, u32::MAX - 1) as u64,
             recalibrations: g.u32_in(0, u32::MAX - 1) as u64,
+            model: g.u32_in(0, 8),
+            models_loaded: g.u32_in(0, 8),
+            fleet_budget_mj: g.f32_in(0.0, 1000.0) as f64,
         },
         _ => Frame::Goodbye,
     }
@@ -192,7 +197,7 @@ fn start_server(q: QModel, workers: usize, session: SessionCfg) -> Server {
         BackendChoice::McuSim { q, mode: PruneMode::Unit, div },
         ServeConfig { workers, placement: Placement::CostWeighted, ..Default::default() },
     );
-    let opts = ServeOpts { max_conns: 8, session, governor: None, fault: None };
+    let opts = ServeOpts { max_conns: 8, session, ..Default::default() };
     Server::start(coord, "127.0.0.1:0", opts).expect("bind loopback")
 }
 

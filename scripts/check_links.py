@@ -1,0 +1,104 @@
+#!/usr/bin/env python3
+"""Docs gate: relative links, anchors, and wire-protocol coverage.
+
+Stdlib only. Two checks, both hard failures:
+
+1. Every relative link / image in README.md and docs/*.md resolves to a
+   real file, and every `#anchor` (same-file or cross-file) matches a
+   heading in the target file under GitHub's slugification rules.
+2. docs/wire-protocol.md names every `Frame` and `Status` variant
+   declared in rust/src/serve/wire.rs, so the normative spec cannot
+   silently fall behind the codec.
+
+Run from the repo root: python3 scripts/check_links.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+DOC_FILES = sorted([ROOT / "README.md", *(ROOT / "docs").glob("*.md")])
+
+LINK_RE = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)\)")
+HEADING_RE = re.compile(r"^#{1,6}\s+(.*)$", re.MULTILINE)
+
+
+def github_slug(heading: str) -> str:
+    """GitHub's anchor slug: strip markup, lowercase, drop punctuation,
+    spaces to hyphens."""
+    text = heading.strip()
+    text = re.sub(r"`([^`]*)`", r"\1", text)  # unwrap inline code
+    text = re.sub(r"\[([^\]]*)\]\([^)]*\)", r"\1", text)  # unwrap links
+    text = text.lower()
+    text = re.sub(r"[^\w\- ]", "", text)
+    return text.replace(" ", "-")
+
+
+def anchors_of(path: Path) -> set:
+    slugs = set()
+    seen = {}
+    for m in HEADING_RE.finditer(path.read_text(encoding="utf-8")):
+        slug = github_slug(m.group(1))
+        n = seen.get(slug, 0)
+        seen[slug] = n + 1
+        slugs.add(slug if n == 0 else f"{slug}-{n}")
+    return slugs
+
+
+def check_links() -> list:
+    errors = []
+    for doc in DOC_FILES:
+        text = doc.read_text(encoding="utf-8")
+        for m in LINK_RE.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path_part, _, anchor = target.partition("#")
+            resolved = doc if not path_part else (doc.parent / path_part).resolve()
+            rel = doc.relative_to(ROOT)
+            if not resolved.exists():
+                errors.append(f"{rel}: broken link {target!r} ({path_part} not found)")
+                continue
+            if anchor:
+                if resolved.suffix != ".md":
+                    continue  # only markdown files carry checkable anchors
+                if anchor not in anchors_of(resolved):
+                    errors.append(f"{rel}: broken anchor {target!r} (no heading slugs to #{anchor})")
+    return errors
+
+
+def check_protocol_coverage() -> list:
+    errors = []
+    wire = (ROOT / "rust/src/serve/wire.rs").read_text(encoding="utf-8")
+    spec = (ROOT / "docs/wire-protocol.md").read_text(encoding="utf-8")
+
+    def enum_variants(name: str) -> list:
+        m = re.search(rf"pub enum {name}\b[^{{]*{{(.*?)^}}", wire, re.DOTALL | re.MULTILINE)
+        if not m:
+            return []
+        return re.findall(r"^    (?:///.*\n    )*([A-Z]\w*)", m.group(1), re.MULTILINE)
+
+    frames = enum_variants("Frame")
+    statuses = enum_variants("Status")
+    if not frames or not statuses:
+        return [f"could not extract enums from wire.rs (frames={frames}, statuses={statuses})"]
+    for kind, variants in (("Frame", frames), ("Status", statuses)):
+        for v in variants:
+            if not re.search(rf"`{re.escape(v)}`", spec):
+                errors.append(f"docs/wire-protocol.md: {kind} variant `{v}` is undocumented")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_protocol_coverage()
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    n_links = sum(len(LINK_RE.findall(p.read_text(encoding="utf-8"))) for p in DOC_FILES)
+    print(f"checked {len(DOC_FILES)} files, {n_links} links; {len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
