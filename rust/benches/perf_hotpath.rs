@@ -35,7 +35,9 @@ use unit_pruner::engine::{
 use unit_pruner::models::{zoo, Params};
 use unit_pruner::nn::ForwardOpts;
 use unit_pruner::pruning::Thresholds;
-use unit_pruner::report::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow};
+use unit_pruner::report::bench::{
+    BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow, LayerRow,
+};
 use unit_pruner::train::{
     evaluate_float, evaluate_float_parallel, evaluate_quant, evaluate_quant_parallel,
 };
@@ -84,6 +86,16 @@ fn main() {
         let b = planned.infer(&inputs[0]);
         assert_eq!(a.logits_raw, b.logits_raw, "{name}: backend logits diverge");
         assert_eq!(a.kept, b.kept, "{name}: backend kept counts diverge");
+
+        // Per-layer MAC accounting for the representative unit-mode
+        // inference: section `per_layer_macs` in the snapshot, the
+        // offline twin of the serving stack's unit_layer_macs_total /
+        // unit_layer_keep_ratio exposition families.
+        if mode == PruneMode::Unit {
+            for (i, (&k, &s)) in a.kept.iter().zip(&a.skipped).enumerate() {
+                json.per_layer.push(LayerRow::new(i, k, s));
+            }
+        }
 
         let mut per_backend = Vec::new();
         // Quick mode trims wall-clock but keeps enough reps that the

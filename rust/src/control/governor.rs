@@ -90,6 +90,7 @@ use crate::coordinator::{
     Coordinator, CostEstimator, CostEstimatorSlot, EnergyController, EnergyTap, Metrics,
     PlanSlot,
 };
+use crate::obs::{EventKind, TraceRing};
 use crate::util::{lock_recover, read_recover, write_recover};
 
 /// A point-in-time view of the governor (the `Stats` admin frame's
@@ -176,6 +177,10 @@ pub struct Governor {
     /// Coordinator metrics mirror for the bg counters (serve stats
     /// line / snapshots).
     metrics: Arc<Metrics>,
+    /// Flight-recorder ring ("control") for plan swaps, background
+    /// compiles, drift trips, and recalibrations. `None` when the
+    /// coordinator runs with observability off.
+    ring: Option<Arc<TraceRing>>,
 }
 
 impl std::fmt::Debug for Governor {
@@ -237,6 +242,7 @@ impl Governor {
             recalibrations: AtomicU64::new(0),
             publish_dist: Default::default(),
             metrics: Arc::clone(&coord.metrics),
+            ring: coord.recorder().map(|r| r.ring("control")),
         });
         // The compile thread holds only a Weak: the governor's Drop
         // closes the channel and joins it.
@@ -245,10 +251,21 @@ impl Governor {
         *lock_recover(&gov.compile_handle) = Some(handle);
         // Startup seed compiles synchronously: nothing is serving yet.
         slot.swap(cache.plan_at(step));
+        gov.trace(EventKind::PlanSwap, step as u64);
         gov.retarget_cost(step);
         gov.publish_bg_metrics();
         coord.set_energy_tap(Some(Arc::clone(&gov) as Arc<dyn EnergyTap>));
         Ok(gov)
+    }
+
+    /// Emit one flight-recorder event on the "control" ring (no-op
+    /// when observability is off). `id` is 0: the single-model
+    /// governor always governs model 0; the fleet scheduler stamps
+    /// real model ids on its own ring.
+    fn trace(&self, kind: EventKind, a: u64) {
+        if let Some(r) = &self.ring {
+            r.emit(kind, 0, a, 0, 0);
+        }
     }
 
     fn retarget_cost(&self, step: usize) {
@@ -396,6 +413,7 @@ impl EnergyTap for Governor {
             self.step.store(want, Ordering::Release);
             self.swaps.fetch_add(1, Ordering::Relaxed);
             self.record_publish_distance(0);
+            self.trace(EventKind::PlanSwap, want as u64);
             self.retarget_cost(want);
             return;
         }
@@ -415,6 +433,7 @@ impl EnergyTap for Governor {
                 self.step.store(near, Ordering::Release);
                 self.swaps.fetch_add(1, Ordering::Relaxed);
                 self.record_publish_distance(near.abs_diff(want));
+                self.trace(EventKind::PlanSwap, near as u64);
                 self.retarget_cost(near);
             }
         }
@@ -432,6 +451,7 @@ impl EnergyTap for Governor {
         let tripped = lock_recover(&self.drift).observe(ratio, expected);
         if tripped {
             self.drift_trips.fetch_add(1, Ordering::Relaxed);
+            self.trace(EventKind::DriftTrip, 0);
             self.request_recalibrate();
         }
     }
@@ -457,6 +477,7 @@ fn compile_loop(gov: Weak<Governor>, rx: Receiver<Job>) {
                 let plan = gov.cache.plan_at(step);
                 lock_recover(&gov.compiling).remove(&step);
                 gov.bg_compiled.fetch_add(1, Ordering::Relaxed);
+                gov.trace(EventKind::BgCompile, step as u64);
                 // Upgrade under the controller lock so inline swaps and
                 // upgrades are serialized against each other. A stale
                 // step (controller moved on while we compiled) stays
@@ -470,6 +491,7 @@ fn compile_loop(gov: Weak<Governor>, rx: Receiver<Job>) {
                         gov.swaps.fetch_add(1, Ordering::Relaxed);
                         gov.bg_upgrades.fetch_add(1, Ordering::Relaxed);
                         gov.record_publish_distance(0);
+                        gov.trace(EventKind::PlanSwap, step as u64);
                         gov.retarget_cost(step);
                     }
                 }
@@ -513,6 +535,7 @@ fn recalibrate(gov: &Arc<Governor>) {
                 gov.step.store(seed, Ordering::Release);
                 gov.swaps.fetch_add(1, Ordering::Relaxed);
                 gov.record_publish_distance(0);
+                gov.trace(EventKind::PlanSwap, seed as u64);
             }
         }
         gov.retarget_cost(gov.step.load(Ordering::Acquire));
@@ -521,6 +544,7 @@ fn recalibrate(gov: &Arc<Governor>) {
     }
     lock_recover(&gov.reservoir).clear();
     gov.recalibrations.fetch_add(1, Ordering::Relaxed);
+    gov.trace(EventKind::Recalibrate, 0);
     gov.recal_pending.store(false, Ordering::Release);
     gov.publish_bg_metrics();
 }

@@ -60,6 +60,7 @@ use std::thread::JoinHandle;
 use super::calibrate::{DriftCfg, DriftTracker, InputReservoir, KeepProfile, ProfiledCost};
 use super::plan_cache::PlanCache;
 use crate::coordinator::{Coordinator, CostEstimator, CostEstimatorSlot, EnergyTap, PlanSlot};
+use crate::obs::{EventKind, TraceRing};
 use crate::util::{lock_recover, read_recover, write_recover};
 
 /// One model's allocation inputs: the calibrated per-step curves (grid
@@ -230,6 +231,10 @@ pub struct FleetScheduler {
     resolves: AtomicU64,
     job_tx: Mutex<Option<Sender<Job>>>,
     handle: Mutex<Option<JoinHandle<()>>>,
+    /// Flight-recorder ring ("fleet") for re-solves, per-tenant plan
+    /// swaps, drift trips, and recalibrations. `None` when the
+    /// coordinator runs with observability off.
+    ring: Option<Arc<TraceRing>>,
 }
 
 impl std::fmt::Debug for FleetScheduler {
@@ -299,6 +304,7 @@ impl FleetScheduler {
             resolves: AtomicU64::new(0),
             job_tx: Mutex::new(Some(tx)),
             handle: Mutex::new(None),
+            ring: coord.recorder().map(|r| r.ring("fleet")),
         });
         // Startup seed solves synchronously: nothing is serving yet,
         // so the (possibly cache-missing) plan compiles are free.
@@ -332,11 +338,12 @@ impl FleetScheduler {
             })
             .collect();
         let steps = allocate_fleet(&curves, budget);
-        for ((t, p), &s) in self.tenants.iter().zip(&profiles).zip(&steps) {
+        for (i, ((t, p), &s)) in self.tenants.iter().zip(&profiles).zip(&steps).enumerate() {
             if t.step.load(Ordering::Acquire) != s {
                 t.slot.swap(t.cache.plan_at(s));
                 t.step.store(s, Ordering::Release);
                 t.swaps.fetch_add(1, Ordering::Relaxed);
+                self.trace(EventKind::PlanSwap, i as u64, s as u64);
             }
             // Always retarget pricing: the profile may have been
             // republished even when the step held still.
@@ -345,6 +352,16 @@ impl FleetScheduler {
             *write_recover(&t.cost_slot) = Some(est);
         }
         self.resolves.fetch_add(1, Ordering::Relaxed);
+        self.trace(EventKind::FleetResolve, 0, 0);
+    }
+
+    /// Emit one flight-recorder event on the "fleet" ring (no-op when
+    /// observability is off). `id` carries the model index for
+    /// tenant-scoped events, 0 for fleet-wide ones.
+    fn trace(&self, kind: EventKind, id: u64, a: u64) {
+        if let Some(r) = &self.ring {
+            r.emit(kind, id, a, 0, 0);
+        }
     }
 
     /// Enqueue a background re-solve (budget/cap changes, tests).
@@ -474,6 +491,7 @@ impl EnergyTap for FleetScheduler {
         let tripped = lock_recover(&t.drift).observe(ratio, expected);
         if tripped {
             t.drift_trips.fetch_add(1, Ordering::Relaxed);
+            self.trace(EventKind::DriftTrip, model as u64, 0);
             self.request_recalibrate(model as usize);
         }
     }
@@ -521,6 +539,7 @@ fn recalibrate_tenant(sched: &Arc<FleetScheduler>, i: usize) {
     lock_recover(&t.drift).reset();
     lock_recover(&t.reservoir).clear();
     t.recalibrations.fetch_add(1, Ordering::Relaxed);
+    sched.trace(EventKind::Recalibrate, i as u64, 0);
     t.recal_pending.store(false, Ordering::Release);
     sched.resolve();
 }

@@ -1,57 +1,76 @@
 //! Serving metrics: request counters, latency percentiles, aggregate
-//! MAC/energy statistics. Shared across workers behind a mutex (the
-//! request path touches it once per request, far from contention at
-//! simulator throughputs).
+//! MAC/energy statistics.
 //!
 //! Queue wait (enqueue → dequeue) and service time (dequeue → response)
 //! are recorded separately: a shard-balance regression in the
 //! work-stealing pool shows up as queue percentiles growing while
 //! service percentiles stay flat, which the total alone cannot reveal.
 //!
-//! Percentiles are computed over a bounded sliding window
-//! ([`TIMING_WINDOW`] most recent requests) so a long-lived server's
-//! metrics stay O(1) in memory and `snapshot` stays O(window) however
-//! many requests have been served; the counters and means cover the
-//! full lifetime.
+//! Percentiles come from fixed-size log-bucketed histograms
+//! ([`crate::obs::hist`]): constant memory however long the server
+//! lives, O(buckets) snapshots, and shard-local recording merged at
+//! snapshot time — the raw-sample `TimingWindow` rings this replaced
+//! were O(window) memory per series and sorted on every snapshot.
+//!
+//! # Consistency guarantee
+//!
+//! All **counters, sums, and gauges** live under one mutex and are
+//! copied in a single critical section, so any snapshot is a mutually
+//! consistent cut of them (`served` can never lag `batches`, panic and
+//! respawn counts move together, and so on). The **histograms**
+//! (latency/keep-ratio/MAC percentiles) are recorded *outside* that
+//! mutex on sharded locks for concurrency; their sample populations
+//! may therefore lead or lag the counter cut by the handful of
+//! requests mid-record at snapshot time. Percentiles are statistical
+//! summaries, so this skew is harmless — but it is the guarantee
+//! actually provided, hence documented.
 
 use std::sync::Mutex;
 
-/// Requests retained for percentile computation (per timing series).
-pub const TIMING_WINDOW: usize = 1 << 16;
+use crate::obs::hist::{ShardedHistogram, RATIO_SCALE};
 
-/// Fixed-capacity ring of the most recent timing samples.
-#[derive(Debug, Default, Clone)]
-struct TimingWindow {
-    buf: Vec<u64>,
-    next: usize,
-}
-
-impl TimingWindow {
-    fn push(&mut self, v: u64) {
-        if self.buf.len() < TIMING_WINDOW {
-            self.buf.push(v);
-        } else {
-            self.buf[self.next] = v;
-            self.next = (self.next + 1) % TIMING_WINDOW;
-        }
-    }
-}
+/// Lock shards per histogram series (worker-count scale).
+const HIST_SHARDS: usize = 4;
 
 /// Aggregated serving metrics.
-#[derive(Debug, Default)]
+#[derive(Debug)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Queue-wait histogram (enqueue → worker pickup), µs.
+    queue_us: ShardedHistogram,
+    /// Service-time histogram (worker pickup → response), µs.
+    service_us: ShardedHistogram,
+    /// Total latency histogram, µs. Recorded as `queue + service` of
+    /// the same request at completion, so its percentiles reflect true
+    /// per-request totals (not an after-the-fact convolution).
+    total_us: ShardedHistogram,
+    /// Keep-ratio histogram, fixed point at [`RATIO_SCALE`].
+    keep_ratio: ShardedHistogram,
+    /// Executed-MACs-per-request histogram.
+    macs: ShardedHistogram,
+    /// Per-model, per-layer (executed, skipped) MAC accumulators,
+    /// populated by workers only when observability is on.
+    layers: Mutex<Vec<Vec<(u64, u64)>>>,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            inner: Mutex::new(Inner::default()),
+            queue_us: ShardedHistogram::new(HIST_SHARDS),
+            service_us: ShardedHistogram::new(HIST_SHARDS),
+            total_us: ShardedHistogram::new(HIST_SHARDS),
+            keep_ratio: ShardedHistogram::new(HIST_SHARDS),
+            macs: ShardedHistogram::new(HIST_SHARDS),
+            layers: Mutex::new(Vec::new()),
+        }
+    }
 }
 
 #[derive(Debug, Default, Clone)]
 struct Inner {
     served: u64,
     batches: u64,
-    /// Paired rings: index i of both windows belongs to the same
-    /// request (pushed together under the mutex), so total latency is
-    /// derived per slot instead of stored a third time.
-    queue_us: TimingWindow,
-    service_us: TimingWindow,
     mac_skipped_sum: f64,
     energy_mj_sum: f64,
     mcu_secs_sum: f64,
@@ -121,6 +140,14 @@ pub struct Snapshot {
     pub service_p95_us: u64,
     /// 99th-percentile service time (µs).
     pub service_p99_us: u64,
+    /// Keep-ratio percentiles (fraction of MACs executed, 0..=1).
+    pub keep_p50: f64,
+    /// 95th-percentile keep ratio.
+    pub keep_p95: f64,
+    /// Executed-MACs-per-request percentiles.
+    pub mac_p50: u64,
+    /// 99th-percentile executed MACs per request.
+    pub mac_p99: u64,
     /// Mean executed batch size.
     pub mean_batch: f64,
     /// Mean fraction of MACs skipped per sample.
@@ -161,14 +188,6 @@ pub struct Snapshot {
     pub failed: u64,
 }
 
-fn percentile(sorted: &[u64], p: f64) -> u64 {
-    if sorted.is_empty() {
-        0
-    } else {
-        sorted[((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize]
-    }
-}
-
 impl Metrics {
     /// Fresh zeroed metrics.
     pub fn new() -> Metrics {
@@ -183,7 +202,7 @@ impl Metrics {
     }
 
     /// Record one finished request: queue wait and service time in µs,
-    /// plus the modeled MCU statistics.
+    /// the modeled MCU statistics, and the executed MAC count.
     pub fn record_request(
         &self,
         queue_us: u64,
@@ -191,14 +210,49 @@ impl Metrics {
         mac_skipped: f64,
         energy_mj: f64,
         mcu_secs: f64,
+        macs: u64,
     ) {
-        let mut g = self.inner.lock().unwrap();
-        g.served += 1;
-        g.queue_us.push(queue_us);
-        g.service_us.push(service_us);
-        g.mac_skipped_sum += mac_skipped;
-        g.energy_mj_sum += energy_mj;
-        g.mcu_secs_sum += mcu_secs;
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.served += 1;
+            g.mac_skipped_sum += mac_skipped;
+            g.energy_mj_sum += energy_mj;
+            g.mcu_secs_sum += mcu_secs;
+        }
+        // Histograms record outside the counter mutex (see the module
+        // docs' consistency note).
+        self.queue_us.record(queue_us);
+        self.service_us.record(service_us);
+        self.total_us.record(queue_us + service_us);
+        let keep = ((1.0 - mac_skipped).clamp(0.0, 1.0) * RATIO_SCALE as f64).round() as u64;
+        self.keep_ratio.record(keep);
+        self.macs.record(macs);
+    }
+
+    /// Accumulate one request's per-layer (executed, skipped) MAC
+    /// counts for model `model`. Called by workers only when
+    /// observability is enabled; grows the tables on first sight of a
+    /// model/layer.
+    pub fn record_layers(&self, model: usize, kept: &[u64], skipped: &[u64]) {
+        let mut g = self.layers.lock().unwrap();
+        if g.len() <= model {
+            g.resize(model + 1, Vec::new());
+        }
+        let rows = &mut g[model];
+        if rows.len() < kept.len() {
+            rows.resize(kept.len(), (0, 0));
+        }
+        for (i, row) in rows.iter_mut().enumerate().take(kept.len()) {
+            row.0 += kept[i];
+            row.1 += skipped.get(i).copied().unwrap_or(0);
+        }
+    }
+
+    /// Per-model, per-layer cumulative (executed, skipped) MAC totals.
+    /// Empty until a worker with observability enabled has served a
+    /// request.
+    pub fn layer_totals(&self) -> Vec<Vec<(u64, u64)>> {
+        self.layers.lock().unwrap().clone()
     }
 
     /// A request bounced by session backpressure (in-flight window full).
@@ -274,31 +328,34 @@ impl Metrics {
         self.inner.lock().unwrap().inflight += d;
     }
 
-    /// Consistent copy of all counters and percentile estimates.
+    /// Snapshot of all counters and percentile estimates. Counters,
+    /// sums, and gauges are one consistent cut (copied under a single
+    /// lock); histogram percentiles may lead or lag that cut by
+    /// requests mid-record (see the module docs).
     pub fn snapshot(&self) -> Snapshot {
-        let g = self.inner.lock().unwrap();
-        let mut que = g.queue_us.buf.clone();
-        let mut svc = g.service_us.buf.clone();
-        // Same slot of both rings = same request, so per-request total
-        // latency is the element-wise sum.
-        let mut lat: Vec<u64> =
-            que.iter().zip(svc.iter()).map(|(a, b)| a + b).collect();
-        lat.sort_unstable();
-        que.sort_unstable();
-        svc.sort_unstable();
+        let g = self.inner.lock().unwrap().clone();
+        let lat = self.total_us.merged();
+        let que = self.queue_us.merged();
+        let svc = self.service_us.merged();
+        let keep = self.keep_ratio.merged();
+        let macs = self.macs.merged();
         let served = g.served.max(1) as f64;
         Snapshot {
             served: g.served,
             batches: g.batches,
-            p50_us: percentile(&lat, 50.0),
-            p95_us: percentile(&lat, 95.0),
-            p99_us: percentile(&lat, 99.0),
-            queue_p50_us: percentile(&que, 50.0),
-            queue_p95_us: percentile(&que, 95.0),
-            queue_p99_us: percentile(&que, 99.0),
-            service_p50_us: percentile(&svc, 50.0),
-            service_p95_us: percentile(&svc, 95.0),
-            service_p99_us: percentile(&svc, 99.0),
+            p50_us: lat.percentile(50.0),
+            p95_us: lat.percentile(95.0),
+            p99_us: lat.percentile(99.0),
+            queue_p50_us: que.percentile(50.0),
+            queue_p95_us: que.percentile(95.0),
+            queue_p99_us: que.percentile(99.0),
+            service_p50_us: svc.percentile(50.0),
+            service_p95_us: svc.percentile(95.0),
+            service_p99_us: svc.percentile(99.0),
+            keep_p50: keep.percentile(50.0) as f64 / RATIO_SCALE as f64,
+            keep_p95: keep.percentile(95.0) as f64 / RATIO_SCALE as f64,
+            mac_p50: macs.percentile(50.0),
+            mac_p99: macs.percentile(99.0),
             mean_batch: g.served as f64 / g.batches.max(1) as f64,
             mean_mac_skipped: g.mac_skipped_sum / served,
             mean_energy_mj: g.energy_mj_sum / served,
@@ -311,7 +368,7 @@ impl Metrics {
             sessions_opened: g.sessions_opened,
             sessions_closed: g.sessions_closed,
             inflight: g.inflight,
-            shard_costs: g.shard_costs.clone(),
+            shard_costs: g.shard_costs,
             bg_pending: g.bg_pending,
             bg_compiled: g.bg_compiled,
             bg_upgrades: g.bg_upgrades,
@@ -330,7 +387,7 @@ mod tests {
     fn percentiles_ordered() {
         let m = Metrics::new();
         for i in 0..100 {
-            m.record_request(i, 2 * i, 0.5, 0.1, 0.01);
+            m.record_request(i, 2 * i, 0.5, 0.1, 0.01, 1024);
         }
         m.record_batch(100);
         let s = m.snapshot();
@@ -340,28 +397,36 @@ mod tests {
         assert!(s.service_p50_us <= s.service_p99_us);
         assert!((s.mean_mac_skipped - 0.5).abs() < 1e-9);
         assert_eq!(s.mean_batch, 100.0);
+        assert!((s.keep_p50 - 0.5).abs() < 1e-3, "keep_p50 = {}", s.keep_p50);
+        assert_eq!(s.mac_p50, 1024, "powers of two are exactly representable");
     }
 
     #[test]
     fn queue_and_service_split_total() {
         let m = Metrics::new();
-        m.record_request(10, 30, 0.0, 0.0, 0.0);
+        m.record_request(10, 30, 0.0, 0.0, 0.0, 0);
         let s = m.snapshot();
         assert_eq!(s.queue_p50_us, 10);
         assert_eq!(s.service_p50_us, 30);
         assert_eq!(s.p50_us, 40);
+        assert!((s.keep_p50 - 1.0).abs() < 1e-9, "0 skipped = keep ratio 1");
     }
 
     #[test]
-    fn timing_window_is_bounded_and_keeps_recent_samples() {
-        let mut w = TimingWindow::default();
-        for i in 0..(TIMING_WINDOW as u64 + 100) {
-            w.push(i);
+    fn histogram_memory_is_bounded() {
+        // The raw-sample windows this replaced held 1<<16 u64s per
+        // series; the histograms are constant-size however many
+        // requests are recorded. Record far past the old window and
+        // check snapshots still see the full population.
+        let m = Metrics::new();
+        let n = (1u64 << 17) + 100;
+        for i in 0..n {
+            m.record_request(i % 1000, 50, 0.0, 0.0, 0.0, 0);
         }
-        assert_eq!(w.buf.len(), TIMING_WINDOW);
-        // the 100 oldest samples were overwritten by the newest 100
-        assert!(w.buf.contains(&(TIMING_WINDOW as u64 + 99)));
-        assert!(!w.buf.contains(&0));
+        let s = m.snapshot();
+        assert_eq!(s.served, n);
+        assert_eq!(s.service_p50_us, 50);
+        assert!(s.queue_p99_us <= 1000);
     }
 
     #[test]
@@ -373,6 +438,7 @@ mod tests {
         assert_eq!(s.service_p99_us, 0);
         assert_eq!(s.rejected, 0);
         assert_eq!(s.inflight, 0);
+        assert_eq!(s.mac_p99, 0);
     }
 
     #[test]
@@ -432,5 +498,19 @@ mod tests {
         assert_eq!(m.snapshot().shard_costs, vec![10, 20, 30]);
         m.record_shard_costs(&[5, 0, 7]);
         assert_eq!(m.snapshot().shard_costs, vec![5, 0, 7], "gauges must replace");
+    }
+
+    #[test]
+    fn layer_totals_accumulate_per_model_and_layer() {
+        let m = Metrics::new();
+        assert!(m.layer_totals().is_empty());
+        m.record_layers(0, &[100, 200], &[50, 0]);
+        m.record_layers(0, &[10, 20], &[5, 5]);
+        m.record_layers(2, &[7], &[3]);
+        let t = m.layer_totals();
+        assert_eq!(t.len(), 3);
+        assert_eq!(t[0], vec![(110, 55), (220, 5)]);
+        assert!(t[1].is_empty(), "unseen model stays empty");
+        assert_eq!(t[2], vec![(7, 3)]);
     }
 }

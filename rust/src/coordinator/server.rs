@@ -50,6 +50,7 @@ use crate::approx::DivKind;
 use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel, Scratch};
 use crate::mcu::EnergyModel;
 use crate::models::Params;
+use crate::obs::{EventKind, FlightRecorder, LayerSink, ObsConfig, TraceRing};
 use crate::util::stats::argmax;
 use crate::util::{lock_recover, read_recover, write_recover, FaultPlan};
 
@@ -111,6 +112,10 @@ pub struct ServeConfig {
     /// Deterministic fault-injection plan (worker panics, for the
     /// chaos harness); `None` — no probes taken — in production.
     pub fault: Option<Arc<FaultPlan>>,
+    /// Observability wiring. [`ObsConfig::off`] (the default) takes no
+    /// timestamps and emits no events — the request hot path is
+    /// bit-identical to a build without the subsystem.
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -121,6 +126,7 @@ impl Default for ServeConfig {
             max_wait: Duration::from_millis(2),
             placement: Placement::default(),
             fault: None,
+            obs: ObsConfig::off(),
         }
     }
 }
@@ -292,6 +298,10 @@ pub struct Coordinator {
     /// inference.
     energy_tap: EnergyTapSlot,
     placement: Placement,
+    /// Observability wiring; the "intake" ring (when on) records one
+    /// `Enqueue` event per submitted sample.
+    obs: ObsConfig,
+    intake_ring: Option<Arc<TraceRing>>,
     /// Shared serving metrics (latency, batches, panics, drops).
     pub metrics: Arc<Metrics>,
 }
@@ -317,6 +327,7 @@ impl Coordinator {
                 let handles = vec![std::thread::spawn(move || {
                     pjrt_executor(rx, model, params, t_vec, fat_t, policy, exec_metrics)
                 })];
+                let intake_ring = cfg.obs.recorder.as_ref().map(|r| r.ring("intake"));
                 Coordinator {
                     intake: Intake::Chan(Mutex::new(Some(tx))),
                     handles: Mutex::new(handles),
@@ -329,6 +340,8 @@ impl Coordinator {
                     }]),
                     energy_tap: Arc::new(RwLock::new(None)),
                     placement: cfg.placement,
+                    obs: cfg.obs,
+                    intake_ring,
                     metrics,
                 }
             }
@@ -370,6 +383,8 @@ impl Coordinator {
         let models = Arc::new(entries);
         let workers = cfg.workers.max(1);
         let pool = Arc::new(ShardPool::new(workers));
+        let obs = cfg.obs.clone();
+        let intake_ring = obs.recorder.as_ref().map(|r| r.ring("intake"));
         let handles = (0..workers)
             .map(|w| {
                 let pool = Arc::clone(&pool);
@@ -377,6 +392,10 @@ impl Coordinator {
                 let metrics = Arc::clone(&metrics);
                 let tap = Arc::clone(&energy_tap);
                 let fault = cfg.fault.clone();
+                // One flight-recorder ring per worker: per-worker
+                // writers never contend, and the Chrome export maps
+                // each ring to its own synthetic thread lane.
+                let ring = obs.recorder.as_ref().map(|r| r.ring(&format!("worker{w}")));
                 // Panic supervisor: a worker panic (engine bug or
                 // injected chaos) fails the stranded request through
                 // its ctl and re-enters the loop with fresh scratch,
@@ -396,6 +415,7 @@ impl Coordinator {
                                 &metrics,
                                 &tap,
                                 fault.as_deref(),
+                                ring.as_deref(),
                                 &inflight,
                             )
                         }));
@@ -404,10 +424,16 @@ impl Coordinator {
                             Ok(()) => break,
                             Err(_) => {
                                 metrics.record_worker_panic();
+                                if let Some(r) = &ring {
+                                    r.emit(EventKind::WorkerPanic, 0, w as u64, 0, 0);
+                                }
                                 if let Some(fl) = lock_recover(&inflight).take() {
                                     fail_inflight(fl, &metrics);
                                 }
                                 metrics.record_respawn();
+                                if let Some(r) = &ring {
+                                    r.emit(EventKind::WorkerRespawn, 0, w as u64, 0, 0);
+                                }
                             }
                         }
                     }
@@ -421,8 +447,16 @@ impl Coordinator {
             models,
             energy_tap,
             placement,
+            obs,
+            intake_ring,
             metrics,
         }
+    }
+
+    /// The attached flight recorder, when observability is on
+    /// (`None` with [`ObsConfig::off`] — the default).
+    pub fn recorder(&self) -> Option<Arc<FlightRecorder>> {
+        self.obs.recorder.clone()
     }
 
     /// Price one sample for placement: the owning model's active-plan
@@ -583,8 +617,12 @@ impl Coordinator {
             return Err(SubmitError::UnknownModel);
         }
         let (rtx, rrx) = channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = &self.intake_ring {
+            r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+        }
         let req = InferRequest {
-            id: self.next_id.fetch_add(1, Ordering::Relaxed),
+            id,
             model,
             x,
             xi: None,
@@ -620,6 +658,12 @@ impl Coordinator {
         }
         if matches!(self.intake, Intake::Pool(_)) {
             self.metrics.record_batch(xs.len().max(1));
+        }
+        // One Enqueue per streamed request (its samples share the wire
+        // id): the trace tracks request lifecycles, not per-sample
+        // queue membership.
+        if let Some(r) = &self.intake_ring {
+            r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
         }
         let t_enqueue = Instant::now();
         for (slot, x) in xs.into_iter().enumerate() {
@@ -673,8 +717,12 @@ impl Coordinator {
         let sink = Arc::new(BatchSink::new(xs.len(), rtx));
         let t_enqueue = Instant::now();
         for (slot, x) in xs.into_iter().enumerate() {
+            let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+            if let Some(r) = &self.intake_ring {
+                r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+            }
             self.dispatch(InferRequest {
-                id: self.next_id.fetch_add(1, Ordering::Relaxed),
+                id,
                 model,
                 x,
                 xi: None,
@@ -757,6 +805,24 @@ fn fail_inflight(fl: InFlight, metrics: &Metrics) {
     }
 }
 
+/// [`LayerSink`] adapter: forwards per-layer engine spans into the
+/// owning worker's flight-recorder ring. The span start is
+/// reconstructed from "now minus duration" so the engine itself needs
+/// no handle on the ring's clock.
+struct RingSink<'a> {
+    ring: &'a TraceRing,
+    id: u64,
+}
+
+impl LayerSink for RingSink<'_> {
+    fn layer(&self, index: usize, elapsed_ns: u64, kept: u64, skipped: u64) {
+        let dur_us = elapsed_ns / 1000;
+        let t_us = self.ring.now_us().saturating_sub(dur_us);
+        self.ring.span(EventKind::Layer, self.id, t_us, dur_us, index as u64, kept, skipped);
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
 fn mcu_worker(
     worker: usize,
     pool: &ShardPool<InferRequest>,
@@ -764,6 +830,7 @@ fn mcu_worker(
     metrics: &Metrics,
     tap: &EnergyTapSlot,
     fault: Option<&FaultPlan>,
+    ring: Option<&TraceRing>,
     inflight: &Mutex<Option<InFlight>>,
 ) {
     let energy = EnergyModel::default();
@@ -837,13 +904,39 @@ fn mcu_worker(
         }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
+        if let Some(r) = ring {
+            r.emit(EventKind::Dequeue, req.id, worker as u64, 0, 0);
+        }
         // Cost-weighted dispatch already quantized the input; reuse it.
         let xi = match req.xi.take() {
             Some(xi) => xi,
             None => plan.quantize_input(&req.x),
         };
-        let out = plan.infer(&xi, scratch);
+        // The observed path and the plain one run the same kernels on
+        // the same plan; with no ring the sink is `None` and the
+        // engine takes no timestamps at all (bit-identical output).
+        let out = match ring {
+            Some(r) => {
+                let sink = RingSink { ring: r, id: req.id };
+                plan.infer_observed(&xi, scratch, Some(&sink))
+            }
+            None => plan.infer(&xi, scratch),
+        };
         let service_us = t_deq.elapsed().as_micros() as u64;
+        if let Some(r) = ring {
+            let t_us = r.now_us().saturating_sub(service_us);
+            r.span(
+                EventKind::Service,
+                req.id,
+                t_us,
+                service_us,
+                worker as u64,
+                req.model as u64,
+                0,
+            );
+            metrics.record_layers(req.model, &out.kept, &out.skipped);
+        }
+        let macs = out.ledger.counts.macs;
         let resp = InferResponse {
             id: req.id,
             predicted: out.argmax(),
@@ -864,6 +957,7 @@ fn mcu_worker(
             resp.mac_skipped,
             resp.energy_mj,
             resp.mcu_secs,
+            macs,
         );
         let energy_mj = resp.energy_mj;
         // Model-level keep ratio of this inference: the drift
@@ -974,7 +1068,7 @@ fn pjrt_executor(
                 service_us,
                 latency_us: queue_us + service_us,
             };
-            metrics.record_request(queue_us, service_us, 0.0, 0.0, 0.0);
+            metrics.record_request(queue_us, service_us, 0.0, 0.0, 0.0, 0);
             req.reply.deliver(req.slot, resp);
         }
     }
@@ -1319,6 +1413,55 @@ mod tests {
         assert_eq!(snap.failed, 1);
         assert!(snap.worker_panics >= 1);
         assert_eq!(snap.dropped, 2, "surviving samples tombstone-dropped");
+    }
+
+    #[test]
+    fn flight_recorder_captures_request_lifecycle_bit_identically() {
+        let def = zoo("mnist");
+        let q = QModel::quantize(&def, &Params::random(&def, 31));
+        let xs: Vec<Vec<f32>> =
+            (0..4).map(|i| vec![0.09 * i as f32; def.input_len()]).collect();
+        // Reference run with observability off.
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
+            ServeConfig { workers: 2, ..Default::default() },
+        );
+        assert!(coord.recorder().is_none(), "obs off by default");
+        let baseline: Vec<Vec<f32>> = xs
+            .iter()
+            .map(|x| coord.submit(x.clone()).recv().unwrap().logits)
+            .collect();
+        coord.shutdown();
+        // Observed run: same logits, full event lifecycle on the rings.
+        let obs = ObsConfig::enabled();
+        let rec = obs.recorder.clone().unwrap();
+        let coord = Coordinator::start(
+            BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+            ServeConfig { workers: 2, obs, ..Default::default() },
+        );
+        assert!(coord.recorder().is_some());
+        for (i, x) in xs.iter().enumerate() {
+            let got = coord.submit(x.clone()).recv().unwrap().logits;
+            assert_eq!(got, baseline[i], "observed serving changed sample {i}");
+        }
+        coord.shutdown();
+        let events: Vec<crate::obs::Event> =
+            rec.rings().iter().flat_map(|r| r.snapshot()).collect();
+        let count = |k: EventKind| events.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(EventKind::Enqueue), 4);
+        assert_eq!(count(EventKind::Dequeue), 4);
+        assert_eq!(count(EventKind::Service), 4);
+        // mnist has >1 layers: at least one Layer span per request,
+        // and the spans' executed/skipped MACs aggregate into the
+        // per-layer table exactly.
+        assert!(count(EventKind::Layer) >= 4, "per-layer spans missing");
+        let span_kept: u64 = events
+            .iter()
+            .filter(|e| e.kind == EventKind::Layer)
+            .map(|e| e.b)
+            .sum();
+        let table: u64 = coord.metrics.layer_totals()[0].iter().map(|&(k, _)| k).sum();
+        assert_eq!(span_kept, table, "Layer spans and aggregate table disagree");
     }
 
     #[test]

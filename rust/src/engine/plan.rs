@@ -428,6 +428,23 @@ impl PlannedModel {
     /// skipped counts, full ledger) is bit-identical to
     /// [`super::infer::infer`] under the matching `EngineConfig`.
     pub fn infer(&self, x_raw: &[i16], s: &mut Scratch) -> InferOutput {
+        self.infer_observed(x_raw, s, None)
+    }
+
+    /// [`PlannedModel::infer`] with an optional per-layer observability
+    /// sink. With `Some(sink)`, each layer's wall time and executed/
+    /// skipped MAC counts are reported as they complete (the serving
+    /// workers' flight-recorder `Layer` spans); with `None` — the
+    /// [`PlannedModel::infer`] path — not even a timestamp is taken,
+    /// so the unobserved hot path and its outputs are bit-identical to
+    /// the pre-observability engine (pinned by the cross-layer
+    /// property tests).
+    pub fn infer_observed(
+        &self,
+        x_raw: &[i16],
+        s: &mut Scratch,
+        sink: Option<&dyn crate::obs::LayerSink>,
+    ) -> InferOutput {
         assert_eq!(x_raw.len(), self.input_len, "input length");
         let mode = self.cfg.mode;
         let sonic = self.cfg.sonic_accumulators;
@@ -443,6 +460,7 @@ impl PlannedModel {
         let mut cur_len = x_raw.len();
 
         for (li, lp) in self.layers.iter().enumerate() {
+            let t_layer = sink.map(|_| std::time::Instant::now());
             let acc = &mut s.acc;
             let (src_buf, dst_buf) = if in_a {
                 (&mut s.act_a, &mut s.act_b)
@@ -509,6 +527,10 @@ impl PlannedModel {
             }
             // (output-commit FRAM traffic is part of each layer's
             // compile-time charges — see compile_conv / compile_linear)
+            if let Some(sk) = sink {
+                let ns = t_layer.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+                sk.layer(li, ns, kept[li], skipped[li]);
+            }
             in_a = !in_a;
         }
 

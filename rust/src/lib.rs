@@ -21,8 +21,9 @@
 //!   scale-indexed plan cache, per-layer keep-ratio calibration, and a
 //!   budget-driven governor ([`control`]) — and a streamed TCP serving
 //!   layer — framed wire protocol, client sessions with backpressure,
-//!   deadlines and cancellation ([`serve`]). Python never runs on the
-//!   request path.
+//!   deadlines and cancellation ([`serve`]) — all made observable by a
+//!   flight recorder, mergeable histograms, and a Prometheus/Chrome-trace
+//!   exposition layer ([`obs`]). Python never runs on the request path.
 //!
 //! See `PAPER.md` for the source paper's abstract, `docs/architecture.md`
 //! for a diagram-backed tour of the serving stack, `docs/wire-protocol.md`
@@ -41,6 +42,7 @@ pub mod fixed;
 pub mod mcu;
 pub mod models;
 pub mod nn;
+pub mod obs;
 pub mod pruning;
 pub mod report;
 pub mod runtime;

@@ -11,6 +11,9 @@
 //! unit serve  --listen 127.0.0.1:0 --budget-mj 4.0 --park 16  # adaptive + parked admission
 //! unit serve  --listen 127.0.0.1:0 --chaos-seed 7   # deterministic fault injection (chaos)
 //! unit serve  --listen 127.0.0.1:0 --models mnist,kws --fleet-budget-mj 8  # multi-model fleet
+//! unit serve  --listen 127.0.0.1:0 --metrics-addr 127.0.0.1:0  # flight recorder + /metrics HTTP
+//! unit trace  --addr HOST:PORT --out trace.json   # dump the flight recorder (Chrome trace JSON)
+//! unit top    --addr HOST:PORT [--iters N]        # live scrape-and-print of the key gauges
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
@@ -24,7 +27,8 @@ use unit_pruner::coordinator::{
     BackendChoice, Coordinator, EnergyController, ModelSpec, Placement, ServeConfig,
 };
 use unit_pruner::data::{by_name, Sizes};
-use unit_pruner::serve::{ServeOpts, Server, SessionCfg};
+use unit_pruner::obs::{spawn_http, MetricsHub, ObsConfig};
+use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg};
 use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
 use unit_pruner::models::{zoo, MODEL_NAMES};
@@ -45,8 +49,13 @@ fn main() -> Result<()> {
         Some("serve") => cmd_serve(&args),
         Some("memmap") => cmd_memmap(&args),
         Some("bench") => cmd_bench(&args),
+        Some("trace") => cmd_trace(&args),
+        Some("top") => cmd_top(&args),
         Some(other) => {
-            eprintln!("unknown command {other}; try: info | train | eval | serve | memmap | bench");
+            eprintln!(
+                "unknown command {other}; try: info | train | eval | serve | memmap | bench | \
+                 trace | top"
+            );
             std::process::exit(2);
         }
     }
@@ -409,6 +418,11 @@ fn cmd_serve(args: &Args) -> Result<()> {
     if let Some(f) = &fault {
         eprintln!("[serve] chaos plan armed (seed {})", f.seed());
     }
+    // `--metrics-addr ADDR` turns the observability layer on: a
+    // flight recorder on every worker plus the /metrics + /trace HTTP
+    // side listener (bound in cmd_serve_listen).
+    let obs =
+        if args.get("metrics-addr").is_some() { ObsConfig::enabled() } else { ObsConfig::off() };
     let coord = Coordinator::start(
         choice,
         ServeConfig {
@@ -417,6 +431,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
             placement,
             fault: fault.clone(),
+            obs,
         },
     );
 
@@ -597,6 +612,8 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     if let Some(f) = &fault {
         eprintln!("[serve] chaos plan armed (seed {})", f.seed());
     }
+    let obs =
+        if args.get("metrics-addr").is_some() { ObsConfig::enabled() } else { ObsConfig::off() };
     let coord = Coordinator::start_multi(
         specs,
         ServeConfig {
@@ -605,6 +622,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
             max_wait: Duration::from_millis(args.u64_or("max-wait-ms", 2)),
             placement,
             fault: fault.clone(),
+            obs,
         },
     );
     let sched = FleetScheduler::install(&coord, tenants, fleet_budget)
@@ -651,6 +669,11 @@ fn cmd_serve_listen(
     fault: Option<Arc<FaultPlan>>,
     addr: &str,
 ) -> Result<()> {
+    // Chaos + observability together: every fired injection also
+    // lands on the flight recorder's "faults" ring.
+    if let (Some(f), Some(rec)) = (&fault, coord.recorder()) {
+        f.attach_ring(rec.ring("faults"));
+    }
     let opts = ServeOpts {
         max_conns: args.usize_or("max-conns", 64),
         session: SessionCfg {
@@ -675,6 +698,32 @@ fn cmd_serve_listen(
     println!("unit serve: listening on {}", server.local_addr());
     use std::io::Write as _;
     std::io::stdout().flush().ok();
+
+    // `--metrics-addr ADDR` (":0" for an ephemeral port) binds the
+    // HTTP exposition side listener: GET /metrics (Prometheus text)
+    // and GET /trace (Chrome trace-event JSON).
+    if let Some(maddr) = args.get("metrics-addr") {
+        let coord_ref = server.coordinator();
+        let model_names = (0..coord_ref.model_count())
+            .map(|i| coord_ref.model_name(i as u32).unwrap_or_default().to_string())
+            .collect();
+        let hub = Arc::new(MetricsHub {
+            metrics: Arc::clone(&metrics),
+            governor: governor.clone(),
+            scheduler: scheduler.clone(),
+            recorder: coord_ref.recorder(),
+            model_names,
+        });
+        match spawn_http(maddr, hub) {
+            Ok(bound) => {
+                // Same greppable single-line contract as the serve
+                // address above: CI scrapes the ephemeral port.
+                println!("unit serve: metrics on {bound}");
+                std::io::stdout().flush().ok();
+            }
+            Err(e) => eprintln!("[serve] metrics listener failed to bind {maddr}: {e}"),
+        }
+    }
 
     let serve_secs = args.u64_or("serve-secs", 0);
     let stats_secs = args.u64_or("stats-secs", 10);
@@ -783,5 +832,85 @@ fn cmd_serve_listen(
         s.respawns,
         s.sessions_opened
     );
+    Ok(())
+}
+
+/// `unit trace --addr HOST:PORT [--out trace.json]`: pull the serving
+/// flight recorder over the wire (`TraceDump`, v5) and write it as
+/// Chrome trace-event JSON — load the file in `chrome://tracing` or
+/// Perfetto to see queue→service→per-layer timelines per worker. An
+/// empty `traceEvents` array means the server runs with observability
+/// off (start it with `--metrics-addr`).
+fn cmd_trace(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        eprintln!("trace: --addr HOST:PORT is required (the serve listener address)");
+        std::process::exit(2);
+    };
+    let out = args.get_or("out", "trace.json").to_string();
+    let client = Client::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let body = client.trace_dump(Duration::from_secs(args.u64_or("timeout-secs", 10)))?;
+    std::fs::write(&out, &body)?;
+    println!("unit trace: wrote {} bytes to {out}", body.len());
+    Ok(())
+}
+
+/// Sum of every sample of `name` in a Prometheus text body. `name` may
+/// include a label set (`unit_latency_us{quantile="0.5"}`) for an
+/// exact series, or be a bare family name to sum across labels
+/// (`unit_trace_dropped_total` over all rings).
+fn scrape_sum(text: &str, name: &str) -> f64 {
+    text.lines()
+        .filter(|l| !l.starts_with('#'))
+        .filter_map(|l| {
+            let rest = l.strip_prefix(name)?;
+            if !(rest.starts_with(' ') || rest.starts_with('{')) {
+                return None;
+            }
+            l.rsplit(' ').next()?.parse::<f64>().ok()
+        })
+        .sum()
+}
+
+/// `unit top --addr HOST:PORT [--iters N] [--interval-ms M]`: scrape
+/// the server over the wire (`Scrape`, v5) every interval and print a
+/// one-line live view of the key gauges. `--iters 0` (default) runs
+/// until killed; a positive count bounds the loop (scripts, CI).
+fn cmd_top(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        eprintln!("top: --addr HOST:PORT is required (the serve listener address)");
+        std::process::exit(2);
+    };
+    let iters = args.usize_or("iters", 0);
+    let every = Duration::from_millis(args.u64_or("interval-ms", 1000));
+    let client = Client::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let mut n = 0usize;
+    loop {
+        let text = client.scrape(Duration::from_secs(5))?;
+        let g = |name: &str| scrape_sum(&text, name);
+        println!(
+            "[top] served={:.0} inflight={:.0} rejected={:.0} failed={:.0} parked={:.0} \
+             p50/p99={:.0}/{:.0}us keep_p50={:.3} skip={:.2}% scale={:.2}x \
+             events={:.0} dropped={:.0}",
+            g("unit_requests_served_total"),
+            g("unit_inflight"),
+            g("unit_rejected_total"),
+            g("unit_requests_failed_total"),
+            g("unit_parked_total"),
+            g("unit_latency_us{quantile=\"0.5\"}"),
+            g("unit_latency_us{quantile=\"0.99\"}"),
+            g("unit_keep_ratio{quantile=\"0.5\"}"),
+            100.0 * g("unit_mac_skipped_ratio"),
+            g("unit_governor_scale_q8") / 256.0,
+            g("unit_trace_events_total"),
+            g("unit_trace_dropped_total"),
+        );
+        use std::io::Write as _;
+        std::io::stdout().flush().ok();
+        n += 1;
+        if iters > 0 && n >= iters {
+            break;
+        }
+        std::thread::sleep(every);
+    }
     Ok(())
 }

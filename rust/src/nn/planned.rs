@@ -267,6 +267,20 @@ impl FloatPlan {
     /// Planned forward pass: identical `(logits, stats)` to
     /// [`super::forward::forward`] under the compiled opts.
     pub fn forward(&self, x: &[f32], s: &mut FloatScratch) -> (Vec<f32>, ForwardStats) {
+        self.forward_observed(x, s, None)
+    }
+
+    /// [`FloatPlan::forward`] with an optional per-layer observability
+    /// sink (same contract as
+    /// [`PlannedModel::infer_observed`](crate::engine::PlannedModel::infer_observed):
+    /// `None` takes no timestamps and is bit-identical to the plain
+    /// forward).
+    pub fn forward_observed(
+        &self,
+        x: &[f32],
+        s: &mut FloatScratch,
+        sink: Option<&dyn crate::obs::LayerSink>,
+    ) -> (Vec<f32>, ForwardStats) {
         assert_eq!(x.len(), self.input_len, "input length");
         let mut stats = ForwardStats {
             kept: vec![0; self.n_layers],
@@ -276,6 +290,7 @@ impl FloatPlan {
         let mut in_a = true;
         let mut cur_len = x.len();
         for (li, layer) in self.layers.iter().enumerate() {
+            let t_layer = sink.map(|_| std::time::Instant::now());
             let (src_buf, dst_buf) = if in_a {
                 (&mut s.act_a, &mut s.act_b)
             } else {
@@ -401,6 +416,10 @@ impl FloatPlan {
                     }
                     cur_len = n_out;
                 }
+            }
+            if let Some(sk) = sink {
+                let ns = t_layer.map(|t| t.elapsed().as_nanos() as u64).unwrap_or(0);
+                sk.layer(li, ns, stats.kept[li], stats.skipped[li]);
             }
             in_a = !in_a;
         }

@@ -1,0 +1,536 @@
+//! Metrics exposition: Prometheus text-format rendering and the HTTP
+//! side listener.
+//!
+//! [`MetricsHub`] bundles every stats source the serving stack has —
+//! coordinator [`Metrics`], the optional [`Governor`], the optional
+//! [`FleetScheduler`], the optional [`FlightRecorder`] — behind one
+//! handle, and [`render_prometheus`] turns it into Prometheus text
+//! format (version 0.0.4: `# HELP` / `# TYPE` heads, counter and gauge
+//! families, percentiles as gauges with a `quantile` label).
+//!
+//! The same renderings are served two ways:
+//!
+//! * over the wire protocol, as the v5 `Scrape` / `TraceDump` admin
+//!   frames (any connected client can ask);
+//! * over plain HTTP by [`spawn_http`] (`unit serve --metrics-addr`):
+//!   `GET /metrics` → Prometheus text, `GET /trace` → Chrome
+//!   trace-event JSON. HTTP/1.0-style one-shot responses
+//!   (`Connection: close`), which is all a scraper needs.
+//!
+//! Every metric family name appears as a string literal in this file —
+//! `scripts/check_metrics.py` greps them and fails CI if any is
+//! missing from `docs/observability.md`.
+
+use std::io::{Read as _, Write as _};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::control::{FleetScheduler, Governor};
+use crate::coordinator::Metrics;
+use crate::obs::trace::FlightRecorder;
+
+/// Every stats source the exposition layer renders, bundled behind one
+/// cloneable handle. Built by the serve entry points after the server
+/// is up; `None` members simply omit their metric sections.
+pub struct MetricsHub {
+    /// Coordinator serving metrics (always present).
+    pub metrics: Arc<Metrics>,
+    /// Single-model adaptive governor, if installed.
+    pub governor: Option<Arc<Governor>>,
+    /// Multi-model fleet scheduler, if installed.
+    pub scheduler: Option<Arc<FleetScheduler>>,
+    /// Flight recorder, if observability is on.
+    pub recorder: Option<Arc<FlightRecorder>>,
+    /// Hosted model names, index-aligned with the coordinator's model
+    /// table (labels for per-model/per-layer families).
+    pub model_names: Vec<String>,
+}
+
+/// `# HELP` + `# TYPE` head for one family.
+fn head(out: &mut String, name: &str, ty: &str, help: &str) {
+    out.push_str("# HELP ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(help);
+    out.push_str("\n# TYPE ");
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(ty);
+    out.push('\n');
+}
+
+/// One unlabeled sample line.
+fn plain<V: std::fmt::Display>(out: &mut String, name: &str, v: V) {
+    out.push_str(name);
+    out.push(' ');
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+/// Prometheus label-value escaping (backslash, quote, newline).
+fn esc_label(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"").replace('\n', "\\n")
+}
+
+/// One labeled sample line.
+fn labeled<V: std::fmt::Display>(out: &mut String, name: &str, labels: &[(&str, &str)], v: V) {
+    out.push_str(name);
+    out.push('{');
+    for (i, (k, val)) in labels.iter().enumerate() {
+        if i > 0 {
+            out.push(',');
+        }
+        out.push_str(k);
+        out.push_str("=\"");
+        out.push_str(&esc_label(val));
+        out.push('"');
+    }
+    out.push_str("} ");
+    out.push_str(&v.to_string());
+    out.push('\n');
+}
+
+/// Render the full metric set as Prometheus text format. Pure: reads
+/// the hub's sources, writes a `String`, touches no I/O — which is
+/// what the golden test pins.
+pub fn render_prometheus(hub: &MetricsHub) -> String {
+    let s = hub.metrics.snapshot();
+    let mut out = String::with_capacity(8192);
+
+    // -- coordinator counters -------------------------------------------------
+    head(&mut out, "unit_requests_served_total", "counter", "Samples completed Ok");
+    plain(&mut out, "unit_requests_served_total", s.served);
+    head(&mut out, "unit_batches_total", "counter", "Worker batches executed");
+    plain(&mut out, "unit_batches_total", s.batches);
+    head(&mut out, "unit_requests_failed_total", "counter", "Requests failed by worker panic");
+    plain(&mut out, "unit_requests_failed_total", s.failed);
+    head(&mut out, "unit_rejected_total", "counter", "Requests rejected by backpressure");
+    plain(&mut out, "unit_rejected_total", s.rejected);
+    head(&mut out, "unit_expired_total", "counter", "Requests expired at their deadline");
+    plain(&mut out, "unit_expired_total", s.expired);
+    head(&mut out, "unit_cancelled_total", "counter", "Requests cancelled by the client");
+    plain(&mut out, "unit_cancelled_total", s.cancelled);
+    head(&mut out, "unit_dropped_total", "counter", "Dead samples dropped at dequeue");
+    plain(&mut out, "unit_dropped_total", s.dropped);
+    head(&mut out, "unit_parked_total", "counter", "Requests admitted via the park queue");
+    plain(&mut out, "unit_parked_total", s.parked);
+    head(&mut out, "unit_sessions_opened_total", "counter", "Sessions accepted");
+    plain(&mut out, "unit_sessions_opened_total", s.sessions_opened);
+    head(&mut out, "unit_sessions_closed_total", "counter", "Sessions closed");
+    plain(&mut out, "unit_sessions_closed_total", s.sessions_closed);
+    head(&mut out, "unit_worker_panics_total", "counter", "Worker panics caught");
+    plain(&mut out, "unit_worker_panics_total", s.worker_panics);
+    head(&mut out, "unit_worker_respawns_total", "counter", "Workers respawned after panic");
+    plain(&mut out, "unit_worker_respawns_total", s.respawns);
+
+    // -- coordinator gauges ---------------------------------------------------
+    head(&mut out, "unit_inflight", "gauge", "Admitted-but-unfinished requests");
+    plain(&mut out, "unit_inflight", s.inflight);
+    head(&mut out, "unit_mean_batch", "gauge", "Mean executed batch size");
+    plain(&mut out, "unit_mean_batch", s.mean_batch);
+    head(&mut out, "unit_mac_skipped_ratio", "gauge", "Mean fraction of MACs skipped");
+    plain(&mut out, "unit_mac_skipped_ratio", s.mean_mac_skipped);
+    head(&mut out, "unit_energy_mj_mean", "gauge", "Mean modeled energy per sample (mJ)");
+    plain(&mut out, "unit_energy_mj_mean", s.mean_energy_mj);
+    head(&mut out, "unit_mcu_secs_mean", "gauge", "Mean modeled MCU seconds per sample");
+    plain(&mut out, "unit_mcu_secs_mean", s.mean_mcu_secs);
+
+    // -- latency / work histogram percentiles ---------------------------------
+    head(&mut out, "unit_latency_us", "gauge", "Total latency percentiles (us)");
+    labeled(&mut out, "unit_latency_us", &[("quantile", "0.5")], s.p50_us);
+    labeled(&mut out, "unit_latency_us", &[("quantile", "0.95")], s.p95_us);
+    labeled(&mut out, "unit_latency_us", &[("quantile", "0.99")], s.p99_us);
+    head(&mut out, "unit_queue_latency_us", "gauge", "Queue-wait percentiles (us)");
+    labeled(&mut out, "unit_queue_latency_us", &[("quantile", "0.5")], s.queue_p50_us);
+    labeled(&mut out, "unit_queue_latency_us", &[("quantile", "0.95")], s.queue_p95_us);
+    labeled(&mut out, "unit_queue_latency_us", &[("quantile", "0.99")], s.queue_p99_us);
+    head(&mut out, "unit_service_latency_us", "gauge", "Service-time percentiles (us)");
+    labeled(&mut out, "unit_service_latency_us", &[("quantile", "0.5")], s.service_p50_us);
+    labeled(&mut out, "unit_service_latency_us", &[("quantile", "0.95")], s.service_p95_us);
+    labeled(&mut out, "unit_service_latency_us", &[("quantile", "0.99")], s.service_p99_us);
+    head(&mut out, "unit_keep_ratio", "gauge", "Keep-ratio percentiles (fraction executed)");
+    labeled(&mut out, "unit_keep_ratio", &[("quantile", "0.5")], s.keep_p50);
+    labeled(&mut out, "unit_keep_ratio", &[("quantile", "0.95")], s.keep_p95);
+    head(&mut out, "unit_request_macs", "gauge", "Executed MACs per request percentiles");
+    labeled(&mut out, "unit_request_macs", &[("quantile", "0.5")], s.mac_p50);
+    labeled(&mut out, "unit_request_macs", &[("quantile", "0.99")], s.mac_p99);
+
+    // -- shard / background-compile health ------------------------------------
+    head(&mut out, "unit_shard_queued_cost", "gauge", "Estimated queued MACs per shard");
+    for (i, c) in s.shard_costs.iter().enumerate() {
+        labeled(&mut out, "unit_shard_queued_cost", &[("shard", &i.to_string())], c);
+    }
+    head(&mut out, "unit_bg_compiles_pending", "gauge", "Background compiles in flight");
+    plain(&mut out, "unit_bg_compiles_pending", s.bg_pending);
+    head(&mut out, "unit_bg_compiles_total", "counter", "Background compiles completed");
+    plain(&mut out, "unit_bg_compiles_total", s.bg_compiled);
+    head(&mut out, "unit_bg_upgrades_total", "counter", "Background compiles that upgraded the slot");
+    plain(&mut out, "unit_bg_upgrades_total", s.bg_upgrades);
+
+    // -- per-layer MAC families (populated when observability is on) ----------
+    let model_label = |mi: usize| -> String {
+        hub.model_names.get(mi).cloned().unwrap_or_else(|| mi.to_string())
+    };
+    head(
+        &mut out,
+        "unit_layer_macs_total",
+        "counter",
+        "Cumulative per-layer MACs by kind (executed|skipped)",
+    );
+    let layers = hub.metrics.layer_totals();
+    for (mi, rows) in layers.iter().enumerate() {
+        let model = model_label(mi);
+        for (li, &(exec, skip)) in rows.iter().enumerate() {
+            let layer = li.to_string();
+            labeled(
+                &mut out,
+                "unit_layer_macs_total",
+                &[("model", &model), ("layer", &layer), ("kind", "executed")],
+                exec,
+            );
+            labeled(
+                &mut out,
+                "unit_layer_macs_total",
+                &[("model", &model), ("layer", &layer), ("kind", "skipped")],
+                skip,
+            );
+        }
+    }
+    head(&mut out, "unit_layer_keep_ratio", "gauge", "Cumulative per-layer keep ratio");
+    for (mi, rows) in layers.iter().enumerate() {
+        let model = model_label(mi);
+        for (li, &(exec, skip)) in rows.iter().enumerate() {
+            let total = exec + skip;
+            if total > 0 {
+                labeled(
+                    &mut out,
+                    "unit_layer_keep_ratio",
+                    &[("model", &model), ("layer", &li.to_string())],
+                    exec as f64 / total as f64,
+                );
+            }
+        }
+    }
+
+    // -- adaptive governor (single-model control plane) -----------------------
+    if let Some(gov) = &hub.governor {
+        let g = gov.status();
+        head(&mut out, "unit_governor_step", "gauge", "Active scale-grid step");
+        plain(&mut out, "unit_governor_step", g.step);
+        head(&mut out, "unit_governor_steps_total", "gauge", "Scale-grid size");
+        plain(&mut out, "unit_governor_steps_total", g.steps_total);
+        head(&mut out, "unit_governor_scale_q8", "gauge", "Active threshold scale (Q8.8)");
+        plain(&mut out, "unit_governor_scale_q8", g.scale_q8);
+        head(&mut out, "unit_governor_budget_mj", "gauge", "Energy budget (mJ/inference)");
+        plain(&mut out, "unit_governor_budget_mj", g.budget_mj);
+        head(&mut out, "unit_governor_ewma_mj", "gauge", "EWMA of observed energy (mJ)");
+        plain(&mut out, "unit_governor_ewma_mj", g.ewma_mj);
+        head(&mut out, "unit_governor_keep_ratio", "gauge", "Calibrated keep ratio at step");
+        plain(&mut out, "unit_governor_keep_ratio", g.keep_ratio);
+        head(&mut out, "unit_governor_swaps_total", "counter", "Plan swaps since install");
+        plain(&mut out, "unit_governor_swaps_total", g.swaps);
+        head(&mut out, "unit_governor_drift_trips_total", "counter", "Drift-tracker trips");
+        plain(&mut out, "unit_governor_drift_trips_total", g.drift_trips);
+        head(&mut out, "unit_governor_recalibrations_total", "counter", "Live recalibrations");
+        plain(&mut out, "unit_governor_recalibrations_total", g.recalibrations);
+        head(&mut out, "unit_plan_cache_hits_total", "counter", "Plan-cache hits");
+        plain(&mut out, "unit_plan_cache_hits_total", g.cache_hits);
+        head(&mut out, "unit_plan_cache_misses_total", "counter", "Plan-cache misses");
+        plain(&mut out, "unit_plan_cache_misses_total", g.cache_misses);
+    }
+
+    // -- fleet scheduler (multi-model control plane) --------------------------
+    if let Some(fleet) = &hub.scheduler {
+        let f = fleet.fleet_status();
+        head(&mut out, "unit_fleet_budget_mj", "gauge", "Fleet-wide energy budget (mJ)");
+        plain(&mut out, "unit_fleet_budget_mj", f.fleet_budget_mj);
+        head(&mut out, "unit_fleet_models", "gauge", "Hosted model count");
+        plain(&mut out, "unit_fleet_models", f.models);
+        head(&mut out, "unit_fleet_resolves_total", "counter", "Fleet allocation solves");
+        plain(&mut out, "unit_fleet_resolves_total", f.resolves);
+        let mut heads_done = false;
+        for mi in 0..f.models {
+            let Some(t) = fleet.status(mi as u32) else { continue };
+            let model = if t.name.is_empty() { model_label(mi) } else { t.name.clone() };
+            let l: &[(&str, &str)] = &[("model", &model)];
+            if !heads_done {
+                heads_done = true;
+                head(&mut out, "unit_tenant_step", "gauge", "Published grid step per tenant");
+                head(&mut out, "unit_tenant_keep_ratio", "gauge", "Calibrated keep ratio per tenant");
+                head(&mut out, "unit_tenant_ewma_mj", "gauge", "Observed energy EWMA per tenant");
+                head(&mut out, "unit_tenant_cap_mj", "gauge", "Energy cap per tenant (if set)");
+                head(&mut out, "unit_tenant_drift_trips_total", "counter", "Drift trips per tenant");
+                head(
+                    &mut out,
+                    "unit_tenant_recalibrations_total",
+                    "counter",
+                    "Recalibrations per tenant",
+                );
+                head(&mut out, "unit_tenant_swaps_total", "counter", "Plan swaps per tenant");
+            }
+            labeled(&mut out, "unit_tenant_step", l, t.step);
+            labeled(&mut out, "unit_tenant_keep_ratio", l, t.keep_ratio);
+            labeled(&mut out, "unit_tenant_ewma_mj", l, t.ewma_mj);
+            if let Some(cap) = t.cap_mj {
+                labeled(&mut out, "unit_tenant_cap_mj", l, cap);
+            }
+            labeled(&mut out, "unit_tenant_drift_trips_total", l, t.drift_trips);
+            labeled(&mut out, "unit_tenant_recalibrations_total", l, t.recalibrations);
+            labeled(&mut out, "unit_tenant_swaps_total", l, t.swaps);
+        }
+    }
+
+    // -- flight-recorder health -----------------------------------------------
+    if let Some(rec) = &hub.recorder {
+        head(&mut out, "unit_trace_events_total", "counter", "Events recorded per ring");
+        head(&mut out, "unit_trace_dropped_total", "counter", "Events overwritten per ring");
+        for ring in rec.rings() {
+            let l: &[(&str, &str)] = &[("ring", ring.name())];
+            labeled(&mut out, "unit_trace_events_total", l, ring.events_total());
+            labeled(&mut out, "unit_trace_dropped_total", l, ring.dropped());
+        }
+    }
+
+    out
+}
+
+/// Render the flight-recorder Chrome trace (an empty but valid trace
+/// document when observability is off).
+pub fn render_trace(hub: &MetricsHub) -> String {
+    match &hub.recorder {
+        Some(rec) => rec.chrome_trace(),
+        None => "{\"traceEvents\":[],\"displayTimeUnit\":\"ms\"}".to_string(),
+    }
+}
+
+/// Bind `addr` and serve `GET /metrics` (Prometheus text) and
+/// `GET /trace` (Chrome trace JSON) on a detached thread, one-shot
+/// HTTP/1.0-style responses. Returns the bound address (so
+/// `--metrics-addr 127.0.0.1:0` reports its ephemeral port).
+pub fn spawn_http(addr: &str, hub: Arc<MetricsHub>) -> std::io::Result<SocketAddr> {
+    let listener = TcpListener::bind(addr)?;
+    let local = listener.local_addr()?;
+    std::thread::Builder::new().name("unit-metrics".into()).spawn(move || {
+        for conn in listener.incoming() {
+            let Ok(mut stream) = conn else { continue };
+            let _ = serve_one(&mut stream, &hub);
+        }
+    })?;
+    Ok(local)
+}
+
+/// Handle one HTTP exchange on `stream`.
+fn serve_one(stream: &mut TcpStream, hub: &MetricsHub) -> std::io::Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(2)))?;
+    // Read the request head (we only need the request line; bound the
+    // read so a misbehaving client cannot hold the thread).
+    let mut buf = [0u8; 4096];
+    let mut len = 0usize;
+    loop {
+        let n = stream.read(&mut buf[len..])?;
+        if n == 0 {
+            break;
+        }
+        len += n;
+        if buf[..len].windows(4).any(|w| w == b"\r\n\r\n") || len == buf.len() {
+            break;
+        }
+    }
+    let req = String::from_utf8_lossy(&buf[..len]);
+    let path = req.split_whitespace().nth(1).unwrap_or("/");
+    let (status, ctype, body) = match path {
+        "/metrics" => ("200 OK", "text/plain; version=0.0.4", render_prometheus(hub)),
+        "/trace" => ("200 OK", "application/json", render_trace(hub)),
+        _ => ("404 Not Found", "text/plain", "not found\n".to_string()),
+    };
+    let resp = format!(
+        "HTTP/1.0 {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n\
+         Connection: close\r\n\r\n{body}",
+        body.len()
+    );
+    stream.write_all(resp.as_bytes())?;
+    stream.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{Read, Write};
+
+    fn minimal_hub() -> MetricsHub {
+        MetricsHub {
+            metrics: Arc::new(Metrics::new()),
+            governor: None,
+            scheduler: None,
+            recorder: None,
+            model_names: vec!["default".to_string()],
+        }
+    }
+
+    #[test]
+    fn golden_prometheus_exposition() {
+        // Pin the full exposition format for a minimal hub with one
+        // request recorded. Any change to family names, types, label
+        // shapes, or ordering must update this golden (and
+        // docs/observability.md with it).
+        let hub = minimal_hub();
+        // keep = (1 - 0.1808) * 10000 = 8192, which is bucket-exact.
+        hub.metrics.record_request(10, 30, 0.1808, 2.0, 0.5, 1024);
+        hub.metrics.record_batch(1);
+        let got = render_prometheus(&hub);
+        let want = "\
+# HELP unit_requests_served_total Samples completed Ok
+# TYPE unit_requests_served_total counter
+unit_requests_served_total 1
+# HELP unit_batches_total Worker batches executed
+# TYPE unit_batches_total counter
+unit_batches_total 1
+# HELP unit_requests_failed_total Requests failed by worker panic
+# TYPE unit_requests_failed_total counter
+unit_requests_failed_total 0
+# HELP unit_rejected_total Requests rejected by backpressure
+# TYPE unit_rejected_total counter
+unit_rejected_total 0
+# HELP unit_expired_total Requests expired at their deadline
+# TYPE unit_expired_total counter
+unit_expired_total 0
+# HELP unit_cancelled_total Requests cancelled by the client
+# TYPE unit_cancelled_total counter
+unit_cancelled_total 0
+# HELP unit_dropped_total Dead samples dropped at dequeue
+# TYPE unit_dropped_total counter
+unit_dropped_total 0
+# HELP unit_parked_total Requests admitted via the park queue
+# TYPE unit_parked_total counter
+unit_parked_total 0
+# HELP unit_sessions_opened_total Sessions accepted
+# TYPE unit_sessions_opened_total counter
+unit_sessions_opened_total 0
+# HELP unit_sessions_closed_total Sessions closed
+# TYPE unit_sessions_closed_total counter
+unit_sessions_closed_total 0
+# HELP unit_worker_panics_total Worker panics caught
+# TYPE unit_worker_panics_total counter
+unit_worker_panics_total 0
+# HELP unit_worker_respawns_total Workers respawned after panic
+# TYPE unit_worker_respawns_total counter
+unit_worker_respawns_total 0
+# HELP unit_inflight Admitted-but-unfinished requests
+# TYPE unit_inflight gauge
+unit_inflight 0
+# HELP unit_mean_batch Mean executed batch size
+# TYPE unit_mean_batch gauge
+unit_mean_batch 1
+# HELP unit_mac_skipped_ratio Mean fraction of MACs skipped
+# TYPE unit_mac_skipped_ratio gauge
+unit_mac_skipped_ratio 0.1808
+# HELP unit_energy_mj_mean Mean modeled energy per sample (mJ)
+# TYPE unit_energy_mj_mean gauge
+unit_energy_mj_mean 2
+# HELP unit_mcu_secs_mean Mean modeled MCU seconds per sample
+# TYPE unit_mcu_secs_mean gauge
+unit_mcu_secs_mean 0.5
+# HELP unit_latency_us Total latency percentiles (us)
+# TYPE unit_latency_us gauge
+unit_latency_us{quantile=\"0.5\"} 40
+unit_latency_us{quantile=\"0.95\"} 40
+unit_latency_us{quantile=\"0.99\"} 40
+# HELP unit_queue_latency_us Queue-wait percentiles (us)
+# TYPE unit_queue_latency_us gauge
+unit_queue_latency_us{quantile=\"0.5\"} 10
+unit_queue_latency_us{quantile=\"0.95\"} 10
+unit_queue_latency_us{quantile=\"0.99\"} 10
+# HELP unit_service_latency_us Service-time percentiles (us)
+# TYPE unit_service_latency_us gauge
+unit_service_latency_us{quantile=\"0.5\"} 30
+unit_service_latency_us{quantile=\"0.95\"} 30
+unit_service_latency_us{quantile=\"0.99\"} 30
+# HELP unit_keep_ratio Keep-ratio percentiles (fraction executed)
+# TYPE unit_keep_ratio gauge
+unit_keep_ratio{quantile=\"0.5\"} 0.8192
+unit_keep_ratio{quantile=\"0.95\"} 0.8192
+# HELP unit_request_macs Executed MACs per request percentiles
+# TYPE unit_request_macs gauge
+unit_request_macs{quantile=\"0.5\"} 1024
+unit_request_macs{quantile=\"0.99\"} 1024
+# HELP unit_shard_queued_cost Estimated queued MACs per shard
+# TYPE unit_shard_queued_cost gauge
+# HELP unit_bg_compiles_pending Background compiles in flight
+# TYPE unit_bg_compiles_pending gauge
+unit_bg_compiles_pending 0
+# HELP unit_bg_compiles_total Background compiles completed
+# TYPE unit_bg_compiles_total counter
+unit_bg_compiles_total 0
+# HELP unit_bg_upgrades_total Background compiles that upgraded the slot
+# TYPE unit_bg_upgrades_total counter
+unit_bg_upgrades_total 0
+# HELP unit_layer_macs_total Cumulative per-layer MACs by kind (executed|skipped)
+# TYPE unit_layer_macs_total counter
+# HELP unit_layer_keep_ratio Cumulative per-layer keep ratio
+# TYPE unit_layer_keep_ratio gauge
+";
+        assert_eq!(got, want, "exposition format drifted from the golden");
+    }
+
+    #[test]
+    fn per_layer_families_render_labels() {
+        let hub = minimal_hub();
+        hub.metrics.record_layers(0, &[300, 100], &[100, 0]);
+        let text = render_prometheus(&hub);
+        assert!(text
+            .contains("unit_layer_macs_total{model=\"default\",layer=\"0\",kind=\"executed\"} 300"));
+        assert!(text
+            .contains("unit_layer_macs_total{model=\"default\",layer=\"0\",kind=\"skipped\"} 100"));
+        assert!(text.contains("unit_layer_keep_ratio{model=\"default\",layer=\"0\"} 0.75"));
+        assert!(text.contains("unit_layer_keep_ratio{model=\"default\",layer=\"1\"} 1"));
+    }
+
+    #[test]
+    fn trace_families_render_ring_health() {
+        let mut hub = minimal_hub();
+        let rec = Arc::new(FlightRecorder::new());
+        let ring = rec.ring_with_capacity("worker0", 2);
+        for i in 0..5 {
+            ring.emit(crate::obs::trace::EventKind::Dequeue, i, 0, 0, 0);
+        }
+        hub.recorder = Some(rec);
+        let text = render_prometheus(&hub);
+        assert!(text.contains("unit_trace_events_total{ring=\"worker0\"} 5"));
+        assert!(text.contains("unit_trace_dropped_total{ring=\"worker0\"} 3"));
+        assert!(render_trace(&hub).contains("\"name\":\"Dequeue\""));
+    }
+
+    #[test]
+    fn trace_render_without_recorder_is_valid_empty() {
+        let hub = minimal_hub();
+        assert_eq!(render_trace(&hub), "{\"traceEvents\":[],\"displayTimeUnit\":\"ms\"}");
+    }
+
+    #[test]
+    fn label_escaping() {
+        let mut out = String::new();
+        labeled(&mut out, "m", &[("k", "a\"b\\c\nd")], 1);
+        assert_eq!(out, "m{k=\"a\\\"b\\\\c\\nd\"} 1\n");
+    }
+
+    #[test]
+    fn http_listener_serves_metrics_and_trace() {
+        let hub = Arc::new(minimal_hub());
+        let addr = spawn_http("127.0.0.1:0", Arc::clone(&hub)).expect("bind");
+        let get = |path: &str| -> String {
+            let mut s = TcpStream::connect(addr).expect("connect");
+            s.write_all(format!("GET {path} HTTP/1.0\r\n\r\n").as_bytes()).unwrap();
+            let mut resp = String::new();
+            s.read_to_string(&mut resp).unwrap();
+            resp
+        };
+        let metrics = get("/metrics");
+        assert!(metrics.starts_with("HTTP/1.0 200 OK"));
+        assert!(metrics.contains("unit_requests_served_total 0"));
+        let trace = get("/trace");
+        assert!(trace.starts_with("HTTP/1.0 200 OK"));
+        assert!(trace.contains("traceEvents"));
+        assert!(get("/nope").starts_with("HTTP/1.0 404"));
+    }
+}

@@ -1,0 +1,327 @@
+//! Mergeable fixed-size log-bucketed histograms (HDR-style).
+//!
+//! The serving metrics used to keep raw-sample windows (`TIMING_WINDOW`
+//! boxed `u64`s per series) and sort them at every snapshot. That is
+//! O(window) memory per series, O(n log n) per snapshot, and two
+//! windows cannot be combined after the fact. This module replaces them
+//! with a constant-size bucketed histogram:
+//!
+//! * **Exact below 32**: values `0..32` get one bucket each, so the
+//!   small exact values the unit tests pin (and microsecond timings of
+//!   trivially fast paths) survive bucketing unchanged.
+//! * **Log-spaced above**: each power-of-two octave is split into 16
+//!   sub-buckets, so any recorded value is reproduced by its bucket's
+//!   lower bound with relative error `< 1/16` (6.25 %).
+//! * **Mergeable**: two histograms over disjoint sample sets merge by
+//!   element-wise bucket addition, *bucket-exactly* equal to the
+//!   histogram of the concatenated samples — which is what makes
+//!   shard-local recording + merge-at-snapshot correct.
+//!
+//! Percentiles use the same nearest-rank rule the raw-sample windows
+//! used (`rank = round(p/100 * (n-1))`), walked over the bucket CDF.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Values below this are binned exactly (one bucket per value).
+const LINEAR: usize = 32;
+/// Sub-buckets per power-of-two octave above the linear region.
+const SUB: usize = 16;
+/// log2(SUB): how many top mantissa bits select the sub-bucket.
+const SUB_BITS: usize = 4;
+/// First octave handled logarithmically (values `32..64` live in
+/// octave 5, since `2^5 = 32`).
+const FIRST_OCTAVE: usize = 5;
+/// Total bucket count: 32 exact + 16 per octave for octaves 5..=63.
+const BUCKETS: usize = LINEAR + (64 - FIRST_OCTAVE) * SUB;
+
+/// Fixed-point scale used when recording ratios (keep ratio, skip
+/// fraction) into a [`Histogram`]: `ratio * RATIO_SCALE` as `u64`.
+pub const RATIO_SCALE: u64 = 10_000;
+
+/// Bucket index for a value. Total order preserving: `a <= b` implies
+/// `bucket_index(a) <= bucket_index(b)`.
+fn bucket_index(v: u64) -> usize {
+    if v < LINEAR as u64 {
+        v as usize
+    } else {
+        let o = 63 - v.leading_zeros() as usize; // >= FIRST_OCTAVE
+        let sub = ((v >> (o - SUB_BITS)) & (SUB as u64 - 1)) as usize;
+        LINEAR + (o - FIRST_OCTAVE) * SUB + sub
+    }
+}
+
+/// Lower bound of a bucket — the representative value reported for any
+/// sample binned there. Using the *lower* bound keeps every value that
+/// is exactly representable (all values `< 32`, and any value of the
+/// form `(16 + m) * 2^k` for `m < 16`) reported exactly.
+fn bucket_lower(idx: usize) -> u64 {
+    if idx < LINEAR {
+        idx as u64
+    } else {
+        let o = FIRST_OCTAVE + (idx - LINEAR) / SUB;
+        let sub = ((idx - LINEAR) % SUB) as u64;
+        (1u64 << o) + (sub << (o - SUB_BITS))
+    }
+}
+
+/// A fixed-size log-bucketed histogram of `u64` samples.
+///
+/// Constant memory (976 buckets), O(1) record, O(buckets) percentile
+/// and merge. See the module docs for the bucket layout and error
+/// bound.
+#[derive(Clone)]
+pub struct Histogram {
+    counts: Vec<u64>,
+    total: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl std::fmt::Debug for Histogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Histogram").field("total", &self.total).finish()
+    }
+}
+
+impl Histogram {
+    /// Empty histogram.
+    pub fn new() -> Histogram {
+        Histogram { counts: vec![0; BUCKETS], total: 0 }
+    }
+
+    /// Record one sample.
+    pub fn record(&mut self, v: u64) {
+        self.counts[bucket_index(v)] += 1;
+        self.total += 1;
+    }
+
+    /// Record `n` samples of the same value.
+    pub fn record_n(&mut self, v: u64, n: u64) {
+        self.counts[bucket_index(v)] += n;
+        self.total += n;
+    }
+
+    /// Number of samples recorded.
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    /// Fold another histogram in by element-wise bucket addition.
+    /// Bucket-exactly equivalent to having recorded both sample sets
+    /// into one histogram.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+    }
+
+    /// Nearest-rank percentile (`p` in 0..=100), reported as the
+    /// containing bucket's lower bound. Matches the raw-sample rule
+    /// `sorted[round(p/100 * (n-1))]` up to bucketing (relative error
+    /// `< 1/16`). Returns 0 on an empty histogram.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.total == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * (self.total - 1) as f64).round() as u64;
+        let mut seen = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen > rank {
+                return bucket_lower(idx);
+            }
+        }
+        bucket_lower(BUCKETS - 1)
+    }
+
+    /// Largest recorded value, as its bucket's lower bound (0 if empty).
+    pub fn max(&self) -> u64 {
+        match self.counts.iter().rposition(|&c| c > 0) {
+            Some(idx) => bucket_lower(idx),
+            None => 0,
+        }
+    }
+}
+
+/// A histogram sharded across several mutexes so concurrent recorders
+/// (worker threads) do not serialize on one lock; snapshots merge the
+/// shards into a single [`Histogram`].
+///
+/// Shard choice is a round-robin atomic counter — cheap, allocation
+/// free, and statistically spreads recorders without any thread-local
+/// state.
+pub struct ShardedHistogram {
+    shards: Vec<Mutex<Histogram>>,
+    next: AtomicUsize,
+}
+
+impl std::fmt::Debug for ShardedHistogram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ShardedHistogram").field("shards", &self.shards.len()).finish()
+    }
+}
+
+impl ShardedHistogram {
+    /// A sharded histogram with `shards` independent locks (min 1).
+    pub fn new(shards: usize) -> ShardedHistogram {
+        let n = shards.max(1);
+        ShardedHistogram {
+            shards: (0..n).map(|_| Mutex::new(Histogram::new())).collect(),
+            next: AtomicUsize::new(0),
+        }
+    }
+
+    /// Record one sample into a round-robin-chosen shard.
+    pub fn record(&self, v: u64) {
+        let i = self.next.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        self.shards[i].lock().unwrap().record(v);
+    }
+
+    /// Merge every shard into one histogram (the snapshot view).
+    pub fn merged(&self) -> Histogram {
+        let mut out = Histogram::new();
+        for s in &self.shards {
+            out.merge(&s.lock().unwrap());
+        }
+        out
+    }
+
+    /// Total samples across shards.
+    pub fn count(&self) -> u64 {
+        self.shards.iter().map(|s| s.lock().unwrap().count()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The raw-sample percentile rule the histograms replace.
+    fn exact_percentile(sorted: &[u64], p: f64) -> u64 {
+        let rank = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    #[test]
+    fn small_values_are_exact() {
+        let mut h = Histogram::new();
+        for v in 0..32u64 {
+            h.record(v);
+        }
+        for v in 0..32u64 {
+            assert_eq!(bucket_lower(bucket_index(v)), v);
+        }
+        assert_eq!(h.percentile(0.0), 0);
+        assert_eq!(h.percentile(100.0), 31);
+    }
+
+    #[test]
+    fn representative_is_lower_bound_and_within_error() {
+        // Every u64's representative is <= the value and within 1/16
+        // relative error of it.
+        crate::util::prop::check(0x0B5E, 400, |g| {
+            let shift = g.usize_in(0, 31);
+            let v = (g.usize_in(0, u32::MAX as usize) as u64) << shift;
+            let r = bucket_lower(bucket_index(v));
+            assert!(r <= v, "rep {r} > value {v}");
+            // err < width(bucket) <= v / 16 in the log region; exact below.
+            assert!(v - r <= v / 16, "rep {r} too far below {v}");
+        });
+    }
+
+    #[test]
+    fn bucket_index_is_monotone() {
+        crate::util::prop::check(0x0B5F, 400, |g| {
+            let a = g.usize_in(0, 1 << 40) as u64;
+            let b = g.usize_in(0, 1 << 40) as u64;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            assert!(bucket_index(lo) <= bucket_index(hi));
+        });
+    }
+
+    #[test]
+    fn merged_shards_equal_concatenated_samples_bucket_exactly() {
+        // The property the shard-local recording design rests on:
+        // recording a sample set split arbitrarily across K histograms
+        // and merging equals recording it all into one.
+        crate::util::prop::check(0xC0CA, 200, |g| {
+            let n = g.usize_in(0, 300);
+            let k = g.usize_in(1, 6);
+            let mut whole = Histogram::new();
+            let mut parts = vec![Histogram::new(); k];
+            for _ in 0..n {
+                let v = (g.usize_in(0, u32::MAX as usize) as u64)
+                    << g.usize_in(0, 20);
+                whole.record(v);
+                parts[g.usize_in(0, k - 1)].record(v);
+            }
+            let mut merged = Histogram::new();
+            let start = g.usize_in(0, k - 1);
+            for i in 0..k {
+                merged.merge(&parts[(start + i) % k]);
+            }
+            assert_eq!(merged.counts, whole.counts, "n={n} k={k}");
+            assert_eq!(merged.total, whole.total);
+            for &p in &[0.0, 50.0, 95.0, 99.0, 100.0] {
+                assert_eq!(merged.percentile(p), whole.percentile(p));
+            }
+        });
+    }
+
+    #[test]
+    fn percentiles_within_one_bucket_of_exact() {
+        // p50/p95/p99 of the histogram stay within one bucket's
+        // relative error (1/16) of the exact raw-sample percentiles.
+        crate::util::prop::check(0x9E7C, 120, |g| {
+            let n = g.usize_in(1, 400);
+            let mut samples = Vec::with_capacity(n);
+            let mut h = Histogram::new();
+            for _ in 0..n {
+                let v = (g.usize_in(0, 1 << 30) as u64) << g.usize_in(0, 8);
+                samples.push(v);
+                h.record(v);
+            }
+            samples.sort_unstable();
+            for &p in &[50.0, 95.0, 99.0] {
+                let exact = exact_percentile(&samples, p);
+                let got = h.percentile(p);
+                assert!(got <= exact, "p{p}: got {got} > exact {exact}");
+                assert!(
+                    exact - got <= exact / 16,
+                    "p{p}: got {got}, exact {exact} (err > 1/16)"
+                );
+            }
+        });
+    }
+
+    #[test]
+    fn sharded_recording_matches_unsharded() {
+        let sh = ShardedHistogram::new(4);
+        let mut plain = Histogram::new();
+        for v in [0u64, 1, 17, 40, 1000, 65_536, 12_345_678] {
+            sh.record(v);
+            plain.record(v);
+        }
+        let merged = sh.merged();
+        assert_eq!(merged.count(), plain.count());
+        assert_eq!(sh.count(), plain.count());
+        for &p in &[0.0, 50.0, 99.0, 100.0] {
+            assert_eq!(merged.percentile(p), plain.percentile(p));
+        }
+        assert_eq!(merged.max(), plain.max());
+    }
+
+    #[test]
+    fn empty_histogram_is_all_zeroes() {
+        let h = Histogram::new();
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.percentile(50.0), 0);
+        assert_eq!(h.max(), 0);
+    }
+}

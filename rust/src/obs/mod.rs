@@ -1,0 +1,88 @@
+//! Observability: flight-recorder tracing, mergeable histograms, and
+//! metrics exposition for the serving stack.
+//!
+//! UnIT's value claim is quantitative — per-layer MAC skipping driven
+//! by input-dependent thresholds — yet through PR 7 the serving stack
+//! could only report aggregate counters and a periodic `[stats]` line.
+//! This module makes the whole pipeline observable on live traffic
+//! without perturbing it:
+//!
+//! * [`trace`] — the flight recorder: per-worker lock-free event rings
+//!   (enqueue → park/admit → dequeue → service → per-layer kernel
+//!   spans with executed/skipped MACs, plus plan swaps, bg compiles,
+//!   drift trips, recalibrations, fleet re-solves, injected faults,
+//!   worker panics/respawns), bounded memory, exact drop counters,
+//!   exportable as Chrome trace-event JSON (`unit trace`).
+//! * [`hist`] — fixed-size log-bucketed mergeable histograms (HDR
+//!   style) backing the latency/keep-ratio percentiles in
+//!   [`crate::coordinator::Metrics`]: constant memory, shard-local
+//!   recording, bucket-exact merge at snapshot.
+//! * [`export`] — Prometheus text-format rendering of the full metric
+//!   set (coordinator, governor, fleet scheduler, per-model and
+//!   per-layer gauges, trace-ring health), served over the wire v5
+//!   `Scrape`/`TraceDump` admin frames and the
+//!   `unit serve --metrics-addr` HTTP side listener; `unit top` polls
+//!   it for a live terminal view.
+//!
+//! **Cost discipline:** everything here is opt-in through
+//! [`ObsConfig`]. With the default [`ObsConfig::off`], no ring exists,
+//! no per-layer timestamps are taken, and the inference hot path is
+//! bit-identical to the pre-observability plans (pinned by the
+//! cross-layer property tests).
+
+pub mod export;
+pub mod hist;
+pub mod trace;
+
+pub use export::{render_prometheus, render_trace, spawn_http, MetricsHub};
+pub use hist::{Histogram, ShardedHistogram, RATIO_SCALE};
+pub use trace::{Event, EventKind, FlightRecorder, TraceRing};
+
+use std::sync::Arc;
+
+/// Observability switch threaded through
+/// [`ServeConfig`](crate::coordinator::ServeConfig): `off` (the
+/// default) disables all tracing at near-zero cost; `enabled` attaches
+/// a shared [`FlightRecorder`] that every subsystem registers its
+/// event rings with.
+#[derive(Clone, Default)]
+pub struct ObsConfig {
+    /// The shared flight recorder, if observability is on.
+    pub recorder: Option<Arc<FlightRecorder>>,
+}
+
+impl std::fmt::Debug for ObsConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ObsConfig").field("on", &self.is_on()).finish()
+    }
+}
+
+impl ObsConfig {
+    /// Observability disabled (the default): no recorder, no spans,
+    /// bit-identical hot path.
+    pub fn off() -> ObsConfig {
+        ObsConfig { recorder: None }
+    }
+
+    /// Observability enabled with a fresh [`FlightRecorder`].
+    pub fn enabled() -> ObsConfig {
+        ObsConfig { recorder: Some(Arc::new(FlightRecorder::new())) }
+    }
+
+    /// Whether a recorder is attached.
+    pub fn is_on(&self) -> bool {
+        self.recorder.is_some()
+    }
+}
+
+/// Receiver for per-layer execution spans from the planned engines
+/// ([`PlannedModel::infer_observed`](crate::engine::PlannedModel) and
+/// the float plan's observed forward). Implemented by the worker's
+/// ring adapter; `None` sinks skip even the timestamp reads, keeping
+/// the unobserved path identical to the pre-observability engine.
+pub trait LayerSink {
+    /// One layer finished: `index` within the plan, wall time in
+    /// nanoseconds, and the layer's executed (`kept`) / skipped MAC
+    /// counts.
+    fn layer(&self, index: usize, elapsed_ns: u64, kept: u64, skipped: u64);
+}

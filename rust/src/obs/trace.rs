@@ -1,0 +1,498 @@
+//! Flight recorder: lock-free ring buffers of typed, timestamped
+//! events, exportable as Chrome trace-event JSON.
+//!
+//! Each [`TraceRing`] is a fixed-capacity ring of seqlock-protected
+//! slots. Writers never block and never allocate: a monotone cursor
+//! (`fetch_add`) assigns each event a global sequence number, the slot
+//! at `seq % capacity` is stamped odd → fields → even, and old events
+//! are silently overwritten — so memory is bounded and the **exact**
+//! number of overwritten (dropped) events is `cursor - capacity`.
+//! Readers ([`TraceRing::snapshot`]) validate each slot's sequence
+//! before and after copying the fields and skip any slot a writer was
+//! mid-flight in, so snapshots never stop workers and never observe a
+//! torn event.
+//!
+//! The [`FlightRecorder`] is the registry of named rings (one per
+//! worker, plus `intake` / `session` / `control` / `fleet` / `faults`)
+//! and renders them all as a single Chrome `traceEvents` JSON document
+//! (load it at `chrome://tracing` or <https://ui.perfetto.dev>): each
+//! ring becomes one "thread" row, durational events (`Service`,
+//! `Layer`) become `ph:"X"` spans, everything else instants.
+
+use std::sync::atomic::{fence, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// Default per-ring capacity (events), used by [`FlightRecorder::ring`].
+pub const DEFAULT_RING_CAPACITY: usize = 4096;
+
+/// Typed flight-recorder events covering the request lifecycle and the
+/// control plane. The `id`/`a`/`b`/`c` payload words are
+/// per-kind (documented on each variant); unused words are 0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u64)]
+pub enum EventKind {
+    /// Request accepted into the coordinator queue. `id` = request id,
+    /// `a` = model index.
+    Enqueue = 0,
+    /// Request parked by session admission (queue full). `id` = wire id.
+    Park = 1,
+    /// Request admitted into a session's in-flight window. `id` = wire id.
+    Admit = 2,
+    /// Worker pulled the request off its deque. `id` = request id,
+    /// `a` = worker index.
+    Dequeue = 3,
+    /// Whole-request service span (dur = service time). `id` = request
+    /// id, `a` = worker index, `b` = model index.
+    Service = 4,
+    /// Per-layer kernel span (dur = layer time). `id` = request id,
+    /// `a` = layer index, `b` = executed MACs, `c` = skipped MACs.
+    Layer = 5,
+    /// A plan `Arc` was swapped into a `PlanSlot`. `id` = model index,
+    /// `a` = grid step.
+    PlanSwap = 6,
+    /// Background plan compile finished. `a` = grid step.
+    BgCompile = 7,
+    /// Drift tracker tripped (observed keep ratio diverged from the
+    /// calibrated profile). `id` = model index.
+    DriftTrip = 8,
+    /// Live recalibration completed and was republished. `id` = model
+    /// index.
+    Recalibrate = 9,
+    /// Fleet scheduler re-solved the global budget allocation.
+    FleetResolve = 10,
+    /// A chaos fault actually fired. `a` = fault site
+    /// (see [`crate::util::fault`] site constants).
+    Fault = 11,
+    /// A worker panicked mid-request. `a` = worker index.
+    WorkerPanic = 12,
+    /// The supervisor respawned a panicked worker. `a` = worker index.
+    WorkerRespawn = 13,
+}
+
+impl EventKind {
+    /// Decode a slot's raw kind word (`None` for garbage, which a
+    /// snapshot then drops).
+    pub fn from_u64(v: u64) -> Option<EventKind> {
+        Some(match v {
+            0 => EventKind::Enqueue,
+            1 => EventKind::Park,
+            2 => EventKind::Admit,
+            3 => EventKind::Dequeue,
+            4 => EventKind::Service,
+            5 => EventKind::Layer,
+            6 => EventKind::PlanSwap,
+            7 => EventKind::BgCompile,
+            8 => EventKind::DriftTrip,
+            9 => EventKind::Recalibrate,
+            10 => EventKind::FleetResolve,
+            11 => EventKind::Fault,
+            12 => EventKind::WorkerPanic,
+            13 => EventKind::WorkerRespawn,
+            _ => return None,
+        })
+    }
+
+    /// Stable display name (Chrome trace `name` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            EventKind::Enqueue => "Enqueue",
+            EventKind::Park => "Park",
+            EventKind::Admit => "Admit",
+            EventKind::Dequeue => "Dequeue",
+            EventKind::Service => "Service",
+            EventKind::Layer => "Layer",
+            EventKind::PlanSwap => "PlanSwap",
+            EventKind::BgCompile => "BgCompile",
+            EventKind::DriftTrip => "DriftTrip",
+            EventKind::Recalibrate => "Recalibrate",
+            EventKind::FleetResolve => "FleetResolve",
+            EventKind::Fault => "Fault",
+            EventKind::WorkerPanic => "WorkerPanic",
+            EventKind::WorkerRespawn => "WorkerRespawn",
+        }
+    }
+
+    /// Whether the event is a span (has a meaningful duration) rather
+    /// than an instant.
+    pub fn is_span(self) -> bool {
+        matches!(self, EventKind::Service | EventKind::Layer)
+    }
+}
+
+/// One decoded flight-recorder event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Event {
+    /// What happened.
+    pub kind: EventKind,
+    /// Start time, microseconds since the recorder's origin.
+    pub t_us: u64,
+    /// Span duration in microseconds (0 for instants).
+    pub dur_us: u64,
+    /// Request / model id (kind-specific; see [`EventKind`]).
+    pub id: u64,
+    /// First payload word (kind-specific).
+    pub a: u64,
+    /// Second payload word (kind-specific).
+    pub b: u64,
+    /// Third payload word (kind-specific).
+    pub c: u64,
+}
+
+/// One seqlock slot: sequence word plus the seven event words
+/// (kind, t_us, dur_us, id, a, b, c).
+struct Slot {
+    seq: AtomicU64,
+    fields: [AtomicU64; 7],
+}
+
+impl Slot {
+    fn new() -> Slot {
+        Slot { seq: AtomicU64::new(0), fields: std::array::from_fn(|_| AtomicU64::new(0)) }
+    }
+}
+
+/// A named, fixed-capacity, lock-free event ring. Writers are
+/// wait-free (one `fetch_add` + eight relaxed/ordered stores); readers
+/// snapshot concurrently and skip in-flight slots. Multiple writers
+/// are memory-safe; rings are *conventionally* single-writer (one per
+/// worker) so Chrome traces get one row per thread, except the shared
+/// `intake` / `session` / `faults` rings where cross-thread order is
+/// already meaningless.
+pub struct TraceRing {
+    name: String,
+    origin: Instant,
+    cap: u64,
+    cursor: AtomicU64,
+    slots: Vec<Slot>,
+}
+
+impl std::fmt::Debug for TraceRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceRing")
+            .field("name", &self.name)
+            .field("cap", &self.cap)
+            .field("events", &self.events_total())
+            .finish()
+    }
+}
+
+impl TraceRing {
+    /// A fresh ring. `origin` is the recorder-wide epoch all
+    /// timestamps are relative to; `capacity` is clamped to >= 2.
+    pub fn new(name: &str, origin: Instant, capacity: usize) -> TraceRing {
+        let cap = capacity.max(2);
+        TraceRing {
+            name: name.to_string(),
+            origin,
+            cap: cap as u64,
+            cursor: AtomicU64::new(0),
+            slots: (0..cap).map(|_| Slot::new()).collect(),
+        }
+    }
+
+    /// Ring name (Chrome trace row label).
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Capacity in events.
+    pub fn capacity(&self) -> usize {
+        self.cap as usize
+    }
+
+    /// Microseconds since the recorder origin (the event clock).
+    pub fn now_us(&self) -> u64 {
+        self.origin.elapsed().as_micros() as u64
+    }
+
+    /// Record an instant event stamped `now`.
+    pub fn emit(&self, kind: EventKind, id: u64, a: u64, b: u64, c: u64) {
+        self.record(kind, self.now_us(), 0, id, a, b, c);
+    }
+
+    /// Record a span with an explicit start time and duration.
+    #[allow(clippy::too_many_arguments)]
+    pub fn span(&self, kind: EventKind, id: u64, t_us: u64, dur_us: u64, a: u64, b: u64, c: u64) {
+        self.record(kind, t_us, dur_us, id, a, b, c);
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn record(&self, kind: EventKind, t_us: u64, dur_us: u64, id: u64, a: u64, b: u64, c: u64) {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(i % self.cap) as usize];
+        // Seqlock write: odd (in-flight) -> fields -> even (published).
+        // The release fence keeps the field stores from becoming
+        // visible before the odd mark; the final release store
+        // publishes them no later than the even mark.
+        slot.seq.store(2 * i + 1, Ordering::Relaxed);
+        fence(Ordering::Release);
+        let raw = [kind as u64, t_us, dur_us, id, a, b, c];
+        for (f, v) in slot.fields.iter().zip(raw) {
+            f.store(v, Ordering::Relaxed);
+        }
+        slot.seq.store(2 * i + 2, Ordering::Release);
+    }
+
+    /// Total events ever recorded (including overwritten ones).
+    pub fn events_total(&self) -> u64 {
+        self.cursor.load(Ordering::Acquire)
+    }
+
+    /// Exact number of events lost to ring wrap-around.
+    pub fn dropped(&self) -> u64 {
+        self.events_total().saturating_sub(self.cap)
+    }
+
+    /// Copy out every published event still resident, oldest first,
+    /// without stopping writers. Slots a writer is mid-flight in (or
+    /// overwrites during the copy) are skipped, never torn.
+    pub fn snapshot(&self) -> Vec<Event> {
+        let cur = self.cursor.load(Ordering::Acquire);
+        let start = cur.saturating_sub(self.cap);
+        let mut out = Vec::with_capacity((cur - start) as usize);
+        for i in start..cur {
+            let slot = &self.slots[(i % self.cap) as usize];
+            let s1 = slot.seq.load(Ordering::Acquire);
+            if s1 != 2 * i + 2 {
+                continue; // unpublished, in-flight, or already lapped
+            }
+            let raw: [u64; 7] = std::array::from_fn(|k| slot.fields[k].load(Ordering::Relaxed));
+            fence(Ordering::Acquire);
+            if slot.seq.load(Ordering::Relaxed) != s1 {
+                continue; // a writer lapped us mid-copy
+            }
+            if let Some(kind) = EventKind::from_u64(raw[0]) {
+                out.push(Event {
+                    kind,
+                    t_us: raw[1],
+                    dur_us: raw[2],
+                    id: raw[3],
+                    a: raw[4],
+                    b: raw[5],
+                    c: raw[6],
+                });
+            }
+        }
+        out
+    }
+}
+
+/// Registry of named [`TraceRing`]s sharing one time origin, plus the
+/// Chrome trace-event JSON exporter. Cheap to share (`Arc`); ring
+/// lookup takes a short registry lock, so callers cache the
+/// `Arc<TraceRing>` they write to.
+pub struct FlightRecorder {
+    origin: Instant,
+    rings: Mutex<Vec<Arc<TraceRing>>>,
+}
+
+impl std::fmt::Debug for FlightRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.rings.lock().map(|r| r.len()).unwrap_or(0);
+        f.debug_struct("FlightRecorder").field("rings", &n).finish()
+    }
+}
+
+impl Default for FlightRecorder {
+    fn default() -> Self {
+        FlightRecorder::new()
+    }
+}
+
+impl FlightRecorder {
+    /// A recorder whose origin is "now".
+    pub fn new() -> FlightRecorder {
+        FlightRecorder { origin: Instant::now(), rings: Mutex::new(Vec::new()) }
+    }
+
+    /// Find-or-create the ring named `name` at the default capacity.
+    pub fn ring(&self, name: &str) -> Arc<TraceRing> {
+        self.ring_with_capacity(name, DEFAULT_RING_CAPACITY)
+    }
+
+    /// Find-or-create the ring named `name`. If the ring already
+    /// exists it is returned as-is (its original capacity wins).
+    pub fn ring_with_capacity(&self, name: &str, capacity: usize) -> Arc<TraceRing> {
+        let mut rings = self.rings.lock().unwrap();
+        if let Some(r) = rings.iter().find(|r| r.name() == name) {
+            return Arc::clone(r);
+        }
+        let r = Arc::new(TraceRing::new(name, self.origin, capacity));
+        rings.push(Arc::clone(&r));
+        r
+    }
+
+    /// All registered rings, in registration order.
+    pub fn rings(&self) -> Vec<Arc<TraceRing>> {
+        self.rings.lock().unwrap().clone()
+    }
+
+    /// Render every ring as one Chrome trace-event JSON document
+    /// (`{"traceEvents":[...]}`). Spans become `ph:"X"` with `ts`/`dur`
+    /// in microseconds; instants become `ph:"i"`; each ring is a
+    /// synthetic thread (`tid` = registration index) named via a
+    /// `thread_name` metadata event.
+    pub fn chrome_trace(&self) -> String {
+        let rings = self.rings();
+        let mut out = String::with_capacity(4096);
+        out.push_str("{\"traceEvents\":[");
+        let mut first = true;
+        for (tid, ring) in rings.iter().enumerate() {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "{{\"name\":\"thread_name\",\"ph\":\"M\",\"pid\":1,\"tid\":{tid},\
+                 \"args\":{{\"name\":\"{}\"}}}}",
+                ring.name()
+            ));
+            for e in ring.snapshot() {
+                let args = format!(
+                    "{{\"id\":{},\"a\":{},\"b\":{},\"c\":{}}}",
+                    e.id, e.a, e.b, e.c
+                );
+                if e.kind.is_span() {
+                    out.push_str(&format!(
+                        ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"X\",\"ts\":{},\
+                         \"dur\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
+                        e.kind.name(),
+                        e.t_us,
+                        e.dur_us
+                    ));
+                } else {
+                    out.push_str(&format!(
+                        ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"i\",\"s\":\"t\",\
+                         \"ts\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
+                        e.kind.name(),
+                        e.t_us
+                    ));
+                }
+            }
+        }
+        out.push_str("],\"displayTimeUnit\":\"ms\"}");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashSet;
+    use std::thread;
+
+    #[test]
+    fn ring_keeps_most_recent_and_counts_drops_exactly() {
+        let ring = TraceRing::new("t", Instant::now(), 8);
+        for i in 0..20u64 {
+            ring.span(EventKind::Enqueue, i, i, 0, 0, 0, 0);
+        }
+        assert_eq!(ring.events_total(), 20);
+        assert_eq!(ring.dropped(), 12);
+        let snap = ring.snapshot();
+        assert_eq!(snap.len(), 8);
+        // Oldest-first, exactly the last `cap` events.
+        let ids: Vec<u64> = snap.iter().map(|e| e.id).collect();
+        assert_eq!(ids, (12..20).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn no_drops_below_capacity() {
+        let ring = TraceRing::new("t", Instant::now(), 64);
+        for i in 0..64u64 {
+            ring.emit(EventKind::Fault, i, 0, 0, 0);
+        }
+        assert_eq!(ring.dropped(), 0);
+        assert_eq!(ring.snapshot().len(), 64);
+    }
+
+    #[test]
+    fn multithreaded_writers_never_tear_events() {
+        // 4 writers x 10k events into a 1024-slot ring, with a reader
+        // snapshotting concurrently. Every snapshotted event must be
+        // internally consistent: (writer, seq) stamped into (a, b)
+        // with c = a ^ b as a checksum; the drop counter must be
+        // exact once writers are done.
+        const WRITERS: u64 = 4;
+        const PER: u64 = 10_000;
+        const CAP: usize = 1024;
+        let ring = Arc::new(TraceRing::new("mt", Instant::now(), CAP));
+        let check = |events: &[Event]| {
+            for e in events {
+                assert_eq!(e.kind, EventKind::Enqueue);
+                assert!(e.a < WRITERS, "writer id out of range");
+                assert!(e.b < PER, "writer seq out of range");
+                assert_eq!(e.c, e.a ^ e.b, "torn event: {e:?}");
+            }
+        };
+        let mut handles = Vec::new();
+        for w in 0..WRITERS {
+            let ring = Arc::clone(&ring);
+            handles.push(thread::spawn(move || {
+                for s in 0..PER {
+                    ring.emit(EventKind::Enqueue, w * PER + s, w, s, w ^ s);
+                }
+            }));
+        }
+        // Concurrent reader: snapshots while writers run.
+        let reader = {
+            let ring = Arc::clone(&ring);
+            thread::spawn(move || {
+                for _ in 0..50 {
+                    let snap = ring.snapshot();
+                    assert!(snap.len() <= CAP);
+                    snap
+                }
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        check(&reader.join().unwrap());
+        assert_eq!(ring.events_total(), WRITERS * PER);
+        assert_eq!(ring.dropped(), WRITERS * PER - CAP as u64);
+        let final_snap = ring.snapshot();
+        check(&final_snap);
+        assert_eq!(final_snap.len(), CAP, "quiescent snapshot must be full");
+        // No duplicate (writer, seq) pairs in one snapshot.
+        let uniq: HashSet<(u64, u64)> = final_snap.iter().map(|e| (e.a, e.b)).collect();
+        assert_eq!(uniq.len(), final_snap.len());
+    }
+
+    #[test]
+    fn recorder_interns_rings_by_name() {
+        let rec = FlightRecorder::new();
+        let a = rec.ring("worker0");
+        let b = rec.ring("worker0");
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = rec.ring_with_capacity("worker0", 9999);
+        assert!(Arc::ptr_eq(&a, &c), "existing ring wins over new capacity");
+        assert_eq!(rec.rings().len(), 1);
+        rec.ring("worker1");
+        assert_eq!(rec.rings().len(), 2);
+    }
+
+    #[test]
+    fn chrome_trace_is_valid_shape() {
+        let rec = FlightRecorder::new();
+        let ring = rec.ring("worker0");
+        ring.emit(EventKind::Dequeue, 7, 0, 0, 0);
+        ring.span(EventKind::Service, 7, 100, 250, 0, 1, 0);
+        ring.span(EventKind::Layer, 7, 120, 30, 0, 500, 123);
+        let json = rec.chrome_trace();
+        assert!(json.starts_with("{\"traceEvents\":["));
+        assert!(json.ends_with('}'));
+        assert!(json.contains("\"name\":\"Service\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("\"dur\":250"));
+        assert!(json.contains("\"name\":\"Dequeue\""));
+        assert!(json.contains("\"ph\":\"i\""));
+        assert!(json.contains("\"name\":\"worker0\""));
+        // Balanced braces/brackets — cheap well-formedness check.
+        let opens = json.matches('{').count();
+        let closes = json.matches('}').count();
+        assert_eq!(opens, closes);
+        assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+}

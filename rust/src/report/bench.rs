@@ -77,6 +77,31 @@ pub struct CompileRow {
     pub us: f64,
 }
 
+/// Per-layer MAC accounting for one representative pruned inference
+/// (section `per_layer_macs`): where the paper's skipping actually
+/// lands, layer by layer. The same numbers the serving stack exports
+/// live as `unit_layer_macs_total` / `unit_layer_keep_ratio`.
+#[derive(Debug, Clone)]
+pub struct LayerRow {
+    /// Layer index within the plan.
+    pub layer: usize,
+    /// MACs executed.
+    pub executed: u64,
+    /// MACs skipped by the threshold check.
+    pub skipped: u64,
+    /// `executed / (executed + skipped)`; 1.0 for an empty layer.
+    pub keep_ratio: f64,
+}
+
+impl LayerRow {
+    /// Build a row from an inference's per-layer kept/skipped counts.
+    pub fn new(layer: usize, executed: u64, skipped: u64) -> LayerRow {
+        let total = executed + skipped;
+        let keep_ratio = if total > 0 { executed as f64 / total as f64 } else { 1.0 };
+        LayerRow { layer, executed, skipped, keep_ratio }
+    }
+}
+
 /// The full perf snapshot emitted by `perf_hotpath`.
 #[derive(Debug, Clone, Default)]
 pub struct BenchPerf {
@@ -95,6 +120,8 @@ pub struct BenchPerf {
     pub eval: Vec<EvalRow>,
     /// Plan-compile latency tiers (section `plan_compile_us`).
     pub compile: Vec<CompileRow>,
+    /// Per-layer MAC accounting rows (section `per_layer_macs`).
+    pub per_layer: Vec<LayerRow>,
 }
 
 fn esc(s: &str) -> String {
@@ -180,6 +207,18 @@ impl BenchPerf {
                 if i + 1 < self.compile.len() { "," } else { "" }
             ));
         }
+        out.push_str("  ],\n  \"per_layer_macs\": [\n");
+        for (i, l) in self.per_layer.iter().enumerate() {
+            out.push_str(&format!(
+                "    {{\"layer\": {}, \"executed\": {}, \"skipped\": {}, \
+                 \"keep_ratio\": {}}}{}\n",
+                l.layer,
+                l.executed,
+                l.skipped,
+                num(l.keep_ratio),
+                if i + 1 < self.per_layer.len() { "," } else { "" }
+            ));
+        }
         out.push_str("  ]\n}\n");
         out
     }
@@ -234,12 +273,20 @@ mod tests {
             }],
             eval: vec![EvalRow { label: "parallel-4".into(), samples_per_s: 800.0 }],
             compile: vec![CompileRow { label: "conv-stamp".into(), us: 120.5 }],
+            per_layer: vec![LayerRow::new(0, 300, 100), LayerRow::new(1, 0, 0)],
         };
         let j = b.to_json();
         assert!(j.contains("\"planned_speedup\": {\"unit\": 3.000}"));
         assert!(j.contains("\"backend\": \"planned\""));
         assert!(j.contains("\"plan_compile_us\""));
         assert!(j.contains("\"label\": \"conv-stamp\", \"us\": 120.500"));
+        assert!(j.contains(
+            "{\"layer\": 0, \"executed\": 300, \"skipped\": 100, \"keep_ratio\": 0.750}"
+        ));
+        // An empty layer reports keep_ratio 1.0, not NaN/null.
+        assert!(
+            j.contains("{\"layer\": 1, \"executed\": 0, \"skipped\": 0, \"keep_ratio\": 1.000}")
+        );
         assert!(j.contains("shift\\\"x"));
         // balanced braces/brackets (cheap well-formedness check)
         assert_eq!(j.matches('{').count(), j.matches('}').count());

@@ -19,7 +19,7 @@
 
 use std::path::Path;
 
-use super::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow};
+use super::bench::{BenchPerf, CompileRow, CoordRow, DivRow, EngineRow, EvalRow, LayerRow};
 
 // ---------------------------------------------------------------- JSON
 
@@ -298,6 +298,17 @@ pub fn snapshot_from_json(text: &str) -> Result<BenchPerf, String> {
             us: row.num_or("us", 0.0),
         });
     }
+    // Informational only (never diffed/gated — MAC counts are model
+    // properties, not machine performance), but parsed so a loaded
+    // snapshot is faithful to what was written.
+    for row in v.get("per_layer_macs").map(Json::as_arr).unwrap_or(&[]) {
+        out.per_layer.push(LayerRow {
+            layer: row.num_or("layer", 0.0) as usize,
+            executed: row.num_or("executed", 0.0) as u64,
+            skipped: row.num_or("skipped", 0.0) as u64,
+            keep_ratio: row.num_or("keep_ratio", 1.0),
+        });
+    }
     Ok(out)
 }
 
@@ -538,6 +549,7 @@ mod tests {
             }],
             eval: vec![EvalRow { label: "quant-parallel-auto".into(), samples_per_s: eval_par }],
             compile: vec![CompileRow { label: "conv-stamp".into(), us: 150.0 }],
+            per_layer: vec![LayerRow::new(0, 3000, 1000)],
         }
     }
 
@@ -571,6 +583,10 @@ mod tests {
         assert_eq!(b.coord[0].workers, 4);
         assert_eq!(b.coord[0].queue_p99_us, 80);
         assert_eq!(b.eval[0].label, "quant-parallel-auto");
+        // per-layer MAC rows survive the round trip, never gated
+        assert_eq!(b.per_layer.len(), 1);
+        assert_eq!(b.per_layer[0].executed, 3000);
+        assert_eq!(b.per_layer[0].keep_ratio, 0.75);
         // identical snapshots diff to all-zero deltas and no regressions
         let report = diff_snapshots(&a, &b, 10.0, false);
         assert!(report.regressions().is_empty());

@@ -111,6 +111,8 @@ struct ClientShared {
     pending: Mutex<HashMap<u64, Pending>>,
     pongs: Mutex<HashMap<u64, Sender<()>>>,
     stats: Mutex<HashMap<u64, Sender<AdminStats>>>,
+    /// Text-bodied admin replies in flight (`Scrape` / `TraceDump`).
+    texts: Mutex<HashMap<u64, Sender<String>>>,
     /// Server said goodbye (or the connection died).
     closed: AtomicBool,
     goodbye_tx: Mutex<Option<Sender<()>>>,
@@ -141,6 +143,7 @@ impl Client {
             pending: Mutex::new(HashMap::new()),
             pongs: Mutex::new(HashMap::new()),
             stats: Mutex::new(HashMap::new()),
+            texts: Mutex::new(HashMap::new()),
             closed: AtomicBool::new(false),
             goodbye_tx: Mutex::new(Some(goodbye_tx)),
         });
@@ -355,6 +358,38 @@ impl Client {
         out
     }
 
+    /// Admin: pull a Prometheus text-format scrape of the server's
+    /// full metric set over the serving connection (wire v5).
+    pub fn scrape(&self, timeout: Duration) -> std::io::Result<String> {
+        self.text_roundtrip(Frame::Scrape { id: 0, body: String::new() }, timeout)
+    }
+
+    /// Admin: pull a Chrome trace-event JSON dump of the server's
+    /// flight recorder (wire v5). An empty `traceEvents` array means
+    /// the server runs with observability off.
+    pub fn trace_dump(&self, timeout: Duration) -> std::io::Result<String> {
+        self.text_roundtrip(Frame::TraceDump { id: 0, body: String::new() }, timeout)
+    }
+
+    fn text_roundtrip(&self, mut frame: Frame, timeout: Duration) -> std::io::Result<String> {
+        let id = self.fresh_id();
+        match &mut frame {
+            Frame::Scrape { id: fid, .. } | Frame::TraceDump { id: fid, .. } => *fid = id,
+            _ => unreachable!("text_roundtrip only carries Scrape/TraceDump"),
+        }
+        let (tx, rx) = channel();
+        self.shared.texts.lock().unwrap().insert(id, tx);
+        if let Err(e) = self.send(&frame) {
+            self.shared.texts.lock().unwrap().remove(&id);
+            return Err(e);
+        }
+        let out = rx.recv_timeout(timeout).map_err(|_| {
+            std::io::Error::new(std::io::ErrorKind::TimedOut, "no scrape/trace reply")
+        });
+        self.shared.texts.lock().unwrap().remove(&id);
+        out
+    }
+
     /// Liveness probe: true iff the server echoed within `timeout`.
     pub fn ping(&self, timeout: Duration) -> bool {
         let id = self.fresh_id();
@@ -429,6 +464,7 @@ fn reader_loop(mut stream: TcpStream, shared: Arc<ClientShared>) {
     shared.pending.lock().unwrap().clear();
     shared.pongs.lock().unwrap().clear();
     shared.stats.lock().unwrap().clear();
+    shared.texts.lock().unwrap().clear();
 }
 
 fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
@@ -519,6 +555,11 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
                     models_loaded,
                     fleet_budget_mj,
                 });
+            }
+        }
+        Frame::Scrape { id, body } | Frame::TraceDump { id, body } => {
+            if let Some(tx) = shared.texts.lock().unwrap().remove(&id) {
+                let _ = tx.send(body);
             }
         }
         Frame::Goodbye => {

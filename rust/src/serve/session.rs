@@ -55,6 +55,7 @@ use std::time::{Duration, Instant};
 use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
 use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
+use crate::obs::{render_prometheus, render_trace, EventKind, MetricsHub, TraceRing};
 use crate::util::{lock_recover, FaultPlan};
 
 /// Per-session configuration.
@@ -400,6 +401,9 @@ pub(crate) struct SessionShared {
     /// stalls on the session thread (worker-side panics are injected
     /// by the coordinator's own copy of the plan).
     fault: Option<Arc<FaultPlan>>,
+    /// Shared "session" flight-recorder ring (admission lifecycle
+    /// events: Park, Admit); `None` when observability is off.
+    ring: Option<Arc<TraceRing>>,
     metrics: Arc<Metrics>,
 }
 
@@ -567,6 +571,7 @@ pub(crate) fn spawn_session(
     stream.set_write_timeout(Some(cfg.write_timeout))?;
     let _ = stream.set_nodelay(true);
     let metrics = Arc::clone(&coord.metrics);
+    let ring = coord.recorder().map(|r| r.ring("session"));
     let shared = Arc::new(SessionShared {
         writer: Mutex::new(stream),
         dead: AtomicBool::new(false),
@@ -580,6 +585,7 @@ pub(crate) fn spawn_session(
         governor,
         scheduler,
         fault,
+        ring,
         metrics,
     });
     let thread_shared = Arc::clone(&shared);
@@ -765,10 +771,41 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
             shared.send(&handle_set_budget(shared, id, budget_mj, model));
             true
         }
+        // Observability admin pair (v5): answer with the filled body.
+        // Rendering walks shared counters and lock-free ring snapshots
+        // only, so a scrape never blocks the serving path.
+        Frame::Scrape { id, .. } => {
+            // Refresh the point-in-time shard gauges so the scrape
+            // reflects current queue imbalance, not the last report.
+            shared.coord.publish_shard_costs();
+            let body = render_prometheus(&metrics_hub(shared));
+            shared.send(&Frame::Scrape { id, body });
+            true
+        }
+        Frame::TraceDump { id, .. } => {
+            let body = render_trace(&metrics_hub(shared));
+            shared.send(&Frame::TraceDump { id, body });
+            true
+        }
         Frame::Goodbye => false,
         // Server-only frames arriving from a client are ignored (they
         // framed correctly; dropping them is safer than hanging up).
         Frame::Response { .. } | Frame::Pong { .. } | Frame::Stats { .. } => true,
+    }
+}
+
+/// Assemble the exposition hub for one admin scrape: every piece is a
+/// cheap `Arc` clone of state the session already holds.
+fn metrics_hub(shared: &Arc<SessionShared>) -> MetricsHub {
+    let model_names = (0..shared.coord.model_count())
+        .map(|i| shared.coord.model_name(i as u32).unwrap_or_default().to_string())
+        .collect();
+    MetricsHub {
+        metrics: Arc::clone(&shared.metrics),
+        governor: shared.governor.clone(),
+        scheduler: shared.scheduler.clone(),
+        recorder: shared.coord.recorder(),
+        model_names,
     }
 }
 
@@ -975,6 +1012,9 @@ fn handle_request(
         }
         Admit::Parked => {
             shared.metrics.record_parked();
+            if let Some(r) = &shared.ring {
+                r.emit(EventKind::Park, id, 0, 0, 0);
+            }
             // Registered at receipt, even while parked: the Expired
             // frame is due at the deadline, not at the next credit
             // return.
@@ -1126,6 +1166,9 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         window.insert(p.id, Inflight { ctl: Arc::clone(&p.ctl) });
     }
     shared.metrics.inflight_delta(1);
+    if let Some(r) = &shared.ring {
+        r.emit(EventKind::Admit, p.id, 0, 0, 0);
+    }
     let Parked { id, sample_len, model, data, ctl, .. } = p;
 
     let flat = data.into_f32();

@@ -16,9 +16,10 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "UnIT"
-//! 4       2     version (little-endian, currently 4; 3 still accepted)
+//! 4       2     version (little-endian, currently 5; 3 and 4 still
+//!               accepted)
 //! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
-//!               6=Goodbye 7=SetBudget 8=Stats)
+//!               6=Goodbye 7=SetBudget 8=Stats 9=Scrape 10=TraceDump)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
 //! 8       8     request id (u64 LE; client-chosen, echoed on replies)
 //! 16      …     type-specific payload (see below)
@@ -62,6 +63,15 @@
 //!   extra trailing bytes after the known fields are ignored, so a v3
 //!   parser of this codec reads a v4 `Stats` (and a v4 parser will
 //!   read a v5 one) without a `Malformed` error.
+//! * **Scrape** (v5) — `body_len:u32`, then `body_len` bytes of UTF-8
+//!   text. A client sends an empty body to request a metrics scrape;
+//!   the server replies with the same frame type, same id, and the
+//!   Prometheus text exposition as the body. Like `Stats`, decoding is
+//!   forward-tolerant: trailing bytes after the body are ignored.
+//! * **TraceDump** (v5) — same shape as `Scrape`; the reply body is
+//!   the flight recorder's Chrome trace-event JSON (an empty
+//!   `traceEvents` document when no recorder is attached). Also
+//!   forward-tolerant.
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
@@ -80,10 +90,12 @@ pub const MAGIC: [u8; 4] = *b"UnIT";
 /// version 3 added the `Failed` response status and the `Stats`
 /// self-healing counters (worker panics/respawns, drift
 /// trips/recalibrations); version 4 added multi-tenant model identity
-/// (`model` on `Request`/`SetBudget`, the model/fleet `Stats` tail).
-/// Decoding accepts [`MIN_VERSION`]..=`VERSION`; anything else is
-/// refused with [`WireError::BadVersion`] rather than mis-framed.
-pub const VERSION: u16 = 4;
+/// (`model` on `Request`/`SetBudget`, the model/fleet `Stats` tail);
+/// version 5 added the observability admin frames (`Scrape`,
+/// `TraceDump`). Decoding accepts [`MIN_VERSION`]..=`VERSION`; anything
+/// else is refused with [`WireError::BadVersion`] rather than
+/// mis-framed.
+pub const VERSION: u16 = 5;
 /// Oldest protocol version the decoder still accepts. v3 frames carry
 /// no model identity: their requests decode as model `0` and their
 /// `SetBudget` as [`FLEET_MODEL`].
@@ -312,6 +324,29 @@ pub enum Frame {
         /// 0 from a v3 peer or when no scheduler is attached).
         fleet_budget_mj: f64,
     },
+    /// Admin metrics scrape (v5). A client sends this with an empty
+    /// `body` to request the server's full Prometheus text exposition;
+    /// the server replies with the same frame type and id, `body`
+    /// filled. Decoding is forward-tolerant like `Stats`: trailing
+    /// payload bytes are ignored.
+    Scrape {
+        /// Admin exchange id, echoed on the reply.
+        id: u64,
+        /// UTF-8 text: empty on the query, the Prometheus exposition
+        /// on the reply.
+        body: String,
+    },
+    /// Admin flight-recorder dump (v5). Same request/reply shape as
+    /// [`Frame::Scrape`]; the reply `body` is Chrome trace-event JSON
+    /// (an empty `traceEvents` document when the server has no flight
+    /// recorder attached). Forward-tolerant decoding.
+    TraceDump {
+        /// Admin exchange id, echoed on the reply.
+        id: u64,
+        /// UTF-8 text: empty on the query, the Chrome trace JSON on
+        /// the reply.
+        body: String,
+    },
 }
 
 impl Frame {
@@ -325,6 +360,8 @@ impl Frame {
             Frame::Goodbye => 6,
             Frame::SetBudget { .. } => 7,
             Frame::Stats { .. } => 8,
+            Frame::Scrape { .. } => 9,
+            Frame::TraceDump { .. } => 10,
         }
     }
 
@@ -336,7 +373,9 @@ impl Frame {
             | Frame::Ping { id }
             | Frame::Pong { id }
             | Frame::SetBudget { id, .. }
-            | Frame::Stats { id, .. } => *id,
+            | Frame::Stats { id, .. }
+            | Frame::Scrape { id, .. }
+            | Frame::TraceDump { id, .. } => *id,
             Frame::Goodbye => 0,
         }
     }
@@ -536,6 +575,10 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
             put_u32(&mut body, *model);
             put_u32(&mut body, *models_loaded);
             put_f64(&mut body, *fleet_budget_mj);
+        }
+        Frame::Scrape { body: text, .. } | Frame::TraceDump { body: text, .. } => {
+            put_u32(&mut body, text.len() as u32);
+            body.extend_from_slice(text.as_bytes());
         }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
@@ -737,11 +780,22 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
                 fleet_budget_mj,
             }
         }
+        9 | 10 => {
+            let n = c.u32("body_len")? as usize;
+            let raw = c.take(n, "body")?;
+            let body = String::from_utf8(raw.to_vec())
+                .map_err(|_| WireError::Malformed("body not UTF-8"))?;
+            if ftype == 9 {
+                Frame::Scrape { id, body }
+            } else {
+                Frame::TraceDump { id, body }
+            }
+        }
         other => return Err(WireError::BadType(other)),
     };
-    // Stats is forward-tolerant (see above); every other frame type is
-    // strict about consuming its payload exactly.
-    if ftype != 8 && c.pos != payload.len() {
+    // Stats/Scrape/TraceDump are forward-tolerant (see above); every
+    // other frame type is strict about consuming its payload exactly.
+    if !matches!(ftype, 8 | 9 | 10) && c.pos != payload.len() {
         return Err(WireError::Malformed("trailing bytes"));
     }
     Ok(Some((frame, 4 + len)))
@@ -924,6 +978,17 @@ mod tests {
             model: 0,
             models_loaded: 0,
             fleet_budget_mj: 0.0,
+        });
+        // v5 observability admin frames: empty query + filled reply.
+        roundtrip(Frame::Scrape { id: 12, body: String::new() });
+        roundtrip(Frame::Scrape {
+            id: 12,
+            body: "# TYPE unit_inflight gauge\nunit_inflight 0\n".to_string(),
+        });
+        roundtrip(Frame::TraceDump { id: 13, body: String::new() });
+        roundtrip(Frame::TraceDump {
+            id: 13,
+            body: r#"{"traceEvents":[],"displayTimeUnit":"ms"}"#.to_string(),
         });
     }
 
@@ -1145,6 +1210,36 @@ mod tests {
             other => panic!("expected Stats, got {other:?}"),
         }
         assert!(used > 0);
+    }
+
+    #[test]
+    fn scrape_and_tracedump_tolerate_trailing_extension() {
+        // The v5 admin frames opt into the same forward tolerance as
+        // Stats: a future revision may append fields after the body
+        // without breaking this parser.
+        for ftype in [9u8, 10] {
+            let mut body = header(VERSION, ftype, 0, 31);
+            let text = b"unit_inflight 0\n";
+            body.extend_from_slice(&(text.len() as u32).to_le_bytes());
+            body.extend_from_slice(text);
+            body.extend_from_slice(&[0xCD; 9]); // hypothetical v5.1 tail
+            let (frame, _) = decode(&seal(body)).unwrap().unwrap();
+            match frame {
+                Frame::Scrape { id, body } | Frame::TraceDump { id, body } => {
+                    assert_eq!(id, 31);
+                    assert_eq!(body, "unit_inflight 0\n");
+                }
+                other => panic!("expected admin frame, got {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn scrape_body_must_be_utf8() {
+        let mut body = header(VERSION, 9, 0, 1);
+        body.extend_from_slice(&2u32.to_le_bytes());
+        body.extend_from_slice(&[0xFF, 0xFE]); // invalid UTF-8
+        assert_eq!(decode(&seal(body)), Err(WireError::Malformed("body not UTF-8")));
     }
 
     #[test]

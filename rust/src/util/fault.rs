@@ -19,7 +19,10 @@
 //! builds of the serve path.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
 use std::time::Duration;
+
+use crate::obs::{EventKind, TraceRing};
 
 /// Injection probabilities and magnitudes. Rates are per-probe
 /// Bernoulli probabilities in `[0, 1]`.
@@ -52,17 +55,30 @@ impl Default for FaultRates {
     }
 }
 
-const SITE_PANIC: usize = 0;
-const SITE_CORRUPT: usize = 1;
-const SITE_DELAY: usize = 2;
-const SITE_STALL: usize = 3;
-const SITES: usize = 4;
+/// Injection site index: worker panic on a dequeued request.
+pub const SITE_PANIC: usize = 0;
+/// Injection site index: outbound frame corruption.
+pub const SITE_CORRUPT: usize = 1;
+/// Injection site index: delayed reply write.
+pub const SITE_DELAY: usize = 2;
+/// Injection site index: stalled inbound read.
+pub const SITE_STALL: usize = 3;
+/// Number of injection sites.
+pub const SITES: usize = 4;
 
 /// Seeded, lock-free fault injector (see module docs).
 pub struct FaultPlan {
     seed: u64,
     rates: FaultRates,
     counters: [AtomicU64; SITES],
+    /// Injections that actually FIRED per site (the draw counters
+    /// above advance on every probe; these only on a hit).
+    injected: [AtomicU64; SITES],
+    /// Optional flight-recorder ring: when attached, every fired
+    /// injection emits a [`EventKind::Fault`] event with the site in
+    /// `a`. Attaching never perturbs the decision streams — emission
+    /// happens after the draw, outside [`FaultPlan::draw`].
+    ring: OnceLock<Arc<TraceRing>>,
 }
 
 /// splitmix64 finalizer: a high-quality 64-bit mix, used here as a
@@ -82,7 +98,35 @@ impl FaultPlan {
 
     /// A plan with explicit rates.
     pub fn with_rates(seed: u64, rates: FaultRates) -> FaultPlan {
-        FaultPlan { seed, rates, counters: Default::default() }
+        FaultPlan {
+            seed,
+            rates,
+            counters: Default::default(),
+            injected: Default::default(),
+            ring: OnceLock::new(),
+        }
+    }
+
+    /// Attach a flight-recorder ring: every injection that fires from
+    /// now on also emits a [`EventKind::Fault`] event (site in `a`).
+    /// First attachment wins; decision streams are unaffected.
+    pub fn attach_ring(&self, ring: Arc<TraceRing>) {
+        let _ = self.ring.set(ring);
+    }
+
+    /// Injections that actually fired at `site` (one of the `SITE_*`
+    /// constants) since construction.
+    pub fn injected(&self, site: usize) -> u64 {
+        self.injected[site].load(Ordering::Relaxed)
+    }
+
+    /// Record a fired injection: bump the per-site counter and emit a
+    /// trace event when a ring is attached.
+    fn fired(&self, site: usize) {
+        self.injected[site].fetch_add(1, Ordering::Relaxed);
+        if let Some(r) = self.ring.get() {
+            r.emit(EventKind::Fault, 0, site as u64, 0, 0);
+        }
     }
 
     /// The plan's seed.
@@ -109,7 +153,11 @@ impl FaultPlan {
 
     /// Should the worker panic on this dequeued request?
     pub fn inject_panic(&self) -> bool {
-        Self::unit(self.draw(SITE_PANIC)) < self.rates.panic_rate
+        let hit = Self::unit(self.draw(SITE_PANIC)) < self.rates.panic_rate;
+        if hit {
+            self.fired(SITE_PANIC);
+        }
+        hit
     }
 
     /// Maybe corrupt an encoded outbound frame in place (one byte
@@ -123,6 +171,7 @@ impl FaultPlan {
         }
         let off = (mix(raw) as usize) % frame.len();
         frame[off] ^= 0xA5;
+        self.fired(SITE_CORRUPT);
         true
     }
 
@@ -132,6 +181,7 @@ impl FaultPlan {
         if self.rates.delay_max_ms == 0 || Self::unit(raw) >= self.rates.delay_rate {
             return None;
         }
+        self.fired(SITE_DELAY);
         Some(Duration::from_millis(mix(raw) % self.rates.delay_max_ms + 1))
     }
 
@@ -141,6 +191,7 @@ impl FaultPlan {
         if self.rates.stall_max_ms == 0 || Self::unit(raw) >= self.rates.stall_rate {
             return None;
         }
+        self.fired(SITE_STALL);
         Some(Duration::from_millis(mix(raw) % self.rates.stall_max_ms + 1))
     }
 }
@@ -225,6 +276,47 @@ mod tests {
         }
         let mut empty: [u8; 0] = [];
         assert!(!p.corrupt_frame(&mut empty), "empty frames cannot be corrupted");
+    }
+
+    #[test]
+    fn injected_counters_and_ring_events_track_fired_injections_only() {
+        use std::time::Instant;
+        let half = FaultRates {
+            panic_rate: 0.5,
+            corrupt_rate: 0.5,
+            delay_rate: 0.5,
+            stall_rate: 0.5,
+            ..FaultRates::default()
+        };
+        // Reference plan (no ring): the decision stream to compare to.
+        let bare = FaultPlan::with_rates(21, half);
+        let wired = FaultPlan::with_rates(21, half);
+        let ring = Arc::new(TraceRing::new("faults", Instant::now(), 4096));
+        wired.attach_ring(Arc::clone(&ring));
+        let mut buf = vec![0u8; 32];
+        let mut want = [0u64; SITES];
+        for _ in 0..200 {
+            assert_eq!(bare.inject_panic(), wired.inject_panic(), "ring perturbed the stream");
+            let mut b2 = vec![0u8; 32];
+            assert_eq!(bare.corrupt_frame(&mut buf), wired.corrupt_frame(&mut b2));
+            assert_eq!(bare.reply_delay(), wired.reply_delay());
+            assert_eq!(bare.read_stall(), wired.read_stall());
+            buf.fill(0);
+        }
+        for site in 0..SITES {
+            want[site] = wired.injected(site);
+            assert!(want[site] > 0, "site {site} never fired at rate 0.5 over 200 probes");
+            assert_eq!(bare.injected(site), want[site]);
+        }
+        // Every fired injection is on the ring, sites attributed in `a`.
+        let events = ring.snapshot();
+        assert_eq!(ring.dropped(), 0);
+        let mut got = [0u64; SITES];
+        for e in &events {
+            assert_eq!(e.kind, EventKind::Fault);
+            got[e.a as usize] += 1;
+        }
+        assert_eq!(got, want, "ring event counts must equal fired-injection counts");
     }
 
     #[test]

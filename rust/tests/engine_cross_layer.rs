@@ -328,6 +328,56 @@ fn planned_serves_many_inferences_without_drift() {
 }
 
 #[test]
+fn prop_observed_inference_is_bit_identical_and_sink_totals_match() {
+    // The observability hooks may never perturb the engine: for random
+    // configs, `infer_observed(.., None)` and `infer_observed(.., sink)`
+    // must both produce outputs bit-identical to `infer`, and the
+    // per-layer (kept, skipped) pairs reported to the sink must equal
+    // the InferOutput's own per-layer counts, layer for layer.
+    use std::sync::Mutex;
+    use unit_pruner::engine::PlannedModel;
+    use unit_pruner::obs::LayerSink;
+
+    struct CountingSink {
+        rows: Mutex<Vec<(usize, u64, u64)>>,
+    }
+    impl LayerSink for CountingSink {
+        fn layer(&self, index: usize, _elapsed_ns: u64, kept: u64, skipped: u64) {
+            self.rows.lock().unwrap().push((index, kept, skipped));
+        }
+    }
+
+    prop::check(5151, 20, |g| {
+        let name = *g.choice(&["mnist", "cifar"]);
+        let def = zoo(name);
+        let params = Params::random(&def, g.case as u64 + 977);
+        let mode = *g.choice(&ALL_MODES);
+        let kind = *g.choice(&DivKind::all());
+        let mut q = QModel::quantize(&def, &params);
+        if mode == PruneMode::Unit {
+            q = q.with_thresholds(&Thresholds::uniform(def.layers.len(), g.f32_in(0.0, 0.6)));
+        }
+        let x = q.quantize_input(&g.vec_sparse_normal(def.input_len(), 0.3));
+        let plan = PlannedModel::compile(&q, PlanConfig::for_mode(mode, kind));
+        let mut s = plan.new_scratch();
+        let base = plan.infer(&x, &mut s);
+        let unobserved = plan.infer_observed(&x, &mut s, None);
+        let sink = CountingSink { rows: Mutex::new(Vec::new()) };
+        let observed = plan.infer_observed(&x, &mut s, Some(&sink));
+        for (out, ctx) in [(&unobserved, "sink=None"), (&observed, "sink=Some")] {
+            assert_equivalent(&base, out, &format!("{name}/{mode:?}/{kind:?}/{ctx}"));
+        }
+        let rows = sink.rows.into_inner().unwrap();
+        assert_eq!(rows.len(), base.kept.len(), "one sink report per layer");
+        for (i, &(idx, kept, skipped)) in rows.iter().enumerate() {
+            assert_eq!(idx, i, "sink reports must arrive in layer order");
+            assert_eq!(kept, base.kept[i], "layer {i} kept");
+            assert_eq!(skipped, base.skipped[i], "layer {i} skipped");
+        }
+    });
+}
+
+#[test]
 fn prune_mode_cost_ordering_per_mode() {
     // Engine invariant: for the same model+input, per-connection cost
     // order is Unit(skip-heavy) < Dense, and ZeroSkip <= Dense on

@@ -25,8 +25,10 @@ use unit_pruner::coordinator::{BackendChoice, Coordinator, ServeConfig};
 use unit_pruner::data::{by_name, Sizes};
 use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
 use unit_pruner::models::{zoo, Params};
+use unit_pruner::obs::{EventKind, ObsConfig};
 use unit_pruner::pruning::Thresholds;
 use unit_pruner::serve::{RetryCfg, RetryClient, ServeOpts, Server, Status};
+use unit_pruner::util::fault::SITES;
 use unit_pruner::util::{FaultPlan, FaultRates};
 
 fn setup_q(seed: u64) -> QModel {
@@ -190,10 +192,18 @@ fn chaos_soak_completes_every_request_and_respawns_workers() {
         stall_max_ms: 5,
     };
     let fault = Arc::new(FaultPlan::with_rates(7, rates));
+    // Observability on: every injection that fires must also land on
+    // the flight recorder's "faults" ring, so the chaos run doubles as
+    // the fault-event accounting test. A deep ring guarantees no drops
+    // over the soak — the count comparison below is then exact.
+    let obs = ObsConfig::enabled();
+    let recorder = obs.recorder.clone().expect("enabled config carries a recorder");
+    let fault_ring = recorder.ring_with_capacity("faults", 1 << 16);
+    fault.attach_ring(Arc::clone(&fault_ring));
     let q = setup_q(83);
     let coord = Coordinator::start(
         BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
-        ServeConfig { workers: 3, fault: Some(Arc::clone(&fault)), ..Default::default() },
+        ServeConfig { workers: 3, fault: Some(Arc::clone(&fault)), obs, ..Default::default() },
     );
     let metrics = Arc::clone(&coord.metrics);
     let server = Server::start(
@@ -271,4 +281,25 @@ fn chaos_soak_completes_every_request_and_respawns_workers() {
     );
     assert_eq!(snap.worker_panics, snap.respawns, "every contained panic must respawn its worker");
     assert!(snap.failed > 0, "panics terminalized no request as Failed");
+
+    // Flight-recorder accounting: the "faults" ring must hold exactly
+    // one Fault event per fired injection, per site — no drops, no
+    // phantom events, sites attributed correctly.
+    assert_eq!(fault_ring.dropped(), 0, "fault ring dropped events; deepen it");
+    let mut per_site = [0u64; SITES];
+    for e in fault_ring.snapshot() {
+        assert_eq!(e.kind, EventKind::Fault, "non-fault event on the faults ring");
+        per_site[e.a as usize] += 1;
+    }
+    for site in 0..SITES {
+        assert_eq!(
+            per_site[site],
+            fault.injected(site),
+            "site {site}: ring events vs fired injections"
+        );
+    }
+    assert!(
+        per_site[unit_pruner::util::fault::SITE_PANIC] > 0,
+        "the soak provably panicked at least once, so the ring must show it"
+    );
 }

@@ -37,7 +37,7 @@ use unit_pruner::util::prop::{check, Gen};
 // Part 1: codec properties
 
 fn arbitrary_frame(g: &mut Gen) -> Frame {
-    match g.usize_in(0, 7) {
+    match g.usize_in(0, 9) {
         0 => {
             let sample_len = g.usize_in(1, 32);
             let n_samples = g.usize_in(1, 5);
@@ -103,6 +103,19 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
             models_loaded: g.u32_in(0, 8),
             fleet_budget_mj: g.f32_in(0.0, 1000.0) as f64,
         },
+        7 => {
+            // Printable ASCII bodies: Prometheus text / JSON are what
+            // ride these frames in practice, and UTF-8 validity is a
+            // decode invariant.
+            let body: String =
+                (0..g.usize_in(0, 64)).map(|_| g.u32_in(0x20, 0x7E) as u8 as char).collect();
+            Frame::Scrape { id: g.u32_in(0, u32::MAX - 1) as u64, body }
+        }
+        8 => {
+            let body: String =
+                (0..g.usize_in(0, 64)).map(|_| g.u32_in(0x20, 0x7E) as u8 as char).collect();
+            Frame::TraceDump { id: g.u32_in(0, u32::MAX - 1) as u64, body }
+        }
         _ => Frame::Goodbye,
     }
 }

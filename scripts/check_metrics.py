@@ -1,0 +1,54 @@
+#!/usr/bin/env python3
+"""Metrics docs gate: every exported metric family is documented.
+
+Stdlib only. rust/src/obs/export.rs is the single place metric family
+names may appear (the renderer takes them as string literals), so the
+check is a grep, not a parse:
+
+1. collect every `"unit_…"` string literal in export.rs;
+2. fail unless each appears (backticked or plain) in
+   docs/observability.md;
+3. fail the reverse direction too: a `unit_…` name documented in the
+   metric catalogue that export.rs no longer emits is a stale doc.
+
+Run from the repo root: python3 scripts/check_metrics.py
+"""
+
+import re
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+EXPORT = ROOT / "rust/src/obs/export.rs"
+DOC = ROOT / "docs/observability.md"
+
+# A metric family name as it appears as a Rust string literal. Label
+# keys ("model", "layer", ...) and help text never match this shape.
+LITERAL_RE = re.compile(r'"(unit_[a-z0-9_]+)"')
+# The same names as documented in the catalogue (backticked).
+DOC_RE = re.compile(r"`(unit_[a-z0-9_]+)`")
+
+
+def main() -> int:
+    exported = set(LITERAL_RE.findall(EXPORT.read_text(encoding="utf-8")))
+    doc_text = DOC.read_text(encoding="utf-8")
+    documented = set(DOC_RE.findall(doc_text))
+
+    errors = []
+    for name in sorted(exported - documented):
+        errors.append(f"docs/observability.md: exported metric `{name}` is undocumented")
+    for name in sorted(documented - exported):
+        errors.append(
+            f"docs/observability.md: documents `{name}`, which rust/src/obs/export.rs "
+            "no longer emits"
+        )
+
+    for e in errors:
+        print(f"error: {e}", file=sys.stderr)
+    print(f"checked {len(exported)} exported families, {len(documented)} documented; "
+          f"{len(errors)} error(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
