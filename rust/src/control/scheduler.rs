@@ -173,6 +173,10 @@ struct Tenant {
     reservoir: Mutex<InputReservoir>,
     /// A `Recalibrate` job for this tenant is queued or running.
     recal_pending: AtomicBool,
+    /// The SLO engine reported this tenant's burn rate tripped: while
+    /// set, re-solves pin the tenant to its cheapest grid step so the
+    /// freed fleet budget flows to healthy tenants.
+    throttled: AtomicBool,
     drift_trips: AtomicU64,
     recalibrations: AtomicU64,
     swaps: AtomicU64,
@@ -201,6 +205,9 @@ pub struct TenantStatus {
     pub cache_hits: u64,
     /// This tenant's plan-cache misses since construction.
     pub cache_misses: u64,
+    /// Whether the SLO engine currently reports this tenant tripped
+    /// (its allocation is pinned to the cheapest step while set).
+    pub throttled: bool,
     /// Drift-tracker trips for this tenant since installation.
     pub drift_trips: u64,
     /// Live recalibrations completed for this tenant.
@@ -291,6 +298,7 @@ impl FleetScheduler {
                 drift: Mutex::new(DriftTracker::new(DriftCfg::default())),
                 reservoir: Mutex::new(InputReservoir::new(64, 0x5EED_F1EE + i as u64)),
                 recal_pending: AtomicBool::new(false),
+                throttled: AtomicBool::new(false),
                 drift_trips: AtomicU64::new(0),
                 recalibrations: AtomicU64::new(0),
                 swaps: AtomicU64::new(0),
@@ -334,7 +342,20 @@ impl FleetScheduler {
             .map(|(t, p)| TenantCurve {
                 mean_mj: (0..p.n_steps()).map(|s| p.mean_mj(s)).collect(),
                 keep_ratio: (0..p.n_steps()).map(|s| p.model_keep_ratio(s)).collect(),
-                cap_mj: *read_recover(&t.cap_mj),
+                cap_mj: {
+                    let declared = *read_recover(&t.cap_mj);
+                    if t.throttled.load(Ordering::Acquire) {
+                        // SLO-tripped: cap at the cheapest step's
+                        // energy so the descent never allocates this
+                        // tenant more than its floor — the headroom
+                        // goes to healthy tenants until the burn
+                        // clears.
+                        let floor = p.mean_mj(p.n_steps().saturating_sub(1));
+                        Some(declared.map_or(floor, |c| c.min(floor)))
+                    } else {
+                        declared
+                    }
+                },
             })
             .collect();
         let steps = allocate_fleet(&curves, budget);
@@ -397,6 +418,29 @@ impl FleetScheduler {
         self.request_resolve();
     }
 
+    /// Report one tenant's SLO trip state (wired to
+    /// [`SloEngine::set_on_trip`](crate::obs::SloEngine::set_on_trip)).
+    /// A transition queues a background re-solve so the allocation
+    /// reacts within one solve-thread hop; repeated reports of the
+    /// same state are free. Returns `false` for an unknown model id.
+    pub fn set_tenant_throttled(&self, model: u32, throttled: bool) -> bool {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return false;
+        };
+        if t.throttled.swap(throttled, Ordering::AcqRel) != throttled {
+            self.trace(EventKind::SloTrip, model as u64, throttled as u64);
+            self.request_resolve();
+        }
+        true
+    }
+
+    /// Whether the SLO engine currently reports `model` tripped.
+    pub fn tenant_throttled(&self, model: u32) -> bool {
+        self.tenants
+            .get(model as usize)
+            .is_some_and(|t| t.throttled.load(Ordering::Acquire))
+    }
+
     /// Set (or clear, with `None`) one tenant's energy cap — the
     /// model-scoped `SetBudget` admin frame. Returns `false` for an
     /// unknown model id.
@@ -435,6 +479,7 @@ impl FleetScheduler {
             cap_mj: *read_recover(&t.cap_mj),
             cache_hits: t.cache.hits(),
             cache_misses: t.cache.misses(),
+            throttled: t.throttled.load(Ordering::Acquire),
             drift_trips: t.drift_trips.load(Ordering::Relaxed),
             recalibrations: t.recalibrations.load(Ordering::Relaxed),
             swaps: t.swaps.load(Ordering::Relaxed),
@@ -856,6 +901,42 @@ mod tests {
         }
         assert_eq!(sched.step(1), Some(0), "uncapped tenant must not move");
         assert_eq!(sched.status(0).unwrap().cap_mj, Some(cap));
+        coord.shutdown();
+    }
+
+    #[test]
+    fn slo_throttle_pins_tenant_to_its_cheapest_step() {
+        let (coord, tenants, _xs) = boot_fleet(&[44, 45], 1);
+        let rich: f64 = tenants.iter().map(|(_, p)| p.mean_mj(0)).sum::<f64>() * 2.0;
+        let profile0 = Arc::clone(&tenants[0].1);
+        let sched = FleetScheduler::install(&coord, tenants, rich).unwrap();
+        assert_eq!(sched.step(0), Some(0), "rich fleet starts unpruned");
+        // Trip tenant 0: its allocation must retreat to the cheapest
+        // step's spend while the healthy tenant keeps its slice.
+        assert!(sched.set_tenant_throttled(0, true));
+        assert!(!sched.set_tenant_throttled(9, true), "unknown tenant must be rejected");
+        assert!(sched.tenant_throttled(0));
+        let floor = profile0.mean_mj(profile0.n_steps() - 1);
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            let st = sched.status(0).unwrap();
+            if st.mean_mj <= floor + 1e-12 {
+                assert!(st.throttled, "status must surface the trip");
+                break;
+            }
+            assert!(Instant::now() < deadline, "throttle never pinned: {st:?}");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert_eq!(sched.step(1), Some(0), "healthy tenant must not move");
+        // Clearing the trip walks the tenant back to the generous
+        // allocation (same relief path as a budget raise).
+        assert!(sched.set_tenant_throttled(0, false));
+        let deadline = Instant::now() + Duration::from_secs(30);
+        while sched.step(0) != Some(0) {
+            assert!(Instant::now() < deadline, "recovery never republished");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(!sched.status(0).unwrap().throttled);
         coord.shutdown();
     }
 

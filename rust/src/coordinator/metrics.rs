@@ -27,7 +27,7 @@
 
 use std::sync::Mutex;
 
-use crate::obs::hist::{ShardedHistogram, RATIO_SCALE};
+use crate::obs::hist::{Histogram, ShardedHistogram, RATIO_SCALE};
 
 /// Lock shards per histogram series (worker-count scale).
 const HIST_SHARDS: usize = 4;
@@ -51,6 +51,46 @@ pub struct Metrics {
     /// Per-model, per-layer (executed, skipped) MAC accumulators,
     /// populated by workers only when observability is on.
     layers: Mutex<Vec<Vec<(u64, u64)>>>,
+    /// Per-model (tenant) serving statistics, grown on first sight of
+    /// a model id. The SLO engine takes monotone cuts of these to
+    /// compute burn rates, so everything here is cumulative.
+    tenants: Mutex<Vec<TenantMetrics>>,
+}
+
+/// Cumulative per-model (tenant) serving statistics: the inputs to
+/// per-tenant SLO burn-rate tracking and per-tenant exposition. All
+/// fields grow monotonically except the `inflight` gauge.
+#[derive(Debug, Default, Clone)]
+pub struct TenantMetrics {
+    /// Total (queue + service) latency histogram for this tenant, µs.
+    pub latency_us: Histogram,
+    /// Keep-ratio histogram, fixed point at [`RATIO_SCALE`].
+    pub keep: Histogram,
+    /// Requests completed `Ok` for this tenant.
+    pub served: u64,
+    /// Requests ending in `Error`/`Failed` for this tenant.
+    pub errors: u64,
+    /// Requests refused with `Throttled` by the tenant's admission
+    /// policy.
+    pub throttled: u64,
+    /// Admitted-but-unfinished requests for this tenant (gauge).
+    pub inflight: i64,
+}
+
+/// One monotone cut of a tenant's objective-violation counters, taken
+/// under the tenant lock at SLO-tick time. Two cuts subtract to give
+/// exact windowed violation counts without storing histograms per
+/// window.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct TenantCut {
+    /// Requests completed `Ok` so far.
+    pub served: u64,
+    /// Requests ended in `Error`/`Failed` so far.
+    pub errors: u64,
+    /// Completed requests whose total latency exceeded the objective.
+    pub lat_violations: u64,
+    /// Completed requests whose keep ratio fell below the floor.
+    pub keep_violations: u64,
 }
 
 impl Default for Metrics {
@@ -63,6 +103,7 @@ impl Default for Metrics {
             keep_ratio: ShardedHistogram::new(HIST_SHARDS),
             macs: ShardedHistogram::new(HIST_SHARDS),
             layers: Mutex::new(Vec::new()),
+            tenants: Mutex::new(Vec::new()),
         }
     }
 }
@@ -188,6 +229,15 @@ pub struct Snapshot {
     pub failed: u64,
 }
 
+/// Grow-on-first-sight accessor for a model's tenant row (mirrors the
+/// `layers` table's growth discipline).
+fn tenant_entry(rows: &mut Vec<TenantMetrics>, model: usize) -> &mut TenantMetrics {
+    if rows.len() <= model {
+        rows.resize_with(model + 1, TenantMetrics::default);
+    }
+    &mut rows[model]
+}
+
 impl Metrics {
     /// Fresh zeroed metrics.
     pub fn new() -> Metrics {
@@ -201,10 +251,13 @@ impl Metrics {
         let _ = n;
     }
 
-    /// Record one finished request: queue wait and service time in µs,
-    /// the modeled MCU statistics, and the executed MAC count.
+    /// Record one finished request for model `model`: queue wait and
+    /// service time in µs, the modeled MCU statistics, and the
+    /// executed MAC count. Also lands the latency/keep samples in the
+    /// per-tenant tables the SLO engine reads.
     pub fn record_request(
         &self,
+        model: usize,
         queue_us: u64,
         service_us: u64,
         mac_skipped: f64,
@@ -221,12 +274,20 @@ impl Metrics {
         }
         // Histograms record outside the counter mutex (see the module
         // docs' consistency note).
+        let total = queue_us + service_us;
         self.queue_us.record(queue_us);
         self.service_us.record(service_us);
-        self.total_us.record(queue_us + service_us);
+        self.total_us.record(total);
         let keep = ((1.0 - mac_skipped).clamp(0.0, 1.0) * RATIO_SCALE as f64).round() as u64;
         self.keep_ratio.record(keep);
         self.macs.record(macs);
+        {
+            let mut g = self.tenants.lock().unwrap();
+            let t = tenant_entry(&mut g, model);
+            t.served += 1;
+            t.latency_us.record(total);
+            t.keep.record(keep);
+        }
     }
 
     /// Accumulate one request's per-layer (executed, skipped) MAC
@@ -328,6 +389,69 @@ impl Metrics {
         self.inner.lock().unwrap().inflight += d;
     }
 
+    /// Count one request for model `model` ending in an error outcome
+    /// (`Error`/`Failed`) — feeds the tenant's error-rate burn.
+    pub fn record_tenant_error(&self, model: usize) {
+        let mut g = self.tenants.lock().unwrap();
+        tenant_entry(&mut g, model).errors += 1;
+    }
+
+    /// Count one request refused with `Throttled` by model `model`'s
+    /// admission policy.
+    pub fn record_tenant_throttled(&self, model: usize) {
+        let mut g = self.tenants.lock().unwrap();
+        tenant_entry(&mut g, model).throttled += 1;
+    }
+
+    /// Adjust model `model`'s admitted-but-unfinished request gauge
+    /// (the value the tenant's inflight admission quota is enforced
+    /// against).
+    pub fn tenant_inflight_delta(&self, model: usize, d: i64) {
+        let mut g = self.tenants.lock().unwrap();
+        tenant_entry(&mut g, model).inflight += d;
+    }
+
+    /// Current inflight gauge for model `model` (0 if never seen).
+    pub fn tenant_inflight(&self, model: usize) -> i64 {
+        self.tenants.lock().unwrap().get(model).map_or(0, |t| t.inflight)
+    }
+
+    /// Clone of every tenant's cumulative statistics (index = model
+    /// id; empty until a request completes or a tenant counter fires).
+    pub fn tenant_snapshot(&self) -> Vec<TenantMetrics> {
+        self.tenants.lock().unwrap().clone()
+    }
+
+    /// One monotone cut of model `model`'s objective-violation
+    /// counters against the given objectives: latency objective in µs
+    /// (`u64::MAX` disables) and keep floor in [`RATIO_SCALE`] fixed
+    /// point (`0` disables). Computed under the tenant lock without
+    /// cloning the histograms; `None` if the model has never been
+    /// seen.
+    pub fn tenant_cut(&self, model: usize, lat_obj_us: u64, keep_floor: u64) -> Option<TenantCut> {
+        let g = self.tenants.lock().unwrap();
+        let t = g.get(model)?;
+        let lat_violations = t.latency_us.count() - t.latency_us.count_le(lat_obj_us);
+        let keep_violations = if keep_floor == 0 {
+            0
+        } else {
+            t.keep.count_le(keep_floor.saturating_sub(1))
+        };
+        Some(TenantCut { served: t.served, errors: t.errors, lat_violations, keep_violations })
+    }
+
+    /// Merged view of the global total-latency histogram (µs), for the
+    /// native `le`-bucket exposition.
+    pub fn latency_hist(&self) -> Histogram {
+        self.total_us.merged()
+    }
+
+    /// Merged view of the global keep-ratio histogram ([`RATIO_SCALE`]
+    /// fixed point), for the native `le`-bucket exposition.
+    pub fn keep_hist(&self) -> Histogram {
+        self.keep_ratio.merged()
+    }
+
     /// Snapshot of all counters and percentile estimates. Counters,
     /// sums, and gauges are one consistent cut (copied under a single
     /// lock); histogram percentiles may lead or lag that cut by
@@ -387,7 +511,7 @@ mod tests {
     fn percentiles_ordered() {
         let m = Metrics::new();
         for i in 0..100 {
-            m.record_request(i, 2 * i, 0.5, 0.1, 0.01, 1024);
+            m.record_request(0, i, 2 * i, 0.5, 0.1, 0.01, 1024);
         }
         m.record_batch(100);
         let s = m.snapshot();
@@ -404,7 +528,7 @@ mod tests {
     #[test]
     fn queue_and_service_split_total() {
         let m = Metrics::new();
-        m.record_request(10, 30, 0.0, 0.0, 0.0, 0);
+        m.record_request(0, 10, 30, 0.0, 0.0, 0.0, 0);
         let s = m.snapshot();
         assert_eq!(s.queue_p50_us, 10);
         assert_eq!(s.service_p50_us, 30);
@@ -421,7 +545,7 @@ mod tests {
         let m = Metrics::new();
         let n = (1u64 << 17) + 100;
         for i in 0..n {
-            m.record_request(i % 1000, 50, 0.0, 0.0, 0.0, 0);
+            m.record_request(0, i % 1000, 50, 0.0, 0.0, 0.0, 0);
         }
         let s = m.snapshot();
         assert_eq!(s.served, n);
@@ -498,6 +622,51 @@ mod tests {
         assert_eq!(m.snapshot().shard_costs, vec![10, 20, 30]);
         m.record_shard_costs(&[5, 0, 7]);
         assert_eq!(m.snapshot().shard_costs, vec![5, 0, 7], "gauges must replace");
+    }
+
+    #[test]
+    fn tenant_tables_accumulate_outcomes_and_inflight() {
+        let m = Metrics::new();
+        assert!(m.tenant_snapshot().is_empty());
+        m.record_request(1, 10, 30, 0.0, 0.0, 0.0, 0);
+        m.record_request(1, 10, 30, 0.5, 0.0, 0.0, 0);
+        m.record_tenant_error(1);
+        m.record_tenant_throttled(1);
+        m.record_tenant_throttled(1);
+        m.tenant_inflight_delta(1, 3);
+        m.tenant_inflight_delta(1, -1);
+        let snap = m.tenant_snapshot();
+        assert_eq!(snap.len(), 2, "model 1 grows the table through index 1");
+        assert_eq!(snap[0].served, 0, "unseen model 0 stays zeroed");
+        let t = &snap[1];
+        assert_eq!((t.served, t.errors, t.throttled, t.inflight), (2, 1, 2, 2));
+        assert_eq!(m.tenant_inflight(1), 2);
+        assert_eq!(m.tenant_inflight(7), 0, "never-seen model reads 0");
+        assert_eq!(t.latency_us.count(), 2);
+        assert_eq!(t.keep.count(), 2);
+    }
+
+    #[test]
+    fn tenant_cut_counts_objective_violations_exactly() {
+        let m = Metrics::new();
+        assert!(m.tenant_cut(0, u64::MAX, 0).is_none(), "unseen model has no cut");
+        // Latencies 40 and 4 µs against a 31 µs objective: 31 is in
+        // the linear bucket region, so count_le is exact there.
+        m.record_request(0, 10, 30, 0.5, 0.0, 0.0, 0); // total 40, keep 5000
+        m.record_request(0, 1, 3, 0.0, 0.0, 0.0, 0); // total 4, keep 10000
+        m.record_tenant_error(0);
+        let cut = m.tenant_cut(0, 31, 6000).expect("cut");
+        assert_eq!(cut.served, 2);
+        assert_eq!(cut.errors, 1);
+        assert_eq!(cut.lat_violations, 1, "only the 40 µs request exceeds 31 µs");
+        assert_eq!(cut.keep_violations, 1, "only keep 0.5 sits below the 0.6 floor");
+        // Disabled objectives count nothing.
+        let cut = m.tenant_cut(0, u64::MAX, 0).expect("cut");
+        assert_eq!((cut.lat_violations, cut.keep_violations), (0, 0));
+        // Cuts are monotone: later cuts dominate earlier ones.
+        m.record_request(0, 50, 50, 0.9, 0.0, 0.0, 0);
+        let later = m.tenant_cut(0, 31, 6000).expect("cut");
+        assert!(later.served >= 2 && later.lat_violations >= 1 && later.keep_violations >= 2);
     }
 
     #[test]

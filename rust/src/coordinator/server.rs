@@ -50,7 +50,7 @@ use crate::approx::DivKind;
 use crate::engine::{PlanConfig, PlannedModel, PruneMode, QModel, Scratch};
 use crate::mcu::EnergyModel;
 use crate::models::Params;
-use crate::obs::{EventKind, FlightRecorder, LayerSink, ObsConfig, TraceRing};
+use crate::obs::{EventKind, FlightRecorder, LayerSink, ObsConfig, TraceRing, TraceSampler};
 use crate::util::stats::argmax;
 use crate::util::{lock_recover, read_recover, write_recover, FaultPlan};
 
@@ -396,6 +396,10 @@ impl Coordinator {
                 // writers never contend, and the Chrome export maps
                 // each ring to its own synthetic thread lane.
                 let ring = obs.recorder.as_ref().map(|r| r.ring(&format!("worker{w}")));
+                // The head-sampling decision rides in by value: one
+                // hash per dequeue decides whether this request's
+                // spans are recorded at all.
+                let sampler = obs.sampler;
                 // Panic supervisor: a worker panic (engine bug or
                 // injected chaos) fails the stranded request through
                 // its ctl and re-enters the loop with fresh scratch,
@@ -416,6 +420,7 @@ impl Coordinator {
                                 &tap,
                                 fault.as_deref(),
                                 ring.as_deref(),
+                                sampler,
                                 &inflight,
                             )
                         }));
@@ -619,7 +624,9 @@ impl Coordinator {
         let (rtx, rrx) = channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         if let Some(r) = &self.intake_ring {
-            r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+            if self.obs.sampler.sampled(id) {
+                r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+            }
         }
         let req = InferRequest {
             id,
@@ -661,9 +668,11 @@ impl Coordinator {
         }
         // One Enqueue per streamed request (its samples share the wire
         // id): the trace tracks request lifecycles, not per-sample
-        // queue membership.
+        // queue membership. Head-sampled like every lifecycle event.
         if let Some(r) = &self.intake_ring {
-            r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+            if self.obs.sampler.sampled(id) {
+                r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+            }
         }
         let t_enqueue = Instant::now();
         for (slot, x) in xs.into_iter().enumerate() {
@@ -719,7 +728,9 @@ impl Coordinator {
         for (slot, x) in xs.into_iter().enumerate() {
             let id = self.next_id.fetch_add(1, Ordering::Relaxed);
             if let Some(r) = &self.intake_ring {
-                r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+                if self.obs.sampler.sampled(id) {
+                    r.emit(EventKind::Enqueue, id, model as u64, 0, 0);
+                }
             }
             self.dispatch(InferRequest {
                 id,
@@ -831,6 +842,7 @@ fn mcu_worker(
     tap: &EnergyTapSlot,
     fault: Option<&FaultPlan>,
     ring: Option<&TraceRing>,
+    sampler: TraceSampler,
     inflight: &Mutex<Option<InFlight>>,
 ) {
     let energy = EnergyModel::default();
@@ -904,7 +916,11 @@ fn mcu_worker(
         }
         let t_deq = Instant::now();
         let queue_us = t_deq.duration_since(req.t_enqueue).as_micros() as u64;
-        if let Some(r) = ring {
+        // Head-based sampling: one hash of the request id decides
+        // whether this request records its spans. Unsampled requests
+        // take the exact unobserved path below — same as no ring.
+        let traced = ring.filter(|_| sampler.sampled(req.id));
+        if let Some(r) = traced {
             r.emit(EventKind::Dequeue, req.id, worker as u64, 0, 0);
         }
         // Cost-weighted dispatch already quantized the input; reuse it.
@@ -913,9 +929,10 @@ fn mcu_worker(
             None => plan.quantize_input(&req.x),
         };
         // The observed path and the plain one run the same kernels on
-        // the same plan; with no ring the sink is `None` and the
-        // engine takes no timestamps at all (bit-identical output).
-        let out = match ring {
+        // the same plan; with no ring (or an unsampled request) the
+        // sink is `None` and the engine takes no timestamps at all
+        // (bit-identical output).
+        let out = match traced {
             Some(r) => {
                 let sink = RingSink { ring: r, id: req.id };
                 plan.infer_observed(&xi, scratch, Some(&sink))
@@ -923,7 +940,7 @@ fn mcu_worker(
             None => plan.infer(&xi, scratch),
         };
         let service_us = t_deq.elapsed().as_micros() as u64;
-        if let Some(r) = ring {
+        if let Some(r) = traced {
             let t_us = r.now_us().saturating_sub(service_us);
             r.span(
                 EventKind::Service,
@@ -952,6 +969,7 @@ fn mcu_worker(
             metrics.record_batch(1);
         }
         metrics.record_request(
+            m,
             queue_us,
             service_us,
             resp.mac_skipped,
@@ -1068,7 +1086,7 @@ fn pjrt_executor(
                 service_us,
                 latency_us: queue_us + service_us,
             };
-            metrics.record_request(queue_us, service_us, 0.0, 0.0, 0.0, 0);
+            metrics.record_request(0, queue_us, service_us, 0.0, 0.0, 0.0, 0);
             req.reply.deliver(req.slot, resp);
         }
     }
@@ -1462,6 +1480,65 @@ mod tests {
             .sum();
         let table: u64 = coord.metrics.layer_totals()[0].iter().map(|&(k, _)| k).sum();
         assert_eq!(span_kept, table, "Layer spans and aggregate table disagree");
+    }
+
+    #[test]
+    fn sample_rate_zero_is_bit_identical_and_records_no_spans() {
+        // The head-sampling acceptance property: observability ON with
+        // --trace-sample-rate 0 must produce bit-identical logits and
+        // MAC counters to the fully unobserved path, and zero
+        // request-lifecycle events. Random inputs across prune modes.
+        crate::util::prop::check(0x5A0B, 6, |g| {
+            let def = zoo("mnist");
+            let q = QModel::quantize(&def, &Params::random(&def, g.usize_in(0, 1 << 20) as u64));
+            let xs: Vec<Vec<f32>> = (0..3)
+                .map(|_| {
+                    (0..def.input_len())
+                        .map(|i| ((g.usize_in(0, 200) as f32) / 100.0 - 1.0) * (1.0 + i as f32 % 3.0))
+                        .collect()
+                })
+                .collect();
+            let coord = Coordinator::start(
+                BackendChoice::McuSim { q: q.clone(), mode: PruneMode::Unit, div: DivKind::Shift },
+                ServeConfig { workers: 2, ..Default::default() },
+            );
+            let baseline: Vec<_> = xs
+                .iter()
+                .map(|x| {
+                    let r = coord.submit(x.clone()).recv().unwrap();
+                    (r.logits, r.mac_skipped)
+                })
+                .collect();
+            coord.shutdown();
+            let obs = ObsConfig::enabled_sampled(0.0);
+            let rec = obs.recorder.clone().unwrap();
+            let coord = Coordinator::start(
+                BackendChoice::McuSim { q, mode: PruneMode::Unit, div: DivKind::Shift },
+                ServeConfig { workers: 2, obs, ..Default::default() },
+            );
+            for (i, x) in xs.iter().enumerate() {
+                let r = coord.submit(x.clone()).recv().unwrap();
+                assert_eq!(r.logits, baseline[i].0, "rate-0 sampling changed logits {i}");
+                assert_eq!(r.mac_skipped, baseline[i].1, "rate-0 sampling changed MACs {i}");
+            }
+            coord.shutdown();
+            let events: Vec<crate::obs::Event> =
+                rec.rings().iter().flat_map(|r| r.snapshot()).collect();
+            let lifecycle = events
+                .iter()
+                .filter(|e| {
+                    matches!(
+                        e.kind,
+                        EventKind::Enqueue
+                            | EventKind::Dequeue
+                            | EventKind::Service
+                            | EventKind::Layer
+                    )
+                })
+                .count();
+            assert_eq!(lifecycle, 0, "rate 0 must record no request events");
+            assert!(coord.metrics.layer_totals().iter().all(|m| m.is_empty()));
+        });
     }
 
     #[test]

@@ -12,8 +12,10 @@
 //! unit serve  --listen 127.0.0.1:0 --chaos-seed 7   # deterministic fault injection (chaos)
 //! unit serve  --listen 127.0.0.1:0 --models mnist,kws --fleet-budget-mj 8  # multi-model fleet
 //! unit serve  --listen 127.0.0.1:0 --metrics-addr 127.0.0.1:0  # flight recorder + /metrics HTTP
+//! unit serve  --listen 127.0.0.1:0 --slo mnist=5:0.5:0.01  # per-tenant SLOs + burn admission
 //! unit trace  --addr HOST:PORT --out trace.json   # dump the flight recorder (Chrome trace JSON)
-//! unit top    --addr HOST:PORT [--iters N]        # live scrape-and-print of the key gauges
+//! unit top    --addr HOST:PORT [--iters N] [--json]  # live scrape-and-print of the key gauges
+//! unit slo    --addr HOST:PORT --model N --p99-ms X  # declare a tenant's SLOs at runtime (SetSlo)
 //! unit bench diff OLD.json NEW.json     # perf gate: exit 1 on >10% regression
 //! ```
 
@@ -27,7 +29,9 @@ use unit_pruner::coordinator::{
     BackendChoice, Coordinator, EnergyController, ModelSpec, Placement, ServeConfig,
 };
 use unit_pruner::data::{by_name, Sizes};
-use unit_pruner::obs::{spawn_http, MetricsHub, ObsConfig};
+use unit_pruner::obs::{
+    spawn_http, AdmissionPolicy, MetricsHub, ObsConfig, SloEngine, SloSpec, SloWindows,
+};
 use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg};
 use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
@@ -51,10 +55,11 @@ fn main() -> Result<()> {
         Some("bench") => cmd_bench(&args),
         Some("trace") => cmd_trace(&args),
         Some("top") => cmd_top(&args),
+        Some("slo") => cmd_slo(&args),
         Some(other) => {
             eprintln!(
                 "unknown command {other}; try: info | train | eval | serve | memmap | bench | \
-                 trace | top"
+                 trace | top | slo"
             );
             std::process::exit(2);
         }
@@ -421,8 +426,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
     // `--metrics-addr ADDR` turns the observability layer on: a
     // flight recorder on every worker plus the /metrics + /trace HTTP
     // side listener (bound in cmd_serve_listen).
-    let obs =
-        if args.get("metrics-addr").is_some() { ObsConfig::enabled() } else { ObsConfig::off() };
+    let obs = obs_from_args(args);
     let coord = Coordinator::start(
         choice,
         ServeConfig {
@@ -612,8 +616,7 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     if let Some(f) = &fault {
         eprintln!("[serve] chaos plan armed (seed {})", f.seed());
     }
-    let obs =
-        if args.get("metrics-addr").is_some() { ObsConfig::enabled() } else { ObsConfig::off() };
+    let obs = obs_from_args(args);
     let coord = Coordinator::start_multi(
         specs,
         ServeConfig {
@@ -648,9 +651,23 @@ fn cmd_serve_multi(args: &Args) -> Result<()> {
     cmd_serve_listen(args, coord, None, Some(sched), fault, addr)
 }
 
+/// Observability switch shared by both serve paths: `--metrics-addr`
+/// turns the flight recorder on; `--trace-sample-rate R` (default 1.0)
+/// then decides head-based, per request id, which requests carry their
+/// spans onto the rings. Rate 0 keeps the recorder reachable for
+/// fleet/fault events while recording no per-request spans at all.
+fn obs_from_args(args: &Args) -> ObsConfig {
+    if args.get("metrics-addr").is_some() {
+        ObsConfig::enabled_sampled(args.f64_or("trace-sample-rate", 1.0))
+    } else {
+        ObsConfig::off()
+    }
+}
+
 /// `unit serve --listen ADDR [--window N] [--park P] [--park-bytes B]
 /// [--deadline-ms D] [--max-conns C] [--serve-secs S] [--stats-secs T]
-/// [--budget-mj B] [--chaos-seed S] [--models A,B --fleet-budget-mj N]`
+/// [--budget-mj B] [--chaos-seed S] [--models A,B --fleet-budget-mj N]
+/// [--slo name=lat_ms:kr:err,…] [--trace-sample-rate R]`
 ///
 /// Streamed TCP serving: sessions with credit-window backpressure
 /// (window-overflow frames parked for credit-return admission when
@@ -674,6 +691,56 @@ fn cmd_serve_listen(
     if let (Some(f), Some(rec)) = (&fault, coord.recorder()) {
         f.attach_ring(rec.ring("faults"));
     }
+    // Per-tenant SLO engine: always on for a listening server so the
+    // wire `SetSlo` admin frame works even without a `--slo` flag;
+    // without declared objectives it never trips and admission stays
+    // free. Declared objectives become multi-window burn rates over
+    // the per-tenant metrics; a latched trip throttles the tenant's
+    // admission and (under a fleet scheduler) pins its allocation to
+    // the cheapest grid step until the burn clears.
+    let slo_names: Vec<String> = (0..coord.model_count())
+        .map(|i| coord.model_name(i as u32).unwrap_or_default().to_string())
+        .collect();
+    let slo = SloEngine::new(
+        slo_names,
+        Arc::clone(&coord.metrics),
+        SloWindows::default(),
+        AdmissionPolicy::default(),
+    );
+    if let Some(list) = args.get("slo") {
+        match SloSpec::parse_list(list) {
+            Ok(entries) => {
+                for (name, spec) in entries {
+                    match slo.model_id_of(&name) {
+                        Some(m) => {
+                            slo.set_slo(m, spec);
+                            println!(
+                                "[serve] slo {name}: p99<={}ms keep>={} err<={}",
+                                spec.p99_ms, spec.keep_floor, spec.err_ceiling
+                            );
+                        }
+                        None => {
+                            eprintln!("serve: --slo names unknown model `{name}`");
+                            std::process::exit(2);
+                        }
+                    }
+                }
+            }
+            Err(e) => {
+                eprintln!("serve: {e}");
+                std::process::exit(2);
+            }
+        }
+    }
+    if let Some(sched) = &scheduler {
+        let weak = Arc::downgrade(sched);
+        slo.set_on_trip(move |model, tripped| {
+            if let Some(s) = weak.upgrade() {
+                let _ = s.set_tenant_throttled(model, tripped);
+            }
+        });
+    }
+    slo.start_ticker();
     let opts = ServeOpts {
         max_conns: args.usize_or("max-conns", 64),
         session: SessionCfg {
@@ -690,6 +757,7 @@ fn cmd_serve_listen(
         governor: governor.clone(),
         scheduler: scheduler.clone(),
         fault,
+        slo: Some(Arc::clone(&slo)),
     };
     let metrics = std::sync::Arc::clone(&coord.metrics);
     let server = Server::start(coord, addr, opts).map_err(|e| anyhow::anyhow!("bind {addr}: {e}"))?;
@@ -712,6 +780,7 @@ fn cmd_serve_listen(
             governor: governor.clone(),
             scheduler: scheduler.clone(),
             recorder: coord_ref.recorder(),
+            slo: Some(Arc::clone(&slo)),
             model_names,
         });
         match spawn_http(maddr, hub) {
@@ -792,10 +861,34 @@ fn cmd_serve_listen(
                 }
                 None => String::new(),
             };
+            // Per-tenant burn rates, only for tenants with declared
+            // objectives: name:fast/slow, "!" while the trip is
+            // latched (admission throttled).
+            let slo_str = {
+                let rows: Vec<String> = slo
+                    .status()
+                    .into_iter()
+                    .filter(|t| t.spec.is_some())
+                    .map(|t| {
+                        format!(
+                            "{}:{:.2}/{:.2}{}",
+                            t.name,
+                            t.burn_fast,
+                            t.burn_slow,
+                            if t.tripped { "!" } else { "" }
+                        )
+                    })
+                    .collect();
+                if rows.is_empty() {
+                    String::new()
+                } else {
+                    format!(" slo-burn=[{}]", rows.join(","))
+                }
+            };
             println!(
                 "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
                  failed={} panics={} respawns={} parked={} sessions={}/{} \
-                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}{fleet_str}",
+                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}{fleet_str}{slo_str}",
                 s.served,
                 s.inflight,
                 s.rejected,
@@ -854,6 +947,38 @@ fn cmd_trace(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `unit slo --addr HOST:PORT --model N [--p99-ms X] [--keep-floor Y]
+/// [--err-ceiling Z]`: declare (or replace) one tenant's service-level
+/// objectives on a live server over the wire (`SetSlo`, v6) — the
+/// runtime equivalent of the `--slo` serve flag. Omitted or `<= 0`
+/// components disable that objective; all-zero removes the tenant's
+/// objectives and clears any latched burn trip. The server's `Stats`
+/// reply is printed as confirmation.
+fn cmd_slo(args: &Args) -> Result<()> {
+    let Some(addr) = args.get("addr") else {
+        eprintln!("slo: --addr HOST:PORT is required (the serve listener address)");
+        std::process::exit(2);
+    };
+    let model = args.u64_or("model", 0) as u32;
+    let p99_ms = args.f64_or("p99-ms", 0.0);
+    let keep_floor = args.f64_or("keep-floor", 0.0) as f32;
+    let err_ceiling = args.f64_or("err-ceiling", 0.0) as f32;
+    let client = Client::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
+    let stats = client.set_slo(
+        model,
+        p99_ms,
+        keep_floor,
+        err_ceiling,
+        Duration::from_secs(args.u64_or("timeout-secs", 10)),
+    )?;
+    println!(
+        "unit slo: model {model} p99<={p99_ms}ms keep>={keep_floor} err<={err_ceiling} \
+         (server reports model {} of {}, step {}/{})",
+        stats.model, stats.models_loaded, stats.step, stats.steps_total,
+    );
+    Ok(())
+}
+
 /// Sum of every sample of `name` in a Prometheus text body. `name` may
 /// include a label set (`unit_latency_us{quantile="0.5"}`) for an
 /// exact series, or be a bare family name to sum across labels
@@ -871,10 +996,14 @@ fn scrape_sum(text: &str, name: &str) -> f64 {
         .sum()
 }
 
-/// `unit top --addr HOST:PORT [--iters N] [--interval-ms M]`: scrape
-/// the server over the wire (`Scrape`, v5) every interval and print a
-/// one-line live view of the key gauges. `--iters 0` (default) runs
-/// until killed; a positive count bounds the loop (scripts, CI).
+/// `unit top --addr HOST:PORT [--iters N] [--interval-ms M] [--json]`:
+/// scrape the server over the wire (`Scrape`, v5) every interval and
+/// print a one-line live view of the key gauges — including, when SLOs
+/// are declared, the summed burn-trip state and throttled-request
+/// count. `--iters 0` (default) runs until killed; a positive count
+/// bounds the loop (scripts, CI). `--json` emits one JSON object per
+/// iteration instead of the human line (machine consumers, no extra
+/// dependency: the fields are a flat map of numbers).
 fn cmd_top(args: &Args) -> Result<()> {
     let Some(addr) = args.get("addr") else {
         eprintln!("top: --addr HOST:PORT is required (the serve listener address)");
@@ -882,28 +1011,58 @@ fn cmd_top(args: &Args) -> Result<()> {
     };
     let iters = args.usize_or("iters", 0);
     let every = Duration::from_millis(args.u64_or("interval-ms", 1000));
+    let json = args.flag("json");
     let client = Client::connect(addr).map_err(|e| anyhow::anyhow!("connect {addr}: {e}"))?;
     let mut n = 0usize;
     loop {
         let text = client.scrape(Duration::from_secs(5))?;
         let g = |name: &str| scrape_sum(&text, name);
-        println!(
-            "[top] served={:.0} inflight={:.0} rejected={:.0} failed={:.0} parked={:.0} \
-             p50/p99={:.0}/{:.0}us keep_p50={:.3} skip={:.2}% scale={:.2}x \
-             events={:.0} dropped={:.0}",
-            g("unit_requests_served_total"),
-            g("unit_inflight"),
-            g("unit_rejected_total"),
-            g("unit_requests_failed_total"),
-            g("unit_parked_total"),
-            g("unit_latency_us{quantile=\"0.5\"}"),
-            g("unit_latency_us{quantile=\"0.99\"}"),
-            g("unit_keep_ratio{quantile=\"0.5\"}"),
-            100.0 * g("unit_mac_skipped_ratio"),
-            g("unit_governor_scale_q8") / 256.0,
-            g("unit_trace_events_total"),
-            g("unit_trace_dropped_total"),
-        );
+        if json {
+            // Hand-rolled: every value is a finite f64, so plain
+            // Display is valid JSON.
+            println!(
+                "{{\"served\":{},\"inflight\":{},\"rejected\":{},\"failed\":{},\"parked\":{},\
+                 \"throttled\":{},\"p50_us\":{},\"p99_us\":{},\"keep_p50\":{},\
+                 \"mac_skipped_ratio\":{},\"scale\":{},\"slo_tripped\":{},\"slo_trips\":{},\
+                 \"trace_events\":{},\"trace_dropped\":{}}}",
+                g("unit_requests_served_total"),
+                g("unit_inflight"),
+                g("unit_rejected_total"),
+                g("unit_requests_failed_total"),
+                g("unit_parked_total"),
+                g("unit_tenant_throttled_total"),
+                g("unit_latency_us{quantile=\"0.5\"}"),
+                g("unit_latency_us{quantile=\"0.99\"}"),
+                g("unit_keep_ratio{quantile=\"0.5\"}"),
+                g("unit_mac_skipped_ratio"),
+                g("unit_governor_scale_q8") / 256.0,
+                g("unit_slo_tripped"),
+                g("unit_slo_trips_total"),
+                g("unit_trace_events_total"),
+                g("unit_trace_dropped_total"),
+            );
+        } else {
+            println!(
+                "[top] served={:.0} inflight={:.0} rejected={:.0} failed={:.0} parked={:.0} \
+                 throttled={:.0} p50/p99={:.0}/{:.0}us keep_p50={:.3} skip={:.2}% scale={:.2}x \
+                 slo_tripped={:.0} trips={:.0} events={:.0} dropped={:.0}",
+                g("unit_requests_served_total"),
+                g("unit_inflight"),
+                g("unit_rejected_total"),
+                g("unit_requests_failed_total"),
+                g("unit_parked_total"),
+                g("unit_tenant_throttled_total"),
+                g("unit_latency_us{quantile=\"0.5\"}"),
+                g("unit_latency_us{quantile=\"0.99\"}"),
+                g("unit_keep_ratio{quantile=\"0.5\"}"),
+                100.0 * g("unit_mac_skipped_ratio"),
+                g("unit_governor_scale_q8") / 256.0,
+                g("unit_slo_tripped"),
+                g("unit_slo_trips_total"),
+                g("unit_trace_events_total"),
+                g("unit_trace_dropped_total"),
+            );
+        }
         use std::io::Write as _;
         std::io::stdout().flush().ok();
         n += 1;

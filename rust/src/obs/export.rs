@@ -28,6 +28,8 @@ use std::time::Duration;
 
 use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::Metrics;
+use crate::obs::hist::{Histogram, RATIO_SCALE};
+use crate::obs::slo::SloEngine;
 use crate::obs::trace::FlightRecorder;
 
 /// Every stats source the exposition layer renders, bundled behind one
@@ -42,6 +44,9 @@ pub struct MetricsHub {
     pub scheduler: Option<Arc<FleetScheduler>>,
     /// Flight recorder, if observability is on.
     pub recorder: Option<Arc<FlightRecorder>>,
+    /// Per-tenant SLO engine, if installed (burn-rate gauges, trip
+    /// state, and declared objectives per tenant).
+    pub slo: Option<Arc<SloEngine>>,
     /// Hosted model names, index-aligned with the coordinator's model
     /// table (labels for per-model/per-layer families).
     pub model_names: Vec<String>,
@@ -89,6 +94,33 @@ fn labeled<V: std::fmt::Display>(out: &mut String, name: &str, labels: &[(&str, 
     out.push_str("} ");
     out.push_str(&v.to_string());
     out.push('\n');
+}
+
+/// One native Prometheus histogram family: cumulative `_bucket` series
+/// with `le` labels over the non-empty buckets (exact at bucket upper
+/// bounds — see [`Histogram::cumulative_buckets`]), the `+Inf` bucket,
+/// then `_count` and `_sum`. `scale` divides bucket bounds and the sum
+/// so fixed-point series (keep ratio at [`RATIO_SCALE`]) render as
+/// fractions. The `_bucket`/`_count`/`_sum` series names are passed as
+/// literals by the caller so `scripts/check_metrics.py` can grep them.
+#[allow(clippy::too_many_arguments)]
+fn native_hist(
+    out: &mut String,
+    name: &str,
+    bucket: &str,
+    count: &str,
+    sum: &str,
+    help: &str,
+    h: &Histogram,
+    scale: f64,
+) {
+    head(out, name, "histogram", help);
+    for (le, cum) in h.cumulative_buckets() {
+        labeled(out, bucket, &[("le", &(le as f64 / scale).to_string())], cum);
+    }
+    labeled(out, bucket, &[("le", "+Inf")], h.count());
+    plain(out, count, h.count());
+    plain(out, sum, h.sum() as f64 / scale);
 }
 
 /// Render the full metric set as Prometheus text format. Pure: reads
@@ -155,6 +187,28 @@ pub fn render_prometheus(hub: &MetricsHub) -> String {
     head(&mut out, "unit_request_macs", "gauge", "Executed MACs per request percentiles");
     labeled(&mut out, "unit_request_macs", &[("quantile", "0.5")], s.mac_p50);
     labeled(&mut out, "unit_request_macs", &[("quantile", "0.99")], s.mac_p99);
+
+    // -- native histograms (cumulative le buckets) ----------------------------
+    native_hist(
+        &mut out,
+        "unit_request_latency_us",
+        "unit_request_latency_us_bucket",
+        "unit_request_latency_us_count",
+        "unit_request_latency_us_sum",
+        "Total request latency histogram (us)",
+        &hub.metrics.latency_hist(),
+        1.0,
+    );
+    native_hist(
+        &mut out,
+        "unit_request_keep_ratio",
+        "unit_request_keep_ratio_bucket",
+        "unit_request_keep_ratio_count",
+        "unit_request_keep_ratio_sum",
+        "Keep-ratio histogram (fraction executed)",
+        &hub.metrics.keep_hist(),
+        RATIO_SCALE as f64,
+    );
 
     // -- shard / background-compile health ------------------------------------
     head(&mut out, "unit_shard_queued_cost", "gauge", "Estimated queued MACs per shard");
@@ -281,6 +335,131 @@ pub fn render_prometheus(hub: &MetricsHub) -> String {
         }
     }
 
+    // -- per-tenant serving outcomes ------------------------------------------
+    let tenants = hub.metrics.tenant_snapshot();
+    if !tenants.is_empty() {
+        head(&mut out, "unit_tenant_requests_total", "counter", "Requests completed Ok per tenant");
+        for (mi, t) in tenants.iter().enumerate() {
+            labeled(&mut out, "unit_tenant_requests_total", &[("model", &model_label(mi))], t.served);
+        }
+        head(
+            &mut out,
+            "unit_tenant_errors_total",
+            "counter",
+            "Requests ended Error or Failed per tenant",
+        );
+        for (mi, t) in tenants.iter().enumerate() {
+            labeled(&mut out, "unit_tenant_errors_total", &[("model", &model_label(mi))], t.errors);
+        }
+        head(
+            &mut out,
+            "unit_tenant_throttled_total",
+            "counter",
+            "Requests refused Throttled by SLO admission per tenant",
+        );
+        for (mi, t) in tenants.iter().enumerate() {
+            labeled(
+                &mut out,
+                "unit_tenant_throttled_total",
+                &[("model", &model_label(mi))],
+                t.throttled,
+            );
+        }
+        head(&mut out, "unit_tenant_inflight", "gauge", "Admitted-but-unfinished requests per tenant");
+        for (mi, t) in tenants.iter().enumerate() {
+            labeled(&mut out, "unit_tenant_inflight", &[("model", &model_label(mi))], t.inflight);
+        }
+    }
+
+    // -- per-tenant SLO engine (burn rates, trip state, objectives) -----------
+    if let Some(slo) = &hub.slo {
+        let rows = slo.status();
+        if !rows.is_empty() {
+            let name_of = |r: &crate::obs::slo::SloStatus| -> String {
+                if r.name.is_empty() {
+                    r.model.to_string()
+                } else {
+                    r.name.clone()
+                }
+            };
+            head(&mut out, "unit_slo_burn_fast", "gauge", "Fast-window SLO burn rate per tenant");
+            for r in &rows {
+                labeled(&mut out, "unit_slo_burn_fast", &[("model", &name_of(r))], r.burn_fast);
+            }
+            head(&mut out, "unit_slo_burn_slow", "gauge", "Slow-window SLO burn rate per tenant");
+            for r in &rows {
+                labeled(&mut out, "unit_slo_burn_slow", &[("model", &name_of(r))], r.burn_slow);
+            }
+            head(
+                &mut out,
+                "unit_slo_tripped",
+                "gauge",
+                "1 while the tenant's burn trip is latched (admission throttled)",
+            );
+            for r in &rows {
+                labeled(&mut out, "unit_slo_tripped", &[("model", &name_of(r))], r.tripped as u8);
+            }
+            head(&mut out, "unit_slo_trips_total", "counter", "Burn-trip transitions per tenant");
+            for r in &rows {
+                labeled(&mut out, "unit_slo_trips_total", &[("model", &name_of(r))], r.trips);
+            }
+            head(
+                &mut out,
+                "unit_slo_objective_p99_ms",
+                "gauge",
+                "Declared p99 latency objective (ms; series absent when undeclared)",
+            );
+            for r in &rows {
+                if let Some(spec) = &r.spec {
+                    if spec.p99_ms > 0.0 {
+                        labeled(
+                            &mut out,
+                            "unit_slo_objective_p99_ms",
+                            &[("model", &name_of(r))],
+                            spec.p99_ms,
+                        );
+                    }
+                }
+            }
+            head(
+                &mut out,
+                "unit_slo_objective_keep_floor",
+                "gauge",
+                "Declared keep-ratio floor (fraction; series absent when undeclared)",
+            );
+            for r in &rows {
+                if let Some(spec) = &r.spec {
+                    if spec.keep_floor > 0.0 {
+                        labeled(
+                            &mut out,
+                            "unit_slo_objective_keep_floor",
+                            &[("model", &name_of(r))],
+                            spec.keep_floor,
+                        );
+                    }
+                }
+            }
+            head(
+                &mut out,
+                "unit_slo_objective_err_ceiling",
+                "gauge",
+                "Declared error-rate ceiling (fraction; series absent when undeclared)",
+            );
+            for r in &rows {
+                if let Some(spec) = &r.spec {
+                    if spec.err_ceiling > 0.0 {
+                        labeled(
+                            &mut out,
+                            "unit_slo_objective_err_ceiling",
+                            &[("model", &name_of(r))],
+                            spec.err_ceiling,
+                        );
+                    }
+                }
+            }
+        }
+    }
+
     // -- flight-recorder health -----------------------------------------------
     if let Some(rec) = &hub.recorder {
         head(&mut out, "unit_trace_events_total", "counter", "Events recorded per ring");
@@ -364,6 +543,7 @@ mod tests {
             governor: None,
             scheduler: None,
             recorder: None,
+            slo: None,
             model_names: vec!["default".to_string()],
         }
     }
@@ -376,7 +556,7 @@ mod tests {
         // docs/observability.md with it).
         let hub = minimal_hub();
         // keep = (1 - 0.1808) * 10000 = 8192, which is bucket-exact.
-        hub.metrics.record_request(10, 30, 0.1808, 2.0, 0.5, 1024);
+        hub.metrics.record_request(0, 10, 30, 0.1808, 2.0, 0.5, 1024);
         hub.metrics.record_batch(1);
         let got = render_prometheus(&hub);
         let want = "\
@@ -454,6 +634,18 @@ unit_keep_ratio{quantile=\"0.95\"} 0.8192
 # TYPE unit_request_macs gauge
 unit_request_macs{quantile=\"0.5\"} 1024
 unit_request_macs{quantile=\"0.99\"} 1024
+# HELP unit_request_latency_us Total request latency histogram (us)
+# TYPE unit_request_latency_us histogram
+unit_request_latency_us_bucket{le=\"41\"} 1
+unit_request_latency_us_bucket{le=\"+Inf\"} 1
+unit_request_latency_us_count 1
+unit_request_latency_us_sum 40
+# HELP unit_request_keep_ratio Keep-ratio histogram (fraction executed)
+# TYPE unit_request_keep_ratio histogram
+unit_request_keep_ratio_bucket{le=\"0.8703\"} 1
+unit_request_keep_ratio_bucket{le=\"+Inf\"} 1
+unit_request_keep_ratio_count 1
+unit_request_keep_ratio_sum 0.8192
 # HELP unit_shard_queued_cost Estimated queued MACs per shard
 # TYPE unit_shard_queued_cost gauge
 # HELP unit_bg_compiles_pending Background compiles in flight
@@ -469,8 +661,75 @@ unit_bg_upgrades_total 0
 # TYPE unit_layer_macs_total counter
 # HELP unit_layer_keep_ratio Cumulative per-layer keep ratio
 # TYPE unit_layer_keep_ratio gauge
+# HELP unit_tenant_requests_total Requests completed Ok per tenant
+# TYPE unit_tenant_requests_total counter
+unit_tenant_requests_total{model=\"default\"} 1
+# HELP unit_tenant_errors_total Requests ended Error or Failed per tenant
+# TYPE unit_tenant_errors_total counter
+unit_tenant_errors_total{model=\"default\"} 0
+# HELP unit_tenant_throttled_total Requests refused Throttled by SLO admission per tenant
+# TYPE unit_tenant_throttled_total counter
+unit_tenant_throttled_total{model=\"default\"} 0
+# HELP unit_tenant_inflight Admitted-but-unfinished requests per tenant
+# TYPE unit_tenant_inflight gauge
+unit_tenant_inflight{model=\"default\"} 0
 ";
         assert_eq!(got, want, "exposition format drifted from the golden");
+    }
+
+    #[test]
+    fn native_histogram_buckets_are_cumulative_and_consistent() {
+        let hub = minimal_hub();
+        for (q, s, skip, macs) in
+            [(10u64, 30u64, 0.1808, 1024u64), (5, 100, 0.5, 64), (1, 2, 0.0, 7)]
+        {
+            hub.metrics.record_request(0, q, s, skip, 1.0, 0.1, macs);
+        }
+        let text = render_prometheus(&hub);
+        for fam in ["unit_request_latency_us", "unit_request_keep_ratio"] {
+            let bucket_prefix = format!("{fam}_bucket");
+            let mut last = 0u64;
+            let mut inf = None;
+            for line in text.lines().filter(|l| l.starts_with(&bucket_prefix)) {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone bucket in {fam}: {line}");
+                last = v;
+                if line.contains("le=\"+Inf\"") {
+                    inf = Some(v);
+                }
+            }
+            let count_prefix = format!("{fam}_count ");
+            let count_line = text.lines().find(|l| l.starts_with(&count_prefix)).unwrap();
+            let count: u64 = count_line.rsplit(' ').next().unwrap().parse().unwrap();
+            assert_eq!(inf, Some(count), "{fam}: +Inf bucket must equal _count");
+            assert_eq!(count, 3);
+        }
+        // _sum for latency is the exact µs total: 40 + 105 + 3.
+        assert!(text.contains("unit_request_latency_us_sum 148"));
+    }
+
+    #[test]
+    fn slo_families_render_burn_and_objectives() {
+        use crate::obs::slo::{AdmissionPolicy, SloEngine, SloSpec, SloWindows};
+        let mut hub = minimal_hub();
+        let slo = SloEngine::new(
+            vec!["default".to_string()],
+            Arc::clone(&hub.metrics),
+            SloWindows::default(),
+            AdmissionPolicy::default(),
+        );
+        slo.set_slo(0, SloSpec { p99_ms: 5.0, keep_floor: 0.5, err_ceiling: 0.0 });
+        hub.slo = Some(slo);
+        let text = render_prometheus(&hub);
+        assert!(text.contains("unit_slo_burn_fast{model=\"default\"} 0"));
+        assert!(text.contains("unit_slo_burn_slow{model=\"default\"} 0"));
+        assert!(text.contains("unit_slo_tripped{model=\"default\"} 0"));
+        assert!(text.contains("unit_slo_trips_total{model=\"default\"} 0"));
+        assert!(text.contains("unit_slo_objective_p99_ms{model=\"default\"} 5"));
+        assert!(text.contains("unit_slo_objective_keep_floor{model=\"default\"} 0.5"));
+        // A disabled component (0) keeps its head but emits no series.
+        assert!(text.contains("# TYPE unit_slo_objective_err_ceiling gauge"));
+        assert!(!text.contains("unit_slo_objective_err_ceiling{"));
     }
 
     #[test]

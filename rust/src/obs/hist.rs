@@ -65,6 +65,19 @@ fn bucket_lower(idx: usize) -> u64 {
     }
 }
 
+/// Largest value binned into a bucket (inclusive). Because
+/// `bucket_index` is total-order preserving, this is one less than the
+/// next bucket's lower bound, and every sample in bucket `idx` is
+/// `<= bucket_upper(idx)` *exactly* — which is what makes cumulative
+/// `le`-bucket rendering exact at these bounds.
+fn bucket_upper(idx: usize) -> u64 {
+    if idx + 1 < BUCKETS {
+        bucket_lower(idx + 1) - 1
+    } else {
+        u64::MAX
+    }
+}
+
 /// A fixed-size log-bucketed histogram of `u64` samples.
 ///
 /// Constant memory (976 buckets), O(1) record, O(buckets) percentile
@@ -74,6 +87,7 @@ fn bucket_lower(idx: usize) -> u64 {
 pub struct Histogram {
     counts: Vec<u64>,
     total: u64,
+    sum: u64,
 }
 
 impl Default for Histogram {
@@ -91,24 +105,35 @@ impl std::fmt::Debug for Histogram {
 impl Histogram {
     /// Empty histogram.
     pub fn new() -> Histogram {
-        Histogram { counts: vec![0; BUCKETS], total: 0 }
+        Histogram { counts: vec![0; BUCKETS], total: 0, sum: 0 }
     }
 
     /// Record one sample.
     pub fn record(&mut self, v: u64) {
         self.counts[bucket_index(v)] += 1;
         self.total += 1;
+        self.sum = self.sum.wrapping_add(v);
     }
 
     /// Record `n` samples of the same value.
     pub fn record_n(&mut self, v: u64, n: u64) {
         self.counts[bucket_index(v)] += n;
         self.total += n;
+        self.sum = self.sum.wrapping_add(v.wrapping_mul(n));
     }
 
     /// Number of samples recorded.
     pub fn count(&self) -> u64 {
         self.total
+    }
+
+    /// Exact sum of all recorded sample values (wrapping on overflow,
+    /// which for microsecond timings is ~584k years of accumulated
+    /// latency). Tracked alongside the buckets so the Prometheus
+    /// `_sum` series is exact, not bucket-approximated, and stays
+    /// consistent under [`merge`](Histogram::merge).
+    pub fn sum(&self) -> u64 {
+        self.sum
     }
 
     /// Fold another histogram in by element-wise bucket addition.
@@ -119,6 +144,52 @@ impl Histogram {
             *a += b;
         }
         self.total += other.total;
+        self.sum = self.sum.wrapping_add(other.sum);
+    }
+
+    /// Samples recorded with value `<= v`, at bucket granularity: the
+    /// count is taken over whole buckets up to and including `v`'s
+    /// bucket, so it is exact whenever `v` is a bucket upper bound
+    /// (all values `< 32`, and values of the form `(16+m)·2^k − 1`)
+    /// and otherwise may overcount by at most the one straddling
+    /// bucket. This is the primitive SLO burn-rate tracking uses to
+    /// count objective violations without touching the hot path.
+    pub fn count_le(&self, v: u64) -> u64 {
+        self.counts[..=bucket_index(v)].iter().sum()
+    }
+
+    /// Per-bucket difference `self − earlier` (saturating), for
+    /// cut-point deltas between two snapshots of a monotonically
+    /// growing histogram. If `earlier` really is an earlier snapshot
+    /// of the same series the subtraction is exact and the result is
+    /// the histogram of the samples recorded in between.
+    pub fn diff(&self, earlier: &Histogram) -> Histogram {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .zip(&earlier.counts)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        let total = counts.iter().sum();
+        Histogram { counts, total, sum: self.sum.wrapping_sub(earlier.sum) }
+    }
+
+    /// Cumulative bucket view for native Prometheus exposition: yields
+    /// `(le, cumulative_count)` for every *non-empty* bucket, where
+    /// `le` is the bucket's inclusive upper bound and the count covers
+    /// all samples `<= le` (exact — see [`bucket_upper`]). The
+    /// renderer appends the `+Inf` bucket itself from
+    /// [`count`](Histogram::count).
+    pub fn cumulative_buckets(&self) -> Vec<(u64, u64)> {
+        let mut out = Vec::new();
+        let mut cum = 0u64;
+        for (idx, &c) in self.counts.iter().enumerate() {
+            if c > 0 {
+                cum += c;
+                out.push((bucket_upper(idx), cum));
+            }
+        }
+        out
     }
 
     /// Nearest-rank percentile (`p` in 0..=100), reported as the
@@ -323,5 +394,105 @@ mod tests {
         assert_eq!(h.count(), 0);
         assert_eq!(h.percentile(50.0), 0);
         assert_eq!(h.max(), 0);
+        assert_eq!(h.sum(), 0);
+        assert!(h.cumulative_buckets().is_empty());
+    }
+
+    #[test]
+    fn merge_is_associative_and_commutative() {
+        // The algebra the sharded/mergeable design depends on: merge
+        // order never matters, bucket-for-bucket, count and sum alike.
+        crate::util::prop::check(0xA55C, 150, |g| {
+            let mut hs = vec![Histogram::new(), Histogram::new(), Histogram::new()];
+            for h in hs.iter_mut() {
+                for _ in 0..g.usize_in(0, 60) {
+                    h.record((g.usize_in(0, u32::MAX as usize) as u64) << g.usize_in(0, 12));
+                }
+            }
+            // (a + b) + c
+            let mut left = hs[0].clone();
+            left.merge(&hs[1]);
+            left.merge(&hs[2]);
+            // a + (b + c)
+            let mut bc = hs[1].clone();
+            bc.merge(&hs[2]);
+            let mut right = hs[0].clone();
+            right.merge(&bc);
+            // c + b + a
+            let mut rev = hs[2].clone();
+            rev.merge(&hs[1]);
+            rev.merge(&hs[0]);
+            for other in [&right, &rev] {
+                assert_eq!(left.counts, other.counts);
+                assert_eq!(left.total, other.total);
+                assert_eq!(left.sum, other.sum);
+            }
+        });
+    }
+
+    #[test]
+    fn cumulative_buckets_are_monotone_and_consistent() {
+        crate::util::prop::check(0xCBB1, 150, |g| {
+            let mut h = Histogram::new();
+            let mut exact_sum = 0u64;
+            let n = g.usize_in(1, 200);
+            for _ in 0..n {
+                let v = (g.usize_in(0, 1 << 30) as u64) << g.usize_in(0, 8);
+                h.record(v);
+                exact_sum += v;
+            }
+            let cum = h.cumulative_buckets();
+            assert!(!cum.is_empty());
+            // `le` bounds strictly increase and cumulative counts are
+            // non-decreasing, ending at the total count.
+            for w in cum.windows(2) {
+                assert!(w[0].0 < w[1].0, "le bounds not increasing");
+                assert!(w[0].1 <= w[1].1, "cumulative counts decreased");
+            }
+            assert_eq!(cum.last().unwrap().1, h.count());
+            // The exact sum is bracketed by the bucket lower/upper
+            // reconstructions — `_sum` is consistent with the buckets.
+            assert_eq!(h.sum(), exact_sum);
+            let mut prev = 0u64;
+            let (mut lo, mut hi) = (0u128, 0u128);
+            for &(le, c) in &cum {
+                let in_bucket = (c - prev) as u128;
+                hi += in_bucket * le as u128;
+                // lower bound of the bucket ending at `le` is at most le
+                lo += in_bucket * (le / 2) as u128;
+                prev = c;
+            }
+            assert!((h.sum() as u128) <= hi);
+            assert!((h.sum() as u128) >= lo / 2); // loose but directional
+        });
+    }
+
+    #[test]
+    fn count_le_is_exact_at_bucket_upper_bounds() {
+        let mut h = Histogram::new();
+        for v in [3u64, 10, 31, 40, 100, 5000] {
+            h.record(v);
+        }
+        assert_eq!(h.count_le(31), 3); // linear region is exact
+        assert_eq!(h.count_le(2), 0);
+        assert_eq!(h.count_le(u64::MAX), h.count());
+        assert_eq!(h.count() - h.count_le(99), 2); // violations above 99: 100, 5000
+    }
+
+    #[test]
+    fn diff_of_snapshots_is_the_in_between_samples() {
+        let mut h = Histogram::new();
+        h.record(5);
+        h.record(700);
+        let earlier = h.clone();
+        h.record(5);
+        h.record(12_000);
+        let d = h.diff(&earlier);
+        assert_eq!(d.count(), 2);
+        assert_eq!(d.sum(), 5 + 12_000);
+        let mut expect = Histogram::new();
+        expect.record(5);
+        expect.record(12_000);
+        assert_eq!(d.counts, expect.counts);
     }
 }

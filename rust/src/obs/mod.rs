@@ -19,23 +19,36 @@
 //!   recording, bucket-exact merge at snapshot.
 //! * [`export`] — Prometheus text-format rendering of the full metric
 //!   set (coordinator, governor, fleet scheduler, per-model and
-//!   per-layer gauges, trace-ring health), served over the wire v5
-//!   `Scrape`/`TraceDump` admin frames and the
-//!   `unit serve --metrics-addr` HTTP side listener; `unit top` polls
-//!   it for a live terminal view.
+//!   per-layer gauges, native `le`-bucket histograms, SLO burn rates,
+//!   trace-ring health), served over the wire v5 `Scrape`/`TraceDump`
+//!   admin frames and the `unit serve --metrics-addr` HTTP side
+//!   listener; `unit top` polls it for a live terminal view.
+//! * [`sample`] — head-based deterministic trace sampling: one
+//!   splitmix64 hash of the request id decides whether a request
+//!   carries *all* of its spans or none, so per-layer tracing stays
+//!   affordable at full load (`--trace-sample-rate`).
+//! * [`slo`] — the per-tenant SLO engine: declared objectives
+//!   (`--slo`, wire `SetSlo`), multi-window burn rates computed from
+//!   the existing histograms, and the tripped-tenant admission policy
+//!   behind the wire's `Throttled` status.
 //!
 //! **Cost discipline:** everything here is opt-in through
 //! [`ObsConfig`]. With the default [`ObsConfig::off`], no ring exists,
 //! no per-layer timestamps are taken, and the inference hot path is
 //! bit-identical to the pre-observability plans (pinned by the
-//! cross-layer property tests).
+//! cross-layer property tests); the same holds with observability on
+//! at `--trace-sample-rate 0` for every request.
 
 pub mod export;
 pub mod hist;
+pub mod sample;
+pub mod slo;
 pub mod trace;
 
 pub use export::{render_prometheus, render_trace, spawn_http, MetricsHub};
 pub use hist::{Histogram, ShardedHistogram, RATIO_SCALE};
+pub use sample::TraceSampler;
+pub use slo::{AdmissionPolicy, SloEngine, SloSpec, SloStatus, SloWindows};
 pub use trace::{Event, EventKind, FlightRecorder, TraceRing};
 
 use std::sync::Arc;
@@ -49,11 +62,17 @@ use std::sync::Arc;
 pub struct ObsConfig {
     /// The shared flight recorder, if observability is on.
     pub recorder: Option<Arc<FlightRecorder>>,
+    /// Head-based per-request trace sampling decision (defaults to
+    /// sampling everything; irrelevant when no recorder is attached).
+    pub sampler: TraceSampler,
 }
 
 impl std::fmt::Debug for ObsConfig {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
-        f.debug_struct("ObsConfig").field("on", &self.is_on()).finish()
+        f.debug_struct("ObsConfig")
+            .field("on", &self.is_on())
+            .field("sample_rate", &self.sampler.rate())
+            .finish()
     }
 }
 
@@ -61,12 +80,24 @@ impl ObsConfig {
     /// Observability disabled (the default): no recorder, no spans,
     /// bit-identical hot path.
     pub fn off() -> ObsConfig {
-        ObsConfig { recorder: None }
+        ObsConfig { recorder: None, sampler: TraceSampler::always() }
     }
 
-    /// Observability enabled with a fresh [`FlightRecorder`].
+    /// Observability enabled with a fresh [`FlightRecorder`], sampling
+    /// every request (pre-sampling behaviour).
     pub fn enabled() -> ObsConfig {
-        ObsConfig { recorder: Some(Arc::new(FlightRecorder::new())) }
+        ObsConfig { recorder: Some(Arc::new(FlightRecorder::new())), sampler: TraceSampler::always() }
+    }
+
+    /// Observability enabled with head-based request sampling at
+    /// `rate` in `[0, 1]`: a sampled request records all of its
+    /// lifecycle/`Layer` spans, an unsampled one records none and runs
+    /// the exact unobserved inference path.
+    pub fn enabled_sampled(rate: f64) -> ObsConfig {
+        ObsConfig {
+            recorder: Some(Arc::new(FlightRecorder::new())),
+            sampler: TraceSampler::from_rate(rate),
+        }
     }
 
     /// Whether a recorder is attached.

@@ -1,0 +1,636 @@
+//! Per-tenant SLO engine: declared objectives, multi-window burn
+//! rates, and the admission policy they feed.
+//!
+//! Each served model (tenant) may declare three objectives: a p99
+//! total-latency bound, a keep-ratio floor (the MAC-budget quality the
+//! fleet scheduler is supposed to be buying), and an error-rate
+//! ceiling. The engine turns the *existing* cumulative per-tenant
+//! histograms in [`crate::coordinator::metrics`] into Google-SRE-style
+//! **burn rates** over a fast and a slow window — no new sample paths
+//! on the hot path; the ticker takes monotone counter cuts and
+//! subtracts them.
+//!
+//! A burn rate of 1 means the tenant is consuming its violation
+//! budget exactly as fast as the objective allows (1 % of requests for
+//! the latency/keep objectives, the declared ceiling for errors); a
+//! burn of 100 means every request violates a 1 % objective. The
+//! engine **trips** a tenant when both windows burn hot (fast window
+//! for responsiveness, slow window so a blip cannot trip alone) and
+//! clears when the fast window cools. Tripping tightens that tenant's
+//! [`AdmissionPolicy`] — a token-bucket admit rate plus an inflight
+//! quota — so an overloaded tenant is degraded *first and alone*: its
+//! excess traffic is answered with the wire's `Throttled` status
+//! (retryable) while other tenants' traffic is untouched. A trip
+//! transition is also reported to an optional callback, which serving
+//! wires to the fleet scheduler so the MAC-budget solver can stop
+//! spending quality budget on a tenant that is shedding load.
+//!
+//! Everything is deterministic and clock-driven: `tick()` is public
+//! and takes "now" from the caller's monotonic clock, so tests drive
+//! the engine tick by tick without threads; production runs the same
+//! function on a background ticker thread.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, Weak};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use crate::coordinator::metrics::{Metrics, TenantCut};
+use crate::obs::hist::RATIO_SCALE;
+
+/// Fraction of requests allowed to violate the latency / keep-floor
+/// objectives (the "p99" in the declared objective: 1 %).
+const VIOLATION_BUDGET: f64 = 0.01;
+
+/// Upper bound on retained window cuts per tenant (memory backstop;
+/// at the default 1 s tick the slow hour window needs 3600).
+const MAX_CUTS: usize = 4096;
+
+/// A tenant's declared service-level objectives. A component `<= 0`
+/// disables that objective.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SloSpec {
+    /// p99 total-latency objective in milliseconds.
+    pub p99_ms: f64,
+    /// Keep-ratio floor in `[0, 1]`: the quality level the tenant is
+    /// owed (requests served below it count against the budget).
+    pub keep_floor: f64,
+    /// Error-rate ceiling in `[0, 1]` (`Error`/`Failed` outcomes per
+    /// completed request).
+    pub err_ceiling: f64,
+}
+
+impl SloSpec {
+    /// Parse one `name=lat_ms:kr:err` objective spec (the `--slo`
+    /// flag / wire `SetSlo` shape), e.g. `kws=50:0.3:0.01`.
+    pub fn parse(s: &str) -> Result<(String, SloSpec), String> {
+        let (name, rest) = s
+            .split_once('=')
+            .ok_or_else(|| format!("bad --slo entry `{s}`: expected name=lat_ms:kr:err"))?;
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 3 {
+            return Err(format!("bad --slo entry `{s}`: expected three `:`-separated objectives"));
+        }
+        let num = |p: &str, what: &str| -> Result<f64, String> {
+            p.parse::<f64>().map_err(|_| format!("bad --slo {what} `{p}` in `{s}`"))
+        };
+        let spec = SloSpec {
+            p99_ms: num(parts[0], "latency objective")?,
+            keep_floor: num(parts[1], "keep floor")?,
+            err_ceiling: num(parts[2], "error ceiling")?,
+        };
+        if spec.keep_floor > 1.0 || spec.err_ceiling > 1.0 {
+            return Err(format!("bad --slo entry `{s}`: keep floor and error ceiling are ratios"));
+        }
+        Ok((name.to_string(), spec))
+    }
+
+    /// Parse a comma-separated list of [`parse`](SloSpec::parse)
+    /// entries (the full `--slo` flag value).
+    pub fn parse_list(s: &str) -> Result<Vec<(String, SloSpec)>, String> {
+        s.split(',').filter(|e| !e.trim().is_empty()).map(|e| SloSpec::parse(e.trim())).collect()
+    }
+
+    /// Latency objective in µs for violation counting (`u64::MAX`
+    /// when disabled).
+    pub fn lat_obj_us(&self) -> u64 {
+        if self.p99_ms > 0.0 {
+            (self.p99_ms * 1000.0).round() as u64
+        } else {
+            u64::MAX
+        }
+    }
+
+    /// Keep floor in [`RATIO_SCALE`] fixed point (0 when disabled).
+    pub fn keep_floor_scaled(&self) -> u64 {
+        if self.keep_floor > 0.0 {
+            (self.keep_floor * RATIO_SCALE as f64).round() as u64
+        } else {
+            0
+        }
+    }
+}
+
+/// Burn-rate window geometry and trip thresholds. Defaults follow the
+/// SRE-workbook multi-window pattern: a fast window that reacts within
+/// a minute and a slow window that keeps a blip from tripping alone.
+#[derive(Debug, Clone, Copy)]
+pub struct SloWindows {
+    /// Fast burn window (default 1 min).
+    pub fast: Duration,
+    /// Slow burn window (default 1 h).
+    pub slow: Duration,
+    /// Ticker period (default 1 s).
+    pub tick: Duration,
+    /// Trip when the fast-window burn reaches this (default 14.4:
+    /// budget for the day gone in 100 minutes).
+    pub trip_fast: f64,
+    /// ... and the slow-window burn also reaches this (default 6).
+    pub trip_slow: f64,
+    /// Clear the trip when the fast-window burn falls below this
+    /// (default 1: back inside budget).
+    pub clear: f64,
+}
+
+impl Default for SloWindows {
+    fn default() -> Self {
+        SloWindows {
+            fast: Duration::from_secs(60),
+            slow: Duration::from_secs(3600),
+            tick: Duration::from_secs(1),
+            trip_fast: 14.4,
+            trip_slow: 6.0,
+            clear: 1.0,
+        }
+    }
+}
+
+/// Admission limits applied to a tenant **while its burn rate is
+/// tripped** (untripped tenants are not rate-limited by the engine).
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionPolicy {
+    /// Token-bucket refill rate while tripped (admitted requests per
+    /// second; the trickle that lets the engine observe recovery).
+    pub throttle_rps: f64,
+    /// Token-bucket capacity (burst) while tripped.
+    pub throttle_burst: f64,
+    /// Inflight quota while tripped: admission is refused while the
+    /// tenant's inflight gauge is at or above this.
+    pub throttle_inflight: i64,
+}
+
+impl Default for AdmissionPolicy {
+    fn default() -> Self {
+        AdmissionPolicy { throttle_rps: 8.0, throttle_burst: 8.0, throttle_inflight: 2 }
+    }
+}
+
+/// Token bucket state for one tripped tenant.
+#[derive(Debug)]
+struct TokenBucket {
+    tokens: f64,
+    last: Instant,
+}
+
+/// Per-tenant engine state.
+struct TenantState {
+    name: String,
+    spec: Mutex<Option<SloSpec>>,
+    /// Timestamped monotone cuts of the tenant's violation counters,
+    /// newest at the back; covers the slow window.
+    cuts: Mutex<VecDeque<(Instant, TenantCut)>>,
+    tripped: AtomicBool,
+    /// Burn gauges (f64 bits) for exposition.
+    burn_fast: AtomicU64,
+    burn_slow: AtomicU64,
+    /// Trip transitions since start.
+    trips: AtomicU64,
+    bucket: Mutex<TokenBucket>,
+}
+
+/// Point-in-time SLO state for one tenant, for `[stats]`, the `Stats`
+/// frame, and Prometheus exposition.
+#[derive(Debug, Clone)]
+pub struct SloStatus {
+    /// Model id (fleet index).
+    pub model: u32,
+    /// Model name.
+    pub name: String,
+    /// Declared objectives (`None` until configured).
+    pub spec: Option<SloSpec>,
+    /// Fast-window burn rate.
+    pub burn_fast: f64,
+    /// Slow-window burn rate.
+    pub burn_slow: f64,
+    /// Whether admission is currently throttling this tenant.
+    pub tripped: bool,
+    /// Trip transitions since start.
+    pub trips: u64,
+}
+
+/// The per-tenant SLO engine. One per server; sessions consult
+/// [`try_admit`](SloEngine::try_admit) per request, a background
+/// ticker (or a test) drives [`tick`](SloEngine::tick).
+pub struct SloEngine {
+    tenants: Vec<TenantState>,
+    metrics: Arc<Metrics>,
+    windows: SloWindows,
+    policy: AdmissionPolicy,
+    /// Called with `(model, tripped)` on every trip transition —
+    /// serving wires this to the fleet scheduler's re-solve.
+    on_trip: Mutex<Option<Box<dyn Fn(u32, bool) + Send + Sync>>>,
+}
+
+impl std::fmt::Debug for SloEngine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SloEngine").field("tenants", &self.tenants.len()).finish()
+    }
+}
+
+impl SloEngine {
+    /// An engine for the given tenants (index = model id), reading
+    /// burn inputs from `metrics`.
+    pub fn new(
+        names: Vec<String>,
+        metrics: Arc<Metrics>,
+        windows: SloWindows,
+        policy: AdmissionPolicy,
+    ) -> Arc<SloEngine> {
+        let now = Instant::now();
+        Arc::new(SloEngine {
+            tenants: names
+                .into_iter()
+                .map(|name| TenantState {
+                    name,
+                    spec: Mutex::new(None),
+                    cuts: Mutex::new(VecDeque::new()),
+                    tripped: AtomicBool::new(false),
+                    burn_fast: AtomicU64::new(0),
+                    burn_slow: AtomicU64::new(0),
+                    trips: AtomicU64::new(0),
+                    bucket: Mutex::new(TokenBucket { tokens: policy.throttle_burst, last: now }),
+                })
+                .collect(),
+            metrics,
+            windows,
+            policy,
+            on_trip: Mutex::new(None),
+        })
+    }
+
+    /// Register the trip-transition callback (replaces any previous).
+    pub fn set_on_trip(&self, cb: impl Fn(u32, bool) + Send + Sync + 'static) {
+        *self.on_trip.lock().unwrap() = Some(Box::new(cb));
+    }
+
+    /// Number of tenants the engine tracks.
+    pub fn tenant_count(&self) -> usize {
+        self.tenants.len()
+    }
+
+    /// Resolve a tenant name to its model id.
+    pub fn model_id_of(&self, name: &str) -> Option<u32> {
+        self.tenants.iter().position(|t| t.name == name).map(|i| i as u32)
+    }
+
+    /// Declare (or replace) a tenant's objectives. Resets the
+    /// tenant's burn windows — historical violation counts were taken
+    /// against the old objectives and cannot be reinterpreted.
+    /// Returns false for an unknown model id.
+    pub fn set_slo(&self, model: u32, spec: SloSpec) -> bool {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return false;
+        };
+        *t.spec.lock().unwrap() = Some(spec);
+        t.cuts.lock().unwrap().clear();
+        t.burn_fast.store(0, Ordering::Relaxed);
+        t.burn_slow.store(0, Ordering::Relaxed);
+        self.transition(model, t, false);
+        true
+    }
+
+    /// A tenant's declared objectives, if any.
+    pub fn spec(&self, model: u32) -> Option<SloSpec> {
+        self.tenants.get(model as usize).and_then(|t| *t.spec.lock().unwrap())
+    }
+
+    /// Per-request admission check. Free (`true`) unless the tenant's
+    /// burn rate is tripped; while tripped, admission drains the
+    /// throttle token bucket and respects the inflight quota. The
+    /// caller answers a refusal with the wire's `Throttled` status.
+    pub fn try_admit(&self, model: u32) -> bool {
+        let Some(t) = self.tenants.get(model as usize) else {
+            return true;
+        };
+        if !t.tripped.load(Ordering::Acquire) {
+            return true;
+        }
+        if self.metrics.tenant_inflight(model as usize) >= self.policy.throttle_inflight {
+            return false;
+        }
+        let mut b = t.bucket.lock().unwrap();
+        let now = Instant::now();
+        let dt = now.duration_since(b.last).as_secs_f64();
+        b.last = now;
+        b.tokens = (b.tokens + dt * self.policy.throttle_rps).min(self.policy.throttle_burst);
+        if b.tokens >= 1.0 {
+            b.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// One burn-rate evaluation pass at time `now`: cut every
+    /// configured tenant's violation counters, recompute both window
+    /// burns, and apply the trip/clear hysteresis. Deterministic given
+    /// the metrics state and `now` — tests call this directly.
+    pub fn tick(&self, now: Instant) {
+        for (model, t) in self.tenants.iter().enumerate() {
+            let Some(spec) = *t.spec.lock().unwrap() else {
+                continue;
+            };
+            let cut = self
+                .metrics
+                .tenant_cut(model, spec.lat_obj_us(), spec.keep_floor_scaled())
+                .unwrap_or_default();
+            let mut cuts = t.cuts.lock().unwrap();
+            cuts.push_back((now, cut));
+            let horizon = self.windows.slow + self.windows.tick * 2;
+            while cuts.len() > MAX_CUTS
+                || cuts.front().is_some_and(|&(at, _)| now.duration_since(at) > horizon)
+            {
+                cuts.pop_front();
+            }
+            let fast = burn_over(&cuts, now, self.windows.fast, &spec);
+            let slow = burn_over(&cuts, now, self.windows.slow, &spec);
+            drop(cuts);
+            t.burn_fast.store(fast.to_bits(), Ordering::Relaxed);
+            t.burn_slow.store(slow.to_bits(), Ordering::Relaxed);
+            let was = t.tripped.load(Ordering::Acquire);
+            if !was && fast >= self.windows.trip_fast && slow >= self.windows.trip_slow {
+                // Arm the throttle bucket full so the trickle starts
+                // immediately rather than after a refill delay.
+                let mut b = t.bucket.lock().unwrap();
+                b.tokens = self.policy.throttle_burst;
+                b.last = Instant::now();
+                drop(b);
+                t.trips.fetch_add(1, Ordering::Relaxed);
+                self.transition(model as u32, t, true);
+            } else if was && fast < self.windows.clear {
+                self.transition(model as u32, t, false);
+            }
+        }
+    }
+
+    /// Store a trip state and fire the callback on actual change.
+    fn transition(&self, model: u32, t: &TenantState, tripped: bool) {
+        if t.tripped.swap(tripped, Ordering::AcqRel) != tripped {
+            if let Some(cb) = self.on_trip.lock().unwrap().as_ref() {
+                cb(model, tripped);
+            }
+        }
+    }
+
+    /// Point-in-time status of every tenant (index = model id).
+    pub fn status(&self) -> Vec<SloStatus> {
+        self.tenants
+            .iter()
+            .enumerate()
+            .map(|(i, t)| SloStatus {
+                model: i as u32,
+                name: t.name.clone(),
+                spec: *t.spec.lock().unwrap(),
+                burn_fast: f64::from_bits(t.burn_fast.load(Ordering::Relaxed)),
+                burn_slow: f64::from_bits(t.burn_slow.load(Ordering::Relaxed)),
+                tripped: t.tripped.load(Ordering::Acquire),
+                trips: t.trips.load(Ordering::Relaxed),
+            })
+            .collect()
+    }
+
+    /// Whether a tenant is currently tripped.
+    pub fn tripped(&self, model: u32) -> bool {
+        self.tenants.get(model as usize).is_some_and(|t| t.tripped.load(Ordering::Acquire))
+    }
+
+    /// Spawn the background ticker driving [`tick`](SloEngine::tick)
+    /// every `windows.tick`. The thread holds only a weak reference,
+    /// so it exits on its own once the server drops the engine — no
+    /// explicit shutdown required.
+    pub fn start_ticker(self: &Arc<Self>) {
+        let weak: Weak<SloEngine> = Arc::downgrade(self);
+        let period = self.windows.tick;
+        thread::Builder::new()
+            .name("slo-ticker".into())
+            .spawn(move || loop {
+                thread::sleep(period);
+                match weak.upgrade() {
+                    Some(engine) => engine.tick(Instant::now()),
+                    None => break,
+                }
+            })
+            .expect("spawn slo ticker");
+    }
+}
+
+/// Burn rate over the trailing `window` ending at `now`: delta of the
+/// newest cut against the oldest cut inside the window, violation
+/// fraction divided by the objective's budget, maxed across the
+/// enabled objectives. 0 when the window holds no completed requests.
+fn burn_over(
+    cuts: &VecDeque<(Instant, TenantCut)>,
+    now: Instant,
+    window: Duration,
+    spec: &SloSpec,
+) -> f64 {
+    let Some(&(_, newest)) = cuts.back() else {
+        return 0.0;
+    };
+    // Baseline: the oldest cut not older than the window (the counts
+    // *before* the window started; absent one, zero — server younger
+    // than the window).
+    let base = cuts
+        .iter()
+        .rev()
+        .find(|&&(at, _)| now.duration_since(at) >= window)
+        .map(|&(_, c)| c)
+        .unwrap_or_default();
+    let served = newest.served.saturating_sub(base.served);
+    let errors = newest.errors.saturating_sub(base.errors);
+    let attempts = served + errors;
+    if attempts == 0 {
+        return 0.0;
+    }
+    let mut burn = 0.0f64;
+    if spec.p99_ms > 0.0 {
+        let viol = newest.lat_violations.saturating_sub(base.lat_violations);
+        burn = burn.max(viol as f64 / attempts as f64 / VIOLATION_BUDGET);
+    }
+    if spec.keep_floor > 0.0 {
+        let viol = newest.keep_violations.saturating_sub(base.keep_violations);
+        burn = burn.max(viol as f64 / attempts as f64 / VIOLATION_BUDGET);
+    }
+    if spec.err_ceiling > 0.0 {
+        burn = burn.max(errors as f64 / attempts as f64 / spec.err_ceiling);
+    }
+    burn
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fast_windows() -> SloWindows {
+        SloWindows {
+            fast: Duration::from_millis(200),
+            slow: Duration::from_millis(800),
+            tick: Duration::from_millis(50),
+            trip_fast: 10.0,
+            trip_slow: 5.0,
+            clear: 1.0,
+        }
+    }
+
+    fn engine_for(names: &[&str]) -> (Arc<SloEngine>, Arc<Metrics>) {
+        let metrics = Arc::new(Metrics::new());
+        let engine = SloEngine::new(
+            names.iter().map(|s| s.to_string()).collect(),
+            Arc::clone(&metrics),
+            fast_windows(),
+            AdmissionPolicy { throttle_rps: 0.0, throttle_burst: 0.0, throttle_inflight: 0 },
+        );
+        (engine, metrics)
+    }
+
+    #[test]
+    fn spec_parsing_roundtrips_and_rejects_garbage() {
+        let (name, s) = SloSpec::parse("kws=50:0.3:0.01").unwrap();
+        assert_eq!(name, "kws");
+        assert_eq!(s.p99_ms, 50.0);
+        assert_eq!(s.lat_obj_us(), 50_000);
+        assert_eq!(s.keep_floor_scaled(), 3000);
+        let list = SloSpec::parse_list("a=1:0:0, b=0:0.5:0.02").unwrap();
+        assert_eq!(list.len(), 2);
+        assert_eq!(list[1].0, "b");
+        assert_eq!(list[1].1.lat_obj_us(), u64::MAX, "0 disables latency objective");
+        assert!(SloSpec::parse("no-equals").is_err());
+        assert!(SloSpec::parse("a=1:2").is_err());
+        assert!(SloSpec::parse("a=x:0:0").is_err());
+        assert!(SloSpec::parse("a=1:2.0:0").is_err(), "keep floor is a ratio");
+    }
+
+    #[test]
+    fn burn_trips_on_sustained_violation_and_clears_on_recovery() {
+        let (engine, metrics) = engine_for(&["hot", "cold"]);
+        // hot: 1µs objective every request violates; cold: huge bound.
+        engine.set_slo(0, SloSpec { p99_ms: 0.001, keep_floor: 0.0, err_ceiling: 0.0 });
+        engine.set_slo(1, SloSpec { p99_ms: 10_000.0, keep_floor: 0.0, err_ceiling: 0.0 });
+        let t0 = Instant::now();
+        for i in 0..50 {
+            metrics.record_request(0, 100, 400, 0.0, 0.0, 0.0, 0);
+            metrics.record_request(1, 100, 400, 0.0, 0.0, 0.0, 0);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        let st = engine.status();
+        assert!(st[0].tripped, "every request violated 1µs: {:?}", st[0]);
+        assert!(st[0].burn_fast > 10.0);
+        assert_eq!(st[0].trips, 1);
+        assert!(!st[1].tripped, "healthy tenant must not trip: {:?}", st[1]);
+        assert_eq!(st[1].burn_fast, 0.0);
+        // Recovery: no new traffic → windows drain → burn 0 → clear.
+        let later = t0 + Duration::from_millis(50 * 50);
+        for i in 0..40 {
+            engine.tick(later + Duration::from_millis(50 * i));
+        }
+        let st = engine.status();
+        assert!(!st[0].tripped, "idle windows must clear the trip: {:?}", st[0]);
+        assert!(engine.try_admit(0), "cleared tenant admits freely");
+    }
+
+    #[test]
+    fn tripped_tenant_is_throttled_and_others_are_not() {
+        let (engine, metrics) = engine_for(&["hot", "cold"]);
+        engine.set_slo(0, SloSpec { p99_ms: 0.001, keep_floor: 0.0, err_ceiling: 0.0 });
+        let t0 = Instant::now();
+        for i in 0..30 {
+            metrics.record_request(0, 50, 50, 0.0, 0.0, 0.0, 0);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        assert!(engine.tripped(0));
+        // Zero-rate policy: a tripped tenant admits nothing at all.
+        assert!(!engine.try_admit(0));
+        assert!(engine.try_admit(1), "untripped tenant unaffected");
+        assert!(engine.try_admit(9999), "unknown model is not the engine's call");
+    }
+
+    #[test]
+    fn keep_floor_and_error_ceiling_also_burn() {
+        let (engine, metrics) = engine_for(&["kr", "err"]);
+        engine.set_slo(0, SloSpec { p99_ms: 0.0, keep_floor: 0.9, err_ceiling: 0.0 });
+        engine.set_slo(1, SloSpec { p99_ms: 0.0, keep_floor: 0.0, err_ceiling: 0.01 });
+        let t0 = Instant::now();
+        for i in 0..30 {
+            // kr tenant: keep ratio 0.5 < floor 0.9 every request.
+            metrics.record_request(0, 10, 10, 0.5, 0.0, 0.0, 0);
+            // err tenant: every other request errors (50× the 1% cap).
+            metrics.record_request(1, 10, 10, 0.0, 0.0, 0.0, 0);
+            metrics.record_tenant_error(1);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        let st = engine.status();
+        assert!(st[0].tripped, "keep-floor violations must burn: {:?}", st[0]);
+        assert!(st[1].tripped, "error rate over ceiling must burn: {:?}", st[1]);
+    }
+
+    #[test]
+    fn set_slo_resets_windows_and_unknown_model_is_rejected() {
+        let (engine, metrics) = engine_for(&["a"]);
+        engine.set_slo(0, SloSpec { p99_ms: 0.001, keep_floor: 0.0, err_ceiling: 0.0 });
+        let t0 = Instant::now();
+        for i in 0..30 {
+            metrics.record_request(0, 50, 50, 0.0, 0.0, 0.0, 0);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        assert!(engine.tripped(0));
+        // Relaxing the objective over the wire resets state and clears.
+        assert!(engine.set_slo(0, SloSpec { p99_ms: 10_000.0, keep_floor: 0.0, err_ceiling: 0.0 }));
+        assert!(!engine.tripped(0));
+        assert_eq!(engine.status()[0].burn_fast, 0.0);
+        assert!(!engine.set_slo(7, SloSpec { p99_ms: 1.0, keep_floor: 0.0, err_ceiling: 0.0 }));
+        assert_eq!(engine.spec(0).unwrap().p99_ms, 10_000.0);
+        assert_eq!(engine.model_id_of("a"), Some(0));
+        assert_eq!(engine.model_id_of("zz"), None);
+    }
+
+    #[test]
+    fn trip_callback_fires_on_transitions_only() {
+        let (engine, metrics) = engine_for(&["a"]);
+        let log = Arc::new(Mutex::new(Vec::new()));
+        let log2 = Arc::clone(&log);
+        engine.set_on_trip(move |model, tripped| log2.lock().unwrap().push((model, tripped)));
+        engine.set_slo(0, SloSpec { p99_ms: 0.001, keep_floor: 0.0, err_ceiling: 0.0 });
+        let t0 = Instant::now();
+        for i in 0..30 {
+            metrics.record_request(0, 50, 50, 0.0, 0.0, 0.0, 0);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        let later = t0 + Duration::from_millis(50 * 30);
+        for i in 0..40 {
+            engine.tick(later + Duration::from_millis(50 * i));
+        }
+        let got = log.lock().unwrap().clone();
+        assert_eq!(got, vec![(0, true), (0, false)], "one trip, one clear, no repeats");
+    }
+
+    #[test]
+    fn token_bucket_trickles_admissions_while_tripped() {
+        let metrics = Arc::new(Metrics::new());
+        let engine = SloEngine::new(
+            vec!["a".into()],
+            Arc::clone(&metrics),
+            fast_windows(),
+            AdmissionPolicy { throttle_rps: 1000.0, throttle_burst: 2.0, throttle_inflight: 100 },
+        );
+        engine.set_slo(0, SloSpec { p99_ms: 0.001, keep_floor: 0.0, err_ceiling: 0.0 });
+        let t0 = Instant::now();
+        for i in 0..30 {
+            metrics.record_request(0, 50, 50, 0.0, 0.0, 0.0, 0);
+            engine.tick(t0 + Duration::from_millis(50 * i));
+        }
+        assert!(engine.tripped(0));
+        // Burst drains, then refills at the throttle rate.
+        let mut admitted = 0;
+        for _ in 0..4 {
+            if engine.try_admit(0) {
+                admitted += 1;
+            }
+        }
+        assert!(admitted >= 2, "burst of 2 must admit at least 2, got {admitted}");
+        // Inflight quota bites regardless of tokens.
+        metrics.tenant_inflight_delta(0, 100);
+        assert!(!engine.try_admit(0), "inflight at quota must refuse");
+        metrics.tenant_inflight_delta(0, -100);
+    }
+}

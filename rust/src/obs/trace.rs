@@ -68,6 +68,9 @@ pub enum EventKind {
     WorkerPanic = 12,
     /// The supervisor respawned a panicked worker. `a` = worker index.
     WorkerRespawn = 13,
+    /// A tenant's SLO burn rate crossed its trip threshold (or
+    /// cleared). `id` = model index, `a` = 1 tripped / 0 cleared.
+    SloTrip = 14,
 }
 
 impl EventKind {
@@ -89,6 +92,7 @@ impl EventKind {
             11 => EventKind::Fault,
             12 => EventKind::WorkerPanic,
             13 => EventKind::WorkerRespawn,
+            14 => EventKind::SloTrip,
             _ => return None,
         })
     }
@@ -110,6 +114,7 @@ impl EventKind {
             EventKind::Fault => "Fault",
             EventKind::WorkerPanic => "WorkerPanic",
             EventKind::WorkerRespawn => "WorkerRespawn",
+            EventKind::SloTrip => "SloTrip",
         }
     }
 
@@ -333,6 +338,13 @@ impl FlightRecorder {
     /// in microseconds; instants become `ph:"i"`; each ring is a
     /// synthetic thread (`tid` = registration index) named via a
     /// `thread_name` metadata event.
+    ///
+    /// Events are merged across rings and emitted in global timestamp
+    /// order (metadata first): the trace-viewer spec wants sorted
+    /// input, and downstream tools that stream the document (rather
+    /// than sorting it themselves) misrender interleaved rings
+    /// otherwise. The sort is stable, so same-microsecond events keep
+    /// ring registration order.
     pub fn chrome_trace(&self) -> String {
         let rings = self.rings();
         let mut out = String::with_capacity(4096);
@@ -348,27 +360,34 @@ impl FlightRecorder {
                  \"args\":{{\"name\":\"{}\"}}}}",
                 ring.name()
             ));
+        }
+        let mut events: Vec<(usize, Event)> = Vec::new();
+        for (tid, ring) in rings.iter().enumerate() {
             for e in ring.snapshot() {
-                let args = format!(
-                    "{{\"id\":{},\"a\":{},\"b\":{},\"c\":{}}}",
-                    e.id, e.a, e.b, e.c
-                );
-                if e.kind.is_span() {
-                    out.push_str(&format!(
-                        ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"X\",\"ts\":{},\
-                         \"dur\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
-                        e.kind.name(),
-                        e.t_us,
-                        e.dur_us
-                    ));
-                } else {
-                    out.push_str(&format!(
-                        ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"i\",\"s\":\"t\",\
-                         \"ts\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
-                        e.kind.name(),
-                        e.t_us
-                    ));
-                }
+                events.push((tid, e));
+            }
+        }
+        events.sort_by_key(|(_, e)| e.t_us);
+        for (tid, e) in events {
+            let args = format!(
+                "{{\"id\":{},\"a\":{},\"b\":{},\"c\":{}}}",
+                e.id, e.a, e.b, e.c
+            );
+            if e.kind.is_span() {
+                out.push_str(&format!(
+                    ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"X\",\"ts\":{},\
+                     \"dur\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
+                    e.kind.name(),
+                    e.t_us,
+                    e.dur_us
+                ));
+            } else {
+                out.push_str(&format!(
+                    ",{{\"name\":\"{}\",\"cat\":\"unit\",\"ph\":\"i\",\"s\":\"t\",\
+                     \"ts\":{},\"pid\":1,\"tid\":{tid},\"args\":{args}}}",
+                    e.kind.name(),
+                    e.t_us
+                ));
             }
         }
         out.push_str("],\"displayTimeUnit\":\"ms\"}");
@@ -494,5 +513,35 @@ mod tests {
         let closes = json.matches('}').count();
         assert_eq!(opens, closes);
         assert_eq!(json.matches('[').count(), json.matches(']').count());
+    }
+
+    #[test]
+    fn chrome_trace_merges_rings_in_timestamp_order() {
+        let rec = FlightRecorder::new();
+        let a = rec.ring("worker0");
+        let b = rec.ring("worker1");
+        // Interleaved across rings: per-ring emission order would
+        // render 100, 300, 50, 200 — out of global timestamp order.
+        a.span(EventKind::Service, 1, 100, 10, 0, 0, 0);
+        a.span(EventKind::Service, 2, 300, 10, 0, 0, 0);
+        b.span(EventKind::Service, 3, 50, 10, 0, 0, 0);
+        b.span(EventKind::Service, 4, 200, 10, 0, 0, 0);
+        let json = rec.chrome_trace();
+        let ts: Vec<u64> = json
+            .match_indices("\"ts\":")
+            .map(|(i, _)| {
+                json[i + 5..]
+                    .chars()
+                    .take_while(|c| c.is_ascii_digit())
+                    .collect::<String>()
+                    .parse()
+                    .unwrap()
+            })
+            .collect();
+        assert_eq!(ts, vec![50, 100, 200, 300]);
+        // Both thread_name metadata rows still precede every sample.
+        let last_meta = json.rfind("thread_name").unwrap();
+        let first_span = json.find("\"ph\":\"X\"").unwrap();
+        assert!(last_meta < first_span);
     }
 }

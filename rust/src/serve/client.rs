@@ -338,16 +338,44 @@ impl Client {
         self.admin_roundtrip(0.0, model, timeout)
     }
 
+    /// Admin: declare (or replace) one tenant's service-level
+    /// objectives on the server (wire v6). Components `<= 0` disable
+    /// that objective. Answered with that model's stats (the
+    /// `SetBudget` idiom); a server without an SLO engine treats the
+    /// frame as a plain stats query.
+    pub fn set_slo(
+        &self,
+        model: u32,
+        p99_ms: f64,
+        keep_floor: f32,
+        err_ceiling: f32,
+        timeout: Duration,
+    ) -> std::io::Result<AdminStats> {
+        self.stats_roundtrip(
+            |id| Frame::SetSlo { id, model, p99_ms, keep_floor, err_ceiling },
+            timeout,
+        )
+    }
+
     fn admin_roundtrip(
         &self,
         budget_mj: f64,
         model: u32,
         timeout: Duration,
     ) -> std::io::Result<AdminStats> {
+        self.stats_roundtrip(|id| Frame::SetBudget { id, budget_mj, model }, timeout)
+    }
+
+    /// Send one Stats-answered admin frame and wait for the reply.
+    fn stats_roundtrip(
+        &self,
+        make: impl FnOnce(u64) -> Frame,
+        timeout: Duration,
+    ) -> std::io::Result<AdminStats> {
         let id = self.fresh_id();
         let (tx, rx) = channel();
         self.shared.stats.lock().unwrap().insert(id, tx);
-        if let Err(e) = self.send(&Frame::SetBudget { id, budget_mj, model }) {
+        if let Err(e) = self.send(&make(id)) {
             self.shared.stats.lock().unwrap().remove(&id);
             return Err(e);
         }
@@ -570,7 +598,7 @@ fn handle_frame(shared: &Arc<ClientShared>, frame: Frame) {
         }
         // Client-only frames from a server: ignore.
         Frame::Request { .. } | Frame::Cancel { .. } | Frame::Ping { .. }
-        | Frame::SetBudget { .. } => {}
+        | Frame::SetBudget { .. } | Frame::SetSlo { .. } => {}
     }
 }
 
@@ -745,8 +773,11 @@ impl RetryClient {
                         return Attempt::Done(events);
                     }
                 }
-                // Backpressure or a contained worker panic: resubmit.
-                Status::Rejected | Status::Failed => {
+                // Backpressure (session window, or a tenant-scoped SLO
+                // throttle) or a contained worker panic: resubmit —
+                // the backoff is exactly the pacing a throttled tenant
+                // is being asked for.
+                Status::Rejected | Status::Failed | Status::Throttled => {
                     return Attempt::Retry(std::io::Error::new(
                         std::io::ErrorKind::Interrupted,
                         format!("request answered {:?}; resubmitting", ev.status),
@@ -754,6 +785,14 @@ impl RetryClient {
                 }
                 // The deadline lapsed server-side: terminal by design.
                 Status::Expired => return Attempt::Done(vec![ev]),
+                // The cancel contract is silence — an unsolicited
+                // Cancelled is a protocol violation, not chaos noise.
+                Status::Cancelled => {
+                    return Attempt::Fatal(std::io::Error::new(
+                        std::io::ErrorKind::InvalidData,
+                        "server answered Cancelled for a request we never cancelled",
+                    ));
+                }
                 Status::Error => {
                     return Attempt::Fatal(std::io::Error::new(
                         std::io::ErrorKind::InvalidInput,

@@ -32,6 +32,7 @@ use super::session::{spawn_session, Reaper, SessionCfg, SessionHandle};
 use super::wire::{self, Frame};
 use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::{Coordinator, Metrics};
+use crate::obs::SloEngine;
 use crate::util::FaultPlan;
 
 /// Listener configuration.
@@ -59,6 +60,11 @@ pub struct ServeOpts {
     /// Share the same `Arc` with `ServeConfig::fault` to also inject
     /// worker panics. `None` (the default) injects nothing.
     pub fault: Option<Arc<FaultPlan>>,
+    /// Per-tenant SLO engine (burn-rate tracking + tripped-tenant
+    /// admission). Sessions consult it on every request and route the
+    /// wire `SetSlo` admin frame to it; `None` (the default) admits
+    /// everything and answers `SetSlo` as a plain stats query.
+    pub slo: Option<Arc<SloEngine>>,
 }
 
 impl Default for ServeOpts {
@@ -69,6 +75,7 @@ impl Default for ServeOpts {
             governor: None,
             scheduler: None,
             fault: None,
+            slo: None,
         }
     }
 }
@@ -106,11 +113,12 @@ impl Server {
         let governor = opts.governor.clone();
         let scheduler = opts.scheduler.clone();
         let fault = opts.fault.clone();
+        let slo = opts.slo.clone();
         let max_conns = opts.max_conns.max(1);
         let accept_handle = std::thread::spawn(move || {
             accept_loop(
                 listener, t_stop, t_sessions, t_coord, t_reaper, session_cfg, governor,
-                scheduler, fault, max_conns,
+                scheduler, fault, slo, max_conns,
             )
         });
 
@@ -194,6 +202,7 @@ fn accept_loop(
     governor: Option<Arc<Governor>>,
     scheduler: Option<Arc<FleetScheduler>>,
     fault: Option<Arc<FaultPlan>>,
+    slo: Option<Arc<SloEngine>>,
     max_conns: usize,
 ) {
     while !stop.load(Ordering::Acquire) {
@@ -234,6 +243,7 @@ fn accept_loop(
                     governor.clone(),
                     scheduler.clone(),
                     fault.clone(),
+                    slo.clone(),
                 ) {
                     Ok(handle) => guard.push(handle),
                     Err(e) => eprintln!("[serve] failed to start session: {e}"),

@@ -55,7 +55,9 @@ use std::time::{Duration, Instant};
 use super::wire::{self, Frame, FrameReader, Status, WHOLE_REQUEST};
 use crate::control::{FleetScheduler, Governor};
 use crate::coordinator::{Coordinator, CtlState, InferResponse, Metrics, RequestCtl, StreamSink};
-use crate::obs::{render_prometheus, render_trace, EventKind, MetricsHub, TraceRing};
+use crate::obs::{
+    render_prometheus, render_trace, EventKind, MetricsHub, SloEngine, SloSpec, TraceRing,
+};
 use crate::util::{lock_recover, FaultPlan};
 
 /// Per-session configuration.
@@ -282,6 +284,9 @@ pub enum SessionExit {
 
 struct Inflight {
     ctl: Arc<RequestCtl>,
+    /// Target model: the per-tenant inflight gauge must decrement the
+    /// same row it incremented, whichever thread returns the credit.
+    model: u32,
 }
 
 /// A validated window-overflow request waiting for in-flight credit.
@@ -404,6 +409,10 @@ pub(crate) struct SessionShared {
     /// Shared "session" flight-recorder ring (admission lifecycle
     /// events: Park, Admit); `None` when observability is off.
     ring: Option<Arc<TraceRing>>,
+    /// Per-tenant SLO engine, when the server runs one: requests
+    /// consult it at admission (a tripped tenant's overflow is
+    /// answered `Throttled`), and the `SetSlo` admin frame lands here.
+    slo: Option<Arc<SloEngine>>,
     metrics: Arc<Metrics>,
 }
 
@@ -435,11 +444,13 @@ impl SessionShared {
         }
     }
 
-    /// Remove `id` from the window and update the gauge. Only the
-    /// winner of the ctl CAS calls this, so the accounting is exact.
+    /// Remove `id` from the window and update the gauges (global and
+    /// per-tenant). Only the winner of the ctl CAS calls this, so the
+    /// accounting is exact.
     fn finish(&self, id: u64) {
-        if lock_recover(&self.inflight).remove(&id).is_some() {
+        if let Some(inf) = lock_recover(&self.inflight).remove(&id) {
             self.metrics.inflight_delta(-1);
+            self.metrics.tenant_inflight_delta(inf.model as usize, -1);
         }
     }
 
@@ -466,6 +477,9 @@ struct SessionSink {
     shared: Arc<SessionShared>,
     id: u64,
     ctl: Arc<RequestCtl>,
+    /// Target model, so a worker-failure outcome can be charged to the
+    /// right tenant's error counter.
+    model: u32,
     n_samples: usize,
     order: Mutex<ReorderState>,
 }
@@ -525,6 +539,7 @@ impl StreamSink for SessionSink {
     fn fail(&self) {
         lock_recover(&self.order).parked.clear();
         self.shared.finish(self.id);
+        self.shared.metrics.record_tenant_error(self.model as usize);
         self.shared.status_reply(self.id, Status::Failed);
         try_admit_parked(&self.shared);
     }
@@ -563,6 +578,7 @@ pub(crate) fn spawn_session(
     governor: Option<Arc<Governor>>,
     scheduler: Option<Arc<FleetScheduler>>,
     fault: Option<Arc<FaultPlan>>,
+    slo: Option<Arc<SloEngine>>,
 ) -> std::io::Result<SessionHandle> {
     let read_half = stream.try_clone()?;
     // Period between liveness checks of the draining/dead flags while
@@ -586,6 +602,7 @@ pub(crate) fn spawn_session(
         scheduler,
         fault,
         ring,
+        slo,
         metrics,
     });
     let thread_shared = Arc::clone(&shared);
@@ -721,6 +738,7 @@ fn cancel_all(shared: &Arc<SessionShared>) {
     for (_, inf) in &drained {
         inf.ctl.cancel();
         shared.metrics.inflight_delta(-1);
+        shared.metrics.tenant_inflight_delta(inf.model as usize, -1);
     }
 }
 
@@ -787,6 +805,27 @@ fn handle_frame(shared: &Arc<SessionShared>, frame: Frame) -> bool {
             shared.send(&Frame::TraceDump { id, body });
             true
         }
+        // SLO admin (v6): declare or replace one tenant's objectives at
+        // runtime. Always answered with a Stats frame echoing the id
+        // (the SetBudget idiom) so a client can fire-and-confirm; with
+        // no SLO engine configured the frame degrades to a stats query
+        // — probes stay cheap, never an error.
+        Frame::SetSlo { id, model, p99_ms, keep_floor, err_ceiling } => {
+            if let Some(slo) = &shared.slo {
+                // Unknown tenant: rejected silently (same contract as
+                // SetBudget with an unknown model id).
+                let _ = slo.set_slo(
+                    model,
+                    SloSpec {
+                        p99_ms,
+                        keep_floor: keep_floor as f64,
+                        err_ceiling: err_ceiling as f64,
+                    },
+                );
+            }
+            shared.send(&handle_set_budget(shared, id, 0.0, model));
+            true
+        }
         Frame::Goodbye => false,
         // Server-only frames arriving from a client are ignored (they
         // framed correctly; dropping them is safer than hanging up).
@@ -805,6 +844,7 @@ fn metrics_hub(shared: &Arc<SessionShared>) -> MetricsHub {
         governor: shared.governor.clone(),
         scheduler: shared.scheduler.clone(),
         recorder: shared.coord.recorder(),
+        slo: shared.slo.clone(),
         model_names,
     }
 }
@@ -961,8 +1001,21 @@ fn handle_request(
         return;
     };
     if expect != sample_len {
+        shared.metrics.record_tenant_error(model as usize);
         shared.status_reply(id, Status::Error);
         return;
+    }
+    // Per-tenant SLO admission: free when the tenant's burn rate is
+    // within its objectives; once tripped, the engine's token bucket /
+    // inflight quota decides, and overflow is answered `Throttled` — a
+    // tenant-scoped retry-later, distinct from the session-scoped
+    // `Rejected` backpressure below.
+    if let Some(slo) = &shared.slo {
+        if !slo.try_admit(model) {
+            shared.metrics.record_tenant_throttled(model as usize);
+            shared.status_reply(id, Status::Throttled);
+            return;
+        }
     }
     // Unique id across both the window and the park queue (a parked
     // duplicate would otherwise collide with itself at admission).
@@ -1163,9 +1216,10 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         if window.contains_key(&p.id) {
             return Admit::Dup(p.id);
         }
-        window.insert(p.id, Inflight { ctl: Arc::clone(&p.ctl) });
+        window.insert(p.id, Inflight { ctl: Arc::clone(&p.ctl), model: p.model });
     }
     shared.metrics.inflight_delta(1);
+    shared.metrics.tenant_inflight_delta(p.model as usize, 1);
     if let Some(r) = &shared.ring {
         r.emit(EventKind::Admit, p.id, 0, 0, 0);
     }
@@ -1178,6 +1232,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         shared: Arc::clone(shared),
         id,
         ctl: Arc::clone(&ctl),
+        model,
         n_samples,
         order: Mutex::new(ReorderState::default()),
     });
@@ -1187,6 +1242,7 @@ fn admit_and_submit(shared: &Arc<SessionShared>, p: Parked) -> Admit {
         // submit_streamed. Deferred rather than written here — this
         // path can run on the reaper thread.
         shared.finish(id);
+        shared.metrics.record_tenant_error(model as usize);
         lock_recover(&shared.deferred).push((id, Status::Error));
     }
     Admit::Ok

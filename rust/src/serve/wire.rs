@@ -16,10 +16,11 @@
 //! ```text
 //! offset  size  field
 //! 0       4     magic   "UnIT"
-//! 4       2     version (little-endian, currently 5; 3 and 4 still
-//!               accepted)
+//! 4       2     version (little-endian, currently 6; 3, 4, and 5
+//!               still accepted)
 //! 6       1     frame type (1=Request 2=Response 3=Cancel 4=Ping 5=Pong
-//!               6=Goodbye 7=SetBudget 8=Stats 9=Scrape 10=TraceDump)
+//!               6=Goodbye 7=SetBudget 8=Stats 9=Scrape 10=TraceDump
+//!               11=SetSlo)
 //! 7       1     dtype   (Request only: 0=f32-LE 1=i8; 0 elsewhere)
 //! 8       8     request id (u64 LE; client-chosen, echoed on replies)
 //! 16      …     type-specific payload (see below)
@@ -72,6 +73,11 @@
 //!   the flight recorder's Chrome trace-event JSON (an empty
 //!   `traceEvents` document when no recorder is attached). Also
 //!   forward-tolerant.
+//! * **SetSlo** (v6) — `model:u32`, `p99_ms:f64`, `keep_floor:f32`,
+//!   `err_ceiling:f32`: declare (or replace) one tenant's service
+//!   objectives. A component `<= 0` disables that objective. The
+//!   server answers with a `Stats` frame echoing the id (the
+//!   `SetBudget` admin idiom). Forward-tolerant decoding.
 //! * **Cancel / Ping / Pong / Goodbye** — empty (the header id is the
 //!   operand; Goodbye ignores it).
 //!
@@ -92,10 +98,11 @@ pub const MAGIC: [u8; 4] = *b"UnIT";
 /// trips/recalibrations); version 4 added multi-tenant model identity
 /// (`model` on `Request`/`SetBudget`, the model/fleet `Stats` tail);
 /// version 5 added the observability admin frames (`Scrape`,
-/// `TraceDump`). Decoding accepts [`MIN_VERSION`]..=`VERSION`; anything
-/// else is refused with [`WireError::BadVersion`] rather than
-/// mis-framed.
-pub const VERSION: u16 = 5;
+/// `TraceDump`); version 6 added the per-tenant SLO engine's `SetSlo`
+/// admin frame and the `Throttled` response status. Decoding accepts
+/// [`MIN_VERSION`]..=`VERSION`; anything else is refused with
+/// [`WireError::BadVersion`] rather than mis-framed.
+pub const VERSION: u16 = 6;
 /// Oldest protocol version the decoder still accepts. v3 frames carry
 /// no model identity: their requests decode as model `0` and their
 /// `SetBudget` as [`FLEET_MODEL`].
@@ -185,6 +192,11 @@ pub enum Status {
     /// further replies follow. Safe to resubmit — the panic supervisor
     /// has already respawned the worker.
     Failed = 5,
+    /// The tenant's admission policy refused the request (v6): its SLO
+    /// burn rate is tripped and the throttle quota is exhausted. The
+    /// refusal is tenant-scoped — other models on the same connection
+    /// are unaffected — and safe to retry after backoff.
+    Throttled = 6,
 }
 
 impl Status {
@@ -196,6 +208,7 @@ impl Status {
             3 => Status::Cancelled,
             4 => Status::Error,
             5 => Status::Failed,
+            6 => Status::Throttled,
             other => return Err(WireError::BadStatus(other)),
         })
     }
@@ -347,6 +360,23 @@ pub enum Frame {
         /// the reply.
         body: String,
     },
+    /// Client → server (admin, v6): declare one tenant's service
+    /// objectives for the SLO engine. Any component `<= 0` disables
+    /// that objective. The server always answers with a
+    /// [`Frame::Stats`] echoing `id`, the `SetBudget` idiom.
+    /// Forward-tolerant decoding.
+    SetSlo {
+        /// Admin exchange id, echoed on the `Stats` reply.
+        id: u64,
+        /// Target model id.
+        model: u32,
+        /// p99 total-latency objective in milliseconds.
+        p99_ms: f64,
+        /// Keep-ratio floor in `[0, 1]`.
+        keep_floor: f32,
+        /// Error-rate ceiling in `[0, 1]`.
+        err_ceiling: f32,
+    },
 }
 
 impl Frame {
@@ -362,6 +392,7 @@ impl Frame {
             Frame::Stats { .. } => 8,
             Frame::Scrape { .. } => 9,
             Frame::TraceDump { .. } => 10,
+            Frame::SetSlo { .. } => 11,
         }
     }
 
@@ -375,7 +406,8 @@ impl Frame {
             | Frame::SetBudget { id, .. }
             | Frame::Stats { id, .. }
             | Frame::Scrape { id, .. }
-            | Frame::TraceDump { id, .. } => *id,
+            | Frame::TraceDump { id, .. }
+            | Frame::SetSlo { id, .. } => *id,
             Frame::Goodbye => 0,
         }
     }
@@ -579,6 +611,12 @@ pub fn encode(frame: &Frame) -> Vec<u8> {
         Frame::Scrape { body: text, .. } | Frame::TraceDump { body: text, .. } => {
             put_u32(&mut body, text.len() as u32);
             body.extend_from_slice(text.as_bytes());
+        }
+        Frame::SetSlo { model, p99_ms, keep_floor, err_ceiling, .. } => {
+            put_u32(&mut body, *model);
+            put_f64(&mut body, *p99_ms);
+            put_f32(&mut body, *keep_floor);
+            put_f32(&mut body, *err_ceiling);
         }
         Frame::Cancel { .. } | Frame::Ping { .. } | Frame::Pong { .. } | Frame::Goodbye => {}
     }
@@ -791,11 +829,19 @@ pub fn decode(buf: &[u8]) -> Result<Option<(Frame, usize)>, WireError> {
                 Frame::TraceDump { id, body }
             }
         }
+        11 => {
+            let model = c.u32("model")?;
+            let p99_ms = c.f64("p99_ms")?;
+            let keep_floor = c.f32("keep_floor")?;
+            let err_ceiling = c.f32("err_ceiling")?;
+            Frame::SetSlo { id, model, p99_ms, keep_floor, err_ceiling }
+        }
         other => return Err(WireError::BadType(other)),
     };
-    // Stats/Scrape/TraceDump are forward-tolerant (see above); every
-    // other frame type is strict about consuming its payload exactly.
-    if !matches!(ftype, 8 | 9 | 10) && c.pos != payload.len() {
+    // Stats/Scrape/TraceDump/SetSlo are forward-tolerant (see above);
+    // every other frame type is strict about consuming its payload
+    // exactly.
+    if !matches!(ftype, 8 | 9 | 10 | 11) && c.pos != payload.len() {
         return Err(WireError::Malformed("trailing bytes"));
     }
     Ok(Some((frame, 4 + len)))
@@ -989,6 +1035,31 @@ mod tests {
         roundtrip(Frame::TraceDump {
             id: 13,
             body: r#"{"traceEvents":[],"displayTimeUnit":"ms"}"#.to_string(),
+        });
+        // v6 SLO admin frame and tenant-scoped throttle status.
+        roundtrip(Frame::SetSlo {
+            id: 14,
+            model: 1,
+            p99_ms: 50.0,
+            keep_floor: 0.3,
+            err_ceiling: 0.01,
+        });
+        roundtrip(Frame::SetSlo {
+            id: 15,
+            model: 0,
+            p99_ms: 0.0, // disabled component
+            keep_floor: 0.0,
+            err_ceiling: 0.0,
+        });
+        roundtrip(Frame::Response {
+            id: 16,
+            slot: WHOLE_REQUEST,
+            status: Status::Throttled,
+            predicted: 0,
+            queue_us: 0,
+            service_us: 0,
+            mac_skipped: 0.0,
+            logits: vec![],
         });
     }
 
@@ -1232,6 +1303,23 @@ mod tests {
                 other => panic!("expected admin frame, got {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn setslo_tolerates_trailing_extension() {
+        // The v6 admin frame joins the forward-tolerant set: a future
+        // revision may append objectives without breaking this parser.
+        let mut body = header(VERSION, 11, 0, 40);
+        body.extend_from_slice(&1u32.to_le_bytes()); // model
+        body.extend_from_slice(&25.0f64.to_le_bytes()); // p99_ms
+        body.extend_from_slice(&0.5f32.to_le_bytes()); // keep_floor
+        body.extend_from_slice(&0.02f32.to_le_bytes()); // err_ceiling
+        body.extend_from_slice(&[0xEE; 6]); // hypothetical v6.1 tail
+        let (frame, _) = decode(&seal(body)).unwrap().unwrap();
+        assert_eq!(
+            frame,
+            Frame::SetSlo { id: 40, model: 1, p99_ms: 25.0, keep_floor: 0.5, err_ceiling: 0.02 }
+        );
     }
 
     #[test]

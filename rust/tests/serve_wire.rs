@@ -37,7 +37,7 @@ use unit_pruner::util::prop::{check, Gen};
 // Part 1: codec properties
 
 fn arbitrary_frame(g: &mut Gen) -> Frame {
-    match g.usize_in(0, 9) {
+    match g.usize_in(0, 10) {
         0 => {
             let sample_len = g.usize_in(1, 32);
             let n_samples = g.usize_in(1, 5);
@@ -64,6 +64,7 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
                 Status::Expired,
                 Status::Cancelled,
                 Status::Error,
+                Status::Throttled,
             ]),
             predicted: g.u32_in(0, u16::MAX as u32) as u16,
             queue_us: g.u32_in(0, u32::MAX - 1),
@@ -116,6 +117,15 @@ fn arbitrary_frame(g: &mut Gen) -> Frame {
                 (0..g.usize_in(0, 64)).map(|_| g.u32_in(0x20, 0x7E) as u8 as char).collect();
             Frame::TraceDump { id: g.u32_in(0, u32::MAX - 1) as u64, body }
         }
+        9 => Frame::SetSlo {
+            id: g.u32_in(0, u32::MAX - 1) as u64,
+            model: g.u32_in(0, 8),
+            // Finite values only (same reasoning as SetBudget above);
+            // <= 0 components mean "objective disabled".
+            p99_ms: g.f32_in(0.0, 10_000.0) as f64,
+            keep_floor: g.f32_in(0.0, 1.0),
+            err_ceiling: g.f32_in(0.0, 1.0),
+        },
         _ => Frame::Goodbye,
     }
 }

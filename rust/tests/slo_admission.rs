@@ -1,0 +1,183 @@
+//! Per-tenant SLO admission acceptance (PR 9's tentpole).
+//!
+//! Two tenants behind one fleet server with a live SLO engine: the hot
+//! tenant is driven against an impossible p99 latency objective until
+//! its multi-window burn rate latches the trip. From then on its
+//! admission is throttled — burst traffic sees `Throttled` refusals
+//! and the fleet scheduler pins its allocation — while the healthy
+//! tenant stays lossless and slot-ordered. Resetting the objective
+//! over the wire (`SetSlo`) clears the trip and re-admits.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use unit_pruner::approx::DivKind;
+use unit_pruner::control::{calibrated_cache, FleetScheduler, ScaleGrid};
+use unit_pruner::coordinator::{Coordinator, ModelSpec, ServeConfig};
+use unit_pruner::data::{by_name, Sizes};
+use unit_pruner::engine::{PlanConfig, PruneMode, QModel};
+use unit_pruner::models::{zoo, Params};
+use unit_pruner::obs::{AdmissionPolicy, SloEngine, SloWindows};
+use unit_pruner::pruning::Thresholds;
+use unit_pruner::serve::{Client, ServeOpts, Server, Status};
+
+const SIZES: Sizes = Sizes { train: 2, val: 4, test: 8 };
+
+fn model_q(name: &str, seed: u64) -> QModel {
+    let def = zoo(name);
+    let params = Params::random(&def, seed);
+    QModel::quantize(&def, &params)
+        .with_thresholds(&Thresholds::uniform(def.layers.len(), 0.2))
+}
+
+fn samples(name: &str, seed: u64) -> Vec<Vec<f32>> {
+    let ds = by_name(name, seed, SIZES);
+    (0..ds.test.len()).map(|i| ds.test.sample(i).to_vec()).collect()
+}
+
+fn poll_until(mut f: impl FnMut() -> bool, secs: u64) -> bool {
+    let deadline = std::time::Instant::now() + Duration::from_secs(secs);
+    while std::time::Instant::now() < deadline {
+        if f() {
+            return true;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    f()
+}
+
+/// A two-tenant fleet server with a generous budget, a scheduler, and
+/// an SLO engine on fast test windows wired trip→scheduler.
+fn fleet_with_slo(models: &[(&str, u64)]) -> (Server, Arc<FleetScheduler>, Arc<SloEngine>) {
+    let specs: Vec<ModelSpec> = models
+        .iter()
+        .map(|&(name, seed)| ModelSpec {
+            name: name.to_string(),
+            q: model_q(name, seed),
+            mode: PruneMode::Unit,
+            div: DivKind::Exact,
+        })
+        .collect();
+    let mut tenants = Vec::new();
+    for (spec, &(name, seed)) in specs.iter().zip(models) {
+        let ds = by_name(name, seed, SIZES);
+        let cal: Vec<Vec<f32>> =
+            (0..ds.val.len()).map(|i| ds.val.sample(i).to_vec()).collect();
+        let (cache, profile) = calibrated_cache(
+            spec.q.clone(),
+            PlanConfig::for_mode(PruneMode::Unit, DivKind::Exact),
+            ScaleGrid::default_grid(),
+            &cal,
+        );
+        tenants.push((cache, profile));
+    }
+    let coord =
+        Coordinator::start_multi(specs, ServeConfig { workers: 2, ..Default::default() });
+    let sched = FleetScheduler::install(&coord, tenants, 1e12).expect("install");
+    // Sub-second windows so the trip latches (and clears) within test
+    // deadlines; trip/clear thresholds keep the SRE-workbook defaults.
+    let windows = SloWindows {
+        fast: Duration::from_millis(300),
+        slow: Duration::from_millis(900),
+        tick: Duration::from_millis(30),
+        ..SloWindows::default()
+    };
+    let slo = SloEngine::new(
+        models.iter().map(|&(n, _)| n.to_string()).collect(),
+        Arc::clone(&coord.metrics),
+        windows,
+        AdmissionPolicy::default(),
+    );
+    {
+        let sched2 = Arc::clone(&sched);
+        slo.set_on_trip(move |model, tripped| {
+            let _ = sched2.set_tenant_throttled(model, tripped);
+        });
+    }
+    slo.start_ticker();
+    let server = Server::start(
+        coord,
+        "127.0.0.1:0",
+        ServeOpts {
+            scheduler: Some(Arc::clone(&sched)),
+            slo: Some(Arc::clone(&slo)),
+            ..Default::default()
+        },
+    )
+    .expect("bind loopback");
+    (server, sched, slo)
+}
+
+#[test]
+fn burn_trip_throttles_hot_tenant_and_spares_healthy_one() {
+    let models: &[(&str, u64)] = &[("mnist", 81), ("cifar", 82)];
+    let (server, sched, slo) = fleet_with_slo(models);
+    let client = Client::connect(server.local_addr()).unwrap();
+    let xs0 = samples("mnist", 81);
+    let xs1 = samples("cifar", 82);
+
+    // Declare an impossible latency objective for tenant 0 over the
+    // wire: 0.001 ms, so every completed request violates and the burn
+    // rate is 100x the violation budget on both windows.
+    client.set_slo(0, 1e-3, 0.0, 0.0, Duration::from_secs(10)).unwrap();
+
+    // Drive tenant 0 until the trip latches.
+    let tripped = poll_until(
+        || {
+            let (_id, rx) = client.submit_to(0, &xs0[0], None).unwrap();
+            let _ = rx.recv_timeout(Duration::from_secs(30)).unwrap();
+            slo.tripped(0)
+        },
+        30,
+    );
+    assert!(tripped, "impossible objective never latched the burn trip");
+    assert!(slo.status()[0].trips >= 1, "trip transition must be counted");
+    assert!(sched.tenant_throttled(0), "trip must reach the scheduler");
+
+    // A burst to the tripped tenant is refused with Throttled (token
+    // bucket: 8 burst + 8/s refill; inflight quota 2) — never with an
+    // error, and the session survives.
+    let rxs: Vec<_> =
+        (0..20).map(|_| client.submit_to(0, &xs0[0], None).unwrap().1).collect();
+    let statuses: Vec<Status> = rxs
+        .into_iter()
+        .map(|rx| rx.recv_timeout(Duration::from_secs(60)).unwrap().status)
+        .collect();
+    let throttled = statuses.iter().filter(|s| **s == Status::Throttled).count();
+    assert!(throttled > 0, "tripped tenant burst saw no Throttled refusals: {statuses:?}");
+    assert!(
+        statuses.iter().all(|s| matches!(s, Status::Ok | Status::Throttled)),
+        "tripped tenant must only see Ok or Throttled: {statuses:?}"
+    );
+
+    // The healthy tenant is untouched: lossless, slot-ordered, and
+    // never throttled.
+    let (_id, rx) = client.submit_batch_to(1, &xs1, None).unwrap();
+    for slot in 0..xs1.len() {
+        let ev = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(ev.status, Status::Ok, "healthy tenant impacted by neighbor's trip");
+        assert_eq!(ev.slot as usize, slot, "healthy tenant sub-replies out of order");
+    }
+    let snap = server.metrics().tenant_snapshot();
+    assert_eq!(snap.get(1).map_or(0, |t| t.throttled), 0, "healthy tenant was throttled");
+    assert!(
+        snap.first().map_or(0, |t| t.throttled) as usize >= throttled,
+        "throttled refusals must land on the hot tenant's counter"
+    );
+
+    // Resetting the objective over the wire clears the trip, unpins
+    // the scheduler, and re-admits.
+    client.set_slo(0, 0.0, 0.0, 0.0, Duration::from_secs(10)).unwrap();
+    assert!(
+        poll_until(|| !slo.tripped(0) && !sched.tenant_throttled(0), 10),
+        "objective reset must clear the trip and the scheduler pin"
+    );
+    let (_id, rx) = client.submit_to(0, &xs0[0], None).unwrap();
+    assert_eq!(
+        rx.recv_timeout(Duration::from_secs(60)).unwrap().status,
+        Status::Ok,
+        "recovered tenant must be re-admitted"
+    );
+    assert!(client.goodbye(Duration::from_secs(10)));
+    server.shutdown();
+}

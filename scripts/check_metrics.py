@@ -9,7 +9,10 @@ check is a grep, not a parse:
 2. fail unless each appears (backticked or plain) in
    docs/observability.md;
 3. fail the reverse direction too: a `unit_…` name documented in the
-   metric catalogue that export.rs no longer emits is a stale doc.
+   metric catalogue that export.rs no longer emits is a stale doc;
+4. native-histogram shape: every exported `…_bucket` family must ship
+   its `…_count` and `…_sum` companions (and vice versa — a stray
+   `_count`/`_sum` without `_bucket` is a half-rendered histogram).
 
 Run from the repo root: python3 scripts/check_metrics.py
 """
@@ -42,6 +45,25 @@ def main() -> int:
             f"docs/observability.md: documents `{name}`, which rust/src/obs/export.rs "
             "no longer emits"
         )
+
+    # Prometheus histogram families come in triples: for every
+    # `<fam>_bucket` the renderer must also emit `<fam>_count` and
+    # `<fam>_sum`, and neither companion may exist without the buckets.
+    for name in sorted(exported):
+        for suffix, companions in (
+            ("_bucket", ("_count", "_sum")),
+            ("_count", ("_bucket", "_sum")),
+            ("_sum", ("_bucket", "_count")),
+        ):
+            if not name.endswith(suffix):
+                continue
+            fam = name[: -len(suffix)]
+            for comp in companions:
+                if fam + comp not in exported:
+                    errors.append(
+                        f"rust/src/obs/export.rs: histogram family `{fam}` exports "
+                        f"`{name}` but not `{fam}{comp}`"
+                    )
 
     for e in errors:
         print(f"error: {e}", file=sys.stderr)
