@@ -30,9 +30,10 @@ use unit_pruner::control::{Governor, PlanCache, ScaleGrid};
 use unit_pruner::coordinator::{BackendChoice, Coordinator, EnergyTap, PlanSlot, ServeConfig};
 use unit_pruner::data::{mnist_like, Sizes};
 use unit_pruner::engine::{
-    infer, ConvInterior, EngineConfig, PlanBacked, PlanConfig, PlannedModel, PruneMode, QModel,
+    infer, EngineConfig, KernelBackend, PlanBacked, PlanConfig, PlannedModel, PruneMode, QModel,
 };
-use unit_pruner::models::{zoo, Params};
+use unit_pruner::models::{zoo, ModelDef, Params};
+use unit_pruner::nn::Layer;
 use unit_pruner::nn::ForwardOpts;
 use unit_pruner::pruning::Thresholds;
 use unit_pruner::report::bench::{
@@ -48,6 +49,31 @@ fn main() {
     if quick {
         println!("(UNIT_PERF_QUICK set: CI smoke mode, reduced repetitions)\n");
     }
+    // `--kernel auto|scalar|lanes|simd` (or $UNIT_KERNEL) forces the
+    // backend every Auto-configured plan below resolves to — the CI
+    // simd-forced leg runs `-- --kernel simd`. The explicit three-way
+    // section (1b) pins its own backends and is unaffected.
+    let argv: Vec<String> = std::env::args().collect();
+    let kernel_arg = argv
+        .iter()
+        .position(|a| a == "--kernel")
+        .and_then(|i| argv.get(i + 1))
+        .cloned()
+        .or_else(|| argv.iter().find_map(|a| a.strip_prefix("--kernel=").map(String::from)));
+    if let Some(s) = kernel_arg {
+        match KernelBackend::parse(&s) {
+            Some(k) => KernelBackend::set_process_default(k),
+            None => {
+                eprintln!("unknown --kernel '{s}' (expected auto|scalar|lanes|simd)");
+                std::process::exit(2);
+            }
+        }
+    }
+    println!(
+        "kernel backend: {} (simd level: {})\n",
+        KernelBackend::active_label(),
+        KernelBackend::simd_level()
+    );
     let def = zoo("mnist");
     let params = Params::random(&def, 3);
     let ds = mnist_like::generate(5, Sizes { train: 4, val: 4, test: 32 });
@@ -144,12 +170,15 @@ fn main() {
     }
     println!();
 
-    // 1b. conv interior kernel: scalar taps vs lane-packed ------------------
+    // 1b. conv interior kernel: scalar vs lane-packed vs explicit SIMD ------
     // Same plan tables, same cut tables; only the interior-pixel
     // accumulation loop differs. Bit-identical outputs (pinned by the
-    // plan tests); the ratio is the CI-gated payoff of the lane
-    // packing.
-    println!("=== Perf 1b: conv interior kernel, scalar vs lane-packed ===\n");
+    // plan tests and the cross-layer property suite); the ratios are
+    // the CI-gated payoff of the lane packing and of the intrinsic
+    // tile kernel. On hosts with no SIMD level the `simd` leg runs its
+    // scalar fallback, so the ratio degrades toward 1.0 instead of
+    // failing.
+    println!("=== Perf 1b: conv interior kernel, scalar vs lanes vs simd ===\n");
     {
         let q = QModel::quantize(&def, &params).with_thresholds(&th);
         let inputs: Vec<Vec<i16>> =
@@ -157,12 +186,14 @@ fn main() {
         let mut t = Table::new(vec!["interior kernel", "inferences/s", "us/inference"]);
         let reps = if quick { 96usize } else { 400 };
         let mut per_kernel = Vec::new();
-        for (label, interior) in
-            [("scalar", ConvInterior::Scalar), ("lanes", ConvInterior::Lanes)]
-        {
+        for (label, kernel) in [
+            ("scalar", KernelBackend::Scalar),
+            ("lanes", KernelBackend::Lanes),
+            ("simd", KernelBackend::Simd),
+        ] {
             let mut pb = PlanBacked::new(
                 &q,
-                PlanConfig { conv_interior: interior, ..PlanConfig::unit(DivKind::Shift) },
+                PlanConfig { kernel, ..PlanConfig::unit(DivKind::Shift) },
             );
             black_box(pb.infer(&inputs[0])); // warmup
             let t0 = Instant::now();
@@ -185,8 +216,83 @@ fn main() {
             per_kernel.push(1.0 / per);
         }
         json.speedups.push(("conv-lane".to_string(), per_kernel[1] / per_kernel[0]));
+        json.speedups.push(("simd-interior".to_string(), per_kernel[2] / per_kernel[0]));
         println!("{}", t.render());
-        println!("lane/scalar interior speedup: {:.2}x\n", per_kernel[1] / per_kernel[0]);
+        println!("lane/scalar interior speedup: {:.2}x", per_kernel[1] / per_kernel[0]);
+        println!("simd/scalar interior speedup: {:.2}x\n", per_kernel[2] / per_kernel[0]);
+    }
+
+    // 1b2. linear row kernel: row-at-a-time vs register-blocked -------------
+    // A linear-dominated model so the row kernel is the hot loop: the
+    // blocked path gathers 4 live rows per tile (one Eq. 2 prefix
+    // lookup each, performed at gather time) and drains the tile with
+    // the MAC sweeps fused. Bit-identical outputs; the ratio is the
+    // CI-gated payoff of the blocking.
+    println!("=== Perf 1b2: linear row kernel, scalar rows vs blocked tiles ===\n");
+    {
+        let lin_def = ModelDef {
+            name: "linear-bench".into(),
+            input_shape: [1, 16, 16],
+            classes: 10,
+            layers: vec![
+                Layer::Linear { n_in: 256, n_out: 512, relu: true },
+                Layer::Linear { n_in: 512, n_out: 10, relu: false },
+            ],
+        };
+        let lin_params = Params::random(&lin_def, 7);
+        let lin_th = Thresholds::uniform(lin_def.layers.len(), 0.2);
+        let lq = QModel::quantize(&lin_def, &lin_params).with_thresholds(&lin_th);
+        let lin_conn = lin_def.total_dense_macs();
+        // Mixed-density inputs: mostly live values with a sprinkle of
+        // zeros, so both the row-skip and the Eq. 2 cut paths run.
+        let inputs: Vec<Vec<i16>> = (0..16)
+            .map(|s| {
+                lq.quantize_input(
+                    &(0..lin_def.input_len())
+                        .map(|i| {
+                            if (i + s) % 5 == 0 {
+                                0.0
+                            } else {
+                                (((i * 17 + s * 3) % 31) as f32 - 15.0) / 9.0
+                            }
+                        })
+                        .collect::<Vec<f32>>(),
+                )
+            })
+            .collect();
+        let mut t = Table::new(vec!["linear kernel", "inferences/s", "us/inference"]);
+        let reps = if quick { 192usize } else { 800 };
+        let mut per_kernel = Vec::new();
+        for (label, kernel) in
+            [("scalar-rows", KernelBackend::Scalar), ("blocked-rows", KernelBackend::Simd)]
+        {
+            let mut pb = PlanBacked::new(
+                &lq,
+                PlanConfig { kernel, ..PlanConfig::unit(DivKind::Shift) },
+            );
+            black_box(pb.infer(&inputs[0])); // warmup
+            let t0 = Instant::now();
+            for r in 0..reps {
+                black_box(pb.infer(&inputs[r % inputs.len()]));
+            }
+            let per = t0.elapsed().as_secs_f64() / reps as f64;
+            t.row(vec![
+                label.to_string(),
+                format!("{:.1}", 1.0 / per),
+                format!("{:.0}", per * 1e6),
+            ]);
+            json.engine.push(EngineRow {
+                mode: "unit-linear".to_string(),
+                backend: label.to_string(),
+                inf_per_s: 1.0 / per,
+                mconn_per_s: lin_conn as f64 / per / 1e6,
+                us_per_inf: per * 1e6,
+            });
+            per_kernel.push(1.0 / per);
+        }
+        json.speedups.push(("linear-block".to_string(), per_kernel[1] / per_kernel[0]));
+        println!("{}", t.render());
+        println!("blocked/scalar linear speedup: {:.2}x\n", per_kernel[1] / per_kernel[0]);
     }
 
     // 1c. scale-change latency tiers ----------------------------------------

@@ -41,7 +41,12 @@
 //!
 //! All slot swaps (inline and upgrade) are serialized under the
 //! controller mutex, so the published plan always corresponds to the
-//! stored step. The pending/completed/upgrade counters surface through
+//! stored step. Background compiles go through the same
+//! [`PlanCache`] template config as inline ones, so every plan the
+//! governor publishes — inline, upgrade, or recalibration reseed —
+//! carries the cache's resolved
+//! [`KernelBackend`](crate::engine::KernelBackend) (pinned by the
+//! plan-cache backend test). The pending/completed/upgrade counters surface through
 //! [`GovernorStatus`], the `Stats` admin frame, and
 //! [`Metrics`](crate::coordinator::Metrics) so load tests can assert
 //! the swap path never blocked on a compile.

@@ -175,7 +175,12 @@ struct Inner {
 /// Interning cache of compiled plans keyed by [`ScaleGrid`] step.
 pub struct PlanCache {
     q: QModel,
-    /// Template config; `t_scale_q8` is overwritten per step.
+    /// Template config; `t_scale_q8` is overwritten per step. Every
+    /// other field — mode, div kind, and the resolved
+    /// [`KernelBackend`](crate::engine::KernelBackend) — is carried
+    /// verbatim into each step's compile (including the governor's
+    /// background compiles), so all plans a cache serves run the same
+    /// kernel backend.
     base_cfg: PlanConfig,
     grid: ScaleGrid,
     capacity: usize,
@@ -486,6 +491,29 @@ mod tests {
             assert_eq!(oa.logits_raw, ob.logits_raw, "border step {step}");
             assert_eq!(oa.kept, ob.kept, "border step {step}");
             assert_eq!(oa.ledger.counts, ob.ledger.counts, "border step {step}");
+        }
+    }
+
+    #[test]
+    fn cached_plans_carry_kernel_backend() {
+        // The kernel backend rides in the template config: every step
+        // the cache compiles (and every donor-shared recompile) must
+        // resolve to the backend the cache was built with.
+        use crate::engine::KernelBackend;
+        let q = q_for("mnist", 82);
+        let grid = ScaleGrid::default_grid();
+        for kernel in [KernelBackend::Scalar, KernelBackend::Lanes, KernelBackend::Simd] {
+            let cfg = PlanConfig { kernel, ..PlanConfig::unit(DivKind::Shift) };
+            let cache = PlanCache::new(q.clone(), cfg, grid.clone());
+            let expect = cfg.resolved_kernel();
+            for step in [0usize, 7, 19] {
+                assert_eq!(
+                    cache.plan_at(step).kernel(),
+                    expect,
+                    "step {step} lost the {} backend",
+                    kernel.name()
+                );
+            }
         }
     }
 

@@ -1,0 +1,327 @@
+//! Explicit-SIMD inner kernels with one-time runtime CPU dispatch.
+//!
+//! [`super::plan`]'s `KernelBackend::Simd` path lands here: the conv
+//! interior scatter loop rewritten over `core::arch` intrinsics —
+//! AVX2 or SSE2 on x86_64, NEON on aarch64, a scalar mirror elsewhere
+//! — so a plain `cargo build --release` binary runs the widest safe
+//! path without `-C target-cpu` flags. The level is probed **once**
+//! per process ([`level`]); an explicit `Simd` config on a host with
+//! no usable level degrades to the scalar mirror, never to UB.
+//!
+//! Shape of the kernel: the plan emits a flat SoA mirror of the tap
+//! tables (`simd_w: &[i16]`, `simd_off: &[i32]`, same descending-`|w|`
+//! order as the scalar taps, so a per-pixel cut is still a prefix).
+//! [`scatter_simd`] walks the kept prefix in [`SIMD_TILE`]-tap tiles:
+//! the 16 exact `i16 × i16 → i32` products of one tile are computed
+//! into two–four vector registers, then drained by a 4-wide unrolled
+//! scatter-add — up to four accumulator cells (typically 2–4 distinct
+//! output channels, since consecutive taps in magnitude order
+//! interleave channels) are in flight per step. Products are exact in
+//! i32 (`|x|·|w| ≤ 2^30`) and the i64 accumulator adds are
+//! associative/commutative, so every path here is bit-identical to
+//! the scalar reference loop — pinned by the plan unit tests and the
+//! `engine_cross_layer` property suite.
+
+/// Tap-tile width of the explicit-SIMD interior kernel: 16 × i16
+/// weights is one 256-bit load on AVX2 and two 128-bit loads on
+/// SSE2/NEON, and the resulting 16 × i32 products fill 2–4 vector
+/// registers — the register block the scatter-adds drain.
+pub(crate) const SIMD_TILE: usize = 16;
+
+/// The SIMD level runtime dispatch selected for this process.
+// Which variants are ever *constructed* is target-dependent (x86_64
+// never builds Neon/None, aarch64 never builds Sse2/Avx2), so the
+// dead-code analysis must not judge the enum per-target.
+#[allow(dead_code)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum Level {
+    /// No usable SIMD path (non-x86_64/aarch64 targets): the `Simd`
+    /// backend degrades to the scalar mirror.
+    None,
+    /// x86_64 baseline: always available there.
+    Sse2,
+    /// x86_64 with AVX2 detected at runtime.
+    Avx2,
+    /// aarch64 baseline: always available there.
+    Neon,
+}
+
+fn detect() -> Level {
+    #[cfg(target_arch = "x86_64")]
+    {
+        // SSE2 is part of the x86_64 baseline, so the only runtime
+        // question is whether the wider path is safe.
+        if is_x86_feature_detected!("avx2") {
+            Level::Avx2
+        } else {
+            Level::Sse2
+        }
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        Level::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Level::None
+    }
+}
+
+/// The probed SIMD level, cached after the first call — the one-time
+/// runtime dispatch every `Simd`-flavored kernel call goes through.
+pub(crate) fn level() -> Level {
+    static LEVEL: std::sync::OnceLock<Level> = std::sync::OnceLock::new();
+    *LEVEL.get_or_init(detect)
+}
+
+/// Whether this host has an explicit-SIMD path at all (false only on
+/// targets outside x86_64/aarch64).
+pub(crate) fn simd_available() -> bool {
+    level() != Level::None
+}
+
+/// Name of the SIMD level runtime dispatch found on this host
+/// (`"avx2"`, `"sse2"`, `"neon"`, or `"none"`) — display only.
+pub fn level_name() -> &'static str {
+    match level() {
+        Level::Avx2 => "avx2",
+        Level::Sse2 => "sse2",
+        Level::Neon => "neon",
+        Level::None => "none",
+    }
+}
+
+/// Drain one tile of products into the accumulator arena, 4-wide
+/// unrolled: four independent (offset, product) pairs are resolved per
+/// step, so 2–4 accumulator cells live in registers across the sweep.
+/// Sequential `+=` keeps colliding offsets (two taps of one output
+/// cell in the same tile) exact.
+#[inline(always)]
+fn scatter_adds(prod: &[i32; SIMD_TILE], off: &[i32], pix: i32, acc: &mut [i64]) {
+    for q in (0..SIMD_TILE).step_by(4) {
+        let i0 = (off[q] + pix) as usize;
+        let i1 = (off[q + 1] + pix) as usize;
+        let i2 = (off[q + 2] + pix) as usize;
+        let i3 = (off[q + 3] + pix) as usize;
+        acc[i0] += prod[q] as i64;
+        acc[i1] += prod[q + 1] as i64;
+        acc[i2] += prod[q + 2] as i64;
+        acc[i3] += prod[q + 3] as i64;
+    }
+}
+
+/// Scalar mirror of the tiled kernel (the `Level::None` fallback, and
+/// the shape the intrinsic paths must reproduce bit for bit).
+fn scatter_full_generic(w: &[i16], off: &[i32], full: usize, xv: i16, pix: i32, acc: &mut [i64]) {
+    let xv32 = xv as i32;
+    let mut prod = [0i32; SIMD_TILE];
+    let mut base = 0usize;
+    while base < full {
+        for (p, &wv) in prod.iter_mut().zip(&w[base..base + SIMD_TILE]) {
+            *p = xv32 * wv as i32;
+        }
+        scatter_adds(&prod, &off[base..base + SIMD_TILE], pix, acc);
+        base += SIMD_TILE;
+    }
+}
+
+/// AVX2 tile loop: 16 weights sign-extend to two 8 × i32 registers,
+/// one `mullo` each against the broadcast activation.
+///
+/// SAFETY: caller must guarantee `level() == Level::Avx2` (the CPU
+/// supports AVX2), `w`/`off` hold at least `full` elements, and every
+/// `off[j] + pix` for `j < full` indexes inside `acc` (the plan's tap
+/// tables guarantee this — same values the scalar path indexes with).
+#[cfg(target_arch = "x86_64")]
+#[target_feature(enable = "avx2")]
+unsafe fn scatter_full_avx2(
+    w: &[i16],
+    off: &[i32],
+    full: usize,
+    xv: i16,
+    pix: i32,
+    acc: &mut [i64],
+) {
+    use core::arch::x86_64::*;
+    let xvv = _mm256_set1_epi32(xv as i32);
+    let mut prod = [0i32; SIMD_TILE];
+    let mut base = 0usize;
+    while base < full {
+        let w0 = _mm_loadu_si128(w.as_ptr().add(base) as *const __m128i);
+        let w1 = _mm_loadu_si128(w.as_ptr().add(base + 8) as *const __m128i);
+        // cvtepi16_epi32 preserves lane order, so prod[j] is tap j's
+        // exact 32-bit product — the scatter pairing stays aligned.
+        let p0 = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(w0), xvv);
+        let p1 = _mm256_mullo_epi32(_mm256_cvtepi16_epi32(w1), xvv);
+        _mm256_storeu_si256(prod.as_mut_ptr() as *mut __m256i, p0);
+        _mm256_storeu_si256(prod.as_mut_ptr().add(8) as *mut __m256i, p1);
+        scatter_adds(&prod, &off[base..base + SIMD_TILE], pix, acc);
+        base += SIMD_TILE;
+    }
+}
+
+/// SSE2 tile loop. SSE2 has no 32-bit `mullo`, so the exact products
+/// come from the classic `mullo_epi16`/`mulhi_epi16` interleave: for
+/// each i16 lane the signed 32-bit product is `(hi << 16) | lo`, and
+/// `unpacklo/hi_epi16(lo, hi)` assembles exactly that, in lane order.
+///
+/// SAFETY: same contract as `scatter_full_avx2`, minus the feature
+/// check — SSE2 is the x86_64 baseline.
+#[cfg(target_arch = "x86_64")]
+unsafe fn scatter_full_sse2(
+    w: &[i16],
+    off: &[i32],
+    full: usize,
+    xv: i16,
+    pix: i32,
+    acc: &mut [i64],
+) {
+    use core::arch::x86_64::*;
+    let xvv = _mm_set1_epi16(xv);
+    let mut prod = [0i32; SIMD_TILE];
+    let mut base = 0usize;
+    while base < full {
+        for half in [0usize, 8] {
+            let wv = _mm_loadu_si128(w.as_ptr().add(base + half) as *const __m128i);
+            let lo = _mm_mullo_epi16(wv, xvv);
+            let hi = _mm_mulhi_epi16(wv, xvv);
+            _mm_storeu_si128(
+                prod.as_mut_ptr().add(half) as *mut __m128i,
+                _mm_unpacklo_epi16(lo, hi),
+            );
+            _mm_storeu_si128(
+                prod.as_mut_ptr().add(half + 4) as *mut __m128i,
+                _mm_unpackhi_epi16(lo, hi),
+            );
+        }
+        scatter_adds(&prod, &off[base..base + SIMD_TILE], pix, acc);
+        base += SIMD_TILE;
+    }
+}
+
+/// NEON tile loop: `vmull_s16` widens 4 × i16 pairs straight to their
+/// exact 4 × i32 products, in lane order.
+///
+/// SAFETY: same contract as `scatter_full_avx2`; NEON is the aarch64
+/// baseline so the feature is always present there.
+#[cfg(target_arch = "aarch64")]
+#[target_feature(enable = "neon")]
+unsafe fn scatter_full_neon(
+    w: &[i16],
+    off: &[i32],
+    full: usize,
+    xv: i16,
+    pix: i32,
+    acc: &mut [i64],
+) {
+    use core::arch::aarch64::*;
+    let xvv = vdup_n_s16(xv);
+    let mut prod = [0i32; SIMD_TILE];
+    let mut base = 0usize;
+    while base < full {
+        for half in [0usize, 8] {
+            let wv = vld1q_s16(w.as_ptr().add(base + half));
+            vst1q_s32(prod.as_mut_ptr().add(half), vmull_s16(vget_low_s16(wv), xvv));
+            vst1q_s32(prod.as_mut_ptr().add(half + 4), vmull_s16(vget_high_s16(wv), xvv));
+        }
+        scatter_adds(&prod, &off[base..base + SIMD_TILE], pix, acc);
+        base += SIMD_TILE;
+    }
+}
+
+/// Interior-pixel accumulation over the SoA mirror tables for the
+/// explicit-SIMD backend: full [`SIMD_TILE`]-tap tiles of the kept
+/// prefix go through the dispatched intrinsic loop, the `< SIMD_TILE`
+/// remainder through a scalar tail. `w`/`off` are segment-based slices
+/// of the plan's `simd_w`/`simd_off` (same order as the scalar taps);
+/// only indices `< cut` are ever read, so the unpadded layout needs no
+/// sentinel taps.
+pub(crate) fn scatter_simd(w: &[i16], off: &[i32], cut: usize, xv: i16, pix: i32, acc: &mut [i64]) {
+    debug_assert!(w.len() >= cut && off.len() >= cut, "simd mirror shorter than cut");
+    let full = cut - cut % SIMD_TILE;
+    if full > 0 {
+        match level() {
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: level() proved the feature; slice lengths and
+            // offset bounds are the plan-table invariants asserted
+            // above (identical to what the scalar path indexes with).
+            Level::Avx2 => unsafe { scatter_full_avx2(w, off, full, xv, pix, acc) },
+            #[cfg(target_arch = "x86_64")]
+            // SAFETY: SSE2 is unconditionally available on x86_64.
+            Level::Sse2 => unsafe { scatter_full_sse2(w, off, full, xv, pix, acc) },
+            #[cfg(target_arch = "aarch64")]
+            // SAFETY: NEON is unconditionally available on aarch64.
+            Level::Neon => unsafe { scatter_full_neon(w, off, full, xv, pix, acc) },
+            _ => scatter_full_generic(w, off, full, xv, pix, acc),
+        }
+    }
+    let xv32 = xv as i32;
+    for j in full..cut {
+        acc[(off[j] + pix) as usize] += (xv32 * w[j] as i32) as i64;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Reference: plain per-tap scalar scatter over the same slices.
+    fn scatter_ref(w: &[i16], off: &[i32], cut: usize, xv: i16, pix: i32, acc: &mut [i64]) {
+        for j in 0..cut {
+            acc[(off[j] + pix) as usize] += (xv as i32 * w[j] as i32) as i64;
+        }
+    }
+
+    /// The dispatched kernel (whatever level this host probes) must be
+    /// bit-identical to the scalar reference for every cut, including
+    /// extreme Q8.8 operands, colliding offsets, and cuts straddling
+    /// the tile boundary.
+    #[test]
+    fn tiled_scatter_matches_scalar_reference() {
+        let n = 3 * SIMD_TILE + 5;
+        // Deterministic "worst-case-ish" taps: extreme magnitudes and
+        // repeated offsets (two taps landing on one accumulator cell).
+        let w: Vec<i16> = (0..n)
+            .map(|j| match j % 5 {
+                0 => i16::MAX,
+                1 => i16::MIN + 1,
+                2 => -3,
+                3 => 17,
+                _ => -(j as i16) * 7,
+            })
+            .collect();
+        let off: Vec<i32> = (0..n).map(|j| ((j * 13) % 31) as i32).collect();
+        for xv in [1i16, -1, 127, -128, i16::MAX, -32768] {
+            for cut in [0usize, 1, SIMD_TILE - 1, SIMD_TILE, SIMD_TILE + 3, 2 * SIMD_TILE, n] {
+                let mut a = vec![0i64; 64];
+                let mut b = vec![0i64; 64];
+                scatter_simd(&w, &off, cut, xv, 2, &mut a);
+                scatter_ref(&w, &off, cut, xv, 2, &mut b);
+                assert_eq!(a, b, "xv={xv} cut={cut} level={}", level_name());
+            }
+        }
+    }
+
+    /// The generic mirror (the no-SIMD fallback) must match too, on
+    /// every host — this is what non-x86/ARM targets execute.
+    #[test]
+    fn generic_fallback_matches_scalar_reference() {
+        let n = 2 * SIMD_TILE;
+        let w: Vec<i16> = (0..n).map(|j| (j as i16 - 9) * 11).collect();
+        let off: Vec<i32> = (0..n).map(|j| (j % 7) as i32).collect();
+        let full = n; // whole-tile multiple
+        let mut a = vec![0i64; 16];
+        let mut b = vec![0i64; 16];
+        scatter_full_generic(&w, &off, full, -255, 1, &mut a);
+        scatter_ref(&w, &off, full, -255, 1, &mut b);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn level_is_cached_and_named() {
+        assert_eq!(level(), level());
+        assert!(["avx2", "sse2", "neon", "none"].contains(&level_name()));
+        #[cfg(any(target_arch = "x86_64", target_arch = "aarch64"))]
+        assert!(simd_available());
+    }
+}

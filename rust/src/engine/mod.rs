@@ -16,9 +16,13 @@
 //!   Serving workers, batched eval, and the benches run on this path.
 
 pub mod infer;
+pub mod kernels;
 pub mod plan;
 pub mod qmodel;
 
 pub use infer::{infer, EngineConfig, InferOutput, PruneMode};
-pub use plan::{ConvInterior, PlanBacked, PlanConfig, PlannedModel, Scratch, CONV_LANES};
+pub use kernels::level_name as simd_level_name;
+pub use plan::{
+    ConvInterior, KernelBackend, PlanBacked, PlanConfig, PlannedModel, Scratch, CONV_LANES,
+};
 pub use qmodel::QModel;

@@ -36,6 +36,13 @@
 //!   for pixels where every tap lands in-bounds; and the scalar
 //!   `(w, kbase, u, v)` taps that keep the clipped per-tap path for
 //!   border pixels.
+//! * **Kernel backends** — [`KernelBackend`] selects how the interior
+//!   scatter and the linear row sweep execute: the scalar reference,
+//!   the lane-packed autovectorized path, or explicit SSE2/AVX2/NEON
+//!   intrinsics with register-blocked accumulators (`Auto`, the
+//!   default, picks the widest safe path via one-time runtime CPU
+//!   dispatch — see [`super::kernels`]). All backends are
+//!   bit-identical; they differ only in host speed.
 //! * **Scratch arena** — [`Scratch`] owns the accumulator and
 //!   ping-pong activation buffers, eliminating all per-inference
 //!   `Vec` allocations.
@@ -63,6 +70,7 @@
 use std::sync::Arc;
 
 use super::infer::{requant, scaled_t, InferOutput, PruneMode};
+use super::kernels;
 use super::qmodel::QModel;
 use crate::approx::{DivApprox, DivKind};
 use crate::mcu::{cost, FramModel, Ledger};
@@ -85,6 +93,12 @@ const AX_CEIL: u32 = 1 << 15;
 /// per-tap loop. Both are bit-identical (i64 accumulation is
 /// order-independent); `Scalar` exists so benches and property tests
 /// can price and pin the lane packing against its reference.
+///
+/// Superseded by [`KernelBackend`] (which adds the explicit-SIMD
+/// path); kept as a compatibility knob: under `KernelBackend::Auto`, a
+/// config pinned to `ConvInterior::Scalar` still resolves to the
+/// scalar reference, so pre-existing scalar-reference configs keep
+/// their meaning.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum ConvInterior {
     /// Lane-packed interior tables (the fast default).
@@ -92,6 +106,124 @@ pub enum ConvInterior {
     Lanes,
     /// Plain per-tap reference loop over the same taps.
     Scalar,
+}
+
+/// Which inner-kernel implementation a plan executes — the conv
+/// interior scatter and the linear row sweep. Every variant is
+/// **bit-identical** in logits, kept/skipped counts, and the full
+/// ledger (exact i32 products, order-independent i64 accumulation;
+/// pinned by the `engine_cross_layer` property suite); they differ
+/// only in host speed.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum KernelBackend {
+    /// Resolve at compile time: the process-wide `--kernel` /
+    /// `UNIT_KERNEL` override if one is set, else the widest safe path
+    /// — [`Simd`](KernelBackend::Simd) when runtime dispatch finds a
+    /// usable CPU level (SSE2/AVX2/NEON), [`Lanes`](KernelBackend::Lanes)
+    /// otherwise. Exception: a config whose [`ConvInterior`] knob is
+    /// pinned to `Scalar` resolves to `Scalar` regardless of the
+    /// override, preserving the scalar-reference meaning of existing
+    /// configs (and of the reference legs in tests and benches).
+    #[default]
+    Auto,
+    /// Plain per-tap / per-row scalar loops — the reference every other
+    /// backend is pinned against.
+    Scalar,
+    /// Lane-packed `[i16; 8]` groups relying on autovectorization (the
+    /// pre-SIMD default fast path).
+    Lanes,
+    /// Explicit SSE2/AVX2/NEON intrinsics over the SoA mirror tables
+    /// with register-blocked accumulators (see [`super::kernels`]);
+    /// resolves to `Scalar` on hosts with no usable SIMD level —
+    /// explicit `Simd` is always safe to request.
+    Simd,
+}
+
+/// Process-wide kernel override, encoded as `KernelBackend as u8`;
+/// `u8::MAX` = unset. Seeded once from `UNIT_KERNEL`, settable from
+/// the CLI before any plan compiles.
+fn kernel_override_cell() -> &'static std::sync::atomic::AtomicU8 {
+    static CELL: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(u8::MAX);
+    static SEED: std::sync::Once = std::sync::Once::new();
+    SEED.call_once(|| {
+        if let Some(k) = std::env::var("UNIT_KERNEL").ok().and_then(|v| KernelBackend::parse(&v))
+        {
+            CELL.store(k as u8, std::sync::atomic::Ordering::Relaxed);
+        }
+    });
+    &CELL
+}
+
+impl KernelBackend {
+    /// Parse a `--kernel` / `UNIT_KERNEL` value.
+    pub fn parse(s: &str) -> Option<KernelBackend> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "auto" => Some(KernelBackend::Auto),
+            "scalar" => Some(KernelBackend::Scalar),
+            "lanes" => Some(KernelBackend::Lanes),
+            "simd" => Some(KernelBackend::Simd),
+            _ => None,
+        }
+    }
+
+    /// Display name (`"auto"`, `"scalar"`, `"lanes"`, `"simd"`).
+    pub fn name(self) -> &'static str {
+        match self {
+            KernelBackend::Auto => "auto",
+            KernelBackend::Scalar => "scalar",
+            KernelBackend::Lanes => "lanes",
+            KernelBackend::Simd => "simd",
+        }
+    }
+
+    /// Install the process-wide default that `Auto` configs resolve to
+    /// (the `--kernel` CLI flag). Call once at startup, before plans
+    /// compile; plans already compiled keep the backend they resolved.
+    pub fn set_process_default(k: KernelBackend) {
+        kernel_override_cell().store(k as u8, std::sync::atomic::Ordering::Relaxed);
+    }
+
+    fn process_default() -> Option<KernelBackend> {
+        match kernel_override_cell().load(std::sync::atomic::Ordering::Relaxed) {
+            0 => Some(KernelBackend::Auto),
+            1 => Some(KernelBackend::Scalar),
+            2 => Some(KernelBackend::Lanes),
+            3 => Some(KernelBackend::Simd),
+            _ => None,
+        }
+    }
+
+    /// Ground an explicit (non-`Auto`) request against the host:
+    /// `Simd` degrades to `Scalar` when no SIMD level is available.
+    fn resolve_explicit(self) -> KernelBackend {
+        match self {
+            KernelBackend::Simd if !kernels::simd_available() => KernelBackend::Scalar,
+            k => k,
+        }
+    }
+
+    /// The backend a default (`Auto`, `ConvInterior::Lanes`) config
+    /// resolves to on this host right now — what serve/eval actually
+    /// run, and what the `unit_kernel_backend` gauge, the serve
+    /// `[stats]` line, and `unit top` report.
+    pub fn active_label() -> &'static str {
+        match KernelBackend::process_default() {
+            Some(k) if k != KernelBackend::Auto => k.resolve_explicit().name(),
+            _ => {
+                if kernels::simd_available() {
+                    "simd"
+                } else {
+                    "lanes"
+                }
+            }
+        }
+    }
+
+    /// Name of the SIMD level runtime dispatch found on this host
+    /// (`"avx2"`, `"sse2"`, `"neon"`, or `"none"`).
+    pub fn simd_level() -> &'static str {
+        kernels::level_name()
+    }
 }
 
 /// Build-time configuration a plan is compiled against (the plan
@@ -112,6 +244,9 @@ pub struct PlanConfig {
     /// Interior conv kernel flavor (bench/test knob; see
     /// [`ConvInterior`]).
     pub conv_interior: ConvInterior,
+    /// Inner-kernel backend (see [`KernelBackend`]); `Auto` resolves
+    /// at compile time via [`PlanConfig::resolved_kernel`].
+    pub kernel: KernelBackend,
 }
 
 impl PlanConfig {
@@ -129,6 +264,32 @@ impl PlanConfig {
             precomputed_conv_thresholds: false,
             t_scale_q8: 256,
             conv_interior: ConvInterior::default(),
+            kernel: KernelBackend::default(),
+        }
+    }
+
+    /// The concrete backend this config compiles to (never `Auto`):
+    /// explicit values win (with `Simd` grounded against the host);
+    /// `Auto` follows the precedence documented on
+    /// [`KernelBackend::Auto`].
+    pub fn resolved_kernel(&self) -> KernelBackend {
+        match self.kernel {
+            KernelBackend::Auto => {
+                if self.conv_interior == ConvInterior::Scalar {
+                    return KernelBackend::Scalar;
+                }
+                match KernelBackend::process_default() {
+                    Some(k) if k != KernelBackend::Auto => k.resolve_explicit(),
+                    _ => {
+                        if kernels::simd_available() {
+                            KernelBackend::Simd
+                        } else {
+                            KernelBackend::Lanes
+                        }
+                    }
+                }
+            }
+            k => k.resolve_explicit(),
         }
     }
 }
@@ -206,6 +367,14 @@ struct ConvTables {
     /// (padding is never read — the per-pixel cut bounds every loop).
     lane_w: Vec<[i16; CONV_LANES]>,
     lane_off: Vec<[i32; CONV_LANES]>,
+    /// SoA mirror of `taps` for the explicit-SIMD backend: flat weight
+    /// and accumulator-offset arrays aligned 1:1 with `taps` (indexed
+    /// by `ConvSeg::start`, unpadded), so the intrinsic tile loops can
+    /// issue contiguous vector loads — the AoS `ConvTap` stride makes
+    /// that impossible. Same descending-`|w|` order, so a per-pixel
+    /// cut is still a prefix and the blocked layout stays bit-identical.
+    simd_w: Vec<i16>,
+    simd_off: Vec<i32>,
     /// Streaming taps in reference order (Dense / StaticSparse only).
     stream_taps: Vec<StreamTap>,
     /// Input-independent ledger charges minus the division terms
@@ -239,8 +408,9 @@ struct ConvPlan {
     /// Per segment: taps with `w̄ < AX_CEIL` (reachable at all); the
     /// per-pixel binary search runs only over `[always, live)`.
     live: Vec<u16>,
-    /// Interior kernel flavor baked from the config.
-    lanes: bool,
+    /// Resolved interior kernel backend baked from the config
+    /// ([`PlanConfig::resolved_kernel`]; never `Auto`).
+    kernel: KernelBackend,
     total_conn: u64,
     charges: LayerCharges,
 }
@@ -274,6 +444,11 @@ struct LinPlan {
     /// Effective layer threshold (already `t_scale_q8`-scaled) — the
     /// only scale-dependent field of a linear plan.
     t_eff: u32,
+    /// Run the register-blocked Unit-mode row kernel (resolved backend
+    /// == `Simd`): live rows gathered in tiles of [`LIN_BLOCK`], the
+    /// per-row threshold cut found at gather time, the MAC sweeps
+    /// drained interleaved — bit-identical to the row-at-a-time loop.
+    blocked: bool,
     tables: Arc<LinTables>,
     charges: LayerCharges,
 }
@@ -300,6 +475,9 @@ pub struct PlannedModel {
     pub def: ModelDef,
     /// The config the plan was compiled with.
     pub cfg: PlanConfig,
+    /// The concrete kernel backend resolved at compile time (never
+    /// `Auto`) — what the hot loops of this plan actually run.
+    kernel: KernelBackend,
     div: Box<dyn DivApprox>,
     fat_t_raw: i16,
     layers: Vec<LayerPlan>,
@@ -400,6 +578,7 @@ impl PlannedModel {
         PlannedModel {
             def: q.def.clone(),
             cfg,
+            kernel: cfg.resolved_kernel(),
             div,
             fat_t_raw: q.fat_t_raw,
             layers,
@@ -407,6 +586,12 @@ impl PlannedModel {
             max_acc,
             max_act,
         }
+    }
+
+    /// The concrete kernel backend this plan was compiled to (never
+    /// `Auto`; `Simd` only when the host actually has a SIMD level).
+    pub fn kernel(&self) -> KernelBackend {
+        self.kernel
     }
 
     /// Allocate a scratch arena sized for this plan (one per thread).
@@ -824,6 +1009,8 @@ fn build_conv_tables(
     let mut ci_segs = Vec::with_capacity(in_ch);
     let mut lane_w: Vec<[i16; CONV_LANES]> = Vec::new();
     let mut lane_off: Vec<[i32; CONV_LANES]> = Vec::new();
+    let mut simd_w: Vec<i16> = Vec::new();
+    let mut simd_off: Vec<i32> = Vec::new();
     if scatter_mode {
         for buckets in per_ci.iter_mut() {
             let seg_lo = segs.len() as u32;
@@ -840,6 +1027,10 @@ fn build_conv_tables(
                 for &(a, t) in group.iter() {
                     abs_w.push(a);
                     taps.push(t);
+                    // SoA mirror for the explicit-SIMD tile loops:
+                    // same order, contiguous per field.
+                    simd_w.push(t.w);
+                    simd_off.push(t.kbase);
                 }
                 for chunk in group.chunks(CONV_LANES) {
                     let mut wl = [0i16; CONV_LANES];
@@ -904,6 +1095,8 @@ fn build_conv_tables(
         ci_segs,
         lane_w,
         lane_off,
+        simd_w,
+        simd_off,
         stream_taps,
         charges_base: charges,
     }
@@ -1000,7 +1193,7 @@ fn compile_conv(
         wbar,
         always,
         live,
-        lanes: cfg.conv_interior == ConvInterior::Lanes,
+        kernel: cfg.resolved_kernel(),
         total_conn: n_taps_total * n_pos as u64,
         charges,
     }
@@ -1081,6 +1274,7 @@ fn compile_linear(
         bias_acc: ql.bias_acc.clone(),
         requant_m: ql.requant_m,
         t_eff,
+        blocked: cfg.resolved_kernel() == KernelBackend::Simd,
         tables,
         charges,
     }
@@ -1170,8 +1364,19 @@ fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
                     let seg = &t.segs[gi];
                     if interior {
                         // Interior pixel: every tap lands in-bounds.
-                        if cp.lanes {
-                            scatter_lanes(
+                        match cp.kernel {
+                            KernelBackend::Simd => {
+                                let base = seg.start as usize;
+                                kernels::scatter_simd(
+                                    &t.simd_w[base..],
+                                    &t.simd_off[base..],
+                                    cut,
+                                    xv,
+                                    pix,
+                                    acc,
+                                );
+                            }
+                            KernelBackend::Lanes => scatter_lanes(
                                 &t.lane_w,
                                 &t.lane_off,
                                 seg.lane_start as usize,
@@ -1179,12 +1384,13 @@ fn conv_scatter(cp: &ConvPlan, src: &[i16], acc: &mut [i64]) -> u64 {
                                 xv,
                                 pix,
                                 acc,
-                            );
-                        } else {
-                            let base = seg.start as usize;
-                            let xv64 = xv as i64;
-                            for tp in &t.taps[base..base + cut] {
-                                acc[(tp.kbase + pix) as usize] += xv64 * tp.w as i64;
+                            ),
+                            _ => {
+                                let base = seg.start as usize;
+                                let xv64 = xv as i64;
+                                for tp in &t.taps[base..base + cut] {
+                                    acc[(tp.kbase + pix) as usize] += xv64 * tp.w as i64;
+                                }
                             }
                         }
                         kept += cut as u64;
@@ -1371,6 +1577,51 @@ fn linear_exec(
                 }
             }
         }
+        PruneMode::Unit if lp.blocked => {
+            // Register-blocked row kernel (the SIMD backend's linear
+            // path): live rows are gathered into tiles of [`LIN_BLOCK`]
+            // — each row's single Eq. 2 division and prefix lookup
+            // happens at gather time, in row order, so the ledger
+            // (divs, div_cycles, kept, live_rows) is identical one
+            // operation for one operation — and each full tile is
+            // drained with the MAC sweeps interleaved, keeping up to
+            // four (row, activation, cursor) triples in registers so
+            // one prefix lookup amortizes over a tile of dot products.
+            // i64 accumulation of exact i32-range products is
+            // order-independent, so interleaving rows is bit-identical
+            // to the row-at-a-time reference below.
+            let mut tile = [(0usize, 0i64, 0usize); LIN_BLOCK];
+            let mut fill = 0usize;
+            for k in 0..n_in {
+                let xv = src[k];
+                if xv == 0 {
+                    continue;
+                }
+                live_rows += 1;
+                let tbar = if lp.t_eff == 0 {
+                    0
+                } else {
+                    let c = (xv as i32).unsigned_abs();
+                    divs += 1;
+                    div_cycles += div.cycles(lp.t_eff, c);
+                    div.div(lp.t_eff, c)
+                };
+                let abs_row = &t.sorted_abs[k * n_out..(k + 1) * n_out];
+                let cut = abs_row.partition_point(|&a| a as u32 > tbar);
+                kept += cut as u64;
+                if cut > 0 {
+                    tile[fill] = (k, xv as i64, cut);
+                    fill += 1;
+                    if fill == LIN_BLOCK {
+                        flush_lin_tile(t, n_out, &tile[..fill], acc);
+                        fill = 0;
+                    }
+                }
+            }
+            if fill > 0 {
+                flush_lin_tile(t, n_out, &tile[..fill], acc);
+            }
+        }
         PruneMode::Unit => {
             for k in 0..n_in {
                 let xv = src[k];
@@ -1402,6 +1653,28 @@ fn linear_exec(
         }
     }
     LinRun { kept, live_rows, divs, div_cycles }
+}
+
+/// Row-tile width of the blocked linear kernel: 4 gathered live rows
+/// per flush — four (activation, cursor) pairs stay in registers
+/// across the interleaved sweep.
+const LIN_BLOCK: usize = 4;
+
+/// Drain one gathered row tile `(k, xv, cut)` column-major: step `j`
+/// touches every row whose kept prefix still covers `j`, so up to
+/// [`LIN_BLOCK`] independent scatter-adds issue per step. Sequential
+/// `+=` keeps colliding output indices across rows exact.
+#[inline]
+fn flush_lin_tile(t: &LinTables, n_out: usize, tile: &[(usize, i64, usize)], acc: &mut [i64]) {
+    let max_cut = tile.iter().map(|&(_, _, c)| c).max().unwrap_or(0);
+    for j in 0..max_cut {
+        for &(k, xv64, cut) in tile {
+            if j < cut {
+                let base = k * n_out + j;
+                acc[t.sorted_idx[base] as usize] += xv64 * t.sorted_w[base] as i64;
+            }
+        }
+    }
 }
 
 #[cfg(test)]
@@ -1436,8 +1709,26 @@ mod tests {
             planned.ledger.mem_cycles, naive.ledger.mem_cycles,
             "{mode:?}/{kind:?} mem cycles"
         );
-        // The scalar interior kernel is the lane path's reference:
-        // identical output, always.
+        // The scalar kernel is every other backend's reference:
+        // identical output, always — including the explicit-SIMD path
+        // (whatever level this host dispatches to) and the lane path.
+        for kernel in [KernelBackend::Scalar, KernelBackend::Lanes, KernelBackend::Simd] {
+            let mut ps = PlanBacked::new(
+                q,
+                PlanConfig { kernel, ..PlanConfig::for_mode(mode, kind) },
+            );
+            let out = ps.infer(x);
+            let kn = kernel.name();
+            assert_eq!(out.logits_raw, planned.logits_raw, "{mode:?}/{kind:?} {kn} logits");
+            assert_eq!(out.kept, planned.kept, "{mode:?}/{kind:?} {kn} kept");
+            assert_eq!(out.ledger.counts, planned.ledger.counts, "{mode:?}/{kind:?} {kn}");
+            assert_eq!(
+                out.ledger.compute_cycles, planned.ledger.compute_cycles,
+                "{mode:?}/{kind:?} {kn} compute cycles"
+            );
+        }
+        // The legacy ConvInterior::Scalar knob still means the scalar
+        // reference, even under KernelBackend::Auto.
         let mut ps = PlanBacked::new(
             q,
             PlanConfig {
@@ -1445,6 +1736,7 @@ mod tests {
                 ..PlanConfig::for_mode(mode, kind)
             },
         );
+        assert_eq!(ps.plan.kernel(), KernelBackend::Scalar);
         let scalar = ps.infer(x);
         assert_eq!(scalar.logits_raw, planned.logits_raw, "{mode:?}/{kind:?} lane/scalar");
         assert_eq!(scalar.kept, planned.kept, "{mode:?}/{kind:?} lane/scalar kept");
@@ -1690,6 +1982,51 @@ mod tests {
             }
             assert!(linear_seen && conv_seen, "mnist plan must have conv + linear layers");
         }
+    }
+
+    #[test]
+    fn simd_mirror_tables_match_tap_order() {
+        // The SoA mirror the intrinsic tile loops load from must be a
+        // field-for-field transpose of the canonical taps — same
+        // descending-|w| segment order, unpadded, indexed by seg.start.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 31);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let plan = PlannedModel::compile(&q, PlanConfig::unit(DivKind::Shift));
+        let mut conv_seen = false;
+        for lp in &plan.layers {
+            let LayerPlan::Conv(cp) = lp else { continue };
+            conv_seen = true;
+            let t = &*cp.tables;
+            assert_eq!(t.simd_w.len(), t.taps.len());
+            assert_eq!(t.simd_off.len(), t.taps.len());
+            for (i, tp) in t.taps.iter().enumerate() {
+                assert_eq!(t.simd_w[i], tp.w, "mirror weight at {i}");
+                assert_eq!(t.simd_off[i], tp.kbase, "mirror offset at {i}");
+            }
+        }
+        assert!(conv_seen, "mnist plan must have conv layers");
+    }
+
+    #[test]
+    fn explicit_simd_request_is_always_safe() {
+        // KernelBackend::Simd must resolve to a runnable backend on
+        // every host: Simd where a CPU level exists, Scalar otherwise —
+        // never an unresolved Auto, never a crash.
+        let def = zoo("mnist");
+        let params = Params::random(&def, 32);
+        let q = QModel::quantize(&def, &params).with_thresholds(&Thresholds::uniform(3, 0.2));
+        let plan = PlannedModel::compile(
+            &q,
+            PlanConfig { kernel: KernelBackend::Simd, ..PlanConfig::unit(DivKind::Shift) },
+        );
+        assert!(matches!(plan.kernel(), KernelBackend::Simd | KernelBackend::Scalar));
+        assert_ne!(plan.kernel(), KernelBackend::Auto);
+        // And Auto resolves to something concrete too.
+        let auto = PlannedModel::compile(&q, PlanConfig::unit(DivKind::Shift));
+        assert_ne!(auto.kernel(), KernelBackend::Auto);
+        assert!(["scalar", "lanes", "simd"].contains(&KernelBackend::active_label()));
+        assert!(["avx2", "sse2", "neon", "none"].contains(&KernelBackend::simd_level()));
     }
 
     #[test]

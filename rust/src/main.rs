@@ -33,7 +33,7 @@ use unit_pruner::obs::{
     spawn_http, AdmissionPolicy, MetricsHub, ObsConfig, SloEngine, SloSpec, SloWindows,
 };
 use unit_pruner::serve::{Client, ServeOpts, Server, SessionCfg};
-use unit_pruner::engine::{PlanBacked, PlanConfig, PruneMode, QModel};
+use unit_pruner::engine::{KernelBackend, PlanBacked, PlanConfig, PruneMode, QModel};
 use unit_pruner::mcu::{cost, EnergyModel};
 use unit_pruner::models::{zoo, MODEL_NAMES};
 use unit_pruner::pruning::{calibrate, CalibConfig};
@@ -46,6 +46,20 @@ use unit_pruner::util::FaultPlan;
 
 fn main() -> Result<()> {
     let args = Args::from_env();
+    // `--kernel auto|scalar|lanes|simd` (or `$UNIT_KERNEL`) pins the
+    // engine's kernel backend process-wide before any plan compiles:
+    // every Auto-configured `PlanConfig` in eval/serve/bench resolves
+    // to it. `simd` degrades to `scalar` on hosts without a usable
+    // SIMD level, so forcing it is always safe.
+    if let Some(s) = args.get("kernel") {
+        match KernelBackend::parse(s) {
+            Some(k) => KernelBackend::set_process_default(k),
+            None => {
+                eprintln!("unknown --kernel `{s}` (expected auto|scalar|lanes|simd)");
+                std::process::exit(2);
+            }
+        }
+    }
     match args.positional.first().map(|s| s.as_str()) {
         Some("info") | None => info(),
         Some("train") => cmd_train(&args),
@@ -782,6 +796,7 @@ fn cmd_serve_listen(
             recorder: coord_ref.recorder(),
             slo: Some(Arc::clone(&slo)),
             model_names,
+            kernel_backend: KernelBackend::active_label(),
         });
         match spawn_http(maddr, hub) {
             Ok(bound) => {
@@ -888,7 +903,7 @@ fn cmd_serve_listen(
             println!(
                 "[stats] served={} inflight={} rejected={} expired={} cancelled={} dropped={} \
                  failed={} panics={} respawns={} parked={} sessions={}/{} \
-                 p50/p99={}/{}us{shard_cost_str}{adaptive_str}{fleet_str}{slo_str}",
+                 p50/p99={}/{}us kernel={}{shard_cost_str}{adaptive_str}{fleet_str}{slo_str}",
                 s.served,
                 s.inflight,
                 s.rejected,
@@ -903,6 +918,7 @@ fn cmd_serve_listen(
                 s.sessions_opened,
                 s.p50_us,
                 s.p99_us,
+                KernelBackend::active_label(),
             );
             std::io::stdout().flush().ok();
         }
@@ -1017,14 +1033,22 @@ fn cmd_top(args: &Args) -> Result<()> {
     loop {
         let text = client.scrape(Duration::from_secs(5))?;
         let g = |name: &str| scrape_sum(&text, name);
+        // Info gauge, not a number: the backend name rides in the
+        // `backend` label of `unit_kernel_backend`.
+        let kernel = text
+            .lines()
+            .find_map(|l| l.strip_prefix("unit_kernel_backend{backend=\""))
+            .and_then(|rest| rest.split('"').next())
+            .unwrap_or("?");
         if json {
-            // Hand-rolled: every value is a finite f64, so plain
-            // Display is valid JSON.
+            // Hand-rolled: every value except the kernel label is a
+            // finite f64, so plain Display is valid JSON; the label is
+            // a fixed lowercase identifier needing no escaping.
             println!(
                 "{{\"served\":{},\"inflight\":{},\"rejected\":{},\"failed\":{},\"parked\":{},\
                  \"throttled\":{},\"p50_us\":{},\"p99_us\":{},\"keep_p50\":{},\
                  \"mac_skipped_ratio\":{},\"scale\":{},\"slo_tripped\":{},\"slo_trips\":{},\
-                 \"trace_events\":{},\"trace_dropped\":{}}}",
+                 \"trace_events\":{},\"trace_dropped\":{},\"kernel\":\"{kernel}\"}}",
                 g("unit_requests_served_total"),
                 g("unit_inflight"),
                 g("unit_rejected_total"),
@@ -1045,7 +1069,7 @@ fn cmd_top(args: &Args) -> Result<()> {
             println!(
                 "[top] served={:.0} inflight={:.0} rejected={:.0} failed={:.0} parked={:.0} \
                  throttled={:.0} p50/p99={:.0}/{:.0}us keep_p50={:.3} skip={:.2}% scale={:.2}x \
-                 slo_tripped={:.0} trips={:.0} events={:.0} dropped={:.0}",
+                 slo_tripped={:.0} trips={:.0} events={:.0} dropped={:.0} kernel={kernel}",
                 g("unit_requests_served_total"),
                 g("unit_inflight"),
                 g("unit_rejected_total"),

@@ -26,10 +26,12 @@
 //! input index, taps in declaration order), and the same f32 predicate
 //! decides every keep/skip, so logits and per-layer kept/skipped
 //! counts match exactly. (This is also why the float conv does *not*
-//! reorder taps the way the quant plan does: f32 accumulation is
-//! order-sensitive, so the hoisted `w̄` table keeps declaration
-//! order.) `evaluate_float` and the parallel batched eval in
-//! [`crate::train::eval`] run on this path.
+//! reorder taps the way the quant plan does, and why the linear
+//! kernel's blocked row tiles batch only the *threshold lookups* while
+//! the MAC sweeps stay row-major: f32 accumulation is order-sensitive,
+//! so the hoisted `w̄` table keeps declaration order and row
+//! contributions keep ascending-index order.) `evaluate_float` and the
+//! parallel batched eval in [`crate::train::eval`] run on this path.
 
 use std::sync::Arc;
 
@@ -97,6 +99,33 @@ pub struct FloatPlan {
     input_len: usize,
     n_layers: usize,
     max_act: usize,
+}
+
+/// Row-tile width of the blocked linear lookup, mirroring the quant
+/// plan's `LIN_BLOCK`.
+const LIN_BLOCK: usize = 4;
+
+/// Drain a gathered tile of live linear rows `(k, xv, cut)` —
+/// **row-major, ascending `k`, taps in sorted order**, exactly the
+/// order the unblocked loop used. Only the Eq. 2 prefix *lookups* were
+/// batched by the caller; f32 accumulation is order-sensitive, so the
+/// MAC sweeps must not interleave rows the way the quant plan's
+/// register-blocked kernel does (i64 there is order-independent).
+/// Every bit of the logits is therefore unchanged.
+#[inline]
+fn flush_float_rows(
+    tables: &FloatLinTables,
+    n_out: usize,
+    tile: &[(usize, f32, usize)],
+    dst: &mut [f32],
+) {
+    for &(k, xv, cut) in tile {
+        let ws = &tables.sorted_w[k * n_out..k * n_out + cut];
+        let idx = &tables.sorted_idx[k * n_out..k * n_out + cut];
+        for (wv, &j) in ws.iter().zip(idx) {
+            dst[j as usize] += xv * *wv;
+        }
+    }
 }
 
 /// Hoisted Eq. 3 threshold table for one conv weight buffer
@@ -382,6 +411,13 @@ impl FloatPlan {
                     dst_buf[..n_out].copy_from_slice(b);
                     let mut kept = 0u64;
                     let mut skipped = 0u64;
+                    // Blocked lookups, ordered sweeps: up to LIN_BLOCK
+                    // live rows' Eq. 2 prefix cuts are found together
+                    // (the float side of the quant plan's blocked
+                    // linear kernel), then flush_float_rows drains them
+                    // in the original row-major order.
+                    let mut tile = [(0usize, 0.0f32, 0usize); LIN_BLOCK];
+                    let mut fill = 0usize;
                     for k in 0..n_in {
                         let xv = src[k];
                         let a = xv.abs();
@@ -394,16 +430,20 @@ impl FloatPlan {
                             kept += cut as u64;
                             skipped += (n_out - cut) as u64;
                             if cut > 0 {
-                                let ws = &tables.sorted_w[k * n_out..k * n_out + cut];
-                                let idx = &tables.sorted_idx[k * n_out..k * n_out + cut];
-                                for (wv, &j) in ws.iter().zip(idx) {
-                                    dst_buf[j as usize] += xv * *wv;
+                                tile[fill] = (k, xv, cut);
+                                fill += 1;
+                                if fill == LIN_BLOCK {
+                                    flush_float_rows(tables, n_out, &tile[..fill], dst_buf);
+                                    fill = 0;
                                 }
                             }
                         } else {
                             // zero activation: whole row skipped
                             skipped += n_out as u64;
                         }
+                    }
+                    if fill > 0 {
+                        flush_float_rows(tables, n_out, &tile[..fill], dst_buf);
                     }
                     stats.kept[li] = kept;
                     stats.skipped[li] = skipped;

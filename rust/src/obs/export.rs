@@ -50,6 +50,12 @@ pub struct MetricsHub {
     /// Hosted model names, index-aligned with the coordinator's model
     /// table (labels for per-model/per-layer families).
     pub model_names: Vec<String>,
+    /// Resolved kernel backend label (`"scalar"` / `"lanes"` /
+    /// `"simd"`), captured at server start via
+    /// [`crate::engine::KernelBackend::active_label`]. Rendered as the
+    /// `unit_kernel_backend` info gauge so dashboards can tell which
+    /// inner-loop implementation a host is running.
+    pub kernel_backend: &'static str,
 }
 
 /// `# HELP` + `# TYPE` head for one family.
@@ -167,6 +173,10 @@ pub fn render_prometheus(hub: &MetricsHub) -> String {
     plain(&mut out, "unit_energy_mj_mean", s.mean_energy_mj);
     head(&mut out, "unit_mcu_secs_mean", "gauge", "Mean modeled MCU seconds per sample");
     plain(&mut out, "unit_mcu_secs_mean", s.mean_mcu_secs);
+
+    // -- engine build info ----------------------------------------------------
+    head(&mut out, "unit_kernel_backend", "gauge", "Active kernel backend (info gauge, always 1)");
+    labeled(&mut out, "unit_kernel_backend", &[("backend", hub.kernel_backend)], 1);
 
     // -- latency / work histogram percentiles ---------------------------------
     head(&mut out, "unit_latency_us", "gauge", "Total latency percentiles (us)");
@@ -545,6 +555,9 @@ mod tests {
             recorder: None,
             slo: None,
             model_names: vec!["default".to_string()],
+            // Fixed label: the golden exposition must not depend on
+            // the CPU features of the machine running the tests.
+            kernel_backend: "scalar",
         }
     }
 
@@ -611,6 +624,9 @@ unit_energy_mj_mean 2
 # HELP unit_mcu_secs_mean Mean modeled MCU seconds per sample
 # TYPE unit_mcu_secs_mean gauge
 unit_mcu_secs_mean 0.5
+# HELP unit_kernel_backend Active kernel backend (info gauge, always 1)
+# TYPE unit_kernel_backend gauge
+unit_kernel_backend{backend=\"scalar\"} 1
 # HELP unit_latency_us Total latency percentiles (us)
 # TYPE unit_latency_us gauge
 unit_latency_us{quantile=\"0.5\"} 40

@@ -390,6 +390,28 @@ impl DiffReport {
     }
 }
 
+/// An informational row for a key present in only one snapshot: the
+/// missing side reads 0.00, the delta is 0, and the row is never gated
+/// — a delta against a missing side is meaningless, but silently
+/// dropping the row would hide that the bench surface changed.
+fn one_sided(
+    section: &'static str,
+    key: String,
+    metric: &'static str,
+    old_v: Option<f64>,
+    new_v: Option<f64>,
+) -> DiffRow {
+    DiffRow {
+        section,
+        key,
+        metric,
+        old: old_v.unwrap_or(0.0),
+        new: new_v.unwrap_or(0.0),
+        delta_pct: 0.0,
+        gated: false,
+    }
+}
+
 /// Relative delta in %, oriented so "more is better" metrics keep their
 /// sign and "less is better" metrics are flipped (negative == worse in
 /// both cases). Rows with a non-positive old value cannot be gated
@@ -408,9 +430,15 @@ fn delta_pct(old: f64, new: f64, higher_is_better: bool) -> f64 {
 
 /// Compare two snapshots. Rows are matched by identity (engine rows by
 /// mode+backend, speedups by mode, coordinator rows by worker count,
-/// eval rows by label, division rows by estimator name); rows present
-/// in only one snapshot are skipped. With `ratios_only`, only the
-/// machine-portable `planned_speedup` ratios are gated.
+/// eval rows by label, division rows by estimator name). A row or
+/// ratio present in only **one** snapshot — a bench section that grew
+/// or shrank across versions, e.g. the `simd-interior` /
+/// `linear-block` ratios against an older baseline — is reported as an
+/// ungated informational row (the missing side shows 0.00, delta 0)
+/// instead of being dropped or failing the gate, so evolving the bench
+/// never breaks diffs against a committed baseline. With
+/// `ratios_only`, only the machine-portable `planned_speedup` ratios
+/// are gated.
 pub fn diff_snapshots(
     old: &BenchPerf,
     new: &BenchPerf,
@@ -433,6 +461,25 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(o.inf_per_s, n.inf_per_s, true),
                 gated: abs_gate && o.inf_per_s > 0.0,
             });
+        } else {
+            rows.push(one_sided(
+                "engine",
+                format!("{}/{}", o.mode, o.backend),
+                "inferences_per_s",
+                Some(o.inf_per_s),
+                None,
+            ));
+        }
+    }
+    for n in &new.engine {
+        if !old.engine.iter().any(|o| o.mode == n.mode && o.backend == n.backend) {
+            rows.push(one_sided(
+                "engine",
+                format!("{}/{}", n.mode, n.backend),
+                "inferences_per_s",
+                None,
+                Some(n.inf_per_s),
+            ));
         }
     }
     for (mode, o) in &old.speedups {
@@ -446,6 +493,13 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(*o, *n, true),
                 gated: *o > 0.0,
             });
+        } else {
+            rows.push(one_sided("speedup", format!("planned/{mode}"), "ratio", Some(*o), None));
+        }
+    }
+    for (mode, n) in &new.speedups {
+        if !old.speedups.iter().any(|(m, _)| m == mode) {
+            rows.push(one_sided("speedup", format!("planned/{mode}"), "ratio", None, Some(*n)));
         }
     }
     for o in &old.coord {
@@ -468,6 +522,15 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(o.queue_p99_us as f64, n.queue_p99_us as f64, false),
                 gated: false, // latency percentiles: informational (noisy)
             });
+        } else {
+            let key = format!("workers={}", o.workers);
+            rows.push(one_sided("coord", key, "req_per_s", Some(o.req_per_s), None));
+        }
+    }
+    for n in &new.coord {
+        if !old.coord.iter().any(|o| o.workers == n.workers) {
+            let key = format!("workers={}", n.workers);
+            rows.push(one_sided("coord", key, "req_per_s", None, Some(n.req_per_s)));
         }
     }
     for o in &old.eval {
@@ -481,6 +544,15 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(o.samples_per_s, n.samples_per_s, true),
                 gated: abs_gate && o.samples_per_s > 0.0,
             });
+        } else {
+            let key = o.label.clone();
+            rows.push(one_sided("eval", key, "samples_per_s", Some(o.samples_per_s), None));
+        }
+    }
+    for n in &new.eval {
+        if !old.eval.iter().any(|o| o.label == n.label) {
+            let key = n.label.clone();
+            rows.push(one_sided("eval", key, "samples_per_s", None, Some(n.samples_per_s)));
         }
     }
     for o in &old.divs {
@@ -494,6 +566,13 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(o.ns_per_op, n.ns_per_op, false),
                 gated: false, // sub-ns timer noise: informational
             });
+        } else {
+            rows.push(one_sided("div", o.name.clone(), "ns_per_op", Some(o.ns_per_op), None));
+        }
+    }
+    for n in &new.divs {
+        if !old.divs.iter().any(|o| o.name == n.name) {
+            rows.push(one_sided("div", n.name.clone(), "ns_per_op", None, Some(n.ns_per_op)));
         }
     }
     for o in &old.compile {
@@ -507,6 +586,13 @@ pub fn diff_snapshots(
                 delta_pct: delta_pct(o.us, n.us, false),
                 gated: false, // absolute compile latency: machine-dependent
             });
+        } else {
+            rows.push(one_sided("compile", o.label.clone(), "us", Some(o.us), None));
+        }
+    }
+    for n in &new.compile {
+        if !old.compile.iter().any(|o| o.label == n.label) {
+            rows.push(one_sided("compile", n.label.clone(), "us", None, Some(n.us)));
         }
     }
     DiffReport { rows, tolerance_pct }
@@ -642,14 +728,66 @@ mod tests {
     }
 
     #[test]
-    fn unmatched_rows_are_skipped_gracefully() {
+    fn unmatched_rows_become_informational_not_regressions() {
         let old = snap(300.0, 3.0, 1000.0, 800.0);
         let mut new = snap(300.0, 3.0, 1000.0, 800.0);
         new.coord[0].workers = 8; // different sweep shape
         new.eval[0].label = "renamed".into();
         let report = diff_snapshots(&old, &new, 10.0, false);
         assert!(report.regressions().is_empty());
-        assert!(report.rows.iter().all(|r| r.section != "coord" && r.section != "eval"));
+        // Both sides of each mismatch surface as ungated info rows
+        // with zero delta — visible, but never a gate failure.
+        for (section, key) in [
+            ("coord", "workers=4"),
+            ("coord", "workers=8"),
+            ("eval", "quant-parallel-auto"),
+            ("eval", "renamed"),
+        ] {
+            let row = report
+                .rows
+                .iter()
+                .find(|r| r.section == section && r.key == key)
+                .unwrap_or_else(|| panic!("{section}/{key} missing from report"));
+            assert!(!row.gated, "{section}/{key} one-sided row must not gate");
+            assert_eq!(row.delta_pct, 0.0, "{section}/{key} one-sided delta");
+        }
+    }
+
+    #[test]
+    fn new_speedup_ratios_against_old_baseline_are_informational() {
+        // The exact shape of a bench evolution: the new snapshot grew
+        // `simd-interior` / `linear-block` ratios the committed
+        // baseline predates. The diff must gate the shared ratios and
+        // pass the new ones through ungated (and the reverse direction
+        // — a baseline ratio the bench dropped — likewise).
+        let old = snap(300.0, 3.0, 1000.0, 800.0);
+        let mut new = snap(300.0, 3.0, 1000.0, 800.0);
+        new.speedups.push(("simd-interior".into(), 1.8));
+        new.speedups.push(("linear-block".into(), 1.2));
+        for ratios_only in [false, true] {
+            let report = diff_snapshots(&old, &new, 10.0, ratios_only);
+            assert!(report.regressions().is_empty(), "ratios_only={ratios_only}");
+            for key in ["planned/simd-interior", "planned/linear-block"] {
+                let row = report
+                    .rows
+                    .iter()
+                    .find(|r| r.section == "speedup" && r.key == key)
+                    .unwrap_or_else(|| panic!("{key} missing"));
+                assert!(!row.gated, "{key} must be informational");
+                assert_eq!(row.old, 0.0);
+                assert!(row.new > 0.0);
+            }
+        }
+        // Reverse: baseline has a ratio the new run no longer emits.
+        let report = diff_snapshots(&new, &old, 10.0, true);
+        assert!(report.regressions().is_empty());
+        let row = report
+            .rows
+            .iter()
+            .find(|r| r.key == "planned/simd-interior")
+            .expect("dropped ratio vanished from report");
+        assert!(!row.gated);
+        assert_eq!(row.new, 0.0);
     }
 
     #[test]

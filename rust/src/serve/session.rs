@@ -846,6 +846,7 @@ fn metrics_hub(shared: &Arc<SessionShared>) -> MetricsHub {
         recorder: shared.coord.recorder(),
         slo: shared.slo.clone(),
         model_names,
+        kernel_backend: crate::engine::KernelBackend::active_label(),
     }
 }
 

@@ -4,10 +4,11 @@
 
 use unit_pruner::approx::{DivApprox, DivExact, DivKind};
 use unit_pruner::engine::{
-    infer, ConvInterior, EngineConfig, InferOutput, PlanBacked, PlanConfig, PruneMode, QModel,
+    infer, ConvInterior, EngineConfig, InferOutput, KernelBackend, PlanBacked, PlanConfig,
+    PruneMode, QModel,
 };
-use unit_pruner::models::{zoo, Params, MODEL_NAMES};
-use unit_pruner::nn::{forward, ForwardOpts};
+use unit_pruner::models::{zoo, ModelDef, Params, MODEL_NAMES};
+use unit_pruner::nn::{forward, ForwardOpts, Layer};
 use unit_pruner::pruning::{apply_global_magnitude, Thresholds};
 use unit_pruner::util::prop;
 
@@ -300,12 +301,75 @@ fn prop_planned_equivalence_random_configs() {
             // Lane-packed and scalar interior kernels must both match
             // the naive engine bit for bit.
             conv_interior: *g.choice(&[ConvInterior::Lanes, ConvInterior::Scalar]),
+            // Every kernel backend — including the intrinsic SIMD tile
+            // path and the register-blocked linear rows it enables —
+            // must also be bit-identical to the reference loops.
+            kernel: *g.choice(&[
+                KernelBackend::Auto,
+                KernelBackend::Scalar,
+                KernelBackend::Lanes,
+                KernelBackend::Simd,
+            ]),
         };
         let x_f = g.vec_sparse_normal(def.input_len(), 0.3);
         let x = q.quantize_input(&x_f);
         let (naive, planned) = run_both(&q, &x, pcfg);
         assert_equivalent(&naive, &planned, &format!("{name}/{mode:?}/{kind:?}/prop"));
     });
+}
+
+#[test]
+fn planned_equivalence_border_only_conv_all_backends_all_divs() {
+    // Degenerate conv shape: the kernel covers the whole input plane
+    // (kh == h, kw == w), so the plan has zero interior pixels and the
+    // entire layer runs through the border path. The kernel backend
+    // must be irrelevant here — every backend × every division
+    // estimator must stay bit-identical to the naive reference, and to
+    // each other (the scalar plan is the cross-backend anchor).
+    let def = ModelDef {
+        name: "border-only".into(),
+        input_shape: [2, 5, 5],
+        classes: 3,
+        layers: vec![
+            Layer::Conv { out_ch: 4, in_ch: 2, kh: 5, kw: 5, pool: false },
+            Layer::Linear { n_in: 4, n_out: 3, relu: false },
+        ],
+    };
+    let params = Params::random(&def, 61);
+    let th = Thresholds::uniform(def.layers.len(), 0.25);
+    let x_f = test_input(def.input_len(), 9);
+    for mode in ALL_MODES {
+        let mut q = QModel::quantize(&def, &params);
+        if mode == PruneMode::Unit {
+            q = q.with_thresholds(&th);
+        }
+        let x = q.quantize_input(&x_f);
+        for kind in DivKind::all() {
+            let anchor = {
+                let pcfg = PlanConfig {
+                    kernel: KernelBackend::Scalar,
+                    ..PlanConfig::for_mode(mode, kind)
+                };
+                let (naive, planned) = run_both(&q, &x, pcfg);
+                assert_equivalent(
+                    &naive,
+                    &planned,
+                    &format!("border/{mode:?}/{kind:?}/scalar"),
+                );
+                planned
+            };
+            for kernel in [KernelBackend::Auto, KernelBackend::Lanes, KernelBackend::Simd] {
+                let pcfg = PlanConfig { kernel, ..PlanConfig::for_mode(mode, kind) };
+                let mut pb = PlanBacked::new(&q, pcfg);
+                let out = pb.infer(&x);
+                assert_equivalent(
+                    &anchor,
+                    &out,
+                    &format!("border/{mode:?}/{kind:?}/{}", kernel.name()),
+                );
+            }
+        }
+    }
 }
 
 #[test]
